@@ -1,0 +1,24 @@
+// perf probe: breakdown of upload/exec/download per bucket
+use ppd::config::{ArtifactPaths, ServeConfig};
+use ppd::coordinator::{build_engine, EngineKind};
+use ppd::runtime::Runtime;
+use ppd::workload::encode;
+
+fn main() -> anyhow::Result<()> {
+    let root = std::path::PathBuf::from("artifacts");
+    let model = std::env::args().nth(1).unwrap_or("ppd-m".into());
+    let paths = ArtifactPaths::new(root, &model);
+    let rt = Runtime::load(&paths)?;
+    let cfg = ServeConfig { n_candidates: 6, n_prompt_budget: 10, ..Default::default() };
+    let prompt = encode("user: what is your favorite color?\nassistant:");
+    for kind in [EngineKind::Vanilla, EngineKind::Ppd] {
+        let _ = rt.take_stats();
+        let mut e = build_engine(kind, &rt, None, &paths, &cfg, 0)?;
+        use ppd::decoding::DecodeEngine;
+        let r = e.generate(&prompt, 64)?;
+        let st = rt.take_stats();
+        println!("{:?}: steps={} decode={:.3}s | forwards={} exec={:.3}s upload={:.3}s download={:.3}s per-bucket={:?}",
+            kind, r.steps, r.decode_s, st.forwards, st.forward_s, st.upload_s, st.download_s, st.per_bucket);
+    }
+    Ok(())
+}

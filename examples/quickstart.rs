@@ -1,0 +1,56 @@
+//! Quickstart: load a trained model from `artifacts/`, generate with
+//! vanilla decoding and with PPD, and show the speed accounting.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+
+use ppd::config::{ArtifactPaths, ServeConfig};
+use ppd::coordinator::{build_engine, EngineKind};
+use ppd::decoding::vanilla::VanillaEngine;
+use ppd::decoding::DecodeEngine;
+use ppd::runtime::Runtime;
+use ppd::workload::{decode, encode};
+
+fn main() -> Result<()> {
+    let root = std::path::PathBuf::from("artifacts");
+    let model = std::env::args().nth(1).unwrap_or_else(|| "ppd-m".into());
+    let paths = ArtifactPaths::new(root, &model);
+
+    println!("loading {model} (HLO buckets + weights via PJRT)...");
+    let rt = Runtime::load(&paths)?;
+    println!(
+        "  {} params, {} prompt-token params ({:.5}% trainable — the paper's P_tr)",
+        rt.cfg.param_count,
+        rt.cfg.prompt_param_count,
+        100.0 * rt.cfg.trainable_fraction()
+    );
+
+    let prompt = encode("user: what is your favorite color?\nassistant:");
+    let max_new = 48;
+
+    let mut vanilla = VanillaEngine::new(&rt, 0.0, 0);
+    let a = vanilla.generate(&prompt, max_new)?;
+    println!("\n[vanilla] {:.1} tok/s, {} steps", a.throughput(), a.steps);
+    println!("{}", decode(&a.tokens));
+
+    let cfg = ServeConfig::default();
+    let mut engine = build_engine(EngineKind::Ppd, &rt, None, &paths, &cfg, 0)?;
+    let b = engine.generate(&prompt, max_new)?;
+    println!(
+        "\n[ppd] {:.1} tok/s, {} steps, tau={:.2} (tokens per forward pass)",
+        b.throughput(),
+        b.steps,
+        b.tau()
+    );
+    println!("{}", decode(&b.tokens));
+
+    assert_eq!(a.tokens, b.tokens, "greedy PPD must match vanilla exactly");
+    println!(
+        "\noutputs identical ✓ — PPD used {} forward passes instead of {} ({:.2}x fewer)",
+        b.steps,
+        a.steps,
+        a.steps as f64 / b.steps as f64
+    );
+    Ok(())
+}

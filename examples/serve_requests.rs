@@ -1,0 +1,63 @@
+//! End-to-end serving driver (the repo's E2E validation example):
+//! spawns the coordinator worker, loads the trained model, replays the
+//! chat/math/code serving traces as a request stream through the full
+//! stack (queue -> engine -> PJRT -> verification -> KV compaction),
+//! and reports latency/throughput like a serving benchmark.
+//!
+//!     cargo run --release --example serve_requests [model] [engine]
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use ppd::config::{ArtifactPaths, ServeConfig};
+use ppd::coordinator::{Coordinator, EngineKind, Request};
+use ppd::metrics::ServeReport;
+use ppd::util::bench::Table;
+use ppd::workload::load_trace;
+
+fn main() -> Result<()> {
+    let root = std::path::PathBuf::from("artifacts");
+    let model = std::env::args().nth(1).unwrap_or_else(|| "ppd-m".into());
+    let engine = std::env::args().nth(2).unwrap_or_else(|| "ppd".into());
+    let kind = EngineKind::parse(&engine)?;
+    let max_new = 48;
+
+    let cfg = ServeConfig { n_candidates: 6, n_prompt_budget: 10, ..Default::default() };
+    println!("spawning coordinator: model={model} engine={engine}");
+    let draft = matches!(kind, EngineKind::Spec | EngineKind::SpecPpd).then(|| "ppd-d".to_string());
+    let coord = Coordinator::spawn(root.clone(), model.clone(), draft, kind, cfg)?;
+
+    let mut table = Table::new(&["task", "reqs", "tok", "tok/s", "mean tau", "p50 lat (ms)", "p95 lat (ms)"]);
+    let paths = ArtifactPaths::new(root, &model);
+    let mut grand = ServeReport::new();
+    let t_all = Instant::now();
+    for task in ["chat", "math", "code"] {
+        let trace = load_trace(&paths.trace(task))?;
+        let mut report = ServeReport::new();
+        let t0 = Instant::now();
+        for (id, item) in trace.iter().take(16).enumerate() {
+            let t_req = Instant::now();
+            coord.submit(Request { id: id as u64, prompt: item.prompt.clone(), max_new })?;
+            let resp = coord.recv()?;
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+            report.record_request(resp.tokens.len(), resp.steps, t_req.elapsed());
+            grand.record_request(resp.tokens.len(), resp.steps, t_req.elapsed());
+        }
+        report.wall_s = t0.elapsed().as_secs_f64();
+        let h = report.request_latency.as_ref().unwrap();
+        table.row(&[
+            task.to_string(),
+            format!("{}", report.requests),
+            format!("{}", report.generated_tokens),
+            format!("{:.1}", report.throughput_tok_s()),
+            format!("{:.2}", report.mean_tau()),
+            format!("{:.0}", h.quantile_s(0.5) * 1e3),
+            format!("{:.0}", h.quantile_s(0.95) * 1e3),
+        ]);
+    }
+    grand.wall_s = t_all.elapsed().as_secs_f64();
+    table.print();
+    println!("\noverall: {}", grand.to_json());
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! §5.3 reproduction as an example: PPD is orthogonal to speculative
+//! decoding — applying it to the *draft* model cuts the number of draft
+//! forward passes per speculation round.  Compares plain spec decoding
+//! vs spec+PPD drafting on the chat trace and reports the draft-pass
+//! saving plus wallclock on this host and under a latency envelope where
+//! draft forwards dominate (the paper's GPU setting).
+//!
+//!     cargo run --release --example spec_integration
+
+use anyhow::Result;
+
+use ppd::config::{ArtifactPaths, ServeConfig};
+use ppd::coordinator::{build_engine, EngineKind};
+use ppd::runtime::Runtime;
+use ppd::util::bench::Table;
+use ppd::workload::load_trace;
+
+fn main() -> Result<()> {
+    let root = std::path::PathBuf::from("artifacts");
+    let target_name = std::env::args().nth(1).unwrap_or_else(|| "ppd-m".into());
+    let paths = ArtifactPaths::new(root.clone(), &target_name);
+    let target = Runtime::load(&paths)?;
+    let draft = Runtime::load(&ArtifactPaths::new(root, "ppd-d"))?;
+    let cfg = ServeConfig { n_candidates: 6, n_prompt_budget: 10, ..Default::default() };
+    let max_new = 48;
+
+    let trace = load_trace(&paths.trace("chat"))?;
+    let items: Vec<_> = trace.iter().take(10).collect();
+
+    let mut table = Table::new(&["engine", "tok", "target fwd", "draft fwd", "tok/s", "tau"]);
+    let mut rows = Vec::new();
+    for kind in [EngineKind::Spec, EngineKind::SpecPpd] {
+        let mut engine = build_engine(kind, &target, Some(&draft), &paths, &cfg, 0)?;
+        let (mut tok, mut steps, mut dsteps, mut time) = (0usize, 0usize, 0usize, 0.0f64);
+        let mut outputs = Vec::new();
+        for it in &items {
+            let r = engine.generate(&it.prompt, max_new)?;
+            tok += r.tokens.len();
+            steps += r.steps;
+            dsteps += r.draft_steps;
+            time += r.decode_s;
+            outputs.push(r.tokens);
+        }
+        table.row(&[
+            engine.name().into(),
+            format!("{tok}"),
+            format!("{steps}"),
+            format!("{dsteps}"),
+            format!("{:.0}", tok as f64 / time),
+            format!("{:.2}", tok as f64 / steps as f64),
+        ]);
+        rows.push((kind, tok, steps, dsteps, outputs));
+    }
+    table.print();
+
+    let (_, tok_a, steps_a, draft_a, out_a) = &rows[0];
+    let (_, _tok_b, steps_b, draft_b, out_b) = &rows[1];
+    assert_eq!(out_a, out_b, "both speculative variants must match (greedy)");
+    println!("\noutputs identical across variants ✓");
+    println!(
+        "draft forward passes: {draft_a} -> {draft_b} ({:.2}x fewer with PPD drafting)",
+        *draft_a as f64 / *draft_b as f64
+    );
+    // Envelope projection: on the paper's GPUs the draft model's forward
+    // latency dominates the drafting phase and tree width is cheap.
+    // Model: round cost = draft_fwd * L_d + target_fwd * L_t with
+    // L_t = 4 L_d (7B vs 68M is >10x, we stay conservative).
+    let l_d = 1.0;
+    let l_t = 4.0;
+    let cost_a = *draft_a as f64 * l_d + *steps_a as f64 * l_t;
+    let cost_b = *draft_b as f64 * l_d + *steps_b as f64 * l_t;
+    println!(
+        "latency-envelope projection (L_target = 4 L_draft, tree width free): spec+ppd is {:.2}x faster — paper §5.3 reports up to 1.22x",
+        cost_a / cost_b * (*tok_a as f64 / *tok_a as f64)
+    );
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Per-task engine comparison (the Fig 5 workload axis as a runnable
+//! example): for chat/math/code traces, run every engine greedily and
+//! report throughput, τ, and output-exactness vs vanilla.
+//!
+//!     cargo run --release --example task_speedups [model]
+
+use anyhow::Result;
+
+use ppd::config::{ArtifactPaths, ServeConfig};
+use ppd::coordinator::{build_engine, EngineKind};
+use ppd::decoding::vanilla::VanillaEngine;
+use ppd::decoding::DecodeEngine;
+use ppd::runtime::Runtime;
+use ppd::util::bench::Table;
+use ppd::workload::load_trace;
+
+fn main() -> Result<()> {
+    let root = std::path::PathBuf::from("artifacts");
+    let model = std::env::args().nth(1).unwrap_or_else(|| "ppd-s".into());
+    let paths = ArtifactPaths::new(root.clone(), &model);
+    let rt = Runtime::load(&paths)?;
+    let draft = Runtime::load(&ArtifactPaths::new(root, "ppd-d"))?;
+    let cfg = ServeConfig { n_candidates: 6, n_prompt_budget: 10, ..Default::default() };
+    let max_new = 48;
+
+    let mut table = Table::new(&["task", "engine", "tok/s", "tau", "exact"]);
+    for task in ["chat", "math", "code"] {
+        let trace = load_trace(&paths.trace(task))?;
+        let items: Vec<_> = trace.iter().take(8).collect();
+
+        // vanilla reference outputs
+        let mut vanilla = VanillaEngine::new(&rt, 0.0, 0);
+        let mut refs = Vec::new();
+        let mut v_tok = 0usize;
+        let mut v_time = 0.0;
+        for it in &items {
+            let r = vanilla.generate(&it.prompt, max_new)?;
+            v_tok += r.tokens.len();
+            v_time += r.decode_s;
+            refs.push(r.tokens);
+        }
+        table.row(&[task.into(), "vanilla".into(), format!("{:.0}", v_tok as f64 / v_time), "1.00".into(), "-".into()]);
+
+        for kind in [EngineKind::Ppd, EngineKind::Medusa, EngineKind::Pld, EngineKind::Spec] {
+            let mut engine = build_engine(kind, &rt, Some(&draft), &paths, &cfg, 0)?;
+            let mut tok = 0usize;
+            let mut time = 0.0;
+            let mut steps = 0usize;
+            let mut exact = true;
+            for (it, want) in items.iter().zip(&refs) {
+                let r = engine.generate(&it.prompt, max_new)?;
+                exact &= &r.tokens == want;
+                tok += r.tokens.len();
+                steps += r.steps;
+                time += r.decode_s;
+            }
+            table.row(&[
+                task.into(),
+                engine.name().into(),
+                format!("{:.0}", tok as f64 / time),
+                format!("{:.2}", tok as f64 / steps as f64),
+                if exact { "yes".into() } else { "NO".into() },
+            ]);
+        }
+    }
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,207 @@
+"""AOT compile path: lower the L2 graphs to HLO *text* + weights.bin.
+
+HLO text (NOT ``lowered.compiler_ir("hlo").as_hlo_text()`` on new jax, and
+NOT serialized protos) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` 0.1.6 crate binds) rejects.  Lowering to
+stablehlo and converting through ``mlir_module_to_xla_computation`` with
+``return_tuple=True`` reassigns ids and round-trips cleanly — see
+/opt/xla-example/gen_hlo.py.
+
+Outputs per model, under ``artifacts/<model>/``:
+
+  config.json        model + bucket metadata for the rust runtime
+  weights.json       ordered (name, shape, offset_f32, len_f32) manifest
+  weights.bin        little-endian f32 flat dump, same order
+  fwd_n<k>.hlo.txt   forward graph for each input-length bucket k
+  medusa.hlo.txt     (if heads trained) hidden -> [K, V] head logits
+
+Usage:  python -m compile.aot [--models ppd-m,...] [--out ../artifacts]
+        python -m compile.aot --check   (random weights, tiny buckets)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import (MODELS, ModelConfig, VOCAB, forward_infer, init_params,
+                    param_count, prompt_param_count, weight_names)
+
+BUCKETS = [1, 2, 4, 8, 16, 32, 64, 128, 256]
+# Short-KV-context variants (perf pass: KV-length bucketing — the rust
+# runtime picks the smallest context that covers the referenced slots,
+# halving cache upload + attention compute for short contexts).
+KV_VARIANTS = [256]
+KV_VARIANT_MAX_N = 64
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_fwd(cfg: ModelConfig, n: int, use_pallas: bool = True,
+              max_ctx: int | None = None) -> str:
+    """Lower one forward bucket.  Parameter order (the rust contract):
+    tokens, pos, slots, bias, cache, then weights in weight_names order.
+    ``max_ctx`` overrides the KV context length (KV-length bucketing)."""
+    names = weight_names(cfg)
+    s = max_ctx or cfg.max_ctx
+
+    def fn(tokens, pos, slots, bias, cache, *weights):
+        params = dict(zip(names, weights))
+        return forward_infer(params, cfg, tokens, pos, slots, bias, cache,
+                             use_pallas=use_pallas)
+
+    from .model import weight_shapes
+    shapes = weight_shapes(cfg)
+    specs = [
+        jax.ShapeDtypeStruct((n,), jnp.int32),           # tokens
+        jax.ShapeDtypeStruct((n,), jnp.int32),           # pos
+        jax.ShapeDtypeStruct((n,), jnp.int32),           # slots
+        jax.ShapeDtypeStruct((n, s), jnp.float32),       # bias
+        jax.ShapeDtypeStruct((2 * cfg.n_layers, s, cfg.d_model), jnp.float32),
+    ] + [jax.ShapeDtypeStruct(shapes[nm], jnp.float32) for nm in names]
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def lower_medusa(cfg: ModelConfig, n_heads: int = 3) -> str:
+    """Medusa baseline heads: hidden [d] -> logits [K, V].
+    Head k: logits_k = lm_head(h + silu(h @ w_k))   (Medusa-1 resblock)."""
+    d = cfg.d_model
+
+    def fn(hidden, wk, lm_head):
+        h = hidden[None, :]  # [1, d]
+        res = h + jax.nn.silu(jnp.einsum("bd,kde->kbe", h, wk))  # [K,1,d]
+        return (jnp.einsum("kbd,dv->kbv", res, lm_head)[:, 0, :],)
+
+    specs = [
+        jax.ShapeDtypeStruct((d,), jnp.float32),
+        jax.ShapeDtypeStruct((n_heads, d, d), jnp.float32),
+        jax.ShapeDtypeStruct((d, VOCAB), jnp.float32),
+    ]
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+# ---------------------------------------------------------------------------
+# weights serialization (f32 LE flat dump + json manifest)
+# ---------------------------------------------------------------------------
+
+
+def write_weights(params: dict, names: list[str], path_bin: str, path_json: str):
+    manifest, off = [], 0
+    with open(path_bin, "wb") as f:
+        for nm in names:
+            arr = np.asarray(params[nm], dtype=np.float32)
+            f.write(arr.tobytes(order="C"))
+            manifest.append({"name": nm, "shape": list(arr.shape),
+                             "offset_f32": off, "len_f32": int(arr.size)})
+            off += int(arr.size)
+    with open(path_json, "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def load_trained(model: str, art: str) -> dict | None:
+    path = os.path.join(art, "train", f"{model}.npz")
+    if not os.path.exists(path):
+        return None
+    z = np.load(path)
+    return {k: jnp.asarray(z[k]) for k in z.files}
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+def export_model(model: str, art: str, buckets=None, use_pallas=True) -> None:
+    cfg = MODELS[model]
+    buckets = buckets or BUCKETS
+    out = os.path.join(art, model)
+    os.makedirs(out, exist_ok=True)
+
+    params = load_trained(model, art)
+    trained = params is not None
+    if params is None:
+        print(f"[aot] {model}: no trained weights, using random init")
+        params = init_params(cfg, jax.random.PRNGKey(0))
+    names = weight_names(cfg)
+    write_weights(params, names, os.path.join(out, "weights.bin"),
+                  os.path.join(out, "weights.json"))
+
+    for n in buckets:
+        path = os.path.join(out, f"fwd_n{n}.hlo.txt")
+        text = lower_fwd(cfg, n, use_pallas=use_pallas)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"[aot] {model}: fwd_n{n} -> {len(text)} chars")
+        for kv in KV_VARIANTS:
+            if kv < cfg.max_ctx and n <= KV_VARIANT_MAX_N:
+                path = os.path.join(out, f"fwd_n{n}_s{kv}.hlo.txt")
+                text = lower_fwd(cfg, n, use_pallas=use_pallas, max_ctx=kv)
+                with open(path, "w") as f:
+                    f.write(text)
+                print(f"[aot] {model}: fwd_n{n}_s{kv} -> {len(text)} chars")
+
+    medusa = load_trained(f"{model}-medusa", art)
+    has_medusa = medusa is not None
+    if has_medusa:
+        with open(os.path.join(out, "medusa.hlo.txt"), "w") as f:
+            f.write(lower_medusa(cfg))
+        write_weights(medusa, ["wk", "lm_head"],
+                      os.path.join(out, "medusa_weights.bin"),
+                      os.path.join(out, "medusa_weights.json"))
+        print(f"[aot] {model}: medusa heads exported")
+
+    config = {
+        "name": model, "vocab": VOCAB, "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers, "n_heads": cfg.n_heads, "d_head": cfg.d_head,
+        "d_mlp": cfg.d_mlp, "max_ctx": cfg.max_ctx, "n_prompt": cfg.n_prompt,
+        "n_ept": cfg.n_ept, "rope_theta": cfg.rope_theta,
+        "buckets": buckets, "trained": trained, "medusa": has_medusa,
+        "param_count": param_count(cfg),
+        "prompt_param_count": prompt_param_count(cfg),
+    }
+    with open(os.path.join(out, "config.json"), "w") as f:
+        json.dump(config, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--models", default="ppd-s,ppd-m,ppd-l,ppd-d")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--buckets", default="")
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="lower with the jnp reference attention instead of "
+                         "the Pallas kernel (debugging)")
+    ap.add_argument("--check", action="store_true",
+                    help="fast self-check: one tiny model, two buckets")
+    args = ap.parse_args()
+
+    models = args.models.split(",")
+    buckets = [int(b) for b in args.buckets.split(",") if b] or None
+    if args.check:
+        models, buckets = ["ppd-d"], [1, 8]
+    for m in models:
+        export_model(m, args.out, buckets, use_pallas=not args.no_pallas)
+
+    manifest = {"models": models,
+                "buckets": buckets or BUCKETS,
+                "format": "hlo-text+f32-weights-v1"}
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

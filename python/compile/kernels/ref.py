@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the tree-attention kernel.
+
+This is the correctness reference the Pallas kernel (L1) is validated
+against in ``python/tests/test_kernel.py``.  Shapes follow the inference
+layout used by the whole stack:
+
+  q     [n, H, dh]   queries for the n tree tokens of this decode step
+  k, v  [S, H, dh]   the (already-scattered) KV cache, S = max_ctx
+  bias  [n, S]       additive mask: 0 = visible, -1e9 = masked
+
+The bias encodes *both* the committed-context visibility (slots below
+``cache_len``) and the intra-tree ancestor structure (tree tokens were
+scattered into their cache slots before attention runs).
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e9
+
+
+def tree_attention_ref(q, k, v, bias):
+    """Masked multi-head attention of n query tokens over the full cache."""
+    n, h, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.array(dh, dtype=q.dtype))
+    # [H, n, S]
+    scores = jnp.einsum("nhd,shd->hns", q, k) * scale + bias[None, :, :]
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores)
+    p = p / (jnp.sum(p, axis=-1, keepdims=True) + 1e-9)
+    out = jnp.einsum("hns,shd->nhd", p, v)
+    return out

@@ -1,0 +1,125 @@
+"""L1 Pallas kernel: flash-style tree attention over a scattered KV cache.
+
+Hardware adaptation (see DESIGN.md §5): the paper's hot spot is a GPU
+tree-attention over a sparse mask.  On a TPU-shaped machine we express it
+as a Pallas kernel gridded over (head, query-block); each grid step holds
+one head's KV strip in VMEM and streams it in ``BLOCK_KV``-sized chunks
+through a running-softmax (flash) accumulator, with the score matmul
+shaped ``[bq, dh] x [dh, bk]`` so it feeds the MXU with contiguous tiles.
+``BlockSpec`` expresses the HBM->VMEM schedule the CUDA implementations
+express with thread blocks.
+
+Lowered with ``interpret=True`` — the CPU PJRT plugin cannot execute
+Mosaic custom-calls; correctness is validated against ``ref.py`` and
+real-TPU performance is estimated structurally (VMEM footprint / MXU
+utilization) in EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e9
+
+# KV chunk streamed through the accumulator per iteration.  Swept in the
+# perf pass (64/128/256); 128 keeps the per-step VMEM block at
+# 128*dh*4B <= 20.5 KiB for the largest model while still giving the MXU
+# a full 128-wide tile.
+BLOCK_KV = 128
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, *, block_kv: int):
+    """One (head, query-block) grid step.
+
+    q_ref    [1, bq, dh]   VMEM block of queries for this head
+    k_ref    [1, S,  dh]   this head's full key strip
+    v_ref    [1, S,  dh]   this head's full value strip
+    bias_ref [bq, S]       additive mask rows for this query block
+    o_ref    [1, bq, dh]   output block
+    """
+    q = q_ref[0]  # [bq, dh]
+    bq, dh = q.shape
+    s_total = k_ref.shape[1]
+    scale = (1.0 / (dh ** 0.5)).__float__()
+
+    m0 = jnp.full((bq, 1), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((bq, 1), dtype=jnp.float32)
+    acc0 = jnp.zeros((bq, dh), dtype=jnp.float32)
+
+    def body(c, carry):
+        m, l, acc = carry
+        start = c * block_kv
+        k = jax.lax.dynamic_slice(k_ref[0], (start, 0), (block_kv, dh))
+        v = jax.lax.dynamic_slice(v_ref[0], (start, 0), (block_kv, dh))
+        b = jax.lax.dynamic_slice(bias_ref[...], (0, start), (bq, block_kv))
+        # [bq, bk] score tile — MXU-shaped matmul.
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale + b
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * alpha + jnp.dot(p, v, preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, s_total // block_kv, body, (m0, l0, acc0))
+    o_ref[0] = (acc / (l + 1e-9)).astype(o_ref.dtype)
+
+
+def tree_attention(q, k, v, bias, *, block_q: int = 16, block_kv: int = BLOCK_KV,
+                   interpret: bool = True):
+    """Flash tree attention.  Same contract as ``ref.tree_attention_ref``.
+
+    q [n, H, dh]; k, v [S, H, dh]; bias [n, S] -> out [n, H, dh].
+    ``n`` must be a power of two (the AOT buckets are), S % block_kv == 0.
+    """
+    n, h, dh = q.shape
+    s = k.shape[0]
+    assert s % block_kv == 0, (s, block_kv)
+    bq = min(n, block_q)
+    assert n % bq == 0, (n, bq)
+
+    # head-major layout so each grid step reads one contiguous strip
+    qh = jnp.transpose(q, (1, 0, 2))  # [H, n, dh]
+    kh = jnp.transpose(k, (1, 0, 2))  # [H, S, dh]
+    vh = jnp.transpose(v, (1, 0, 2))
+
+    grid = (h, n // bq)
+    out = pl.pallas_call(
+        functools.partial(_attn_kernel, block_kv=block_kv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda ih, iq: (ih, iq, 0)),
+            pl.BlockSpec((1, s, dh), lambda ih, iq: (ih, 0, 0)),
+            pl.BlockSpec((1, s, dh), lambda ih, iq: (ih, 0, 0)),
+            pl.BlockSpec((bq, s), lambda ih, iq: (iq, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda ih, iq: (ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, n, dh), q.dtype),
+        interpret=interpret,
+    )(qh, kh, vh, bias)
+    return jnp.transpose(out, (1, 0, 2))  # [n, H, dh]
+
+
+def vmem_report(n: int, s: int, h: int, dh: int,
+                block_q: int = 16, block_kv: int = BLOCK_KV) -> dict:
+    """Structural performance estimate for a real-TPU deployment.
+
+    Returns the per-grid-step VMEM footprint in bytes and an MXU
+    utilization proxy (fraction of the 128x128 systolic tile the score
+    matmul fills).  Used by EXPERIMENTS.md §Perf; interpret-mode wallclock
+    is *not* a TPU proxy.
+    """
+    bq = min(n, block_q)
+    f32 = 4
+    vmem = (
+        bq * dh * f32            # q block
+        + 2 * s * dh * f32       # k + v strips
+        + bq * s * f32           # bias rows
+        + bq * dh * f32          # out block
+        + (2 * bq + bq * dh) * f32  # m, l, acc accumulators
+    )
+    mxu_fill = min(bq, 128) / 128 * min(dh, 128) / 128
+    return {"vmem_bytes": vmem, "mxu_tile_fill": mxu_fill,
+            "grid_steps": h * (n // bq), "block_kv": block_kv}

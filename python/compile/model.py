@@ -1,0 +1,283 @@
+"""L2: the base LM + PPD prompt tokens as a JAX compute graph.
+
+Decoder-only byte-level transformer (RoPE, RMSNorm, SwiGLU) in the
+functional style: parameters are a flat ``{name: array}`` dict with a
+deterministic ordering (``weight_names``) shared with the rust runtime —
+the AOT'd HLO takes the weights as trailing parameters in exactly this
+order, and ``artifacts/<model>/weights.json`` records (name, shape,
+offset) into ``weights.bin``.
+
+Two forward functions:
+
+* ``forward_infer`` — the serving graph (single sequence + KV cache +
+  tree bias) that is AOT-lowered per input-length bucket.  Calls the L1
+  Pallas tree-attention kernel.  Returns ``(logits, hidden, new_kv)``;
+  the authoritative cache lives host-side in rust (see DESIGN.md §3).
+* ``forward_train`` — batched, cache-free training graph with an
+  arbitrary additive attention bias, used for base-model training,
+  prompt-token (PPD) training with random insertion + EPT ensemble
+  masks, and the Medusa-head baseline.
+
+Prompt tokens are embedding rows appended after the vocab: token id
+``VOCAB + j`` selects ``prompt_emb[j]``.  With ``n_ept`` ensemble prompt
+tokens per prompt token, row ``k * n_ept + e`` is EPT ``e`` of prompt
+token ``k``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.ref import tree_attention_ref
+from .kernels.tree_attention import tree_attention
+
+VOCAB = 128
+NEG_INF = -1e9
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "ppd-m"
+    d_model: int = 160
+    n_layers: int = 4
+    n_heads: int = 4
+    d_mlp: int = 432          # ~2.7x, SwiGLU
+    max_ctx: int = 512
+    n_prompt: int = 3         # prompt tokens (token distance 1..n_prompt)
+    n_ept: int = 1            # ensemble prompt tokens per prompt token
+    rope_theta: float = 10000.0
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def n_prompt_rows(self) -> int:
+        return self.n_prompt * self.n_ept
+
+
+# The model zoo: S/M/L mirror MobileLLaMA / Vicuna-7B / Vicuna-13B roles,
+# D is the Vicuna-68M-style draft model (see DESIGN.md §2).
+MODELS: dict[str, ModelConfig] = {
+    "ppd-s": ModelConfig(name="ppd-s", d_model=96, n_layers=2, n_heads=4, d_mlp=256),
+    "ppd-m": ModelConfig(name="ppd-m", d_model=160, n_layers=4, n_heads=4, d_mlp=432),
+    "ppd-l": ModelConfig(name="ppd-l", d_model=224, n_layers=6, n_heads=8, d_mlp=608),
+    "ppd-d": ModelConfig(name="ppd-d", d_model=64, n_layers=2, n_heads=2, d_mlp=176),
+}
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+
+def weight_names(cfg: ModelConfig) -> list[str]:
+    """Deterministic parameter order — the rust runtime relies on it."""
+    names = ["tok_emb", "prompt_emb"]
+    for l in range(cfg.n_layers):
+        names += [
+            f"l{l}.attn_norm", f"l{l}.wq", f"l{l}.wk", f"l{l}.wv", f"l{l}.wo",
+            f"l{l}.mlp_norm", f"l{l}.w1", f"l{l}.w2", f"l{l}.w3",
+        ]
+    names += ["final_norm", "lm_head"]
+    return names
+
+
+def weight_shapes(cfg: ModelConfig) -> dict[str, tuple]:
+    d, dm = cfg.d_model, cfg.d_mlp
+    shapes = {
+        "tok_emb": (VOCAB, d),
+        "prompt_emb": (cfg.n_prompt_rows, d),
+        "final_norm": (d,),
+        "lm_head": (d, VOCAB),
+    }
+    for l in range(cfg.n_layers):
+        shapes.update({
+            f"l{l}.attn_norm": (d,),
+            f"l{l}.wq": (d, d), f"l{l}.wk": (d, d),
+            f"l{l}.wv": (d, d), f"l{l}.wo": (d, d),
+            f"l{l}.mlp_norm": (d,),
+            f"l{l}.w1": (d, dm), f"l{l}.w2": (dm, d), f"l{l}.w3": (d, dm),
+        })
+    return shapes
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    shapes = weight_shapes(cfg)
+    params = {}
+    for name in weight_names(cfg):
+        shape = shapes[name]
+        key, sub = jax.random.split(key)
+        if name.endswith("norm"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            params[name] = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return sum(
+        int(jnp.prod(jnp.array(s))) for s in weight_shapes(cfg).values()
+    )
+
+
+def prompt_param_count(cfg: ModelConfig) -> int:
+    return cfg.n_prompt_rows * cfg.d_model
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, g, eps: float = 1e-5):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * g
+
+
+def rope(x, pos, theta: float):
+    """Rotary embedding.  x [..., T, H, dh]; pos [..., T] (int32)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = pos[..., None].astype(jnp.float32) * freqs  # [..., T, half]
+    cos = jnp.cos(angles)[..., None, :]  # [..., T, 1, half]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def embed(params, tokens):
+    table = jnp.concatenate([params["tok_emb"], params["prompt_emb"]], axis=0)
+    return table[tokens]
+
+
+# ---------------------------------------------------------------------------
+# inference graph (AOT'd): single sequence, KV cache, tree bias
+# ---------------------------------------------------------------------------
+
+
+def forward_infer(params, cfg: ModelConfig, tokens, pos, slots, bias, cache,
+                  *, use_pallas: bool = True):
+    """One decode/prefill step over ``n`` tree tokens.
+
+    tokens i32[n]; pos i32[n]; slots i32[n] (cache write positions);
+    bias f32[n, S]; cache f32[2L, S, d] (k rows at 2l, v rows at 2l+1).
+
+    Returns (logits f32[n, V], hidden f32[n, d], new_kv f32[2L, n, d]).
+    The caller owns the cache: rust scatters ``new_kv`` into its host
+    copy at ``slots`` (and compacts accepted rows after verification).
+    """
+    n = tokens.shape[0]
+    h, dh, d = cfg.n_heads, cfg.d_head, cfg.d_model
+    attn_fn = tree_attention if use_pallas else tree_attention_ref
+
+    x = embed(params, tokens)
+    new_kv = []
+    for l in range(cfg.n_layers):
+        hn = rmsnorm(x, params[f"l{l}.attn_norm"])
+        q = (hn @ params[f"l{l}.wq"]).reshape(n, h, dh)
+        k = (hn @ params[f"l{l}.wk"]).reshape(n, h, dh)
+        v = hn @ params[f"l{l}.wv"]
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta).reshape(n, d)
+        # scatter this step's K/V into the cache, then attend over it
+        kc = cache[2 * l].at[slots].set(k)
+        vc = cache[2 * l + 1].at[slots].set(v)
+        new_kv.append(k)
+        new_kv.append(v)
+        attn = attn_fn(q, kc.reshape(-1, h, dh), vc.reshape(-1, h, dh), bias)
+        x = x + attn.reshape(n, d) @ params[f"l{l}.wo"]
+        mn = rmsnorm(x, params[f"l{l}.mlp_norm"])
+        x = x + (jax.nn.silu(mn @ params[f"l{l}.w1"]) * (mn @ params[f"l{l}.w3"])) @ params[f"l{l}.w2"]
+    hidden = rmsnorm(x, params["final_norm"])
+    logits = hidden @ params["lm_head"]
+    return logits, hidden, jnp.stack(new_kv, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# training graph: batched, cache-free, arbitrary bias
+# ---------------------------------------------------------------------------
+
+
+def forward_train(params, cfg: ModelConfig, tokens, pos, bias,
+                  *, return_hidden: bool = False, collect_layers: bool = False):
+    """Batched forward.  tokens i32[B,T]; pos i32[B,T]; bias f32[B,T,T].
+
+    ``collect_layers`` additionally returns the post-residual activations
+    of every layer (used by the multi-exit ensemble ablation, appx B.7).
+    """
+    b, t = tokens.shape
+    h, dh, d = cfg.n_heads, cfg.d_head, cfg.d_model
+    scale = 1.0 / jnp.sqrt(jnp.array(dh, jnp.float32))
+
+    layer_outs = []
+    x = embed(params, tokens)
+    for l in range(cfg.n_layers):
+        hn = rmsnorm(x, params[f"l{l}.attn_norm"])
+        q = (hn @ params[f"l{l}.wq"]).reshape(b, t, h, dh)
+        k = (hn @ params[f"l{l}.wk"]).reshape(b, t, h, dh)
+        v = (hn @ params[f"l{l}.wv"]).reshape(b, t, h, dh)
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale + bias[:, None]
+        p = jax.nn.softmax(scores, axis=-1)
+        attn = jnp.einsum("bhqk,bkhd->bqhd", p, v).reshape(b, t, d)
+        x = x + attn @ params[f"l{l}.wo"]
+        mn = rmsnorm(x, params[f"l{l}.mlp_norm"])
+        x = x + (jax.nn.silu(mn @ params[f"l{l}.w1"]) * (mn @ params[f"l{l}.w3"])) @ params[f"l{l}.w2"]
+        if collect_layers:
+            layer_outs.append(x)
+    hidden = rmsnorm(x, params["final_norm"])
+    logits = hidden @ params["lm_head"]
+    if collect_layers:
+        return logits, hidden, layer_outs
+    if return_hidden:
+        return logits, hidden
+    return logits
+
+
+def causal_bias(b: int, t: int):
+    m = jnp.where(jnp.tril(jnp.ones((t, t), jnp.float32)) > 0, 0.0, NEG_INF)
+    return jnp.broadcast_to(m, (b, t, t))
+
+
+# ---------------------------------------------------------------------------
+# EPT / prompt-token training masks (paper §3.2, appendix B.5)
+# ---------------------------------------------------------------------------
+
+
+def prompt_block_bias(t_real_vis, kinds, groups, mode: str = "ensemble"):
+    """Attention bias for a sequence with inserted prompt tokens.
+
+    kinds   i32[T]: 0 = real token, 1 = prompt/EPT token
+    groups  i32[T]: EPT group id for prompt tokens (-1 for real tokens)
+    t_real_vis — causal visibility base [T, T] (0/1), position-causal.
+
+    Rules (ensemble mode, the paper's choice):
+      * real tokens attend only to *real* tokens (keeps the base
+        distribution intact — also what makes single-forward KD valid);
+      * EPT in group g attends to causally-earlier real tokens and to
+        causally-earlier EPTs *of the same group*;
+    decoder mode: EPTs attend to all causally-earlier tokens;
+    encoder mode: additionally EPTs of the same *prompt token* see each
+      other bidirectionally (groups arg then carries the prompt-token id).
+    """
+    t = kinds.shape[0]
+    real = kinds == 0
+    same_group = groups[:, None] == groups[None, :]
+    can_see_real = t_real_vis & real[None, :]
+    if mode == "ensemble":
+        vis = jnp.where(real[:, None], can_see_real,
+                        can_see_real | (t_real_vis & same_group))
+    elif mode == "decoder":
+        vis = jnp.where(real[:, None], can_see_real, t_real_vis)
+    elif mode == "encoder":
+        vis = jnp.where(real[:, None], can_see_real,
+                        t_real_vis | (same_group & ~real[:, None] & ~real[None, :]))
+    else:
+        raise ValueError(mode)
+    return jnp.where(vis, 0.0, NEG_INF)

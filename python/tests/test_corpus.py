@@ -1,0 +1,66 @@
+"""Synthetic corpus generator invariants."""
+
+import random
+
+from train.corpus import (VOCAB_SIZE, build_corpus, decode, encode,
+                          gen_chat, gen_code, gen_math)
+
+
+def test_encode_decode_roundtrip_ascii():
+    s = "user: hello\nassistant: calc: 1 + 2 = 3 ;"
+    assert decode(encode(s)) == s
+
+
+def test_all_tokens_in_vocab():
+    c = build_corpus(seed=3, train_bytes=20_000, val_bytes=5_000)
+    assert all(0 <= t < VOCAB_SIZE for t in c.train_ids)
+    assert all(0 <= t < VOCAB_SIZE for t in c.val_ids)
+
+
+def test_deterministic_given_seed():
+    a = build_corpus(seed=1, train_bytes=5_000, val_bytes=1_000)
+    b = build_corpus(seed=1, train_bytes=5_000, val_bytes=1_000)
+    assert a.train_ids == b.train_ids
+    assert a.traces["chat"][0] == b.traces["chat"][0]
+
+
+def test_seeds_differ():
+    a = build_corpus(seed=1, train_bytes=5_000, val_bytes=1_000)
+    b = build_corpus(seed=2, train_bytes=5_000, val_bytes=1_000)
+    assert a.train_ids != b.train_ids
+
+
+def test_generators_produce_plausible_text():
+    rng = random.Random(0)
+    assert "user:" in gen_chat(rng)
+    m = gen_math(rng)
+    assert "calc:" in m and "=" in m
+    code = gen_code(rng)
+    assert code.startswith("def ") and "return" in code
+
+
+def test_math_results_are_correct():
+    rng = random.Random(4)
+    for _ in range(20):
+        line = gen_math(rng)
+        for stmt in line.strip().split(";"):
+            stmt = stmt.replace("calc:", "").strip()
+            if not stmt:
+                continue
+            lhs, rhs = stmt.split("=")
+            assert eval(lhs) == int(rhs), stmt
+
+
+def test_traces_have_prompt_and_reference():
+    c = build_corpus(seed=0, train_bytes=5_000, val_bytes=1_000,
+                     trace_prompts=4)
+    for task in ("chat", "math", "code"):
+        assert len(c.traces[task]) == 4
+        for pair in c.traces[task]:
+            assert len(pair["prompt"]) > 8
+            assert len(pair["reference"]) > 0
+
+
+def test_val_disjoint_seeding():
+    c = build_corpus(seed=0, train_bytes=5_000, val_bytes=5_000)
+    assert c.train_ids[:100] != c.val_ids[:100]

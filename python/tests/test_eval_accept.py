@@ -1,0 +1,44 @@
+"""Acceptance-statistics estimator unit tests."""
+
+import numpy as np
+
+from train.eval_accept import TOP_R, _rank_counts
+
+
+def test_rank_counts_exact_hits():
+    # 3 samples, vocab 8; craft logits so truth ranks are 0, 2, and miss
+    logits = np.zeros((3, 16), np.float32)
+    logits[0, 5] = 10.0                       # truth 5 at rank 0
+    logits[1, [1, 2, 3]] = [9.0, 8.0, 7.0]    # truth 3 at rank 2
+    logits[2, 0] = 5.0                        # truth 15 far below top-10?
+    logits[2, 1:11] = np.arange(10, 0, -1)    # ranks filled by ids 1..10
+    truth = np.asarray([5, 3, 15])
+    valid = np.ones(3, np.float32)
+    d_idx = np.asarray([0, 0, 0])
+    acc = np.zeros((1, TOP_R))
+    tot = np.zeros(1)
+    _rank_counts(logits, truth, valid, acc, tot, d_idx)
+    assert tot[0] == 3
+    assert acc[0, 0] == 1  # one rank-0 hit
+    assert acc[0, 2] == 1  # one rank-2 hit
+    assert acc[0].sum() == 2  # sample 3 missed entirely
+
+
+def test_rank_counts_respects_valid_and_distance():
+    logits = np.zeros((4, 8), np.float32)
+    logits[:, 2] = 1.0
+    truth = np.asarray([2, 2, 2, 2])
+    valid = np.asarray([1, 0, 1, 1], np.float32)
+    d_idx = np.asarray([0, 0, 1, 1])
+    acc = np.zeros((2, TOP_R))
+    tot = np.zeros(2)
+    _rank_counts(logits, truth, valid, acc, tot, d_idx)
+    assert tot.tolist() == [1, 2]
+    assert acc[0, 0] == 1 and acc[1, 0] == 2
+
+
+def test_cumulative_is_monotone():
+    exact = np.asarray([[0.5, 0.2, 0.1], [0.3, 0.3, 0.1]])
+    cum = np.cumsum(exact, -1)
+    assert np.all(np.diff(cum, axis=-1) >= 0)
+    assert np.all(cum <= 1.0 + 1e-9)

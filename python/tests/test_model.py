@@ -1,0 +1,190 @@
+"""L2 model invariants: weight manifest, cache semantics, tree masking.
+
+The crucial property for the whole serving stack: running tokens
+incrementally through ``forward_infer`` (with the KV cache + bias built
+the way the rust runtime builds it) must reproduce the batched causal
+``forward_train`` logits exactly.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (MODELS, ModelConfig, VOCAB, causal_bias,
+                           forward_infer, forward_train, init_params,
+                           param_count, prompt_param_count, weight_names,
+                           weight_shapes)
+
+CFG = ModelConfig(name="tiny", d_model=32, n_layers=2, n_heads=2, d_mlp=64,
+                  max_ctx=128)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(CFG, jax.random.PRNGKey(0))
+
+
+def _causal_prefill(params, tokens):
+    """Run a prefill through forward_infer the way rust does."""
+    n = len(tokens)
+    s = CFG.max_ctx
+    cache = jnp.zeros((2 * CFG.n_layers, s, CFG.d_model), jnp.float32)
+    pos = jnp.arange(n, dtype=jnp.int32)
+    slots = jnp.arange(n, dtype=jnp.int32)
+    bias = np.full((n, s), -1e9, np.float32)
+    for i in range(n):
+        bias[i, : i + 1] = 0.0
+    return forward_infer(params, CFG, jnp.asarray(tokens, jnp.int32), pos,
+                         slots, jnp.asarray(bias), cache, use_pallas=False)
+
+
+def test_weight_names_cover_shapes_exactly(params):
+    names = weight_names(CFG)
+    assert set(names) == set(weight_shapes(CFG))
+    assert len(names) == len(set(names))
+    for nm in names:
+        assert tuple(params[nm].shape) == tuple(weight_shapes(CFG)[nm])
+
+
+def test_param_count_matches_params(params):
+    assert param_count(CFG) == sum(int(np.prod(p.shape))
+                                   for p in params.values())
+    # the paper's headline: trainable params are a vanishing fraction
+    assert prompt_param_count(CFG) / param_count(CFG) < 0.01
+
+
+def test_infer_matches_train_on_causal_prefill(params):
+    rng = np.random.default_rng(0)
+    n = 16
+    tokens = rng.integers(3, VOCAB, size=n)
+    logits_i, hidden_i, new_kv = _causal_prefill(params, tokens)
+    logits_t = forward_train(params, CFG, jnp.asarray(tokens[None], jnp.int32),
+                             jnp.arange(n, dtype=jnp.int32)[None],
+                             causal_bias(1, n))
+    np.testing.assert_allclose(logits_i, logits_t[0], rtol=2e-4, atol=2e-4)
+    assert new_kv.shape == (2 * CFG.n_layers, n, CFG.d_model)
+
+
+def test_incremental_decode_matches_prefill(params):
+    """prefill(n) == prefill(n-1) then one-step decode — the rust loop."""
+    rng = np.random.default_rng(1)
+    n = 12
+    tokens = rng.integers(3, VOCAB, size=n)
+    full_logits, _, _ = _causal_prefill(params, tokens)
+
+    # prefill first n-1, capture the cache rust would keep
+    s = CFG.max_ctx
+    cache = jnp.zeros((2 * CFG.n_layers, s, CFG.d_model), jnp.float32)
+    pre = tokens[: n - 1]
+    bias = np.full((n - 1, s), -1e9, np.float32)
+    for i in range(n - 1):
+        bias[i, : i + 1] = 0.0
+    _, _, new_kv = forward_infer(
+        params, CFG, jnp.asarray(pre, jnp.int32),
+        jnp.arange(n - 1, dtype=jnp.int32),
+        jnp.arange(n - 1, dtype=jnp.int32), jnp.asarray(bias), cache,
+        use_pallas=False)
+    # rust scatters new_kv into its host cache at the slots
+    cache = cache.at[:, : n - 1, :].set(new_kv)
+
+    # single-token decode step
+    bias1 = np.full((1, s), -1e9, np.float32)
+    bias1[0, : n] = 0.0  # context + self
+    logits1, _, _ = forward_infer(
+        params, CFG, jnp.asarray(tokens[n - 1:], jnp.int32),
+        jnp.asarray([n - 1], jnp.int32), jnp.asarray([n - 1], jnp.int32),
+        jnp.asarray(bias1), cache, use_pallas=False)
+    np.testing.assert_allclose(logits1[0], full_logits[-1],
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_tree_fork_isolation(params):
+    """Two sibling tree branches must not see each other: the logits of a
+    branch token equal those of a linear decode of its own path."""
+    rng = np.random.default_rng(2)
+    ctx = rng.integers(3, VOCAB, size=8)
+    s = CFG.max_ctx
+    cache = jnp.zeros((2 * CFG.n_layers, s, CFG.d_model), jnp.float32)
+    bias = np.full((8, s), -1e9, np.float32)
+    for i in range(8):
+        bias[i, : i + 1] = 0.0
+    _, _, kv = forward_infer(params, CFG, jnp.asarray(ctx, jnp.int32),
+                             jnp.arange(8, dtype=jnp.int32),
+                             jnp.arange(8, dtype=jnp.int32),
+                             jnp.asarray(bias), cache, use_pallas=False)
+    cache = cache.at[:, :8, :].set(kv)
+
+    # tree: two siblings a,b at pos 8 (slots 8,9), child c of a at pos 9
+    a, b, c = 10, 20, 30
+    bias_t = np.full((4, s), -1e9, np.float32)
+    bias_t[0, :8] = 0.0; bias_t[0, 8] = 0.0               # a: ctx+self
+    bias_t[1, :8] = 0.0; bias_t[1, 9] = 0.0               # b: ctx+self
+    bias_t[2, :8] = 0.0; bias_t[2, 8] = 0.0; bias_t[2, 10] = 0.0  # c: ctx+a+self
+    bias_t[3, :] = -1e9  # padding row
+    logits_tree, _, _ = forward_infer(
+        params, CFG, jnp.asarray([a, b, c, 0], jnp.int32),
+        jnp.asarray([8, 8, 9, 0], jnp.int32),
+        jnp.asarray([8, 9, 10, 11], jnp.int32),
+        jnp.asarray(bias_t), cache, use_pallas=False)
+
+    # linear path ctx + a + c
+    bias_l = np.full((2, s), -1e9, np.float32)
+    bias_l[0, :9] = 0.0
+    bias_l[1, :8] = 0.0; bias_l[1, 8:10] = 0.0
+    logits_lin, _, _ = forward_infer(
+        params, CFG, jnp.asarray([a, c], jnp.int32),
+        jnp.asarray([8, 9], jnp.int32), jnp.asarray([8, 9], jnp.int32),
+        jnp.asarray(bias_l), cache, use_pallas=False)
+
+    np.testing.assert_allclose(logits_tree[0], logits_lin[0], rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(logits_tree[2], logits_lin[1], rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_prompt_token_embeddings_are_used(params):
+    """Ids >= VOCAB must select prompt embedding rows."""
+    s = CFG.max_ctx
+    cache = jnp.zeros((2 * CFG.n_layers, s, CFG.d_model), jnp.float32)
+    bias = np.full((1, s), -1e9, np.float32)
+    bias[0, 0] = 0.0
+    args = (jnp.asarray([0], jnp.int32), jnp.asarray([0], jnp.int32),
+            jnp.asarray([0], jnp.int32), jnp.asarray(bias), cache)
+    l_tok, _, _ = forward_infer(params, CFG, *args, use_pallas=False)
+    p2 = dict(params)
+    p2["prompt_emb"] = params["prompt_emb"] + 1.0
+    l_tok2, _, _ = forward_infer(p2, CFG, *args, use_pallas=False)
+    np.testing.assert_allclose(l_tok, l_tok2, rtol=1e-6, atol=1e-6)
+
+    args_p = (jnp.asarray([VOCAB], jnp.int32),) + args[1:]
+    l_p, _, _ = forward_infer(params, CFG, *args_p, use_pallas=False)
+    l_p2, _, _ = forward_infer(p2, CFG, *args_p, use_pallas=False)
+    assert float(jnp.max(jnp.abs(l_p - l_p2))) > 1e-4
+
+
+def test_pallas_and_ref_paths_agree_in_model(params):
+    rng = np.random.default_rng(3)
+    n = 8
+    tokens = rng.integers(3, VOCAB, size=n)
+    s = CFG.max_ctx
+    cache = jnp.zeros((2 * CFG.n_layers, s, CFG.d_model), jnp.float32)
+    bias = np.full((n, s), -1e9, np.float32)
+    for i in range(n):
+        bias[i, : i + 1] = 0.0
+    a = forward_infer(params, CFG, jnp.asarray(tokens, jnp.int32),
+                      jnp.arange(n, dtype=jnp.int32),
+                      jnp.arange(n, dtype=jnp.int32), jnp.asarray(bias),
+                      cache, use_pallas=False)[0]
+    b = forward_infer(params, CFG, jnp.asarray(tokens, jnp.int32),
+                      jnp.arange(n, dtype=jnp.int32),
+                      jnp.arange(n, dtype=jnp.int32), jnp.asarray(bias),
+                      cache, use_pallas=True)[0]
+    np.testing.assert_allclose(a, b, rtol=5e-5, atol=5e-5)
+
+
+def test_model_zoo_configs_valid():
+    for name, cfg in MODELS.items():
+        assert cfg.d_model % cfg.n_heads == 0, name
+        assert cfg.d_head % 2 == 0, name  # RoPE
+        assert cfg.max_ctx % 128 == 0, name  # kernel BLOCK_KV

@@ -1,0 +1,145 @@
+"""Invariants of the PPD training-batch construction (random insertion +
+EPT ensemble masks).  If these masks are wrong, prompt training silently
+leaks future tokens and the acceptance stats become meaningless —
+so they are tested exhaustively on small cases.
+"""
+
+import numpy as np
+import pytest
+
+from compile.model import NEG_INF, VOCAB
+from train.train_prompt import T_REAL, TrainCfg, build_prompt_batch
+
+
+def _mk(tc, n_prompt=3, seed=0, b=2):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(3, VOCAB, size=(b, T_REAL)).astype(np.int32)
+    return x, build_prompt_batch(x, tc, n_prompt, rng)
+
+
+def _vis(bias, a, b):
+    return bias[a, b] == 0.0
+
+
+@pytest.mark.parametrize("n_ept", [1, 2, 4])
+def test_real_tokens_never_see_prompt_tokens(n_ept):
+    tc = TrainCfg(n_ept=n_ept)
+    x, nb = _mk(tc)
+    kinds_real = slice(0, T_REAL)
+    for bi in range(x.shape[0]):
+        bias = nb["bias"][bi]
+        # real rows: columns beyond the real block must be masked
+        assert np.all(bias[kinds_real, T_REAL:] == NEG_INF)
+
+
+def test_real_block_is_causal():
+    tc = TrainCfg()
+    x, nb = _mk(tc)
+    bias = nb["bias"][0][:T_REAL, :T_REAL]
+    vis = bias == 0.0
+    assert np.array_equal(vis, np.tril(np.ones_like(vis, bool)))
+
+
+def test_prompt_sees_only_its_insertion_prefix():
+    tc = TrainCfg()
+    x, nb = _mk(tc)
+    for bi in range(x.shape[0]):
+        bias, sidx, pos = nb["bias"][bi], nb["sidx"][bi], nb["pos"][bi]
+        for ii in range(tc.inserts):
+            for k in range(3):
+                a = sidx[ii, k, 0]
+                ins = pos[a] - (k + 1)  # pos = ins + k + 1
+                real_vis = np.where(bias[a, :T_REAL] == 0.0)[0]
+                assert real_vis.max() == ins
+                assert np.array_equal(real_vis, np.arange(ins + 1))
+
+
+@pytest.mark.parametrize("n_ept", [2, 3])
+def test_ensemble_groups_are_isolated(n_ept):
+    """EPT e of prompt k sees only EPT e of earlier prompts (same insert)."""
+    tc = TrainCfg(n_ept=n_ept, mask_mode="ensemble")
+    x, nb = _mk(tc)
+    bias, sidx = nb["bias"][0], nb["sidx"][0]
+    for ii in range(tc.inserts):
+        for k in range(1, 3):
+            for e in range(n_ept):
+                a = sidx[ii, k, e]
+                for k2 in range(k):
+                    for e2 in range(n_ept):
+                        expect = e2 == e
+                        assert _vis(bias, a, sidx[ii, k2, e2]) == expect
+                # never sees later prompts
+                for k2 in range(k + 1, 3):
+                    for e2 in range(n_ept):
+                        assert not _vis(bias, a, sidx[ii, k2, e2])
+                # never sees other insertion points' prompts
+                for ii2 in range(tc.inserts):
+                    if ii2 != ii:
+                        assert not _vis(bias, a, sidx[ii2, 0, 0])
+
+
+def test_decoder_mask_sees_all_earlier_epts():
+    tc = TrainCfg(n_ept=2, mask_mode="decoder")
+    x, nb = _mk(tc)
+    bias, sidx = nb["bias"][0], nb["sidx"][0]
+    a = sidx[0, 2, 0]
+    for k2 in range(2):
+        for e2 in range(2):
+            assert _vis(bias, a, sidx[0, k2, e2])
+
+
+def test_encoder_mask_bidirectional_within_prompt():
+    tc = TrainCfg(n_ept=2, mask_mode="encoder")
+    x, nb = _mk(tc)
+    bias, sidx = nb["bias"][0], nb["sidx"][0]
+    a0, a1 = sidx[0, 1, 0], sidx[0, 1, 1]
+    assert _vis(bias, a0, a1) and _vis(bias, a1, a0)
+
+
+def test_targets_align_with_distances():
+    """Prompt (i, k) must target the token k+2 positions after insert i."""
+    tc = TrainCfg()
+    x, nb = _mk(tc, seed=5)
+    for bi in range(x.shape[0]):
+        pos, tgt, hard, valid = (nb["pos"][bi], nb["tgt"][bi],
+                                 nb["hard"][bi], nb["valid"][bi])
+        sidx = nb["sidx"][bi]
+        for ii in range(tc.inserts):
+            for k in range(3):
+                if valid[ii, k]:
+                    ins = pos[sidx[ii, k, 0]] - (k + 1)
+                    assert tgt[ii, k] == ins + k + 1
+                    assert hard[ii, k] == x[bi, ins + k + 2]
+
+
+def test_prompt_token_ids_select_ept_rows():
+    tc = TrainCfg(n_ept=2)
+    x, nb = _mk(tc)
+    sidx, tokens = nb["sidx"][0], nb["tokens"][0]
+    for ii in range(tc.inserts):
+        for k in range(3):
+            for e in range(2):
+                assert tokens[sidx[ii, k, e]] == VOCAB + k * 2 + e
+
+
+def test_prefix_rows_visible_only_to_matching_prompt():
+    tc = TrainCfg(prefix=True)
+    x, nb = _mk(tc)
+    bias, sidx = nb["bias"][0], nb["sidx"][0]
+    n_prefix = 3
+    # real rows see no prefix
+    assert np.all(bias[n_prefix:n_prefix + T_REAL, :n_prefix] == NEG_INF)
+    for ii in range(tc.inserts):
+        for k in range(3):
+            a = sidx[ii, k, 0]
+            for j in range(n_prefix):
+                assert _vis(bias, a, j) == (j == k)
+
+
+def test_valid_masks_out_of_window_targets():
+    tc = TrainCfg()
+    x, nb = _mk(tc, seed=9)
+    # every valid target index must be < T_REAL - 1 (teacher predicts +1)
+    v = nb["valid"].astype(bool)
+    assert np.all(nb["tgt"][v] < T_REAL - 1 + 3)  # prefix=0 offset
+    assert np.all(nb["hard"][v] >= 0)

@@ -1,0 +1,197 @@
+"""Synthetic corpus generator for the PPD reproduction.
+
+The paper trains prompt-token embeddings on ShareGPT and evaluates on
+MT-Bench / GSM8K / HumanEval.  None of those are available here (and the
+base models — Vicuna — aren't either), so we synthesize a byte-level
+mini-language with the property PPD exploits: *predictable local structure*
+(common phrases, repeated symbols, formulaic patterns).  Three task
+families mirror the paper's benchmark split:
+
+  * ``chat`` — templated instruction/answer dialogues (MT-Bench analogue)
+  * ``math`` — formatted arithmetic with real results (GSM8K analogue)
+  * ``code`` — tiny python-like function snippets (HumanEval analogue)
+
+``code`` and ``math`` are intentionally more formulaic than ``chat`` so the
+relative speedup ordering of Fig. 5 (code/math > chat) is reproducible.
+
+All text is ASCII < 128 and the tokenizer is identity-over-bytes
+(vocab = 128).  Special ids: PAD=0, BOS=1 (ASCII SOH), EOS=2 (ASCII STX) —
+all below 32 and never produced by the generator's printable text.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import random
+from dataclasses import dataclass, field
+
+VOCAB_SIZE = 128
+PAD_ID = 0
+BOS_ID = 1
+EOS_ID = 2
+
+# ---------------------------------------------------------------------------
+# tokenizer: identity over ASCII bytes
+# ---------------------------------------------------------------------------
+
+
+def encode(text: str) -> list[int]:
+    """Byte-level encode; non-ASCII characters are dropped."""
+    return [b for b in text.encode("ascii", errors="ignore")]
+
+
+def decode(ids: list[int]) -> str:
+    return bytes(i for i in ids if 32 <= i < 128 or i in (9, 10)).decode("ascii")
+
+
+# ---------------------------------------------------------------------------
+# chat task
+# ---------------------------------------------------------------------------
+
+_SUBJECTS = [
+    "the sky", "a river", "the moon", "a forest", "the ocean", "a mountain",
+    "the sun", "a garden", "the wind", "a city", "the desert", "a lake",
+]
+_ADJECTIVES = [
+    "blue", "calm", "bright", "green", "vast", "tall", "warm", "quiet",
+    "dry", "deep", "cold", "wide",
+]
+_TOPICS = [
+    "color", "place", "season", "animal", "food", "book", "song", "sport",
+]
+_ANSWER_PHRASES = [
+    "my favorite {t} is {a} because it reminds me of {s}.",
+    "i would say {a}, since {s} is {a} most of the time.",
+    "that would be {a}. i think of {s} when i hear it.",
+]
+_QUESTION_PHRASES = [
+    "what is your favorite {t}?",
+    "tell me about your favorite {t}.",
+    "which {t} do you like the most?",
+]
+
+
+def _zipf_choice(rng: random.Random, items: list[str]) -> str:
+    """Zipf-ish pick: low indices are much more likely (common phrases)."""
+    n = len(items)
+    weights = [1.0 / (i + 1) for i in range(n)]
+    return rng.choices(items, weights=weights, k=1)[0]
+
+
+def gen_chat(rng: random.Random) -> str:
+    t = _zipf_choice(rng, _TOPICS)
+    a = _zipf_choice(rng, _ADJECTIVES)
+    s = _zipf_choice(rng, _SUBJECTS)
+    q = _zipf_choice(rng, _QUESTION_PHRASES).format(t=t)
+    ans = _zipf_choice(rng, _ANSWER_PHRASES).format(t=t, a=a, s=s)
+    return f"user: {q}\nassistant: {ans}\n"
+
+
+# ---------------------------------------------------------------------------
+# math task
+# ---------------------------------------------------------------------------
+
+
+def gen_math(rng: random.Random) -> str:
+    lines = []
+    for _ in range(rng.randint(2, 4)):
+        a = rng.randint(2, 99)
+        b = rng.randint(2, 99)
+        op = rng.choice(["+", "-", "*"])
+        r = {"+": a + b, "-": a - b, "*": a * b}[op]
+        lines.append(f"calc: {a} {op} {b} = {r} ;")
+    return " ".join(lines) + "\n"
+
+
+# ---------------------------------------------------------------------------
+# code task
+# ---------------------------------------------------------------------------
+
+_FN_OPS = [("add", "+"), ("sub", "-"), ("mul", "*")]
+_VARS = ["a", "b", "c", "x", "y", "n", "m"]
+
+
+def gen_code(rng: random.Random) -> str:
+    name, op = rng.choice(_FN_OPS)
+    v1, v2 = rng.sample(_VARS, 2)
+    body = [
+        f"def {name}_{v1}_{v2}({v1}, {v2}):",
+        f"    result = {v1} {op} {v2}",
+        "    return result",
+        "",
+    ]
+    if rng.random() < 0.5:
+        k = rng.randint(1, 9)
+        body.insert(2, f"    for i in range({k}):")
+        body.insert(3, f"        {v1} = {v1} {op} i")
+    return "\n".join(body) + "\n"
+
+
+_TASKS = {"chat": gen_chat, "math": gen_math, "code": gen_code}
+
+
+# ---------------------------------------------------------------------------
+# corpus assembly
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Corpus:
+    """Token-level corpus with per-task splits."""
+
+    train_ids: list[int] = field(default_factory=list)
+    val_ids: list[int] = field(default_factory=list)
+    # task -> list of prompt/reference pairs (token ids) for serving traces
+    traces: dict = field(default_factory=dict)
+
+
+def build_corpus(
+    seed: int = 0,
+    train_bytes: int = 600_000,
+    val_bytes: int = 60_000,
+    trace_prompts: int = 32,
+) -> Corpus:
+    """Generate the mixed training stream, validation stream, and per-task
+    serving traces (prompt + reference continuation)."""
+    rng = random.Random(seed)
+    c = Corpus()
+
+    def stream(n_bytes: int, r: random.Random) -> list[int]:
+        out: list[int] = []
+        while len(out) < n_bytes:
+            task = r.choice(list(_TASKS))
+            out.extend(encode(_TASKS[task](r)))
+        return out[:n_bytes]
+
+    c.train_ids = stream(train_bytes, rng)
+    c.val_ids = stream(val_bytes, random.Random(seed + 1))
+
+    trace_rng = random.Random(seed + 2)
+    for task, gen in _TASKS.items():
+        pairs = []
+        for _ in range(trace_prompts):
+            # Several documents; the last one is split into (prompt, ref).
+            ctx = "".join(gen(trace_rng) for _ in range(2))
+            doc = gen(trace_rng)
+            cut = max(8, len(doc) // 3)
+            prompt = encode(ctx + doc[:cut])
+            ref = encode(doc[cut:])
+            pairs.append({"prompt": prompt, "reference": ref})
+        c.traces[task] = pairs
+    return c
+
+
+def write_artifacts(corpus: Corpus, out_dir: str) -> None:
+    os.makedirs(os.path.join(out_dir, "traces"), exist_ok=True)
+    for task, pairs in corpus.traces.items():
+        with open(os.path.join(out_dir, "traces", f"{task}.json"), "w") as f:
+            json.dump(pairs, f)
+    with open(os.path.join(out_dir, "traces", "val_ids.json"), "w") as f:
+        json.dump(corpus.val_ids[:16384], f)
+
+
+if __name__ == "__main__":
+    c = build_corpus()
+    print("train bytes:", len(c.train_ids))
+    print(decode(c.train_ids[:200]))

@@ -1,0 +1,27 @@
+"""Batching utilities over the synthetic token streams."""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+class StreamSampler:
+    """Uniform random windows over a flat token stream."""
+
+    def __init__(self, ids: list[int] | np.ndarray, seq_len: int, seed: int = 0):
+        self.ids = np.asarray(ids, dtype=np.int32)
+        self.seq_len = seq_len
+        self.rng = np.random.default_rng(seed)
+        assert len(self.ids) > seq_len + 1, "stream too short"
+
+    def batch(self, batch_size: int) -> tuple[np.ndarray, np.ndarray]:
+        """Returns (x [B,T], y [B,T]) with y the next-token targets."""
+        t = self.seq_len
+        starts = self.rng.integers(0, len(self.ids) - t - 1, size=batch_size)
+        x = np.stack([self.ids[s:s + t] for s in starts])
+        y = np.stack([self.ids[s + 1:s + t + 1] for s in starts])
+        return x, y
+
+    def windows(self, batch_size: int, count: int):
+        for _ in range(count):
+            yield self.batch(batch_size)

@@ -1,0 +1,57 @@
+"""Minimal Adam + cosine-decay schedule (optax is not available offline).
+
+Matches the paper's training recipe shape: cosine learning-rate schedule,
+no warmup for prompt-token training (paper §5 Training), short linear
+warmup for base-model training (standard practice; the base models are
+*ours*, the paper freezes pretrained Vicunas).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: dict
+    nu: dict
+
+
+def adam_init(params) -> AdamState:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return AdamState(jnp.zeros((), jnp.int32), zeros,
+                     jax.tree_util.tree_map(jnp.zeros_like, params))
+
+
+def adam_update(grads, state: AdamState, params, lr,
+                b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                wd: float = 0.0):
+    step = state.step + 1
+    mu = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                                state.mu, grads)
+    nu = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                                state.nu, grads)
+    t = step.astype(jnp.float32)
+    bc1 = 1 - b1 ** t
+    bc2 = 1 - b2 ** t
+
+    def upd(p, m, v):
+        return p - lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps) - lr * wd * p
+
+    new_params = jax.tree_util.tree_map(upd, params, mu, nu)
+    return new_params, AdamState(step, mu, nu)
+
+
+def cosine_lr(step, total_steps: int, base_lr: float, warmup: int = 0,
+              final_frac: float = 0.05):
+    """Cosine decay from base_lr to final_frac*base_lr with linear warmup."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0) if warmup else 1.0
+    denom = jnp.maximum(jnp.asarray(total_steps, jnp.float32) - warmup, 1.0)
+    prog = jnp.clip((step - warmup) / denom, 0.0, 1.0)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(math.pi * prog))
+    return base_lr * warm * cos

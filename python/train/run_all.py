@@ -1,0 +1,112 @@
+"""Build-time orchestrator: corpus -> base LMs -> prompt tokens -> Medusa
+heads -> acceptance stats -> serving traces.  Idempotent: finished stages
+are skipped when their outputs exist (delete ``artifacts/train`` to
+retrain).  ``--fast`` trains a tiny configuration for CI/smoke runs.
+
+Ablation variants (appendix tables) are behind ``--ablations`` because
+they multiply training time; `make ablations` runs them.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from . import corpus as corpus_mod
+from .eval_accept import eval_model
+from .train_base import train_model
+from .train_medusa import train_medusa
+from .train_prompt import TrainCfg, train_prompt
+
+MODELS = ["ppd-s", "ppd-m", "ppd-l", "ppd-d"]
+MEDUSA_MODELS = ["ppd-s", "ppd-m", "ppd-l"]
+
+
+def _exists(art, rel):
+    return os.path.exists(os.path.join(art, rel))
+
+
+def stage_corpus(art: str):
+    c = corpus_mod.build_corpus(seed=0)
+    corpus_mod.write_artifacts(c, art)
+    print("[run_all] corpus + traces written")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--ablations", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    art = args.out
+    os.makedirs(art, exist_ok=True)
+    t0 = time.time()
+    timings = {}
+
+    stage_corpus(art)
+
+    models = ["ppd-d", "ppd-s"] if args.fast else MODELS
+    base_steps = 120 if args.fast else 0
+    prompt_steps = 80 if args.fast else 350
+    for m in models:
+        if args.force or not _exists(art, f"train/{m}.npz"):
+            s = time.time()
+            train_model(m, art, steps=base_steps or None)
+            timings[f"base_{m}"] = time.time() - s
+    for m in models:
+        if args.force or not _exists(art, f"train_logs/prompt_{m}_ept1.json"):
+            s = time.time()
+            train_prompt(TrainCfg(model=m, steps=prompt_steps), art)
+            timings[f"prompt_{m}"] = time.time() - s
+    med = ["ppd-s"] if args.fast else MEDUSA_MODELS
+    for m in med:
+        if args.force or not _exists(art, f"train/{m}-medusa.npz"):
+            s = time.time()
+            train_medusa(m, art, steps=prompt_steps)
+            timings[f"medusa_{m}"] = time.time() - s
+
+    for m in models:
+        if args.force or not _exists(art, f"{m}/accept_stats.json"):
+            eval_model(m, art)
+
+    if args.ablations:
+        run_ablations(art, prompt_steps)
+
+    timings["total"] = time.time() - t0
+    with open(os.path.join(art, "train_logs", "timings.json"), "w") as f:
+        json.dump(timings, f, indent=1)
+    print(f"[run_all] done in {timings['total']:.0f}s")
+
+
+def run_ablations(art: str, steps: int, model: str = "ppd-s"):
+    """Appendix-B variants, all on the small model for tractable CPU time.
+    Paper's EPT=100 maps to EPT=16 here (same trend axis, scaled to the
+    tiny embedding dim — see DESIGN.md §2)."""
+    variants = [
+        TrainCfg(model=model, steps=steps, n_ept=4),                  # Table 2
+        TrainCfg(model=model, steps=steps, n_ept=16, inserts=4),      # Table 2
+        TrainCfg(model=model, steps=steps, kd=False),                 # Table 3
+        TrainCfg(model=model, steps=steps, n_ept=4, kd=False),        # Table 3
+        TrainCfg(model=model, steps=steps, prefix=True),              # Table 4
+        TrainCfg(model=model, steps=steps, custom_head="1-stage"),    # Table 5
+        TrainCfg(model=model, steps=steps, custom_head="2-stage"),    # Table 5
+        TrainCfg(model=model, steps=steps, n_ept=4, mask_mode="decoder"),   # T6
+        TrainCfg(model=model, steps=steps, n_ept=4, mask_mode="encoder"),   # T6
+        TrainCfg(model=model, steps=steps, n_ept=4, agg="learned"),   # Table 7
+        TrainCfg(model=model, steps=steps, multi_exit=2),             # Table 8
+        TrainCfg(model=model, steps=steps, multi_exit=3),             # Table 8
+    ]
+    for tc in variants:
+        name = tc.variant_name()
+        if not os.path.exists(os.path.join(
+                art, "train_logs", f"prompt_{model}_{name}.json")):
+            train_prompt(tc, art)
+        eval_model(model, art, variant=name, n_ept=tc.n_ept,
+                   agg=tc.agg)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Train the base byte-level LMs (the frozen "original LLMs" of the paper).
+
+The paper freezes pretrained Vicuna checkpoints; we have none, so we
+pretrain tiny analogues on the synthetic corpus (DESIGN.md §2).  Standard
+next-token cross-entropy, Adam + cosine LR.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.model import MODELS, causal_bias, forward_train, init_params
+from .corpus import build_corpus
+from .data import StreamSampler
+from .optim import adam_init, adam_update, cosine_lr
+
+# steps tuned so each model trains in a few minutes on one CPU core while
+# reaching low perplexity on the (deliberately predictable) corpus
+DEFAULT_STEPS = {"ppd-s": 600, "ppd-m": 700, "ppd-l": 700, "ppd-d": 500}
+SEQ_LEN = 96
+BATCH = 8
+BASE_LR = 3e-3
+
+
+def ce_loss(params, cfg, x, y, bias, pos):
+    logits = forward_train(params, cfg, x, pos, bias)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def train_model(model: str, art: str, steps: int | None = None,
+                seed: int = 0, log_every: int = 25) -> dict:
+    cfg = MODELS[model]
+    steps = steps or DEFAULT_STEPS[model]
+    corpus = build_corpus(seed=0)
+    sampler = StreamSampler(corpus.train_ids, SEQ_LEN, seed=seed)
+    val = StreamSampler(corpus.val_ids, SEQ_LEN, seed=seed + 1)
+
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    opt = adam_init(params)
+    bias = causal_bias(BATCH, SEQ_LEN)
+    pos = jnp.broadcast_to(jnp.arange(SEQ_LEN, dtype=jnp.int32),
+                           (BATCH, SEQ_LEN))
+
+    @jax.jit
+    def step_fn(params, opt, x, y, step):
+        loss, grads = jax.value_and_grad(ce_loss)(params, cfg, x, y, bias, pos)
+        lr = cosine_lr(step, steps, BASE_LR, warmup=20)
+        params, opt = adam_update(grads, opt, params, lr)
+        return params, opt, loss
+
+    log = {"model": model, "steps": steps, "loss": [], "wall_s": 0.0}
+    t0 = time.time()
+    for i, (x, y) in enumerate(sampler.windows(BATCH, steps)):
+        params, opt, loss = step_fn(params, opt, jnp.asarray(x),
+                                    jnp.asarray(y), jnp.asarray(i))
+        if i % log_every == 0 or i == steps - 1:
+            log["loss"].append([i, float(loss)])
+            print(f"[base {model}] step {i:4d} loss {float(loss):.4f}")
+    log["wall_s"] = time.time() - t0
+
+    # held-out perplexity
+    vx, vy = val.batch(BATCH)
+    vl = ce_loss(params, cfg, jnp.asarray(vx), jnp.asarray(vy), bias, pos)
+    log["val_loss"] = float(vl)
+    print(f"[base {model}] done in {log['wall_s']:.1f}s val_loss={float(vl):.4f}")
+
+    os.makedirs(os.path.join(art, "train"), exist_ok=True)
+    np.savez(os.path.join(art, "train", f"{model}.npz"),
+             **{k: np.asarray(v) for k, v in params.items()})
+    os.makedirs(os.path.join(art, "train_logs"), exist_ok=True)
+    with open(os.path.join(art, "train_logs", f"base_{model}.json"), "w") as f:
+        json.dump(log, f)
+    return log
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--models", default="ppd-s,ppd-m,ppd-l,ppd-d")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=0)
+    args = ap.parse_args()
+    for m in args.models.split(","):
+        train_model(m, args.out, steps=args.steps or None)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""Medusa-1 baseline: per-distance decoding heads on the frozen base LM.
+
+Head k (k = 1..K) maps the hidden state at position t to a distribution
+over the token at t+k+1 via a resblock + the frozen LM head:
+``logits_k = lm_head(h + silu(h @ W_k))``.  Trained with the same KD
+objective as PPD (teacher row t+k predicts t+k+1) so the comparison in
+Table 1 / Fig 4 / Fig 6 isolates the *mechanism* (heads vs prompt
+tokens), not the training recipe.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.model import MODELS, causal_bias, forward_train
+from .corpus import build_corpus
+from .data import StreamSampler
+from .optim import adam_init, adam_update, cosine_lr
+
+SEQ_LEN = 96
+BATCH = 8
+N_HEADS = 3
+ALPHA = 0.8
+
+
+def train_medusa(model: str, art: str, steps: int = 350, seed: int = 0,
+                 log_every: int = 25) -> dict:
+    cfg = MODELS[model]
+    z = np.load(os.path.join(art, "train", f"{model}.npz"))
+    base = {k: jnp.asarray(z[k]) for k in z.files}
+
+    corpus = build_corpus(seed=0)
+    sampler = StreamSampler(corpus.train_ids, SEQ_LEN, seed=seed + 3)
+    bias = causal_bias(BATCH, SEQ_LEN)
+    pos = jnp.broadcast_to(jnp.arange(SEQ_LEN, dtype=jnp.int32),
+                           (BATCH, SEQ_LEN))
+
+    wk = 0.02 * jax.random.normal(jax.random.PRNGKey(seed),
+                                  (N_HEADS, cfg.d_model, cfg.d_model))
+    opt = adam_init(wk)
+
+    def loss_fn(wk, x):
+        logits, hidden = forward_train(base, cfg, x, pos, bias,
+                                       return_hidden=True)
+        logits = jax.lax.stop_gradient(logits)
+        hidden = jax.lax.stop_gradient(hidden)
+        t = x.shape[1]
+        total, count = 0.0, 0.0
+        for k in range(1, N_HEADS + 1):
+            hh = hidden + jax.nn.silu(jnp.einsum("btd,de->bte", hidden, wk[k - 1]))
+            stu = jax.nn.log_softmax(hh @ base["lm_head"], axis=-1)
+            # student at t predicts t+k+1 == teacher row t+k
+            stu_v = stu[:, : t - k, :]
+            tea = jax.nn.log_softmax(logits[:, k:, :], axis=-1)
+            p_s = jnp.exp(stu_v)
+            kl = jnp.sum(p_s * (stu_v - tea), axis=-1)
+            total = total + (ALPHA ** (k - 1)) * jnp.sum(kl)
+            count = count + kl.size
+        return total / count
+
+    @jax.jit
+    def step_fn(wk, opt, x, step):
+        loss, grads = jax.value_and_grad(loss_fn)(wk, x)
+        lr = cosine_lr(step, steps, 2e-3, warmup=10)
+        wk, opt = adam_update(grads, opt, wk, lr)
+        return wk, opt, loss
+
+    log = {"model": model, "loss": []}
+    t0 = time.time()
+    for i, (x, _) in enumerate(sampler.windows(BATCH, steps)):
+        wk, opt, loss = step_fn(wk, opt, jnp.asarray(x), jnp.asarray(i))
+        if i % log_every == 0:
+            log["loss"].append([i, float(loss)])
+            print(f"[medusa {model}] step {i:4d} loss {float(loss):.4f}")
+    log["wall_s"] = time.time() - t0
+    print(f"[medusa {model}] done in {log['wall_s']:.1f}s")
+
+    np.savez(os.path.join(art, "train", f"{model}-medusa.npz"),
+             wk=np.asarray(wk), lm_head=np.asarray(base["lm_head"]))
+    os.makedirs(os.path.join(art, "train_logs"), exist_ok=True)
+    with open(os.path.join(art, "train_logs", f"medusa_{model}.json"), "w") as f:
+        json.dump(log, f)
+    return log
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--models", default="ppd-s,ppd-m,ppd-l")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=350)
+    args = ap.parse_args()
+    for m in args.models.split(","):
+        train_medusa(m, args.out, steps=args.steps)
+
+
+if __name__ == "__main__":
+    main()

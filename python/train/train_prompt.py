@@ -1,0 +1,377 @@
+"""PPD prompt-token training (paper §3.3) plus every appendix-B ablation.
+
+Only the prompt-token embeddings are trainable; the base LM stays frozen.
+Two paper techniques:
+
+* **Random insertion** — prompt-token blocks are "inserted" at random
+  points of each training window.  Implementation detail: the blocks are
+  physically appended after the real tokens but get the *position ids and
+  attention visibility* of their insertion point, which is equivalent
+  under RoPE + masked attention and keeps the real-token rows contiguous.
+* **Knowledge distillation** (Eq. 1) — the KD target for the prompt token
+  at insertion i / distance k is the base model's distribution at real
+  position i+k (which predicts token i+k+1).  Because real tokens never
+  attend to prompt tokens, ONE forward pass yields both the (unperturbed)
+  teacher rows and the student rows.
+
+Variants (appendix B), selected by TrainCfg flags:
+  n_ept            Table 2/3 — ensemble prompt tokens per prompt token
+  kd=False         Table 3  — hard-label CE instead of KD
+  mask_mode        Table 6  — ensemble / decoder / encoder EPT masking
+  agg              Table 7  — mean vs learned-weight logit aggregation
+  prefix           Table 4  — per-distance prefix tokens visible only to
+                              prompt tokens (sequence-level approximation
+                              of prefix tuning; see DESIGN.md §2)
+  custom_head      Table 5  — shared Medusa-style resblock head on prompt
+                              hidden states (1-stage or 2-stage)
+  multi_exit       Table 8  — average the last-k layer activations of
+                              prompt positions before the LM head
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from dataclasses import dataclass, replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.model import MODELS, NEG_INF, VOCAB, forward_train, rmsnorm
+from .corpus import build_corpus
+from .data import StreamSampler
+from .optim import adam_init, adam_update, cosine_lr
+
+T_REAL = 96
+
+
+@dataclass(frozen=True)
+class TrainCfg:
+    model: str = "ppd-m"
+    steps: int = 350
+    batch: int = 8
+    inserts: int = 6          # insertion points per window
+    n_ept: int = 1
+    kd: bool = True
+    alpha: float = 0.8        # Eq. 1 decay ratio
+    lr: float = 1e-2          # paper: cosine from 0.01, no warmup
+    mask_mode: str = "ensemble"
+    agg: str = "mean"         # or "learned"
+    prefix: bool = False
+    custom_head: str = "none"  # none | 1-stage | 2-stage
+    multi_exit: int = 0        # 0 = off, else #exits
+    seed: int = 0
+
+    def variant_name(self) -> str:
+        bits = [f"ept{self.n_ept}"]
+        if not self.kd:
+            bits.append("nokd")
+        if self.mask_mode != "ensemble":
+            bits.append(self.mask_mode)
+        if self.agg != "mean":
+            bits.append(self.agg)
+        if self.prefix:
+            bits.append("prefix")
+        if self.custom_head != "none":
+            bits.append(f"head{self.custom_head}")
+        if self.multi_exit:
+            bits.append(f"exit{self.multi_exit}")
+        return "-".join(bits)
+
+
+# ---------------------------------------------------------------------------
+# batch construction (host-side numpy; see module docstring)
+# ---------------------------------------------------------------------------
+
+
+def build_prompt_batch(x: np.ndarray, tc: TrainCfg, n_prompt: int,
+                       rng: np.random.Generator):
+    """Expand real windows [B, T_REAL] with inserted prompt blocks.
+
+    Returns dict of numpy arrays:
+      tokens  [B, T]      real tokens then prompt blocks (+ prefix rows)
+      pos     [B, T]      RoPE position ids
+      bias    [B, T, T]   additive attention bias
+      tgt     [B, I, K]   teacher row index for each (insert, distance)
+      sidx    [B, I, K, E] student row indices (per EPT)
+      hard    [B, I, K]   hard labels (token at insertion+distance+1)
+      valid   [B, I, K]   1 where the target is inside the window
+    """
+    b, tr = x.shape
+    assert tr == T_REAL
+    i_n, k_n, e_n = tc.inserts, n_prompt, tc.n_ept
+    n_prefix = k_n if tc.prefix else 0
+    t = n_prefix + tr + i_n * k_n * e_n
+
+    tokens = np.zeros((b, t), np.int32)
+    pos = np.zeros((b, t), np.int32)
+    kinds = np.zeros((b, t), np.int32)      # 0 real, 1 prompt, 2 prefix
+    bias = np.full((b, t, t), NEG_INF, np.float32)
+    tgt = np.zeros((b, i_n, k_n), np.int32)
+    sidx = np.zeros((b, i_n, k_n, e_n), np.int32)
+    hard = np.zeros((b, i_n, k_n), np.int32)
+    valid = np.zeros((b, i_n, k_n), np.float32)
+
+    p0 = n_prefix  # real tokens start here
+    for bi in range(b):
+        # prefix rows (ids VOCAB + n_prompt*n_ept + j in the extended table)
+        for j in range(n_prefix):
+            tokens[bi, j] = VOCAB + k_n * e_n + j
+            pos[bi, j] = 0
+            kinds[bi, j] = 2
+            bias[bi, j, j] = 0.0
+        tokens[bi, p0:p0 + tr] = x[bi]
+        pos[bi, p0:p0 + tr] = np.arange(tr)
+        # real-real causal
+        rr = np.tril(np.ones((tr, tr), np.float32))
+        bias[bi, p0:p0 + tr, p0:p0 + tr] = np.where(rr > 0, 0.0, NEG_INF)
+
+        inserts = rng.choice(np.arange(4, tr - k_n - 2), size=i_n,
+                             replace=False)
+        w = p0 + tr  # write head for prompt rows
+        for ii, ins in enumerate(sorted(inserts)):
+            for k in range(k_n):       # distance k+1
+                for e in range(e_n):
+                    a = w
+                    w += 1
+                    tokens[bi, a] = VOCAB + k * e_n + e
+                    pos[bi, a] = ins + k + 1
+                    kinds[bi, a] = 1
+                    sidx[bi, ii, k, e] = a
+                    # sees real prefix (causal up to insertion point)
+                    bias[bi, a, p0:p0 + ins + 1] = 0.0
+                    bias[bi, a, a] = 0.0
+                    # sees earlier prompt tokens at the same insertion
+                    for k2 in range(k):
+                        for e2 in range(e_n):
+                            a2 = sidx[bi, ii, k2, e2]
+                            see = (
+                                e2 == e if tc.mask_mode == "ensemble"
+                                else True  # decoder/encoder: all earlier
+                            )
+                            if see:
+                                bias[bi, a, a2] = 0.0
+                    if tc.mask_mode == "encoder":
+                        # EPTs of the same prompt token see each other
+                        for e2 in range(e_n):
+                            a2 = sidx[bi, ii, k, e2]
+                            if a2:
+                                bias[bi, a, a2] = 0.0
+                                bias[bi, a2, a] = 0.0
+                    if tc.prefix:
+                        bias[bi, a, k] = 0.0  # its own prefix row only
+                tgt_pos = ins + k + 1      # teacher row predicts ins+k+2
+                if tgt_pos < tr - 1:
+                    tgt[bi, ii, k] = p0 + tgt_pos
+                    hard[bi, ii, k] = x[bi, tgt_pos + 1]
+                    valid[bi, ii, k] = 1.0
+    return dict(tokens=tokens, pos=pos, bias=bias, tgt=tgt, sidx=sidx,
+                hard=hard, valid=valid)
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+
+def make_loss_fn(cfg, tc: TrainCfg):
+    k_n = cfg.n_prompt
+
+    def loss_fn(trainable, frozen, batch):
+        params = {**frozen, **trainable,
+                  "prompt_emb": trainable["prompt_emb"]}
+        if tc.multi_exit:
+            logits, _, layers = forward_train(
+                params, cfg, batch["tokens"], batch["pos"], batch["bias"],
+                collect_layers=True)
+            ex = jnp.mean(jnp.stack(layers[-tc.multi_exit:]), axis=0)
+            ex_logits = rmsnorm(ex, params["final_norm"]) @ params["lm_head"]
+        else:
+            if tc.custom_head != "none":
+                base_logits, hidden = forward_train(
+                    params, cfg, batch["tokens"], batch["pos"], batch["bias"],
+                    return_hidden=True)
+                hh = hidden + jax.nn.silu(hidden @ trainable["head_w"])
+                head_logits = hh @ params["lm_head"]
+                logits = base_logits
+            else:
+                logits = forward_train(params, cfg, batch["tokens"],
+                                       batch["pos"], batch["bias"])
+
+        def gather_rows(src, idx):
+            # src [B,T,V], idx [B,...] -> [B,...,V]
+            return jnp.take_along_axis(
+                src, idx.reshape(idx.shape[0], -1)[..., None], axis=1
+            ).reshape(*idx.shape, src.shape[-1])
+
+        teacher = jax.lax.stop_gradient(gather_rows(logits, batch["tgt"]))
+        if tc.multi_exit:
+            student_src = ex_logits
+        elif tc.custom_head != "none":
+            student_src = head_logits
+        else:
+            student_src = logits
+        stu = gather_rows(student_src, batch["sidx"])  # [B,I,K,E,V]
+        if tc.agg == "learned":
+            w = jax.nn.softmax(trainable["agg_w"])
+            stu = jnp.einsum("bikev,e->bikv", stu, w)
+        else:
+            stu = jnp.mean(stu, axis=3)
+
+        logp_s = jax.nn.log_softmax(stu, axis=-1)
+        decay = tc.alpha ** jnp.arange(k_n, dtype=jnp.float32)  # [K]
+        if tc.kd:
+            logp_t = jax.nn.log_softmax(teacher, axis=-1)
+            p_s = jnp.exp(logp_s)
+            kl = jnp.sum(p_s * (logp_s - logp_t), axis=-1)  # [B,I,K]
+            per = kl
+        else:
+            nll = -jnp.take_along_axis(logp_s, batch["hard"][..., None],
+                                       axis=-1)[..., 0]
+            per = nll
+        per = per * batch["valid"] * decay[None, None, :]
+        return jnp.sum(per) / (jnp.sum(batch["valid"]) + 1e-9)
+
+    return loss_fn
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+def init_trainable(cfg, tc: TrainCfg, base_params, key) -> dict:
+    """Prompt embeddings initialized from normal text-token embeddings
+    (paper §5 Training) + variant-specific extras."""
+    rows = cfg.n_prompt * tc.n_ept
+    key, k1, k2 = jax.random.split(key, 3)
+    idx = jax.random.randint(k1, (rows,), 32, VOCAB)
+    prompt_emb = base_params["tok_emb"][idx] + \
+        0.01 * jax.random.normal(k2, (rows, cfg.d_model))
+    tr = {"prompt_emb": prompt_emb}
+    if tc.prefix:
+        key, k3 = jax.random.split(key)
+        pidx = jax.random.randint(k3, (cfg.n_prompt,), 32, VOCAB)
+        tr["prefix_emb"] = base_params["tok_emb"][pidx]
+    if tc.agg == "learned":
+        tr["agg_w"] = jnp.zeros((tc.n_ept,))
+    if tc.custom_head != "none":
+        key, k4 = jax.random.split(key)
+        tr["head_w"] = 0.02 * jax.random.normal(
+            k4, (cfg.d_model, cfg.d_model))
+    return tr
+
+
+def train_prompt(tc: TrainCfg, art: str, log_every: int = 25) -> dict:
+    cfg0 = MODELS[tc.model]
+    # the L2 config's n_ept describes inference artifacts (always 1);
+    # training may use more EPT rows
+    cfg = replace(cfg0, n_ept=tc.n_ept) if hasattr(cfg0, "n_ept") else cfg0
+
+    z = np.load(os.path.join(art, "train", f"{tc.model}.npz"))
+    base = {k: jnp.asarray(z[k]) for k in z.files}
+
+    corpus = build_corpus(seed=0)
+    sampler = StreamSampler(corpus.train_ids, T_REAL, seed=tc.seed + 7)
+    rng = np.random.default_rng(tc.seed + 13)
+
+    trainable = init_trainable(cfg, tc, base, jax.random.PRNGKey(tc.seed))
+    frozen = {k: v for k, v in base.items() if k != "prompt_emb"}
+    if tc.prefix:
+        # prefix rows live in the extended embedding table after EPT rows
+        frozen = dict(frozen)
+
+    loss_fn = make_loss_fn(cfg, tc)
+
+    def merge_prompt(tr):
+        if tc.prefix:
+            tr = dict(tr)
+            tr["prompt_emb"] = jnp.concatenate(
+                [tr["prompt_emb"], tr.pop("prefix_emb")], axis=0)
+        return tr
+
+    def loss_merged(tr, frozen, batch):
+        return loss_fn(merge_prompt(tr), frozen, batch)
+
+    opt = adam_init(trainable)
+
+    stages = [(tc.steps, tc.lr)]
+    if tc.custom_head == "2-stage":
+        stages = [(tc.steps // 2, tc.lr), (tc.steps - tc.steps // 2, tc.lr / 5)]
+
+    total_steps = sum(s for s, _ in stages)
+
+    def make_step(lr0):
+        @jax.jit
+        def step_fn(trainable, opt, batch, step):
+            loss, grads = jax.value_and_grad(loss_merged)(
+                trainable, frozen, batch)
+            lr = cosine_lr(step, total_steps, lr0, warmup=0)
+            trainable, opt = adam_update(grads, opt, trainable, lr)
+            return trainable, opt, loss
+        return step_fn
+
+    log = {"model": tc.model, "variant": tc.variant_name(), "loss": []}
+    t0 = time.time()
+    gstep = 0
+    for total, lr0 in stages:
+        step_fn = make_step(lr0)
+        for _ in range(total):
+            x, _ = sampler.batch(tc.batch)
+            nb = build_prompt_batch(x, tc, cfg.n_prompt, rng)
+            batch = {k: jnp.asarray(v) for k, v in nb.items()}
+            trainable, opt, loss = step_fn(trainable, opt, batch,
+                                           jnp.asarray(gstep))
+            if gstep % log_every == 0:
+                log["loss"].append([gstep, float(loss)])
+                print(f"[prompt {tc.model}/{tc.variant_name()}] "
+                      f"step {gstep:4d} loss {float(loss):.4f}")
+            gstep += 1
+    log["wall_s"] = time.time() - t0
+    print(f"[prompt {tc.model}/{tc.variant_name()}] done {log['wall_s']:.1f}s")
+
+    # save: default variant merges prompt_emb into the model params
+    merged = merge_prompt(dict(trainable))
+    os.makedirs(os.path.join(art, "train", "variants"), exist_ok=True)
+    vpath = os.path.join(art, "train", "variants",
+                         f"{tc.model}_{tc.variant_name()}.npz")
+    np.savez(vpath, **{k: np.asarray(v) for k, v in merged.items()})
+    if tc.variant_name() == "ept1":
+        out = dict(base)
+        out["prompt_emb"] = merged["prompt_emb"]
+        np.savez(os.path.join(art, "train", f"{tc.model}.npz"),
+                 **{k: np.asarray(v) for k, v in out.items()})
+    os.makedirs(os.path.join(art, "train_logs"), exist_ok=True)
+    with open(os.path.join(art, "train_logs",
+                           f"prompt_{tc.model}_{tc.variant_name()}.json"),
+              "w") as f:
+        json.dump(log, f)
+    return log
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="ppd-m")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=350)
+    ap.add_argument("--ept", type=int, default=1)
+    ap.add_argument("--no-kd", action="store_true")
+    ap.add_argument("--mask", default="ensemble")
+    ap.add_argument("--agg", default="mean")
+    ap.add_argument("--prefix", action="store_true")
+    ap.add_argument("--custom-head", default="none")
+    ap.add_argument("--multi-exit", type=int, default=0)
+    ap.add_argument("--batch", type=int, default=8)
+    args = ap.parse_args()
+    tc = TrainCfg(model=args.model, steps=args.steps, n_ept=args.ept,
+                  kd=not args.no_kd, mask_mode=args.mask, agg=args.agg,
+                  prefix=args.prefix, custom_head=args.custom_head,
+                  multi_exit=args.multi_exit, batch=args.batch)
+    train_prompt(tc, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+//! Shared bench plumbing (criterion is not vendored; these are
+//! `harness = false` binaries using `ppd::util::bench`).
+
+use std::path::PathBuf;
+
+use ppd::config::{ArtifactPaths, ServeConfig};
+use ppd::coordinator::{build_engine, EngineKind};
+use ppd::decoding::GenerationResult;
+use ppd::runtime::calibrate::Calibration;
+use ppd::runtime::Runtime;
+use ppd::workload::{load_trace, TraceItem};
+
+pub fn artifacts_root() -> Option<PathBuf> {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if root.join("manifest.json").exists() {
+        Some(root)
+    } else {
+        eprintln!("[bench skipped] artifacts missing — run `make artifacts` first");
+        None
+    }
+}
+
+/// Run `engine` over trace items, aggregating results.
+pub struct EngineRun {
+    pub name: &'static str,
+    pub tokens: usize,
+    pub steps: usize,
+    pub draft_steps: usize,
+    pub decode_s: f64,
+    pub input_len_sum: usize,
+    pub outputs: Vec<Vec<u32>>,
+}
+
+impl EngineRun {
+    pub fn throughput(&self) -> f64 {
+        self.tokens as f64 / self.decode_s
+    }
+
+    pub fn tau(&self) -> f64 {
+        self.tokens as f64 / self.steps as f64
+    }
+
+    pub fn mean_l_fp(&self) -> f64 {
+        self.decode_s / self.steps as f64
+    }
+
+    pub fn mean_input(&self) -> f64 {
+        self.input_len_sum as f64 / self.steps.max(1) as f64
+    }
+}
+
+pub fn run_engine(
+    kind: EngineKind,
+    rt: &Runtime,
+    draft: Option<&Runtime>,
+    paths: &ArtifactPaths,
+    cfg: &ServeConfig,
+    items: &[&TraceItem],
+    max_new: usize,
+) -> anyhow::Result<EngineRun> {
+    let mut engine = build_engine(kind, rt, draft, paths, cfg, 0)?;
+    let mut agg = EngineRun {
+        name: engine.name(),
+        tokens: 0,
+        steps: 0,
+        draft_steps: 0,
+        decode_s: 0.0,
+        input_len_sum: 0,
+        outputs: Vec::new(),
+    };
+    for it in items {
+        let r: GenerationResult = engine.generate(&it.prompt, max_new)?;
+        agg.tokens += r.tokens.len();
+        agg.steps += r.steps;
+        agg.draft_steps += r.draft_steps;
+        agg.decode_s += r.decode_s;
+        agg.input_len_sum += r.input_lens.iter().sum::<usize>();
+        agg.outputs.push(r.tokens);
+    }
+    Ok(agg)
+}
+
+pub fn take_items(trace: &[TraceItem], n: usize) -> Vec<&TraceItem> {
+    trace.iter().take(n).collect()
+}
+
+pub fn load_task(paths: &ArtifactPaths, task: &str) -> Vec<TraceItem> {
+    load_trace(&paths.trace(task)).expect("trace")
+}
+
+/// GPU-like latency envelopes for speedup projection (DESIGN.md §2):
+/// `a100`: wide trees nearly free (paper Table 1: L_fp(63)/L_fp(1)≈1.18);
+/// `rtx4090`: moderately utilization-capped.
+pub fn envelopes(measured: &Calibration) -> Vec<Calibration> {
+    let base = measured.latency_s.get(&1).copied().unwrap_or(1e-3);
+    let mk = |label: &str, per_tok_frac: f64| {
+        let latency_s = measured
+            .latency_s
+            .keys()
+            .map(|&b| (b, base * (1.0 + per_tok_frac * (b as f64 - 1.0))))
+            .collect();
+        Calibration { model: measured.model.clone(), envelope: label.into(), latency_s }
+    };
+    vec![mk("a100", 0.003), mk("rtx4090", 0.008)]
+}
+
+/// Project a measured run's speedup under a latency curve: vanilla takes
+/// `tokens` steps of L(1); the engine took `steps` forwards of its mean
+/// input length (bucket-quantized).
+pub fn project_speedup(run: &EngineRun, cal: &Calibration) -> f64 {
+    let l1 = cal.lookup(1).unwrap();
+    let li = cal.lookup(run.mean_input().ceil() as usize).unwrap_or(l1);
+    let vanilla = run.tokens as f64 * l1;
+    let engine = run.steps as f64 * li;
+    vanilla / engine
+}

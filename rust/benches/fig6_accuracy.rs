@@ -1,0 +1,141 @@
+//! Fig 6: accumulative (top-k) accuracy of guesses per token distance.
+//!
+//! Two sources:
+//!  (a) the build-time python estimates (`accept_stats.json`, the same
+//!      numbers that drive tree construction), including the EPT and
+//!      model-size ablation variants (Fig 6b/6c);
+//!  (b) an independent **rust-side re-measurement** through the PJRT
+//!      path: teacher-forced roots along the chat-trace references with
+//!      prompt chains attached, counting top-k hits — cross-checking the
+//!      python estimator against the serving stack's numerics.
+
+mod common;
+
+use common::*;
+use ppd::config::{ArtifactPaths, PROMPT_ID0};
+use ppd::kvcache::HostKvCache;
+use ppd::runtime::{Runtime, NEG_INF};
+use ppd::tree::builder::AcceptStats;
+use ppd::util::bench::Table;
+use ppd::util::topk;
+
+fn main() {
+    let Some(root) = artifacts_root() else { return };
+    println!("=== Fig 6a: accumulative accuracy by distance (python estimates) ===\n");
+    let mut t = Table::new(&["model", "method", "@1 top1", "@1 top10", "@2 top1", "@2 top10", "@3 top1", "@3 top10"]);
+    for model in ["ppd-s", "ppd-m", "ppd-l"] {
+        let paths = ArtifactPaths::new(root.clone(), model);
+        for method in ["ppd", "medusa"] {
+            if let Ok(s) = AcceptStats::load(&paths.accept_stats(None), method) {
+                t.row(&[
+                    model.into(),
+                    method.into(),
+                    format!("{:.3}", s.cum[0][0]),
+                    format!("{:.3}", s.cum[0][9]),
+                    format!("{:.3}", s.cum[1][0]),
+                    format!("{:.3}", s.cum[1][9]),
+                    format!("{:.3}", s.cum[2][0]),
+                    format!("{:.3}", s.cum[2][9]),
+                ]);
+            }
+        }
+    }
+    t.print();
+
+    println!("\n=== Fig 6b: EPT ablation variants (model ppd-s) ===\n");
+    let paths_s = ArtifactPaths::new(root.clone(), "ppd-s");
+    let mut t2 = Table::new(&["variant", "@1 top1", "@1 top10", "@2 top1", "@2 top10"]);
+    for variant in ["ept1", "ept4", "ept16"] {
+        let p = paths_s.accept_stats(Some(variant));
+        let p = if variant == "ept1" && !p.exists() { paths_s.accept_stats(None) } else { p };
+        if let Ok(s) = AcceptStats::load(&p, "ppd") {
+            t2.row(&[
+                variant.into(),
+                format!("{:.3}", s.cum[0][0]),
+                format!("{:.3}", s.cum[0][9]),
+                format!("{:.3}", s.cum[1][0]),
+                format!("{:.3}", s.cum[1][9]),
+            ]);
+        }
+    }
+    t2.print();
+
+    println!("\n=== Fig 6 cross-check: rust-side re-measurement over PJRT ({}) ===\n", "ppd-s");
+    let rt = Runtime::load(&paths_s).expect("runtime");
+    let (hits, totals) = measure_rust(&rt, &paths_s, 8, 24);
+    let mut t3 = Table::new(&["distance", "top-1 (rust)", "top-5 (rust)", "top-10 (rust)", "top-10 (python)"]);
+    let py = AcceptStats::load(&paths_s.accept_stats(None), "ppd").unwrap();
+    for d in 0..hits.len() {
+        let tot = totals[d].max(1) as f64;
+        t3.row(&[
+            format!("@{}", d + 1),
+            format!("{:.3}", hits[d][0] as f64 / tot),
+            format!("{:.3}", hits[d][..5].iter().sum::<usize>() as f64 / tot),
+            format!("{:.3}", hits[d].iter().sum::<usize>() as f64 / tot),
+            format!("{:.3}", py.cum[d][9]),
+        ]);
+    }
+    t3.print();
+    println!("\npaper shape: accuracy decays with distance; the PPD-vs-Medusa gap widens with distance; more EPTs help modestly; larger models help modestly.");
+}
+
+/// Teacher-forced prompt-chain accuracy through the serving runtime.
+fn measure_rust(rt: &Runtime, paths: &ArtifactPaths, n_items: usize, steps_per_item: usize) -> (Vec<Vec<usize>>, Vec<usize>) {
+    let m = rt.cfg.n_prompt;
+    let s = rt.cfg.max_ctx;
+    let vocab = rt.cfg.vocab;
+    let trace = load_task(paths, "chat");
+    let mut hits = vec![vec![0usize; 10]; m];
+    let mut totals = vec![0usize; m];
+    for it in trace.iter().take(n_items) {
+        let full: Vec<u32> = it.prompt.iter().chain(it.reference.iter()).copied().collect();
+        if full.len() < 24 {
+            continue;
+        }
+        let mut cache = HostKvCache::new(rt.cfg.n_layers, rt.cfg.max_ctx, rt.cfg.d_model);
+        // prefill everything except a tail we walk teacher-forced
+        let tail = steps_per_item.min(full.len() - 9);
+        let split = full.len() - tail;
+        let _ = ppd::decoding::prefill(rt, &mut cache, &full[..split]).expect("prefill");
+        for i in 0..tail.saturating_sub(m + 2) {
+            let committed = cache.committed();
+            // root = true token at position split+i, chain of m prompts
+            let n = 1 + m;
+            let mut tokens = vec![full[split + i]];
+            let mut pos = vec![committed as u32];
+            let mut slots = vec![committed as u32];
+            for k in 0..m {
+                tokens.push(PROMPT_ID0 + k as u32);
+                pos.push((committed + 1 + k) as u32);
+                slots.push((committed + 1 + k) as u32);
+            }
+            let mut bias = vec![NEG_INF; n * s];
+            for r in 0..n {
+                for j in 0..committed {
+                    bias[r * s + j] = 0.0;
+                }
+                for j in 0..=r {
+                    bias[r * s + committed + j] = 0.0;
+                }
+            }
+            let out = rt.forward(&tokens, &pos, &slots, &bias, cache.as_slice()).expect("fwd");
+            // commit only the root row (teacher forcing)
+            cache.scatter(&out.new_kv[..], &slots).unwrap();
+            cache.compact(&[committed as u32]).unwrap();
+            // prompt k predicts distance k+1 => true token full[split+i+k+2]
+            for k in 0..m {
+                let idx = split + i + k + 2;
+                if idx >= full.len() {
+                    continue;
+                }
+                let row = out.logits_row(1 + k, vocab);
+                let top = topk(row, 10);
+                totals[k] += 1;
+                if let Some(r) = top.iter().position(|&t| t as u32 == full[idx]) {
+                    hits[k][r] += 1;
+                }
+            }
+        }
+    }
+    (hits, totals)
+}

@@ -1,0 +1,5 @@
+//! Baseline accounting that needs no runtime: the Fig 7 / Table 1 memory
+//! and parameter models for PPD vs Medusa heads vs an Eagle-style draft
+//! network.
+
+pub mod memory;

@@ -1,0 +1,215 @@
+//! Artifact/model configuration loaded from `artifacts/<model>/config.json`
+//! (written by `python/compile/aot.py`) plus serving-side knobs.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Byte-level vocab used by every model in the zoo.
+pub const VOCAB: usize = 128;
+/// First prompt-token id; prompt token k (0-based) is `PROMPT_ID0 + k`
+/// (inference artifacts always use 1 EPT per prompt token).
+pub const PROMPT_ID0: u32 = 128;
+pub const PAD_ID: u32 = 0;
+pub const BOS_ID: u32 = 1;
+pub const EOS_ID: u32 = 2;
+
+/// Mirror of the python `ModelConfig` + AOT bucket metadata.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub d_mlp: usize,
+    pub max_ctx: usize,
+    pub n_prompt: usize,
+    pub rope_theta: f64,
+    pub buckets: Vec<usize>,
+    pub trained: bool,
+    pub medusa: bool,
+    pub param_count: usize,
+    pub prompt_param_count: usize,
+}
+
+impl ModelConfig {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let j = Json::from_file(&dir.join("config.json"))
+            .with_context(|| format!("loading model config from {}", dir.display()))?;
+        let cfg = ModelConfig {
+            name: j.req("name")?.as_str()?.to_string(),
+            vocab: j.req("vocab")?.as_usize()?,
+            d_model: j.req("d_model")?.as_usize()?,
+            n_layers: j.req("n_layers")?.as_usize()?,
+            n_heads: j.req("n_heads")?.as_usize()?,
+            d_head: j.req("d_head")?.as_usize()?,
+            d_mlp: j.req("d_mlp")?.as_usize()?,
+            max_ctx: j.req("max_ctx")?.as_usize()?,
+            n_prompt: j.req("n_prompt")?.as_usize()?,
+            rope_theta: j.req("rope_theta")?.as_f64()?,
+            buckets: j
+                .req("buckets")?
+                .as_arr()?
+                .iter()
+                .map(|b| b.as_usize())
+                .collect::<Result<_>>()?,
+            trained: j.req("trained")?.as_bool()?,
+            medusa: j.req("medusa")?.as_bool()?,
+            param_count: j.req("param_count")?.as_usize()?,
+            prompt_param_count: j.req("prompt_param_count")?.as_usize()?,
+        };
+        if cfg.vocab != VOCAB {
+            bail!("unsupported vocab {}", cfg.vocab);
+        }
+        if cfg.buckets.is_empty() {
+            bail!("model {} exported without buckets", cfg.name);
+        }
+        Ok(cfg)
+    }
+
+    /// Smallest AOT bucket that fits `n` tokens.
+    pub fn bucket_for(&self, n: usize) -> Result<usize> {
+        self.buckets
+            .iter()
+            .copied()
+            .filter(|&b| b >= n)
+            .min()
+            .with_context(|| format!("no bucket fits {n} tokens (max {:?})", self.buckets.iter().max()))
+    }
+
+    /// Fraction of extra trainable parameters (paper's P_tr column).
+    pub fn trainable_fraction(&self) -> f64 {
+        self.prompt_param_count as f64 / self.param_count as f64
+    }
+}
+
+/// Locations of everything the runtime needs.
+#[derive(Debug, Clone)]
+pub struct ArtifactPaths {
+    pub root: PathBuf,
+    pub model: String,
+}
+
+impl ArtifactPaths {
+    pub fn new(root: impl Into<PathBuf>, model: &str) -> Self {
+        ArtifactPaths { root: root.into(), model: model.to_string() }
+    }
+
+    pub fn model_dir(&self) -> PathBuf {
+        self.root.join(&self.model)
+    }
+
+    pub fn fwd_hlo(&self, bucket: usize) -> PathBuf {
+        self.model_dir().join(format!("fwd_n{bucket}.hlo.txt"))
+    }
+
+    /// Short-KV-context variant (perf: KV-length bucketing).
+    pub fn fwd_hlo_kv(&self, bucket: usize, kv: usize) -> PathBuf {
+        self.model_dir().join(format!("fwd_n{bucket}_s{kv}.hlo.txt"))
+    }
+
+    pub fn weights_bin(&self) -> PathBuf {
+        self.model_dir().join("weights.bin")
+    }
+
+    pub fn weights_manifest(&self) -> PathBuf {
+        self.model_dir().join("weights.json")
+    }
+
+    pub fn medusa_hlo(&self) -> PathBuf {
+        self.model_dir().join("medusa.hlo.txt")
+    }
+
+    pub fn medusa_weights(&self) -> (PathBuf, PathBuf) {
+        (self.model_dir().join("medusa_weights.bin"),
+         self.model_dir().join("medusa_weights.json"))
+    }
+
+    pub fn accept_stats(&self, variant: Option<&str>) -> PathBuf {
+        match variant {
+            Some(v) => self.model_dir().join(format!("accept_stats_{v}.json")),
+            None => self.model_dir().join("accept_stats.json"),
+        }
+    }
+
+    pub fn calibration(&self) -> PathBuf {
+        self.model_dir().join("calibration.json")
+    }
+
+    pub fn trace(&self, task: &str) -> PathBuf {
+        self.root.join("traces").join(format!("{task}.json"))
+    }
+}
+
+/// Serving/decoding configuration (CLI-tunable).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// sampling temperature; 0 = greedy (exact-match verification)
+    pub temperature: f32,
+    /// typical-acceptance knobs (Medusa defaults)
+    pub typical_epsilon: f32,
+    pub typical_delta: f32,
+    /// candidate + prompt token budget of the dynamic sparse tree
+    pub n_candidates: usize,
+    pub n_prompt_budget: usize,
+    /// cap on generated tokens per request
+    pub max_new_tokens: usize,
+    /// candidate ranks considered per tree level
+    pub top_r: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            temperature: 0.0,
+            typical_epsilon: 0.3,
+            typical_delta: 0.09,
+            n_candidates: 12,
+            n_prompt_budget: 18,
+            max_new_tokens: 64,
+            top_r: 10,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_cfg(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(
+            dir.join("config.json"),
+            r#"{"name":"t","vocab":128,"d_model":64,"n_layers":2,"n_heads":2,
+                "d_head":32,"d_mlp":176,"max_ctx":512,"n_prompt":3,"n_ept":1,
+                "rope_theta":10000.0,"buckets":[1,8,64],"trained":true,
+                "medusa":false,"param_count":1000000,"prompt_param_count":192}"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn loads_and_buckets() {
+        let dir = std::env::temp_dir().join("ppd_cfg_test");
+        write_cfg(&dir);
+        let cfg = ModelConfig::load(&dir).unwrap();
+        assert_eq!(cfg.bucket_for(1).unwrap(), 1);
+        assert_eq!(cfg.bucket_for(2).unwrap(), 8);
+        assert_eq!(cfg.bucket_for(8).unwrap(), 8);
+        assert_eq!(cfg.bucket_for(9).unwrap(), 64);
+        assert!(cfg.bucket_for(65).is_err());
+        assert!(cfg.trainable_fraction() < 0.001);
+    }
+
+    #[test]
+    fn paths_layout() {
+        let p = ArtifactPaths::new("/a", "ppd-m");
+        assert_eq!(p.fwd_hlo(8), PathBuf::from("/a/ppd-m/fwd_n8.hlo.txt"));
+        assert_eq!(p.trace("chat"), PathBuf::from("/a/traces/chat.json"));
+        assert!(p.accept_stats(Some("ept4")).to_str().unwrap().contains("ept4"));
+    }
+}

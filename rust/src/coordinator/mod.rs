@@ -1,0 +1,237 @@
+//! L3 coordinator: request queue + worker loop + TCP server.
+//!
+//! The PJRT client is not `Send`, so the worker thread *owns* its
+//! `Runtime` and engine — the coordinator hands requests over an mpsc
+//! channel and receives responses on another (vLLM's
+//! router/worker split at miniature scale, batch size 1 per the paper's
+//! evaluation setting).
+
+pub mod request;
+pub mod server;
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{ArtifactPaths, ServeConfig};
+use crate::decoding::lookup::{ChainEngine, LookaheadProposer, PldProposer, RestProposer};
+use crate::decoding::medusa::MedusaEngine;
+use crate::decoding::ppd::PpdEngine;
+use crate::decoding::speculative::SpeculativeEngine;
+use crate::decoding::vanilla::VanillaEngine;
+use crate::decoding::DecodeEngine;
+use crate::runtime::Runtime;
+use crate::tree::builder::AcceptStats;
+use crate::workload;
+
+pub use request::{parse_request_line, Request, Response};
+
+/// Which engine the worker runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    Vanilla,
+    Ppd,
+    Medusa,
+    Pld,
+    Rest,
+    Lookahead,
+    Spec,
+    SpecPpd,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "vanilla" => EngineKind::Vanilla,
+            "ppd" => EngineKind::Ppd,
+            "medusa" => EngineKind::Medusa,
+            "pld" => EngineKind::Pld,
+            "rest" => EngineKind::Rest,
+            "lookahead" => EngineKind::Lookahead,
+            "spec" => EngineKind::Spec,
+            "spec+ppd" | "spec-ppd" => EngineKind::SpecPpd,
+            other => return Err(anyhow!("unknown engine '{other}'")),
+        })
+    }
+
+    pub fn all() -> &'static [&'static str] {
+        &["vanilla", "ppd", "medusa", "pld", "rest", "lookahead", "spec", "spec+ppd"]
+    }
+}
+
+/// Build an engine over runtimes the caller owns (single-threaded use:
+/// examples, benches).  `draft` is required for the speculative kinds.
+pub fn build_engine<'rt>(
+    kind: EngineKind,
+    rt: &'rt Runtime,
+    draft: Option<&'rt Runtime>,
+    paths: &ArtifactPaths,
+    cfg: &ServeConfig,
+    seed: u64,
+) -> Result<Box<dyn DecodeEngine + 'rt>> {
+    let stats_path = paths.accept_stats(None);
+    Ok(match kind {
+        EngineKind::Vanilla => Box::new(VanillaEngine::new(rt, cfg.temperature, seed)),
+        EngineKind::Ppd => {
+            let stats = AcceptStats::load(&stats_path, "ppd")?;
+            Box::new(PpdEngine::new(rt, &stats, cfg, seed)?)
+        }
+        EngineKind::Medusa => {
+            let stats = AcceptStats::load(&stats_path, "medusa")?;
+            // Medusa's static tree gets the same *total* token budget
+            // (candidates + prompts) PPD uses, per the paper's equal-
+            // budget comparisons
+            let n = cfg.n_candidates + cfg.n_prompt_budget;
+            Box::new(MedusaEngine::new(rt, &stats, cfg, n, seed)?)
+        }
+        EngineKind::Pld => {
+            Box::new(ChainEngine::new(rt, PldProposer { span: 4 }, 4, 16, seed))
+        }
+        EngineKind::Rest => {
+            let datastore = workload::load_val_stream(&paths.root)?;
+            Box::new(ChainEngine::new(
+                rt,
+                RestProposer { datastore, span: 4, max_hits: 3 },
+                4,
+                16,
+                seed,
+            ))
+        }
+        EngineKind::Lookahead => {
+            Box::new(ChainEngine::new(rt, LookaheadProposer::new(4), 4, 16, seed))
+        }
+        EngineKind::Spec => {
+            let draft = draft.ok_or_else(|| anyhow!("spec engine needs a draft model"))?;
+            Box::new(SpeculativeEngine::new_vanilla(rt, draft, 4, seed))
+        }
+        EngineKind::SpecPpd => {
+            let draft = draft.ok_or_else(|| anyhow!("spec+ppd engine needs a draft model"))?;
+            let draft_paths = ArtifactPaths::new(paths.root.clone(), &draft.cfg.name);
+            let stats = AcceptStats::load(&draft_paths.accept_stats(None), "ppd")?;
+            Box::new(SpeculativeEngine::new_ppd(rt, draft, &stats, cfg, 4, seed)?)
+        }
+    })
+}
+
+/// Handle to a running worker.
+pub struct Coordinator {
+    tx: mpsc::Sender<(Request, Instant)>,
+    rx: mpsc::Receiver<Response>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Spawn a worker that loads the model and serves requests FIFO.
+    pub fn spawn(
+        root: std::path::PathBuf,
+        model: String,
+        draft_model: Option<String>,
+        kind: EngineKind,
+        cfg: ServeConfig,
+    ) -> Result<Coordinator> {
+        let (tx, work_rx) = mpsc::channel::<(Request, Instant)>();
+        let (resp_tx, rx) = mpsc::channel::<Response>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+
+        let worker = std::thread::spawn(move || {
+            let paths = ArtifactPaths::new(root.clone(), &model);
+            let rt = match Runtime::load(&paths) {
+                Ok(rt) => rt,
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            let draft_rt = match draft_model {
+                Some(dm) => match Runtime::load(&ArtifactPaths::new(root.clone(), &dm)) {
+                    Ok(rt) => Some(rt),
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                },
+                None => None,
+            };
+            let mut engine = match build_engine(kind, &rt, draft_rt.as_ref(), &paths, &cfg, 0) {
+                Ok(e) => e,
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            let _ = ready_tx.send(Ok(()));
+            while let Ok((req, enqueued)) = work_rx.recv() {
+                let queue_s = enqueued.elapsed().as_secs_f64();
+                let resp = match engine.generate(&req.prompt, req.max_new) {
+                    Ok(r) => Response {
+                        id: req.id,
+                        text: workload::decode(&r.tokens),
+                        tau: r.tau(),
+                        steps: r.steps,
+                        decode_s: r.decode_s,
+                        prefill_s: r.prefill_s,
+                        queue_s,
+                        tokens: r.tokens,
+                        error: None,
+                    },
+                    Err(e) => Response::error(req.id, format!("{e:#}")),
+                };
+                if resp_tx.send(resp).is_err() {
+                    break;
+                }
+            }
+        });
+
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("worker died during startup"))??;
+        Ok(Coordinator { tx, rx, worker: Some(worker) })
+    }
+
+    pub fn submit(&self, req: Request) -> Result<()> {
+        self.tx
+            .send((req, Instant::now()))
+            .map_err(|_| anyhow!("worker gone"))
+    }
+
+    pub fn recv(&self) -> Result<Response> {
+        self.rx.recv().map_err(|_| anyhow!("worker gone"))
+    }
+
+    /// Submit a batch and collect all responses (FIFO order).
+    pub fn run_batch(&self, reqs: Vec<Request>) -> Result<Vec<Response>> {
+        let n = reqs.len();
+        for r in reqs {
+            self.submit(r)?;
+        }
+        (0..n).map(|_| self.recv()).collect()
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        // closing tx ends the worker loop
+        let (dead_tx, _) = mpsc::channel();
+        let _ = std::mem::replace(&mut self.tx, dead_tx);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_kind_parsing() {
+        assert_eq!(EngineKind::parse("ppd").unwrap(), EngineKind::Ppd);
+        assert_eq!(EngineKind::parse("spec+ppd").unwrap(), EngineKind::SpecPpd);
+        assert!(EngineKind::parse("nope").is_err());
+        for k in EngineKind::all() {
+            EngineKind::parse(k).unwrap();
+        }
+    }
+}

@@ -1,0 +1,107 @@
+//! Request/response types flowing through the coordinator.
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    pub text: String,
+    pub steps: usize,
+    pub tau: f64,
+    pub decode_s: f64,
+    pub prefill_s: f64,
+    pub queue_s: f64,
+    pub error: Option<String>,
+}
+
+impl Response {
+    pub fn error(id: u64, msg: String) -> Self {
+        Response {
+            id,
+            tokens: vec![],
+            text: String::new(),
+            steps: 0,
+            tau: 0.0,
+            decode_s: 0.0,
+            prefill_s: 0.0,
+            queue_s: 0.0,
+            error: Some(msg),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("id", Json::Num(self.id as f64)),
+            ("text", Json::str(&self.text)),
+            ("tokens", Json::Num(self.tokens.len() as f64)),
+            ("steps", Json::Num(self.steps as f64)),
+            ("tau", Json::Num(self.tau)),
+            ("decode_s", Json::Num(self.decode_s)),
+            ("prefill_s", Json::Num(self.prefill_s)),
+            ("queue_s", Json::Num(self.queue_s)),
+        ];
+        if let Some(e) = &self.error {
+            pairs.push(("error", Json::str(e)));
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// Parse a client request line: {"prompt": "...", "max_new": 64}
+pub fn parse_request_line(line: &str, id: u64) -> Result<Request, String> {
+    let j = Json::parse(line).map_err(|e| format!("bad json: {e}"))?;
+    let prompt_text = j
+        .get("prompt")
+        .and_then(|p| p.as_str().ok())
+        .ok_or("missing 'prompt'")?;
+    let max_new = j
+        .get("max_new")
+        .and_then(|m| m.as_usize().ok())
+        .unwrap_or(64);
+    let prompt = crate::workload::encode(prompt_text);
+    if prompt.is_empty() {
+        return Err("empty prompt after ascii filtering".into());
+    }
+    Ok(Request { id, prompt, max_new })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_request() {
+        let r = parse_request_line(r#"{"prompt": "hi there", "max_new": 8}"#, 3).unwrap();
+        assert_eq!(r.id, 3);
+        assert_eq!(r.max_new, 8);
+        assert_eq!(r.prompt.len(), 8);
+    }
+
+    #[test]
+    fn default_max_new() {
+        let r = parse_request_line(r#"{"prompt": "x"}"#, 0).unwrap();
+        assert_eq!(r.max_new, 64);
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(parse_request_line("{", 0).is_err());
+        assert!(parse_request_line(r#"{"max_new": 5}"#, 0).is_err());
+        assert!(parse_request_line(r#"{"prompt": ""}"#, 0).is_err());
+    }
+
+    #[test]
+    fn response_json_includes_error() {
+        let r = Response::error(7, "boom".into());
+        let j = r.to_json();
+        assert_eq!(j.req("error").unwrap().as_str().unwrap(), "boom");
+    }
+}

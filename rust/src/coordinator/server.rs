@@ -1,0 +1,86 @@
+//! Line-protocol TCP server: one JSON request per line, one JSON
+//! response per line.  std-only (tokio is not in the offline vendor
+//! set); an acceptor thread per connection feeds the single-worker
+//! coordinator — request-level concurrency with model-level FIFO, the
+//! paper's batch-size-1 serving setting.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use super::{parse_request_line, Coordinator, Response};
+
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Serve forever (or until `max_requests` when Some — used by tests).
+pub fn serve(coord: Coordinator, addr: &str, max_requests: Option<u64>) -> Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    eprintln!("[ppd] serving on {addr}");
+    let coord = Arc::new(Mutex::new(coord));
+    let mut served = 0u64;
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let coord = Arc::clone(&coord);
+        let handled = handle_conn(stream, &coord)?;
+        served += handled;
+        if let Some(max) = max_requests {
+            if served >= max {
+                break;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Handle one connection synchronously; returns #requests served.
+/// (The worker is single-threaded anyway — the paper measures batch=1 —
+/// so per-connection threads would only reorder the queue.)
+fn handle_conn(stream: TcpStream, coord: &Arc<Mutex<Coordinator>>) -> Result<u64> {
+    let peer = stream.peer_addr().ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    let mut line = String::new();
+    let mut count = 0;
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            break;
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+        let resp = match parse_request_line(trimmed, id) {
+            Ok(req) => {
+                let c = coord.lock().unwrap();
+                match c.submit(req).and_then(|_| c.recv()) {
+                    Ok(r) => r,
+                    Err(e) => Response::error(id, format!("{e:#}")),
+                }
+            }
+            Err(e) => Response::error(id, e),
+        };
+        writeln!(out, "{}", resp.to_json())?;
+        count += 1;
+    }
+    let _ = peer;
+    Ok(count)
+}
+
+/// Minimal client for examples/tests: send one request, read one line.
+pub fn client_request(addr: &str, prompt: &str, max_new: usize) -> Result<crate::util::json::Json> {
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    let req = crate::util::json::Json::obj(vec![
+        ("prompt", crate::util::json::Json::str(prompt)),
+        ("max_new", crate::util::json::Json::Num(max_new as f64)),
+    ]);
+    writeln!(stream, "{req}")?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    crate::util::json::Json::parse(line.trim())
+}

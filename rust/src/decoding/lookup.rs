@@ -1,0 +1,338 @@
+//! Retrieval-style parallel-decoding baselines for Fig 4, all built on
+//! one generic chain-proposal engine:
+//!
+//! * **PLD** (prompt lookup decoding, Saxena 2023) — match the current
+//!   n-gram suffix against the *request's own context* and propose the
+//!   continuation that followed it.
+//! * **REST** (He et al. 2023) — same matching against an external
+//!   datastore (here: the synthetic training-corpus validation stream,
+//!   standing in for REST's corpus index).
+//! * **Lookahead-lite** (Fu et al. 2023) — n-gram pool harvested online
+//!   from the request's *generated* tokens (the n-gram-cache half of
+//!   lookahead decoding; the Jacobi branch is not reproduced).
+//!
+//! Proposals are linear chains merged into a (possibly branching) tree
+//! and verified with the same exact-match walk as PPD — guess sources
+//! differ, verification is shared, which is exactly the paper's framing
+//! of these methods.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::kvcache::HostKvCache;
+use crate::runtime::Runtime;
+use crate::tree::{assemble_step, GuessSet, SparseTree, TreeNode};
+use crate::util::rng::Rng;
+
+use super::verify::{verify, VerifyMode};
+use super::{prefill, truncate_at_eos, DecodeEngine, GenerationResult};
+
+/// A source of speculative continuation chains.
+pub trait ChainProposer {
+    fn name(&self) -> &'static str;
+
+    /// Propose up to a few continuations of `ctx` (most recent last).
+    fn propose(&mut self, ctx: &[u32]) -> Vec<Vec<u32>>;
+
+    /// Observe newly accepted tokens (lookahead harvests from these).
+    fn observe(&mut self, _ctx: &[u32]) {}
+}
+
+/// Find continuations of the longest matching suffix n-gram of `ctx`
+/// inside `corpus`.  Shared by PLD/REST/lookahead.
+pub fn ngram_continuations(
+    corpus: &[u32],
+    ctx: &[u32],
+    max_ngram: usize,
+    span: usize,
+    max_hits: usize,
+) -> Vec<Vec<u32>> {
+    for n in (1..=max_ngram.min(ctx.len())).rev() {
+        let pat = &ctx[ctx.len() - n..];
+        let mut hits = Vec::new();
+        if corpus.len() < n + 1 {
+            continue;
+        }
+        // scan backwards so recent matches rank first
+        for start in (0..corpus.len() - n).rev() {
+            if &corpus[start..start + n] == pat {
+                let cont_start = start + n;
+                let cont_end = (cont_start + span).min(corpus.len());
+                if cont_end > cont_start {
+                    hits.push(corpus[cont_start..cont_end].to_vec());
+                }
+                if hits.len() >= max_hits {
+                    break;
+                }
+            }
+        }
+        if !hits.is_empty() {
+            return hits;
+        }
+    }
+    Vec::new()
+}
+
+/// PLD: the corpus is the request's own context.
+pub struct PldProposer {
+    pub span: usize,
+}
+
+impl ChainProposer for PldProposer {
+    fn name(&self) -> &'static str {
+        "pld"
+    }
+
+    fn propose(&mut self, ctx: &[u32]) -> Vec<Vec<u32>> {
+        if ctx.len() < 2 {
+            return vec![];
+        }
+        // exclude the suffix itself from the search corpus
+        let body = &ctx[..ctx.len() - 1];
+        ngram_continuations(body, ctx, 3, self.span, 1)
+    }
+}
+
+/// REST: external datastore of corpus tokens.
+pub struct RestProposer {
+    pub datastore: Vec<u32>,
+    pub span: usize,
+    pub max_hits: usize,
+}
+
+impl ChainProposer for RestProposer {
+    fn name(&self) -> &'static str {
+        "rest"
+    }
+
+    fn propose(&mut self, ctx: &[u32]) -> Vec<Vec<u32>> {
+        ngram_continuations(&self.datastore, ctx, 3, self.span, self.max_hits)
+    }
+}
+
+/// Lookahead-lite: n-gram pool keyed by the last token, harvested from
+/// the generation itself.
+pub struct LookaheadProposer {
+    pub span: usize,
+    pool: HashMap<u32, Vec<Vec<u32>>>,
+    window: usize,
+}
+
+impl LookaheadProposer {
+    pub fn new(span: usize) -> Self {
+        LookaheadProposer { span, pool: HashMap::new(), window: 0 }
+    }
+}
+
+impl ChainProposer for LookaheadProposer {
+    fn name(&self) -> &'static str {
+        "lookahead"
+    }
+
+    fn propose(&mut self, ctx: &[u32]) -> Vec<Vec<u32>> {
+        let Some(&last) = ctx.last() else { return vec![] };
+        self.pool.get(&last).cloned().unwrap_or_default()
+    }
+
+    fn observe(&mut self, ctx: &[u32]) {
+        // harvest (key, continuation-span) n-grams from fresh tokens
+        let start = self.window;
+        for i in start.max(1)..ctx.len() {
+            let key = ctx[i - 1];
+            let end = (i + self.span).min(ctx.len());
+            if end > i {
+                let entry = self.pool.entry(key).or_default();
+                let gram = ctx[i..end].to_vec();
+                if !entry.contains(&gram) {
+                    if entry.len() >= 3 {
+                        entry.remove(0);
+                    }
+                    entry.push(gram);
+                }
+            }
+        }
+        self.window = ctx.len();
+    }
+}
+
+/// Merge proposal chains into a sparse tree + the guess table feeding
+/// `assemble_step` (depth d rank r = r-th distinct token at depth d).
+pub fn chains_to_tree(chains: &[Vec<u32>], max_depth: usize, max_nodes: usize) -> (SparseTree, GuessSet) {
+    let mut nodes = vec![TreeNode { parent: usize::MAX, depth: 0, rank: 0, prompt_len: 0 }];
+    let mut per_distance: Vec<Vec<(u32, f32)>> = vec![Vec::new(); max_depth];
+    // parent node idx + token -> node idx (prefix merging)
+    let mut index: HashMap<(usize, u32), usize> = HashMap::new();
+    for chain in chains {
+        let mut parent = 0usize;
+        for (d, &tok) in chain.iter().take(max_depth).enumerate() {
+            let depth = d + 1;
+            if nodes.len() >= max_nodes {
+                break;
+            }
+            let key = (parent, tok);
+            parent = *index.entry(key).or_insert_with(|| {
+                // rank = position of tok in this depth's guess list
+                let lvl = &mut per_distance[depth - 1];
+                let rank = match lvl.iter().position(|&(t, _)| t == tok) {
+                    Some(r) => r,
+                    None => {
+                        lvl.push((tok, 0.0));
+                        lvl.len() - 1
+                    }
+                };
+                nodes.push(TreeNode { parent, depth, rank, prompt_len: 0 });
+                nodes.len() - 1
+            });
+        }
+    }
+    let state = nodes.iter().map(|n| n.depth).max().unwrap_or(0);
+    (SparseTree { nodes, state }, GuessSet { per_distance })
+}
+
+/// The generic chain-speculation engine (verification shared with PPD).
+pub struct ChainEngine<'rt, P: ChainProposer> {
+    rt: &'rt Runtime,
+    proposer: P,
+    cache: HostKvCache,
+    max_depth: usize,
+    max_nodes: usize,
+    rng: Rng,
+}
+
+impl<'rt, P: ChainProposer> ChainEngine<'rt, P> {
+    pub fn new(rt: &'rt Runtime, proposer: P, max_depth: usize, max_nodes: usize, seed: u64) -> Self {
+        let cache = HostKvCache::new(rt.cfg.n_layers, rt.cfg.max_ctx, rt.cfg.d_model);
+        ChainEngine { rt, proposer, cache, max_depth, max_nodes, rng: Rng::new(seed) }
+    }
+}
+
+impl<P: ChainProposer> DecodeEngine for ChainEngine<'_, P> {
+    fn name(&self) -> &'static str {
+        self.proposer.name()
+    }
+
+    fn generate(&mut self, prompt: &[u32], max_new: usize) -> Result<GenerationResult> {
+        let mut res = GenerationResult::default();
+        self.cache.reset();
+        let vocab = self.rt.cfg.vocab;
+        let max_ctx = self.rt.cfg.max_ctx;
+
+        let t0 = Instant::now();
+        let pre = prefill(self.rt, &mut self.cache, prompt)?;
+        res.prefill_s = t0.elapsed().as_secs_f64();
+
+        let mut root = crate::util::argmax(pre.logits_row(pre.n - 1, vocab)) as u32;
+        res.tokens.push(root);
+        let mut full_ctx: Vec<u32> = prompt.to_vec();
+        full_ctx.push(root);
+        self.proposer.observe(&full_ctx);
+
+        let t1 = Instant::now();
+        while res.tokens.len() < max_new && !res.tokens.contains(&crate::config::EOS_ID) {
+            let chains = self.proposer.propose(&full_ctx);
+            let (tree, guesses) = chains_to_tree(&chains, self.max_depth, self.max_nodes);
+            let layout = tree.layout();
+            let committed = self.cache.committed();
+            if committed + tree.input_len() + 2 >= max_ctx {
+                break;
+            }
+            let inputs = assemble_step(&tree, &layout, &guesses, root, committed as u32, committed, max_ctx)?;
+            let out = self.rt.forward(&inputs.tokens, &inputs.pos, &inputs.slots, &inputs.bias, self.cache.as_slice())?;
+            self.cache.scatter(&out.new_kv, &inputs.slots)?;
+
+            let v = verify(&tree, &layout, &out, &inputs.tokens, VerifyMode::Greedy, vocab, &mut self.rng);
+            let mut accepted_slots = vec![inputs.slots[0]];
+            accepted_slots.extend(v.accepted_nodes.iter().map(|&n| inputs.slots[layout.node_input[n]]));
+            self.cache.compact(&accepted_slots)?;
+
+            res.steps += 1;
+            res.accepted_per_step.push(v.emitted.len());
+            res.input_lens.push(tree.input_len());
+            res.tokens.extend_from_slice(&v.emitted);
+            full_ctx.extend_from_slice(&v.emitted);
+            self.proposer.observe(&full_ctx);
+            root = *v.emitted.last().unwrap();
+        }
+        res.decode_s = t1.elapsed().as_secs_f64();
+        truncate_at_eos(&mut res.tokens);
+        res.tokens.truncate(max_new);
+        Ok(res)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ngram_matching_prefers_long_grams() {
+        let corpus = vec![1, 2, 3, 9, 9, 1, 2, 3, 4, 5, 6];
+        let ctx = vec![7, 1, 2, 3];
+        let hits = ngram_continuations(&corpus, &ctx, 3, 3, 2);
+        assert_eq!(hits[0], vec![4, 5, 6]);
+    }
+
+    #[test]
+    fn ngram_falls_back_to_short() {
+        let corpus = vec![5, 8, 9];
+        let ctx = vec![1, 2, 5];
+        let hits = ngram_continuations(&corpus, &ctx, 3, 2, 2);
+        assert_eq!(hits[0], vec![8, 9]);
+    }
+
+    #[test]
+    fn ngram_empty_when_no_match() {
+        assert!(ngram_continuations(&[1, 2], &[9], 3, 2, 2).is_empty());
+    }
+
+    #[test]
+    fn chains_merge_common_prefixes() {
+        let chains = vec![vec![5, 6, 7], vec![5, 6, 8], vec![9]];
+        let (tree, guesses) = chains_to_tree(&chains, 3, 16);
+        tree.validate().unwrap();
+        // depth1: {5, 9}; depth2: {6} (shared); depth3: {7, 8} -> 5 nodes
+        assert_eq!(tree.n_candidates(), 5);
+        assert_eq!(guesses.per_distance[0].len(), 2);
+        assert_eq!(guesses.token_at(1, 0), Some(5));
+        assert_eq!(guesses.token_at(2, 0), Some(6));
+        assert_eq!(guesses.token_at(3, 1), Some(8));
+    }
+
+    #[test]
+    fn chains_respect_node_cap() {
+        let chains = vec![vec![1, 2, 3, 4, 5, 6, 7, 8]];
+        let (tree, _) = chains_to_tree(&chains, 8, 4);
+        assert!(tree.nodes.len() <= 4);
+        tree.validate().unwrap();
+    }
+
+    #[test]
+    fn pld_finds_repeated_pattern() {
+        let mut p = PldProposer { span: 3 };
+        // "calc: 12" ... "calc: " -> proposes "12"-ish continuation
+        let ctx = vec![10, 20, 30, 40, 50, 10, 20, 30];
+        let hits = p.propose(&ctx);
+        assert_eq!(hits[0], vec![40, 50, 10]);
+    }
+
+    #[test]
+    fn lookahead_harvests_and_proposes() {
+        let mut p = LookaheadProposer::new(2);
+        p.observe(&[1, 2, 3, 4]);
+        let hits = p.propose(&[9, 2]);
+        assert!(hits.contains(&vec![3, 4]));
+        // pool caps at 3 entries per key
+        p.observe(&[1, 2, 5, 1, 2, 6, 1, 2, 7, 1, 2, 8]);
+        assert!(p.propose(&[0, 2]).len() <= 3);
+    }
+
+    #[test]
+    fn empty_chains_give_root_only_tree() {
+        let (tree, g) = chains_to_tree(&[], 3, 8);
+        assert_eq!(tree.n_candidates(), 0);
+        assert_eq!(g.depth(), 3);
+        tree.validate().unwrap();
+    }
+}

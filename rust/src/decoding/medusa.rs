@@ -1,0 +1,142 @@
+//! Medusa-1 baseline: per-distance decoding heads + a static sparse
+//! tree.  Identical guess-and-verify machinery to PPD, but the guesses
+//! come from the trained heads applied to the stopped node's *hidden
+//! state*, the tree carries no prompt tokens, and its shape is fixed
+//! across steps (Medusa has no dynamic state machine).
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::config::ServeConfig;
+use crate::kvcache::HostKvCache;
+use crate::runtime::Runtime;
+use crate::tree::builder::{build_candidate_tree, AcceptStats};
+use crate::tree::{assemble_step, GuessSet, SparseTree, TreeLayout};
+use crate::util::rng::Rng;
+use crate::util::{softmax, topk};
+
+use super::verify::{softmax_temp, verify, VerifyMode};
+use super::{prefill, truncate_at_eos, DecodeEngine, GenerationResult};
+
+pub struct MedusaEngine<'rt> {
+    rt: &'rt Runtime,
+    pub tree: SparseTree,
+    layout: TreeLayout,
+    cache: HostKvCache,
+    mode: VerifyMode,
+    top_r: usize,
+    rng: Rng,
+}
+
+impl<'rt> MedusaEngine<'rt> {
+    /// `n_candidates` sizes the static tree (Medusa's published config
+    /// uses 63 nodes; at our scale Table 1 uses the same ratio).
+    pub fn new(rt: &'rt Runtime, stats: &AcceptStats, cfg: &ServeConfig, n_candidates: usize, seed: u64) -> Result<Self> {
+        if !rt.has_medusa() {
+            bail!("model {} has no medusa heads artifact", rt.cfg.name);
+        }
+        let depth = rt.medusa_n_heads();
+        let tree = build_candidate_tree(stats, depth, n_candidates, cfg.top_r);
+        let layout = tree.layout();
+        let cache = HostKvCache::new(rt.cfg.n_layers, rt.cfg.max_ctx, rt.cfg.d_model);
+        let mode = if cfg.temperature <= 0.0 {
+            VerifyMode::Greedy
+        } else {
+            VerifyMode::Typical {
+                temperature: cfg.temperature,
+                epsilon: cfg.typical_epsilon,
+                delta: cfg.typical_delta,
+            }
+        };
+        Ok(MedusaEngine { rt, tree, layout, cache, mode, top_r: cfg.top_r, rng: Rng::new(seed) })
+    }
+
+    fn guesses_from_hidden(&self, hidden: &[f32]) -> Result<GuessSet> {
+        let heads = self.rt.medusa_heads(hidden)?;
+        let mut per_distance = Vec::new();
+        for logits in &heads {
+            let probs = softmax(logits);
+            let ranked = topk(&probs, self.top_r);
+            per_distance.push(ranked.iter().map(|&t| (t as u32, probs[t])).collect());
+        }
+        Ok(GuessSet { per_distance })
+    }
+
+    fn pick_root(&mut self, logits: &[f32]) -> u32 {
+        match self.mode {
+            VerifyMode::Greedy => crate::util::argmax(logits) as u32,
+            VerifyMode::Typical { temperature, .. } => {
+                let p = softmax_temp(logits, temperature);
+                self.rng.sample_dist(&p) as u32
+            }
+        }
+    }
+}
+
+impl DecodeEngine for MedusaEngine<'_> {
+    fn name(&self) -> &'static str {
+        "medusa"
+    }
+
+    fn generate(&mut self, prompt: &[u32], max_new: usize) -> Result<GenerationResult> {
+        let mut res = GenerationResult::default();
+        self.cache.reset();
+        let vocab = self.rt.cfg.vocab;
+        let d = self.rt.cfg.d_model;
+        let max_ctx = self.rt.cfg.max_ctx;
+
+        let t0 = Instant::now();
+        let pre = prefill(self.rt, &mut self.cache, prompt)?;
+        res.prefill_s = t0.elapsed().as_secs_f64();
+
+        let mut root = self.pick_root(pre.logits_row(pre.n - 1, vocab));
+        res.tokens.push(root);
+        let mut guesses = self.guesses_from_hidden(pre.hidden_row(pre.n - 1, d))?;
+
+        let t1 = Instant::now();
+        while res.tokens.len() < max_new && !res.tokens.contains(&crate::config::EOS_ID) {
+            let committed = self.cache.committed();
+            if committed + self.tree.input_len() + 2 >= max_ctx {
+                break;
+            }
+            let inputs = assemble_step(
+                &self.tree,
+                &self.layout,
+                &guesses,
+                root,
+                committed as u32,
+                committed,
+                max_ctx,
+            )?;
+            let out = self.rt.forward(
+                &inputs.tokens,
+                &inputs.pos,
+                &inputs.slots,
+                &inputs.bias,
+                self.cache.as_slice(),
+            )?;
+            self.cache.scatter(&out.new_kv, &inputs.slots)?;
+
+            let v = verify(&self.tree, &self.layout, &out, &inputs.tokens, self.mode, vocab, &mut self.rng);
+            let mut accepted_slots = vec![inputs.slots[0]];
+            accepted_slots.extend(
+                v.accepted_nodes.iter().map(|&n| inputs.slots[self.layout.node_input[n]]),
+            );
+            self.cache.compact(&accepted_slots)?;
+
+            res.steps += 1;
+            res.accepted_per_step.push(v.emitted.len());
+            res.input_lens.push(self.tree.input_len());
+            res.tokens.extend_from_slice(&v.emitted);
+
+            let hid = out.hidden_row(self.layout.node_input[v.final_node], d).to_vec();
+            guesses = self.guesses_from_hidden(&hid)?;
+            root = *v.emitted.last().unwrap();
+        }
+        res.decode_s = t1.elapsed().as_secs_f64();
+        truncate_at_eos(&mut res.tokens);
+        res.tokens.truncate(max_new);
+        Ok(res)
+    }
+}

@@ -1,0 +1,167 @@
+//! Decode engines: the guess-and-verify loop in all its variants.
+//!
+//! * [`vanilla`]     — plain autoregressive decoding (the baseline all
+//!                     speedups are measured against)
+//! * [`ppd`]         — the paper's Parallel Prompt Decoding with the
+//!                     dynamic sparse tree
+//! * [`medusa`]      — Medusa-1 baseline (decoding heads, static tree)
+//! * [`lookup`]      — retrieval-style baselines: PLD (prompt lookup),
+//!                     REST (datastore n-grams), lookahead-lite
+//! * [`speculative`] — draft-model speculative decoding, with optional
+//!                     PPD-accelerated drafting (paper §5.3)
+//! * [`verify`]      — exact-match + typical-acceptance verification
+
+pub mod lookup;
+pub mod medusa;
+pub mod ppd;
+pub mod speculative;
+pub mod vanilla;
+pub mod verify;
+
+use anyhow::{bail, Result};
+
+use crate::config::EOS_ID;
+use crate::kvcache::HostKvCache;
+use crate::runtime::{Runtime, StepOutput, NEG_INF};
+
+/// Outcome of one generation, with the accounting every bench needs.
+#[derive(Debug, Clone, Default)]
+pub struct GenerationResult {
+    /// generated tokens (prompt excluded)
+    pub tokens: Vec<u32>,
+    /// forward passes of the *target* model during decode
+    pub steps: usize,
+    /// tokens emitted by each decode step (the τ samples)
+    pub accepted_per_step: Vec<usize>,
+    /// input length of each decode step (S_input samples)
+    pub input_lens: Vec<usize>,
+    /// wallclock of the decode phase (prefill excluded)
+    pub decode_s: f64,
+    /// wallclock of the prefill phase
+    pub prefill_s: f64,
+    /// draft-model forward passes (speculative engines)
+    pub draft_steps: usize,
+}
+
+impl GenerationResult {
+    /// Mean accepted length τ (tokens per decode step).
+    pub fn tau(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.tokens.len() as f64 / self.steps as f64
+        }
+    }
+
+    /// Decode-phase throughput in tokens/s.
+    pub fn throughput(&self) -> f64 {
+        if self.decode_s == 0.0 {
+            0.0
+        } else {
+            self.tokens.len() as f64 / self.decode_s
+        }
+    }
+
+    /// Mean forward-pass latency during decode.
+    pub fn mean_fp_latency(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.decode_s / self.steps as f64
+        }
+    }
+
+    pub fn mean_input_len(&self) -> f64 {
+        if self.input_lens.is_empty() {
+            0.0
+        } else {
+            self.input_lens.iter().sum::<usize>() as f64 / self.input_lens.len() as f64
+        }
+    }
+}
+
+/// A decoding engine; one instance serves one request at a time (the
+/// coordinator owns a pool of engines).
+pub trait DecodeEngine {
+    fn name(&self) -> &'static str;
+
+    /// Generate up to `max_new` tokens greedily/with the engine's
+    /// configured sampling, returning the result accounting.
+    fn generate(&mut self, prompt: &[u32], max_new: usize) -> Result<GenerationResult>;
+}
+
+/// Prefill the prompt into `cache` in bucket-sized causal chunks and
+/// return the model outputs of the **last** chunk (its final row are the
+/// logits/hidden of the last prompt token).
+pub fn prefill(rt: &Runtime, cache: &mut HostKvCache, prompt: &[u32]) -> Result<StepOutput> {
+    if prompt.is_empty() {
+        bail!("empty prompt");
+    }
+    let s = rt.cfg.max_ctx;
+    if prompt.len() > cache.remaining() {
+        bail!("prompt of {} tokens exceeds context {}", prompt.len(), cache.capacity());
+    }
+    let max_bucket = *rt.cfg.buckets.iter().max().unwrap();
+    let mut out: Option<StepOutput> = None;
+    let mut done = 0;
+    while done < prompt.len() {
+        let chunk = (prompt.len() - done).min(max_bucket);
+        let base = cache.committed();
+        let tokens = &prompt[done..done + chunk];
+        let pos: Vec<u32> = (0..chunk as u32).map(|i| (base as u32) + i).collect();
+        let slots = pos.clone();
+        let mut bias = vec![NEG_INF; chunk * s];
+        for i in 0..chunk {
+            for j in 0..=(base + i) {
+                bias[i * s + j] = 0.0;
+            }
+        }
+        let step = rt.forward(tokens, &pos, &slots, &bias, cache.as_slice())?;
+        cache.scatter(&step.new_kv, &slots)?;
+        cache.commit_contiguous(chunk)?;
+        out = Some(step);
+        done += chunk;
+    }
+    Ok(out.expect("non-empty prompt"))
+}
+
+/// Truncate a generated sequence at (and including) the first EOS.
+pub fn truncate_at_eos(tokens: &mut Vec<u32>) -> bool {
+    if let Some(i) = tokens.iter().position(|&t| t == EOS_ID) {
+        tokens.truncate(i + 1);
+        true
+    } else {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn result_accounting() {
+        let r = GenerationResult {
+            tokens: vec![1; 12],
+            steps: 4,
+            accepted_per_step: vec![3; 4],
+            input_lens: vec![10, 20, 20, 30],
+            decode_s: 2.0,
+            prefill_s: 0.5,
+            draft_steps: 0,
+        };
+        assert_eq!(r.tau(), 3.0);
+        assert_eq!(r.throughput(), 6.0);
+        assert_eq!(r.mean_fp_latency(), 0.5);
+        assert_eq!(r.mean_input_len(), 20.0);
+    }
+
+    #[test]
+    fn eos_truncation() {
+        let mut t = vec![5, 6, EOS_ID, 9];
+        assert!(truncate_at_eos(&mut t));
+        assert_eq!(t, vec![5, 6, EOS_ID]);
+        let mut t2 = vec![5, 6];
+        assert!(!truncate_at_eos(&mut t2));
+    }
+}

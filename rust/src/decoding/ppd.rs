@@ -1,0 +1,162 @@
+//! Parallel Prompt Decoding — the paper's engine.
+//!
+//! Per decode step (Fig 2):
+//! 1. pick the dynamic-tree state `T_k` (k = prompt-chain length of the
+//!    node where the previous verification stopped);
+//! 2. assemble the step input: root (previous bonus token) + candidate
+//!    tokens filled from the previous step's prompt-token guesses +
+//!    prompt chains; one forward pass with the tree bias;
+//! 3. verify (exact match / typical acceptance), emit the accepted path
+//!    + bonus token;
+//! 4. compact the accepted rows in the KV cache;
+//! 5. extract the next guesses from the stopped node's prompt-chain
+//!    logits.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::ServeConfig;
+use crate::kvcache::HostKvCache;
+use crate::runtime::{Runtime, StepOutput};
+use crate::tree::builder::AcceptStats;
+use crate::tree::dynamic::DynamicTreeSet;
+use crate::tree::{assemble_step, GuessSet, TreeLayout};
+use crate::util::rng::Rng;
+use crate::util::{softmax, topk};
+
+use super::verify::{softmax_temp, verify, VerifyMode};
+use super::{prefill, truncate_at_eos, DecodeEngine, GenerationResult};
+
+pub struct PpdEngine<'rt> {
+    rt: &'rt Runtime,
+    pub set: DynamicTreeSet,
+    cache: HostKvCache,
+    mode: VerifyMode,
+    top_r: usize,
+    rng: Rng,
+}
+
+impl<'rt> PpdEngine<'rt> {
+    pub fn new(rt: &'rt Runtime, stats: &AcceptStats, cfg: &ServeConfig, seed: u64) -> Result<Self> {
+        let m = rt.cfg.n_prompt;
+        let set = DynamicTreeSet::build(stats, m, cfg.n_candidates, cfg.n_prompt_budget, cfg.top_r)?;
+        Ok(Self::with_tree_set(rt, set, cfg, seed))
+    }
+
+    /// Use a pre-built tree set (benches build static/random/sized sets).
+    pub fn with_tree_set(rt: &'rt Runtime, set: DynamicTreeSet, cfg: &ServeConfig, seed: u64) -> Self {
+        let cache = HostKvCache::new(rt.cfg.n_layers, rt.cfg.max_ctx, rt.cfg.d_model);
+        let mode = if cfg.temperature <= 0.0 {
+            VerifyMode::Greedy
+        } else {
+            VerifyMode::Typical {
+                temperature: cfg.temperature,
+                epsilon: cfg.typical_epsilon,
+                delta: cfg.typical_delta,
+            }
+        };
+        PpdEngine { rt, set, cache, mode, top_r: cfg.top_r, rng: Rng::new(seed) }
+    }
+
+    /// Extract next-step guesses from the stopped node's prompt chain.
+    fn extract_guesses(
+        &self,
+        layout: &TreeLayout,
+        node: usize,
+        out: &StepOutput,
+    ) -> GuessSet {
+        let vocab = self.rt.cfg.vocab;
+        let mut per_distance = Vec::new();
+        for &row in &layout.prompt_input[node] {
+            let probs = softmax(out.logits_row(row, vocab));
+            let ranked = topk(&probs, self.top_r);
+            per_distance.push(
+                ranked.iter().map(|&t| (t as u32, probs[t])).collect::<Vec<_>>(),
+            );
+        }
+        GuessSet { per_distance }
+    }
+
+    fn pick_root(&mut self, logits: &[f32]) -> u32 {
+        match self.mode {
+            VerifyMode::Greedy => crate::util::argmax(logits) as u32,
+            VerifyMode::Typical { temperature, .. } => {
+                let p = softmax_temp(logits, temperature);
+                self.rng.sample_dist(&p) as u32
+            }
+        }
+    }
+}
+
+impl DecodeEngine for PpdEngine<'_> {
+    fn name(&self) -> &'static str {
+        "ppd"
+    }
+
+    fn generate(&mut self, prompt: &[u32], max_new: usize) -> Result<GenerationResult> {
+        let mut res = GenerationResult::default();
+        self.cache.reset();
+        let vocab = self.rt.cfg.vocab;
+        let max_ctx = self.rt.cfg.max_ctx;
+
+        let t0 = Instant::now();
+        let pre = prefill(self.rt, &mut self.cache, prompt)?;
+        res.prefill_s = t0.elapsed().as_secs_f64();
+
+        // the first root token comes from the prefill logits
+        let mut root = self.pick_root(pre.logits_row(pre.n - 1, vocab));
+        res.tokens.push(root);
+        let mut guesses = GuessSet::default();
+        let mut state = 0usize; // no guesses yet -> root-only tree
+
+        let t1 = Instant::now();
+        while res.tokens.len() < max_new && !res.tokens.contains(&crate::config::EOS_ID) {
+            let state_k = state.min(guesses.depth()).min(self.set.trees.len() - 1);
+            let tree = &self.set.trees[state_k];
+            let layout = &self.set.layouts[state_k];
+            let committed = self.cache.committed();
+            if committed + tree.input_len() + 2 >= max_ctx {
+                break; // context exhausted
+            }
+            let inputs = assemble_step(
+                tree,
+                layout,
+                &guesses,
+                root,
+                committed as u32,
+                committed,
+                max_ctx,
+            )?;
+            let out = self.rt.forward(
+                &inputs.tokens,
+                &inputs.pos,
+                &inputs.slots,
+                &inputs.bias,
+                self.cache.as_slice(),
+            )?;
+            self.cache.scatter(&out.new_kv, &inputs.slots)?;
+
+            let v = verify(tree, layout, &out, &inputs.tokens, self.mode, vocab, &mut self.rng);
+            // compact: root + accepted candidate rows become committed
+            let mut accepted_slots = vec![inputs.slots[0]];
+            accepted_slots.extend(
+                v.accepted_nodes.iter().map(|&n| inputs.slots[layout.node_input[n]]),
+            );
+            self.cache.compact(&accepted_slots)?;
+
+            res.steps += 1;
+            res.accepted_per_step.push(v.emitted.len());
+            res.input_lens.push(tree.input_len());
+            res.tokens.extend_from_slice(&v.emitted);
+
+            guesses = self.extract_guesses(layout, v.final_node, &out);
+            state = tree.nodes[v.final_node].prompt_len;
+            root = *v.emitted.last().unwrap();
+        }
+        res.decode_s = t1.elapsed().as_secs_f64();
+        truncate_at_eos(&mut res.tokens);
+        res.tokens.truncate(max_new);
+        Ok(res)
+    }
+}

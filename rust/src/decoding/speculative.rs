@@ -1,0 +1,260 @@
+//! Draft-model speculative decoding (Leviathan et al.) and its PPD
+//! integration (paper §5.3): PPD is orthogonal to speculative decoding —
+//! applying prompt tokens to the *draft* model reduces the number of
+//! draft forward passes per speculation round, which shortens the
+//! drafting phase and speeds up the whole pipeline.
+//!
+//! Greedy variant: the target accepts the longest prefix of the draft
+//! chain matching its own argmax (plus one bonus token), so outputs are
+//! byte-identical to vanilla target decoding.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::ServeConfig;
+use crate::kvcache::HostKvCache;
+use crate::runtime::{Runtime, NEG_INF};
+use crate::tree::builder::AcceptStats;
+use crate::tree::dynamic::DynamicTreeSet;
+use crate::tree::{assemble_step, GuessSet};
+use crate::util::argmax;
+use crate::util::rng::Rng;
+use crate::util::{softmax, topk};
+
+use super::verify::{verify, VerifyMode};
+use super::{prefill, truncate_at_eos, DecodeEngine, GenerationResult};
+
+/// How the draft model produces its chain.
+pub enum DraftMode {
+    /// plain autoregressive drafting: γ draft forwards per round
+    Vanilla,
+    /// PPD-accelerated drafting: the draft runs its own guess-and-verify
+    /// loop, needing ~γ/τ_draft forwards per round
+    Ppd { set: DynamicTreeSet, top_r: usize },
+}
+
+pub struct SpeculativeEngine<'a> {
+    target: &'a Runtime,
+    draft: &'a Runtime,
+    target_cache: HostKvCache,
+    draft_cache: HostKvCache,
+    mode: DraftMode,
+    /// speculation length per round
+    pub gamma: usize,
+    rng: Rng,
+}
+
+impl<'a> SpeculativeEngine<'a> {
+    pub fn new_vanilla(target: &'a Runtime, draft: &'a Runtime, gamma: usize, seed: u64) -> Self {
+        Self::new(target, draft, DraftMode::Vanilla, gamma, seed)
+    }
+
+    pub fn new_ppd(
+        target: &'a Runtime,
+        draft: &'a Runtime,
+        stats: &AcceptStats,
+        cfg: &ServeConfig,
+        gamma: usize,
+        seed: u64,
+    ) -> Result<Self> {
+        let set = DynamicTreeSet::build(
+            stats,
+            draft.cfg.n_prompt,
+            cfg.n_candidates,
+            cfg.n_prompt_budget,
+            cfg.top_r,
+        )?;
+        Ok(Self::new(target, draft, DraftMode::Ppd { set, top_r: cfg.top_r }, gamma, seed))
+    }
+
+    fn new(target: &'a Runtime, draft: &'a Runtime, mode: DraftMode, gamma: usize, seed: u64) -> Self {
+        SpeculativeEngine {
+            target_cache: HostKvCache::new(target.cfg.n_layers, target.cfg.max_ctx, target.cfg.d_model),
+            draft_cache: HostKvCache::new(draft.cfg.n_layers, draft.cfg.max_ctx, draft.cfg.d_model),
+            target,
+            draft,
+            mode,
+            gamma,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Draft `gamma` tokens continuing `root`; returns (chain, #draft
+    /// forwards).  The draft cache must already hold the committed
+    /// context *excluding* root.
+    fn draft_chain(&mut self, root: u32) -> Result<(Vec<u32>, usize)> {
+        let vocab = self.draft.cfg.vocab;
+        let s = self.draft.cfg.max_ctx;
+        match &self.mode {
+            DraftMode::Vanilla => {
+                let mut chain = Vec::with_capacity(self.gamma);
+                let mut steps = 0;
+                let mut cur = root;
+                let mut bias = vec![NEG_INF; s];
+                while chain.len() < self.gamma && self.draft_cache.remaining() > 1 {
+                    let c = self.draft_cache.committed();
+                    for (j, b) in bias.iter_mut().enumerate() {
+                        *b = if j <= c { 0.0 } else { NEG_INF };
+                    }
+                    let out = self.draft.forward(&[cur], &[c as u32], &[c as u32], &bias, self.draft_cache.as_slice())?;
+                    self.draft_cache.scatter(&out.new_kv, &[c as u32])?;
+                    self.draft_cache.commit_contiguous(1)?;
+                    steps += 1;
+                    cur = argmax(out.logits_row(0, vocab)) as u32;
+                    chain.push(cur);
+                }
+                Ok((chain, steps))
+            }
+            DraftMode::Ppd { set, top_r } => {
+                // guess-and-verify loop on the draft model
+                let set = set.clone();
+                let top_r = *top_r;
+                let mut chain: Vec<u32> = Vec::with_capacity(self.gamma + 4);
+                let mut steps = 0;
+                let mut guesses = GuessSet::default();
+                let mut state = 0usize;
+                let mut cur = root;
+                while chain.len() < self.gamma && self.draft_cache.remaining() > set.max_input_len() + 2 {
+                    let k = state.min(guesses.depth()).min(set.trees.len() - 1);
+                    let tree = &set.trees[k];
+                    let layout = &set.layouts[k];
+                    let committed = self.draft_cache.committed();
+                    let inputs = assemble_step(tree, layout, &guesses, cur, committed as u32, committed, s)?;
+                    let out = self.draft.forward(&inputs.tokens, &inputs.pos, &inputs.slots, &inputs.bias, self.draft_cache.as_slice())?;
+                    self.draft_cache.scatter(&out.new_kv, &inputs.slots)?;
+                    let v = verify(tree, layout, &out, &inputs.tokens, VerifyMode::Greedy, vocab, &mut self.rng);
+                    let mut accepted_slots = vec![inputs.slots[0]];
+                    accepted_slots.extend(v.accepted_nodes.iter().map(|&n| inputs.slots[layout.node_input[n]]));
+                    self.draft_cache.compact(&accepted_slots)?;
+                    steps += 1;
+                    chain.extend_from_slice(&v.emitted);
+                    // guesses for next draft round
+                    let mut per_distance = Vec::new();
+                    for &row in &layout.prompt_input[v.final_node] {
+                        let probs = softmax(out.logits_row(row, vocab));
+                        let ranked = topk(&probs, top_r);
+                        per_distance.push(ranked.iter().map(|&t| (t as u32, probs[t])).collect::<Vec<_>>());
+                    }
+                    guesses = GuessSet { per_distance };
+                    state = tree.nodes[v.final_node].prompt_len;
+                    cur = *chain.last().unwrap();
+                }
+                chain.truncate(self.gamma);
+                Ok((chain, steps))
+            }
+        }
+    }
+
+    /// Resync the draft cache after the target rejected a suffix: drop
+    /// the speculated rows and re-ingest the accepted tokens.
+    fn draft_catch_up(&mut self, accepted: &[u32], target_committed: usize) -> Result<()> {
+        // the draft cache may have advanced past / diverged from the
+        // accepted prefix: rewind to the last agreed length then feed
+        // the accepted tokens (minus the one reserved as next root)
+        let agreed = target_committed.saturating_sub(accepted.len());
+        if self.draft_cache.committed() > agreed {
+            self.draft_cache.truncate(agreed)?;
+        }
+        if accepted.is_empty() {
+            return Ok(());
+        }
+        let s = self.draft.cfg.max_ctx;
+        let base = self.draft_cache.committed();
+        let n = accepted.len();
+        let pos: Vec<u32> = (0..n as u32).map(|i| base as u32 + i).collect();
+        let mut bias = vec![NEG_INF; n * s];
+        for i in 0..n {
+            for j in 0..=(base + i) {
+                bias[i * s + j] = 0.0;
+            }
+        }
+        let out = self.draft.forward(accepted, &pos, &pos, &bias, self.draft_cache.as_slice())?;
+        self.draft_cache.scatter(&out.new_kv, &pos)?;
+        self.draft_cache.commit_contiguous(n)?;
+        Ok(())
+    }
+}
+
+impl DecodeEngine for SpeculativeEngine<'_> {
+    fn name(&self) -> &'static str {
+        match self.mode {
+            DraftMode::Vanilla => "spec",
+            DraftMode::Ppd { .. } => "spec+ppd",
+        }
+    }
+
+    fn generate(&mut self, prompt: &[u32], max_new: usize) -> Result<GenerationResult> {
+        let mut res = GenerationResult::default();
+        self.target_cache.reset();
+        self.draft_cache.reset();
+        let vocab = self.target.cfg.vocab;
+        let s = self.target.cfg.max_ctx;
+
+        let t0 = Instant::now();
+        let pre_t = prefill(self.target, &mut self.target_cache, prompt)?;
+        prefill(self.draft, &mut self.draft_cache, prompt)?;
+        res.prefill_s = t0.elapsed().as_secs_f64();
+
+        let mut root = argmax(pre_t.logits_row(pre_t.n - 1, vocab)) as u32;
+        res.tokens.push(root);
+
+        let t1 = Instant::now();
+        'outer: while res.tokens.len() < max_new && !res.tokens.contains(&crate::config::EOS_ID) {
+            let (chain, draft_steps) = self.draft_chain(root)?;
+            res.draft_steps += draft_steps;
+            if chain.is_empty() {
+                break;
+            }
+            // verify [root, chain...] against the target in one forward
+            let committed = self.target_cache.committed();
+            let n = 1 + chain.len();
+            if committed + n + 2 >= s || self.target_cache.remaining() < n + 2 {
+                break 'outer;
+            }
+            let mut tokens = Vec::with_capacity(n);
+            tokens.push(root);
+            tokens.extend_from_slice(&chain);
+            let pos: Vec<u32> = (0..n as u32).map(|i| committed as u32 + i).collect();
+            let mut bias = vec![NEG_INF; n * s];
+            for i in 0..n {
+                for j in 0..=(committed + i) {
+                    bias[i * s + j] = 0.0;
+                }
+            }
+            let out = self.target.forward(&tokens, &pos, &pos, &bias, self.target_cache.as_slice())?;
+            self.target_cache.scatter(&out.new_kv, &pos)?;
+            res.steps += 1;
+            res.input_lens.push(n);
+
+            // longest matching prefix + bonus
+            let mut accepted = 0;
+            while accepted < chain.len() {
+                let want = argmax(out.logits_row(accepted, vocab)) as u32;
+                if chain[accepted] == want {
+                    accepted += 1;
+                } else {
+                    break;
+                }
+            }
+            let bonus = argmax(out.logits_row(accepted, vocab)) as u32;
+            // commit root + accepted chain rows (they are contiguous)
+            self.target_cache.commit_contiguous(1 + accepted)?;
+
+            let mut emitted: Vec<u32> = chain[..accepted].to_vec();
+            emitted.push(bonus);
+            res.accepted_per_step.push(emitted.len());
+            res.tokens.extend_from_slice(&emitted);
+
+            // draft resync: accepted prefix (without bonus — that is the
+            // next root and will be fed on the next draft round)
+            let catch: Vec<u32> = std::iter::once(root).chain(chain[..accepted].iter().copied()).collect();
+            self.draft_catch_up(&catch, self.target_cache.committed())?;
+            root = bonus;
+        }
+        res.decode_s = t1.elapsed().as_secs_f64();
+        truncate_at_eos(&mut res.tokens);
+        res.tokens.truncate(max_new);
+        Ok(res)
+    }
+}

@@ -1,0 +1,77 @@
+//! Vanilla autoregressive decoding — the Table 1 baseline.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::kvcache::HostKvCache;
+use crate::runtime::{Runtime, NEG_INF};
+use crate::util::argmax;
+use crate::util::rng::Rng;
+
+use super::verify::softmax_temp;
+use super::{prefill, truncate_at_eos, DecodeEngine, GenerationResult};
+
+pub struct VanillaEngine<'rt> {
+    rt: &'rt Runtime,
+    cache: HostKvCache,
+    temperature: f32,
+    rng: Rng,
+}
+
+impl<'rt> VanillaEngine<'rt> {
+    pub fn new(rt: &'rt Runtime, temperature: f32, seed: u64) -> Self {
+        let cache = HostKvCache::new(rt.cfg.n_layers, rt.cfg.max_ctx, rt.cfg.d_model);
+        VanillaEngine { rt, cache, temperature, rng: Rng::new(seed) }
+    }
+
+    fn pick(&mut self, logits: &[f32]) -> u32 {
+        if self.temperature <= 0.0 {
+            argmax(logits) as u32
+        } else {
+            let p = softmax_temp(logits, self.temperature);
+            self.rng.sample_dist(&p) as u32
+        }
+    }
+}
+
+impl DecodeEngine for VanillaEngine<'_> {
+    fn name(&self) -> &'static str {
+        "vanilla"
+    }
+
+    fn generate(&mut self, prompt: &[u32], max_new: usize) -> Result<GenerationResult> {
+        let mut res = GenerationResult::default();
+        self.cache.reset();
+        let s = self.rt.cfg.max_ctx;
+        let vocab = self.rt.cfg.vocab;
+
+        let t0 = Instant::now();
+        let pre = prefill(self.rt, &mut self.cache, prompt)?;
+        res.prefill_s = t0.elapsed().as_secs_f64();
+
+        let mut next = self.pick(pre.logits_row(pre.n - 1, vocab));
+        let t1 = Instant::now();
+        let mut bias = vec![NEG_INF; s];
+        while res.tokens.len() < max_new && self.cache.remaining() > 1 {
+            let c = self.cache.committed();
+            res.tokens.push(next);
+            if next == crate::config::EOS_ID {
+                break;
+            }
+            for (j, b) in bias.iter_mut().enumerate() {
+                *b = if j <= c { 0.0 } else { NEG_INF };
+            }
+            let out = self.rt.forward(&[next], &[c as u32], &[c as u32], &bias, self.cache.as_slice())?;
+            self.cache.scatter(&out.new_kv, &[c as u32])?;
+            self.cache.commit_contiguous(1)?;
+            res.steps += 1;
+            res.accepted_per_step.push(1);
+            res.input_lens.push(1);
+            next = self.pick(out.logits_row(0, vocab));
+        }
+        res.decode_s = t1.elapsed().as_secs_f64();
+        truncate_at_eos(&mut res.tokens);
+        Ok(res)
+    }
+}

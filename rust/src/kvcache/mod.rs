@@ -1,0 +1,280 @@
+//! Host-authoritative KV-cache manager.
+//!
+//! The forward executables scatter the step's K/V into a *copy* of the
+//! cache on device for attention, and return the new rows; rust owns the
+//! real cache and applies the same scatter here, then **compacts** after
+//! verification: the accepted tree path's rows are moved down onto the
+//! contiguous committed region (paper §3, "candidate acceptance ... KV
+//! cache is updated accordingly").  Rejected tree rows simply stay above
+//! `committed` and are dead — the next step's bias never exposes them.
+//!
+//! Layout: `[2L, max_ctx, d]` row-major; layer l's keys at plane `2l`,
+//! values at `2l+1`.  Slot `max_ctx-1` is reserved as the padding trash
+//! row (see `runtime::Runtime::forward`); usable context is
+//! `max_ctx - RESERVED` slots.
+
+use anyhow::{bail, Result};
+
+pub const RESERVED_SLOTS: usize = 2;
+
+#[derive(Debug, Clone)]
+pub struct HostKvCache {
+    data: Vec<f32>,
+    planes: usize,
+    max_ctx: usize,
+    d: usize,
+    /// committed context length (number of finalized tokens)
+    committed: usize,
+}
+
+impl HostKvCache {
+    pub fn new(n_layers: usize, max_ctx: usize, d: usize) -> Self {
+        let planes = 2 * n_layers;
+        HostKvCache {
+            data: vec![0.0; planes * max_ctx * d],
+            planes,
+            max_ctx,
+            d,
+            committed: 0,
+        }
+    }
+
+    pub fn committed(&self) -> usize {
+        self.committed
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.max_ctx - RESERVED_SLOTS
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.capacity().saturating_sub(self.committed)
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Scatter the step's returned rows: `new_kv` is `[planes, n, d]`
+    /// and token i's row lands at cache slot `slots[i]` in every plane.
+    pub fn scatter(&mut self, new_kv: &[f32], slots: &[u32]) -> Result<()> {
+        let n = slots.len();
+        if new_kv.len() != self.planes * n * self.d {
+            bail!(
+                "scatter: new_kv has {} values, want {}",
+                new_kv.len(),
+                self.planes * n * self.d
+            );
+        }
+        for (i, &slot) in slots.iter().enumerate() {
+            let slot = slot as usize;
+            if slot >= self.max_ctx {
+                bail!("scatter: slot {slot} out of range");
+            }
+            for p in 0..self.planes {
+                let src = (p * n + i) * self.d;
+                let dst = (p * self.max_ctx + slot) * self.d;
+                self.data[dst..dst + self.d].copy_from_slice(&new_kv[src..src + self.d]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Commit `count` already-contiguous rows starting at `committed`
+    /// (prefill path: slots were `committed..committed+count`).
+    pub fn commit_contiguous(&mut self, count: usize) -> Result<()> {
+        if self.committed + count > self.capacity() {
+            bail!("cache overflow: {} + {count} > {}", self.committed, self.capacity());
+        }
+        self.committed += count;
+        Ok(())
+    }
+
+    /// Compact after verification: move the rows at `accepted_slots`
+    /// (tree scratch positions, in path order) down to the committed
+    /// region and advance `committed`.  Slots equal to their target are
+    /// skipped (the tree root is written at `committed` already).
+    pub fn compact(&mut self, accepted_slots: &[u32]) -> Result<()> {
+        if self.committed + accepted_slots.len() > self.capacity() {
+            bail!(
+                "cache overflow on compact: {} + {} > {}",
+                self.committed,
+                accepted_slots.len(),
+                self.capacity()
+            );
+        }
+        for (i, &src) in accepted_slots.iter().enumerate() {
+            let src = src as usize;
+            let dst = self.committed + i;
+            if src == dst {
+                continue;
+            }
+            if src >= self.max_ctx {
+                bail!("compact: slot {src} out of range");
+            }
+            if src < self.committed + i {
+                bail!("compact: slot {src} would overwrite committed rows");
+            }
+            for p in 0..self.planes {
+                let s = (p * self.max_ctx + src) * self.d;
+                let t = (p * self.max_ctx + dst) * self.d;
+                self.data.copy_within(s..s + self.d, t);
+            }
+        }
+        self.committed += accepted_slots.len();
+        Ok(())
+    }
+
+    /// Roll back to a shorter committed length (request retry/cancel).
+    pub fn truncate(&mut self, len: usize) -> Result<()> {
+        if len > self.committed {
+            bail!("truncate to {len} > committed {}", self.committed);
+        }
+        self.committed = len;
+        Ok(())
+    }
+
+    /// Reset for reuse by another sequence.
+    pub fn reset(&mut self) {
+        self.committed = 0;
+        // rows above committed are always masked; no need to zero
+    }
+
+    /// Read one row (test/debug helper).
+    pub fn row(&self, plane: usize, slot: usize) -> &[f32] {
+        let base = (plane * self.max_ctx + slot) * self.d;
+        &self.data[base..base + self.d]
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+/// Pool of caches for concurrent sequences (the coordinator checks
+/// caches out per running request instead of reallocating ~MBs each
+/// time).
+#[derive(Debug)]
+pub struct CachePool {
+    template: (usize, usize, usize),
+    free: Vec<HostKvCache>,
+    pub created: usize,
+}
+
+impl CachePool {
+    pub fn new(n_layers: usize, max_ctx: usize, d: usize) -> Self {
+        CachePool { template: (n_layers, max_ctx, d), free: Vec::new(), created: 0 }
+    }
+
+    pub fn checkout(&mut self) -> HostKvCache {
+        match self.free.pop() {
+            Some(mut c) => {
+                c.reset();
+                c
+            }
+            None => {
+                self.created += 1;
+                let (l, s, d) = self.template;
+                HostKvCache::new(l, s, d)
+            }
+        }
+    }
+
+    pub fn checkin(&mut self, cache: HostKvCache) {
+        self.free.push(cache);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk() -> HostKvCache {
+        HostKvCache::new(2, 16, 4) // planes=4, S=16, d=4
+    }
+
+    fn kv_rows(planes: usize, n: usize, d: usize, base: f32) -> Vec<f32> {
+        // row (p, i) filled with base + p*100 + i
+        let mut v = Vec::with_capacity(planes * n * d);
+        for p in 0..planes {
+            for i in 0..n {
+                for _ in 0..d {
+                    v.push(base + (p * 100 + i) as f32);
+                }
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn scatter_places_rows() {
+        let mut c = mk();
+        let kv = kv_rows(4, 2, 4, 0.0);
+        c.scatter(&kv, &[3, 7]).unwrap();
+        assert_eq!(c.row(0, 3)[0], 0.0);
+        assert_eq!(c.row(0, 7)[0], 1.0);
+        assert_eq!(c.row(3, 7)[0], 301.0);
+    }
+
+    #[test]
+    fn scatter_validates_sizes() {
+        let mut c = mk();
+        assert!(c.scatter(&[0.0; 7], &[0]).is_err());
+        let kv = kv_rows(4, 1, 4, 0.0);
+        assert!(c.scatter(&kv, &[16]).is_err());
+    }
+
+    #[test]
+    fn compact_moves_accepted_path() {
+        let mut c = mk();
+        c.commit_contiguous(5).unwrap();
+        // tree scratch rows at slots 5..9; accepted path = slots 5, 7, 8
+        let kv = kv_rows(4, 4, 4, 0.5);
+        c.scatter(&kv, &[5, 6, 7, 8]).unwrap();
+        let want_7 = c.row(0, 7).to_vec();
+        let want_8 = c.row(1, 8).to_vec();
+        c.compact(&[5, 7, 8]).unwrap();
+        assert_eq!(c.committed(), 8);
+        assert_eq!(c.row(0, 6), &want_7[..]); // slot 7 -> 6
+        assert_eq!(c.row(1, 7), &want_8[..]); // slot 8 -> 7
+    }
+
+    #[test]
+    fn compact_rejects_overlap_and_overflow() {
+        let mut c = mk();
+        c.commit_contiguous(5).unwrap();
+        assert!(c.compact(&[3]).is_err()); // would clobber committed
+        let mut c2 = mk();
+        c2.commit_contiguous(13).unwrap();
+        assert!(c2.compact(&[13, 13]).is_err()); // 15 > capacity 14
+    }
+
+    #[test]
+    fn prefill_then_truncate() {
+        let mut c = mk();
+        c.commit_contiguous(10).unwrap();
+        c.truncate(4).unwrap();
+        assert_eq!(c.committed(), 4);
+        assert!(c.truncate(5).is_err());
+    }
+
+    #[test]
+    fn capacity_reserves_trash_slot() {
+        let c = mk();
+        assert_eq!(c.capacity(), 14);
+        assert_eq!(c.memory_bytes(), 4 * 16 * 4 * 4);
+    }
+
+    #[test]
+    fn pool_reuses() {
+        let mut p = CachePool::new(2, 16, 4);
+        let mut a = p.checkout();
+        a.commit_contiguous(3).unwrap();
+        p.checkin(a);
+        let b = p.checkout();
+        assert_eq!(b.committed(), 0);
+        assert_eq!(p.created, 1);
+        let _c = p.checkout();
+        assert_eq!(p.created, 2);
+    }
+}

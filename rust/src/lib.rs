@@ -1,0 +1,25 @@
+//! # PPD — Hardware-Aware Parallel Prompt Decoding
+//!
+//! Reproduction of Chen et al., EMNLP 2025 Findings (see DESIGN.md).
+//! Three-layer stack: this rust crate is L3 (serving coordinator); the
+//! JAX model (L2) and Pallas tree-attention kernel (L1) live under
+//! `python/` and are AOT-compiled to HLO text loaded by [`runtime`].
+//!
+//! Quick tour:
+//! * [`runtime`]  — PJRT executable loading + bucketed `forward`
+//! * [`kvcache`]  — host-authoritative KV cache with tree compaction
+//! * [`tree`]     — sparse trees; dynamic state machine (Props 4.1–4.4);
+//!                  hardware-aware sizing
+//! * [`decoding`] — vanilla / PPD / Medusa / lookup / speculative engines
+//! * [`coordinator`] — request queue, scheduler, TCP server
+//! * [`workload`] — trace loading + synthetic workload generation
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod decoding;
+pub mod kvcache;
+pub mod metrics;
+pub mod runtime;
+pub mod tree;
+pub mod util;
+pub mod workload;

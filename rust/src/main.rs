@@ -1,0 +1,265 @@
+//! `ppd` — CLI for the PPD serving stack.
+//!
+//! Subcommands:
+//!   info                               artifact inventory
+//!   generate --model M --engine E      one generation, timed
+//!   serve --model M --port P           TCP line-protocol server
+//!   calibrate --model M [--force]      measure L_fp(n) per bucket
+//!   sweep --model M                    hardware-aware tree-size curve
+//!   trees --model M                    print the dynamic tree set
+//!
+//! (clap is not in the offline vendor set; flags are parsed by hand.)
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use ppd::config::{ArtifactPaths, ModelConfig, ServeConfig};
+use ppd::coordinator::{build_engine, Coordinator, EngineKind};
+use ppd::runtime::calibrate::Calibration;
+use ppd::runtime::Runtime;
+use ppd::tree::builder::AcceptStats;
+use ppd::tree::dynamic::DynamicTreeSet;
+use ppd::tree::hardware::{default_budgets, sweep};
+use ppd::util::bench::Table;
+use ppd::workload;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+struct Args {
+    cmd: String,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Result<Args> {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "help".to_string());
+        let mut flags = HashMap::new();
+        while let Some(a) = it.next() {
+            let Some(name) = a.strip_prefix("--") else {
+                bail!("unexpected argument '{a}'");
+            };
+            if let Some((k, v)) = name.split_once('=') {
+                flags.insert(k.to_string(), v.to_string());
+            } else if matches!(name, "force" | "greedy") {
+                flags.insert(name.to_string(), "true".to_string());
+            } else {
+                let v = it.next().ok_or_else(|| anyhow!("--{name} needs a value"))?;
+                flags.insert(name.to_string(), v);
+            }
+        }
+        Ok(Args { cmd, flags })
+    }
+
+    fn get(&self, k: &str) -> Option<&str> {
+        self.flags.get(k).map(|s| s.as_str())
+    }
+
+    fn model(&self) -> String {
+        self.get("model").unwrap_or("ppd-m").to_string()
+    }
+
+    fn artifacts(&self) -> PathBuf {
+        PathBuf::from(self.get("artifacts").unwrap_or("artifacts"))
+    }
+
+    fn serve_cfg(&self) -> Result<ServeConfig> {
+        let mut cfg = ServeConfig::default();
+        if let Some(t) = self.get("temp") {
+            cfg.temperature = t.parse().context("--temp")?;
+        }
+        if let Some(n) = self.get("candidates") {
+            cfg.n_candidates = n.parse().context("--candidates")?;
+        }
+        if let Some(n) = self.get("prompt-budget") {
+            cfg.n_prompt_budget = n.parse().context("--prompt-budget")?;
+        }
+        if let Some(n) = self.get("max-new") {
+            cfg.max_new_tokens = n.parse().context("--max-new")?;
+        }
+        Ok(cfg)
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse()?;
+    match args.cmd.as_str() {
+        "info" => cmd_info(&args),
+        "generate" => cmd_generate(&args),
+        "serve" => cmd_serve(&args),
+        "calibrate" => cmd_calibrate(&args),
+        "sweep" => cmd_sweep(&args),
+        "trees" => cmd_trees(&args),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            bail!("unknown command '{other}'")
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "ppd — Hardware-Aware Parallel Prompt Decoding (EMNLP 2025 reproduction)\n\n\
+         USAGE: ppd <command> [--flag value ...]\n\n\
+         COMMANDS\n\
+           info        list artifact models and configs\n\
+           generate    --model M --engine {{{}}} --prompt TEXT [--max-new N] [--temp T]\n\
+           serve       --model M [--port 7878] [--engine ppd]\n\
+           calibrate   --model M [--force]  measure per-bucket forward latency\n\
+           sweep       --model M            theoretical-speedup curve vs tree size\n\
+           trees       --model M            print the dynamic sparse tree set\n\n\
+         COMMON FLAGS\n\
+           --artifacts DIR   artifact root (default: artifacts)\n\
+           --candidates N / --prompt-budget N   tree budgets",
+        EngineKind::all().join("|")
+    );
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let root = args.artifacts();
+    let manifest = ppd::runtime::load_manifest(&root)?;
+    let mut table = Table::new(&["model", "params", "P_tr %", "layers", "d", "ctx", "buckets", "medusa"]);
+    for m in manifest.req("models")?.as_arr()? {
+        let name = m.as_str()?;
+        let cfg = ModelConfig::load(&root.join(name))?;
+        table.row(&[
+            cfg.name.clone(),
+            format!("{}", cfg.param_count),
+            format!("{:.5}", 100.0 * cfg.trainable_fraction()),
+            format!("{}", cfg.n_layers),
+            format!("{}", cfg.d_model),
+            format!("{}", cfg.max_ctx),
+            format!("{:?}", cfg.buckets),
+            format!("{}", cfg.medusa),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let root = args.artifacts();
+    let model = args.model();
+    let kind = EngineKind::parse(args.get("engine").unwrap_or("ppd"))?;
+    let cfg = args.serve_cfg()?;
+    let prompt_text = args
+        .get("prompt")
+        .unwrap_or("user: what is your favorite color?\nassistant:");
+    let max_new: usize = args.get("max-new").unwrap_or("64").parse()?;
+
+    let paths = ArtifactPaths::new(root.clone(), &model);
+    let rt = Runtime::load(&paths)?;
+    let draft = match kind {
+        EngineKind::Spec | EngineKind::SpecPpd => {
+            let dm = args.get("draft").unwrap_or("ppd-d");
+            Some(Runtime::load(&ArtifactPaths::new(root.clone(), dm))?)
+        }
+        _ => None,
+    };
+    let mut engine = build_engine(kind, &rt, draft.as_ref(), &paths, &cfg, 0)?;
+    let prompt = workload::encode(prompt_text);
+    let r = engine.generate(&prompt, max_new)?;
+    println!("── {} | {} ──", rt.cfg.name, engine.name());
+    println!("{}", workload::decode(&r.tokens));
+    println!("──");
+    println!(
+        "tokens={} steps={} tau={:.2} prefill={:.3}s decode={:.3}s throughput={:.1} tok/s",
+        r.tokens.len(),
+        r.steps,
+        r.tau(),
+        r.prefill_s,
+        r.decode_s,
+        r.throughput()
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let port: u16 = args.get("port").unwrap_or("7878").parse()?;
+    let kind = EngineKind::parse(args.get("engine").unwrap_or("ppd"))?;
+    let draft = match kind {
+        EngineKind::Spec | EngineKind::SpecPpd => Some(args.get("draft").unwrap_or("ppd-d").to_string()),
+        _ => None,
+    };
+    let coord = Coordinator::spawn(args.artifacts(), args.model(), draft, kind, args.serve_cfg()?)?;
+    let max = args.get("max-requests").map(|m| m.parse()).transpose()?;
+    ppd::coordinator::server::serve(coord, &format!("127.0.0.1:{port}"), max)
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let paths = ArtifactPaths::new(args.artifacts(), &args.model());
+    let rt = Runtime::load(&paths)?;
+    let cal_path = paths.calibration();
+    if args.get("force").is_some() && cal_path.exists() {
+        std::fs::remove_file(&cal_path)?;
+    }
+    let cal = Calibration::load_or_measure(&rt, &cal_path, 12)?;
+    let mut t = Table::new(&["bucket", "L_fp (ms)"]);
+    for (b, l) in &cal.latency_s {
+        t.row(&[format!("{b}"), format!("{:.2}", l * 1e3)]);
+    }
+    t.print();
+    println!("saved to {}", cal_path.display());
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let paths = ArtifactPaths::new(args.artifacts(), &args.model());
+    let rt = Runtime::load(&paths)?;
+    let cal = Calibration::load_or_measure(&rt, &paths.calibration(), 12)?;
+    let stats = AcceptStats::load(&paths.accept_stats(None), "ppd")?;
+    let model = sweep(&stats, rt.cfg.n_prompt, &default_budgets(), &cal, 10)?;
+    let mut t = Table::new(&["budget", "n_c", "n_p", "input", "tau", "L_fp ms", "speedup"]);
+    for p in &model.points {
+        t.row(&[
+            format!("{}", p.total_budget),
+            format!("{}", p.n_candidates),
+            format!("{}", p.n_prompt),
+            format!("{}", p.input_len),
+            format!("{:.3}", p.tau),
+            format!("{:.2}", p.latency_s * 1e3),
+            format!("{:.3}", p.speedup),
+        ]);
+    }
+    t.print();
+    let best = model.best().unwrap();
+    println!("optimal: budget={} (theoretical speedup {:.2}x)", best.total_budget, best.speedup);
+    Ok(())
+}
+
+fn cmd_trees(args: &Args) -> Result<()> {
+    let paths = ArtifactPaths::new(args.artifacts(), &args.model());
+    let cfg = ModelConfig::load(&paths.model_dir())?;
+    let stats = AcceptStats::load(&paths.accept_stats(None), "ppd")?;
+    let sc = args.serve_cfg()?;
+    let set = DynamicTreeSet::build(&stats, cfg.n_prompt, sc.n_candidates, sc.n_prompt_budget, sc.top_r)?;
+    println!(
+        "dynamic tree set: n_c={} n_p<={} tau={:.3} S_tr={:?} steady={:?}",
+        set.n_candidates,
+        set.n_prompt_budget,
+        set.tau(),
+        set.size_tuple(),
+        set.steady.iter().map(|p| (p * 1000.0).round() / 1000.0).collect::<Vec<_>>()
+    );
+    for (k, tree) in set.trees.iter().enumerate() {
+        println!(
+            "  T_{k}: candidates={} prompts={} input_len={} f={:.3}",
+            tree.n_candidates(),
+            tree.n_prompt(),
+            tree.input_len(),
+            set.f[k]
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,162 @@
+//! Serving metrics: latency histograms, throughput counters, and the
+//! aggregated report the coordinator/benches emit.
+
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+/// Fixed-boundary latency histogram (log-spaced), allocation-free on the
+/// hot path.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    /// bucket upper bounds in seconds
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    sum_s: f64,
+    max_s: f64,
+    n: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        // 100µs .. ~100s, 1.6x spacing
+        let mut bounds = Vec::new();
+        let mut b = 1e-4;
+        while b < 100.0 {
+            bounds.push(b);
+            b *= 1.6;
+        }
+        let len = bounds.len();
+        LatencyHistogram { bounds, counts: vec![0; len + 1], sum_s: 0.0, max_s: 0.0, n: 0 }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn record(&mut self, d: Duration) {
+        let s = d.as_secs_f64();
+        let idx = self.bounds.partition_point(|&b| b < s);
+        self.counts[idx] += 1;
+        self.sum_s += s;
+        self.max_s = self.max_s.max(s);
+        self.n += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum_s / self.n as f64
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries.
+    pub fn quantile_s(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let target = (q * self.n as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return self.bounds.get(i).copied().unwrap_or(self.max_s);
+            }
+        }
+        self.max_s
+    }
+}
+
+/// Aggregated serving report.
+#[derive(Debug, Clone, Default)]
+pub struct ServeReport {
+    pub requests: u64,
+    pub generated_tokens: u64,
+    pub decode_steps: u64,
+    pub wall_s: f64,
+    pub request_latency: Option<Box<LatencyHistogram>>,
+}
+
+impl ServeReport {
+    pub fn new() -> Self {
+        ServeReport { request_latency: Some(Box::default()), ..Default::default() }
+    }
+
+    pub fn record_request(&mut self, tokens: usize, steps: usize, latency: Duration) {
+        self.requests += 1;
+        self.generated_tokens += tokens as u64;
+        self.decode_steps += steps as u64;
+        if let Some(h) = self.request_latency.as_mut() {
+            h.record(latency);
+        }
+    }
+
+    pub fn throughput_tok_s(&self) -> f64 {
+        if self.wall_s == 0.0 {
+            0.0
+        } else {
+            self.generated_tokens as f64 / self.wall_s
+        }
+    }
+
+    pub fn mean_tau(&self) -> f64 {
+        if self.decode_steps == 0 {
+            0.0
+        } else {
+            self.generated_tokens as f64 / self.decode_steps as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let h = self.request_latency.as_deref();
+        Json::obj(vec![
+            ("requests", Json::Num(self.requests as f64)),
+            ("generated_tokens", Json::Num(self.generated_tokens as f64)),
+            ("decode_steps", Json::Num(self.decode_steps as f64)),
+            ("wall_s", Json::Num(self.wall_s)),
+            ("throughput_tok_s", Json::Num(self.throughput_tok_s())),
+            ("mean_tau", Json::Num(self.mean_tau())),
+            ("p50_latency_s", Json::Num(h.map_or(0.0, |h| h.quantile_s(0.5)))),
+            ("p95_latency_s", Json::Num(h.map_or(0.0, |h| h.quantile_s(0.95)))),
+            ("mean_latency_s", Json::Num(h.map_or(0.0, |h| h.mean_s()))),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let mut h = LatencyHistogram::default();
+        for ms in [1u64, 2, 3, 5, 8, 13, 100] {
+            h.record(Duration::from_millis(ms));
+        }
+        assert_eq!(h.count(), 7);
+        assert!(h.quantile_s(0.5) <= h.quantile_s(0.95));
+        assert!(h.mean_s() > 0.0);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.quantile_s(0.99), 0.0);
+        assert_eq!(h.mean_s(), 0.0);
+    }
+
+    #[test]
+    fn report_aggregates() {
+        let mut r = ServeReport::new();
+        r.record_request(10, 5, Duration::from_millis(100));
+        r.record_request(20, 5, Duration::from_millis(200));
+        r.wall_s = 2.0;
+        assert_eq!(r.throughput_tok_s(), 15.0);
+        assert_eq!(r.mean_tau(), 3.0);
+        let j = r.to_json();
+        assert_eq!(j.req("requests").unwrap().as_usize().unwrap(), 2);
+    }
+}

@@ -1,0 +1,162 @@
+//! Hardware calibration: measure the forward-pass latency `L_fp(n)` for
+//! every AOT bucket on *this* machine.  This is the hardware-dependent
+//! half of the paper's speedup model `Speedup(n) = tau(n) / L_fp(n)`
+//! (§4.2 "Hardware-awareness"); the dynamic-sparse-tree sizer consumes it.
+//!
+//! Results are cached in `artifacts/<model>/calibration.json` so serving
+//! starts fast; `ppd calibrate --force` re-measures.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::runtime::{Runtime, NEG_INF};
+use crate::util::bench::bench;
+use crate::util::json::Json;
+
+/// Measured (or synthetic) per-bucket forward latency in seconds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Calibration {
+    /// model name the measurement belongs to
+    pub model: String,
+    /// latency-envelope label ("cpu" = measured; others are emulated
+    /// hardware profiles for the Fig 8 reproduction)
+    pub envelope: String,
+    pub latency_s: BTreeMap<usize, f64>,
+}
+
+impl Calibration {
+    /// Measure every bucket with synthetic single-context inputs.
+    pub fn measure(rt: &Runtime, warmup: usize, iters: usize) -> Result<Calibration> {
+        let cfg = &rt.cfg;
+        let s = cfg.max_ctx;
+        let d = cfg.d_model;
+        let cache = vec![0f32; 2 * cfg.n_layers * s * d];
+        let mut latency_s = BTreeMap::new();
+        for &b in &cfg.buckets {
+            let tokens: Vec<u32> = (0..b).map(|i| 32 + (i as u32 % 64)) .collect();
+            let pos: Vec<u32> = (0..b as u32).collect();
+            let slots: Vec<u32> = (0..b as u32).collect();
+            let mut bias = vec![NEG_INF; b * s];
+            for i in 0..b {
+                for j in 0..=i {
+                    bias[i * s + j] = 0.0;
+                }
+            }
+            let stats = bench(warmup, iters, || {
+                rt.forward(&tokens, &pos, &slots, &bias, &cache).expect("calibration forward");
+            });
+            latency_s.insert(b, stats.median_s);
+        }
+        Ok(Calibration { model: cfg.name.clone(), envelope: "cpu".into(), latency_s })
+    }
+
+    /// Emulated latency envelope: scales the measured curve so that the
+    /// *shape* differs — `alpha` is a fixed per-step overhead multiplier
+    /// and `beta` an extra per-token cost.  "fast" hardware has high
+    /// fixed overhead relative to per-token cost (big GPUs: kernel
+    /// launch dominates, wide trees are nearly free); "slow" hardware is
+    /// compute-bound (per-token cost dominates, wide trees hurt).  This
+    /// reproduces the A100-vs-RTX4090 divergence of Fig 8b/8c.
+    pub fn envelope(&self, label: &str, alpha: f64, beta_per_token_s: f64) -> Calibration {
+        let base = self.latency_s.get(&1).copied().unwrap_or(1e-3);
+        let latency_s = self
+            .latency_s
+            .iter()
+            .map(|(&b, &l)| (b, alpha * base + (l - base).max(0.0) + beta_per_token_s * b as f64))
+            .collect();
+        Calibration { model: self.model.clone(), envelope: label.into(), latency_s }
+    }
+
+    /// Latency for an input of `n` tokens (bucket-quantized).
+    pub fn lookup(&self, n: usize) -> Option<f64> {
+        self.latency_s
+            .iter()
+            .filter(|(&b, _)| b >= n)
+            .map(|(_, &l)| l)
+            .next()
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let entries: Vec<Json> = self
+            .latency_s
+            .iter()
+            .map(|(&b, &l)| Json::obj(vec![("bucket", Json::Num(b as f64)), ("latency_s", Json::Num(l))]))
+            .collect();
+        Json::obj(vec![
+            ("model", Json::str(&self.model)),
+            ("envelope", Json::str(&self.envelope)),
+            ("entries", Json::Arr(entries)),
+        ])
+        .write_file(path)
+    }
+
+    pub fn load(path: &Path) -> Result<Calibration> {
+        let j = Json::from_file(path)?;
+        let mut latency_s = BTreeMap::new();
+        for e in j.req("entries")?.as_arr()? {
+            latency_s.insert(e.req("bucket")?.as_usize()?, e.req("latency_s")?.as_f64()?);
+        }
+        Ok(Calibration {
+            model: j.req("model")?.as_str()?.to_string(),
+            envelope: j.req("envelope")?.as_str()?.to_string(),
+            latency_s,
+        })
+    }
+
+    /// Load if cached, else measure and cache.
+    pub fn load_or_measure(rt: &Runtime, path: &Path, iters: usize) -> Result<Calibration> {
+        if path.exists() {
+            let c = Calibration::load(path)?;
+            if c.model == rt.cfg.name {
+                return Ok(c);
+            }
+        }
+        let c = Calibration::measure(rt, 2, iters)?;
+        c.save(path)?;
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synthetic() -> Calibration {
+        let mut latency_s = BTreeMap::new();
+        for (b, l) in [(1, 1.0e-3), (8, 1.2e-3), (64, 3.0e-3)] {
+            latency_s.insert(b, l);
+        }
+        Calibration { model: "t".into(), envelope: "cpu".into(), latency_s }
+    }
+
+    #[test]
+    fn lookup_quantizes_up() {
+        let c = synthetic();
+        assert_eq!(c.lookup(1), Some(1.0e-3));
+        assert_eq!(c.lookup(2), Some(1.2e-3));
+        assert_eq!(c.lookup(9), Some(3.0e-3));
+        assert_eq!(c.lookup(65), None);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let c = synthetic();
+        let p = std::env::temp_dir().join("ppd_cal_test.json");
+        c.save(&p).unwrap();
+        let c2 = Calibration::load(&p).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn envelope_changes_shape() {
+        let c = synthetic();
+        // slow envelope: heavy per-token cost -> larger buckets much worse
+        let slow = c.envelope("slow", 1.0, 1e-4);
+        let fast = c.envelope("fast", 4.0, 0.0);
+        let ratio_slow = slow.lookup(64).unwrap() / slow.lookup(1).unwrap();
+        let ratio_fast = fast.lookup(64).unwrap() / fast.lookup(1).unwrap();
+        assert!(ratio_slow > ratio_fast);
+    }
+}

@@ -1,0 +1,72 @@
+//! Literal construction/extraction helpers over the `xla` crate.
+
+use anyhow::{bail, Result};
+use xla::{ElementType, Literal};
+
+/// f32 literal with an arbitrary shape.
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        bail!("lit_f32: {} elements for shape {:?}", data.len(), dims);
+    }
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::F32,
+        dims,
+        bytes,
+    )?)
+}
+
+/// i32 literal with an arbitrary shape.
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        bail!("lit_i32: {} elements for shape {:?}", data.len(), dims);
+    }
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::S32,
+        dims,
+        bytes,
+    )?)
+}
+
+/// u32 token ids -> i32 literal (the graphs take i32).
+pub fn lit_tokens(tokens: &[u32], dims: &[usize]) -> Result<Literal> {
+    let as_i32: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+    lit_i32(&as_i32, dims)
+}
+
+/// Extract a Vec<f32> from a literal.
+pub fn to_f32_vec(lit: &Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = lit_f32(&data, &[2, 3]).unwrap();
+        assert_eq!(lit.element_count(), 6);
+        assert_eq!(to_f32_vec(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(lit_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(lit_i32(&[1], &[2]).is_err());
+    }
+
+    #[test]
+    fn token_literal() {
+        let lit = lit_tokens(&[0, 127, 130], &[3]).unwrap();
+        assert_eq!(lit.element_count(), 3);
+    }
+}

@@ -1,0 +1,417 @@
+//! PJRT runtime: loads the AOT'd HLO-text forward graphs, keeps the
+//! model weights device-resident, and exposes a bucketed `forward` the
+//! decode engines call on the hot path.
+//!
+//! Design (DESIGN.md §3): PJRT returns multi-output results as a single
+//! *tuple* buffer (no device-side untuple in the `xla` crate), so the
+//! executables return only the small per-step tensors
+//! `(logits [n,V], hidden [n,d], new_kv [2L,n,d])` while the
+//! authoritative KV cache lives host-side (`kvcache::HostKvCache`) and is
+//! uploaded as an input buffer each step.  Weights are uploaded once.
+
+pub mod calibrate;
+pub mod literal;
+pub mod weights;
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{HloModuleProto, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::config::{ArtifactPaths, ModelConfig};
+use crate::util::json::Json;
+use literal::{lit_f32, lit_i32, to_f32_vec};
+use weights::Weights;
+
+pub const NEG_INF: f32 = -1e9;
+
+/// Per-step output of one forward call, truncated to the real (unpadded)
+/// token count `n`.
+#[derive(Debug, Clone)]
+pub struct StepOutput {
+    pub n: usize,
+    /// [n * vocab]
+    pub logits: Vec<f32>,
+    /// [n * d_model]
+    pub hidden: Vec<f32>,
+    /// [2L * n * d_model] — row-major (layer-kv, token, feature)
+    pub new_kv: Vec<f32>,
+}
+
+impl StepOutput {
+    pub fn logits_row(&self, i: usize, vocab: usize) -> &[f32] {
+        &self.logits[i * vocab..(i + 1) * vocab]
+    }
+
+    pub fn hidden_row(&self, i: usize, d: usize) -> &[f32] {
+        &self.hidden[i * d..(i + 1) * d]
+    }
+}
+
+/// Execution counters (perf pass + metrics).
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub forwards: usize,
+    pub forward_s: f64,
+    pub upload_s: f64,
+    pub download_s: f64,
+    pub per_bucket: BTreeMap<usize, (usize, f64)>,
+}
+
+pub struct Runtime {
+    pub cfg: ModelConfig,
+    client: PjRtClient,
+    executables: BTreeMap<(usize, usize), PjRtLoadedExecutable>,
+    /// available KV context lengths, ascending (e.g. [256, 512])
+    kv_buckets: Vec<usize>,
+    weight_bufs: Vec<PjRtBuffer>,
+    /// PJRT's buffer_from_host_literal is asynchronous/zero-copy: the
+    /// source literal MUST outlive the device buffer, so the weight
+    /// literals are retained for the runtime's lifetime.
+    _weight_lits: Vec<xla::Literal>,
+    pub weights_host: Weights,
+    medusa: Option<MedusaRuntime>,
+    pub stats: RefCell<RuntimeStats>,
+    /// reusable padded-input scratch (perf: no per-step allocation)
+    scratch: RefCell<Scratch>,
+}
+
+struct MedusaRuntime {
+    exe: PjRtLoadedExecutable,
+    bufs: Vec<PjRtBuffer>,
+    _lits: Vec<xla::Literal>,
+    n_heads: usize,
+}
+
+#[derive(Default)]
+struct Scratch {
+    tokens: Vec<i32>,
+    pos: Vec<i32>,
+    slots: Vec<i32>,
+    bias: Vec<f32>,
+    cache: Vec<f32>,
+}
+
+/// Perf toggles for the EXPERIMENTS.md §Perf A/B runs.
+fn upload_via_literal() -> bool {
+    std::env::var("PPD_UPLOAD_VIA_LITERAL").is_ok()
+}
+
+fn kv_buckets_disabled() -> bool {
+    std::env::var("PPD_DISABLE_KV_BUCKETS").is_ok()
+}
+
+impl Runtime {
+    /// Load every bucket executable + weights for one model.
+    pub fn load(paths: &ArtifactPaths) -> Result<Self> {
+        let cfg = ModelConfig::load(&paths.model_dir())?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+
+        let mut executables = BTreeMap::new();
+        let mut kv_buckets = vec![cfg.max_ctx];
+        for &b in &cfg.buckets {
+            let path = paths.fwd_hlo(b);
+            let proto = HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("loading {}: {e}", path.display()))?;
+            let comp = XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling bucket {b}: {e}"))?;
+            executables.insert((b, cfg.max_ctx), exe);
+            // optional short-context variants (perf: KV-length bucketing)
+            for &kb in &[256usize] {
+                let p = paths.fwd_hlo_kv(b, kb);
+                if p.exists() {
+                    let proto = HloModuleProto::from_text_file(&p)
+                        .map_err(|e| anyhow!("loading {}: {e}", p.display()))?;
+                    let exe = client
+                        .compile(&XlaComputation::from_proto(&proto))
+                        .map_err(|e| anyhow!("compiling bucket ({b},{kb}): {e}"))?;
+                    executables.insert((b, kb), exe);
+                    if !kv_buckets.contains(&kb) {
+                        kv_buckets.push(kb);
+                    }
+                }
+            }
+        }
+        kv_buckets.sort_unstable();
+
+        let weights_host = Weights::load(&paths.weights_bin(), &paths.weights_manifest())?;
+        let mut weight_bufs = Vec::with_capacity(weights_host.entries.len());
+        let mut weight_lits = Vec::with_capacity(weights_host.entries.len());
+        for e in &weights_host.entries {
+            let lit = lit_f32(weights_host.slice(e), &e.shape)?;
+            weight_bufs.push(
+                client
+                    .buffer_from_host_literal(None, &lit)
+                    .map_err(|e2| anyhow!("uploading weight {}: {e2}", e.name))?,
+            );
+            weight_lits.push(lit); // keep alive: async host->device copy
+        }
+
+        let medusa = if cfg.medusa && paths.medusa_hlo().exists() {
+            Some(Self::load_medusa(&client, paths)?)
+        } else {
+            None
+        };
+
+        Ok(Runtime {
+            cfg,
+            client,
+            executables,
+            kv_buckets,
+            weight_bufs,
+            _weight_lits: weight_lits,
+            weights_host,
+            medusa,
+            stats: RefCell::new(RuntimeStats::default()),
+            scratch: RefCell::new(Scratch::default()),
+        })
+    }
+
+    fn load_medusa(client: &PjRtClient, paths: &ArtifactPaths) -> Result<MedusaRuntime> {
+        let proto = HloModuleProto::from_text_file(&paths.medusa_hlo())
+            .map_err(|e| anyhow!("loading medusa hlo: {e}"))?;
+        let exe = client
+            .compile(&XlaComputation::from_proto(&proto))
+            .map_err(|e| anyhow!("compiling medusa heads: {e}"))?;
+        let (bin, man) = paths.medusa_weights();
+        let w = Weights::load(&bin, &man)?;
+        let mut bufs = Vec::new();
+        let mut lits = Vec::new();
+        let mut n_heads = 3;
+        for e in &w.entries {
+            if e.name == "wk" {
+                n_heads = e.shape[0];
+            }
+            let lit = lit_f32(w.slice(e), &e.shape)?;
+            bufs.push(
+                client
+                    .buffer_from_host_literal(None, &lit)
+                    .map_err(|e2| anyhow!("uploading medusa weight: {e2}"))?,
+            );
+            lits.push(lit);
+        }
+        Ok(MedusaRuntime { exe, bufs, _lits: lits, n_heads })
+    }
+
+    pub fn has_medusa(&self) -> bool {
+        self.medusa.is_some()
+    }
+
+    pub fn medusa_n_heads(&self) -> usize {
+        self.medusa.as_ref().map(|m| m.n_heads).unwrap_or(0)
+    }
+
+    /// One forward step over `n` tree tokens.
+    ///
+    /// * `tokens` — token ids (prompt tokens are `PROMPT_ID0 + k`)
+    /// * `pos`    — RoPE positions
+    /// * `slots`  — cache write rows (the KV of token i lands in slot i)
+    /// * `bias`   — `[n, max_ctx]` additive visibility mask
+    /// * `cache`  — host cache snapshot `[2L, max_ctx, d]`
+    ///
+    /// Padding to the bucket size happens here: pad tokens are masked
+    /// everywhere and their KV is routed to the reserved trash slot
+    /// (`max_ctx - 1`), which generation never reaches (the kv-cache
+    /// manager caps usable context at `max_ctx - 2`).
+    pub fn forward(
+        &self,
+        tokens: &[u32],
+        pos: &[u32],
+        slots: &[u32],
+        bias: &[f32],
+        cache: &[f32],
+    ) -> Result<StepOutput> {
+        let n = tokens.len();
+        let s = self.cfg.max_ctx;
+        let d = self.cfg.d_model;
+        let l2 = 2 * self.cfg.n_layers;
+        if pos.len() != n || slots.len() != n {
+            bail!("forward: inconsistent input lengths");
+        }
+        if bias.len() != n * s {
+            bail!("forward: bias is {} values, want {}", bias.len(), n * s);
+        }
+        if cache.len() != l2 * s * d {
+            bail!("forward: cache is {} values, want {}", cache.len(), l2 * s * d);
+        }
+        let bucket = self.cfg.bucket_for(n)?;
+        // KV-length bucketing (perf pass, EXPERIMENTS.md §Perf): pick the
+        // smallest compiled context length that covers every referenced
+        // slot — halves the cache upload AND the attention compute for
+        // short contexts.
+        let max_slot = slots.iter().copied().max().unwrap_or(0) as usize;
+        let s_sel = if kv_buckets_disabled() {
+            s
+        } else {
+            self.kv_buckets
+                .iter()
+                .copied()
+                .find(|&kb| kb > max_slot + 1 && self.executables.contains_key(&(bucket, kb)))
+                .unwrap_or(s)
+        };
+        let exe = self
+            .executables
+            .get(&(bucket, s_sel))
+            .ok_or_else(|| anyhow!("bucket ({bucket},{s_sel}) not loaded"))?;
+
+        let t0 = std::time::Instant::now();
+        // pad inputs into the reusable scratch
+        let mut sc = self.scratch.borrow_mut();
+        sc.tokens.clear();
+        sc.tokens.extend(tokens.iter().map(|&t| t as i32));
+        sc.tokens.resize(bucket, 0);
+        sc.pos.clear();
+        sc.pos.extend(pos.iter().map(|&p| p as i32));
+        sc.pos.resize(bucket, 0);
+        sc.slots.clear();
+        sc.slots.extend(slots.iter().map(|&p| p as i32));
+        sc.slots.resize(bucket, (s_sel - 1) as i32); // trash slot
+        // bias rows truncated to the selected context length
+        sc.bias.clear();
+        sc.bias.reserve(bucket * s_sel);
+        for r in 0..n {
+            sc.bias.extend_from_slice(&bias[r * s..r * s + s_sel]);
+        }
+        sc.bias.resize(bucket * s_sel, NEG_INF);
+        // cache planes truncated to the selected context length
+        let cache_view: &[f32] = if s_sel == s {
+            cache
+        } else {
+            sc.cache.clear();
+            sc.cache.reserve(l2 * s_sel * d);
+            for p in 0..l2 {
+                let base = p * s * d;
+                sc.cache.extend_from_slice(&cache[base..base + s_sel * d]);
+            }
+            &[]
+        };
+
+        let mut bufs: Vec<PjRtBuffer> = Vec::with_capacity(5);
+        let mut lits: Vec<xla::Literal> = Vec::new();
+        if upload_via_literal() {
+            // baseline path (pre-optimization): literal + async upload
+            let cache_src = if s_sel == s { cache } else { &sc.cache };
+            for lit in [
+                lit_i32(&sc.tokens, &[bucket])?,
+                lit_i32(&sc.pos, &[bucket])?,
+                lit_i32(&sc.slots, &[bucket])?,
+                lit_f32(&sc.bias, &[bucket, s_sel])?,
+                lit_f32(cache_src, &[l2, s_sel, d])?,
+            ] {
+                bufs.push(
+                    self.client
+                        .buffer_from_host_literal(None, &lit)
+                        .map_err(|e| anyhow!("uploading step input: {e}"))?,
+                );
+                lits.push(lit);
+            }
+        } else {
+            // optimized path: direct host-buffer upload, no literal copy
+            let cache_src = if s_sel == s { cache } else { &sc.cache };
+            bufs.push(self.client.buffer_from_host_buffer(&sc.tokens, &[bucket], None).map_err(|e| anyhow!("{e}"))?);
+            bufs.push(self.client.buffer_from_host_buffer(&sc.pos, &[bucket], None).map_err(|e| anyhow!("{e}"))?);
+            bufs.push(self.client.buffer_from_host_buffer(&sc.slots, &[bucket], None).map_err(|e| anyhow!("{e}"))?);
+            bufs.push(self.client.buffer_from_host_buffer(&sc.bias, &[bucket, s_sel], None).map_err(|e| anyhow!("{e}"))?);
+            bufs.push(self.client.buffer_from_host_buffer(cache_src, &[l2, s_sel, d], None).map_err(|e| anyhow!("{e}"))?);
+        }
+        let _ = cache_view;
+        let upload_s = t0.elapsed().as_secs_f64();
+
+        let mut args: Vec<&PjRtBuffer> = bufs.iter().collect();
+        args.extend(self.weight_bufs.iter());
+
+        let t1 = std::time::Instant::now();
+        let outs = exe
+            .execute_b::<&PjRtBuffer>(&args)
+            .map_err(|e| anyhow!("forward bucket {bucket}: {e}"))?;
+        let result = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching step output: {e}"))?;
+        let exec_s = t1.elapsed().as_secs_f64();
+
+        let t2 = std::time::Instant::now();
+        let (l_logits, l_hidden, l_kv) = result
+            .to_tuple3()
+            .map_err(|e| anyhow!("untupling step output: {e}"))?;
+        let logits_full = to_f32_vec(&l_logits)?;
+        let hidden_full = to_f32_vec(&l_hidden)?;
+        let kv_full = to_f32_vec(&l_kv)?;
+        let vocab = self.cfg.vocab;
+        let mut new_kv = Vec::with_capacity(l2 * n * d);
+        for layer in 0..l2 {
+            let base = layer * bucket * d;
+            new_kv.extend_from_slice(&kv_full[base..base + n * d]);
+        }
+        let out = StepOutput {
+            n,
+            logits: logits_full[..n * vocab].to_vec(),
+            hidden: hidden_full[..n * d].to_vec(),
+            new_kv,
+        };
+        let download_s = t2.elapsed().as_secs_f64();
+
+        let mut st = self.stats.borrow_mut();
+        st.forwards += 1;
+        st.forward_s += exec_s;
+        st.upload_s += upload_s;
+        st.download_s += download_s;
+        let e = st.per_bucket.entry(bucket).or_insert((0, 0.0));
+        let _ = s_sel;
+        e.0 += 1;
+        e.1 += exec_s + upload_s + download_s;
+        Ok(out)
+    }
+
+    /// Medusa-baseline heads: hidden row -> [K][vocab] logits.
+    pub fn medusa_heads(&self, hidden: &[f32]) -> Result<Vec<Vec<f32>>> {
+        let m = self
+            .medusa
+            .as_ref()
+            .ok_or_else(|| anyhow!("model has no medusa heads artifact"))?;
+        let d = self.cfg.d_model;
+        if hidden.len() != d {
+            bail!("medusa_heads: hidden len {} != d {}", hidden.len(), d);
+        }
+        let lit = lit_f32(hidden, &[d])?;
+        let hb = self
+            .client
+            .buffer_from_host_literal(None, &lit)
+            .map_err(|e| anyhow!("uploading hidden: {e}"))?;
+        let mut args: Vec<&PjRtBuffer> = vec![&hb];
+        args.extend(m.bufs.iter());
+        let outs = m
+            .exe
+            .execute_b::<&PjRtBuffer>(&args)
+            .map_err(|e| anyhow!("medusa heads: {e}"))?;
+        let lit = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching medusa output: {e}"))?;
+        let flat = to_f32_vec(&lit.to_tuple1().map_err(|e| anyhow!("{e}"))?)?;
+        let v = self.cfg.vocab;
+        Ok(flat.chunks(v).map(|c| c.to_vec()).collect())
+    }
+
+    pub fn buckets(&self) -> Vec<usize> {
+        let mut b: Vec<usize> = self.executables.keys().map(|&(n, _)| n).collect();
+        b.sort_unstable();
+        b.dedup();
+        b
+    }
+
+    pub fn kv_buckets(&self) -> &[usize] {
+        &self.kv_buckets
+    }
+
+    pub fn take_stats(&self) -> RuntimeStats {
+        std::mem::take(&mut *self.stats.borrow_mut())
+    }
+}
+
+/// Load the top-level artifacts manifest.
+pub fn load_manifest(root: &std::path::Path) -> Result<Json> {
+    Json::from_file(&root.join("manifest.json"))
+        .context("artifacts/manifest.json missing — run `make artifacts`")
+}

@@ -1,0 +1,131 @@
+//! Weight loading: `weights.bin` (flat f32 LE) + `weights.json` manifest,
+//! in the exact parameter order the AOT'd HLO expects (the order contract
+//! is `compile.model.weight_names` on the python side).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct WeightEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset_f32: usize,
+    pub len_f32: usize,
+}
+
+#[derive(Debug)]
+pub struct Weights {
+    pub entries: Vec<WeightEntry>,
+    pub data: Vec<f32>,
+}
+
+impl Weights {
+    pub fn load(bin: &Path, manifest: &Path) -> Result<Self> {
+        let j = Json::from_file(manifest)?;
+        let mut entries = Vec::new();
+        for e in j.as_arr()? {
+            entries.push(WeightEntry {
+                name: e.req("name")?.as_str()?.to_string(),
+                shape: e
+                    .req("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .collect::<Result<_>>()?,
+                offset_f32: e.req("offset_f32")?.as_usize()?,
+                len_f32: e.req("len_f32")?.as_usize()?,
+            });
+        }
+        let bytes = std::fs::read(bin)
+            .with_context(|| format!("reading {}", bin.display()))?;
+        if bytes.len() % 4 != 0 {
+            bail!("weights.bin size {} not a multiple of 4", bytes.len());
+        }
+        let mut data = vec![0f32; bytes.len() / 4];
+        for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+            data[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+        }
+        let total: usize = entries.iter().map(|e| e.len_f32).sum();
+        if total != data.len() {
+            bail!("manifest covers {total} f32s but bin has {}", data.len());
+        }
+        // validate contiguity + shape/len agreement
+        let mut off = 0;
+        for e in &entries {
+            if e.offset_f32 != off {
+                bail!("non-contiguous weight '{}' at {}", e.name, e.offset_f32);
+            }
+            let prod: usize = e.shape.iter().product();
+            if prod != e.len_f32 {
+                bail!("weight '{}' shape {:?} != len {}", e.name, e.shape, e.len_f32);
+            }
+            off += e.len_f32;
+        }
+        Ok(Weights { entries, data })
+    }
+
+    pub fn slice(&self, e: &WeightEntry) -> &[f32] {
+        &self.data[e.offset_f32..e.offset_f32 + e.len_f32]
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<(&WeightEntry, &[f32])> {
+        let e = self.entries.iter().find(|e| e.name == name)?;
+        Some((e, self.slice(e)))
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fixture(dir: &Path) -> (std::path::PathBuf, std::path::PathBuf) {
+        std::fs::create_dir_all(dir).unwrap();
+        let bin = dir.join("w.bin");
+        let man = dir.join("w.json");
+        let data: Vec<f32> = (0..10).map(|x| x as f32).collect();
+        let bytes: Vec<u8> = data.iter().flat_map(|f| f.to_le_bytes()).collect();
+        std::fs::write(&bin, bytes).unwrap();
+        std::fs::write(
+            &man,
+            r#"[{"name":"a","shape":[2,3],"offset_f32":0,"len_f32":6},
+               {"name":"b","shape":[4],"offset_f32":6,"len_f32":4}]"#,
+        )
+        .unwrap();
+        (bin, man)
+    }
+
+    #[test]
+    fn loads_and_slices() {
+        let dir = std::env::temp_dir().join("ppd_w_test");
+        let (bin, man) = write_fixture(&dir);
+        let w = Weights::load(&bin, &man).unwrap();
+        assert_eq!(w.entries.len(), 2);
+        let (e, s) = w.by_name("b").unwrap();
+        assert_eq!(e.shape, vec![4]);
+        assert_eq!(s, &[6.0, 7.0, 8.0, 9.0]);
+        assert_eq!(w.total_bytes(), 40);
+    }
+
+    #[test]
+    fn rejects_bad_manifest() {
+        let dir = std::env::temp_dir().join("ppd_w_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let bin = dir.join("w.bin");
+        std::fs::write(&bin, [0u8; 8]).unwrap();
+        let man = dir.join("w.json");
+        // len mismatch with shape
+        std::fs::write(
+            &man,
+            r#"[{"name":"a","shape":[3],"offset_f32":0,"len_f32":2}]"#,
+        )
+        .unwrap();
+        assert!(Weights::load(&bin, &man).is_err());
+    }
+}

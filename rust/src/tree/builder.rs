@@ -1,0 +1,321 @@
+//! Dynamic-sparse-tree construction (paper §4.2):
+//!
+//! 1. **Optimal candidate trees** per depth cap `k` — greedy frontier
+//!    expansion that always adds the unadded node with the highest path
+//!    probability (the Medusa/Sequoia algorithm).  Path probability of a
+//!    rank-path (r_1..r_j) is `Π_d exact[d][r_d]` under the independence
+//!    approximation (Prop 4.1).
+//! 2. **Appending prompt tokens** — attach the maximum `m` to every
+//!    candidate (and always `m` to the root, which feeds the next step
+//!    whenever verification stops at the root).
+//! 3. **Greedy prompt-token removal** — repeatedly remove the prompt
+//!    token with the smallest ΔF = p(c)·(f(T_i) − f(T_{i−1})) until the
+//!    prompt budget holds (Prop 4.3).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+use super::{SparseTree, TreeNode};
+
+/// Acceptance statistics estimated on the validation set
+/// (`python/train/eval_accept.py` -> `accept_stats.json`).
+#[derive(Debug, Clone)]
+pub struct AcceptStats {
+    /// exact[d][r]: P(rank-(r+1) guess at distance d+1 is the true token)
+    pub exact: Vec<Vec<f64>>,
+    /// accumulative top-k accuracy (Fig 6 series)
+    pub cum: Vec<Vec<f64>>,
+    /// next-token (LM head) rank accuracies — distance 0
+    pub lm_exact: Vec<f64>,
+}
+
+impl AcceptStats {
+    pub fn load(path: &Path, method: &str) -> Result<AcceptStats> {
+        let j = Json::from_file(path)?;
+        let sec = j
+            .get(method)
+            .with_context(|| format!("accept stats for '{method}' missing in {}", path.display()))?;
+        let lm = j.req("lm")?;
+        Ok(AcceptStats {
+            exact: sec.req("exact")?.as_f64_mat()?,
+            cum: sec.req("cum")?.as_f64_mat()?,
+            lm_exact: lm.req("exact")?.as_f64_mat()?.into_iter().next().unwrap_or_default(),
+        })
+    }
+
+    /// Max usable candidate depth.
+    pub fn max_depth(&self) -> usize {
+        self.exact.len()
+    }
+
+    /// Acceptance probability of a rank-`r` candidate at depth `d`
+    /// (1-based depth; clamped to the table).
+    pub fn p(&self, depth: usize, rank: usize) -> f64 {
+        if depth == 0 || depth > self.exact.len() {
+            return 0.0;
+        }
+        self.exact[depth - 1].get(rank).copied().unwrap_or(0.0)
+    }
+
+    /// Synthetic stats for tests/simulations: geometric decay over rank
+    /// and distance.  Rank rows are capped so exact-rank probabilities
+    /// (disjoint events) sum below 1, like real measurements.
+    pub fn synthetic(m: usize, top1: f64, rank_decay: f64, dist_decay: f64) -> AcceptStats {
+        let mut exact = Vec::new();
+        for d in 0..m {
+            let base = top1 * dist_decay.powi(d as i32);
+            let mut row: Vec<f64> = (0..10).map(|r| base * rank_decay.powi(r as i32)).collect();
+            let sum: f64 = row.iter().sum();
+            if sum > 0.95 {
+                for x in row.iter_mut() {
+                    *x *= 0.95 / sum;
+                }
+            }
+            exact.push(row);
+        }
+        let cum = exact
+            .iter()
+            .map(|row| {
+                row.iter()
+                    .scan(0.0, |acc, &x| {
+                        *acc += x;
+                        Some(*acc)
+                    })
+                    .collect()
+            })
+            .collect();
+        let lm_exact: Vec<f64> = (0..10).map(|r| 0.8 * rank_decay.powi(r as i32)).collect();
+        AcceptStats { exact, cum, lm_exact }
+    }
+}
+
+#[derive(PartialEq)]
+struct Frontier {
+    value: f64,
+    depth: usize,
+    rank: usize,
+    parent: usize,
+}
+
+impl Eq for Frontier {}
+
+impl Ord for Frontier {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.value
+            .partial_cmp(&other.value)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.depth.cmp(&self.depth))
+            .then_with(|| other.rank.cmp(&self.rank))
+    }
+}
+
+impl PartialOrd for Frontier {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Step 1: candidate-only optimal tree with `n_candidates` nodes, depth
+/// capped at `k`, using top-`top_r` ranks per level.
+pub fn build_candidate_tree(
+    stats: &AcceptStats,
+    k: usize,
+    n_candidates: usize,
+    top_r: usize,
+) -> SparseTree {
+    let mut nodes = vec![TreeNode { parent: usize::MAX, depth: 0, rank: 0, prompt_len: 0 }];
+    let mut path_prob = vec![1.0f64];
+    let mut heap = BinaryHeap::new();
+    if k >= 1 {
+        heap.push(Frontier { value: stats.p(1, 0), depth: 1, rank: 0, parent: 0 });
+    }
+    while nodes.len() - 1 < n_candidates {
+        let Some(f) = heap.pop() else { break };
+        if f.value <= 0.0 {
+            break;
+        }
+        let idx = nodes.len();
+        nodes.push(TreeNode { parent: f.parent, depth: f.depth, rank: f.rank, prompt_len: 0 });
+        path_prob.push(f.value);
+        // next sibling (same parent, next rank)
+        if f.rank + 1 < top_r {
+            let parent_val = path_prob[f.parent];
+            heap.push(Frontier {
+                value: parent_val * stats.p(f.depth, f.rank + 1),
+                depth: f.depth,
+                rank: f.rank + 1,
+                parent: f.parent,
+            });
+        }
+        // first child
+        if f.depth < k {
+            heap.push(Frontier {
+                value: f.value * stats.p(f.depth + 1, 0),
+                depth: f.depth + 1,
+                rank: 0,
+                parent: idx,
+            });
+        }
+    }
+    SparseTree { nodes, state: k }
+}
+
+/// Path probability of every node (root = 1).
+pub fn path_probs(tree: &SparseTree, stats: &AcceptStats) -> Vec<f64> {
+    let mut probs = vec![0.0; tree.nodes.len()];
+    probs[0] = 1.0;
+    for (i, n) in tree.nodes.iter().enumerate().skip(1) {
+        probs[i] = probs[n.parent] * stats.p(n.depth, n.rank);
+    }
+    probs
+}
+
+/// Prop 4.1: f(T) = expected number of accepted *candidate* tokens.
+pub fn expected_accepted(tree: &SparseTree, stats: &AcceptStats) -> f64 {
+    path_probs(tree, stats).iter().skip(1).sum()
+}
+
+/// Steps 2+3: attach `m` prompt tokens everywhere, then greedily remove
+/// the lowest-ΔF prompt token until at most `budget` prompt tokens
+/// remain.  The root's chain is pinned at `m` (it feeds the next step
+/// whenever verification stops at the root) and candidate chains never
+/// drop below `min_chain`.
+///
+/// `f_by_state[i]` is f(T_i) — the next-step candidate value if the
+/// accepted node carries `i` prompt tokens (f_by_state[0] = 0).
+pub fn attach_and_prune_prompts(
+    tree: &mut SparseTree,
+    stats: &AcceptStats,
+    m: usize,
+    budget: usize,
+    f_by_state: &[f64],
+    min_chain: usize,
+) {
+    let probs = path_probs(tree, stats);
+    for n in tree.nodes.iter_mut() {
+        n.prompt_len = m;
+    }
+    let f = |i: usize| f_by_state.get(i).copied().unwrap_or(0.0);
+    loop {
+        let total: usize = tree.n_prompt();
+        if total <= budget {
+            break;
+        }
+        // smallest ΔF among candidate nodes with chain > min_chain
+        let mut best: Option<(usize, f64)> = None;
+        for (i, n) in tree.nodes.iter().enumerate().skip(1) {
+            if n.prompt_len > min_chain {
+                let df = probs[i] * (f(n.prompt_len) - f(n.prompt_len - 1));
+                if best.map_or(true, |(_, b)| df < b) {
+                    best = Some((i, df));
+                }
+            }
+        }
+        match best {
+            Some((i, _)) => tree.nodes[i].prompt_len -= 1,
+            None => break, // cannot shrink further (root pinned)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats() -> AcceptStats {
+        AcceptStats::synthetic(3, 0.6, 0.45, 0.7)
+    }
+
+    #[test]
+    fn candidate_tree_is_valid_and_sized() {
+        let t = build_candidate_tree(&stats(), 3, 12, 10);
+        t.validate().unwrap();
+        assert_eq!(t.n_candidates(), 12);
+        assert_eq!(t.state, 3);
+    }
+
+    #[test]
+    fn candidate_tree_prefers_high_prob_nodes() {
+        let t = build_candidate_tree(&stats(), 3, 6, 10);
+        // the first added candidate must be depth-1 rank-0
+        assert_eq!(t.nodes[1].depth, 1);
+        assert_eq!(t.nodes[1].rank, 0);
+        // a depth-2 rank-0 under it beats depth-1 rank-3:
+        // 0.6*0.42 = 0.25 vs 0.6*0.45^3 = 0.054
+        assert!(t
+            .nodes
+            .iter()
+            .any(|n| n.depth == 2 && n.rank == 0));
+    }
+
+    #[test]
+    fn depth_cap_respected() {
+        let t = build_candidate_tree(&stats(), 1, 8, 10);
+        assert!(t.nodes.iter().all(|n| n.depth <= 1));
+    }
+
+    #[test]
+    fn expected_accepted_monotone_in_size() {
+        let s = stats();
+        let f4 = expected_accepted(&build_candidate_tree(&s, 3, 4, 10), &s);
+        let f12 = expected_accepted(&build_candidate_tree(&s, 3, 12, 10), &s);
+        assert!(f12 > f4);
+        assert!(f4 > 0.5); // top-1 alone is 0.6
+    }
+
+    #[test]
+    fn prune_respects_budget_and_pins_root() {
+        let s = stats();
+        let mut t = build_candidate_tree(&s, 3, 8, 10);
+        let f_by_state = [0.0, 0.6, 0.9, 1.1];
+        attach_and_prune_prompts(&mut t, &s, 3, 14, &f_by_state, 1);
+        assert!(t.n_prompt() <= 14);
+        assert_eq!(t.nodes[0].prompt_len, 3);
+        assert!(t.nodes.iter().skip(1).all(|n| n.prompt_len >= 1));
+    }
+
+    #[test]
+    fn prune_removes_from_unlikely_nodes_first() {
+        let s = stats();
+        let mut t = build_candidate_tree(&s, 2, 6, 10);
+        let f_by_state = [0.0, 0.6, 0.9, 1.1];
+        let budget = t.n_candidates() * 3 + 3 - 2;
+        attach_and_prune_prompts(&mut t, &s, 3, budget, &f_by_state, 1);
+        // exactly 2 prompt tokens removed; the most probable candidate
+        // (nodes[1], depth1 rank0) must keep its full chain
+        assert_eq!(t.nodes[1].prompt_len, 3);
+    }
+
+    #[test]
+    fn synthetic_stats_shape() {
+        let s = stats();
+        assert_eq!(s.max_depth(), 3);
+        assert!(s.p(1, 0) > s.p(2, 0));
+        assert!(s.p(1, 0) > s.p(1, 1));
+        assert_eq!(s.p(4, 0), 0.0);
+        assert_eq!(s.p(0, 0), 0.0);
+    }
+
+    #[test]
+    fn load_from_json() {
+        let dir = std::env::temp_dir().join("ppd_stats_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("accept_stats.json");
+        std::fs::write(
+            &p,
+            r#"{"lm":{"exact":[[0.8,0.05]],"cum":[[0.8,0.85]],"n":[10]},
+                "ppd":{"exact":[[0.5,0.1],[0.3,0.08]],
+                        "cum":[[0.5,0.6],[0.3,0.38]],"n":[5,5]}}"#,
+        )
+        .unwrap();
+        let s = AcceptStats::load(&p, "ppd").unwrap();
+        assert_eq!(s.exact[1][0], 0.3);
+        assert_eq!(s.lm_exact[0], 0.8);
+        assert!(AcceptStats::load(&p, "medusa").is_err());
+    }
+}

@@ -1,0 +1,336 @@
+//! The dynamic sparse tree state machine (paper §4, Props 4.1–4.4).
+//!
+//! A `DynamicTreeSet` holds one tree per state `T_0..T_m` (state = the
+//! candidate-subtree depth usable next step = prompt-chain length of the
+//! node where verification stopped), the per-state expected candidate
+//! counts f(T_k) (Prop 4.1), the state-transition matrix p(s_i|s_k)
+//! (derived from the tree structure + acceptance stats), its steady
+//! state, and the amortized value R(T) = Σ π_i f(T_i) (Prop 4.4).
+
+use anyhow::Result;
+
+use super::builder::{
+    attach_and_prune_prompts, build_candidate_tree, expected_accepted, path_probs, AcceptStats,
+};
+use super::{SparseTree, TreeLayout};
+
+#[derive(Debug, Clone)]
+pub struct DynamicTreeSet {
+    /// trees[k] = T_k for k in 0..=m (T_0 = root-only fallback)
+    pub trees: Vec<SparseTree>,
+    pub layouts: Vec<TreeLayout>,
+    /// f(T_k) — Prop 4.1
+    pub f: Vec<f64>,
+    /// transition[k][i] = p(s_i | s_k)
+    pub transition: Vec<Vec<f64>>,
+    /// steady-state distribution π over states 0..=m
+    pub steady: Vec<f64>,
+    /// amortized expected accepted candidates per step — Prop 4.4
+    pub r_value: f64,
+    pub n_candidates: usize,
+    pub n_prompt_budget: usize,
+}
+
+impl DynamicTreeSet {
+    /// Build the full state set for a (candidate, prompt) budget.
+    ///
+    /// `mode` selects the ablation arm of Fig 8a:
+    /// * `Dynamic` — per-node prompt chains pruned by ΔF (the paper)
+    /// * `Static`  — every candidate keeps the full `m`-chain; the
+    ///   candidate budget shrinks to keep the same total size
+    /// * `Random`  — random tree topology with uniform chains
+    pub fn build(
+        stats: &AcceptStats,
+        m: usize,
+        n_candidates: usize,
+        n_prompt_budget: usize,
+        top_r: usize,
+    ) -> Result<DynamicTreeSet> {
+        // f estimates from candidate-only trees (used for ΔF pruning)
+        let f_est: Vec<f64> = (0..=m)
+            .map(|k| {
+                if k == 0 {
+                    0.0
+                } else {
+                    expected_accepted(&build_candidate_tree(stats, k, n_candidates, top_r), stats)
+                }
+            })
+            .collect();
+
+        let mut trees = Vec::with_capacity(m + 1);
+        for k in 0..=m {
+            let mut t = if k == 0 {
+                SparseTree::root_only(m)
+            } else {
+                build_candidate_tree(stats, k, n_candidates, top_r)
+            };
+            if k > 0 {
+                attach_and_prune_prompts(&mut t, stats, m, n_prompt_budget, &f_est, 1);
+            }
+            t.validate()?;
+            trees.push(t);
+        }
+        Self::finish(trees, stats, m, n_candidates, n_prompt_budget)
+    }
+
+    /// Fig 8a "static" arm: full chains everywhere, fewer candidates.
+    pub fn build_static(
+        stats: &AcceptStats,
+        m: usize,
+        total_budget: usize,
+        top_r: usize,
+    ) -> Result<DynamicTreeSet> {
+        // every candidate costs 1 + m tokens
+        let n_candidates = (total_budget.saturating_sub(m)) / (1 + m);
+        let mut trees = Vec::new();
+        for k in 0..=m {
+            let mut t = if k == 0 {
+                SparseTree::root_only(m)
+            } else {
+                build_candidate_tree(stats, k, n_candidates.max(1), top_r)
+            };
+            for n in t.nodes.iter_mut() {
+                n.prompt_len = m;
+            }
+            t.validate()?;
+            trees.push(t);
+        }
+        let np = trees[m].n_prompt();
+        Self::finish(trees, stats, m, n_candidates, np)
+    }
+
+    /// Fig 8a "random" arm: random topology, uniform chains.
+    pub fn build_random(
+        stats: &AcceptStats,
+        m: usize,
+        n_candidates: usize,
+        n_prompt_budget: usize,
+        rng: &mut crate::util::rng::Rng,
+    ) -> Result<DynamicTreeSet> {
+        let mut trees = Vec::new();
+        for k in 0..=m {
+            let mut t = SparseTree::root_only(m);
+            if k > 0 {
+                t.state = k;
+                for _ in 0..n_candidates {
+                    // random parent among existing nodes with depth < k
+                    let parents: Vec<usize> = t
+                        .nodes
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, n)| n.depth < k)
+                        .map(|(i, _)| i)
+                        .collect();
+                    let p = parents[rng.below(parents.len())];
+                    let depth = t.nodes[p].depth + 1;
+                    let rank = t.nodes.iter().filter(|n| n.parent == p).count();
+                    t.nodes.push(super::TreeNode { parent: p, depth, rank, prompt_len: 0 });
+                }
+                // uniform chains within budget
+                let per = (n_prompt_budget / (n_candidates + 1)).max(1).min(m);
+                for n in t.nodes.iter_mut() {
+                    n.prompt_len = per;
+                }
+                t.nodes[0].prompt_len = m;
+            }
+            t.validate()?;
+            trees.push(t);
+        }
+        Self::finish(trees, stats, m, n_candidates, n_prompt_budget)
+    }
+
+    fn finish(
+        trees: Vec<SparseTree>,
+        stats: &AcceptStats,
+        m: usize,
+        n_candidates: usize,
+        n_prompt_budget: usize,
+    ) -> Result<DynamicTreeSet> {
+        let f: Vec<f64> = trees.iter().map(|t| expected_accepted(t, stats)).collect();
+        let transition: Vec<Vec<f64>> =
+            trees.iter().map(|t| transition_row(t, stats, m)).collect();
+        let steady = steady_state(&transition);
+        let r_value: f64 = steady.iter().zip(&f).map(|(p, f)| p * f).sum();
+        let layouts = trees.iter().map(|t| t.layout()).collect();
+        Ok(DynamicTreeSet {
+            trees,
+            layouts,
+            f,
+            transition,
+            steady,
+            r_value,
+            n_candidates,
+            n_prompt_budget,
+        })
+    }
+
+    /// Amortized acceptance length τ = 1 bonus token + R (Prop 4.4).
+    pub fn tau(&self) -> f64 {
+        1.0 + self.r_value
+    }
+
+    /// Expected input length across states (weighted by steady state).
+    pub fn expected_input_len(&self) -> f64 {
+        self.steady
+            .iter()
+            .zip(&self.trees)
+            .map(|(p, t)| p * t.input_len() as f64)
+            .sum()
+    }
+
+    /// Largest input length over states (the bucket serving must fit).
+    pub fn max_input_len(&self) -> usize {
+        self.trees.iter().map(|t| t.input_len()).max().unwrap_or(1)
+    }
+
+    /// Tree-size tuple like the paper's S_tr column.
+    pub fn size_tuple(&self) -> Vec<usize> {
+        self.trees.iter().skip(1).map(|t| t.nodes.len() + t.n_prompt() - 1).collect()
+    }
+}
+
+/// P(verification stops at node v) for every node, under the
+/// independence approximation: pathprob(v) × (1 − Σ_children p(child)).
+pub fn stop_probs(tree: &SparseTree, stats: &AcceptStats) -> Vec<f64> {
+    let probs = path_probs(tree, stats);
+    let mut child_mass = vec![0.0; tree.nodes.len()];
+    for n in tree.nodes.iter().skip(1) {
+        child_mass[n.parent] += stats.p(n.depth, n.rank);
+    }
+    probs
+        .iter()
+        .zip(&child_mass)
+        .map(|(&p, &c)| p * (1.0 - c.min(1.0)))
+        .collect()
+}
+
+/// Transition row for state k: p(s_i | s_k) = Σ over nodes whose chain
+/// length is i of P(stop at node).
+fn transition_row(tree: &SparseTree, stats: &AcceptStats, m: usize) -> Vec<f64> {
+    let stops = stop_probs(tree, stats);
+    let mut row = vec![0.0; m + 1];
+    for (node, &p) in tree.nodes.iter().zip(&stops) {
+        row[node.prompt_len.min(m)] += p;
+    }
+    // normalize (safety against truncation error)
+    let s: f64 = row.iter().sum();
+    if s > 0.0 {
+        for x in &mut row {
+            *x /= s;
+        }
+    }
+    row
+}
+
+/// Power iteration for the steady state of a row-stochastic matrix.
+pub fn steady_state(transition: &[Vec<f64>]) -> Vec<f64> {
+    let n = transition.len();
+    let mut pi = vec![1.0 / n as f64; n];
+    for _ in 0..200 {
+        let mut next = vec![0.0; n];
+        for (k, row) in transition.iter().enumerate() {
+            for (i, &p) in row.iter().enumerate() {
+                next[i] += pi[k] * p;
+            }
+        }
+        let s: f64 = next.iter().sum();
+        for x in &mut next {
+            *x /= s.max(1e-12);
+        }
+        let delta: f64 = next.iter().zip(&pi).map(|(a, b)| (a - b).abs()).sum();
+        pi = next;
+        if delta < 1e-12 {
+            break;
+        }
+    }
+    pi
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats() -> AcceptStats {
+        AcceptStats::synthetic(3, 0.6, 0.45, 0.7)
+    }
+
+    #[test]
+    fn builds_all_states() {
+        let set = DynamicTreeSet::build(&stats(), 3, 10, 16, 10).unwrap();
+        assert_eq!(set.trees.len(), 4);
+        assert_eq!(set.trees[0].n_candidates(), 0);
+        assert_eq!(set.trees[3].n_candidates(), 10);
+        assert!(set.trees[3].n_prompt() <= 16);
+        assert!(set.tau() > 1.0);
+    }
+
+    #[test]
+    fn f_monotone_in_state_depth() {
+        let set = DynamicTreeSet::build(&stats(), 3, 10, 16, 10).unwrap();
+        assert_eq!(set.f[0], 0.0);
+        assert!(set.f[1] <= set.f[2] + 1e-9);
+        assert!(set.f[2] <= set.f[3] + 1e-9);
+    }
+
+    #[test]
+    fn transition_rows_stochastic() {
+        let set = DynamicTreeSet::build(&stats(), 3, 10, 16, 10).unwrap();
+        for row in &set.transition {
+            let s: f64 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9, "{row:?}");
+            assert!(row.iter().all(|&p| (0.0..=1.0).contains(&p)));
+        }
+    }
+
+    #[test]
+    fn steady_state_fixed_point() {
+        let t = vec![vec![0.9, 0.1], vec![0.5, 0.5]];
+        let pi = steady_state(&t);
+        // analytic: pi0 = 5/6
+        assert!((pi[0] - 5.0 / 6.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn stop_probs_sum_to_one() {
+        let s = stats();
+        let t = build_candidate_tree(&s, 3, 10, 10);
+        let stops = stop_probs(&t, &s);
+        let total: f64 = stops.iter().sum();
+        assert!((total - 1.0).abs() < 0.2, "{total}"); // approx (independence)
+        // the root retains the no-child-accepted mass
+        assert!(stops[0] > 0.01);
+    }
+
+    #[test]
+    fn dynamic_beats_static_at_same_budget() {
+        // The Fig 8a claim: at the same total tree size, dynamic trees
+        // achieve a higher amortized value.
+        let s = stats();
+        let dyn_set = DynamicTreeSet::build(&s, 3, 12, 20, 10).unwrap();
+        let total = dyn_set.size_tuple().iter().max().copied().unwrap();
+        let static_set = DynamicTreeSet::build_static(&s, 3, total, 10).unwrap();
+        assert!(
+            dyn_set.tau() >= static_set.tau() - 1e-9,
+            "dyn {} vs static {}",
+            dyn_set.tau(),
+            static_set.tau()
+        );
+    }
+
+    #[test]
+    fn random_tree_is_worse() {
+        let s = stats();
+        let mut rng = crate::util::rng::Rng::new(1);
+        let dyn_set = DynamicTreeSet::build(&s, 3, 12, 20, 10).unwrap();
+        let rand_set = DynamicTreeSet::build_random(&s, 3, 12, 20, &mut rng).unwrap();
+        assert!(dyn_set.tau() >= rand_set.tau());
+    }
+
+    #[test]
+    fn size_tuple_matches_trees() {
+        let set = DynamicTreeSet::build(&stats(), 3, 8, 12, 10).unwrap();
+        let tup = set.size_tuple();
+        assert_eq!(tup.len(), 3);
+        assert_eq!(tup[2], set.trees[3].nodes.len() + set.trees[3].n_prompt() - 1);
+    }
+}

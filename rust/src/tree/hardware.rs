@@ -1,0 +1,159 @@
+//! Hardware-aware tree sizing (paper §4.2 "Hardware-awareness", Fig 8b/8c).
+//!
+//! For a grid of total tree sizes n, search the (n_c, n_p) split that
+//! maximizes the amortized acceptance τ (Prop 4.4), then pick the n that
+//! maximizes the *theoretical speedup*
+//! `Speedup(n) = τ(n) / L_fp(input_len(n)) · L_fp(1)`
+//! with the latency curve `L_fp` measured on this machine (or an
+//! emulated hardware envelope — see `runtime::calibrate`).
+
+use anyhow::{bail, Result};
+
+use crate::runtime::calibrate::Calibration;
+
+use super::builder::AcceptStats;
+use super::dynamic::DynamicTreeSet;
+
+/// One point of the Fig 8b sweep.
+#[derive(Debug, Clone)]
+pub struct SizePoint {
+    pub total_budget: usize,
+    pub n_candidates: usize,
+    pub n_prompt: usize,
+    pub input_len: usize,
+    pub tau: f64,
+    pub latency_s: f64,
+    pub speedup: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct SpeedupModel {
+    pub envelope: String,
+    pub points: Vec<SizePoint>,
+}
+
+impl SpeedupModel {
+    pub fn best(&self) -> Option<&SizePoint> {
+        self.points
+            .iter()
+            .max_by(|a, b| a.speedup.partial_cmp(&b.speedup).unwrap())
+    }
+}
+
+/// Sweep total tree budgets and produce the theoretical-speedup curve.
+///
+/// `budgets` are total tree-token budgets (candidates + prompt tokens,
+/// excluding the root).  For each, candidate counts are scanned and the
+/// split with the best τ kept.
+pub fn sweep(
+    stats: &AcceptStats,
+    m: usize,
+    budgets: &[usize],
+    calib: &Calibration,
+    top_r: usize,
+) -> Result<SpeedupModel> {
+    // vanilla baseline: one-token decode step
+    let l1 = match calib.lookup(1) {
+        Some(l) => l,
+        None => bail!("calibration has no small bucket"),
+    };
+    let mut points = Vec::new();
+    for &budget in budgets {
+        let mut best: Option<(f64, DynamicTreeSet)> = None;
+        let max_nc = budget.saturating_sub(m).max(1);
+        let mut nc = 1;
+        while nc <= max_nc {
+            let np = budget.saturating_sub(nc);
+            if np >= nc.min(m) {
+                if let Ok(set) = DynamicTreeSet::build(stats, m, nc, np, top_r) {
+                    // only feasible if the prompt budget allows >=1 per node
+                    if set.trees[m].n_prompt() <= np + m {
+                        let tau = set.tau();
+                        if best.as_ref().map_or(true, |(t, _)| tau > *t) {
+                            best = Some((tau, set));
+                        }
+                    }
+                }
+            }
+            nc += 1.max(max_nc / 16); // coarse grid for large budgets
+        }
+        let Some((tau, set)) = best else { continue };
+        let input_len = set.max_input_len();
+        let Some(latency) = calib.lookup(input_len) else {
+            continue; // budget exceeds compiled buckets
+        };
+        points.push(SizePoint {
+            total_budget: budget,
+            n_candidates: set.n_candidates,
+            n_prompt: set.trees[m].n_prompt(),
+            input_len,
+            tau,
+            latency_s: latency,
+            speedup: tau * l1 / latency,
+        });
+    }
+    if points.is_empty() {
+        bail!("no feasible tree size in sweep");
+    }
+    Ok(SpeedupModel { envelope: calib.envelope.clone(), points })
+}
+
+/// Default budget grid used by benches + serving auto-config.
+pub fn default_budgets() -> Vec<usize> {
+    vec![4, 7, 11, 15, 23, 31, 47, 63, 95, 127]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn calib(per_token: f64) -> Calibration {
+        let mut latency_s = BTreeMap::new();
+        for b in [1usize, 2, 4, 8, 16, 32, 64, 128, 256] {
+            latency_s.insert(b, 1e-3 + per_token * b as f64);
+        }
+        Calibration { model: "t".into(), envelope: "cpu".into(), latency_s }
+    }
+
+    fn stats() -> AcceptStats {
+        AcceptStats::synthetic(3, 0.6, 0.45, 0.7)
+    }
+
+    #[test]
+    fn sweep_produces_curve() {
+        let m = sweep(&stats(), 3, &default_budgets(), &calib(1e-6), 10).unwrap();
+        assert!(m.points.len() >= 5);
+        let best = m.best().unwrap();
+        assert!(best.speedup > 1.0);
+        assert!(best.tau > 1.0);
+    }
+
+    #[test]
+    fn flat_latency_prefers_bigger_trees() {
+        // when extra tokens are nearly free, bigger budgets win
+        let m = sweep(&stats(), 3, &[7, 63], &calib(1e-9), 10).unwrap();
+        let s7 = m.points.iter().find(|p| p.total_budget == 7).unwrap();
+        let s63 = m.points.iter().find(|p| p.total_budget == 63).unwrap();
+        assert!(s63.speedup >= s7.speedup);
+    }
+
+    #[test]
+    fn steep_latency_prefers_smaller_trees() {
+        // the "slow hardware" envelope: heavy per-token cost
+        let m = sweep(&stats(), 3, &[7, 63], &calib(5e-4), 10).unwrap();
+        let s7 = m.points.iter().find(|p| p.total_budget == 7).unwrap();
+        let s63 = m.points.iter().find(|p| p.total_budget == 63).unwrap();
+        assert!(s7.speedup >= s63.speedup);
+    }
+
+    #[test]
+    fn optimal_size_shifts_with_hardware() {
+        // Fig 8b: different envelopes -> different argmax n
+        let fast = sweep(&stats(), 3, &default_budgets(), &calib(1e-7), 10).unwrap();
+        let slow = sweep(&stats(), 3, &default_budgets(), &calib(1e-3), 10).unwrap();
+        let bf = fast.best().unwrap().total_budget;
+        let bs = slow.best().unwrap().total_budget;
+        assert!(bf >= bs, "fast {bf} vs slow {bs}");
+    }
+}

@@ -1,0 +1,385 @@
+//! Sparse-tree machinery: tree representation, input-layout/attention
+//! bias assembly for a decode step, and the guess-set plumbing between
+//! steps.  The construction algorithms live in `builder`; the dynamic
+//! state machine (Props 4.1–4.4) in `dynamic`; the hardware-aware sizer
+//! in `hardware`.
+//!
+//! A decode-step input is laid out as:
+//!
+//! ```text
+//!   [ root | candidate nodes (tree order) | prompt chains (node order) ]
+//! ```
+//!
+//! The root is the last *emitted* (bonus) token — its KV is not yet in
+//! the cache, so it occupies the first tree slot.  Every candidate node
+//! carries a `prompt_len`-long chain of prompt tokens used to produce
+//! the *next* step's guesses if that node ends up the deepest accepted
+//! one (Fig 3 of the paper).
+
+pub mod builder;
+pub mod dynamic;
+pub mod hardware;
+
+use anyhow::{bail, Result};
+
+use crate::config::PROMPT_ID0;
+use crate::runtime::NEG_INF;
+
+/// One candidate node of a sparse tree.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TreeNode {
+    /// parent node index (`0` = root); root itself has `parent == usize::MAX`
+    pub parent: usize,
+    /// candidate depth, 1-based (root is depth 0)
+    pub depth: usize,
+    /// rank of this candidate among the guesses at its depth (0-based)
+    pub rank: usize,
+    /// number of prompt tokens chained after this node
+    pub prompt_len: usize,
+}
+
+/// A sparse tree: `nodes[0]` is the root; candidates follow in
+/// parent-before-child order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparseTree {
+    pub nodes: Vec<TreeNode>,
+    /// candidate-subtree max depth — the `k` of state `T_k`
+    pub state: usize,
+}
+
+/// Input-token kinds in layout order.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TokKind {
+    Root,
+    /// candidate node index (into `SparseTree::nodes`)
+    Cand(usize),
+    /// (owner node index, chain offset j — predicts distance j+1)
+    Prompt(usize, usize),
+}
+
+/// Flattened layout of a tree for one decode step.
+#[derive(Debug, Clone)]
+pub struct TreeLayout {
+    pub kinds: Vec<TokKind>,
+    /// input index of each node (root = nodes[0])
+    pub node_input: Vec<usize>,
+    /// input indices of each node's prompt chain
+    pub prompt_input: Vec<Vec<usize>>,
+    /// children (node indices) per node
+    pub children: Vec<Vec<usize>>,
+    /// position offset of each input token relative to the root position
+    pub pos_offset: Vec<usize>,
+    /// ancestor input-indices (within the tree, excluding self) per token
+    pub ancestors: Vec<Vec<usize>>,
+}
+
+impl SparseTree {
+    /// Root-only tree (state 0): no candidates, `m` prompt tokens on the
+    /// root.  Used for the first step after prefill and as the fallback
+    /// state.
+    pub fn root_only(m: usize) -> SparseTree {
+        SparseTree {
+            nodes: vec![TreeNode { parent: usize::MAX, depth: 0, rank: 0, prompt_len: m }],
+            state: 0,
+        }
+    }
+
+    pub fn n_candidates(&self) -> usize {
+        self.nodes.len() - 1
+    }
+
+    pub fn n_prompt(&self) -> usize {
+        self.nodes.iter().map(|n| n.prompt_len).sum()
+    }
+
+    /// Total input tokens for the decode step (root + candidates + prompts).
+    pub fn input_len(&self) -> usize {
+        self.nodes.len() + self.n_prompt()
+    }
+
+    /// Validate structural invariants (parents precede children, depths
+    /// consistent, root first).
+    pub fn validate(&self) -> Result<()> {
+        if self.nodes.is_empty() || self.nodes[0].depth != 0 {
+            bail!("tree must start with a depth-0 root");
+        }
+        for (i, n) in self.nodes.iter().enumerate().skip(1) {
+            if n.parent >= i {
+                bail!("node {i} has parent {} not before it", n.parent);
+            }
+            if n.depth != self.nodes[n.parent].depth + 1 {
+                bail!("node {i} depth {} inconsistent with parent", n.depth);
+            }
+            if n.depth > self.state {
+                bail!("node {i} deeper than state {}", self.state);
+            }
+        }
+        Ok(())
+    }
+
+    /// Compute the flattened layout.
+    pub fn layout(&self) -> TreeLayout {
+        let nn = self.nodes.len();
+        let mut kinds = Vec::with_capacity(self.input_len());
+        let mut node_input = vec![0usize; nn];
+        let mut children: Vec<Vec<usize>> = vec![Vec::new(); nn];
+        kinds.push(TokKind::Root);
+        for i in 1..nn {
+            node_input[i] = kinds.len();
+            kinds.push(TokKind::Cand(i));
+            children[self.nodes[i].parent].push(i);
+        }
+        let mut prompt_input: Vec<Vec<usize>> = vec![Vec::new(); nn];
+        for i in 0..nn {
+            for j in 0..self.nodes[i].prompt_len {
+                prompt_input[i].push(kinds.len());
+                kinds.push(TokKind::Prompt(i, j));
+            }
+        }
+
+        // ancestors + positions
+        let mut ancestors: Vec<Vec<usize>> = vec![Vec::new(); kinds.len()];
+        let mut pos_offset = vec![0usize; kinds.len()];
+        // node ancestor chains (input indices)
+        let mut node_anc: Vec<Vec<usize>> = vec![Vec::new(); nn];
+        for i in 1..nn {
+            let p = self.nodes[i].parent;
+            let mut a = node_anc[p].clone();
+            a.push(node_input[p]);
+            node_anc[i] = a;
+        }
+        for (t, kind) in kinds.iter().enumerate() {
+            match *kind {
+                TokKind::Root => {
+                    pos_offset[t] = 0;
+                }
+                TokKind::Cand(i) => {
+                    pos_offset[t] = self.nodes[i].depth;
+                    ancestors[t] = node_anc[i].clone();
+                }
+                TokKind::Prompt(i, j) => {
+                    pos_offset[t] = self.nodes[i].depth + 1 + j;
+                    let mut a = node_anc[i].clone();
+                    a.push(node_input[i]);
+                    // earlier prompt tokens of the same chain
+                    a.extend(prompt_input[i][..j].iter().copied());
+                    ancestors[t] = a;
+                }
+            }
+        }
+        TreeLayout { kinds, node_input, prompt_input, children, pos_offset, ancestors }
+    }
+}
+
+/// Per-step guesses: for each token distance d (1-based), the top-R
+/// candidate tokens with their probabilities, extracted from the prompt
+/// chain of the previously accepted node.
+#[derive(Debug, Clone, Default)]
+pub struct GuessSet {
+    /// guesses[d-1] = Vec<(token, prob)> sorted by prob descending
+    pub per_distance: Vec<Vec<(u32, f32)>>,
+}
+
+impl GuessSet {
+    pub fn depth(&self) -> usize {
+        self.per_distance.len()
+    }
+
+    pub fn token_at(&self, depth: usize, rank: usize) -> Option<u32> {
+        self.per_distance
+            .get(depth - 1)
+            .and_then(|v| v.get(rank))
+            .map(|&(t, _)| t)
+    }
+}
+
+/// Assembled inputs for one decode step over a tree.
+#[derive(Debug, Clone)]
+pub struct StepInputs {
+    pub tokens: Vec<u32>,
+    pub pos: Vec<u32>,
+    pub slots: Vec<u32>,
+    pub bias: Vec<f32>,
+}
+
+/// Fill tokens/pos/slots/bias for a decode step.
+///
+/// * `root_token` — the bonus token emitted by the previous step
+/// * `guesses` — token values per (depth, rank); candidates whose guess
+///   is missing (shallow guess set) get the root token and zero
+///   acceptance chance — callers should pass trees whose state matches
+///   `guesses.depth()`.
+/// * `committed` — cache rows already finalized; root goes to slot
+///   `committed`, tree token i to `committed + i`.
+pub fn assemble_step(
+    tree: &SparseTree,
+    layout: &TreeLayout,
+    guesses: &GuessSet,
+    root_token: u32,
+    root_pos: u32,
+    committed: usize,
+    max_ctx: usize,
+) -> Result<StepInputs> {
+    let n = tree.input_len();
+    if committed + n + 1 >= max_ctx {
+        bail!("tree of {n} tokens does not fit: committed={committed} max_ctx={max_ctx}");
+    }
+    let mut tokens = Vec::with_capacity(n);
+    let mut pos = Vec::with_capacity(n);
+    let mut slots = Vec::with_capacity(n);
+    let mut bias = vec![NEG_INF; n * max_ctx];
+
+    for (t, kind) in layout.kinds.iter().enumerate() {
+        let tok = match *kind {
+            TokKind::Root => root_token,
+            TokKind::Cand(i) => {
+                let node = &tree.nodes[i];
+                guesses.token_at(node.depth, node.rank).unwrap_or(root_token)
+            }
+            TokKind::Prompt(_, j) => PROMPT_ID0 + j as u32,
+        };
+        tokens.push(tok);
+        pos.push(root_pos + layout.pos_offset[t] as u32);
+        slots.push((committed + t) as u32);
+        // visibility: committed context + ancestors + self
+        let row = &mut bias[t * max_ctx..(t + 1) * max_ctx];
+        for slot in row.iter_mut().take(committed) {
+            *slot = 0.0;
+        }
+        row[committed + t] = 0.0;
+        if !matches!(kind, TokKind::Root) {
+            row[committed] = 0.0; // root is an ancestor of everything
+        }
+        for &a in &layout.ancestors[t] {
+            row[committed + a] = 0.0;
+        }
+    }
+    Ok(StepInputs { tokens, pos, slots, bias })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// root + 2 depth-1 candidates (ranks 0,1) + 1 depth-2 under the
+    /// first; chains: root 3, node1 2, node2 1, node3 1.
+    pub(crate) fn demo_tree() -> SparseTree {
+        SparseTree {
+            nodes: vec![
+                TreeNode { parent: usize::MAX, depth: 0, rank: 0, prompt_len: 3 },
+                TreeNode { parent: 0, depth: 1, rank: 0, prompt_len: 2 },
+                TreeNode { parent: 0, depth: 1, rank: 1, prompt_len: 1 },
+                TreeNode { parent: 1, depth: 2, rank: 0, prompt_len: 1 },
+            ],
+            state: 2,
+        }
+    }
+
+    fn demo_guesses() -> GuessSet {
+        GuessSet {
+            per_distance: vec![
+                vec![(65, 0.6), (66, 0.2)],
+                vec![(67, 0.5)],
+            ],
+        }
+    }
+
+    #[test]
+    fn counts_and_validate() {
+        let t = demo_tree();
+        t.validate().unwrap();
+        assert_eq!(t.n_candidates(), 3);
+        assert_eq!(t.n_prompt(), 7);
+        assert_eq!(t.input_len(), 11);
+    }
+
+    #[test]
+    fn validate_rejects_bad_parent() {
+        let mut t = demo_tree();
+        t.nodes[1].parent = 3;
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn layout_orders_and_children() {
+        let t = demo_tree();
+        let l = t.layout();
+        assert_eq!(l.kinds[0], TokKind::Root);
+        assert_eq!(l.kinds[1], TokKind::Cand(1));
+        assert_eq!(l.children[0], vec![1, 2]);
+        assert_eq!(l.children[1], vec![3]);
+        assert_eq!(l.prompt_input[0].len(), 3);
+        // prompt chains come after all candidates
+        assert!(l.prompt_input[0][0] > l.node_input[3]);
+    }
+
+    #[test]
+    fn layout_positions() {
+        let t = demo_tree();
+        let l = t.layout();
+        assert_eq!(l.pos_offset[l.node_input[3]], 2);
+        // prompt j of root: offset 1+j
+        assert_eq!(l.pos_offset[l.prompt_input[0][2]], 3);
+        // prompt j of node3 (depth 2): offset 3
+        assert_eq!(l.pos_offset[l.prompt_input[3][0]], 3);
+    }
+
+    #[test]
+    fn ancestors_follow_paths() {
+        let t = demo_tree();
+        let l = t.layout();
+        // node3's ancestors = [root, node1]
+        assert_eq!(l.ancestors[l.node_input[3]], vec![0, l.node_input[1]]);
+        // prompt 1 of node1: ancestors = node1 + prompt 0 of node1
+        let p1 = l.prompt_input[1][1];
+        assert!(l.ancestors[p1].contains(&l.node_input[1]));
+        assert!(l.ancestors[p1].contains(&l.prompt_input[1][0]));
+        // sibling isolation: node2's ancestors exclude node1
+        assert!(!l.ancestors[l.node_input[2]].contains(&l.node_input[1]));
+    }
+
+    #[test]
+    fn assemble_fills_tokens_and_bias() {
+        let t = demo_tree();
+        let l = t.layout();
+        let g = demo_guesses();
+        let s = 64;
+        let inp = assemble_step(&t, &l, &g, 42, 10, 10, s).unwrap();
+        assert_eq!(inp.tokens.len(), 11);
+        assert_eq!(inp.tokens[0], 42);
+        assert_eq!(inp.tokens[1], 65); // depth1 rank0
+        assert_eq!(inp.tokens[2], 66); // depth1 rank1
+        assert_eq!(inp.tokens[3], 67); // depth2 rank0
+        assert_eq!(inp.tokens[l.prompt_input[0][1]], PROMPT_ID0 + 1);
+        assert_eq!(inp.pos[0], 10);
+        assert_eq!(inp.pos[3], 12);
+        assert_eq!(inp.slots[0], 10);
+        assert_eq!(inp.slots[5], 15);
+        // bias row of node3: committed(10) + root(10) + node1(11) + self(13)
+        let row = &inp.bias[3 * s..4 * s];
+        for j in 0..10 {
+            assert_eq!(row[j], 0.0);
+        }
+        assert_eq!(row[10], 0.0);
+        assert_eq!(row[11], 0.0);
+        assert_eq!(row[12], NEG_INF); // sibling node2
+        assert_eq!(row[13], 0.0);
+        assert_eq!(row[14], NEG_INF);
+    }
+
+    #[test]
+    fn assemble_rejects_overflow() {
+        let t = demo_tree();
+        let l = t.layout();
+        let g = demo_guesses();
+        assert!(assemble_step(&t, &l, &g, 1, 60, 60, 64).is_err());
+    }
+
+    #[test]
+    fn root_only_tree() {
+        let t = SparseTree::root_only(3);
+        t.validate().unwrap();
+        assert_eq!(t.input_len(), 4);
+        assert_eq!(t.state, 0);
+    }
+}

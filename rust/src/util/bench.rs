@@ -1,0 +1,122 @@
+//! Tiny benchmark harness (criterion is not vendored).
+//!
+//! Provides warmup + timed iterations with median / mean / p95 stats and
+//! the row-printing used by the `rust/benches/*` binaries to regenerate
+//! the paper's tables and figures.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+    pub total_s: f64,
+}
+
+impl BenchStats {
+    pub fn from_samples(mut samples: Vec<f64>) -> Self {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let total: f64 = samples.iter().sum();
+        BenchStats {
+            iters: n,
+            mean_s: total / n as f64,
+            median_s: samples[n / 2],
+            p95_s: samples[(n as f64 * 0.95) as usize % n],
+            min_s: samples[0],
+            total_s: total,
+        }
+    }
+}
+
+/// Run `f` for `warmup` unrecorded and `iters` recorded iterations.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    BenchStats::from_samples(samples)
+}
+
+/// Time a single invocation.
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let t = Instant::now();
+    let out = f();
+    (out, t.elapsed().as_secs_f64())
+}
+
+/// Fixed-width table printer for bench outputs.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:width$}  ", c, width = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!("{}", widths.iter().map(|w| "-".repeat(*w + 2)).collect::<String>());
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_from_known_samples() {
+        let s = BenchStats::from_samples(vec![3.0, 1.0, 2.0, 4.0, 5.0]);
+        assert_eq!(s.iters, 5);
+        assert_eq!(s.median_s, 3.0);
+        assert_eq!(s.min_s, 1.0);
+        assert!((s.mean_s - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bench_runs_expected_iterations() {
+        let mut count = 0;
+        let s = bench(2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.iters, 5);
+    }
+
+    #[test]
+    fn table_rejects_wrong_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        assert_eq!(t.rows.len(), 1);
+    }
+}

@@ -1,0 +1,77 @@
+//! Dependency-free utilities: JSON, PRNG, bench harness, math helpers.
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+
+/// Numerically-stable softmax over a logits row.
+pub fn softmax(logits: &[f32]) -> Vec<f32> {
+    let m = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let mut out: Vec<f32> = logits.iter().map(|&x| (x - m).exp()).collect();
+    let s: f32 = out.iter().sum();
+    for x in &mut out {
+        *x /= s;
+    }
+    out
+}
+
+/// Index of the maximum element.
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Indices of the top-k elements, descending.
+pub fn topk(xs: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap());
+    idx.truncate(k);
+    idx
+}
+
+/// Shannon entropy of a probability distribution (nats).
+pub fn entropy(probs: &[f32]) -> f32 {
+    probs
+        .iter()
+        .filter(|&&p| p > 0.0)
+        .map(|&p| -p * p.ln())
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn softmax_handles_large_logits() {
+        let p = softmax(&[1000.0, 999.0]);
+        assert!(p[0].is_finite() && p[1].is_finite());
+        assert!(p[0] > p[1]);
+    }
+
+    #[test]
+    fn argmax_topk() {
+        let xs = [0.1, 0.9, 0.5, 0.7];
+        assert_eq!(argmax(&xs), 1);
+        assert_eq!(topk(&xs, 2), vec![1, 3]);
+    }
+
+    #[test]
+    fn entropy_uniform_is_log_n() {
+        let h = entropy(&[0.25; 4]);
+        assert!((h - (4f32).ln()).abs() < 1e-6);
+        assert_eq!(entropy(&[1.0, 0.0]), 0.0);
+    }
+}

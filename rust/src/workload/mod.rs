@@ -1,0 +1,154 @@
+//! Workloads: serving traces written by the build-time python
+//! (`artifacts/traces/*.json`) plus a rust-native synthetic generator
+//! for load tests where the trace pool is too small.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// One request: a prompt and (for quality checks) the reference
+/// continuation the corpus generator produced.
+#[derive(Debug, Clone)]
+pub struct TraceItem {
+    pub prompt: Vec<u32>,
+    pub reference: Vec<u32>,
+}
+
+/// Load a task trace (chat/math/code).
+pub fn load_trace(path: &Path) -> Result<Vec<TraceItem>> {
+    let j = Json::from_file(path).with_context(|| format!("loading trace {}", path.display()))?;
+    let mut out = Vec::new();
+    for item in j.as_arr()? {
+        out.push(TraceItem {
+            prompt: item.req("prompt")?.as_u32_vec()?,
+            reference: item.req("reference")?.as_u32_vec()?,
+        });
+    }
+    if out.is_empty() {
+        bail!("empty trace {}", path.display());
+    }
+    Ok(out)
+}
+
+/// Load the validation token stream (REST datastore, accuracy evals).
+pub fn load_val_stream(root: &Path) -> Result<Vec<u32>> {
+    Json::from_file(&root.join("traces").join("val_ids.json"))?.as_u32_vec()
+}
+
+/// Rust-native synthetic prompt generator mirroring the corpus grammar
+/// (byte-level).  Used by the server example for open-ended load.
+pub struct WorkloadGen {
+    rng: Rng,
+}
+
+const SUBJECTS: &[&str] = &["the sky", "a river", "the moon", "a forest", "the ocean"];
+const ADJECTIVES: &[&str] = &["blue", "calm", "bright", "green", "vast"];
+const TOPICS: &[&str] = &["color", "place", "season", "animal"];
+
+impl WorkloadGen {
+    pub fn new(seed: u64) -> Self {
+        WorkloadGen { rng: Rng::new(seed) }
+    }
+
+    fn zipf<'a>(&mut self, items: &[&'a str]) -> &'a str {
+        let weights: Vec<f64> = (0..items.len()).map(|i| 1.0 / (i + 1) as f64).collect();
+        items[self.rng.weighted(&weights)]
+    }
+
+    pub fn chat_prompt(&mut self) -> Vec<u32> {
+        let t = self.zipf(TOPICS);
+        let a = self.zipf(ADJECTIVES);
+        let s = self.zipf(SUBJECTS);
+        let text = format!(
+            "user: what is your favorite {t}?\nassistant: my favorite {t} is {a} because it reminds me of {s}.\nuser: which {t} do you like the most?\nassistant:"
+        );
+        encode(&text)
+    }
+
+    pub fn math_prompt(&mut self) -> Vec<u32> {
+        let a = self.rng.range(2, 99);
+        let b = self.rng.range(2, 99);
+        let text = format!("calc: {a} + {b} = {} ; calc: {} + {} = ", a + b, a + 1, b);
+        encode(&text)
+    }
+
+    pub fn code_prompt(&mut self) -> Vec<u32> {
+        let text = "def add_a_b(a, b):\n    result = a + b\n    return result\n\ndef add_x_y(x, y):\n";
+        encode(text)
+    }
+
+    pub fn mixed_prompt(&mut self) -> Vec<u32> {
+        match self.rng.below(3) {
+            0 => self.chat_prompt(),
+            1 => self.math_prompt(),
+            _ => self.code_prompt(),
+        }
+    }
+}
+
+/// Byte-level encode (identity over ASCII).
+pub fn encode(text: &str) -> Vec<u32> {
+    text.bytes().filter(|&b| b < 128).map(|b| b as u32).collect()
+}
+
+/// Byte-level decode for display.
+pub fn decode(tokens: &[u32]) -> String {
+    tokens
+        .iter()
+        .filter_map(|&t| {
+            if (32..128).contains(&t) || t == 9 || t == 10 {
+                Some(t as u8 as char)
+            } else {
+                None
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let s = "calc: 1 + 2 = 3 ;\n";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn encode_drops_non_ascii() {
+        assert_eq!(encode("a\u{00e9}b").len(), 2);
+    }
+
+    #[test]
+    fn generator_is_deterministic() {
+        let mut a = WorkloadGen::new(5);
+        let mut b = WorkloadGen::new(5);
+        assert_eq!(a.chat_prompt(), b.chat_prompt());
+        assert_eq!(a.math_prompt(), b.math_prompt());
+    }
+
+    #[test]
+    fn prompts_are_ascii_tokens() {
+        let mut g = WorkloadGen::new(1);
+        for _ in 0..10 {
+            assert!(g.mixed_prompt().iter().all(|&t| t < 128));
+        }
+    }
+
+    #[test]
+    fn trace_loader_parses() {
+        let dir = std::env::temp_dir().join("ppd_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.json");
+        std::fs::write(&p, r#"[{"prompt":[1,2,3],"reference":[4,5]}]"#).unwrap();
+        let t = load_trace(&p).unwrap();
+        assert_eq!(t[0].prompt, vec![1, 2, 3]);
+        assert_eq!(t[0].reference, vec![4, 5]);
+        std::fs::write(&p, "[]").unwrap();
+        assert!(load_trace(&p).is_err());
+    }
+}
