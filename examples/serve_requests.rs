@@ -1,11 +1,13 @@
 //! End-to-end serving driver (the repo's E2E validation example):
-//! spawns the coordinator worker, loads the trained model, replays the
-//! chat/math/code serving traces as a request stream through the full
-//! stack (queue -> engine -> PJRT -> verification -> KV compaction),
-//! and reports latency/throughput like a serving benchmark.
+//! spawns the multi-worker coordinator, loads the trained model,
+//! replays the chat/math/code serving traces as concurrent request
+//! batches through the full stack (queue -> worker engines -> PJRT ->
+//! verification -> KV compaction, caches pooled), and reports
+//! latency/throughput like a serving benchmark.
 //!
-//!     cargo run --release --example serve_requests [model] [engine]
+//!     cargo run --release --example serve_requests [model] [engine] [workers]
 
+use std::time::Duration;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -20,13 +22,17 @@ fn main() -> Result<()> {
     let root = std::path::PathBuf::from("artifacts");
     let model = std::env::args().nth(1).unwrap_or_else(|| "ppd-m".into());
     let engine = std::env::args().nth(2).unwrap_or_else(|| "ppd".into());
+    let workers: usize = std::env::args()
+        .nth(3)
+        .map(|w| w.parse().expect("workers must be a number"))
+        .unwrap_or(2);
     let kind = EngineKind::parse(&engine)?;
     let max_new = 48;
 
     let cfg = ServeConfig { n_candidates: 6, n_prompt_budget: 10, ..Default::default() };
-    println!("spawning coordinator: model={model} engine={engine}");
+    println!("spawning coordinator: model={model} engine={engine} workers={workers}");
     let draft = matches!(kind, EngineKind::Spec | EngineKind::SpecPpd).then(|| "ppd-d".to_string());
-    let coord = Coordinator::spawn(root.clone(), model.clone(), draft, kind, cfg)?;
+    let coord = Coordinator::spawn(root.clone(), model.clone(), draft, kind, cfg, workers)?;
 
     let mut table = Table::new(&["task", "reqs", "tok", "tok/s", "mean tau", "p50 lat (ms)", "p95 lat (ms)"]);
     let paths = ArtifactPaths::new(root, &model);
@@ -36,13 +42,20 @@ fn main() -> Result<()> {
         let trace = load_trace(&paths.trace(task))?;
         let mut report = ServeReport::new();
         let t0 = Instant::now();
-        for (id, item) in trace.iter().take(16).enumerate() {
-            let t_req = Instant::now();
-            coord.submit(Request { id: id as u64, prompt: item.prompt.clone(), max_new })?;
-            let resp = coord.recv()?;
+        // submit the whole batch up front: workers drain it concurrently
+        // and run_batch reassembles the out-of-order completions by id
+        let reqs: Vec<Request> = trace
+            .iter()
+            .take(16)
+            .enumerate()
+            .map(|(id, item)| Request::new(id as u64, item.prompt.clone(), max_new))
+            .collect();
+        let resps = coord.run_batch(reqs)?;
+        for resp in &resps {
             assert!(resp.error.is_none(), "{:?}", resp.error);
-            report.record_request(resp.tokens.len(), resp.steps, t_req.elapsed());
-            grand.record_request(resp.tokens.len(), resp.steps, t_req.elapsed());
+            let latency = Duration::from_secs_f64(resp.queue_s + resp.prefill_s + resp.decode_s);
+            report.record_request(resp.tokens.len(), resp.steps, latency);
+            grand.record_request(resp.tokens.len(), resp.steps, latency);
         }
         report.wall_s = t0.elapsed().as_secs_f64();
         let h = report.request_latency.as_ref().unwrap();
@@ -59,5 +72,11 @@ fn main() -> Result<()> {
     grand.wall_s = t_all.elapsed().as_secs_f64();
     table.print();
     println!("\noverall: {}", grand.to_json());
+    println!(
+        "queue: {}  caches created: {} (workers: {})",
+        coord.queue_stats().to_json(),
+        coord.caches_created(),
+        coord.workers()
+    );
     Ok(())
 }

@@ -11,6 +11,7 @@ use anyhow::Result;
 
 use ppd::config::{ArtifactPaths, ServeConfig};
 use ppd::coordinator::{build_engine, EngineKind};
+use ppd::decoding::DecodeEngine;
 use ppd::runtime::Runtime;
 use ppd::util::bench::Table;
 use ppd::workload::load_trace;
@@ -29,12 +30,14 @@ fn main() -> Result<()> {
 
     let mut table = Table::new(&["engine", "tok", "target fwd", "draft fwd", "tok/s", "tau"]);
     let mut rows = Vec::new();
+    let mut cache =
+        ppd::kvcache::HostKvCache::new(target.cfg.n_layers, target.cfg.max_ctx, target.cfg.d_model);
     for kind in [EngineKind::Spec, EngineKind::SpecPpd] {
         let mut engine = build_engine(kind, &target, Some(&draft), &paths, &cfg, 0)?;
         let (mut tok, mut steps, mut dsteps, mut time) = (0usize, 0usize, 0usize, 0.0f64);
         let mut outputs = Vec::new();
         for it in &items {
-            let r = engine.generate(&it.prompt, max_new)?;
+            let r = engine.generate_with_cache(&it.prompt, max_new, &mut cache)?;
             tok += r.tokens.len();
             steps += r.steps;
             dsteps += r.draft_steps;

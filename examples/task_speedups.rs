@@ -28,13 +28,16 @@ fn main() -> Result<()> {
         let trace = load_trace(&paths.trace(task))?;
         let items: Vec<_> = trace.iter().take(8).collect();
 
+        // one cache reused across every engine run in this example
+        let mut cache = ppd::kvcache::HostKvCache::new(rt.cfg.n_layers, rt.cfg.max_ctx, rt.cfg.d_model);
+
         // vanilla reference outputs
         let mut vanilla = VanillaEngine::new(&rt, 0.0, 0);
         let mut refs = Vec::new();
         let mut v_tok = 0usize;
         let mut v_time = 0.0;
         for it in &items {
-            let r = vanilla.generate(&it.prompt, max_new)?;
+            let r = vanilla.generate_with_cache(&it.prompt, max_new, &mut cache)?;
             v_tok += r.tokens.len();
             v_time += r.decode_s;
             refs.push(r.tokens);
@@ -48,7 +51,7 @@ fn main() -> Result<()> {
             let mut steps = 0usize;
             let mut exact = true;
             for (it, want) in items.iter().zip(&refs) {
-                let r = engine.generate(&it.prompt, max_new)?;
+                let r = engine.generate_with_cache(&it.prompt, max_new, &mut cache)?;
                 exact &= &r.tokens == want;
                 tok += r.tokens.len();
                 steps += r.steps;

@@ -5,7 +5,7 @@ use std::path::PathBuf;
 
 use ppd::config::{ArtifactPaths, ServeConfig};
 use ppd::coordinator::{build_engine, EngineKind};
-use ppd::decoding::GenerationResult;
+use ppd::decoding::{DecodeEngine, GenerationResult};
 use ppd::runtime::calibrate::Calibration;
 use ppd::runtime::Runtime;
 use ppd::workload::{load_trace, TraceItem};
@@ -59,6 +59,10 @@ pub fn run_engine(
     max_new: usize,
 ) -> anyhow::Result<EngineRun> {
     let mut engine = build_engine(kind, rt, draft, paths, cfg, 0)?;
+    // one cache reused across the whole run (engines borrow per call;
+    // allocating ~MBs per trace item would pollute the measurements)
+    let (l, s, d) = engine.cache_shape();
+    let mut cache = ppd::kvcache::HostKvCache::new(l, s, d);
     let mut agg = EngineRun {
         name: engine.name(),
         tokens: 0,
@@ -69,7 +73,7 @@ pub fn run_engine(
         outputs: Vec::new(),
     };
     for it in items {
-        let r: GenerationResult = engine.generate(&it.prompt, max_new)?;
+        let r: GenerationResult = engine.generate_with_cache(&it.prompt, max_new, &mut cache)?;
         agg.tokens += r.tokens.len();
         agg.steps += r.steps;
         agg.draft_steps += r.draft_steps;

@@ -13,6 +13,7 @@ use ppd::config::{ArtifactPaths, ServeConfig};
 use ppd::coordinator::EngineKind;
 use ppd::decoding::ppd::PpdEngine;
 use ppd::decoding::DecodeEngine;
+use ppd::kvcache::HostKvCache;
 use ppd::runtime::calibrate::Calibration;
 use ppd::runtime::Runtime;
 use ppd::tree::builder::AcceptStats;
@@ -46,9 +47,11 @@ fn main() {
         .into_iter()
         .map(|set| {
             let mut engine = PpdEngine::with_tree_set(&rt, set, &cfg, 0);
+            let (l, s, d) = engine.cache_shape();
+            let mut cache = HostKvCache::new(l, s, d);
             let (mut tok, mut steps) = (0usize, 0usize);
             for it in &items {
-                let r = engine.generate(&it.prompt, max_new).unwrap();
+                let r = engine.generate_with_cache(&it.prompt, max_new, &mut cache).unwrap();
                 tok += r.tokens.len();
                 steps += r.steps;
             }

@@ -1,15 +1,43 @@
-//! L3 coordinator: request queue + worker loop + TCP server.
+//! L3 coordinator: a multi-worker serving layer.
 //!
-//! The PJRT client is not `Send`, so the worker thread *owns* its
-//! `Runtime` and engine — the coordinator hands requests over an mpsc
-//! channel and receives responses on another (vLLM's
-//! router/worker split at miniature scale, batch size 1 per the paper's
-//! evaluation setting).
+//! ```text
+//!   submitters (TCP conns, batch drivers)
+//!        │  submit / try_submit (backpressure)
+//!        ▼
+//!   ┌──────────────┐      ┌───────────────────────────────┐
+//!   │  WorkQueue   │ ───▶ │ worker 0..N: Runtime + engine │──▶ reply
+//!   │ (mutex+cv)   │      │  cache ⇄ SharedCachePool      │    channels
+//!   └──────────────┘      └───────────────────────────────┘
+//! ```
+//!
+//! * The PJRT client is not `Send`, so each worker thread *owns* its
+//!   `Runtime` and engine (vLLM's router/worker split at miniature
+//!   scale).  Workers pull from one shared [`queue::WorkQueue`].
+//! * Completions are **out of order**: every job carries its own reply
+//!   channel, so concurrent submitters each get exactly their
+//!   responses, and [`Coordinator::run_batch`] reassembles batch
+//!   results by request id.
+//! * KV caches are checked out of a [`SharedCachePool`] per request —
+//!   at most one cache allocation per worker, ever — instead of living
+//!   inside engines.
+//! * Each request carries an RNG seed and workers call
+//!   `engine.begin_request(seed)` first, so output is a pure function
+//!   of (prompt, max_new, seed): identical across worker counts and
+//!   placements, byte-identical to the single-worker path.
+//! * Queue depth / backpressure / busy-worker accounting lives in
+//!   [`crate::metrics::QueueStats`].
+//!
+//! Workers are abstracted behind [`WorkerBackend`] so the concurrency
+//! machinery is testable without model artifacts (see
+//! `rust/tests/coordinator.rs`); [`ModelBackend`] is the production
+//! implementation that loads artifacts and builds a real engine.
 
+pub mod queue;
 pub mod request;
 pub mod server;
 
-use std::sync::mpsc;
+use std::collections::HashMap;
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -22,13 +50,19 @@ use crate::decoding::ppd::PpdEngine;
 use crate::decoding::speculative::SpeculativeEngine;
 use crate::decoding::vanilla::VanillaEngine;
 use crate::decoding::DecodeEngine;
+use crate::kvcache::SharedCachePool;
+use crate::metrics::QueueStats;
 use crate::runtime::Runtime;
 use crate::tree::builder::AcceptStats;
 use crate::workload;
 
+use queue::{Job, WorkQueue};
 pub use request::{parse_request_line, Request, Response};
 
-/// Which engine the worker runs.
+/// Soft queue bound per worker used by the backpressure-aware submit.
+pub const DEFAULT_QUEUE_PER_WORKER: usize = 64;
+
+/// Which engine the workers run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EngineKind {
     Vanilla,
@@ -115,108 +149,328 @@ pub fn build_engine<'rt>(
     })
 }
 
-/// Handle to a running worker.
+/// Shared state handed to every worker thread.
+pub struct WorkerCtx {
+    queue: Arc<WorkQueue>,
+    pool: Arc<SharedCachePool>,
+    stats: Arc<QueueStats>,
+    /// one-shot startup signal (taken on first use so a worker that
+    /// panics before signaling drops its sender and fails spawn fast)
+    ready: Mutex<Option<mpsc::Sender<Result<()>>>>,
+}
+
+impl WorkerCtx {
+    fn signal(&self, r: Result<()>) {
+        if let Some(tx) = self.ready.lock().unwrap().take() {
+            let _ = tx.send(r);
+        }
+    }
+
+    /// Report successful startup; unblocks `Coordinator::spawn`.
+    pub fn ready(&self) {
+        self.signal(Ok(()));
+    }
+
+    /// Report failed startup; `Coordinator::spawn` returns this error.
+    pub fn fail(&self, e: anyhow::Error) {
+        self.signal(Err(e));
+    }
+}
+
+/// Builds one worker's engine and serves jobs until the queue closes.
+/// Implementations call `ctx.ready()` (or `ctx.fail(e)`) once setup is
+/// done, then hand their engine to [`serve_jobs`].
+pub trait WorkerBackend: Send + Sync + 'static {
+    fn run(&self, worker: usize, ctx: WorkerCtx);
+}
+
+/// The shared worker loop: pop → checkout cache → seed → generate →
+/// checkin → reply.  Split out of [`WorkerBackend`] impls so mock
+/// backends in tests exercise the exact production path.
+///
+/// A panic inside `generate_with_cache` is caught and turned into an
+/// error response: with the single-threaded mpsc design a dead worker
+/// surfaced as "worker gone", but here a silently-dead worker would
+/// leave queued jobs holding reply senders forever and wedge every
+/// submitter — the worker must outlive any one bad request.
+pub fn serve_jobs(worker: usize, engine: &mut dyn DecodeEngine, ctx: &WorkerCtx) {
+    while let Some(job) = ctx.queue.pop() {
+        ctx.stats.on_dequeue();
+        let queue_s = job.enqueued.elapsed().as_secs_f64();
+        let (l, s, d) = engine.cache_shape();
+        let mut cache = ctx.pool.checkout(l, s, d);
+        engine.begin_request(job.req.seed);
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            engine.generate_with_cache(&job.req.prompt, job.req.max_new, &mut cache)
+        }));
+        let resp = match outcome {
+            Ok(Ok(r)) => Response {
+                id: job.req.id,
+                text: workload::decode(&r.tokens),
+                tau: r.tau(),
+                steps: r.steps,
+                decode_s: r.decode_s,
+                prefill_s: r.prefill_s,
+                queue_s,
+                worker,
+                tokens: r.tokens,
+                error: None,
+            },
+            Ok(Err(e)) => {
+                let mut resp = Response::error(job.req.id, format!("{e:#}"));
+                resp.queue_s = queue_s;
+                resp.worker = worker;
+                resp
+            }
+            Err(panic) => {
+                let msg = panic
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| panic.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "unknown panic".into());
+                let mut resp = Response::error(job.req.id, format!("worker panicked: {msg}"));
+                resp.queue_s = queue_s;
+                resp.worker = worker;
+                resp
+            }
+        };
+        ctx.pool.checkin(cache);
+        ctx.stats.on_complete();
+        // a submitter that went away just discards its response
+        let _ = job.reply.send(resp);
+    }
+}
+
+/// Production backend: loads the model (and optional draft model) from
+/// artifacts and serves with a [`build_engine`] engine.
+pub struct ModelBackend {
+    pub root: std::path::PathBuf,
+    pub model: String,
+    pub draft_model: Option<String>,
+    pub kind: EngineKind,
+    pub cfg: ServeConfig,
+}
+
+impl WorkerBackend for ModelBackend {
+    fn run(&self, worker: usize, ctx: WorkerCtx) {
+        let paths = ArtifactPaths::new(self.root.clone(), &self.model);
+        let rt = match Runtime::load(&paths) {
+            Ok(rt) => rt,
+            Err(e) => return ctx.fail(e),
+        };
+        let draft_rt = match &self.draft_model {
+            Some(dm) => match Runtime::load(&ArtifactPaths::new(self.root.clone(), dm)) {
+                Ok(rt) => Some(rt),
+                Err(e) => return ctx.fail(e),
+            },
+            None => None,
+        };
+        let mut engine =
+            match build_engine(self.kind, &rt, draft_rt.as_ref(), &paths, &self.cfg, worker as u64)
+            {
+                Ok(e) => e,
+                Err(e) => return ctx.fail(e),
+            };
+        ctx.ready();
+        serve_jobs(worker, engine.as_mut(), &ctx);
+    }
+}
+
+/// Handle to a running worker pool.
 pub struct Coordinator {
-    tx: mpsc::Sender<(Request, Instant)>,
-    rx: mpsc::Receiver<Response>,
-    worker: Option<JoinHandle<()>>,
+    queue: Arc<WorkQueue>,
+    pool: Arc<SharedCachePool>,
+    stats: Arc<QueueStats>,
+    collector_tx: mpsc::Sender<Response>,
+    collector_rx: Mutex<mpsc::Receiver<Response>>,
+    queue_capacity: usize,
+    n_workers: usize,
+    workers: Vec<JoinHandle<()>>,
 }
 
 impl Coordinator {
-    /// Spawn a worker that loads the model and serves requests FIFO.
+    /// Spawn `workers` threads, each loading the model and serving
+    /// requests from the shared queue.  Blocks until every worker is
+    /// ready (or one fails).
     pub fn spawn(
         root: std::path::PathBuf,
         model: String,
         draft_model: Option<String>,
         kind: EngineKind,
         cfg: ServeConfig,
+        workers: usize,
     ) -> Result<Coordinator> {
-        let (tx, work_rx) = mpsc::channel::<(Request, Instant)>();
-        let (resp_tx, rx) = mpsc::channel::<Response>();
+        Self::spawn_with_backend(
+            Arc::new(ModelBackend { root, model, draft_model, kind, cfg }),
+            workers,
+        )
+    }
+
+    /// Spawn over an arbitrary backend (tests inject engine mocks here;
+    /// everything above the engine — queue, pool, seeds, routing,
+    /// metrics — is the production code path).
+    pub fn spawn_with_backend(
+        backend: Arc<dyn WorkerBackend>,
+        workers: usize,
+    ) -> Result<Coordinator> {
+        if workers == 0 {
+            return Err(anyhow!("coordinator needs at least one worker"));
+        }
+        let queue = Arc::new(WorkQueue::new());
+        let pool = Arc::new(SharedCachePool::new());
+        let stats = Arc::new(QueueStats::new());
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
 
-        let worker = std::thread::spawn(move || {
-            let paths = ArtifactPaths::new(root.clone(), &model);
-            let rt = match Runtime::load(&paths) {
-                Ok(rt) => rt,
-                Err(e) => {
-                    let _ = ready_tx.send(Err(e));
-                    return;
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let ctx = WorkerCtx {
+                queue: Arc::clone(&queue),
+                pool: Arc::clone(&pool),
+                stats: Arc::clone(&stats),
+                ready: Mutex::new(Some(ready_tx.clone())),
+            };
+            let backend = Arc::clone(&backend);
+            handles.push(std::thread::spawn(move || backend.run(w, ctx)));
+        }
+        drop(ready_tx);
+
+        let mut startup: Result<()> = Ok(());
+        for _ in 0..workers {
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    startup = Err(e);
+                    break;
                 }
-            };
-            let draft_rt = match draft_model {
-                Some(dm) => match Runtime::load(&ArtifactPaths::new(root.clone(), &dm)) {
-                    Ok(rt) => Some(rt),
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return;
-                    }
-                },
-                None => None,
-            };
-            let mut engine = match build_engine(kind, &rt, draft_rt.as_ref(), &paths, &cfg, 0) {
-                Ok(e) => e,
-                Err(e) => {
-                    let _ = ready_tx.send(Err(e));
-                    return;
-                }
-            };
-            let _ = ready_tx.send(Ok(()));
-            while let Ok((req, enqueued)) = work_rx.recv() {
-                let queue_s = enqueued.elapsed().as_secs_f64();
-                let resp = match engine.generate(&req.prompt, req.max_new) {
-                    Ok(r) => Response {
-                        id: req.id,
-                        text: workload::decode(&r.tokens),
-                        tau: r.tau(),
-                        steps: r.steps,
-                        decode_s: r.decode_s,
-                        prefill_s: r.prefill_s,
-                        queue_s,
-                        tokens: r.tokens,
-                        error: None,
-                    },
-                    Err(e) => Response::error(req.id, format!("{e:#}")),
-                };
-                if resp_tx.send(resp).is_err() {
+                Err(_) => {
+                    startup = Err(anyhow!("worker died during startup"));
                     break;
                 }
             }
-        });
-
-        ready_rx
-            .recv()
-            .map_err(|_| anyhow!("worker died during startup"))??;
-        Ok(Coordinator { tx, rx, worker: Some(worker) })
-    }
-
-    pub fn submit(&self, req: Request) -> Result<()> {
-        self.tx
-            .send((req, Instant::now()))
-            .map_err(|_| anyhow!("worker gone"))
-    }
-
-    pub fn recv(&self) -> Result<Response> {
-        self.rx.recv().map_err(|_| anyhow!("worker gone"))
-    }
-
-    /// Submit a batch and collect all responses (FIFO order).
-    pub fn run_batch(&self, reqs: Vec<Request>) -> Result<Vec<Response>> {
-        let n = reqs.len();
-        for r in reqs {
-            self.submit(r)?;
         }
-        (0..n).map(|_| self.recv()).collect()
+        if let Err(e) = startup {
+            queue.close();
+            for h in handles {
+                let _ = h.join();
+            }
+            return Err(e);
+        }
+
+        let (collector_tx, collector_rx) = mpsc::channel();
+        Ok(Coordinator {
+            queue,
+            pool,
+            stats,
+            collector_tx,
+            collector_rx: Mutex::new(collector_rx),
+            queue_capacity: workers * DEFAULT_QUEUE_PER_WORKER,
+            n_workers: workers,
+            workers: handles,
+        })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.n_workers
+    }
+
+    /// Queue/backpressure counters (live).
+    pub fn queue_stats(&self) -> &QueueStats {
+        &self.stats
+    }
+
+    /// Total KV caches the pool ever allocated (≤ worker count).
+    pub fn caches_created(&self) -> usize {
+        self.pool.created()
+    }
+
+    pub fn queue_capacity(&self) -> usize {
+        self.queue_capacity
+    }
+
+    pub fn set_queue_capacity(&mut self, cap: usize) {
+        self.queue_capacity = cap.max(1);
+    }
+
+    /// Submit to the coordinator's own collector; pair with [`recv`].
+    ///
+    /// [`recv`]: Coordinator::recv
+    pub fn submit(&self, req: Request) -> Result<()> {
+        self.submit_routed(req, self.collector_tx.clone())
+    }
+
+    /// Submit with a caller-owned reply channel (one sender per TCP
+    /// connection / batch — the out-of-order completion routing).
+    pub fn submit_routed(&self, req: Request, reply: mpsc::Sender<Response>) -> Result<()> {
+        let job = Job { req, enqueued: Instant::now(), reply };
+        match self.queue.push(job) {
+            Ok(depth) => {
+                self.stats.on_enqueue(depth);
+                Ok(())
+            }
+            Err(_) => Err(anyhow!("coordinator is shut down")),
+        }
+    }
+
+    /// Backpressure-aware submit: `Ok(false)` (and a rejected-counter
+    /// bump) when the queue is at capacity, instead of queueing without
+    /// bound.
+    pub fn try_submit_routed(
+        &self,
+        req: Request,
+        reply: mpsc::Sender<Response>,
+    ) -> Result<bool> {
+        if self.queue.depth() >= self.queue_capacity {
+            self.stats.on_reject();
+            return Ok(false);
+        }
+        self.submit_routed(req, reply)?;
+        Ok(true)
+    }
+
+    /// Next completed response from [`submit`] (completion order, not
+    /// submission order).
+    ///
+    /// [`submit`]: Coordinator::submit
+    pub fn recv(&self) -> Result<Response> {
+        self.collector_rx
+            .lock()
+            .unwrap()
+            .recv()
+            .map_err(|_| anyhow!("workers gone"))
+    }
+
+    /// Submit a batch and collect all responses, reassembled into the
+    /// order of `reqs` by request id (workers complete out of order).
+    pub fn run_batch(&self, reqs: Vec<Request>) -> Result<Vec<Response>> {
+        let order: Vec<u64> = reqs.iter().map(|r| r.id).collect();
+        let n = reqs.len();
+        let (tx, rx) = mpsc::channel();
+        for r in reqs {
+            self.submit_routed(r, tx.clone())?;
+        }
+        drop(tx);
+        let mut by_id: HashMap<u64, Vec<Response>> = HashMap::new();
+        for _ in 0..n {
+            let resp = rx.recv().map_err(|_| anyhow!("workers gone"))?;
+            by_id.entry(resp.id).or_default().push(resp);
+        }
+        order
+            .into_iter()
+            .map(|id| {
+                by_id
+                    .get_mut(&id)
+                    .and_then(|v| v.pop())
+                    .ok_or_else(|| anyhow!("missing response for request {id}"))
+            })
+            .collect()
     }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        // closing tx ends the worker loop
-        let (dead_tx, _) = mpsc::channel();
-        let _ = std::mem::replace(&mut self.tx, dead_tx);
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
+        self.queue.close();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
         }
     }
 }
@@ -233,5 +487,28 @@ mod tests {
         for k in EngineKind::all() {
             EngineKind::parse(k).unwrap();
         }
+    }
+
+    #[test]
+    fn zero_workers_rejected() {
+        struct Noop;
+        impl WorkerBackend for Noop {
+            fn run(&self, _w: usize, ctx: WorkerCtx) {
+                ctx.ready();
+            }
+        }
+        assert!(Coordinator::spawn_with_backend(Arc::new(Noop), 0).is_err());
+    }
+
+    #[test]
+    fn failed_worker_fails_spawn() {
+        struct Failing;
+        impl WorkerBackend for Failing {
+            fn run(&self, _w: usize, ctx: WorkerCtx) {
+                ctx.fail(anyhow!("no artifacts here"));
+            }
+        }
+        let err = Coordinator::spawn_with_backend(Arc::new(Failing), 2).unwrap_err();
+        assert!(format!("{err}").contains("no artifacts"));
     }
 }

@@ -1,0 +1,130 @@
+//! Shared work queue feeding the coordinator's worker threads:
+//! a mutex-protected deque + condvar (std-only — tokio is not in the
+//! offline vendor set).  Submitters push jobs carrying their own reply
+//! channel; workers block on `pop` until a job arrives or the queue is
+//! closed, which is how coordinator shutdown drains the worker pool.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+use super::request::{Request, Response};
+
+/// One unit of work: the request, its enqueue time (queue-latency
+/// accounting), and the channel the worker answers on.  Routing the
+/// reply through a per-job sender is what lets completions arrive out
+/// of order across workers while every submitter still gets exactly the
+/// responses it asked for.
+pub struct Job {
+    pub req: Request,
+    pub enqueued: Instant,
+    pub reply: mpsc::Sender<Response>,
+}
+
+#[derive(Default)]
+struct Inner {
+    jobs: VecDeque<Job>,
+    closed: bool,
+}
+
+/// MPMC queue: many submitters (TCP connections, batch drivers), many
+/// worker consumers.
+#[derive(Default)]
+pub struct WorkQueue {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+}
+
+impl WorkQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Push a job; returns the queue depth after the push, or the job
+    /// back as `Err` if the queue is closed (coordinator shut down).
+    pub fn push(&self, job: Job) -> Result<usize, Job> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(job);
+        }
+        g.jobs.push_back(job);
+        let depth = g.jobs.len();
+        drop(g);
+        self.cv.notify_one();
+        Ok(depth)
+    }
+
+    /// Block until a job is available; `None` once the queue is closed
+    /// and drained.
+    pub fn pop(&self) -> Option<Job> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(job) = g.jobs.pop_front() {
+                return Some(job);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().jobs.len()
+    }
+
+    /// Close the queue: pending jobs still drain, new pushes fail, and
+    /// blocked workers wake up to exit.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn job(id: u64, reply: mpsc::Sender<Response>) -> Job {
+        Job {
+            req: Request { id, prompt: vec![1], max_new: 4, seed: 0 },
+            enqueued: Instant::now(),
+            reply,
+        }
+    }
+
+    #[test]
+    fn fifo_and_depth() {
+        let q = WorkQueue::new();
+        let (tx, _rx) = mpsc::channel();
+        assert_eq!(q.push(job(1, tx.clone())).unwrap(), 1);
+        assert_eq!(q.push(job(2, tx)).unwrap(), 2);
+        assert_eq!(q.depth(), 2);
+        assert_eq!(q.pop().unwrap().req.id, 1);
+        assert_eq!(q.pop().unwrap().req.id, 2);
+        assert_eq!(q.depth(), 0);
+    }
+
+    #[test]
+    fn close_drains_then_stops() {
+        let q = WorkQueue::new();
+        let (tx, _rx) = mpsc::channel();
+        q.push(job(1, tx.clone())).unwrap();
+        q.close();
+        assert!(q.push(job(2, tx)).is_err());
+        assert!(q.pop().is_some()); // pending job still drains
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn close_wakes_blocked_consumers() {
+        let q = Arc::new(WorkQueue::new());
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.pop().is_none());
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        q.close();
+        assert!(h.join().unwrap());
+    }
+}

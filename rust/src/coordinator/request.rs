@@ -7,6 +7,19 @@ pub struct Request {
     pub id: u64,
     pub prompt: Vec<u32>,
     pub max_new: usize,
+    /// Per-request RNG seed: workers call `engine.begin_request(seed)`
+    /// before generating, so sampled output depends only on
+    /// (prompt, max_new, seed) — never on which worker served it or
+    /// what ran on that worker before.
+    pub seed: u64,
+}
+
+impl Request {
+    /// Request with the default per-request seed (derived from the id,
+    /// so concurrent sampled requests do not produce identical text).
+    pub fn new(id: u64, prompt: Vec<u32>, max_new: usize) -> Self {
+        Request { id, prompt, max_new, seed: id }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -19,6 +32,9 @@ pub struct Response {
     pub decode_s: f64,
     pub prefill_s: f64,
     pub queue_s: f64,
+    /// index of the worker that served the request (observability:
+    /// responses complete out of order across workers)
+    pub worker: usize,
     pub error: Option<String>,
 }
 
@@ -33,6 +49,7 @@ impl Response {
             decode_s: 0.0,
             prefill_s: 0.0,
             queue_s: 0.0,
+            worker: 0,
             error: Some(msg),
         }
     }
@@ -47,6 +64,7 @@ impl Response {
             ("decode_s", Json::Num(self.decode_s)),
             ("prefill_s", Json::Num(self.prefill_s)),
             ("queue_s", Json::Num(self.queue_s)),
+            ("worker", Json::Num(self.worker as f64)),
         ];
         if let Some(e) = &self.error {
             pairs.push(("error", Json::str(e)));
@@ -55,7 +73,9 @@ impl Response {
     }
 }
 
-/// Parse a client request line: {"prompt": "...", "max_new": 64}
+/// Parse a client request line:
+/// `{"prompt": "...", "max_new": 64, "seed": 7}`
+/// (`max_new` and `seed` optional; seed defaults per request id).
 pub fn parse_request_line(line: &str, id: u64) -> Result<Request, String> {
     let j = Json::parse(line).map_err(|e| format!("bad json: {e}"))?;
     let prompt_text = j
@@ -66,11 +86,16 @@ pub fn parse_request_line(line: &str, id: u64) -> Result<Request, String> {
         .get("max_new")
         .and_then(|m| m.as_usize().ok())
         .unwrap_or(64);
+    let seed = j
+        .get("seed")
+        .and_then(|s| s.as_usize().ok())
+        .map(|s| s as u64)
+        .unwrap_or(id);
     let prompt = crate::workload::encode(prompt_text);
     if prompt.is_empty() {
         return Err("empty prompt after ascii filtering".into());
     }
-    Ok(Request { id, prompt, max_new })
+    Ok(Request { id, prompt, max_new, seed })
 }
 
 #[cfg(test)]
@@ -83,6 +108,13 @@ mod tests {
         assert_eq!(r.id, 3);
         assert_eq!(r.max_new, 8);
         assert_eq!(r.prompt.len(), 8);
+        assert_eq!(r.seed, 3); // defaults to the request id
+    }
+
+    #[test]
+    fn parses_explicit_seed() {
+        let r = parse_request_line(r#"{"prompt": "x", "seed": 99}"#, 3).unwrap();
+        assert_eq!(r.seed, 99);
     }
 
     #[test]
@@ -103,5 +135,6 @@ mod tests {
         let r = Response::error(7, "boom".into());
         let j = r.to_json();
         assert_eq!(j.req("error").unwrap().as_str().unwrap(), "boom");
+        assert_eq!(j.req("worker").unwrap().as_usize().unwrap(), 0);
     }
 }

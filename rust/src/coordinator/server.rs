@@ -1,13 +1,17 @@
 //! Line-protocol TCP server: one JSON request per line, one JSON
 //! response per line.  std-only (tokio is not in the offline vendor
-//! set); an acceptor thread per connection feeds the single-worker
-//! coordinator — request-level concurrency with model-level FIFO, the
-//! paper's batch-size-1 serving setting.
+//! set).  A thread per connection feeds the multi-worker coordinator
+//! through `try_submit_routed`: each in-flight request carries its own
+//! reply channel, so concurrent connections are served genuinely in
+//! parallel (up to the worker count) and each connection only ever
+//! sees its own responses.  Over-capacity submits get an immediate
+//! `error` response instead of unbounded queueing (backpressure).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
@@ -15,60 +19,128 @@ use super::{parse_request_line, Coordinator, Response};
 
 static NEXT_ID: AtomicU64 = AtomicU64::new(1);
 
-/// Serve forever (or until `max_requests` when Some — used by tests).
+/// How often blocked readers wake to check the shutdown flag.
+const READ_TICK: Duration = Duration::from_millis(200);
+
+/// Serve forever (or until `max_requests` responses when Some — used
+/// by tests).  Connections are accepted concurrently; the listener
+/// polls so it can notice the stop condition reached by handler
+/// threads, and handlers poll their sockets so an idle connection
+/// (open but silent) cannot keep `serve` from returning.
 pub fn serve(coord: Coordinator, addr: &str, max_requests: Option<u64>) -> Result<()> {
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
-    eprintln!("[ppd] serving on {addr}");
-    let coord = Arc::new(Mutex::new(coord));
-    let mut served = 0u64;
-    for stream in listener.incoming() {
-        let stream = stream?;
-        let coord = Arc::clone(&coord);
-        let handled = handle_conn(stream, &coord)?;
-        served += handled;
+    listener
+        .set_nonblocking(true)
+        .context("listener nonblocking")?;
+    eprintln!("[ppd] serving on {addr} ({} workers)", coord.workers());
+    let coord = Arc::new(coord);
+    let served = Arc::new(AtomicU64::new(0));
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    loop {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let coord = Arc::clone(&coord);
+                let served = Arc::clone(&served);
+                let stop = Arc::clone(&stop);
+                handles.push(std::thread::spawn(move || {
+                    if let Err(e) = handle_conn(stream, &coord, &served, &stop) {
+                        eprintln!("[ppd] connection error: {e:#}");
+                    }
+                }));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => return Err(e).context("accept"),
+        }
         if let Some(max) = max_requests {
-            if served >= max {
+            if served.load(Ordering::Relaxed) >= max {
                 break;
             }
+        }
+        handles.retain(|h| !h.is_finished());
+    }
+    stop.store(true, Ordering::Relaxed);
+    for h in handles {
+        let _ = h.join();
+    }
+    Ok(())
+}
+
+/// Handle one connection: requests stream in line by line; responses
+/// stream back in completion order with ids for client-side matching.
+fn handle_conn(
+    stream: TcpStream,
+    coord: &Coordinator,
+    served: &AtomicU64,
+    stop: &AtomicBool,
+) -> Result<()> {
+    // periodic read timeouts let the handler notice `stop` even while
+    // a client holds the connection open without sending anything
+    stream
+        .set_read_timeout(Some(READ_TICK))
+        .context("read timeout")?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    let mut line = String::new();
+    loop {
+        match reader.read_line(&mut line) {
+            Ok(0) => break,
+            Ok(_) => {
+                let trimmed = line.trim();
+                if !trimmed.is_empty() {
+                    let resp = serve_line(coord, trimmed);
+                    writeln!(out, "{}", resp.to_json())?;
+                    served.fetch_add(1, Ordering::Relaxed);
+                }
+                line.clear();
+                // checked here too: an *actively sending* client never
+                // hits the timeout branch, and would otherwise keep
+                // serve(max_requests) from joining this handler
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                // partial line (if any) stays buffered in `line`
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+            }
+            Err(e) => return Err(e).context("reading request line"),
         }
     }
     Ok(())
 }
 
-/// Handle one connection synchronously; returns #requests served.
-/// (The worker is single-threaded anyway — the paper measures batch=1 —
-/// so per-connection threads would only reorder the queue.)
-fn handle_conn(stream: TcpStream, coord: &Arc<Mutex<Coordinator>>) -> Result<u64> {
-    let peer = stream.peer_addr().ok();
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut out = stream;
-    let mut line = String::new();
-    let mut count = 0;
-    loop {
-        line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            break;
-        }
-        let trimmed = line.trim();
-        if trimmed.is_empty() {
-            continue;
-        }
-        let id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
-        let resp = match parse_request_line(trimmed, id) {
-            Ok(req) => {
-                let c = coord.lock().unwrap();
-                match c.submit(req).and_then(|_| c.recv()) {
-                    Ok(r) => r,
-                    Err(e) => Response::error(id, format!("{e:#}")),
-                }
+fn serve_line(coord: &Coordinator, trimmed: &str) -> Response {
+    let id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+    match parse_request_line(trimmed, id) {
+        Ok(req) => {
+            let (tx, rx) = mpsc::channel();
+            match coord.try_submit_routed(req, tx) {
+                Ok(true) => rx
+                    .recv()
+                    .unwrap_or_else(|_| Response::error(id, "workers gone".into())),
+                Ok(false) => Response::error(
+                    id,
+                    format!(
+                        "server overloaded: queue depth {} at capacity {}",
+                        coord.queue_stats().depth(),
+                        coord.queue_capacity()
+                    ),
+                ),
+                Err(e) => Response::error(id, format!("{e:#}")),
             }
-            Err(e) => Response::error(id, e),
-        };
-        writeln!(out, "{}", resp.to_json())?;
-        count += 1;
+        }
+        Err(e) => Response::error(id, e),
     }
-    let _ = peer;
-    Ok(count)
 }
 
 /// Minimal client for examples/tests: send one request, read one line.

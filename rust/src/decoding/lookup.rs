@@ -27,7 +27,7 @@ use crate::tree::{assemble_step, GuessSet, SparseTree, TreeNode};
 use crate::util::rng::Rng;
 
 use super::verify::{verify, VerifyMode};
-use super::{prefill, truncate_at_eos, DecodeEngine, GenerationResult};
+use super::{prefill, record_step, truncate_at_eos, DecodeEngine, GenerationResult};
 
 /// A source of speculative continuation chains.
 pub trait ChainProposer {
@@ -38,6 +38,12 @@ pub trait ChainProposer {
 
     /// Observe newly accepted tokens (lookahead harvests from these).
     fn observe(&mut self, _ctx: &[u32]) {}
+
+    /// Drop state harvested from previous requests (lookahead's n-gram
+    /// pool): without this, one request's generation leaks into the
+    /// next request's proposals and serving output depends on request
+    /// order / worker placement.
+    fn reset(&mut self) {}
 }
 
 /// Find continuations of the longest matching suffix n-gram of `ctx`
@@ -136,6 +142,11 @@ impl ChainProposer for LookaheadProposer {
         self.pool.get(&last).cloned().unwrap_or_default()
     }
 
+    fn reset(&mut self) {
+        self.pool.clear();
+        self.window = 0;
+    }
+
     fn observe(&mut self, ctx: &[u32]) {
         // harvest (key, continuation-span) n-grams from fresh tokens
         let start = self.window;
@@ -195,7 +206,6 @@ pub fn chains_to_tree(chains: &[Vec<u32>], max_depth: usize, max_nodes: usize) -
 pub struct ChainEngine<'rt, P: ChainProposer> {
     rt: &'rt Runtime,
     proposer: P,
-    cache: HostKvCache,
     max_depth: usize,
     max_nodes: usize,
     rng: Rng,
@@ -203,8 +213,7 @@ pub struct ChainEngine<'rt, P: ChainProposer> {
 
 impl<'rt, P: ChainProposer> ChainEngine<'rt, P> {
     pub fn new(rt: &'rt Runtime, proposer: P, max_depth: usize, max_nodes: usize, seed: u64) -> Self {
-        let cache = HostKvCache::new(rt.cfg.n_layers, rt.cfg.max_ctx, rt.cfg.d_model);
-        ChainEngine { rt, proposer, cache, max_depth, max_nodes, rng: Rng::new(seed) }
+        ChainEngine { rt, proposer, max_depth, max_nodes, rng: Rng::new(seed) }
     }
 }
 
@@ -213,44 +222,60 @@ impl<P: ChainProposer> DecodeEngine for ChainEngine<'_, P> {
         self.proposer.name()
     }
 
-    fn generate(&mut self, prompt: &[u32], max_new: usize) -> Result<GenerationResult> {
+    fn cache_shape(&self) -> (usize, usize, usize) {
+        (self.rt.cfg.n_layers, self.rt.cfg.max_ctx, self.rt.cfg.d_model)
+    }
+
+    fn begin_request(&mut self, seed: u64) {
+        self.rng = Rng::new(seed);
+        self.proposer.reset();
+    }
+
+    fn generate_with_cache(
+        &mut self,
+        prompt: &[u32],
+        max_new: usize,
+        cache: &mut HostKvCache,
+    ) -> Result<GenerationResult> {
         let mut res = GenerationResult::default();
-        self.cache.reset();
+        cache.reset();
         let vocab = self.rt.cfg.vocab;
         let max_ctx = self.rt.cfg.max_ctx;
 
         let t0 = Instant::now();
-        let pre = prefill(self.rt, &mut self.cache, prompt)?;
+        let pre = prefill(self.rt, cache, prompt)?;
         res.prefill_s = t0.elapsed().as_secs_f64();
 
         let mut root = crate::util::argmax(pre.logits_row(pre.n - 1, vocab)) as u32;
         res.tokens.push(root);
+        let mut eos_seen = root == crate::config::EOS_ID;
         let mut full_ctx: Vec<u32> = prompt.to_vec();
         full_ctx.push(root);
         self.proposer.observe(&full_ctx);
 
         let t1 = Instant::now();
-        while res.tokens.len() < max_new && !res.tokens.contains(&crate::config::EOS_ID) {
+        while res.tokens.len() < max_new && !eos_seen {
+            let remaining = max_new - res.tokens.len();
             let chains = self.proposer.propose(&full_ctx);
-            let (tree, guesses) = chains_to_tree(&chains, self.max_depth, self.max_nodes);
+            // depth-capped near the budget: a depth-d tree emits at most
+            // d+1 tokens, anything deeper is discarded work
+            let depth = self.max_depth.min(remaining - 1);
+            let (tree, guesses) = chains_to_tree(&chains, depth, self.max_nodes);
             let layout = tree.layout();
-            let committed = self.cache.committed();
+            let committed = cache.committed();
             if committed + tree.input_len() + 2 >= max_ctx {
                 break;
             }
             let inputs = assemble_step(&tree, &layout, &guesses, root, committed as u32, committed, max_ctx)?;
-            let out = self.rt.forward(&inputs.tokens, &inputs.pos, &inputs.slots, &inputs.bias, self.cache.as_slice())?;
-            self.cache.scatter(&out.new_kv, &inputs.slots)?;
+            let out = self.rt.forward(&inputs.tokens, &inputs.pos, &inputs.slots, &inputs.bias, cache.as_slice())?;
+            cache.scatter(&out.new_kv, &inputs.slots)?;
 
             let v = verify(&tree, &layout, &out, &inputs.tokens, VerifyMode::Greedy, vocab, &mut self.rng);
             let mut accepted_slots = vec![inputs.slots[0]];
             accepted_slots.extend(v.accepted_nodes.iter().map(|&n| inputs.slots[layout.node_input[n]]));
-            self.cache.compact(&accepted_slots)?;
+            cache.compact(&accepted_slots)?;
 
-            res.steps += 1;
-            res.accepted_per_step.push(v.emitted.len());
-            res.input_lens.push(tree.input_len());
-            res.tokens.extend_from_slice(&v.emitted);
+            eos_seen |= record_step(&mut res, &v.emitted, remaining, tree.input_len());
             full_ctx.extend_from_slice(&v.emitted);
             self.proposer.observe(&full_ctx);
             root = *v.emitted.last().unwrap();

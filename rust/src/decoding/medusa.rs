@@ -17,13 +17,12 @@ use crate::util::rng::Rng;
 use crate::util::{softmax, topk};
 
 use super::verify::{softmax_temp, verify, VerifyMode};
-use super::{prefill, truncate_at_eos, DecodeEngine, GenerationResult};
+use super::{prefill, record_step, truncate_at_eos, DecodeEngine, GenerationResult};
 
 pub struct MedusaEngine<'rt> {
     rt: &'rt Runtime,
     pub tree: SparseTree,
     layout: TreeLayout,
-    cache: HostKvCache,
     mode: VerifyMode,
     top_r: usize,
     rng: Rng,
@@ -39,7 +38,6 @@ impl<'rt> MedusaEngine<'rt> {
         let depth = rt.medusa_n_heads();
         let tree = build_candidate_tree(stats, depth, n_candidates, cfg.top_r);
         let layout = tree.layout();
-        let cache = HostKvCache::new(rt.cfg.n_layers, rt.cfg.max_ctx, rt.cfg.d_model);
         let mode = if cfg.temperature <= 0.0 {
             VerifyMode::Greedy
         } else {
@@ -49,7 +47,7 @@ impl<'rt> MedusaEngine<'rt> {
                 delta: cfg.typical_delta,
             }
         };
-        Ok(MedusaEngine { rt, tree, layout, cache, mode, top_r: cfg.top_r, rng: Rng::new(seed) })
+        Ok(MedusaEngine { rt, tree, layout, mode, top_r: cfg.top_r, rng: Rng::new(seed) })
     }
 
     fn guesses_from_hidden(&self, hidden: &[f32]) -> Result<GuessSet> {
@@ -79,24 +77,39 @@ impl DecodeEngine for MedusaEngine<'_> {
         "medusa"
     }
 
-    fn generate(&mut self, prompt: &[u32], max_new: usize) -> Result<GenerationResult> {
+    fn cache_shape(&self) -> (usize, usize, usize) {
+        (self.rt.cfg.n_layers, self.rt.cfg.max_ctx, self.rt.cfg.d_model)
+    }
+
+    fn begin_request(&mut self, seed: u64) {
+        self.rng = Rng::new(seed);
+    }
+
+    fn generate_with_cache(
+        &mut self,
+        prompt: &[u32],
+        max_new: usize,
+        cache: &mut HostKvCache,
+    ) -> Result<GenerationResult> {
         let mut res = GenerationResult::default();
-        self.cache.reset();
+        cache.reset();
         let vocab = self.rt.cfg.vocab;
         let d = self.rt.cfg.d_model;
         let max_ctx = self.rt.cfg.max_ctx;
 
         let t0 = Instant::now();
-        let pre = prefill(self.rt, &mut self.cache, prompt)?;
+        let pre = prefill(self.rt, cache, prompt)?;
         res.prefill_s = t0.elapsed().as_secs_f64();
 
         let mut root = self.pick_root(pre.logits_row(pre.n - 1, vocab));
         res.tokens.push(root);
+        let mut eos_seen = root == crate::config::EOS_ID;
         let mut guesses = self.guesses_from_hidden(pre.hidden_row(pre.n - 1, d))?;
 
         let t1 = Instant::now();
-        while res.tokens.len() < max_new && !res.tokens.contains(&crate::config::EOS_ID) {
-            let committed = self.cache.committed();
+        while res.tokens.len() < max_new && !eos_seen {
+            let remaining = max_new - res.tokens.len();
+            let committed = cache.committed();
             if committed + self.tree.input_len() + 2 >= max_ctx {
                 break;
             }
@@ -114,21 +127,21 @@ impl DecodeEngine for MedusaEngine<'_> {
                 &inputs.pos,
                 &inputs.slots,
                 &inputs.bias,
-                self.cache.as_slice(),
+                cache.as_slice(),
             )?;
-            self.cache.scatter(&out.new_kv, &inputs.slots)?;
+            cache.scatter(&out.new_kv, &inputs.slots)?;
 
             let v = verify(&self.tree, &self.layout, &out, &inputs.tokens, self.mode, vocab, &mut self.rng);
             let mut accepted_slots = vec![inputs.slots[0]];
             accepted_slots.extend(
                 v.accepted_nodes.iter().map(|&n| inputs.slots[self.layout.node_input[n]]),
             );
-            self.cache.compact(&accepted_slots)?;
+            cache.compact(&accepted_slots)?;
 
-            res.steps += 1;
-            res.accepted_per_step.push(v.emitted.len());
-            res.input_lens.push(self.tree.input_len());
-            res.tokens.extend_from_slice(&v.emitted);
+            // Medusa's tree is static, so the final step cannot shrink
+            // its forward pass like PPD's dynamic set does — but its
+            // accounting is still capped to the kept tokens
+            eos_seen |= record_step(&mut res, &v.emitted, remaining, self.tree.input_len());
 
             let hid = out.hidden_row(self.layout.node_input[v.final_node], d).to_vec();
             guesses = self.guesses_from_hidden(&hid)?;

@@ -80,14 +80,47 @@ impl GenerationResult {
     }
 }
 
-/// A decoding engine; one instance serves one request at a time (the
-/// coordinator owns a pool of engines).
+/// A decoding engine; one instance serves one request at a time (each
+/// coordinator worker owns one engine).
+///
+/// Engines do **not** own their KV cache: the hot entry point is
+/// [`DecodeEngine::generate_with_cache`], which borrows a
+/// [`HostKvCache`] the caller provides — the coordinator checks caches
+/// out of a [`crate::kvcache::CachePool`] per request, so the ~MB cache
+/// allocation is amortized across requests instead of being repaid on
+/// every engine construction.  [`DecodeEngine::generate`] is a
+/// convenience wrapper for single-shot use (examples, benches).
 pub trait DecodeEngine {
     fn name(&self) -> &'static str;
 
+    /// Cache shape this engine generates against:
+    /// `(n_layers, max_ctx, d_model)` of the *target* model.
+    /// (Speculative engines keep their draft-model cache internal — its
+    /// shape differs and it never leaves the engine.)
+    fn cache_shape(&self) -> (usize, usize, usize);
+
+    /// Reset all per-request state (sampling RNG, online proposer
+    /// pools) so the output depends only on `(prompt, max_new, seed)` —
+    /// this is what makes serving results independent of which worker
+    /// a request lands on.
+    fn begin_request(&mut self, seed: u64);
+
     /// Generate up to `max_new` tokens greedily/with the engine's
-    /// configured sampling, returning the result accounting.
-    fn generate(&mut self, prompt: &[u32], max_new: usize) -> Result<GenerationResult>;
+    /// configured sampling into the caller-provided cache, returning
+    /// the result accounting.  Implementations reset `cache` first.
+    fn generate_with_cache(
+        &mut self,
+        prompt: &[u32],
+        max_new: usize,
+        cache: &mut HostKvCache,
+    ) -> Result<GenerationResult>;
+
+    /// Single-shot wrapper that allocates a throwaway cache.
+    fn generate(&mut self, prompt: &[u32], max_new: usize) -> Result<GenerationResult> {
+        let (l, s, d) = self.cache_shape();
+        let mut cache = HostKvCache::new(l, s, d);
+        self.generate_with_cache(prompt, max_new, &mut cache)
+    }
 }
 
 /// Prefill the prompt into `cache` in bucket-sized causal chunks and
@@ -125,6 +158,25 @@ pub fn prefill(rt: &Runtime, cache: &mut HostKvCache, prompt: &[u32]) -> Result<
     Ok(out.expect("non-empty prompt"))
 }
 
+/// Record one decode step's accounting, keeping at most `remaining`
+/// of the step's emitted tokens: the final step of a capped generation
+/// would otherwise push past `max_new` and let tokens that are about to
+/// be discarded inflate `accepted_per_step` (and so τ/throughput).
+/// Returns `true` if EOS landed in the *kept* region.
+pub fn record_step(
+    res: &mut GenerationResult,
+    emitted: &[u32],
+    remaining: usize,
+    input_len: usize,
+) -> bool {
+    let kept = emitted.len().min(remaining);
+    res.steps += 1;
+    res.accepted_per_step.push(kept);
+    res.input_lens.push(input_len);
+    res.tokens.extend_from_slice(&emitted[..kept]);
+    emitted[..kept].contains(&EOS_ID)
+}
+
 /// Truncate a generated sequence at (and including) the first EOS.
 pub fn truncate_at_eos(tokens: &mut Vec<u32>) -> bool {
     if let Some(i) = tokens.iter().position(|&t| t == EOS_ID) {
@@ -154,6 +206,27 @@ mod tests {
         assert_eq!(r.throughput(), 6.0);
         assert_eq!(r.mean_fp_latency(), 0.5);
         assert_eq!(r.mean_input_len(), 20.0);
+    }
+
+    #[test]
+    fn record_step_caps_to_remaining() {
+        let mut r = GenerationResult::default();
+        r.tokens = vec![1, 1, 1];
+        // 4 emitted but only 2 wanted: τ accounting must see 2
+        let eos = record_step(&mut r, &[5, 6, 7, 8], 2, 9);
+        assert!(!eos);
+        assert_eq!(r.tokens, vec![1, 1, 1, 5, 6]);
+        assert_eq!(r.accepted_per_step, vec![2]);
+        assert_eq!(r.input_lens, vec![9]);
+        assert_eq!(r.steps, 1);
+    }
+
+    #[test]
+    fn record_step_eos_only_counts_in_kept_region() {
+        let mut r = GenerationResult::default();
+        assert!(!record_step(&mut r, &[5, EOS_ID], 1, 3));
+        let mut r2 = GenerationResult::default();
+        assert!(record_step(&mut r2, &[5, EOS_ID], 2, 3));
     }
 
     #[test]

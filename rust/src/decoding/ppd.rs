@@ -26,12 +26,11 @@ use crate::util::rng::Rng;
 use crate::util::{softmax, topk};
 
 use super::verify::{softmax_temp, verify, VerifyMode};
-use super::{prefill, truncate_at_eos, DecodeEngine, GenerationResult};
+use super::{prefill, record_step, truncate_at_eos, DecodeEngine, GenerationResult};
 
 pub struct PpdEngine<'rt> {
     rt: &'rt Runtime,
     pub set: DynamicTreeSet,
-    cache: HostKvCache,
     mode: VerifyMode,
     top_r: usize,
     rng: Rng,
@@ -46,7 +45,6 @@ impl<'rt> PpdEngine<'rt> {
 
     /// Use a pre-built tree set (benches build static/random/sized sets).
     pub fn with_tree_set(rt: &'rt Runtime, set: DynamicTreeSet, cfg: &ServeConfig, seed: u64) -> Self {
-        let cache = HostKvCache::new(rt.cfg.n_layers, rt.cfg.max_ctx, rt.cfg.d_model);
         let mode = if cfg.temperature <= 0.0 {
             VerifyMode::Greedy
         } else {
@@ -56,7 +54,7 @@ impl<'rt> PpdEngine<'rt> {
                 delta: cfg.typical_delta,
             }
         };
-        PpdEngine { rt, set, cache, mode, top_r: cfg.top_r, rng: Rng::new(seed) }
+        PpdEngine { rt, set, mode, top_r: cfg.top_r, rng: Rng::new(seed) }
     }
 
     /// Extract next-step guesses from the stopped node's prompt chain.
@@ -94,28 +92,52 @@ impl DecodeEngine for PpdEngine<'_> {
         "ppd"
     }
 
-    fn generate(&mut self, prompt: &[u32], max_new: usize) -> Result<GenerationResult> {
+    fn cache_shape(&self) -> (usize, usize, usize) {
+        (self.rt.cfg.n_layers, self.rt.cfg.max_ctx, self.rt.cfg.d_model)
+    }
+
+    fn begin_request(&mut self, seed: u64) {
+        self.rng = Rng::new(seed);
+    }
+
+    fn generate_with_cache(
+        &mut self,
+        prompt: &[u32],
+        max_new: usize,
+        cache: &mut HostKvCache,
+    ) -> Result<GenerationResult> {
         let mut res = GenerationResult::default();
-        self.cache.reset();
+        cache.reset();
         let vocab = self.rt.cfg.vocab;
         let max_ctx = self.rt.cfg.max_ctx;
 
         let t0 = Instant::now();
-        let pre = prefill(self.rt, &mut self.cache, prompt)?;
+        let pre = prefill(self.rt, cache, prompt)?;
         res.prefill_s = t0.elapsed().as_secs_f64();
 
         // the first root token comes from the prefill logits
         let mut root = self.pick_root(pre.logits_row(pre.n - 1, vocab));
         res.tokens.push(root);
+        // EOS tracked as a flag fed from each step's emitted tokens; the
+        // old `res.tokens.contains(EOS)` loop guard rescanned the whole
+        // output every step — O(n²) over the generation length
+        let mut eos_seen = root == crate::config::EOS_ID;
         let mut guesses = GuessSet::default();
         let mut state = 0usize; // no guesses yet -> root-only tree
 
         let t1 = Instant::now();
-        while res.tokens.len() < max_new && !res.tokens.contains(&crate::config::EOS_ID) {
-            let state_k = state.min(guesses.depth()).min(self.set.trees.len() - 1);
+        while res.tokens.len() < max_new && !eos_seen {
+            let remaining = max_new - res.tokens.len();
+            // a state-k tree emits at most k+1 tokens, so near the cap a
+            // shallower tree produces the same kept output with a much
+            // smaller forward pass
+            let state_k = state
+                .min(guesses.depth())
+                .min(self.set.trees.len() - 1)
+                .min(remaining - 1);
             let tree = &self.set.trees[state_k];
             let layout = &self.set.layouts[state_k];
-            let committed = self.cache.committed();
+            let committed = cache.committed();
             if committed + tree.input_len() + 2 >= max_ctx {
                 break; // context exhausted
             }
@@ -133,9 +155,9 @@ impl DecodeEngine for PpdEngine<'_> {
                 &inputs.pos,
                 &inputs.slots,
                 &inputs.bias,
-                self.cache.as_slice(),
+                cache.as_slice(),
             )?;
-            self.cache.scatter(&out.new_kv, &inputs.slots)?;
+            cache.scatter(&out.new_kv, &inputs.slots)?;
 
             let v = verify(tree, layout, &out, &inputs.tokens, self.mode, vocab, &mut self.rng);
             // compact: root + accepted candidate rows become committed
@@ -143,12 +165,9 @@ impl DecodeEngine for PpdEngine<'_> {
             accepted_slots.extend(
                 v.accepted_nodes.iter().map(|&n| inputs.slots[layout.node_input[n]]),
             );
-            self.cache.compact(&accepted_slots)?;
+            cache.compact(&accepted_slots)?;
 
-            res.steps += 1;
-            res.accepted_per_step.push(v.emitted.len());
-            res.input_lens.push(tree.input_len());
-            res.tokens.extend_from_slice(&v.emitted);
+            eos_seen |= record_step(&mut res, &v.emitted, remaining, tree.input_len());
 
             guesses = self.extract_guesses(layout, v.final_node, &out);
             state = tree.nodes[v.final_node].prompt_len;

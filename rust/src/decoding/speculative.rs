@@ -23,7 +23,7 @@ use crate::util::rng::Rng;
 use crate::util::{softmax, topk};
 
 use super::verify::{verify, VerifyMode};
-use super::{prefill, truncate_at_eos, DecodeEngine, GenerationResult};
+use super::{prefill, record_step, truncate_at_eos, DecodeEngine, GenerationResult};
 
 /// How the draft model produces its chain.
 pub enum DraftMode {
@@ -37,7 +37,9 @@ pub enum DraftMode {
 pub struct SpeculativeEngine<'a> {
     target: &'a Runtime,
     draft: &'a Runtime,
-    target_cache: HostKvCache,
+    /// the draft model's cache shape differs from the target's, so it
+    /// stays engine-owned; the target cache is borrowed per call (and
+    /// pooled by the coordinator) like every other engine
     draft_cache: HostKvCache,
     mode: DraftMode,
     /// speculation length per round
@@ -70,7 +72,6 @@ impl<'a> SpeculativeEngine<'a> {
 
     fn new(target: &'a Runtime, draft: &'a Runtime, mode: DraftMode, gamma: usize, seed: u64) -> Self {
         SpeculativeEngine {
-            target_cache: HostKvCache::new(target.cfg.n_layers, target.cfg.max_ctx, target.cfg.d_model),
             draft_cache: HostKvCache::new(draft.cfg.n_layers, draft.cfg.max_ctx, draft.cfg.d_model),
             target,
             draft,
@@ -80,19 +81,21 @@ impl<'a> SpeculativeEngine<'a> {
         }
     }
 
-    /// Draft `gamma` tokens continuing `root`; returns (chain, #draft
-    /// forwards).  The draft cache must already hold the committed
-    /// context *excluding* root.
-    fn draft_chain(&mut self, root: u32) -> Result<(Vec<u32>, usize)> {
+    /// Draft up to `limit` tokens continuing `root`; returns (chain,
+    /// #draft forwards).  The draft cache must already hold the
+    /// committed context *excluding* root.  `limit` is
+    /// `gamma.min(remaining - 1)` so the final round never drafts
+    /// tokens the budget cap would discard.
+    fn draft_chain(&mut self, root: u32, limit: usize) -> Result<(Vec<u32>, usize)> {
         let vocab = self.draft.cfg.vocab;
         let s = self.draft.cfg.max_ctx;
         match &self.mode {
             DraftMode::Vanilla => {
-                let mut chain = Vec::with_capacity(self.gamma);
+                let mut chain = Vec::with_capacity(limit);
                 let mut steps = 0;
                 let mut cur = root;
                 let mut bias = vec![NEG_INF; s];
-                while chain.len() < self.gamma && self.draft_cache.remaining() > 1 {
+                while chain.len() < limit && self.draft_cache.remaining() > 1 {
                     let c = self.draft_cache.committed();
                     for (j, b) in bias.iter_mut().enumerate() {
                         *b = if j <= c { 0.0 } else { NEG_INF };
@@ -110,12 +113,12 @@ impl<'a> SpeculativeEngine<'a> {
                 // guess-and-verify loop on the draft model
                 let set = set.clone();
                 let top_r = *top_r;
-                let mut chain: Vec<u32> = Vec::with_capacity(self.gamma + 4);
+                let mut chain: Vec<u32> = Vec::with_capacity(limit + 4);
                 let mut steps = 0;
                 let mut guesses = GuessSet::default();
                 let mut state = 0usize;
                 let mut cur = root;
-                while chain.len() < self.gamma && self.draft_cache.remaining() > set.max_input_len() + 2 {
+                while chain.len() < limit && self.draft_cache.remaining() > set.max_input_len() + 2 {
                     let k = state.min(guesses.depth()).min(set.trees.len() - 1);
                     let tree = &set.trees[k];
                     let layout = &set.layouts[k];
@@ -140,7 +143,7 @@ impl<'a> SpeculativeEngine<'a> {
                     state = tree.nodes[v.final_node].prompt_len;
                     cur = *chain.last().unwrap();
                 }
-                chain.truncate(self.gamma);
+                chain.truncate(limit);
                 Ok((chain, steps))
             }
         }
@@ -184,32 +187,49 @@ impl DecodeEngine for SpeculativeEngine<'_> {
         }
     }
 
-    fn generate(&mut self, prompt: &[u32], max_new: usize) -> Result<GenerationResult> {
+    fn cache_shape(&self) -> (usize, usize, usize) {
+        (self.target.cfg.n_layers, self.target.cfg.max_ctx, self.target.cfg.d_model)
+    }
+
+    fn begin_request(&mut self, seed: u64) {
+        self.rng = Rng::new(seed);
+    }
+
+    fn generate_with_cache(
+        &mut self,
+        prompt: &[u32],
+        max_new: usize,
+        target_cache: &mut HostKvCache,
+    ) -> Result<GenerationResult> {
         let mut res = GenerationResult::default();
-        self.target_cache.reset();
+        target_cache.reset();
         self.draft_cache.reset();
         let vocab = self.target.cfg.vocab;
         let s = self.target.cfg.max_ctx;
 
         let t0 = Instant::now();
-        let pre_t = prefill(self.target, &mut self.target_cache, prompt)?;
+        let pre_t = prefill(self.target, target_cache, prompt)?;
         prefill(self.draft, &mut self.draft_cache, prompt)?;
         res.prefill_s = t0.elapsed().as_secs_f64();
 
         let mut root = argmax(pre_t.logits_row(pre_t.n - 1, vocab)) as u32;
         res.tokens.push(root);
+        let mut eos_seen = root == crate::config::EOS_ID;
 
         let t1 = Instant::now();
-        'outer: while res.tokens.len() < max_new && !res.tokens.contains(&crate::config::EOS_ID) {
-            let (chain, draft_steps) = self.draft_chain(root)?;
+        'outer: while res.tokens.len() < max_new && !eos_seen {
+            let remaining = max_new - res.tokens.len();
+            let (chain, draft_steps) = self.draft_chain(root, self.gamma.min(remaining - 1))?;
             res.draft_steps += draft_steps;
-            if chain.is_empty() {
-                break;
+            if chain.is_empty() && remaining > 1 {
+                break; // draft context exhausted mid-generation
             }
             // verify [root, chain...] against the target in one forward
-            let committed = self.target_cache.committed();
+            // (with remaining == 1 the chain is empty and this is a
+            // plain one-token step producing the final bonus token)
+            let committed = target_cache.committed();
             let n = 1 + chain.len();
-            if committed + n + 2 >= s || self.target_cache.remaining() < n + 2 {
+            if committed + n + 2 >= s || target_cache.remaining() < n + 2 {
                 break 'outer;
             }
             let mut tokens = Vec::with_capacity(n);
@@ -222,10 +242,8 @@ impl DecodeEngine for SpeculativeEngine<'_> {
                     bias[i * s + j] = 0.0;
                 }
             }
-            let out = self.target.forward(&tokens, &pos, &pos, &bias, self.target_cache.as_slice())?;
-            self.target_cache.scatter(&out.new_kv, &pos)?;
-            res.steps += 1;
-            res.input_lens.push(n);
+            let out = self.target.forward(&tokens, &pos, &pos, &bias, target_cache.as_slice())?;
+            target_cache.scatter(&out.new_kv, &pos)?;
 
             // longest matching prefix + bonus
             let mut accepted = 0;
@@ -239,17 +257,16 @@ impl DecodeEngine for SpeculativeEngine<'_> {
             }
             let bonus = argmax(out.logits_row(accepted, vocab)) as u32;
             // commit root + accepted chain rows (they are contiguous)
-            self.target_cache.commit_contiguous(1 + accepted)?;
+            target_cache.commit_contiguous(1 + accepted)?;
 
             let mut emitted: Vec<u32> = chain[..accepted].to_vec();
             emitted.push(bonus);
-            res.accepted_per_step.push(emitted.len());
-            res.tokens.extend_from_slice(&emitted);
+            eos_seen |= record_step(&mut res, &emitted, remaining, n);
 
             // draft resync: accepted prefix (without bonus — that is the
             // next root and will be fed on the next draft round)
             let catch: Vec<u32> = std::iter::once(root).chain(chain[..accepted].iter().copied()).collect();
-            self.draft_catch_up(&catch, self.target_cache.committed())?;
+            self.draft_catch_up(&catch, target_cache.committed())?;
             root = bonus;
         }
         res.decode_s = t1.elapsed().as_secs_f64();

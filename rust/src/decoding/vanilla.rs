@@ -14,15 +14,13 @@ use super::{prefill, truncate_at_eos, DecodeEngine, GenerationResult};
 
 pub struct VanillaEngine<'rt> {
     rt: &'rt Runtime,
-    cache: HostKvCache,
     temperature: f32,
     rng: Rng,
 }
 
 impl<'rt> VanillaEngine<'rt> {
     pub fn new(rt: &'rt Runtime, temperature: f32, seed: u64) -> Self {
-        let cache = HostKvCache::new(rt.cfg.n_layers, rt.cfg.max_ctx, rt.cfg.d_model);
-        VanillaEngine { rt, cache, temperature, rng: Rng::new(seed) }
+        VanillaEngine { rt, temperature, rng: Rng::new(seed) }
     }
 
     fn pick(&mut self, logits: &[f32]) -> u32 {
@@ -40,31 +38,47 @@ impl DecodeEngine for VanillaEngine<'_> {
         "vanilla"
     }
 
-    fn generate(&mut self, prompt: &[u32], max_new: usize) -> Result<GenerationResult> {
+    fn cache_shape(&self) -> (usize, usize, usize) {
+        (self.rt.cfg.n_layers, self.rt.cfg.max_ctx, self.rt.cfg.d_model)
+    }
+
+    fn begin_request(&mut self, seed: u64) {
+        self.rng = Rng::new(seed);
+    }
+
+    fn generate_with_cache(
+        &mut self,
+        prompt: &[u32],
+        max_new: usize,
+        cache: &mut HostKvCache,
+    ) -> Result<GenerationResult> {
         let mut res = GenerationResult::default();
-        self.cache.reset();
+        cache.reset();
         let s = self.rt.cfg.max_ctx;
         let vocab = self.rt.cfg.vocab;
 
         let t0 = Instant::now();
-        let pre = prefill(self.rt, &mut self.cache, prompt)?;
+        let pre = prefill(self.rt, cache, prompt)?;
         res.prefill_s = t0.elapsed().as_secs_f64();
 
         let mut next = self.pick(pre.logits_row(pre.n - 1, vocab));
         let t1 = Instant::now();
         let mut bias = vec![NEG_INF; s];
-        while res.tokens.len() < max_new && self.cache.remaining() > 1 {
-            let c = self.cache.committed();
+        while res.tokens.len() < max_new && cache.remaining() > 1 {
+            let c = cache.committed();
             res.tokens.push(next);
-            if next == crate::config::EOS_ID {
+            // stop *before* the forward once the budget is filled — the
+            // old loop shape burned one extra forward pass computing a
+            // successor token that was never kept
+            if next == crate::config::EOS_ID || res.tokens.len() >= max_new {
                 break;
             }
             for (j, b) in bias.iter_mut().enumerate() {
                 *b = if j <= c { 0.0 } else { NEG_INF };
             }
-            let out = self.rt.forward(&[next], &[c as u32], &[c as u32], &bias, self.cache.as_slice())?;
-            self.cache.scatter(&out.new_kv, &[c as u32])?;
-            self.cache.commit_contiguous(1)?;
+            let out = self.rt.forward(&[next], &[c as u32], &[c as u32], &bias, cache.as_slice())?;
+            cache.scatter(&out.new_kv, &[c as u32])?;
+            cache.commit_contiguous(1)?;
             res.steps += 1;
             res.accepted_per_step.push(1);
             res.input_lens.push(1);

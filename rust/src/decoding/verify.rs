@@ -65,10 +65,13 @@ pub fn verify(
                     .iter()
                     .copied()
                     .filter(|&c| probs[tokens[layout.node_input[c]] as usize] >= threshold)
+                    // total_cmp: extreme logits can softmax to NaN
+                    // (e.g. +inf - +inf); partial_cmp().unwrap() here
+                    // panicked the serving worker mid-request
                     .max_by(|&a, &b| {
                         let pa = probs[tokens[layout.node_input[a]] as usize];
                         let pb = probs[tokens[layout.node_input[b]] as usize];
-                        pa.partial_cmp(&pb).unwrap()
+                        pa.total_cmp(&pb)
                     })
             }
         };
@@ -206,5 +209,27 @@ mod tests {
     fn softmax_temp_zero_is_argmax() {
         let p = softmax_temp(&[0.1, 3.0, 1.0], 0.0);
         assert_eq!(p, vec![0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn typical_survives_non_finite_logits() {
+        // regression: +inf logits softmax to NaN probabilities; the
+        // typical-acceptance max_by used partial_cmp().unwrap() and
+        // panicked instead of degrading to a root-only step
+        let (t, l) = tree();
+        let tokens = vec![7, 65, 66, 67];
+        let mut logits = vec![0.0f32; 4 * 128];
+        for row in 0..4 {
+            logits[row * 128 + 65] = f32::INFINITY;
+            logits[row * 128 + 66] = f32::INFINITY;
+            logits[row * 128 + 70] = f32::NEG_INFINITY;
+        }
+        let out = StepOutput { n: 4, logits, hidden: vec![0.0; 4], new_kv: vec![] };
+        let mut rng = Rng::new(0);
+        let mode = VerifyMode::Typical { temperature: 1.0, epsilon: 0.3, delta: 0.09 };
+        let v = verify(&t, &l, &out, &tokens, mode, 128, &mut rng);
+        // no panic, and the step still emits at least a bonus token
+        assert!(!v.emitted.is_empty());
+        assert!(v.emitted.iter().all(|&tok| tok < 128));
     }
 }

@@ -12,6 +12,17 @@
 //! values at `2l+1`.  Slot `max_ctx-1` is reserved as the padding trash
 //! row (see `runtime::Runtime::forward`); usable context is
 //! `max_ctx - RESERVED` slots.
+//!
+//! ## Pooling
+//!
+//! A cache is ~MBs and request lifetimes are short, so the serving
+//! layer never allocates caches per request: engines *borrow* a cache
+//! per `generate_with_cache` call, and the coordinator checks caches
+//! out of a [`CachePool`] (wrapped in a [`SharedCachePool`] so all
+//! worker threads draw from one free list).  The pool is bounded by
+//! construction — at most one cache per in-flight request, i.e. one per
+//! worker — which is the paper's runtime-memory story (≈0.0004%
+//! overhead) carried through to the serving layer.
 
 use anyhow::{bail, Result};
 
@@ -41,6 +52,11 @@ impl HostKvCache {
 
     pub fn committed(&self) -> usize {
         self.committed
+    }
+
+    /// `(n_layers, max_ctx, d)` — the tuple [`CachePool`] templates on.
+    pub fn shape(&self) -> (usize, usize, usize) {
+        (self.planes / 2, self.max_ctx, self.d)
     }
 
     pub fn capacity(&self) -> usize {
@@ -153,7 +169,9 @@ impl HostKvCache {
 
 /// Pool of caches for concurrent sequences (the coordinator checks
 /// caches out per running request instead of reallocating ~MBs each
-/// time).
+/// time).  With `W` workers at most `W` requests run concurrently, so
+/// `created` converges to the worker count and stays there no matter
+/// how many requests flow through.
 #[derive(Debug)]
 pub struct CachePool {
     template: (usize, usize, usize),
@@ -181,7 +199,53 @@ impl CachePool {
     }
 
     pub fn checkin(&mut self, cache: HostKvCache) {
-        self.free.push(cache);
+        // foreign shapes are dropped, not pooled: handing a wrong-shape
+        // cache to a later checkout would make `forward` reject it
+        if cache.shape() == self.template {
+            self.free.push(cache);
+        }
+    }
+}
+
+/// Thread-safe, lazily-templated [`CachePool`] shared by the
+/// coordinator's workers.  The template shape is only known once the
+/// first worker has loaded its model config, hence the `Option`.
+#[derive(Debug, Default)]
+pub struct SharedCachePool {
+    inner: std::sync::Mutex<Option<CachePool>>,
+}
+
+impl SharedCachePool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Check a cache out, initializing the pool template on first use.
+    pub fn checkout(&self, n_layers: usize, max_ctx: usize, d: usize) -> HostKvCache {
+        let mut g = self.inner.lock().unwrap();
+        let pool = g.get_or_insert_with(|| CachePool::new(n_layers, max_ctx, d));
+        if pool.template != (n_layers, max_ctx, d) {
+            // heterogeneous shapes (mixed models / per-worker configs):
+            // serve a correctly-shaped unpooled cache instead of
+            // silently substituting the template shape — checkin()
+            // drops it rather than polluting the free list
+            pool.created += 1;
+            return HostKvCache::new(n_layers, max_ctx, d);
+        }
+        pool.checkout()
+    }
+
+    pub fn checkin(&self, cache: HostKvCache) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(pool) = g.as_mut() {
+            pool.checkin(cache);
+        }
+    }
+
+    /// Total caches ever allocated (the pool-efficiency metric: stays
+    /// at the worker count under steady load).
+    pub fn created(&self) -> usize {
+        self.inner.lock().unwrap().as_ref().map_or(0, |p| p.created)
     }
 }
 
@@ -276,5 +340,43 @@ mod tests {
         assert_eq!(p.created, 1);
         let _c = p.checkout();
         assert_eq!(p.created, 2);
+    }
+
+    #[test]
+    fn pool_rejects_foreign_shapes() {
+        let mut p = CachePool::new(2, 16, 4);
+        p.checkin(HostKvCache::new(3, 16, 4)); // wrong layer count
+        let c = p.checkout();
+        assert_eq!(c.shape(), (2, 16, 4));
+        assert_eq!(p.created, 1);
+    }
+
+    #[test]
+    fn shared_pool_is_lazy_and_bounded() {
+        let p = SharedCachePool::new();
+        assert_eq!(p.created(), 0);
+        let a = p.checkout(2, 16, 4);
+        let b = p.checkout(2, 16, 4);
+        assert_eq!(p.created(), 2);
+        p.checkin(a);
+        p.checkin(b);
+        // steady state: repeated checkout/checkin allocates nothing new
+        for _ in 0..8 {
+            let c = p.checkout(2, 16, 4);
+            p.checkin(c);
+        }
+        assert_eq!(p.created(), 2);
+    }
+
+    #[test]
+    fn shared_pool_serves_foreign_shapes_unpooled() {
+        let p = SharedCachePool::new();
+        let a = p.checkout(2, 16, 4); // sets the template
+        let b = p.checkout(3, 32, 4); // foreign shape: must not be coerced
+        assert_eq!(b.shape(), (3, 32, 4));
+        p.checkin(a);
+        p.checkin(b); // foreign cache is dropped, not pooled
+        let c = p.checkout(2, 16, 4);
+        assert_eq!(c.shape(), (2, 16, 4));
     }
 }

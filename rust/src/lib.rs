@@ -11,7 +11,8 @@
 //! * [`tree`]     — sparse trees; dynamic state machine (Props 4.1–4.4);
 //!                  hardware-aware sizing
 //! * [`decoding`] — vanilla / PPD / Medusa / lookup / speculative engines
-//! * [`coordinator`] — request queue, scheduler, TCP server
+//! * [`coordinator`] — multi-worker serving layer: shared work queue,
+//!                  pooled KV caches, out-of-order completion, TCP server
 //! * [`workload`] — trace loading + synthetic workload generation
 pub mod baselines;
 pub mod config;

@@ -17,6 +17,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use ppd::config::{ArtifactPaths, ModelConfig, ServeConfig};
 use ppd::coordinator::{build_engine, Coordinator, EngineKind};
+use ppd::decoding::DecodeEngine;
 use ppd::runtime::calibrate::Calibration;
 use ppd::runtime::Runtime;
 use ppd::tree::builder::AcceptStats;
@@ -115,7 +116,7 @@ fn print_help() {
          COMMANDS\n\
            info        list artifact models and configs\n\
            generate    --model M --engine {{{}}} --prompt TEXT [--max-new N] [--temp T]\n\
-           serve       --model M [--port 7878] [--engine ppd]\n\
+           serve       --model M [--port 7878] [--engine ppd] [--workers N]\n\
            calibrate   --model M [--force]  measure per-bucket forward latency\n\
            sweep       --model M            theoretical-speedup curve vs tree size\n\
            trees       --model M            print the dynamic sparse tree set\n\n\
@@ -188,11 +189,12 @@ fn cmd_generate(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let port: u16 = args.get("port").unwrap_or("7878").parse()?;
     let kind = EngineKind::parse(args.get("engine").unwrap_or("ppd"))?;
+    let workers: usize = args.get("workers").unwrap_or("1").parse().context("--workers")?;
     let draft = match kind {
         EngineKind::Spec | EngineKind::SpecPpd => Some(args.get("draft").unwrap_or("ppd-d").to_string()),
         _ => None,
     };
-    let coord = Coordinator::spawn(args.artifacts(), args.model(), draft, kind, args.serve_cfg()?)?;
+    let coord = Coordinator::spawn(args.artifacts(), args.model(), draft, kind, args.serve_cfg()?, workers)?;
     let max = args.get("max-requests").map(|m| m.parse()).transpose()?;
     ppd::coordinator::server::serve(coord, &format!("127.0.0.1:{port}"), max)
 }

@@ -1,6 +1,8 @@
-//! Serving metrics: latency histograms, throughput counters, and the
-//! aggregated report the coordinator/benches emit.
+//! Serving metrics: latency histograms, throughput counters, queue
+//! depth/backpressure gauges, and the aggregated report the
+//! coordinator/benches emit.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
 use crate::util::json::Json;
@@ -67,6 +69,97 @@ impl LatencyHistogram {
             }
         }
         self.max_s
+    }
+}
+
+/// Work-queue accounting shared between the coordinator (producer
+/// side) and its workers (consumer side).  All atomic — incremented on
+/// the submit/dispatch hot path without taking the queue lock twice.
+#[derive(Debug, Default)]
+pub struct QueueStats {
+    /// requests accepted into the queue
+    enqueued: AtomicU64,
+    /// requests picked up by a worker
+    dequeued: AtomicU64,
+    /// requests fully served (response sent)
+    completed: AtomicU64,
+    /// requests refused by backpressure (`try_submit` over capacity)
+    rejected: AtomicU64,
+    /// high-water mark of the queue depth
+    max_depth: AtomicU64,
+    /// workers currently inside `generate`
+    busy_workers: AtomicU64,
+}
+
+impl QueueStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record an accepted enqueue at the given post-push depth.
+    pub fn on_enqueue(&self, depth: usize) {
+        self.enqueued.fetch_add(1, Ordering::Relaxed);
+        self.max_depth.fetch_max(depth as u64, Ordering::Relaxed);
+    }
+
+    pub fn on_reject(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_dequeue(&self) {
+        self.dequeued.fetch_add(1, Ordering::Relaxed);
+        self.busy_workers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_complete(&self) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.busy_workers.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Requests accepted but not yet picked up (the live queue depth).
+    pub fn depth(&self) -> u64 {
+        self.enqueued
+            .load(Ordering::Relaxed)
+            .saturating_sub(self.dequeued.load(Ordering::Relaxed))
+    }
+
+    /// Accepted but not yet completed (queued + running).
+    pub fn in_flight(&self) -> u64 {
+        self.enqueued
+            .load(Ordering::Relaxed)
+            .saturating_sub(self.completed.load(Ordering::Relaxed))
+    }
+
+    pub fn enqueued_total(&self) -> u64 {
+        self.enqueued.load(Ordering::Relaxed)
+    }
+
+    pub fn completed_total(&self) -> u64 {
+        self.completed.load(Ordering::Relaxed)
+    }
+
+    pub fn rejected_total(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
+    }
+
+    pub fn max_depth(&self) -> u64 {
+        self.max_depth.load(Ordering::Relaxed)
+    }
+
+    pub fn busy_workers(&self) -> u64 {
+        self.busy_workers.load(Ordering::Relaxed)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("enqueued", Json::Num(self.enqueued_total() as f64)),
+            ("completed", Json::Num(self.completed_total() as f64)),
+            ("rejected", Json::Num(self.rejected_total() as f64)),
+            ("depth", Json::Num(self.depth() as f64)),
+            ("in_flight", Json::Num(self.in_flight() as f64)),
+            ("max_depth", Json::Num(self.max_depth() as f64)),
+            ("busy_workers", Json::Num(self.busy_workers() as f64)),
+        ])
     }
 }
 
@@ -146,6 +239,27 @@ mod tests {
         let h = LatencyHistogram::default();
         assert_eq!(h.quantile_s(0.99), 0.0);
         assert_eq!(h.mean_s(), 0.0);
+    }
+
+    #[test]
+    fn queue_stats_track_lifecycle() {
+        let q = QueueStats::new();
+        q.on_enqueue(1);
+        q.on_enqueue(2);
+        q.on_reject();
+        assert_eq!(q.depth(), 2);
+        assert_eq!(q.max_depth(), 2);
+        q.on_dequeue();
+        assert_eq!(q.depth(), 1);
+        assert_eq!(q.busy_workers(), 1);
+        assert_eq!(q.in_flight(), 2);
+        q.on_complete();
+        assert_eq!(q.busy_workers(), 0);
+        assert_eq!(q.in_flight(), 1);
+        assert_eq!(q.rejected_total(), 1);
+        let j = q.to_json();
+        assert_eq!(j.req("enqueued").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.req("rejected").unwrap().as_usize().unwrap(), 1);
     }
 
     #[test]

@@ -1,7 +1,11 @@
 //! Literal construction/extraction helpers over the `xla` crate.
 
 use anyhow::{bail, Result};
+#[cfg(feature = "xla")]
 use xla::{ElementType, Literal};
+
+#[cfg(not(feature = "xla"))]
+use super::stub::{ElementType, Literal};
 
 /// f32 literal with an arbitrary shape.
 pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<Literal> {

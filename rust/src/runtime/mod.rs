@@ -11,13 +11,18 @@
 
 pub mod calibrate;
 pub mod literal;
+pub mod stub;
 pub mod weights;
 
 use std::cell::RefCell;
 use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Context, Result};
-use xla::{HloModuleProto, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+#[cfg(feature = "xla")]
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+#[cfg(not(feature = "xla"))]
+use stub::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
 use crate::config::{ArtifactPaths, ModelConfig};
 use crate::util::json::Json;
@@ -69,7 +74,7 @@ pub struct Runtime {
     /// PJRT's buffer_from_host_literal is asynchronous/zero-copy: the
     /// source literal MUST outlive the device buffer, so the weight
     /// literals are retained for the runtime's lifetime.
-    _weight_lits: Vec<xla::Literal>,
+    _weight_lits: Vec<Literal>,
     pub weights_host: Weights,
     medusa: Option<MedusaRuntime>,
     pub stats: RefCell<RuntimeStats>,
@@ -80,7 +85,7 @@ pub struct Runtime {
 struct MedusaRuntime {
     exe: PjRtLoadedExecutable,
     bufs: Vec<PjRtBuffer>,
-    _lits: Vec<xla::Literal>,
+    _lits: Vec<Literal>,
     n_heads: usize,
 }
 
@@ -290,7 +295,7 @@ impl Runtime {
         };
 
         let mut bufs: Vec<PjRtBuffer> = Vec::with_capacity(5);
-        let mut lits: Vec<xla::Literal> = Vec::new();
+        let mut lits: Vec<Literal> = Vec::new();
         if upload_via_literal() {
             // baseline path (pre-optimization): literal + async upload
             let cache_src = if s_sel == s { cache } else { &sc.cache };

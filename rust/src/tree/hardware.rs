@@ -34,9 +34,13 @@ pub struct SpeedupModel {
 
 impl SpeedupModel {
     pub fn best(&self) -> Option<&SizePoint> {
+        // NaN speedups (degenerate calibration, e.g. zero latency) are
+        // excluded outright: total_cmp alone would rank NaN above every
+        // finite speedup and silently pick a garbage point
         self.points
             .iter()
-            .max_by(|a, b| a.speedup.partial_cmp(&b.speedup).unwrap())
+            .filter(|p| !p.speedup.is_nan())
+            .max_by(|a, b| a.speedup.total_cmp(&b.speedup))
     }
 }
 

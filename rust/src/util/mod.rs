@@ -26,12 +26,27 @@ pub fn argmax(xs: &[f32]) -> usize {
     best
 }
 
-/// Indices of the top-k elements, descending.
+/// Indices of the top-k elements, descending.  NaN-tolerant
+/// (`total_cmp`, NaN ranks below every real value): the inputs are
+/// softmaxed logits, which go NaN under extreme inputs, and a panicking
+/// comparator here would take a serving worker down with the request.
 pub fn topk(xs: &[f32], k: usize) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..xs.len()).collect();
-    idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap());
+    idx.sort_by(|&a, &b| {
+        let (xa, xb) = (nan_low(xs[a]), nan_low(xs[b]));
+        xb.total_cmp(&xa)
+    });
     idx.truncate(k);
     idx
+}
+
+/// Map NaN to -inf so ordering treats it as the worst value.
+fn nan_low(x: f32) -> f32 {
+    if x.is_nan() {
+        f32::NEG_INFINITY
+    } else {
+        x
+    }
 }
 
 /// Shannon entropy of a probability distribution (nats).

@@ -218,10 +218,11 @@ fn coordinator_roundtrip() {
         None,
         EngineKind::Ppd,
         greedy_cfg(),
+        1,
     )
     .unwrap();
     let reqs: Vec<Request> = (0..3)
-        .map(|i| Request { id: i, prompt: workload::encode(PROMPTS[i as usize % 3]), max_new: 16 })
+        .map(|i| Request::new(i, workload::encode(PROMPTS[i as usize % 3]), 16))
         .collect();
     let resps = coord.run_batch(reqs).unwrap();
     assert_eq!(resps.len(), 3);
@@ -233,6 +234,43 @@ fn coordinator_roundtrip() {
 }
 
 #[test]
+fn coordinator_multi_worker_matches_single_worker() {
+    // the acceptance invariant for the serving refactor: with >=2
+    // workers a mixed batch completes with responses matched to their
+    // request ids, byte-identical greedy outputs to the single-worker
+    // path, and cache checkouts served from the pool (created <= workers)
+    let Some(root) = artifacts_root() else { return };
+    let spawn = |workers| {
+        Coordinator::spawn(
+            root.clone(),
+            "ppd-d".into(),
+            None,
+            EngineKind::Ppd,
+            greedy_cfg(),
+            workers,
+        )
+        .unwrap()
+    };
+    let multi = spawn(2);
+    let single = spawn(1);
+    let mk = || -> Vec<Request> {
+        (0..9)
+            .map(|i| Request::new(i, workload::encode(PROMPTS[i as usize % 3]), 24))
+            .collect()
+    };
+    let a = multi.run_batch(mk()).unwrap();
+    let b = single.run_batch(mk()).unwrap();
+    assert_eq!(a.len(), 9);
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(x.id, i as u64);
+        assert!(x.error.is_none(), "{:?}", x.error);
+        assert_eq!(x.tokens, y.tokens, "request {i} diverged across worker counts");
+    }
+    assert!(multi.caches_created() <= 2, "pool leaked: {}", multi.caches_created());
+    assert_eq!(single.caches_created(), 1);
+}
+
+#[test]
 fn tcp_server_roundtrip() {
     let Some(root) = artifacts_root() else { return };
     let coord = Coordinator::spawn(
@@ -241,6 +279,7 @@ fn tcp_server_roundtrip() {
         None,
         EngineKind::Ppd,
         greedy_cfg(),
+        1,
     )
     .unwrap();
     let addr = "127.0.0.1:17917";
