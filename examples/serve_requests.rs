@@ -70,6 +70,7 @@ fn main() -> Result<()> {
         ]);
     }
     grand.wall_s = t_all.elapsed().as_secs_f64();
+    grand.absorb_queue_stats(coord.queue_stats());
     table.print();
     println!("\noverall: {}", grand.to_json());
     println!(

@@ -1,39 +1,52 @@
-//! L3 coordinator: a multi-worker serving layer.
+//! L3 coordinator: a multi-worker serving layer with step-level
+//! continuous batching.
 //!
 //! ```text
 //!   submitters (TCP conns, batch drivers)
 //!        │  submit / try_submit (backpressure)
 //!        ▼
-//!   ┌──────────────┐      ┌───────────────────────────────┐
-//!   │  WorkQueue   │ ───▶ │ worker 0..N: Runtime + engine │──▶ reply
-//!   │ (mutex+cv)   │      │  cache ⇄ SharedCachePool      │    channels
-//!   └──────────────┘      └───────────────────────────────┘
+//!   ┌──────────────┐      ┌─────────────────────────────────────┐
+//!   │  WorkQueue   │ ───▶ │ worker 0..N: Runtime + engine       │──▶ reply
+//!   │ (mutex+cv)   │      │  StepScheduler: ≤ max-inflight seqs │    channels
+//!   └──────────────┘      │  caches ⇄ SharedCachePool (capped)  │
+//!                         └─────────────────────────────────────┘
 //! ```
 //!
 //! * The PJRT client is not `Send`, so each worker thread *owns* its
 //!   `Runtime` and engine (vLLM's router/worker split at miniature
 //!   scale).  Workers pull from one shared [`queue::WorkQueue`].
+//! * Each worker runs a [`scheduler::StepScheduler`]: it holds up to
+//!   `--max-inflight` sequences, admits new jobs from the queue
+//!   *between decode steps*, round-robins one PPD tree step per
+//!   sequence per tick, and retires sequences on EOS/budget — so a
+//!   short request never waits behind a long one (continuous batching).
 //! * Completions are **out of order**: every job carries its own reply
 //!   channel, so concurrent submitters each get exactly their
 //!   responses, and [`Coordinator::run_batch`] reassembles batch
 //!   results by request id.
-//! * KV caches are checked out of a [`SharedCachePool`] per request —
-//!   at most one cache allocation per worker, ever — instead of living
-//!   inside engines.
-//! * Each request carries an RNG seed and workers call
-//!   `engine.begin_request(seed)` first, so output is a pure function
-//!   of (prompt, max_new, seed): identical across worker counts and
-//!   placements, byte-identical to the single-worker path.
-//! * Queue depth / backpressure / busy-worker accounting lives in
-//!   [`crate::metrics::QueueStats`].
+//! * KV caches are checked out of a [`SharedCachePool`] per admitted
+//!   sequence — capped at `workers × max_inflight` allocations, ever —
+//!   instead of living inside engines.
+//! * Each request carries an RNG seed and all per-sequence state
+//!   (RNG, proposer pools, tree cursor, draft cache) lives in the
+//!   sequence's `SeqState`, so output is a pure function of
+//!   (prompt, max_new, seed): identical across worker counts,
+//!   placements, and interleavings, byte-identical to the
+//!   run-to-completion path.
+//! * Jobs carry a [`queue::CancelFlag`] (set on TCP disconnect) and are
+//!   dropped at admission once older than the policy's max queue age.
+//! * Queue depth / backpressure / admission / in-flight-depth
+//!   accounting lives in [`crate::metrics::QueueStats`].
 //!
 //! Workers are abstracted behind [`WorkerBackend`] so the concurrency
 //! machinery is testable without model artifacts (see
-//! `rust/tests/coordinator.rs`); [`ModelBackend`] is the production
+//! `rust/tests/coordinator.rs` and the deterministic scheduler harness
+//! in `rust/tests/scheduler.rs`); [`ModelBackend`] is the production
 //! implementation that loads artifacts and builds a real engine.
 
 pub mod queue;
 pub mod request;
+pub mod scheduler;
 pub mod server;
 
 use std::collections::HashMap;
@@ -56,8 +69,10 @@ use crate::runtime::Runtime;
 use crate::tree::builder::AcceptStats;
 use crate::workload;
 
-use queue::{Job, WorkQueue};
+use queue::{Job, Polled, WorkQueue};
+pub use queue::CancelFlag;
 pub use request::{parse_request_line, Request, Response};
+pub use scheduler::{SchedPolicy, StepScheduler, DEFAULT_MAX_INFLIGHT};
 
 /// Soft queue bound per worker used by the backpressure-aware submit.
 pub const DEFAULT_QUEUE_PER_WORKER: usize = 64;
@@ -124,7 +139,7 @@ pub fn build_engine<'rt>(
             Box::new(ChainEngine::new(rt, PldProposer { span: 4 }, 4, 16, seed))
         }
         EngineKind::Rest => {
-            let datastore = workload::load_val_stream(&paths.root)?;
+            let datastore = std::sync::Arc::new(workload::load_val_stream(&paths.root)?);
             Box::new(ChainEngine::new(
                 rt,
                 RestProposer { datastore, span: 4, max_hits: 3 },
@@ -154,6 +169,7 @@ pub struct WorkerCtx {
     queue: Arc<WorkQueue>,
     pool: Arc<SharedCachePool>,
     stats: Arc<QueueStats>,
+    policy: SchedPolicy,
     /// one-shot startup signal (taken on first use so a worker that
     /// panics before signaling drops its sender and fails spawn fast)
     ready: Mutex<Option<mpsc::Sender<Result<()>>>>,
@@ -184,60 +200,46 @@ pub trait WorkerBackend: Send + Sync + 'static {
     fn run(&self, worker: usize, ctx: WorkerCtx);
 }
 
-/// The shared worker loop: pop → checkout cache → seed → generate →
-/// checkin → reply.  Split out of [`WorkerBackend`] impls so mock
-/// backends in tests exercise the exact production path.
+/// The shared worker loop, now a step-level scheduler: block for work
+/// when idle, admit queued jobs between decode steps up to the
+/// `--max-inflight` budget, round-robin one decode step per in-flight
+/// sequence per iteration, and retire sequences out of order through
+/// their per-job reply channels.  Split out of [`WorkerBackend`] impls
+/// so mock backends in tests exercise the exact production path.
 ///
-/// A panic inside `generate_with_cache` is caught and turned into an
-/// error response: with the single-threaded mpsc design a dead worker
-/// surfaced as "worker gone", but here a silently-dead worker would
-/// leave queued jobs holding reply senders forever and wedge every
-/// submitter — the worker must outlive any one bad request.
+/// Panics inside `begin_seq`/`step` are caught by the scheduler and
+/// turned into error responses: a silently-dead worker would leave
+/// queued jobs holding reply senders forever and wedge every submitter
+/// — the worker must outlive any one bad request.
 pub fn serve_jobs(worker: usize, engine: &mut dyn DecodeEngine, ctx: &WorkerCtx) {
-    while let Some(job) = ctx.queue.pop() {
-        ctx.stats.on_dequeue();
-        let queue_s = job.enqueued.elapsed().as_secs_f64();
-        let (l, s, d) = engine.cache_shape();
-        let mut cache = ctx.pool.checkout(l, s, d);
-        engine.begin_request(job.req.seed);
-        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            engine.generate_with_cache(&job.req.prompt, job.req.max_new, &mut cache)
-        }));
-        let resp = match outcome {
-            Ok(Ok(r)) => Response {
-                id: job.req.id,
-                text: workload::decode(&r.tokens),
-                tau: r.tau(),
-                steps: r.steps,
-                decode_s: r.decode_s,
-                prefill_s: r.prefill_s,
-                queue_s,
-                worker,
-                tokens: r.tokens,
-                error: None,
-            },
-            Ok(Err(e)) => {
-                let mut resp = Response::error(job.req.id, format!("{e:#}"));
-                resp.queue_s = queue_s;
-                resp.worker = worker;
-                resp
+    let mut sched = StepScheduler::new(worker, ctx.policy);
+    loop {
+        if sched.is_empty() {
+            // idle: block until work arrives; `None` means the queue is
+            // closed and drained, and nothing is in flight — exit
+            match ctx.queue.pop() {
+                Some(job) => {
+                    sched.admit(engine, &ctx.pool, &ctx.stats, job);
+                }
+                None => return,
             }
-            Err(panic) => {
-                let msg = panic
-                    .downcast_ref::<&str>()
-                    .map(|s| s.to_string())
-                    .or_else(|| panic.downcast_ref::<String>().cloned())
-                    .unwrap_or_else(|| "unknown panic".into());
-                let mut resp = Response::error(job.req.id, format!("worker panicked: {msg}"));
-                resp.queue_s = queue_s;
-                resp.worker = worker;
-                resp
+        }
+        // opportunistic admission between decode steps — this is the
+        // continuous-batching move: new work joins a busy worker
+        // without waiting for its current sequences to finish.  At most
+        // one admission per tick: draining the queue to max_inflight in
+        // one go would let a single worker hoover a whole burst while
+        // its siblings sit idle in pop(), serializing work PR 1 ran in
+        // parallel — pacing admissions gives the other workers a tick's
+        // worth of time to claim their share
+        if sched.has_capacity() {
+            if let Polled::Job(job) = ctx.queue.try_pop() {
+                sched.admit(engine, &ctx.pool, &ctx.stats, *job);
             }
-        };
-        ctx.pool.checkin(cache);
-        ctx.stats.on_complete();
-        // a submitter that went away just discards its response
-        let _ = job.reply.send(resp);
+        }
+        // one decode step for every in-flight sequence; finished
+        // sequences retire and free their caches inside
+        sched.tick(engine, &ctx.pool, &ctx.stats);
     }
 }
 
@@ -285,13 +287,14 @@ pub struct Coordinator {
     collector_rx: Mutex<mpsc::Receiver<Response>>,
     queue_capacity: usize,
     n_workers: usize,
+    policy: SchedPolicy,
     workers: Vec<JoinHandle<()>>,
 }
 
 impl Coordinator {
     /// Spawn `workers` threads, each loading the model and serving
-    /// requests from the shared queue.  Blocks until every worker is
-    /// ready (or one fails).
+    /// requests from the shared queue under the default scheduling
+    /// policy.  Blocks until every worker is ready (or one fails).
     pub fn spawn(
         root: std::path::PathBuf,
         model: String,
@@ -300,24 +303,54 @@ impl Coordinator {
         cfg: ServeConfig,
         workers: usize,
     ) -> Result<Coordinator> {
-        Self::spawn_with_backend(
+        Self::spawn_with_policy(root, model, draft_model, kind, cfg, workers, SchedPolicy::default())
+    }
+
+    /// [`Coordinator::spawn`] with an explicit step-scheduling policy
+    /// (`--max-inflight`, max queue age).
+    #[allow(clippy::too_many_arguments)]
+    pub fn spawn_with_policy(
+        root: std::path::PathBuf,
+        model: String,
+        draft_model: Option<String>,
+        kind: EngineKind,
+        cfg: ServeConfig,
+        workers: usize,
+        policy: SchedPolicy,
+    ) -> Result<Coordinator> {
+        Self::spawn_with_backend_policy(
             Arc::new(ModelBackend { root, model, draft_model, kind, cfg }),
             workers,
+            policy,
         )
     }
 
-    /// Spawn over an arbitrary backend (tests inject engine mocks here;
-    /// everything above the engine — queue, pool, seeds, routing,
-    /// metrics — is the production code path).
+    /// Spawn over an arbitrary backend with the default policy.
     pub fn spawn_with_backend(
         backend: Arc<dyn WorkerBackend>,
         workers: usize,
     ) -> Result<Coordinator> {
+        Self::spawn_with_backend_policy(backend, workers, SchedPolicy::default())
+    }
+
+    /// Spawn over an arbitrary backend (tests inject engine mocks here;
+    /// everything above the engine — queue, scheduler, pool, seeds,
+    /// routing, metrics — is the production code path).
+    pub fn spawn_with_backend_policy(
+        backend: Arc<dyn WorkerBackend>,
+        workers: usize,
+        policy: SchedPolicy,
+    ) -> Result<Coordinator> {
         if workers == 0 {
             return Err(anyhow!("coordinator needs at least one worker"));
         }
+        if policy.max_inflight == 0 {
+            return Err(anyhow!("max_inflight must be at least 1"));
+        }
         let queue = Arc::new(WorkQueue::new());
-        let pool = Arc::new(SharedCachePool::new());
+        // the pool cap is exactly the admission budget: one cache per
+        // in-flight sequence, across all workers
+        let pool = Arc::new(SharedCachePool::new(workers * policy.max_inflight));
         let stats = Arc::new(QueueStats::new());
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
 
@@ -327,6 +360,7 @@ impl Coordinator {
                 queue: Arc::clone(&queue),
                 pool: Arc::clone(&pool),
                 stats: Arc::clone(&stats),
+                policy,
                 ready: Mutex::new(Some(ready_tx.clone())),
             };
             let backend = Arc::clone(&backend);
@@ -365,6 +399,7 @@ impl Coordinator {
             collector_rx: Mutex::new(collector_rx),
             queue_capacity: workers * DEFAULT_QUEUE_PER_WORKER,
             n_workers: workers,
+            policy,
             workers: handles,
         })
     }
@@ -373,14 +408,25 @@ impl Coordinator {
         self.n_workers
     }
 
+    /// The step-scheduling policy every worker runs under.
+    pub fn policy(&self) -> SchedPolicy {
+        self.policy
+    }
+
     /// Queue/backpressure counters (live).
     pub fn queue_stats(&self) -> &QueueStats {
         &self.stats
     }
 
-    /// Total KV caches the pool ever allocated (≤ worker count).
+    /// Total KV caches the pool ever allocated
+    /// (≤ workers × max_inflight).
     pub fn caches_created(&self) -> usize {
         self.pool.created()
+    }
+
+    /// KV caches currently checked out (one per in-flight sequence).
+    pub fn caches_outstanding(&self) -> usize {
+        self.pool.outstanding()
     }
 
     pub fn queue_capacity(&self) -> usize {
@@ -401,7 +447,20 @@ impl Coordinator {
     /// Submit with a caller-owned reply channel (one sender per TCP
     /// connection / batch — the out-of-order completion routing).
     pub fn submit_routed(&self, req: Request, reply: mpsc::Sender<Response>) -> Result<()> {
-        let job = Job { req, enqueued: Instant::now(), reply };
+        self.submit_cancellable(req, reply, CancelFlag::new())
+    }
+
+    /// [`Coordinator::submit_routed`] with a caller-held cancel flag:
+    /// setting the flag aborts the request wherever it is — dropped at
+    /// admission if still queued, or retired mid-flight with its KV
+    /// cache returned to the pool.
+    pub fn submit_cancellable(
+        &self,
+        req: Request,
+        reply: mpsc::Sender<Response>,
+        cancel: CancelFlag,
+    ) -> Result<()> {
+        let job = Job { req, enqueued: Instant::now(), cancel, reply };
         match self.queue.push(job) {
             Ok(depth) => {
                 self.stats.on_enqueue(depth);
@@ -419,11 +478,21 @@ impl Coordinator {
         req: Request,
         reply: mpsc::Sender<Response>,
     ) -> Result<bool> {
+        self.try_submit_cancellable(req, reply, CancelFlag::new())
+    }
+
+    /// Backpressure-aware submit with a caller-held cancel flag.
+    pub fn try_submit_cancellable(
+        &self,
+        req: Request,
+        reply: mpsc::Sender<Response>,
+        cancel: CancelFlag,
+    ) -> Result<bool> {
         if self.queue.depth() >= self.queue_capacity {
             self.stats.on_reject();
             return Ok(false);
         }
-        self.submit_routed(req, reply)?;
+        self.submit_cancellable(req, reply, cancel)?;
         Ok(true)
     }
 
@@ -498,6 +567,18 @@ mod tests {
             }
         }
         assert!(Coordinator::spawn_with_backend(Arc::new(Noop), 0).is_err());
+    }
+
+    #[test]
+    fn zero_inflight_rejected() {
+        struct Noop;
+        impl WorkerBackend for Noop {
+            fn run(&self, _w: usize, ctx: WorkerCtx) {
+                ctx.ready();
+            }
+        }
+        let policy = SchedPolicy { max_inflight: 0, ..Default::default() };
+        assert!(Coordinator::spawn_with_backend_policy(Arc::new(Noop), 1, policy).is_err());
     }
 
     #[test]

@@ -5,21 +5,60 @@
 //! closed, which is how coordinator shutdown drains the worker pool.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use super::request::{Request, Response};
 
+/// Shared cancellation handle for one job: the submitter (e.g. the TCP
+/// server noticing a client disconnect) sets it; the step scheduler
+/// checks it before admission and between decode steps and aborts the
+/// sequence, returning its KV cache to the pool.
+#[derive(Debug, Clone, Default)]
+pub struct CancelFlag(Arc<AtomicBool>);
+
+impl CancelFlag {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
 /// One unit of work: the request, its enqueue time (queue-latency
-/// accounting), and the channel the worker answers on.  Routing the
-/// reply through a per-job sender is what lets completions arrive out
-/// of order across workers while every submitter still gets exactly the
-/// responses it asked for.
+/// accounting and the max-queue-age drop policy), its cancel flag, and
+/// the channel the worker answers on.  Routing the reply through a
+/// per-job sender is what lets completions arrive out of order across
+/// workers while every submitter still gets exactly the responses it
+/// asked for.
 pub struct Job {
     pub req: Request,
     pub enqueued: Instant,
+    pub cancel: CancelFlag,
     pub reply: mpsc::Sender<Response>,
+}
+
+impl Job {
+    pub fn new(req: Request, reply: mpsc::Sender<Response>) -> Self {
+        Job { req, enqueued: Instant::now(), cancel: CancelFlag::new(), reply }
+    }
+}
+
+/// Result of a non-blocking [`WorkQueue::try_pop`].
+pub enum Polled {
+    Job(Box<Job>),
+    /// nothing queued right now (the queue is still open)
+    Empty,
+    /// the queue is closed and drained
+    Closed,
 }
 
 #[derive(Default)]
@@ -70,6 +109,17 @@ impl WorkQueue {
         }
     }
 
+    /// Non-blocking pop, used by the step scheduler to admit work
+    /// between decode steps without stalling its running sequences.
+    pub fn try_pop(&self) -> Polled {
+        let mut g = self.inner.lock().unwrap();
+        match g.jobs.pop_front() {
+            Some(job) => Polled::Job(Box::new(job)),
+            None if g.closed => Polled::Closed,
+            None => Polled::Empty,
+        }
+    }
+
     pub fn depth(&self) -> usize {
         self.inner.lock().unwrap().jobs.len()
     }
@@ -88,11 +138,7 @@ mod tests {
     use std::sync::Arc;
 
     fn job(id: u64, reply: mpsc::Sender<Response>) -> Job {
-        Job {
-            req: Request { id, prompt: vec![1], max_new: 4, seed: 0 },
-            enqueued: Instant::now(),
-            reply,
-        }
+        Job::new(Request { id, prompt: vec![1], max_new: 4, seed: 0 }, reply)
     }
 
     #[test]
@@ -105,6 +151,29 @@ mod tests {
         assert_eq!(q.pop().unwrap().req.id, 1);
         assert_eq!(q.pop().unwrap().req.id, 2);
         assert_eq!(q.depth(), 0);
+    }
+
+    #[test]
+    fn try_pop_distinguishes_empty_from_closed() {
+        let q = WorkQueue::new();
+        let (tx, _rx) = mpsc::channel();
+        assert!(matches!(q.try_pop(), Polled::Empty));
+        q.push(job(1, tx)).unwrap();
+        match q.try_pop() {
+            Polled::Job(j) => assert_eq!(j.req.id, 1),
+            _ => panic!("expected a job"),
+        }
+        q.close();
+        assert!(matches!(q.try_pop(), Polled::Closed));
+    }
+
+    #[test]
+    fn cancel_flag_is_shared() {
+        let flag = CancelFlag::new();
+        let clone = flag.clone();
+        assert!(!clone.is_cancelled());
+        flag.cancel();
+        assert!(clone.is_cancelled());
     }
 
     #[test]

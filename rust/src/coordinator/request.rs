@@ -7,10 +7,11 @@ pub struct Request {
     pub id: u64,
     pub prompt: Vec<u32>,
     pub max_new: usize,
-    /// Per-request RNG seed: workers call `engine.begin_request(seed)`
-    /// before generating, so sampled output depends only on
-    /// (prompt, max_new, seed) — never on which worker served it or
-    /// what ran on that worker before.
+    /// Per-request RNG seed: the scheduler passes it to
+    /// `engine.begin_seq`, which seeds the sequence's own RNG, so
+    /// sampled output depends only on (prompt, max_new, seed) — never
+    /// on which worker served it, what ran before it, or which other
+    /// sequences it interleaved with.
     pub seed: u64,
 }
 

@@ -1,0 +1,245 @@
+//! Step-level continuous batching: one worker, many in-flight
+//! sequences, one PPD tree step per sequence per tick.
+//!
+//! ```text
+//!            WorkQueue ──try_pop──┐  (admission between steps,
+//!                                 ▼   up to --max-inflight)
+//!   ┌──────────────── StepScheduler ────────────────┐
+//!   │ seq A ──step──▶ seq B ──step──▶ seq C ──step─▶│  round-robin
+//!   │   │ cache A        │ cache B       │ cache C  │  one tick
+//!   └───┼────────────────┼──────────────┼───────────┘
+//!       ▼ retired on EOS/budget/cancel  ▼
+//!     reply channel (out-of-order)    cache → SharedCachePool
+//! ```
+//!
+//! This replaces the run-to-completion worker loop: a short request
+//! admitted behind a long one no longer waits for the long one to
+//! drain — it interleaves at the decode-step granularity (vLLM-style
+//! continuous batching, the deployment metric speculative-decoding
+//! papers neglect).  Correctness rests on the [`SeqState`] refactor:
+//! every piece of per-sequence state (tokens, RNG, proposer pools, the
+//! speculative draft cache) travels with the sequence, so admitting a
+//! sequence mid-flight can never perturb another's output — asserted
+//! token-exactly by `rust/tests/scheduler.rs`.
+//!
+//! The scheduler is deliberately synchronous and free of threads: the
+//! worker loop ([`super::serve_jobs`]) drives it with `admit`/`tick`
+//! calls, and the deterministic test harness scripts those same calls
+//! directly to pin down admission/step/retire orderings.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::time::Duration;
+
+use crate::decoding::{DecodeEngine, SeqState, StepOutcome};
+use crate::kvcache::{HostKvCache, SharedCachePool};
+use crate::metrics::QueueStats;
+use crate::workload;
+
+use super::queue::Job;
+use super::request::Response;
+
+/// Default per-worker in-flight sequence budget (`--max-inflight`).
+pub const DEFAULT_MAX_INFLIGHT: usize = 4;
+
+/// Per-worker scheduling policy.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedPolicy {
+    /// sequences a worker interleaves at once (≥ 1); 1 reproduces the
+    /// run-to-completion behavior exactly
+    pub max_inflight: usize,
+    /// drop jobs older than this at admission (stale work never reaches
+    /// a decode step); `None` disables the age check
+    pub max_queue_age: Option<Duration>,
+}
+
+impl Default for SchedPolicy {
+    fn default() -> Self {
+        SchedPolicy { max_inflight: DEFAULT_MAX_INFLIGHT, max_queue_age: None }
+    }
+}
+
+/// One admitted sequence: its job (id, reply channel, cancel flag), its
+/// resumable decode state, and the KV cache checked out for its
+/// lifetime.
+struct Inflight {
+    job: Job,
+    queue_s: f64,
+    seq: SeqState,
+    cache: HostKvCache,
+}
+
+/// The per-worker step scheduler.  Drive it with [`StepScheduler::admit`]
+/// (one popped job) and [`StepScheduler::tick`] (one round-robin pass);
+/// it owns the in-flight set and returns every cache to the pool on
+/// retirement, including error/cancel paths.
+pub struct StepScheduler {
+    worker: usize,
+    policy: SchedPolicy,
+    running: VecDeque<Inflight>,
+}
+
+impl StepScheduler {
+    pub fn new(worker: usize, policy: SchedPolicy) -> Self {
+        StepScheduler { worker, policy, running: VecDeque::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.running.is_empty()
+    }
+
+    pub fn has_capacity(&self) -> bool {
+        self.running.len() < self.policy.max_inflight.max(1)
+    }
+
+    pub fn policy(&self) -> SchedPolicy {
+        self.policy
+    }
+
+    /// Admit one job popped off the work queue: run the queue-age and
+    /// cancellation checks, check a KV cache out of the pool, and
+    /// prefill via [`DecodeEngine::begin_seq`].  Returns `true` when the
+    /// job joined the in-flight set; on every refusal path the job's
+    /// reply channel gets an error [`Response`] instead.
+    pub fn admit(
+        &mut self,
+        engine: &mut dyn DecodeEngine,
+        pool: &SharedCachePool,
+        stats: &QueueStats,
+        job: Job,
+    ) -> bool {
+        stats.on_dequeue();
+        let queue_s = job.enqueued.elapsed().as_secs_f64();
+        if job.cancel.is_cancelled() {
+            stats.on_cancel();
+            self.refuse(stats, job, queue_s, "cancelled before admission".into());
+            return false;
+        }
+        if let Some(age) = self.policy.max_queue_age {
+            if job.enqueued.elapsed() > age {
+                stats.on_expire();
+                self.refuse(
+                    stats,
+                    job,
+                    queue_s,
+                    format!("dropped: queued {queue_s:.3}s > max queue age {:.3}s", age.as_secs_f64()),
+                );
+                return false;
+            }
+        }
+        let (l, s, d) = engine.cache_shape();
+        let mut cache = match pool.checkout(l, s, d) {
+            Ok(c) => c,
+            Err(e) => {
+                self.refuse(stats, job, queue_s, format!("{e}"));
+                return false;
+            }
+        };
+        let begun = catch_unwind(AssertUnwindSafe(|| {
+            engine.begin_seq(&job.req.prompt, job.req.max_new, job.req.seed, &mut cache)
+        }));
+        match begun {
+            Ok(Ok(seq)) => {
+                stats.on_admit(self.running.len() + 1);
+                self.running.push_back(Inflight { job, queue_s, seq, cache });
+                true
+            }
+            Ok(Err(e)) => {
+                pool.checkin(cache);
+                self.refuse(stats, job, queue_s, format!("{e:#}"));
+                false
+            }
+            Err(panic) => {
+                pool.checkin(cache);
+                self.refuse(stats, job, queue_s, format!("worker panicked: {}", panic_msg(panic)));
+                false
+            }
+        }
+    }
+
+    /// One round-robin pass: every in-flight sequence takes exactly one
+    /// decode step (cancelled sequences are aborted instead), finished
+    /// sequences retire with their response, and their caches go back
+    /// to the pool.  Returns the number of sequences still in flight.
+    pub fn tick(
+        &mut self,
+        engine: &mut dyn DecodeEngine,
+        pool: &SharedCachePool,
+        stats: &QueueStats,
+    ) -> usize {
+        for _ in 0..self.running.len() {
+            let mut fl = self.running.pop_front().expect("non-empty running set");
+            if fl.job.cancel.is_cancelled() {
+                // mid-flight abort: roll the cache back and free it
+                fl.cache.reset();
+                stats.on_cancel();
+                self.retire_err(fl, pool, stats, "cancelled mid-flight".into());
+                continue;
+            }
+            stats.on_step();
+            let stepped =
+                catch_unwind(AssertUnwindSafe(|| engine.step(&mut fl.seq, &mut fl.cache)));
+            match stepped {
+                Ok(Ok(StepOutcome::Running)) => self.running.push_back(fl),
+                Ok(Ok(StepOutcome::Finished(_))) => self.retire_ok(fl, pool, stats),
+                Ok(Err(e)) => self.retire_err(fl, pool, stats, format!("{e:#}")),
+                Err(panic) => {
+                    self.retire_err(fl, pool, stats, format!("worker panicked: {}", panic_msg(panic)))
+                }
+            }
+        }
+        self.running.len()
+    }
+
+    /// Refuse a job that never entered the in-flight set.
+    fn refuse(&self, stats: &QueueStats, job: Job, queue_s: f64, msg: String) {
+        let mut resp = Response::error(job.req.id, msg);
+        resp.queue_s = queue_s;
+        resp.worker = self.worker;
+        stats.on_complete();
+        // a submitter that went away just discards its response
+        let _ = job.reply.send(resp);
+    }
+
+    fn retire_ok(&self, fl: Inflight, pool: &SharedCachePool, stats: &QueueStats) {
+        let Inflight { job, queue_s, seq, cache } = fl;
+        pool.checkin(cache);
+        let r = seq.into_result();
+        let resp = Response {
+            id: job.req.id,
+            text: workload::decode(&r.tokens),
+            tau: r.tau(),
+            steps: r.steps,
+            decode_s: r.decode_s,
+            prefill_s: r.prefill_s,
+            queue_s,
+            worker: self.worker,
+            tokens: r.tokens,
+            error: None,
+        };
+        stats.on_complete();
+        let _ = job.reply.send(resp);
+    }
+
+    fn retire_err(&self, fl: Inflight, pool: &SharedCachePool, stats: &QueueStats, msg: String) {
+        let Inflight { job, queue_s, cache, .. } = fl;
+        pool.checkin(cache);
+        let mut resp = Response::error(job.req.id, msg);
+        resp.queue_s = queue_s;
+        resp.worker = self.worker;
+        stats.on_complete();
+        let _ = job.reply.send(resp);
+    }
+}
+
+fn panic_msg(panic: Box<dyn std::any::Any + Send>) -> String {
+    panic
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| panic.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "unknown panic".into())
+}

@@ -1,11 +1,17 @@
 //! Line-protocol TCP server: one JSON request per line, one JSON
 //! response per line.  std-only (tokio is not in the offline vendor
 //! set).  A thread per connection feeds the multi-worker coordinator
-//! through `try_submit_routed`: each in-flight request carries its own
-//! reply channel, so concurrent connections are served genuinely in
-//! parallel (up to the worker count) and each connection only ever
-//! sees its own responses.  Over-capacity submits get an immediate
+//! through `try_submit_cancellable`: each in-flight request carries its
+//! own reply channel, so concurrent connections are served genuinely in
+//! parallel (up to workers × max-inflight) and each connection only
+//! ever sees its own responses.  Over-capacity submits get an immediate
 //! `error` response instead of unbounded queueing (backpressure).
+//!
+//! **Disconnect cancellation**: while a request is in flight its
+//! handler thread polls the socket for EOF; a client that goes away
+//! flips the request's [`CancelFlag`], and the step scheduler aborts
+//! the sequence at its next decode step, returning the KV cache to the
+//! pool instead of finishing work nobody will read.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -15,7 +21,7 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use super::{parse_request_line, Coordinator, Response};
+use super::{parse_request_line, CancelFlag, Coordinator, Response};
 
 static NEXT_ID: AtomicU64 = AtomicU64::new(1);
 
@@ -90,7 +96,7 @@ fn handle_conn(
             Ok(_) => {
                 let trimmed = line.trim();
                 if !trimmed.is_empty() {
-                    let resp = serve_line(coord, trimmed);
+                    let resp = serve_line(coord, trimmed, &out);
                     writeln!(out, "{}", resp.to_json())?;
                     served.fetch_add(1, Ordering::Relaxed);
                 }
@@ -119,15 +125,30 @@ fn handle_conn(
     Ok(())
 }
 
-fn serve_line(coord: &Coordinator, trimmed: &str) -> Response {
+fn serve_line(coord: &Coordinator, trimmed: &str, stream: &TcpStream) -> Response {
     let id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
     match parse_request_line(trimmed, id) {
         Ok(req) => {
             let (tx, rx) = mpsc::channel();
-            match coord.try_submit_routed(req, tx) {
-                Ok(true) => rx
-                    .recv()
-                    .unwrap_or_else(|_| Response::error(id, "workers gone".into())),
+            let cancel = CancelFlag::new();
+            match coord.try_submit_cancellable(req, tx, cancel.clone()) {
+                Ok(true) => loop {
+                    match rx.recv_timeout(READ_TICK) {
+                        Ok(resp) => break resp,
+                        Err(mpsc::RecvTimeoutError::Timeout) => {
+                            // while the request is queued/in flight,
+                            // watch the socket: a vanished client flips
+                            // the cancel flag and the scheduler aborts
+                            // the sequence at its next step
+                            if client_gone(stream) {
+                                cancel.cancel();
+                            }
+                        }
+                        Err(mpsc::RecvTimeoutError::Disconnected) => {
+                            break Response::error(id, "workers gone".into())
+                        }
+                    }
+                },
                 Ok(false) => Response::error(
                     id,
                     format!(
@@ -140,6 +161,32 @@ fn serve_line(coord: &Coordinator, trimmed: &str) -> Response {
             }
         }
         Err(e) => Response::error(id, e),
+    }
+}
+
+/// EOF probe for disconnect detection: `peek` returns `Ok(0)` once the
+/// peer's write side is closed and the receive buffer is drained.  The
+/// socket's read timeout (set in `handle_conn`) bounds the wait;
+/// timeout/would-block means the client is simply quiet, which is not
+/// a disconnect.
+///
+/// Note this cannot distinguish a full close from a half-close
+/// (`shutdown(SHUT_WR)` by a client still reading): in this line
+/// protocol an open write side *is* the liveness signal, so a
+/// half-closing client gets its in-flight request cancelled.  Clients
+/// must keep the connection fully open until the response line arrives
+/// (as `client_request` does).
+fn client_gone(stream: &TcpStream) -> bool {
+    let mut probe = [0u8; 1];
+    match stream.peek(&mut probe) {
+        Ok(0) => true,
+        Ok(_) => false,
+        Err(e) => !matches!(
+            e.kind(),
+            std::io::ErrorKind::WouldBlock
+                | std::io::ErrorKind::TimedOut
+                | std::io::ErrorKind::Interrupted
+        ),
     }
 }
 

@@ -27,9 +27,14 @@ use crate::tree::{assemble_step, GuessSet, SparseTree, TreeNode};
 use crate::util::rng::Rng;
 
 use super::verify::{verify, VerifyMode};
-use super::{prefill, record_step, truncate_at_eos, DecodeEngine, GenerationResult};
+use super::{prefill, record_step, DecodeEngine, FinishReason, SeqState, StepOutcome};
 
 /// A source of speculative continuation chains.
+///
+/// Proposers are **per-sequence** state: the engine keeps a template
+/// and clones a fresh (reset) copy into every [`SeqState`], so one
+/// request's harvested n-grams can never leak into another even when
+/// sequences interleave at the step level.
 pub trait ChainProposer {
     fn name(&self) -> &'static str;
 
@@ -82,6 +87,7 @@ pub fn ngram_continuations(
 }
 
 /// PLD: the corpus is the request's own context.
+#[derive(Clone)]
 pub struct PldProposer {
     pub span: usize,
 }
@@ -101,9 +107,13 @@ impl ChainProposer for PldProposer {
     }
 }
 
-/// REST: external datastore of corpus tokens.
+/// REST: external datastore of corpus tokens.  The datastore is behind
+/// an `Arc`: proposers are cloned per admitted sequence, and the corpus
+/// is read-only — a deep copy per request would be O(corpus) on the
+/// admission path.
+#[derive(Clone)]
 pub struct RestProposer {
-    pub datastore: Vec<u32>,
+    pub datastore: std::sync::Arc<Vec<u32>>,
     pub span: usize,
     pub max_hits: usize,
 }
@@ -120,6 +130,7 @@ impl ChainProposer for RestProposer {
 
 /// Lookahead-lite: n-gram pool keyed by the last token, harvested from
 /// the generation itself.
+#[derive(Clone)]
 pub struct LookaheadProposer {
     pub span: usize,
     pool: HashMap<u32, Vec<Vec<u32>>>,
@@ -205,19 +216,28 @@ pub fn chains_to_tree(chains: &[Vec<u32>], max_depth: usize, max_nodes: usize) -
 /// The generic chain-speculation engine (verification shared with PPD).
 pub struct ChainEngine<'rt, P: ChainProposer> {
     rt: &'rt Runtime,
+    /// template proposer; each sequence gets a reset clone
     proposer: P,
     max_depth: usize,
     max_nodes: usize,
-    rng: Rng,
+    seed: u64,
+}
+
+/// Per-sequence state: the cursor token, the full context the proposer
+/// matches against, and the sequence's own proposer instance.
+struct ChainSeq<P> {
+    root: u32,
+    full_ctx: Vec<u32>,
+    proposer: P,
 }
 
 impl<'rt, P: ChainProposer> ChainEngine<'rt, P> {
     pub fn new(rt: &'rt Runtime, proposer: P, max_depth: usize, max_nodes: usize, seed: u64) -> Self {
-        ChainEngine { rt, proposer, max_depth, max_nodes, rng: Rng::new(seed) }
+        ChainEngine { rt, proposer, max_depth, max_nodes, seed }
     }
 }
 
-impl<P: ChainProposer> DecodeEngine for ChainEngine<'_, P> {
+impl<P: ChainProposer + Clone + Send + 'static> DecodeEngine for ChainEngine<'_, P> {
     fn name(&self) -> &'static str {
         self.proposer.name()
     }
@@ -227,63 +247,99 @@ impl<P: ChainProposer> DecodeEngine for ChainEngine<'_, P> {
     }
 
     fn begin_request(&mut self, seed: u64) {
-        self.rng = Rng::new(seed);
-        self.proposer.reset();
+        self.seed = seed;
     }
 
-    fn generate_with_cache(
+    fn request_seed(&self) -> u64 {
+        self.seed
+    }
+
+    fn begin_seq(
         &mut self,
         prompt: &[u32],
         max_new: usize,
+        seed: u64,
         cache: &mut HostKvCache,
-    ) -> Result<GenerationResult> {
-        let mut res = GenerationResult::default();
+    ) -> Result<SeqState> {
         cache.reset();
         let vocab = self.rt.cfg.vocab;
-        let max_ctx = self.rt.cfg.max_ctx;
+        // drop state harvested from previous requests (lookahead's
+        // n-gram pool): without this, one request's generation would
+        // leak into the next request's proposals
+        let mut proposer = self.proposer.clone();
+        proposer.reset();
 
         let t0 = Instant::now();
         let pre = prefill(self.rt, cache, prompt)?;
-        res.prefill_s = t0.elapsed().as_secs_f64();
+        let prefill_s = t0.elapsed().as_secs_f64();
 
-        let mut root = crate::util::argmax(pre.logits_row(pre.n - 1, vocab)) as u32;
-        res.tokens.push(root);
-        let mut eos_seen = root == crate::config::EOS_ID;
+        let root = crate::util::argmax(pre.logits_row(pre.n - 1, vocab)) as u32;
         let mut full_ctx: Vec<u32> = prompt.to_vec();
         full_ctx.push(root);
-        self.proposer.observe(&full_ctx);
+        proposer.observe(&full_ctx);
 
-        let t1 = Instant::now();
-        while res.tokens.len() < max_new && !eos_seen {
-            let remaining = max_new - res.tokens.len();
-            let chains = self.proposer.propose(&full_ctx);
-            // depth-capped near the budget: a depth-d tree emits at most
-            // d+1 tokens, anything deeper is discarded work
-            let depth = self.max_depth.min(remaining - 1);
-            let (tree, guesses) = chains_to_tree(&chains, depth, self.max_nodes);
-            let layout = tree.layout();
-            let committed = cache.committed();
-            if committed + tree.input_len() + 2 >= max_ctx {
-                break;
-            }
-            let inputs = assemble_step(&tree, &layout, &guesses, root, committed as u32, committed, max_ctx)?;
-            let out = self.rt.forward(&inputs.tokens, &inputs.pos, &inputs.slots, &inputs.bias, cache.as_slice())?;
-            cache.scatter(&out.new_kv, &inputs.slots)?;
+        let inner = ChainSeq { root, full_ctx, proposer };
+        let mut seq = SeqState::new(max_new, Rng::new(seed), Box::new(inner));
+        seq.res.prefill_s = prefill_s;
+        seq.res.tokens.push(root);
+        seq.eos_seen = root == crate::config::EOS_ID;
+        Ok(seq)
+    }
 
-            let v = verify(&tree, &layout, &out, &inputs.tokens, VerifyMode::Greedy, vocab, &mut self.rng);
-            let mut accepted_slots = vec![inputs.slots[0]];
-            accepted_slots.extend(v.accepted_nodes.iter().map(|&n| inputs.slots[layout.node_input[n]]));
-            cache.compact(&accepted_slots)?;
-
-            eos_seen |= record_step(&mut res, &v.emitted, remaining, tree.input_len());
-            full_ctx.extend_from_slice(&v.emitted);
-            self.proposer.observe(&full_ctx);
-            root = *v.emitted.last().unwrap();
+    fn step(&mut self, seq: &mut SeqState, cache: &mut HostKvCache) -> Result<StepOutcome> {
+        if let Some(r) = seq.finished {
+            return Ok(StepOutcome::Finished(r));
         }
-        res.decode_s = t1.elapsed().as_secs_f64();
-        truncate_at_eos(&mut res.tokens);
-        res.tokens.truncate(max_new);
-        Ok(res)
+        if seq.eos_seen {
+            return Ok(seq.finish(FinishReason::Eos));
+        }
+        if seq.res.tokens.len() >= seq.max_new {
+            return Ok(seq.finish(FinishReason::Budget));
+        }
+        let t = Instant::now();
+        let vocab = self.rt.cfg.vocab;
+        let max_ctx = self.rt.cfg.max_ctx;
+        let remaining = seq.max_new - seq.res.tokens.len();
+
+        let (root, chains) = {
+            let st = seq.inner.downcast_mut::<ChainSeq<P>>().expect("chain seq state");
+            let chains = st.proposer.propose(&st.full_ctx);
+            (st.root, chains)
+        };
+        // depth-capped near the budget: a depth-d tree emits at most
+        // d+1 tokens, anything deeper is discarded work
+        let depth = self.max_depth.min(remaining - 1);
+        let (tree, guesses) = chains_to_tree(&chains, depth, self.max_nodes);
+        let layout = tree.layout();
+        let committed = cache.committed();
+        if committed + tree.input_len() + 2 >= max_ctx {
+            seq.res.decode_s += t.elapsed().as_secs_f64();
+            return Ok(seq.finish(FinishReason::Context));
+        }
+        let inputs = assemble_step(&tree, &layout, &guesses, root, committed as u32, committed, max_ctx)?;
+        let out = self.rt.forward(&inputs.tokens, &inputs.pos, &inputs.slots, &inputs.bias, cache.as_slice())?;
+        cache.scatter(&out.new_kv, &inputs.slots)?;
+
+        let v = verify(&tree, &layout, &out, &inputs.tokens, VerifyMode::Greedy, vocab, &mut seq.rng);
+        let mut accepted_slots = vec![inputs.slots[0]];
+        accepted_slots.extend(v.accepted_nodes.iter().map(|&n| inputs.slots[layout.node_input[n]]));
+        cache.compact(&accepted_slots)?;
+
+        seq.eos_seen |= record_step(&mut seq.res, &v.emitted, remaining, tree.input_len());
+        {
+            let st = seq.inner.downcast_mut::<ChainSeq<P>>().expect("chain seq state");
+            st.full_ctx.extend_from_slice(&v.emitted);
+            st.proposer.observe(&st.full_ctx);
+            st.root = *v.emitted.last().unwrap();
+        }
+        seq.res.decode_s += t.elapsed().as_secs_f64();
+        if seq.eos_seen {
+            return Ok(seq.finish(FinishReason::Eos));
+        }
+        if seq.res.tokens.len() >= seq.max_new {
+            return Ok(seq.finish(FinishReason::Budget));
+        }
+        Ok(StepOutcome::Running)
     }
 }
 

@@ -17,7 +17,7 @@ use crate::util::rng::Rng;
 use crate::util::{softmax, topk};
 
 use super::verify::{softmax_temp, verify, VerifyMode};
-use super::{prefill, record_step, truncate_at_eos, DecodeEngine, GenerationResult};
+use super::{prefill, record_step, DecodeEngine, FinishReason, SeqState, StepOutcome};
 
 pub struct MedusaEngine<'rt> {
     rt: &'rt Runtime,
@@ -25,7 +25,13 @@ pub struct MedusaEngine<'rt> {
     layout: TreeLayout,
     mode: VerifyMode,
     top_r: usize,
-    rng: Rng,
+    seed: u64,
+}
+
+/// Per-sequence cursor: previous bonus token + head guesses.
+struct MedusaSeq {
+    root: u32,
+    guesses: GuessSet,
 }
 
 impl<'rt> MedusaEngine<'rt> {
@@ -47,7 +53,7 @@ impl<'rt> MedusaEngine<'rt> {
                 delta: cfg.typical_delta,
             }
         };
-        Ok(MedusaEngine { rt, tree, layout, mode, top_r: cfg.top_r, rng: Rng::new(seed) })
+        Ok(MedusaEngine { rt, tree, layout, mode, top_r: cfg.top_r, seed })
     }
 
     fn guesses_from_hidden(&self, hidden: &[f32]) -> Result<GuessSet> {
@@ -61,12 +67,12 @@ impl<'rt> MedusaEngine<'rt> {
         Ok(GuessSet { per_distance })
     }
 
-    fn pick_root(&mut self, logits: &[f32]) -> u32 {
+    fn pick_root(&self, logits: &[f32], rng: &mut Rng) -> u32 {
         match self.mode {
             VerifyMode::Greedy => crate::util::argmax(logits) as u32,
             VerifyMode::Typical { temperature, .. } => {
                 let p = softmax_temp(logits, temperature);
-                self.rng.sample_dist(&p) as u32
+                rng.sample_dist(&p) as u32
             }
         }
     }
@@ -82,74 +88,108 @@ impl DecodeEngine for MedusaEngine<'_> {
     }
 
     fn begin_request(&mut self, seed: u64) {
-        self.rng = Rng::new(seed);
+        self.seed = seed;
     }
 
-    fn generate_with_cache(
+    fn request_seed(&self) -> u64 {
+        self.seed
+    }
+
+    fn begin_seq(
         &mut self,
         prompt: &[u32],
         max_new: usize,
+        seed: u64,
         cache: &mut HostKvCache,
-    ) -> Result<GenerationResult> {
-        let mut res = GenerationResult::default();
+    ) -> Result<SeqState> {
         cache.reset();
         let vocab = self.rt.cfg.vocab;
         let d = self.rt.cfg.d_model;
-        let max_ctx = self.rt.cfg.max_ctx;
+        let mut rng = Rng::new(seed);
 
         let t0 = Instant::now();
         let pre = prefill(self.rt, cache, prompt)?;
-        res.prefill_s = t0.elapsed().as_secs_f64();
+        let prefill_s = t0.elapsed().as_secs_f64();
 
-        let mut root = self.pick_root(pre.logits_row(pre.n - 1, vocab));
-        res.tokens.push(root);
-        let mut eos_seen = root == crate::config::EOS_ID;
-        let mut guesses = self.guesses_from_hidden(pre.hidden_row(pre.n - 1, d))?;
+        let root = self.pick_root(pre.logits_row(pre.n - 1, vocab), &mut rng);
+        let guesses = self.guesses_from_hidden(pre.hidden_row(pre.n - 1, d))?;
+        let mut seq = SeqState::new(max_new, rng, Box::new(MedusaSeq { root, guesses }));
+        seq.res.prefill_s = prefill_s;
+        seq.res.tokens.push(root);
+        seq.eos_seen = root == crate::config::EOS_ID;
+        Ok(seq)
+    }
 
-        let t1 = Instant::now();
-        while res.tokens.len() < max_new && !eos_seen {
-            let remaining = max_new - res.tokens.len();
-            let committed = cache.committed();
-            if committed + self.tree.input_len() + 2 >= max_ctx {
-                break;
-            }
-            let inputs = assemble_step(
-                &self.tree,
-                &self.layout,
-                &guesses,
-                root,
-                committed as u32,
-                committed,
-                max_ctx,
-            )?;
-            let out = self.rt.forward(
-                &inputs.tokens,
-                &inputs.pos,
-                &inputs.slots,
-                &inputs.bias,
-                cache.as_slice(),
-            )?;
-            cache.scatter(&out.new_kv, &inputs.slots)?;
-
-            let v = verify(&self.tree, &self.layout, &out, &inputs.tokens, self.mode, vocab, &mut self.rng);
-            let mut accepted_slots = vec![inputs.slots[0]];
-            accepted_slots.extend(
-                v.accepted_nodes.iter().map(|&n| inputs.slots[self.layout.node_input[n]]),
-            );
-            cache.compact(&accepted_slots)?;
-
-            // Medusa's tree is static, so the final step cannot shrink
-            // its forward pass like PPD's dynamic set does — but its
-            // accounting is still capped to the kept tokens
-            eos_seen |= record_step(&mut res, &v.emitted, remaining, self.tree.input_len());
-
-            let hid = out.hidden_row(self.layout.node_input[v.final_node], d).to_vec();
-            guesses = self.guesses_from_hidden(&hid)?;
-            root = *v.emitted.last().unwrap();
+    fn step(&mut self, seq: &mut SeqState, cache: &mut HostKvCache) -> Result<StepOutcome> {
+        if let Some(r) = seq.finished {
+            return Ok(StepOutcome::Finished(r));
         }
-        res.decode_s = t1.elapsed().as_secs_f64();
-        truncate_at_eos(&mut res.tokens);
-        res.tokens.truncate(max_new);
-        Ok(res)
+        if seq.eos_seen {
+            return Ok(seq.finish(FinishReason::Eos));
+        }
+        if seq.res.tokens.len() >= seq.max_new {
+            return Ok(seq.finish(FinishReason::Budget));
+        }
+        let t = Instant::now();
+        let vocab = self.rt.cfg.vocab;
+        let d = self.rt.cfg.d_model;
+        let max_ctx = self.rt.cfg.max_ctx;
+        let remaining = seq.max_new - seq.res.tokens.len();
+
+        let (root, guesses) = {
+            let st = seq.inner.downcast_ref::<MedusaSeq>().expect("medusa seq state");
+            (st.root, st.guesses.clone())
+        };
+        let committed = cache.committed();
+        if committed + self.tree.input_len() + 2 >= max_ctx {
+            seq.res.decode_s += t.elapsed().as_secs_f64();
+            return Ok(seq.finish(FinishReason::Context));
+        }
+        let inputs = assemble_step(
+            &self.tree,
+            &self.layout,
+            &guesses,
+            root,
+            committed as u32,
+            committed,
+            max_ctx,
+        )?;
+        let out = self.rt.forward(
+            &inputs.tokens,
+            &inputs.pos,
+            &inputs.slots,
+            &inputs.bias,
+            cache.as_slice(),
+        )?;
+        cache.scatter(&out.new_kv, &inputs.slots)?;
+
+        let v = verify(&self.tree, &self.layout, &out, &inputs.tokens, self.mode, vocab, &mut seq.rng);
+        let mut accepted_slots = vec![inputs.slots[0]];
+        accepted_slots.extend(
+            v.accepted_nodes.iter().map(|&n| inputs.slots[self.layout.node_input[n]]),
+        );
+        cache.compact(&accepted_slots)?;
+
+        // Medusa's tree is static, so the final step cannot shrink
+        // its forward pass like PPD's dynamic set does — but its
+        // accounting is still capped to the kept tokens
+        seq.eos_seen |= record_step(&mut seq.res, &v.emitted, remaining, self.tree.input_len());
+
+        let hid = out.hidden_row(self.layout.node_input[v.final_node], d).to_vec();
+        let next_guesses = self.guesses_from_hidden(&hid)?;
+        let next_root = *v.emitted.last().unwrap();
+        {
+            let st = seq.inner.downcast_mut::<MedusaSeq>().expect("medusa seq state");
+            st.guesses = next_guesses;
+            st.root = next_root;
+        }
+        seq.res.decode_s += t.elapsed().as_secs_f64();
+        if seq.eos_seen {
+            return Ok(seq.finish(FinishReason::Eos));
+        }
+        if seq.res.tokens.len() >= seq.max_new {
+            return Ok(seq.finish(FinishReason::Budget));
+        }
+        Ok(StepOutcome::Running)
     }
 }

@@ -23,6 +23,7 @@ use anyhow::{bail, Result};
 use crate::config::EOS_ID;
 use crate::kvcache::HostKvCache;
 use crate::runtime::{Runtime, StepOutput, NEG_INF};
+use crate::util::rng::Rng;
 
 /// Outcome of one generation, with the accounting every bench needs.
 #[derive(Debug, Clone, Default)]
@@ -80,40 +81,159 @@ impl GenerationResult {
     }
 }
 
-/// A decoding engine; one instance serves one request at a time (each
-/// coordinator worker owns one engine).
+/// Why a sequence stopped decoding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// EOS landed in the kept region of a step
+    Eos,
+    /// the `max_new` token budget filled
+    Budget,
+    /// the KV cache / context window was exhausted
+    Context,
+}
+
+/// Outcome of one [`DecodeEngine::step`] call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepOutcome {
+    /// the sequence wants more steps
+    Running,
+    /// the sequence retired on this step (final truncation applied)
+    Finished(FinishReason),
+}
+
+/// Resumable per-sequence decode state — everything one in-flight
+/// request carries between steps, so an engine can interleave many
+/// sequences (continuous batching) without any of them observing the
+/// others.  The companion [`HostKvCache`] is owned by the scheduler and
+/// handed back on every [`DecodeEngine::step`] call.
 ///
-/// Engines do **not** own their KV cache: the hot entry point is
-/// [`DecodeEngine::generate_with_cache`], which borrows a
+/// The per-sequence [`Rng`] lives here (not on the engine): sampled
+/// output stays a pure function of `(prompt, max_new, seed)` no matter
+/// how sequences are interleaved.  `inner` holds the engine-specific
+/// loop state (PPD's tree-state machine, the speculative draft cache,
+/// …); engines downcast it in `step`.
+pub struct SeqState {
+    /// accumulated accounting; becomes the final [`GenerationResult`]
+    pub res: GenerationResult,
+    /// the request's token budget
+    pub max_new: usize,
+    /// EOS observed in a kept region (retire on the next check)
+    pub eos_seen: bool,
+    /// set once by [`SeqState::finish`]; `step` is a no-op afterwards
+    pub finished: Option<FinishReason>,
+    /// per-sequence sampling RNG, seeded from the request seed
+    pub rng: Rng,
+    /// engine-specific resumable state (downcast by the owning engine)
+    pub inner: Box<dyn std::any::Any + Send>,
+}
+
+impl SeqState {
+    pub fn new(max_new: usize, rng: Rng, inner: Box<dyn std::any::Any + Send>) -> Self {
+        SeqState {
+            res: GenerationResult::default(),
+            max_new,
+            eos_seen: false,
+            finished: None,
+            rng,
+            inner,
+        }
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.finished.is_some()
+    }
+
+    /// Retire the sequence: apply the final truncation (at EOS, then to
+    /// the token budget) exactly like the run-to-completion loops did.
+    pub fn finish(&mut self, reason: FinishReason) -> StepOutcome {
+        truncate_at_eos(&mut self.res.tokens);
+        self.res.tokens.truncate(self.max_new);
+        self.finished = Some(reason);
+        StepOutcome::Finished(reason)
+    }
+
+    pub fn into_result(self) -> GenerationResult {
+        self.res
+    }
+}
+
+/// A decoding engine; one instance may hold many in-flight sequences'
+/// worth of work, but all per-sequence state lives in [`SeqState`] —
+/// the engine itself only carries read-only configuration between
+/// steps, which is what makes step-level scheduling safe.
+///
+/// Engines do **not** own their KV cache: each sequence borrows a
 /// [`HostKvCache`] the caller provides — the coordinator checks caches
-/// out of a [`crate::kvcache::CachePool`] per request, so the ~MB cache
-/// allocation is amortized across requests instead of being repaid on
-/// every engine construction.  [`DecodeEngine::generate`] is a
-/// convenience wrapper for single-shot use (examples, benches).
+/// out of a [`crate::kvcache::CachePool`] per sequence, so the ~MB
+/// cache allocation is amortized across requests instead of being
+/// repaid on every engine construction.
+///
+/// The resumable API is [`DecodeEngine::begin_seq`] (prefill + first
+/// token) followed by repeated [`DecodeEngine::step`] calls, one PPD
+/// tree step each; [`DecodeEngine::generate_with_cache`] is the
+/// run-to-completion wrapper built on exactly that pair, and
+/// [`DecodeEngine::generate`] additionally allocates a throwaway cache
+/// (examples, benches).
 pub trait DecodeEngine {
     fn name(&self) -> &'static str;
 
     /// Cache shape this engine generates against:
     /// `(n_layers, max_ctx, d_model)` of the *target* model.
-    /// (Speculative engines keep their draft-model cache internal — its
-    /// shape differs and it never leaves the engine.)
+    /// (Speculative engines keep their draft-model cache inside
+    /// [`SeqState::inner`] — its shape differs and it never leaves the
+    /// sequence.)
     fn cache_shape(&self) -> (usize, usize, usize);
 
-    /// Reset all per-request state (sampling RNG, online proposer
-    /// pools) so the output depends only on `(prompt, max_new, seed)` —
-    /// this is what makes serving results independent of which worker
-    /// a request lands on.
+    /// Set the seed the next [`DecodeEngine::generate_with_cache`] call
+    /// runs under, so single-shot output depends only on
+    /// `(prompt, max_new, seed)` — never on which worker a request
+    /// lands on or what ran before it.
     fn begin_request(&mut self, seed: u64);
 
-    /// Generate up to `max_new` tokens greedily/with the engine's
-    /// configured sampling into the caller-provided cache, returning
-    /// the result accounting.  Implementations reset `cache` first.
+    /// The seed installed by [`DecodeEngine::begin_request`] (or the
+    /// constructor).
+    fn request_seed(&self) -> u64;
+
+    /// Start a resumable sequence: reset + prefill `cache` with
+    /// `prompt`, emit the first token, and return the state that
+    /// subsequent [`DecodeEngine::step`] calls advance.
+    fn begin_seq(
+        &mut self,
+        prompt: &[u32],
+        max_new: usize,
+        seed: u64,
+        cache: &mut HostKvCache,
+    ) -> Result<SeqState>;
+
+    /// Advance `seq` by one decode step (one target-model forward pass
+    /// for the tree engines; one draft-round + verification for the
+    /// speculative ones).  Calling `step` on a finished sequence is a
+    /// no-op returning the original [`FinishReason`].
+    fn step(&mut self, seq: &mut SeqState, cache: &mut HostKvCache) -> Result<StepOutcome>;
+
+    /// Run-to-completion wrapper over `begin_seq` + `step`: generate up
+    /// to `max_new` tokens into the caller-provided cache under the
+    /// seed from [`DecodeEngine::begin_request`].
+    ///
+    /// Each call advances the stored seed, so repeated single-shot
+    /// calls without an intervening `begin_request` (benches replaying
+    /// a trace at temperature > 0) draw fresh sampling streams per
+    /// call, as the pre-refactor engine-owned RNG did — while any
+    /// explicit `begin_request(seed)` still pins the next call exactly.
     fn generate_with_cache(
         &mut self,
         prompt: &[u32],
         max_new: usize,
         cache: &mut HostKvCache,
-    ) -> Result<GenerationResult>;
+    ) -> Result<GenerationResult> {
+        let seed = self.request_seed();
+        self.begin_request(seed.wrapping_add(1));
+        let mut seq = self.begin_seq(prompt, max_new, seed, cache)?;
+        while !seq.is_finished() {
+            self.step(&mut seq, cache)?;
+        }
+        Ok(seq.into_result())
+    }
 
     /// Single-shot wrapper that allocates a throwaway cache.
     fn generate(&mut self, prompt: &[u32], max_new: usize) -> Result<GenerationResult> {
@@ -227,6 +347,23 @@ mod tests {
         assert!(!record_step(&mut r, &[5, EOS_ID], 1, 3));
         let mut r2 = GenerationResult::default();
         assert!(record_step(&mut r2, &[5, EOS_ID], 2, 3));
+    }
+
+    #[test]
+    fn seq_finish_applies_final_truncation() {
+        // finish must replicate the run-to-completion epilogue exactly:
+        // truncate at EOS first, then to the token budget
+        let mut seq = SeqState::new(3, Rng::new(0), Box::new(()));
+        seq.res.tokens = vec![5, EOS_ID, 9, 10, 11];
+        let out = seq.finish(FinishReason::Budget);
+        assert_eq!(out, StepOutcome::Finished(FinishReason::Budget));
+        assert_eq!(seq.res.tokens, vec![5, EOS_ID]);
+        assert!(seq.is_finished());
+
+        let mut seq2 = SeqState::new(2, Rng::new(0), Box::new(()));
+        seq2.res.tokens = vec![7, 8, 9];
+        seq2.finish(FinishReason::Budget);
+        assert_eq!(seq2.res.tokens, vec![7, 8]);
     }
 
     #[test]

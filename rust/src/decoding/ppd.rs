@@ -11,6 +11,11 @@
 //! 4. compact the accepted rows in the KV cache;
 //! 5. extract the next guesses from the stopped node's prompt-chain
 //!    logits.
+//!
+//! The loop is expressed as one [`DecodeEngine::step`] per tree step,
+//! with the state machine's cursor (`root`, `guesses`, state index)
+//! carried in [`SeqState`] so the coordinator can interleave many
+//! sequences on one engine.
 
 use std::time::Instant;
 
@@ -26,14 +31,24 @@ use crate::util::rng::Rng;
 use crate::util::{softmax, topk};
 
 use super::verify::{softmax_temp, verify, VerifyMode};
-use super::{prefill, record_step, truncate_at_eos, DecodeEngine, GenerationResult};
+use super::{prefill, record_step, DecodeEngine, FinishReason, SeqState, StepOutcome};
 
 pub struct PpdEngine<'rt> {
     rt: &'rt Runtime,
     pub set: DynamicTreeSet,
     mode: VerifyMode,
     top_r: usize,
-    rng: Rng,
+    seed: u64,
+}
+
+/// Per-sequence cursor of the dynamic-tree state machine.
+struct PpdSeq {
+    /// previous step's bonus token (next step's tree root)
+    root: u32,
+    /// prompt-token guesses extracted from the stopped node
+    guesses: GuessSet,
+    /// prompt-chain length of the stopped node (selects `T_k`)
+    state: usize,
 }
 
 impl<'rt> PpdEngine<'rt> {
@@ -54,7 +69,7 @@ impl<'rt> PpdEngine<'rt> {
                 delta: cfg.typical_delta,
             }
         };
-        PpdEngine { rt, set, mode, top_r: cfg.top_r, rng: Rng::new(seed) }
+        PpdEngine { rt, set, mode, top_r: cfg.top_r, seed }
     }
 
     /// Extract next-step guesses from the stopped node's prompt chain.
@@ -76,12 +91,12 @@ impl<'rt> PpdEngine<'rt> {
         GuessSet { per_distance }
     }
 
-    fn pick_root(&mut self, logits: &[f32]) -> u32 {
+    fn pick_root(&self, logits: &[f32], rng: &mut Rng) -> u32 {
         match self.mode {
             VerifyMode::Greedy => crate::util::argmax(logits) as u32,
             VerifyMode::Typical { temperature, .. } => {
                 let p = softmax_temp(logits, temperature);
-                self.rng.sample_dist(&p) as u32
+                rng.sample_dist(&p) as u32
             }
         }
     }
@@ -97,85 +112,115 @@ impl DecodeEngine for PpdEngine<'_> {
     }
 
     fn begin_request(&mut self, seed: u64) {
-        self.rng = Rng::new(seed);
+        self.seed = seed;
     }
 
-    fn generate_with_cache(
+    fn request_seed(&self) -> u64 {
+        self.seed
+    }
+
+    fn begin_seq(
         &mut self,
         prompt: &[u32],
         max_new: usize,
+        seed: u64,
         cache: &mut HostKvCache,
-    ) -> Result<GenerationResult> {
-        let mut res = GenerationResult::default();
+    ) -> Result<SeqState> {
         cache.reset();
         let vocab = self.rt.cfg.vocab;
-        let max_ctx = self.rt.cfg.max_ctx;
+        let mut rng = Rng::new(seed);
 
         let t0 = Instant::now();
         let pre = prefill(self.rt, cache, prompt)?;
-        res.prefill_s = t0.elapsed().as_secs_f64();
+        let prefill_s = t0.elapsed().as_secs_f64();
 
         // the first root token comes from the prefill logits
-        let mut root = self.pick_root(pre.logits_row(pre.n - 1, vocab));
-        res.tokens.push(root);
-        // EOS tracked as a flag fed from each step's emitted tokens; the
-        // old `res.tokens.contains(EOS)` loop guard rescanned the whole
-        // output every step — O(n²) over the generation length
-        let mut eos_seen = root == crate::config::EOS_ID;
-        let mut guesses = GuessSet::default();
-        let mut state = 0usize; // no guesses yet -> root-only tree
+        let root = self.pick_root(pre.logits_row(pre.n - 1, vocab), &mut rng);
+        let inner = PpdSeq { root, guesses: GuessSet::default(), state: 0 };
+        let mut seq = SeqState::new(max_new, rng, Box::new(inner));
+        seq.res.prefill_s = prefill_s;
+        seq.res.tokens.push(root);
+        seq.eos_seen = root == crate::config::EOS_ID;
+        Ok(seq)
+    }
 
-        let t1 = Instant::now();
-        while res.tokens.len() < max_new && !eos_seen {
-            let remaining = max_new - res.tokens.len();
-            // a state-k tree emits at most k+1 tokens, so near the cap a
-            // shallower tree produces the same kept output with a much
-            // smaller forward pass
-            let state_k = state
-                .min(guesses.depth())
-                .min(self.set.trees.len() - 1)
-                .min(remaining - 1);
-            let tree = &self.set.trees[state_k];
-            let layout = &self.set.layouts[state_k];
-            let committed = cache.committed();
-            if committed + tree.input_len() + 2 >= max_ctx {
-                break; // context exhausted
-            }
-            let inputs = assemble_step(
-                tree,
-                layout,
-                &guesses,
-                root,
-                committed as u32,
-                committed,
-                max_ctx,
-            )?;
-            let out = self.rt.forward(
-                &inputs.tokens,
-                &inputs.pos,
-                &inputs.slots,
-                &inputs.bias,
-                cache.as_slice(),
-            )?;
-            cache.scatter(&out.new_kv, &inputs.slots)?;
-
-            let v = verify(tree, layout, &out, &inputs.tokens, self.mode, vocab, &mut self.rng);
-            // compact: root + accepted candidate rows become committed
-            let mut accepted_slots = vec![inputs.slots[0]];
-            accepted_slots.extend(
-                v.accepted_nodes.iter().map(|&n| inputs.slots[layout.node_input[n]]),
-            );
-            cache.compact(&accepted_slots)?;
-
-            eos_seen |= record_step(&mut res, &v.emitted, remaining, tree.input_len());
-
-            guesses = self.extract_guesses(layout, v.final_node, &out);
-            state = tree.nodes[v.final_node].prompt_len;
-            root = *v.emitted.last().unwrap();
+    fn step(&mut self, seq: &mut SeqState, cache: &mut HostKvCache) -> Result<StepOutcome> {
+        if let Some(r) = seq.finished {
+            return Ok(StepOutcome::Finished(r));
         }
-        res.decode_s = t1.elapsed().as_secs_f64();
-        truncate_at_eos(&mut res.tokens);
-        res.tokens.truncate(max_new);
-        Ok(res)
+        if seq.eos_seen {
+            return Ok(seq.finish(FinishReason::Eos));
+        }
+        if seq.res.tokens.len() >= seq.max_new {
+            return Ok(seq.finish(FinishReason::Budget));
+        }
+        let t = Instant::now();
+        let vocab = self.rt.cfg.vocab;
+        let max_ctx = self.rt.cfg.max_ctx;
+        let remaining = seq.max_new - seq.res.tokens.len();
+
+        let (root, state, guesses) = {
+            let st = seq.inner.downcast_ref::<PpdSeq>().expect("ppd seq state");
+            (st.root, st.state, st.guesses.clone())
+        };
+        // a state-k tree emits at most k+1 tokens, so near the cap a
+        // shallower tree produces the same kept output with a much
+        // smaller forward pass
+        let state_k = state
+            .min(guesses.depth())
+            .min(self.set.trees.len() - 1)
+            .min(remaining - 1);
+        let tree = &self.set.trees[state_k];
+        let layout = &self.set.layouts[state_k];
+        let committed = cache.committed();
+        if committed + tree.input_len() + 2 >= max_ctx {
+            seq.res.decode_s += t.elapsed().as_secs_f64();
+            return Ok(seq.finish(FinishReason::Context));
+        }
+        let inputs = assemble_step(
+            tree,
+            layout,
+            &guesses,
+            root,
+            committed as u32,
+            committed,
+            max_ctx,
+        )?;
+        let out = self.rt.forward(
+            &inputs.tokens,
+            &inputs.pos,
+            &inputs.slots,
+            &inputs.bias,
+            cache.as_slice(),
+        )?;
+        cache.scatter(&out.new_kv, &inputs.slots)?;
+
+        let v = verify(tree, layout, &out, &inputs.tokens, self.mode, vocab, &mut seq.rng);
+        // compact: root + accepted candidate rows become committed
+        let mut accepted_slots = vec![inputs.slots[0]];
+        accepted_slots.extend(
+            v.accepted_nodes.iter().map(|&n| inputs.slots[layout.node_input[n]]),
+        );
+        cache.compact(&accepted_slots)?;
+
+        seq.eos_seen |= record_step(&mut seq.res, &v.emitted, remaining, tree.input_len());
+
+        let next_guesses = self.extract_guesses(layout, v.final_node, &out);
+        let next_state = tree.nodes[v.final_node].prompt_len;
+        let next_root = *v.emitted.last().unwrap();
+        {
+            let st = seq.inner.downcast_mut::<PpdSeq>().expect("ppd seq state");
+            st.guesses = next_guesses;
+            st.state = next_state;
+            st.root = next_root;
+        }
+        seq.res.decode_s += t.elapsed().as_secs_f64();
+        if seq.eos_seen {
+            return Ok(seq.finish(FinishReason::Eos));
+        }
+        if seq.res.tokens.len() >= seq.max_new {
+            return Ok(seq.finish(FinishReason::Budget));
+        }
+        Ok(StepOutcome::Running)
     }
 }

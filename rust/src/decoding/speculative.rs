@@ -7,6 +7,11 @@
 //! Greedy variant: the target accepts the longest prefix of the draft
 //! chain matching its own argmax (plus one bonus token), so outputs are
 //! byte-identical to vanilla target decoding.
+//!
+//! One [`DecodeEngine::step`] = one speculation round (a draft chain +
+//! one target verification forward).  The draft-model KV cache is
+//! per-sequence state carried in [`SeqState`], so interleaved sequences
+//! each keep their own draft context.
 
 use std::time::Instant;
 
@@ -23,7 +28,7 @@ use crate::util::rng::Rng;
 use crate::util::{softmax, topk};
 
 use super::verify::{verify, VerifyMode};
-use super::{prefill, record_step, truncate_at_eos, DecodeEngine, GenerationResult};
+use super::{prefill, record_step, DecodeEngine, FinishReason, SeqState, StepOutcome};
 
 /// How the draft model produces its chain.
 pub enum DraftMode {
@@ -37,14 +42,24 @@ pub enum DraftMode {
 pub struct SpeculativeEngine<'a> {
     target: &'a Runtime,
     draft: &'a Runtime,
-    /// the draft model's cache shape differs from the target's, so it
-    /// stays engine-owned; the target cache is borrowed per call (and
-    /// pooled by the coordinator) like every other engine
-    draft_cache: HostKvCache,
     mode: DraftMode,
     /// speculation length per round
     pub gamma: usize,
-    rng: Rng,
+    seed: u64,
+    /// retired sequences' draft caches, reused by later `begin_seq`s so
+    /// steady-state serving allocates no draft cache per request (the
+    /// target cache is pooled by the coordinator; this is the engine-
+    /// local equivalent for the draft shape).  Bounded by the in-flight
+    /// budget: at most one entry per concurrently admitted sequence.
+    draft_free: Vec<HostKvCache>,
+}
+
+/// Per-sequence state: the cursor token plus the sequence's own
+/// draft-model KV cache (its shape differs from the target's and it
+/// never enters the shared pool).
+struct SpecSeq {
+    root: u32,
+    draft_cache: HostKvCache,
 }
 
 impl<'a> SpeculativeEngine<'a> {
@@ -71,22 +86,40 @@ impl<'a> SpeculativeEngine<'a> {
     }
 
     fn new(target: &'a Runtime, draft: &'a Runtime, mode: DraftMode, gamma: usize, seed: u64) -> Self {
-        SpeculativeEngine {
-            draft_cache: HostKvCache::new(draft.cfg.n_layers, draft.cfg.max_ctx, draft.cfg.d_model),
-            target,
-            draft,
-            mode,
-            gamma,
-            rng: Rng::new(seed),
+        SpeculativeEngine { target, draft, mode, gamma, seed, draft_free: Vec::new() }
+    }
+
+    fn draft_shape(&self) -> (usize, usize, usize) {
+        (self.draft.cfg.n_layers, self.draft.cfg.max_ctx, self.draft.cfg.d_model)
+    }
+
+    /// Retire a sequence: move its draft cache back to the engine's
+    /// free list (idempotent — a reclaimed slot holds a zero-layer
+    /// placeholder that fails the shape check; `RESERVED_SLOTS` rows
+    /// keep every accessor on it well-defined) and finish.
+    fn finish_and_reclaim(&mut self, seq: &mut SeqState, reason: FinishReason) -> StepOutcome {
+        if let Some(st) = seq.inner.downcast_mut::<SpecSeq>() {
+            let placeholder = HostKvCache::new(0, crate::kvcache::RESERVED_SLOTS, 0);
+            let dc = std::mem::replace(&mut st.draft_cache, placeholder);
+            if dc.shape() == self.draft_shape() {
+                self.draft_free.push(dc);
+            }
         }
+        seq.finish(reason)
     }
 
     /// Draft up to `limit` tokens continuing `root`; returns (chain,
-    /// #draft forwards).  The draft cache must already hold the
-    /// committed context *excluding* root.  `limit` is
-    /// `gamma.min(remaining - 1)` so the final round never drafts
-    /// tokens the budget cap would discard.
-    fn draft_chain(&mut self, root: u32, limit: usize) -> Result<(Vec<u32>, usize)> {
+    /// #draft forwards).  `draft_cache` must already hold the committed
+    /// context *excluding* root.  `limit` is `gamma.min(remaining - 1)`
+    /// so the final round never drafts tokens the budget cap would
+    /// discard.
+    fn draft_chain(
+        &self,
+        draft_cache: &mut HostKvCache,
+        rng: &mut Rng,
+        root: u32,
+        limit: usize,
+    ) -> Result<(Vec<u32>, usize)> {
         let vocab = self.draft.cfg.vocab;
         let s = self.draft.cfg.max_ctx;
         match &self.mode {
@@ -95,14 +128,14 @@ impl<'a> SpeculativeEngine<'a> {
                 let mut steps = 0;
                 let mut cur = root;
                 let mut bias = vec![NEG_INF; s];
-                while chain.len() < limit && self.draft_cache.remaining() > 1 {
-                    let c = self.draft_cache.committed();
+                while chain.len() < limit && draft_cache.remaining() > 1 {
+                    let c = draft_cache.committed();
                     for (j, b) in bias.iter_mut().enumerate() {
                         *b = if j <= c { 0.0 } else { NEG_INF };
                     }
-                    let out = self.draft.forward(&[cur], &[c as u32], &[c as u32], &bias, self.draft_cache.as_slice())?;
-                    self.draft_cache.scatter(&out.new_kv, &[c as u32])?;
-                    self.draft_cache.commit_contiguous(1)?;
+                    let out = self.draft.forward(&[cur], &[c as u32], &[c as u32], &bias, draft_cache.as_slice())?;
+                    draft_cache.scatter(&out.new_kv, &[c as u32])?;
+                    draft_cache.commit_contiguous(1)?;
                     steps += 1;
                     cur = argmax(out.logits_row(0, vocab)) as u32;
                     chain.push(cur);
@@ -111,25 +144,24 @@ impl<'a> SpeculativeEngine<'a> {
             }
             DraftMode::Ppd { set, top_r } => {
                 // guess-and-verify loop on the draft model
-                let set = set.clone();
                 let top_r = *top_r;
                 let mut chain: Vec<u32> = Vec::with_capacity(limit + 4);
                 let mut steps = 0;
                 let mut guesses = GuessSet::default();
                 let mut state = 0usize;
                 let mut cur = root;
-                while chain.len() < limit && self.draft_cache.remaining() > set.max_input_len() + 2 {
+                while chain.len() < limit && draft_cache.remaining() > set.max_input_len() + 2 {
                     let k = state.min(guesses.depth()).min(set.trees.len() - 1);
                     let tree = &set.trees[k];
                     let layout = &set.layouts[k];
-                    let committed = self.draft_cache.committed();
+                    let committed = draft_cache.committed();
                     let inputs = assemble_step(tree, layout, &guesses, cur, committed as u32, committed, s)?;
-                    let out = self.draft.forward(&inputs.tokens, &inputs.pos, &inputs.slots, &inputs.bias, self.draft_cache.as_slice())?;
-                    self.draft_cache.scatter(&out.new_kv, &inputs.slots)?;
-                    let v = verify(tree, layout, &out, &inputs.tokens, VerifyMode::Greedy, vocab, &mut self.rng);
+                    let out = self.draft.forward(&inputs.tokens, &inputs.pos, &inputs.slots, &inputs.bias, draft_cache.as_slice())?;
+                    draft_cache.scatter(&out.new_kv, &inputs.slots)?;
+                    let v = verify(tree, layout, &out, &inputs.tokens, VerifyMode::Greedy, vocab, rng);
                     let mut accepted_slots = vec![inputs.slots[0]];
                     accepted_slots.extend(v.accepted_nodes.iter().map(|&n| inputs.slots[layout.node_input[n]]));
-                    self.draft_cache.compact(&accepted_slots)?;
+                    draft_cache.compact(&accepted_slots)?;
                     steps += 1;
                     chain.extend_from_slice(&v.emitted);
                     // guesses for next draft round
@@ -151,19 +183,24 @@ impl<'a> SpeculativeEngine<'a> {
 
     /// Resync the draft cache after the target rejected a suffix: drop
     /// the speculated rows and re-ingest the accepted tokens.
-    fn draft_catch_up(&mut self, accepted: &[u32], target_committed: usize) -> Result<()> {
+    fn draft_catch_up(
+        &self,
+        draft_cache: &mut HostKvCache,
+        accepted: &[u32],
+        target_committed: usize,
+    ) -> Result<()> {
         // the draft cache may have advanced past / diverged from the
         // accepted prefix: rewind to the last agreed length then feed
         // the accepted tokens (minus the one reserved as next root)
         let agreed = target_committed.saturating_sub(accepted.len());
-        if self.draft_cache.committed() > agreed {
-            self.draft_cache.truncate(agreed)?;
+        if draft_cache.committed() > agreed {
+            draft_cache.truncate(agreed)?;
         }
         if accepted.is_empty() {
             return Ok(());
         }
         let s = self.draft.cfg.max_ctx;
-        let base = self.draft_cache.committed();
+        let base = draft_cache.committed();
         let n = accepted.len();
         let pos: Vec<u32> = (0..n as u32).map(|i| base as u32 + i).collect();
         let mut bias = vec![NEG_INF; n * s];
@@ -172,9 +209,9 @@ impl<'a> SpeculativeEngine<'a> {
                 bias[i * s + j] = 0.0;
             }
         }
-        let out = self.draft.forward(accepted, &pos, &pos, &bias, self.draft_cache.as_slice())?;
-        self.draft_cache.scatter(&out.new_kv, &pos)?;
-        self.draft_cache.commit_contiguous(n)?;
+        let out = self.draft.forward(accepted, &pos, &pos, &bias, draft_cache.as_slice())?;
+        draft_cache.scatter(&out.new_kv, &pos)?;
+        draft_cache.commit_contiguous(n)?;
         Ok(())
     }
 }
@@ -192,86 +229,123 @@ impl DecodeEngine for SpeculativeEngine<'_> {
     }
 
     fn begin_request(&mut self, seed: u64) {
-        self.rng = Rng::new(seed);
+        self.seed = seed;
     }
 
-    fn generate_with_cache(
+    fn request_seed(&self) -> u64 {
+        self.seed
+    }
+
+    fn begin_seq(
         &mut self,
         prompt: &[u32],
         max_new: usize,
+        seed: u64,
         target_cache: &mut HostKvCache,
-    ) -> Result<GenerationResult> {
-        let mut res = GenerationResult::default();
+    ) -> Result<SeqState> {
         target_cache.reset();
-        self.draft_cache.reset();
+        let mut draft_cache = self.draft_free.pop().unwrap_or_else(|| {
+            let (l, s, d) = self.draft_shape();
+            HostKvCache::new(l, s, d)
+        });
+        draft_cache.reset();
         let vocab = self.target.cfg.vocab;
-        let s = self.target.cfg.max_ctx;
 
         let t0 = Instant::now();
         let pre_t = prefill(self.target, target_cache, prompt)?;
-        prefill(self.draft, &mut self.draft_cache, prompt)?;
-        res.prefill_s = t0.elapsed().as_secs_f64();
+        prefill(self.draft, &mut draft_cache, prompt)?;
+        let prefill_s = t0.elapsed().as_secs_f64();
 
-        let mut root = argmax(pre_t.logits_row(pre_t.n - 1, vocab)) as u32;
-        res.tokens.push(root);
-        let mut eos_seen = root == crate::config::EOS_ID;
+        let root = argmax(pre_t.logits_row(pre_t.n - 1, vocab)) as u32;
+        let mut seq = SeqState::new(max_new, Rng::new(seed), Box::new(SpecSeq { root, draft_cache }));
+        seq.res.prefill_s = prefill_s;
+        seq.res.tokens.push(root);
+        seq.eos_seen = root == crate::config::EOS_ID;
+        Ok(seq)
+    }
 
-        let t1 = Instant::now();
-        'outer: while res.tokens.len() < max_new && !eos_seen {
-            let remaining = max_new - res.tokens.len();
-            let (chain, draft_steps) = self.draft_chain(root, self.gamma.min(remaining - 1))?;
-            res.draft_steps += draft_steps;
-            if chain.is_empty() && remaining > 1 {
-                break; // draft context exhausted mid-generation
-            }
-            // verify [root, chain...] against the target in one forward
-            // (with remaining == 1 the chain is empty and this is a
-            // plain one-token step producing the final bonus token)
-            let committed = target_cache.committed();
-            let n = 1 + chain.len();
-            if committed + n + 2 >= s || target_cache.remaining() < n + 2 {
-                break 'outer;
-            }
-            let mut tokens = Vec::with_capacity(n);
-            tokens.push(root);
-            tokens.extend_from_slice(&chain);
-            let pos: Vec<u32> = (0..n as u32).map(|i| committed as u32 + i).collect();
-            let mut bias = vec![NEG_INF; n * s];
-            for i in 0..n {
-                for j in 0..=(committed + i) {
-                    bias[i * s + j] = 0.0;
-                }
-            }
-            let out = self.target.forward(&tokens, &pos, &pos, &bias, target_cache.as_slice())?;
-            target_cache.scatter(&out.new_kv, &pos)?;
-
-            // longest matching prefix + bonus
-            let mut accepted = 0;
-            while accepted < chain.len() {
-                let want = argmax(out.logits_row(accepted, vocab)) as u32;
-                if chain[accepted] == want {
-                    accepted += 1;
-                } else {
-                    break;
-                }
-            }
-            let bonus = argmax(out.logits_row(accepted, vocab)) as u32;
-            // commit root + accepted chain rows (they are contiguous)
-            target_cache.commit_contiguous(1 + accepted)?;
-
-            let mut emitted: Vec<u32> = chain[..accepted].to_vec();
-            emitted.push(bonus);
-            eos_seen |= record_step(&mut res, &emitted, remaining, n);
-
-            // draft resync: accepted prefix (without bonus — that is the
-            // next root and will be fed on the next draft round)
-            let catch: Vec<u32> = std::iter::once(root).chain(chain[..accepted].iter().copied()).collect();
-            self.draft_catch_up(&catch, target_cache.committed())?;
-            root = bonus;
+    fn step(&mut self, seq: &mut SeqState, target_cache: &mut HostKvCache) -> Result<StepOutcome> {
+        if let Some(r) = seq.finished {
+            return Ok(StepOutcome::Finished(r));
         }
-        res.decode_s = t1.elapsed().as_secs_f64();
-        truncate_at_eos(&mut res.tokens);
-        res.tokens.truncate(max_new);
-        Ok(res)
+        if seq.eos_seen {
+            return Ok(self.finish_and_reclaim(seq, FinishReason::Eos));
+        }
+        if seq.res.tokens.len() >= seq.max_new {
+            return Ok(self.finish_and_reclaim(seq, FinishReason::Budget));
+        }
+        let t = Instant::now();
+        let vocab = self.target.cfg.vocab;
+        let s = self.target.cfg.max_ctx;
+        let remaining = seq.max_new - seq.res.tokens.len();
+
+        let root = seq.inner.downcast_ref::<SpecSeq>().expect("spec seq state").root;
+        let limit = self.gamma.min(remaining - 1);
+        let (chain, draft_steps) = {
+            let st = seq.inner.downcast_mut::<SpecSeq>().expect("spec seq state");
+            self.draft_chain(&mut st.draft_cache, &mut seq.rng, root, limit)?
+        };
+        seq.res.draft_steps += draft_steps;
+        if chain.is_empty() && remaining > 1 {
+            // draft context exhausted mid-generation
+            seq.res.decode_s += t.elapsed().as_secs_f64();
+            return Ok(self.finish_and_reclaim(seq, FinishReason::Context));
+        }
+        // verify [root, chain...] against the target in one forward
+        // (with remaining == 1 the chain is empty and this is a
+        // plain one-token step producing the final bonus token)
+        let committed = target_cache.committed();
+        let n = 1 + chain.len();
+        if committed + n + 2 >= s || target_cache.remaining() < n + 2 {
+            seq.res.decode_s += t.elapsed().as_secs_f64();
+            return Ok(self.finish_and_reclaim(seq, FinishReason::Context));
+        }
+        let mut tokens = Vec::with_capacity(n);
+        tokens.push(root);
+        tokens.extend_from_slice(&chain);
+        let pos: Vec<u32> = (0..n as u32).map(|i| committed as u32 + i).collect();
+        let mut bias = vec![NEG_INF; n * s];
+        for i in 0..n {
+            for j in 0..=(committed + i) {
+                bias[i * s + j] = 0.0;
+            }
+        }
+        let out = self.target.forward(&tokens, &pos, &pos, &bias, target_cache.as_slice())?;
+        target_cache.scatter(&out.new_kv, &pos)?;
+
+        // longest matching prefix + bonus
+        let mut accepted = 0;
+        while accepted < chain.len() {
+            let want = argmax(out.logits_row(accepted, vocab)) as u32;
+            if chain[accepted] == want {
+                accepted += 1;
+            } else {
+                break;
+            }
+        }
+        let bonus = argmax(out.logits_row(accepted, vocab)) as u32;
+        // commit root + accepted chain rows (they are contiguous)
+        target_cache.commit_contiguous(1 + accepted)?;
+
+        let mut emitted: Vec<u32> = chain[..accepted].to_vec();
+        emitted.push(bonus);
+        seq.eos_seen |= record_step(&mut seq.res, &emitted, remaining, n);
+
+        // draft resync: accepted prefix (without bonus — that is the
+        // next root and will be fed on the next draft round)
+        let catch: Vec<u32> = std::iter::once(root).chain(chain[..accepted].iter().copied()).collect();
+        {
+            let st = seq.inner.downcast_mut::<SpecSeq>().expect("spec seq state");
+            self.draft_catch_up(&mut st.draft_cache, &catch, target_cache.committed())?;
+            st.root = bonus;
+        }
+        seq.res.decode_s += t.elapsed().as_secs_f64();
+        if seq.eos_seen {
+            return Ok(self.finish_and_reclaim(seq, FinishReason::Eos));
+        }
+        if seq.res.tokens.len() >= seq.max_new {
+            return Ok(self.finish_and_reclaim(seq, FinishReason::Budget));
+        }
+        Ok(StepOutcome::Running)
     }
 }

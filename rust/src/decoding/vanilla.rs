@@ -10,25 +10,30 @@ use crate::util::argmax;
 use crate::util::rng::Rng;
 
 use super::verify::softmax_temp;
-use super::{prefill, truncate_at_eos, DecodeEngine, GenerationResult};
+use super::{prefill, DecodeEngine, FinishReason, SeqState, StepOutcome};
 
 pub struct VanillaEngine<'rt> {
     rt: &'rt Runtime,
     temperature: f32,
-    rng: Rng,
+    seed: u64,
+}
+
+/// Per-sequence state: just the next token to feed.
+struct VanillaSeq {
+    next: u32,
 }
 
 impl<'rt> VanillaEngine<'rt> {
     pub fn new(rt: &'rt Runtime, temperature: f32, seed: u64) -> Self {
-        VanillaEngine { rt, temperature, rng: Rng::new(seed) }
+        VanillaEngine { rt, temperature, seed }
     }
 
-    fn pick(&mut self, logits: &[f32]) -> u32 {
+    fn pick(&self, logits: &[f32], rng: &mut Rng) -> u32 {
         if self.temperature <= 0.0 {
             argmax(logits) as u32
         } else {
             let p = softmax_temp(logits, self.temperature);
-            self.rng.sample_dist(&p) as u32
+            rng.sample_dist(&p) as u32
         }
     }
 }
@@ -43,49 +48,72 @@ impl DecodeEngine for VanillaEngine<'_> {
     }
 
     fn begin_request(&mut self, seed: u64) {
-        self.rng = Rng::new(seed);
+        self.seed = seed;
     }
 
-    fn generate_with_cache(
+    fn request_seed(&self) -> u64 {
+        self.seed
+    }
+
+    fn begin_seq(
         &mut self,
         prompt: &[u32],
         max_new: usize,
+        seed: u64,
         cache: &mut HostKvCache,
-    ) -> Result<GenerationResult> {
-        let mut res = GenerationResult::default();
+    ) -> Result<SeqState> {
         cache.reset();
-        let s = self.rt.cfg.max_ctx;
         let vocab = self.rt.cfg.vocab;
+        let mut rng = Rng::new(seed);
 
         let t0 = Instant::now();
         let pre = prefill(self.rt, cache, prompt)?;
-        res.prefill_s = t0.elapsed().as_secs_f64();
+        let next = self.pick(pre.logits_row(pre.n - 1, vocab), &mut rng);
+        let mut seq = SeqState::new(max_new, rng, Box::new(VanillaSeq { next }));
+        seq.res.prefill_s = t0.elapsed().as_secs_f64();
+        Ok(seq)
+    }
 
-        let mut next = self.pick(pre.logits_row(pre.n - 1, vocab));
-        let t1 = Instant::now();
-        let mut bias = vec![NEG_INF; s];
-        while res.tokens.len() < max_new && cache.remaining() > 1 {
-            let c = cache.committed();
-            res.tokens.push(next);
-            // stop *before* the forward once the budget is filled — the
-            // old loop shape burned one extra forward pass computing a
-            // successor token that was never kept
-            if next == crate::config::EOS_ID || res.tokens.len() >= max_new {
-                break;
-            }
-            for (j, b) in bias.iter_mut().enumerate() {
-                *b = if j <= c { 0.0 } else { NEG_INF };
-            }
-            let out = self.rt.forward(&[next], &[c as u32], &[c as u32], &bias, cache.as_slice())?;
-            cache.scatter(&out.new_kv, &[c as u32])?;
-            cache.commit_contiguous(1)?;
-            res.steps += 1;
-            res.accepted_per_step.push(1);
-            res.input_lens.push(1);
-            next = self.pick(out.logits_row(0, vocab));
+    fn step(&mut self, seq: &mut SeqState, cache: &mut HostKvCache) -> Result<StepOutcome> {
+        if let Some(r) = seq.finished {
+            return Ok(StepOutcome::Finished(r));
         }
-        res.decode_s = t1.elapsed().as_secs_f64();
-        truncate_at_eos(&mut res.tokens);
-        Ok(res)
+        if seq.res.tokens.len() >= seq.max_new {
+            return Ok(seq.finish(FinishReason::Budget));
+        }
+        if cache.remaining() <= 1 {
+            return Ok(seq.finish(FinishReason::Context));
+        }
+        let t = Instant::now();
+        let s = self.rt.cfg.max_ctx;
+        let vocab = self.rt.cfg.vocab;
+        let next = seq.inner.downcast_ref::<VanillaSeq>().expect("vanilla seq state").next;
+
+        let c = cache.committed();
+        seq.res.tokens.push(next);
+        // stop *before* the forward once the budget is filled or EOS was
+        // emitted — a successor token would never be kept
+        if next == crate::config::EOS_ID {
+            seq.res.decode_s += t.elapsed().as_secs_f64();
+            return Ok(seq.finish(FinishReason::Eos));
+        }
+        if seq.res.tokens.len() >= seq.max_new {
+            seq.res.decode_s += t.elapsed().as_secs_f64();
+            return Ok(seq.finish(FinishReason::Budget));
+        }
+        let mut bias = vec![NEG_INF; s];
+        for b in bias.iter_mut().take(c + 1) {
+            *b = 0.0;
+        }
+        let out = self.rt.forward(&[next], &[c as u32], &[c as u32], &bias, cache.as_slice())?;
+        cache.scatter(&out.new_kv, &[c as u32])?;
+        cache.commit_contiguous(1)?;
+        seq.res.steps += 1;
+        seq.res.accepted_per_step.push(1);
+        seq.res.input_lens.push(1);
+        let picked = self.pick(out.logits_row(0, vocab), &mut seq.rng);
+        seq.inner.downcast_mut::<VanillaSeq>().expect("vanilla seq state").next = picked;
+        seq.res.decode_s += t.elapsed().as_secs_f64();
+        Ok(StepOutcome::Running)
     }
 }

@@ -16,13 +16,15 @@
 //! ## Pooling
 //!
 //! A cache is ~MBs and request lifetimes are short, so the serving
-//! layer never allocates caches per request: engines *borrow* a cache
-//! per `generate_with_cache` call, and the coordinator checks caches
-//! out of a [`CachePool`] (wrapped in a [`SharedCachePool`] so all
-//! worker threads draw from one free list).  The pool is bounded by
-//! construction — at most one cache per in-flight request, i.e. one per
-//! worker — which is the paper's runtime-memory story (≈0.0004%
-//! overhead) carried through to the serving layer.
+//! layer never allocates caches per request: each in-flight *sequence*
+//! borrows a cache for its lifetime, and the coordinator's step
+//! scheduler checks caches out of a [`CachePool`] (wrapped in a
+//! [`SharedCachePool`] so all worker threads draw from one free list).
+//! The pool enforces a hard cap — at most one cache per admitted
+//! sequence, i.e. `workers × max_inflight` — returning a typed
+//! [`PoolExhausted`] error rather than allocating past it, which is the
+//! paper's runtime-memory story (≈0.0004% overhead) carried through to
+//! the serving layer.
 
 use anyhow::{bail, Result};
 
@@ -167,25 +169,68 @@ impl HostKvCache {
     }
 }
 
+/// Typed error for a checkout that would exceed the pool's cap — the
+/// caller (the step scheduler) sized its admission budget wrong, or a
+/// cache leaked past its `checkin`.  Allocating anyway would silently
+/// unbound runtime memory, which is exactly the paper's memory story
+/// inverted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolExhausted {
+    /// the pool's outstanding-cache cap
+    pub cap: usize,
+}
+
+impl std::fmt::Display for PoolExhausted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "KV cache pool exhausted: {} caches already checked out", self.cap)
+    }
+}
+
+impl std::error::Error for PoolExhausted {}
+
 /// Pool of caches for concurrent sequences (the coordinator checks
-/// caches out per running request instead of reallocating ~MBs each
-/// time).  With `W` workers at most `W` requests run concurrently, so
-/// `created` converges to the worker count and stays there no matter
-/// how many requests flow through.
+/// caches out per in-flight sequence instead of reallocating ~MBs each
+/// time).  The pool is **bounded**: at most `cap` caches may be
+/// outstanding at once (the coordinator sizes it to
+/// `workers × max_inflight`), so `created` converges to the live
+/// concurrency and stays there no matter how many requests flow
+/// through — callers that outpace `checkin` get a typed
+/// [`PoolExhausted`] error instead of a silent allocation.
 #[derive(Debug)]
 pub struct CachePool {
     template: (usize, usize, usize),
     free: Vec<HostKvCache>,
     pub created: usize,
+    outstanding: usize,
+    cap: usize,
 }
 
 impl CachePool {
-    pub fn new(n_layers: usize, max_ctx: usize, d: usize) -> Self {
-        CachePool { template: (n_layers, max_ctx, d), free: Vec::new(), created: 0 }
+    pub fn new(n_layers: usize, max_ctx: usize, d: usize, cap: usize) -> Self {
+        CachePool {
+            template: (n_layers, max_ctx, d),
+            free: Vec::new(),
+            created: 0,
+            outstanding: 0,
+            cap: cap.max(1),
+        }
     }
 
-    pub fn checkout(&mut self) -> HostKvCache {
-        match self.free.pop() {
+    /// Caches currently checked out (≤ `cap`).
+    pub fn outstanding(&self) -> usize {
+        self.outstanding
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn checkout(&mut self) -> Result<HostKvCache, PoolExhausted> {
+        if self.outstanding >= self.cap {
+            return Err(PoolExhausted { cap: self.cap });
+        }
+        self.outstanding += 1;
+        Ok(match self.free.pop() {
             Some(mut c) => {
                 c.reset();
                 c
@@ -195,10 +240,11 @@ impl CachePool {
                 let (l, s, d) = self.template;
                 HostKvCache::new(l, s, d)
             }
-        }
+        })
     }
 
     pub fn checkin(&mut self, cache: HostKvCache) {
+        self.outstanding = self.outstanding.saturating_sub(1);
         // foreign shapes are dropped, not pooled: handing a wrong-shape
         // cache to a later checkout would make `forward` reject it
         if cache.shape() == self.template {
@@ -209,28 +255,42 @@ impl CachePool {
 
 /// Thread-safe, lazily-templated [`CachePool`] shared by the
 /// coordinator's workers.  The template shape is only known once the
-/// first worker has loaded its model config, hence the `Option`.
-#[derive(Debug, Default)]
+/// first worker has loaded its model config, hence the `Option`; the
+/// outstanding-cache cap is fixed at construction.
+#[derive(Debug)]
 pub struct SharedCachePool {
+    cap: usize,
     inner: std::sync::Mutex<Option<CachePool>>,
 }
 
 impl SharedCachePool {
-    pub fn new() -> Self {
-        Self::default()
+    pub fn new(cap: usize) -> Self {
+        SharedCachePool { cap: cap.max(1), inner: std::sync::Mutex::new(None) }
     }
 
     /// Check a cache out, initializing the pool template on first use.
-    pub fn checkout(&self, n_layers: usize, max_ctx: usize, d: usize) -> HostKvCache {
+    pub fn checkout(
+        &self,
+        n_layers: usize,
+        max_ctx: usize,
+        d: usize,
+    ) -> Result<HostKvCache, PoolExhausted> {
         let mut g = self.inner.lock().unwrap();
-        let pool = g.get_or_insert_with(|| CachePool::new(n_layers, max_ctx, d));
+        let cap = self.cap;
+        let pool = g.get_or_insert_with(|| CachePool::new(n_layers, max_ctx, d, cap));
         if pool.template != (n_layers, max_ctx, d) {
             // heterogeneous shapes (mixed models / per-worker configs):
             // serve a correctly-shaped unpooled cache instead of
             // silently substituting the template shape — checkin()
-            // drops it rather than polluting the free list
+            // drops it rather than polluting the free list.  It still
+            // counts against the cap: the cap bounds live cache memory,
+            // not just the template shape.
+            if pool.outstanding >= pool.cap {
+                return Err(PoolExhausted { cap: pool.cap });
+            }
             pool.created += 1;
-            return HostKvCache::new(n_layers, max_ctx, d);
+            pool.outstanding += 1;
+            return Ok(HostKvCache::new(n_layers, max_ctx, d));
         }
         pool.checkout()
     }
@@ -243,9 +303,18 @@ impl SharedCachePool {
     }
 
     /// Total caches ever allocated (the pool-efficiency metric: stays
-    /// at the worker count under steady load).
+    /// at `workers × max_inflight` under steady load).
     pub fn created(&self) -> usize {
         self.inner.lock().unwrap().as_ref().map_or(0, |p| p.created)
+    }
+
+    /// Caches currently checked out across all workers.
+    pub fn outstanding(&self) -> usize {
+        self.inner.lock().unwrap().as_ref().map_or(0, |p| p.outstanding)
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
     }
 }
 
@@ -331,52 +400,87 @@ mod tests {
 
     #[test]
     fn pool_reuses() {
-        let mut p = CachePool::new(2, 16, 4);
-        let mut a = p.checkout();
+        let mut p = CachePool::new(2, 16, 4, 8);
+        let mut a = p.checkout().unwrap();
         a.commit_contiguous(3).unwrap();
         p.checkin(a);
-        let b = p.checkout();
+        let b = p.checkout().unwrap();
         assert_eq!(b.committed(), 0);
         assert_eq!(p.created, 1);
-        let _c = p.checkout();
+        let _c = p.checkout().unwrap();
         assert_eq!(p.created, 2);
     }
 
     #[test]
     fn pool_rejects_foreign_shapes() {
-        let mut p = CachePool::new(2, 16, 4);
+        let mut p = CachePool::new(2, 16, 4, 8);
         p.checkin(HostKvCache::new(3, 16, 4)); // wrong layer count
-        let c = p.checkout();
+        let c = p.checkout().unwrap();
         assert_eq!(c.shape(), (2, 16, 4));
         assert_eq!(p.created, 1);
     }
 
     #[test]
+    fn pool_cap_is_enforced_with_typed_error() {
+        // regression: checkout used to silently allocate without bound
+        // when callers outpaced checkin
+        let mut p = CachePool::new(2, 16, 4, 2);
+        let a = p.checkout().unwrap();
+        let b = p.checkout().unwrap();
+        assert_eq!(p.outstanding(), 2);
+        let err = p.checkout().unwrap_err();
+        assert_eq!(err, PoolExhausted { cap: 2 });
+        assert!(format!("{err}").contains("exhausted"));
+        // created never grew past the cap
+        assert_eq!(p.created, 2);
+        // a checkin frees a slot again
+        p.checkin(a);
+        let c = p.checkout().unwrap();
+        assert_eq!(c.shape(), (2, 16, 4));
+        drop(b);
+    }
+
+    #[test]
     fn shared_pool_is_lazy_and_bounded() {
-        let p = SharedCachePool::new();
+        let p = SharedCachePool::new(8);
         assert_eq!(p.created(), 0);
-        let a = p.checkout(2, 16, 4);
-        let b = p.checkout(2, 16, 4);
+        let a = p.checkout(2, 16, 4).unwrap();
+        let b = p.checkout(2, 16, 4).unwrap();
         assert_eq!(p.created(), 2);
+        assert_eq!(p.outstanding(), 2);
         p.checkin(a);
         p.checkin(b);
+        assert_eq!(p.outstanding(), 0);
         // steady state: repeated checkout/checkin allocates nothing new
         for _ in 0..8 {
-            let c = p.checkout(2, 16, 4);
+            let c = p.checkout(2, 16, 4).unwrap();
             p.checkin(c);
         }
         assert_eq!(p.created(), 2);
     }
 
     #[test]
+    fn shared_pool_enforces_cap() {
+        let p = SharedCachePool::new(1);
+        let a = p.checkout(2, 16, 4).unwrap();
+        assert!(p.checkout(2, 16, 4).is_err());
+        // foreign shapes count against the cap too (they are live memory)
+        assert!(p.checkout(3, 32, 4).is_err());
+        p.checkin(a);
+        assert!(p.checkout(2, 16, 4).is_ok());
+    }
+
+    #[test]
     fn shared_pool_serves_foreign_shapes_unpooled() {
-        let p = SharedCachePool::new();
-        let a = p.checkout(2, 16, 4); // sets the template
-        let b = p.checkout(3, 32, 4); // foreign shape: must not be coerced
+        let p = SharedCachePool::new(8);
+        let a = p.checkout(2, 16, 4).unwrap(); // sets the template
+        let b = p.checkout(3, 32, 4).unwrap(); // foreign shape: must not be coerced
         assert_eq!(b.shape(), (3, 32, 4));
+        assert_eq!(p.outstanding(), 2);
         p.checkin(a);
         p.checkin(b); // foreign cache is dropped, not pooled
-        let c = p.checkout(2, 16, 4);
+        assert_eq!(p.outstanding(), 0);
+        let c = p.checkout(2, 16, 4).unwrap();
         assert_eq!(c.shape(), (2, 16, 4));
     }
 }

@@ -10,9 +10,12 @@
 //! * [`kvcache`]  — host-authoritative KV cache with tree compaction
 //! * [`tree`]     — sparse trees; dynamic state machine (Props 4.1–4.4);
 //!                  hardware-aware sizing
-//! * [`decoding`] — vanilla / PPD / Medusa / lookup / speculative engines
+//! * [`decoding`] — vanilla / PPD / Medusa / lookup / speculative
+//!                  engines, all resumable (`begin_seq`/`step`)
 //! * [`coordinator`] — multi-worker serving layer: shared work queue,
-//!                  pooled KV caches, out-of-order completion, TCP server
+//!                  step-level continuous batching (`--max-inflight`),
+//!                  capped KV-cache pool, cancellation/queue-aging,
+//!                  out-of-order completion, TCP server
 //! * [`workload`] — trace loading + synthetic workload generation
 pub mod baselines;
 pub mod config;

@@ -16,7 +16,7 @@ use std::path::PathBuf;
 use anyhow::{anyhow, bail, Context, Result};
 
 use ppd::config::{ArtifactPaths, ModelConfig, ServeConfig};
-use ppd::coordinator::{build_engine, Coordinator, EngineKind};
+use ppd::coordinator::{build_engine, Coordinator, EngineKind, SchedPolicy};
 use ppd::decoding::DecodeEngine;
 use ppd::runtime::calibrate::Calibration;
 use ppd::runtime::Runtime;
@@ -117,6 +117,9 @@ fn print_help() {
            info        list artifact models and configs\n\
            generate    --model M --engine {{{}}} --prompt TEXT [--max-new N] [--temp T]\n\
            serve       --model M [--port 7878] [--engine ppd] [--workers N]\n\
+                       [--max-inflight 4] [--max-queue-age-ms MS]\n\
+                       continuous batching: each worker interleaves up to\n\
+                       --max-inflight sequences one decode step at a time\n\
            calibrate   --model M [--force]  measure per-bucket forward latency\n\
            sweep       --model M            theoretical-speedup curve vs tree size\n\
            trees       --model M            print the dynamic sparse tree set\n\n\
@@ -190,11 +193,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let port: u16 = args.get("port").unwrap_or("7878").parse()?;
     let kind = EngineKind::parse(args.get("engine").unwrap_or("ppd"))?;
     let workers: usize = args.get("workers").unwrap_or("1").parse().context("--workers")?;
+    let mut policy = SchedPolicy::default();
+    if let Some(m) = args.get("max-inflight") {
+        policy.max_inflight = m.parse().context("--max-inflight")?;
+    }
+    if let Some(ms) = args.get("max-queue-age-ms") {
+        let ms: u64 = ms.parse().context("--max-queue-age-ms")?;
+        policy.max_queue_age = Some(std::time::Duration::from_millis(ms));
+    }
     let draft = match kind {
         EngineKind::Spec | EngineKind::SpecPpd => Some(args.get("draft").unwrap_or("ppd-d").to_string()),
         _ => None,
     };
-    let coord = Coordinator::spawn(args.artifacts(), args.model(), draft, kind, args.serve_cfg()?, workers)?;
+    let coord = Coordinator::spawn_with_policy(
+        args.artifacts(),
+        args.model(),
+        draft,
+        kind,
+        args.serve_cfg()?,
+        workers,
+        policy,
+    )?;
     let max = args.get("max-requests").map(|m| m.parse()).transpose()?;
     ppd::coordinator::server::serve(coord, &format!("127.0.0.1:{port}"), max)
 }

@@ -72,9 +72,10 @@ impl LatencyHistogram {
     }
 }
 
-/// Work-queue accounting shared between the coordinator (producer
-/// side) and its workers (consumer side).  All atomic — incremented on
-/// the submit/dispatch hot path without taking the queue lock twice.
+/// Work-queue + step-scheduler accounting shared between the
+/// coordinator (producer side) and its workers (consumer side).  All
+/// atomic — incremented on the submit/dispatch hot path without taking
+/// the queue lock twice.
 #[derive(Debug, Default)]
 pub struct QueueStats {
     /// requests accepted into the queue
@@ -87,8 +88,18 @@ pub struct QueueStats {
     rejected: AtomicU64,
     /// high-water mark of the queue depth
     max_depth: AtomicU64,
-    /// workers currently inside `generate`
+    /// sequences currently admitted into a worker's step scheduler
     busy_workers: AtomicU64,
+    /// sequences admitted into a step scheduler (post queue-age check)
+    admitted: AtomicU64,
+    /// individual decode steps executed across all schedulers
+    sched_steps: AtomicU64,
+    /// high-water mark of any single worker's in-flight sequence count
+    max_inflight_seqs: AtomicU64,
+    /// jobs dropped at admission because they aged out in the queue
+    expired: AtomicU64,
+    /// sequences aborted mid-flight by their cancel flag
+    cancelled: AtomicU64,
 }
 
 impl QueueStats {
@@ -114,6 +125,28 @@ impl QueueStats {
     pub fn on_complete(&self) {
         self.completed.fetch_add(1, Ordering::Relaxed);
         self.busy_workers.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Record an admission into a step scheduler whose in-flight set
+    /// now holds `inflight_now` sequences.
+    pub fn on_admit(&self, inflight_now: usize) {
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+        self.max_inflight_seqs.fetch_max(inflight_now as u64, Ordering::Relaxed);
+    }
+
+    /// Record one decode step of one in-flight sequence.
+    pub fn on_step(&self) {
+        self.sched_steps.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a job dropped at admission by the max-queue-age policy.
+    pub fn on_expire(&self) {
+        self.expired.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a sequence aborted by its cancel flag.
+    pub fn on_cancel(&self) {
+        self.cancelled.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Requests accepted but not yet picked up (the live queue depth).
@@ -150,6 +183,26 @@ impl QueueStats {
         self.busy_workers.load(Ordering::Relaxed)
     }
 
+    pub fn admitted_total(&self) -> u64 {
+        self.admitted.load(Ordering::Relaxed)
+    }
+
+    pub fn sched_steps_total(&self) -> u64 {
+        self.sched_steps.load(Ordering::Relaxed)
+    }
+
+    pub fn max_inflight_seqs(&self) -> u64 {
+        self.max_inflight_seqs.load(Ordering::Relaxed)
+    }
+
+    pub fn expired_total(&self) -> u64 {
+        self.expired.load(Ordering::Relaxed)
+    }
+
+    pub fn cancelled_total(&self) -> u64 {
+        self.cancelled.load(Ordering::Relaxed)
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("enqueued", Json::Num(self.enqueued_total() as f64)),
@@ -159,6 +212,11 @@ impl QueueStats {
             ("in_flight", Json::Num(self.in_flight() as f64)),
             ("max_depth", Json::Num(self.max_depth() as f64)),
             ("busy_workers", Json::Num(self.busy_workers() as f64)),
+            ("admitted", Json::Num(self.admitted_total() as f64)),
+            ("sched_steps", Json::Num(self.sched_steps_total() as f64)),
+            ("max_inflight_seqs", Json::Num(self.max_inflight_seqs() as f64)),
+            ("expired", Json::Num(self.expired_total() as f64)),
+            ("cancelled", Json::Num(self.cancelled_total() as f64)),
         ])
     }
 }
@@ -171,6 +229,16 @@ pub struct ServeReport {
     pub decode_steps: u64,
     pub wall_s: f64,
     pub request_latency: Option<Box<LatencyHistogram>>,
+    /// sequences admitted into step schedulers (from [`QueueStats`])
+    pub admitted: u64,
+    /// scheduler decode steps executed (from [`QueueStats`])
+    pub sched_steps: u64,
+    /// high-water mark of per-worker in-flight depth (from [`QueueStats`])
+    pub peak_inflight: u64,
+    /// jobs dropped by the max-queue-age policy
+    pub expired: u64,
+    /// sequences aborted by cancellation
+    pub cancelled: u64,
 }
 
 impl ServeReport {
@@ -185,6 +253,16 @@ impl ServeReport {
         if let Some(h) = self.request_latency.as_mut() {
             h.record(latency);
         }
+    }
+
+    /// Copy the scheduler-side counters out of the live [`QueueStats`]
+    /// (call once at the end of a serving run).
+    pub fn absorb_queue_stats(&mut self, q: &QueueStats) {
+        self.admitted = q.admitted_total();
+        self.sched_steps = q.sched_steps_total();
+        self.peak_inflight = q.max_inflight_seqs();
+        self.expired = q.expired_total();
+        self.cancelled = q.cancelled_total();
     }
 
     pub fn throughput_tok_s(&self) -> f64 {
@@ -215,6 +293,11 @@ impl ServeReport {
             ("p50_latency_s", Json::Num(h.map_or(0.0, |h| h.quantile_s(0.5)))),
             ("p95_latency_s", Json::Num(h.map_or(0.0, |h| h.quantile_s(0.95)))),
             ("mean_latency_s", Json::Num(h.map_or(0.0, |h| h.mean_s()))),
+            ("admitted", Json::Num(self.admitted as f64)),
+            ("sched_steps", Json::Num(self.sched_steps as f64)),
+            ("peak_inflight", Json::Num(self.peak_inflight as f64)),
+            ("expired", Json::Num(self.expired as f64)),
+            ("cancelled", Json::Num(self.cancelled as f64)),
         ])
     }
 }
@@ -260,6 +343,54 @@ mod tests {
         let j = q.to_json();
         assert_eq!(j.req("enqueued").unwrap().as_usize().unwrap(), 2);
         assert_eq!(j.req("rejected").unwrap().as_usize().unwrap(), 1);
+    }
+
+    #[test]
+    fn scheduler_counters_track_admission_and_steps() {
+        let q = QueueStats::new();
+        q.on_enqueue(1);
+        q.on_dequeue();
+        q.on_admit(1);
+        q.on_enqueue(1);
+        q.on_dequeue();
+        q.on_admit(2);
+        assert_eq!(q.admitted_total(), 2);
+        assert_eq!(q.max_inflight_seqs(), 2);
+        // busy_workers doubles as the live in-flight sequence gauge
+        assert_eq!(q.busy_workers(), 2);
+        q.on_step();
+        q.on_step();
+        q.on_step();
+        assert_eq!(q.sched_steps_total(), 3);
+        q.on_expire();
+        q.on_cancel();
+        assert_eq!(q.expired_total(), 1);
+        assert_eq!(q.cancelled_total(), 1);
+        q.on_complete();
+        q.on_complete();
+        assert_eq!(q.busy_workers(), 0);
+        let j = q.to_json();
+        assert_eq!(j.req("admitted").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.req("sched_steps").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.req("max_inflight_seqs").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.req("expired").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(j.req("cancelled").unwrap().as_usize().unwrap(), 1);
+    }
+
+    #[test]
+    fn report_absorbs_queue_stats() {
+        let q = QueueStats::new();
+        q.on_admit(3);
+        q.on_step();
+        q.on_expire();
+        let mut r = ServeReport::new();
+        r.absorb_queue_stats(&q);
+        assert_eq!(r.admitted, 1);
+        assert_eq!(r.sched_steps, 1);
+        assert_eq!(r.peak_inflight, 3);
+        assert_eq!(r.expired, 1);
+        let j = r.to_json();
+        assert_eq!(j.req("peak_inflight").unwrap().as_usize().unwrap(), 3);
     }
 
     #[test]

@@ -12,35 +12,42 @@
 //!    multiple workers;
 //!  * multi-worker output is byte-identical to the single-worker path
 //!    and to a directly-driven engine (same prompt/max_new/seed);
-//!  * `CachePool.created` never exceeds the worker count, no matter how
-//!    many batches flow through;
+//!  * `CachePool.created` never exceeds workers × max-inflight, no
+//!    matter how many batches flow through;
 //!  * identical seeds give identical outputs regardless of which worker
 //!    serves the request;
 //!  * over-capacity submits are rejected and counted (backpressure);
 //!  * the TCP server serves concurrent connections over the pool.
 
+use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::Result;
 
-use ppd::coordinator::{serve_jobs, Coordinator, Request, WorkerBackend, WorkerCtx};
-use ppd::decoding::{DecodeEngine, GenerationResult};
+use ppd::coordinator::{serve_jobs, Coordinator, Request, SchedPolicy, WorkerBackend, WorkerCtx};
+use ppd::decoding::{DecodeEngine, FinishReason, SeqState, StepOutcome};
 use ppd::kvcache::HostKvCache;
 use ppd::util::rng::Rng;
 use ppd::workload;
 
 /// Deterministic engine: output tokens are a pure function of
-/// (prompt, max_new, seed).  Commits the borrowed cache to exercise the
-/// pool and sleeps a little so jobs genuinely overlap across workers.
+/// (prompt, max_new, seed) — drawn up front in `begin_seq` and emitted
+/// one per step.  Commits the borrowed cache to exercise the pool and
+/// sleeps a little during prefill so jobs genuinely overlap across
+/// workers.
 struct MockEngine {
-    rng: Rng,
+    seed: u64,
     delay: Duration,
+}
+
+struct MockSeq {
+    pending: VecDeque<u32>,
 }
 
 impl MockEngine {
     fn new(delay: Duration) -> Self {
-        MockEngine { rng: Rng::new(0), delay }
+        MockEngine { seed: 0, delay }
     }
 }
 
@@ -54,15 +61,20 @@ impl DecodeEngine for MockEngine {
     }
 
     fn begin_request(&mut self, seed: u64) {
-        self.rng = Rng::new(seed);
+        self.seed = seed;
     }
 
-    fn generate_with_cache(
+    fn request_seed(&self) -> u64 {
+        self.seed
+    }
+
+    fn begin_seq(
         &mut self,
         prompt: &[u32],
         max_new: usize,
+        seed: u64,
         cache: &mut HostKvCache,
-    ) -> Result<GenerationResult> {
+    ) -> Result<SeqState> {
         // token 0 is unreachable from workload::encode on real text;
         // tests use it to simulate a request that panics the engine
         if prompt.first() == Some(&0) {
@@ -71,16 +83,37 @@ impl DecodeEngine for MockEngine {
         cache.reset();
         cache.commit_contiguous(prompt.len().min(cache.capacity()))?;
         std::thread::sleep(self.delay);
-        let mut res = GenerationResult::default();
+        let mut rng = Rng::new(seed);
         let base: u64 = prompt.iter().map(|&t| t as u64).sum();
-        for i in 0..max_new {
-            let r = self.rng.below(97) as u64;
-            res.tokens.push(((base + i as u64 + r) % 127) as u32);
+        let pending: VecDeque<u32> = (0..max_new as u64)
+            .map(|i| {
+                let r = rng.below(97) as u64;
+                ((base + i + r) % 127) as u32
+            })
+            .collect();
+        let mut seq = SeqState::new(max_new, rng, Box::new(MockSeq { pending }));
+        seq.res.decode_s = 1e-3;
+        Ok(seq)
+    }
+
+    fn step(&mut self, seq: &mut SeqState, _cache: &mut HostKvCache) -> Result<StepOutcome> {
+        if let Some(r) = seq.finished {
+            return Ok(StepOutcome::Finished(r));
         }
-        res.steps = max_new.max(1);
-        res.accepted_per_step = vec![1; res.steps];
-        res.decode_s = 1e-3;
-        Ok(res)
+        let tok = seq.inner.downcast_mut::<MockSeq>().expect("mock seq state").pending.pop_front();
+        match tok {
+            Some(t) => {
+                seq.res.tokens.push(t);
+                seq.res.steps += 1;
+                seq.res.accepted_per_step.push(1);
+                if seq.res.tokens.len() >= seq.max_new {
+                    Ok(seq.finish(FinishReason::Budget))
+                } else {
+                    Ok(StepOutcome::Running)
+                }
+            }
+            None => Ok(seq.finish(FinishReason::Budget)),
+        }
     }
 }
 
@@ -155,19 +188,28 @@ fn multi_worker_matches_single_worker_byte_for_byte() {
 }
 
 #[test]
-fn cache_pool_never_exceeds_worker_count() {
+fn cache_pool_never_exceeds_admission_budget() {
+    // with step-level batching the bound is workers × max_inflight —
+    // one cache per admitted sequence, reused across batches
     let workers = 3;
-    let coord = spawn_mock(workers, 2);
+    let max_inflight = 2;
+    let coord = Coordinator::spawn_with_backend_policy(
+        Arc::new(MockBackend { delay: Duration::from_millis(2) }),
+        workers,
+        SchedPolicy { max_inflight, max_queue_age: None },
+    )
+    .expect("spawn");
     for _ in 0..5 {
         let resps = coord.run_batch(mk_reqs(24)).expect("batch");
         assert_eq!(resps.len(), 24);
         let created = coord.caches_created();
         assert!(created >= 1, "pool never used");
         assert!(
-            created <= workers,
-            "pool allocated {created} caches for {workers} workers"
+            created <= workers * max_inflight,
+            "pool allocated {created} caches for {workers} workers × {max_inflight} inflight"
         );
     }
+    assert_eq!(coord.caches_outstanding(), 0, "all caches must return to the pool");
 }
 
 #[test]

@@ -11,7 +11,7 @@
 use std::path::PathBuf;
 
 use ppd::config::{ArtifactPaths, ServeConfig};
-use ppd::coordinator::{build_engine, Coordinator, EngineKind, Request};
+use ppd::coordinator::{build_engine, Coordinator, EngineKind, Request, SchedPolicy};
 use ppd::decoding::vanilla::VanillaEngine;
 use ppd::decoding::DecodeEngine;
 use ppd::runtime::Runtime;
@@ -240,14 +240,18 @@ fn coordinator_multi_worker_matches_single_worker() {
     // request ids, byte-identical greedy outputs to the single-worker
     // path, and cache checkouts served from the pool (created <= workers)
     let Some(root) = artifacts_root() else { return };
+    // max_inflight 1 reproduces the strictly-serial PR 1 behavior: the
+    // pool bound collapses back to one cache per worker
+    let serial = SchedPolicy { max_inflight: 1, max_queue_age: None };
     let spawn = |workers| {
-        Coordinator::spawn(
+        Coordinator::spawn_with_policy(
             root.clone(),
             "ppd-d".into(),
             None,
             EngineKind::Ppd,
             greedy_cfg(),
             workers,
+            serial,
         )
         .unwrap()
     };
@@ -268,6 +272,43 @@ fn coordinator_multi_worker_matches_single_worker() {
     }
     assert!(multi.caches_created() <= 2, "pool leaked: {}", multi.caches_created());
     assert_eq!(single.caches_created(), 1);
+}
+
+#[test]
+fn continuous_batching_matches_serial_on_real_ppd_engine() {
+    // the step-scheduler acceptance invariant on the *real* engine:
+    // interleaving many PPD sequences on one worker must be token-exact
+    // with serving them one at a time — all per-sequence state (tree
+    // cursor, guesses, RNG) travels with the sequence
+    let Some(root) = artifacts_root() else { return };
+    let spawn = |max_inflight| {
+        Coordinator::spawn_with_policy(
+            root.clone(),
+            "ppd-d".into(),
+            None,
+            EngineKind::Ppd,
+            greedy_cfg(),
+            1,
+            SchedPolicy { max_inflight, max_queue_age: None },
+        )
+        .unwrap()
+    };
+    let batching = spawn(4);
+    let serial = spawn(1);
+    let mk = || -> Vec<Request> {
+        (0..8)
+            .map(|i| Request::new(i, workload::encode(PROMPTS[i as usize % 3]), 16 + (i as usize % 3) * 4))
+            .collect()
+    };
+    let a = batching.run_batch(mk()).unwrap();
+    let b = serial.run_batch(mk()).unwrap();
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert!(x.error.is_none(), "{:?}", x.error);
+        assert_eq!(x.tokens, y.tokens, "request {i} perturbed by continuous batching");
+    }
+    assert!(batching.caches_created() <= 4);
+    assert_eq!(batching.caches_outstanding(), 0);
+    assert!(batching.queue_stats().max_inflight_seqs() >= 2, "batch never interleaved");
 }
 
 #[test]

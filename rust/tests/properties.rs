@@ -202,6 +202,89 @@ fn prop_kvcache_matches_reference_simulator() {
     }
 }
 
+#[test]
+fn prop_cache_scatter_compact_truncate_roundtrip() {
+    // scatter a block of scratch rows, accept a random increasing
+    // subset, compact, then randomly truncate (mid-flight abort) and
+    // rebuild: the committed region must always hold exactly the
+    // accepted rows in order, and committed() must account for every
+    // compact/truncate exactly
+    let planes = 4;
+    let s = 48;
+    let d = 2;
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed + 977);
+        let mut cache = HostKvCache::new(planes / 2, s, d);
+        // shadow model: the row values the committed region must hold
+        let mut committed_rows: Vec<f32> = Vec::new(); // value tag per slot
+        let mut next_val = 1.0f32;
+        for _round in 0..12 {
+            let committed = cache.committed();
+            assert_eq!(committed, committed_rows.len(), "seed {seed}");
+            if committed + 8 >= cache.capacity() {
+                break;
+            }
+            // scatter k scratch rows at committed..committed+k, each row
+            // filled with a unique tag value
+            let k = 1 + rng.below(6);
+            let slots: Vec<u32> = (0..k).map(|i| (committed + i) as u32).collect();
+            let mut new_kv = Vec::with_capacity(planes * k * d);
+            for p in 0..planes {
+                for i in 0..k {
+                    for _ in 0..d {
+                        new_kv.push(next_val + (p * 100 + i) as f32);
+                    }
+                }
+            }
+            cache.scatter(&new_kv, &slots).unwrap();
+            // accept a random increasing subset (always keep the root)
+            let mut accepted = vec![slots[0]];
+            let mut accepted_tags = vec![next_val];
+            for (i, &sl) in slots.iter().enumerate().skip(1) {
+                if rng.next_f64() < 0.6 {
+                    accepted.push(sl);
+                    accepted_tags.push(next_val + i as f32);
+                }
+            }
+            next_val += 1000.0;
+            cache.compact(&accepted).unwrap();
+            committed_rows.extend_from_slice(&accepted_tags);
+            assert_eq!(cache.committed(), committed_rows.len(), "seed {seed}");
+            // every accepted row landed in the committed region, in
+            // order, in every plane (row (p, i) was written as
+            // tag + p*100, so the plane offset reconstructs exactly)
+            for (slot, &tag) in committed_rows.iter().enumerate() {
+                for p in 0..planes {
+                    assert_eq!(
+                        cache.row(p, slot)[0],
+                        tag + (p * 100) as f32,
+                        "seed {seed} plane {p} slot {slot}"
+                    );
+                }
+            }
+            // occasionally truncate (mid-flight abort / retry)
+            if rng.next_f64() < 0.3 && cache.committed() > 0 {
+                let keep = rng.below(cache.committed() + 1);
+                cache.truncate(keep).unwrap();
+                committed_rows.truncate(keep);
+                assert_eq!(cache.committed(), keep, "seed {seed}");
+                // rows below the truncation point are untouched
+                for (slot, &tag) in committed_rows.iter().enumerate() {
+                    assert_eq!(
+                        cache.row(0, slot)[0],
+                        tag,
+                        "seed {seed} slot {slot} after truncate"
+                    );
+                }
+            }
+        }
+        // reset round-trip: committed drops to zero, reuse works
+        cache.reset();
+        assert_eq!(cache.committed(), 0, "seed {seed}");
+        assert_eq!(cache.remaining(), cache.capacity(), "seed {seed}");
+    }
+}
+
 /// Brute force: deepest node whose whole path matches argmax chain.
 fn brute_force_greedy(tree: &SparseTree, tokens: &[u32], argmax: &dyn Fn(usize) -> u32) -> Vec<usize> {
     let layout = tree.layout();

@@ -1,0 +1,520 @@
+//! Deterministic step-scheduler test harness (no model artifacts, no
+//! threads for the core tests): a mock engine implements BOTH decode
+//! paths —
+//!
+//!  * `generate_with_cache` is **overridden** with a monolithic
+//!    run-to-completion loop (the PR 1 worker behavior), and
+//!  * `begin_seq`/`step` implement the same token function
+//!    incrementally, drawing one RNG value per step from the
+//!    *sequence's own* RNG,
+//!
+//! so driving [`StepScheduler`] by hand and comparing token streams
+//! proves the continuous-batching machinery is output-transparent:
+//! admission order, interleaving depth, and retirement order must not
+//! perturb any sequence.  The mock additionally verifies on every step
+//! that it was handed back *its own* KV cache (committed length grows
+//! by exactly one per step), so cache swaps between sequences cannot go
+//! unnoticed.
+//!
+//! Scripted orderings covered:
+//!  * token-exact equivalence: step-scheduled (max_inflight ∈ {1,2,4})
+//!    vs the run-to-completion reference, same requests;
+//!  * a sequence admitted mid-flight never perturbs a running one;
+//!  * out-of-order retirement routes every reply to its own channel;
+//!  * queue-aging drops stale jobs with an error response;
+//!  * cancellation before admission and mid-flight, freeing the cache
+//!    back to the pool;
+//!  * the full coordinator (threads + queue + scheduler) end to end,
+//!    with the worker count taken from `PPD_TEST_WORKERS` (CI matrix).
+
+use std::sync::mpsc;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use ppd::coordinator::queue::Job;
+use ppd::coordinator::{
+    serve_jobs, Coordinator, Request, Response, SchedPolicy, StepScheduler, WorkerBackend,
+    WorkerCtx,
+};
+use ppd::decoding::{DecodeEngine, FinishReason, GenerationResult, SeqState, StepOutcome};
+use ppd::kvcache::{HostKvCache, SharedCachePool};
+use ppd::metrics::QueueStats;
+use ppd::util::rng::Rng;
+use ppd::workload;
+
+const SHAPE: (usize, usize, usize) = (2, 64, 4);
+
+/// Deterministic mock: token i of a request is
+/// `(sum(prompt) + i + rng_i) % 127` where `rng_i` is the i-th draw of
+/// `Rng::new(seed)`.  The step path draws lazily from `SeqState::rng`;
+/// the run-to-completion override draws from its own local RNG — if
+/// interleaving ever leaks RNG draws (or caches) across sequences, the
+/// two paths diverge.
+struct MockEngine {
+    seed: u64,
+    /// artificial per-step latency (threaded tests need steps to take
+    /// long enough that cancellation can land mid-flight)
+    step_delay: Duration,
+}
+
+struct MockSeq {
+    base: u64,
+    /// committed length this sequence expects to find in *its* cache
+    expect_committed: usize,
+}
+
+impl MockEngine {
+    fn new() -> Self {
+        MockEngine { seed: 0, step_delay: Duration::ZERO }
+    }
+
+    fn with_delay(step_delay: Duration) -> Self {
+        MockEngine { seed: 0, step_delay }
+    }
+}
+
+impl DecodeEngine for MockEngine {
+    fn name(&self) -> &'static str {
+        "sched-mock"
+    }
+
+    fn cache_shape(&self) -> (usize, usize, usize) {
+        SHAPE
+    }
+
+    fn begin_request(&mut self, seed: u64) {
+        self.seed = seed;
+    }
+
+    fn request_seed(&self) -> u64 {
+        self.seed
+    }
+
+    fn begin_seq(
+        &mut self,
+        prompt: &[u32],
+        max_new: usize,
+        seed: u64,
+        cache: &mut HostKvCache,
+    ) -> Result<SeqState> {
+        if prompt.first() == Some(&0) {
+            panic!("mock engine panic");
+        }
+        cache.reset();
+        let committed = prompt.len().min(cache.capacity());
+        cache.commit_contiguous(committed)?;
+        let base: u64 = prompt.iter().map(|&t| t as u64).sum();
+        Ok(SeqState::new(
+            max_new,
+            Rng::new(seed),
+            Box::new(MockSeq { base, expect_committed: committed }),
+        ))
+    }
+
+    fn step(&mut self, seq: &mut SeqState, cache: &mut HostKvCache) -> Result<StepOutcome> {
+        if let Some(r) = seq.finished {
+            return Ok(StepOutcome::Finished(r));
+        }
+        if seq.res.tokens.len() >= seq.max_new {
+            return Ok(seq.finish(FinishReason::Budget));
+        }
+        if !self.step_delay.is_zero() {
+            std::thread::sleep(self.step_delay);
+        }
+        let (base, expect) = {
+            let st = seq.inner.downcast_ref::<MockSeq>().expect("mock seq state");
+            (st.base, st.expect_committed)
+        };
+        // the scheduler must hand each sequence its own cache back:
+        // committed length is this sequence's step counter
+        if cache.committed() != expect {
+            bail!("cache mixup: committed {} != expected {}", cache.committed(), expect);
+        }
+        if cache.remaining() > 0 {
+            cache.commit_contiguous(1)?;
+        }
+        let i = seq.res.tokens.len() as u64;
+        let r = seq.rng.below(97) as u64;
+        seq.res.tokens.push(((base + i + r) % 127) as u32);
+        seq.res.steps += 1;
+        seq.res.accepted_per_step.push(1);
+        seq.res.input_lens.push(1);
+        seq.inner.downcast_mut::<MockSeq>().expect("mock seq state").expect_committed =
+            cache.committed();
+        if seq.res.tokens.len() >= seq.max_new {
+            return Ok(seq.finish(FinishReason::Budget));
+        }
+        Ok(StepOutcome::Running)
+    }
+
+    /// The PR 1 run-to-completion path, kept monolithic on purpose: the
+    /// reference the step-scheduled outputs must match token-exactly.
+    fn generate_with_cache(
+        &mut self,
+        prompt: &[u32],
+        max_new: usize,
+        cache: &mut HostKvCache,
+    ) -> Result<GenerationResult> {
+        if prompt.first() == Some(&0) {
+            panic!("mock engine panic");
+        }
+        cache.reset();
+        cache.commit_contiguous(prompt.len().min(cache.capacity()))?;
+        let mut rng = Rng::new(self.seed);
+        let base: u64 = prompt.iter().map(|&t| t as u64).sum();
+        let mut res = GenerationResult::default();
+        for i in 0..max_new as u64 {
+            let r = rng.below(97) as u64;
+            res.tokens.push(((base + i + r) % 127) as u32);
+        }
+        res.steps = max_new.max(1);
+        res.accepted_per_step = vec![1; res.steps];
+        res.decode_s = 1e-3;
+        Ok(res)
+    }
+}
+
+/// Run-to-completion reference output for (prompt, max_new, seed).
+fn reference_tokens(prompt: &[u32], max_new: usize, seed: u64) -> Vec<u32> {
+    let mut e = MockEngine::new();
+    e.begin_request(seed);
+    e.generate(prompt, max_new).unwrap().tokens
+}
+
+fn mk_req(id: u64, text: &str, max_new: usize) -> Request {
+    Request::new(id, workload::encode(text), max_new)
+}
+
+/// Harness state for hand-scripted schedules.
+struct Harness {
+    engine: MockEngine,
+    pool: SharedCachePool,
+    stats: QueueStats,
+    sched: StepScheduler,
+    rx: mpsc::Receiver<Response>,
+    tx: mpsc::Sender<Response>,
+}
+
+impl Harness {
+    fn new(max_inflight: usize, max_queue_age: Option<Duration>) -> Self {
+        let (tx, rx) = mpsc::channel();
+        Harness {
+            engine: MockEngine::new(),
+            pool: SharedCachePool::new(max_inflight),
+            stats: QueueStats::new(),
+            sched: StepScheduler::new(0, SchedPolicy { max_inflight, max_queue_age }),
+            rx,
+            tx,
+        }
+    }
+
+    fn admit(&mut self, req: Request) -> (bool, ppd::coordinator::CancelFlag) {
+        let job = Job::new(req, self.tx.clone());
+        let cancel = job.cancel.clone();
+        let admitted = self.sched.admit(&mut self.engine, &self.pool, &self.stats, job);
+        (admitted, cancel)
+    }
+
+    fn tick(&mut self) -> usize {
+        self.sched.tick(&mut self.engine, &self.pool, &self.stats)
+    }
+
+    fn drain(&mut self) -> Vec<Response> {
+        while !self.sched.is_empty() {
+            self.tick();
+        }
+        let mut out = Vec::new();
+        while let Ok(r) = self.rx.try_recv() {
+            out.push(r);
+        }
+        out
+    }
+}
+
+#[test]
+fn step_path_matches_run_to_completion_directly() {
+    // sanity before any scheduling: begin_seq + step loop == monolith
+    let mut via_steps = MockEngine::new();
+    let mut cache = HostKvCache::new(SHAPE.0, SHAPE.1, SHAPE.2);
+    let prompt = workload::encode("step equivalence");
+    let mut seq = via_steps.begin_seq(&prompt, 10, 7, &mut cache).unwrap();
+    while !seq.is_finished() {
+        via_steps.step(&mut seq, &mut cache).unwrap();
+    }
+    assert_eq!(seq.into_result().tokens, reference_tokens(&prompt, 10, 7));
+}
+
+#[test]
+fn scheduler_outputs_are_token_exact_for_every_inflight_depth() {
+    let reqs: Vec<Request> = (0..6u64)
+        .map(|i| mk_req(i, &format!("request number {i}"), 6 + i as usize))
+        .collect();
+    let expect: Vec<Vec<u32>> = reqs
+        .iter()
+        .map(|r| reference_tokens(&r.prompt, r.max_new, r.seed))
+        .collect();
+
+    for max_inflight in [1usize, 2, 4] {
+        let mut h = Harness::new(max_inflight, None);
+        let mut pending = reqs.clone().into_iter();
+        let mut next = pending.next();
+        // script: admit whenever a slot is free, tick otherwise
+        while next.is_some() || !h.sched.is_empty() {
+            while h.sched.has_capacity() {
+                match next.take() {
+                    Some(r) => {
+                        let (ok, _) = h.admit(r);
+                        assert!(ok, "admission refused with free capacity");
+                        next = pending.next();
+                    }
+                    None => break,
+                }
+            }
+            h.tick();
+        }
+        let mut resps = h.drain();
+        resps.sort_by_key(|r| r.id);
+        assert_eq!(resps.len(), 6, "max_inflight={max_inflight}");
+        for (r, want) in resps.iter().zip(&expect) {
+            assert!(r.error.is_none(), "max_inflight={max_inflight}: {:?}", r.error);
+            assert_eq!(
+                r.tokens, *want,
+                "max_inflight={max_inflight} perturbed request {}",
+                r.id
+            );
+        }
+        // the pool never allocated beyond the admission budget
+        assert!(h.pool.created() <= max_inflight);
+        assert_eq!(h.pool.outstanding(), 0);
+        assert_eq!(h.stats.admitted_total(), 6);
+        assert!(h.stats.max_inflight_seqs() as usize <= max_inflight);
+    }
+}
+
+#[test]
+fn mid_flight_admission_never_perturbs_a_running_sequence() {
+    let a = mk_req(0, "long running sequence a", 12);
+    let b = mk_req(1, "late arrival b", 5);
+    let want_a = reference_tokens(&a.prompt, a.max_new, a.seed);
+    let want_b = reference_tokens(&b.prompt, b.max_new, b.seed);
+
+    let mut h = Harness::new(2, None);
+    let (ok, _) = h.admit(a);
+    assert!(ok);
+    // A runs alone for three steps...
+    for _ in 0..3 {
+        assert_eq!(h.tick(), 1);
+    }
+    // ...then B is admitted mid-flight and they interleave
+    let (ok, _) = h.admit(b);
+    assert!(ok);
+    assert_eq!(h.sched.len(), 2);
+    let mut resps = h.drain();
+    resps.sort_by_key(|r| r.id);
+    assert_eq!(resps[0].tokens, want_a, "mid-flight admission perturbed A");
+    assert_eq!(resps[1].tokens, want_b, "interleaving perturbed B");
+    // B (5 tokens) retired before A (12 tokens) despite admission order
+    assert_eq!(h.stats.max_inflight_seqs(), 2);
+}
+
+#[test]
+fn out_of_order_retirement_routes_replies_to_their_own_channels() {
+    // two reply channels, different lengths: the short one's response
+    // must arrive on its own channel while the long one is in flight
+    let mut engine = MockEngine::new();
+    let pool = SharedCachePool::new(2);
+    let stats = QueueStats::new();
+    let mut sched = StepScheduler::new(0, SchedPolicy { max_inflight: 2, max_queue_age: None });
+
+    let (tx_long, rx_long) = mpsc::channel();
+    let (tx_short, rx_short) = mpsc::channel();
+    let long = mk_req(10, "the long request", 9);
+    let short = mk_req(11, "short", 2);
+    let want_long = reference_tokens(&long.prompt, long.max_new, long.seed);
+    let want_short = reference_tokens(&short.prompt, short.max_new, short.seed);
+
+    sched.admit(&mut engine, &pool, &stats, Job::new(long, tx_long));
+    sched.admit(&mut engine, &pool, &stats, Job::new(short, tx_short));
+    sched.tick(&mut engine, &pool, &stats);
+    sched.tick(&mut engine, &pool, &stats);
+    // short (2 tokens) is done; long is still running
+    let r_short = rx_short.try_recv().expect("short retired first");
+    assert_eq!(r_short.id, 11);
+    assert_eq!(r_short.tokens, want_short);
+    assert!(rx_long.try_recv().is_err(), "long must still be in flight");
+    assert_eq!(sched.len(), 1);
+    while !sched.is_empty() {
+        sched.tick(&mut engine, &pool, &stats);
+    }
+    let r_long = rx_long.try_recv().expect("long retired");
+    assert_eq!(r_long.id, 10);
+    assert_eq!(r_long.tokens, want_long);
+}
+
+#[test]
+fn stale_job_is_dropped_with_an_error_response() {
+    let mut h = Harness::new(2, Some(Duration::from_millis(30)));
+    let job_req = mk_req(0, "will expire", 4);
+    let fresh_req = mk_req(1, "still fresh", 4);
+    let want_fresh = reference_tokens(&fresh_req.prompt, 4, 1);
+
+    // build the stale job first, let it age past the deadline
+    let stale = Job::new(job_req, h.tx.clone());
+    std::thread::sleep(Duration::from_millis(60));
+    let admitted = h.sched.admit(&mut h.engine, &h.pool, &h.stats, stale);
+    assert!(!admitted, "stale job must not be admitted");
+    assert_eq!(h.stats.expired_total(), 1);
+    let resp = h.rx.try_recv().expect("expired job still gets a response");
+    assert_eq!(resp.id, 0);
+    let msg = resp.error.as_deref().unwrap_or_default();
+    assert!(msg.contains("max queue age"), "unexpected error: {msg}");
+    // no cache was consumed by the drop
+    assert_eq!(h.pool.outstanding(), 0);
+
+    // a fresh job on the same scheduler still runs normally
+    let (ok, _) = h.admit(fresh_req);
+    assert!(ok);
+    let resps = h.drain();
+    assert_eq!(resps.len(), 1);
+    assert_eq!(resps[0].tokens, want_fresh);
+}
+
+#[test]
+fn cancelled_job_is_refused_at_admission() {
+    let mut h = Harness::new(2, None);
+    let job = Job::new(mk_req(0, "cancel me early", 8), h.tx.clone());
+    job.cancel.cancel();
+    let admitted = h.sched.admit(&mut h.engine, &h.pool, &h.stats, job);
+    assert!(!admitted);
+    assert_eq!(h.stats.cancelled_total(), 1);
+    let resp = h.rx.try_recv().expect("cancelled job gets an error response");
+    assert!(resp.error.as_deref().unwrap_or_default().contains("cancelled"));
+    assert_eq!(h.pool.outstanding(), 0);
+}
+
+#[test]
+fn cancelled_inflight_sequence_frees_its_cache() {
+    let mut h = Harness::new(2, None);
+    let (ok, cancel) = h.admit(mk_req(0, "cancel me mid flight", 50));
+    assert!(ok);
+    h.tick();
+    h.tick();
+    assert_eq!(h.pool.outstanding(), 1, "running sequence holds its cache");
+    cancel.cancel();
+    let still_running = h.tick();
+    assert_eq!(still_running, 0, "cancelled sequence must retire on the next tick");
+    assert_eq!(h.pool.outstanding(), 0, "cancel must return the cache to the pool");
+    assert_eq!(h.stats.cancelled_total(), 1);
+    let resp = h.rx.try_recv().expect("cancelled sequence answers its channel");
+    assert!(resp.error.as_deref().unwrap_or_default().contains("cancelled"));
+    // the freed cache is immediately reusable
+    let (ok, _) = h.admit(mk_req(1, "next request reuses the slot", 3));
+    assert!(ok);
+    assert_eq!(h.pool.created(), 1, "cancelled sequence's cache was reused, not reallocated");
+}
+
+#[test]
+fn panicking_begin_seq_refuses_job_and_keeps_scheduler_alive() {
+    let mut h = Harness::new(2, None);
+    // prompt token 0 is unreachable from workload::encode on real text;
+    // the mock uses it to simulate an engine panic
+    let job = Job::new(Request::new(0, vec![0], 4), h.tx.clone());
+    let admitted = h.sched.admit(&mut h.engine, &h.pool, &h.stats, job);
+    assert!(!admitted);
+    let resp = h.rx.try_recv().expect("panic surfaces as error response");
+    assert!(resp.error.as_deref().unwrap_or_default().contains("panic"));
+    assert_eq!(h.pool.outstanding(), 0, "panicked admission must not leak its cache");
+    // scheduler still serves
+    let (ok, _) = h.admit(mk_req(1, "after the panic", 3));
+    assert!(ok);
+    assert_eq!(h.drain().len(), 1);
+}
+
+// ---- full coordinator (threads + queue + scheduler) ----
+
+struct MockBackend {
+    step_delay: Duration,
+}
+
+impl WorkerBackend for MockBackend {
+    fn run(&self, worker: usize, ctx: WorkerCtx) {
+        let mut engine = MockEngine::with_delay(self.step_delay);
+        ctx.ready();
+        serve_jobs(worker, &mut engine, &ctx);
+    }
+}
+
+fn test_workers() -> usize {
+    std::env::var("PPD_TEST_WORKERS")
+        .ok()
+        .and_then(|w| w.parse().ok())
+        .unwrap_or(2)
+}
+
+#[test]
+fn coordinator_continuous_batching_is_token_exact_end_to_end() {
+    let workers = test_workers();
+    let reqs = |n: u64| -> Vec<Request> {
+        (0..n).map(|i| mk_req(i, &format!("e2e request {i}"), 4 + (i as usize % 7))).collect()
+    };
+    let expect: Vec<Vec<u32>> = reqs(24)
+        .iter()
+        .map(|r| reference_tokens(&r.prompt, r.max_new, r.seed))
+        .collect();
+
+    let batching = Coordinator::spawn_with_backend_policy(
+        std::sync::Arc::new(MockBackend { step_delay: Duration::ZERO }),
+        workers,
+        SchedPolicy { max_inflight: 4, max_queue_age: None },
+    )
+    .expect("spawn batching");
+    let serial = Coordinator::spawn_with_backend_policy(
+        std::sync::Arc::new(MockBackend { step_delay: Duration::ZERO }),
+        workers,
+        SchedPolicy { max_inflight: 1, max_queue_age: None },
+    )
+    .expect("spawn serial");
+
+    let a = batching.run_batch(reqs(24)).expect("batching batch");
+    let b = serial.run_batch(reqs(24)).expect("serial batch");
+    for (i, ((x, y), want)) in a.iter().zip(&b).zip(&expect).enumerate() {
+        assert!(x.error.is_none(), "{:?}", x.error);
+        assert_eq!(x.id, i as u64);
+        assert_eq!(x.tokens, *want, "continuous batching perturbed request {i}");
+        assert_eq!(x.tokens, y.tokens, "max_inflight=4 diverged from max_inflight=1");
+    }
+    // pool stays within the admission budget; all caches returned
+    assert!(batching.caches_created() <= workers * 4);
+    assert_eq!(batching.caches_outstanding(), 0);
+    let stats = batching.queue_stats();
+    assert_eq!(stats.completed_total(), 24);
+    assert_eq!(stats.admitted_total(), 24);
+    assert!(stats.sched_steps_total() > 0);
+    assert!(stats.max_inflight_seqs() <= 4);
+}
+
+#[test]
+fn coordinator_cancel_flag_aborts_inflight_request() {
+    let coord = Coordinator::spawn_with_backend_policy(
+        std::sync::Arc::new(MockBackend { step_delay: Duration::from_millis(2) }),
+        1,
+        SchedPolicy { max_inflight: 2, max_queue_age: None },
+    )
+    .expect("spawn");
+    let (tx, rx) = mpsc::channel();
+    let cancel = ppd::coordinator::CancelFlag::new();
+    // ~20s of work without cancellation: the 50ms cancel must cut it
+    coord
+        .submit_cancellable(mk_req(0, "very long", 10_000), tx, cancel.clone())
+        .expect("submit");
+    std::thread::sleep(Duration::from_millis(50));
+    cancel.cancel();
+    let resp = rx.recv_timeout(Duration::from_secs(5)).expect("cancel response");
+    assert!(
+        resp.error.as_deref().unwrap_or_default().contains("cancelled"),
+        "{:?}",
+        resp.error
+    );
+    assert_eq!(coord.caches_outstanding(), 0);
+}
