@@ -5,7 +5,12 @@
 //! verification -> KV compaction, caches pooled), and reports
 //! latency/throughput like a serving benchmark.
 //!
-//!     cargo run --release --example serve_requests [model] [engine] [workers]
+//!     cargo run --release --example serve_requests [model] [engine] [workers] [fuse]
+//!
+//! Pass `fuse` as the 4th argument to batch every in-flight tree step
+//! into one device call per tick; the final device line reports
+//! forwards-per-token either way, which is where the batching win
+//! shows up.
 
 use std::time::Duration;
 use std::time::Instant;
@@ -13,7 +18,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use ppd::config::{ArtifactPaths, ServeConfig};
-use ppd::coordinator::{Coordinator, EngineKind, Request};
+use ppd::coordinator::{Coordinator, EngineKind, Request, SchedPolicy};
 use ppd::metrics::ServeReport;
 use ppd::util::bench::Table;
 use ppd::workload::load_trace;
@@ -27,12 +32,23 @@ fn main() -> Result<()> {
         .map(|w| w.parse().expect("workers must be a number"))
         .unwrap_or(2);
     let kind = EngineKind::parse(&engine)?;
+    let fuse_steps = std::env::args().nth(4).as_deref() == Some("fuse");
     let max_new = 48;
 
     let cfg = ServeConfig { n_candidates: 6, n_prompt_budget: 10, ..Default::default() };
-    println!("spawning coordinator: model={model} engine={engine} workers={workers}");
+    println!(
+        "spawning coordinator: model={model} engine={engine} workers={workers} fuse={fuse_steps}"
+    );
     let draft = matches!(kind, EngineKind::Spec | EngineKind::SpecPpd).then(|| "ppd-d".to_string());
-    let coord = Coordinator::spawn(root.clone(), model.clone(), draft, kind, cfg, workers)?;
+    let coord = Coordinator::spawn_with_policy(
+        root.clone(),
+        model.clone(),
+        draft,
+        kind,
+        cfg,
+        workers,
+        SchedPolicy { fuse_steps, ..Default::default() },
+    )?;
 
     let mut table = Table::new(&["task", "reqs", "tok", "tok/s", "mean tau", "p50 lat (ms)", "p95 lat (ms)"]);
     let paths = ArtifactPaths::new(root, &model);
@@ -78,6 +94,20 @@ fn main() -> Result<()> {
         coord.queue_stats().to_json(),
         coord.caches_created(),
         coord.workers()
+    );
+    // device-call accounting: workers flush their RuntimeStats on
+    // drain, so shut the pool down first, then report forwards per
+    // token — the number --fuse-steps exists to shrink
+    let agg = coord.runtime_agg();
+    drop(coord);
+    let rt_stats = agg.snapshot();
+    let tokens = grand.generated_tokens.max(1);
+    println!(
+        "device: {} forwards ({} fused batches, mean width {:.2}) -> {:.3} forwards/token",
+        rt_stats.forwards,
+        rt_stats.forward_batches,
+        rt_stats.mean_batch_rows(),
+        rt_stats.forwards as f64 / tokens as f64
     );
     Ok(())
 }

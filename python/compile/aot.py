@@ -14,6 +14,10 @@ Outputs per model, under ``artifacts/<model>/``:
   weights.json       ordered (name, shape, offset_f32, len_f32) manifest
   weights.bin        little-endian f32 flat dump, same order
   fwd_n<k>.hlo.txt   forward graph for each input-length bucket k
+  fwd_b<b>_n<k>.hlo.txt  batched forward: b sequences x k tree tokens
+                     (vmap of the single-sequence graph; the rust
+                     coordinator's --fuse-steps path runs one of these
+                     per scheduler tick instead of b separate forwards)
   medusa.hlo.txt     (if heads trained) hidden -> [K, V] head logits
 
 Usage:  python -m compile.aot [--models ppd-m,...] [--out ../artifacts]
@@ -40,6 +44,12 @@ BUCKETS = [1, 2, 4, 8, 16, 32, 64, 128, 256]
 # halving cache upload + attention compute for short contexts).
 KV_VARIANTS = [256]
 KV_VARIANT_MAX_N = 64
+# Batched step-execution buckets (fused scheduling): one graph per
+# (batch, tree-len) pair so a worker's whole tick runs as one device
+# call.  Batch 1 is the plain fwd_n<k> graph; tree-len is capped at
+# decode-step scale — prefill chunks stay single-sequence.
+BATCH_BUCKETS = [1, 2, 4, 8]
+BATCH_MAX_N = 64
 
 
 def to_hlo_text(lowered) -> str:
@@ -71,6 +81,44 @@ def lower_fwd(cfg: ModelConfig, n: int, use_pallas: bool = True,
         jax.ShapeDtypeStruct((n,), jnp.int32),           # slots
         jax.ShapeDtypeStruct((n, s), jnp.float32),       # bias
         jax.ShapeDtypeStruct((2 * cfg.n_layers, s, cfg.d_model), jnp.float32),
+    ] + [jax.ShapeDtypeStruct(shapes[nm], jnp.float32) for nm in names]
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def lower_fwd_batch(cfg: ModelConfig, b: int, n: int, use_pallas: bool = True,
+                    max_ctx: int | None = None) -> str:
+    """Lower one batched forward bucket: ``b`` independent sequences of
+    ``n`` tree tokens, each with its own KV-cache snapshot.
+
+    The graph is ``vmap`` of the single-sequence ``forward_infer`` with
+    the weights broadcast, so row ``i`` of the batched output is
+    bit-identical to running ``fwd_n<n>`` on row ``i`` alone — the
+    token-exactness contract the rust fused scheduler tests rely on.
+    Parameter order (the rust contract): tokens [b,n], pos [b,n],
+    slots [b,n], bias [b,n,S], cache [b,2L,S,d], then weights in
+    weight_names order.  Returns (logits [b,n,V], hidden [b,n,d],
+    new_kv [b,2L,n,d])."""
+    names = weight_names(cfg)
+    s = max_ctx or cfg.max_ctx
+
+    def fn(tokens, pos, slots, bias, cache, *weights):
+        params = dict(zip(names, weights))
+
+        def one(tk, p, sl, bi, ca):
+            return forward_infer(params, cfg, tk, p, sl, bi, ca,
+                                 use_pallas=use_pallas)
+
+        return jax.vmap(one)(tokens, pos, slots, bias, cache)
+
+    from .model import weight_shapes
+    shapes = weight_shapes(cfg)
+    specs = [
+        jax.ShapeDtypeStruct((b, n), jnp.int32),            # tokens
+        jax.ShapeDtypeStruct((b, n), jnp.int32),            # pos
+        jax.ShapeDtypeStruct((b, n), jnp.int32),            # slots
+        jax.ShapeDtypeStruct((b, n, s), jnp.float32),       # bias
+        jax.ShapeDtypeStruct((b, 2 * cfg.n_layers, s, cfg.d_model),
+                             jnp.float32),                  # caches
     ] + [jax.ShapeDtypeStruct(shapes[nm], jnp.float32) for nm in names]
     return to_hlo_text(jax.jit(fn).lower(*specs))
 
@@ -152,6 +200,14 @@ def export_model(model: str, art: str, buckets=None, use_pallas=True) -> None:
                 with open(path, "w") as f:
                     f.write(text)
                 print(f"[aot] {model}: fwd_n{n}_s{kv} -> {len(text)} chars")
+        # batched step-execution variants (b=1 is the graph above)
+        for b in BATCH_BUCKETS:
+            if b > 1 and n <= BATCH_MAX_N:
+                path = os.path.join(out, f"fwd_b{b}_n{n}.hlo.txt")
+                text = lower_fwd_batch(cfg, b, n, use_pallas=use_pallas)
+                with open(path, "w") as f:
+                    f.write(text)
+                print(f"[aot] {model}: fwd_b{b}_n{n} -> {len(text)} chars")
 
     medusa = load_trained(f"{model}-medusa", art)
     has_medusa = medusa is not None
@@ -168,7 +224,8 @@ def export_model(model: str, art: str, buckets=None, use_pallas=True) -> None:
         "n_layers": cfg.n_layers, "n_heads": cfg.n_heads, "d_head": cfg.d_head,
         "d_mlp": cfg.d_mlp, "max_ctx": cfg.max_ctx, "n_prompt": cfg.n_prompt,
         "n_ept": cfg.n_ept, "rope_theta": cfg.rope_theta,
-        "buckets": buckets, "trained": trained, "medusa": has_medusa,
+        "buckets": buckets, "batch_buckets": BATCH_BUCKETS,
+        "trained": trained, "medusa": has_medusa,
         "param_count": param_count(cfg),
         "prompt_param_count": prompt_param_count(cfg),
     }
@@ -195,9 +252,13 @@ def main() -> None:
     for m in models:
         export_model(m, args.out, buckets, use_pallas=not args.no_pallas)
 
+    # v2: batched step-execution graphs (fwd_b<b>_n<k>) + batch_buckets
+    # in per-model configs; the rust loader treats their absence as v1
+    # and falls back to per-row forwards
     manifest = {"models": models,
                 "buckets": buckets or BUCKETS,
-                "format": "hlo-text+f32-weights-v1"}
+                "batch_buckets": BATCH_BUCKETS,
+                "format": "hlo-text+f32-weights-v2"}
     with open(os.path.join(args.out, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1)
     print("[aot] done")

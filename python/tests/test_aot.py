@@ -14,7 +14,8 @@ import numpy as np
 import pytest
 from jax._src.lib import xla_client as xc
 
-from compile.aot import export_model, lower_fwd, lower_medusa, write_weights
+from compile.aot import (BATCH_BUCKETS, export_model, lower_fwd,
+                         lower_fwd_batch, lower_medusa, write_weights)
 from compile.model import MODELS, init_params, weight_names, weight_shapes
 
 
@@ -30,6 +31,13 @@ def test_export_writes_all_files(exported):
     for f in ("config.json", "weights.json", "weights.bin",
               "fwd_n1.hlo.txt", "fwd_n4.hlo.txt"):
         assert os.path.exists(os.path.join(d, f)), f
+    # batched step-execution graphs: every batch bucket > 1 for every
+    # decode-sized tree-len bucket
+    for b in BATCH_BUCKETS:
+        if b > 1:
+            for n in (1, 4):
+                f = f"fwd_b{b}_n{n}.hlo.txt"
+                assert os.path.exists(os.path.join(d, f)), f
 
 
 def test_weights_bin_matches_manifest(exported):
@@ -65,10 +73,11 @@ def test_hlo_text_parses_and_has_right_param_count(exported):
 def test_config_json_fields(exported):
     cfg = json.load(open(os.path.join(exported, "ppd-d", "config.json")))
     for field in ("vocab", "d_model", "n_layers", "n_heads", "max_ctx",
-                  "n_prompt", "buckets", "param_count",
+                  "n_prompt", "buckets", "batch_buckets", "param_count",
                   "prompt_param_count", "rope_theta"):
         assert field in cfg
     assert cfg["buckets"] == [1, 4]
+    assert cfg["batch_buckets"] == BATCH_BUCKETS
 
 
 def test_lowered_hlo_executes_via_xla_client():
@@ -98,6 +107,62 @@ def test_lowered_hlo_executes_via_xla_client():
     # Round-trip through the text parser only (execution happens in rust
     # integration tests); parsing errors raise here.
     assert "ENTRY" in text and "f32[1,128]" in text
+
+
+def test_batched_hlo_shapes_and_param_count(exported):
+    """The batched graph keeps the single-sequence parameter contract
+    (tokens, pos, slots, bias, cache, *weights) with a leading batch
+    dim on the five data inputs — the rust forward_batch relies on both
+    the order and the shapes."""
+    d = os.path.join(exported, "ppd-d")
+    text = open(os.path.join(d, "fwd_b2_n4.hlo.txt")).read()
+    assert "ENTRY" in text
+    cfg = MODELS["ppd-d"]
+    n_params = 5 + len(weight_names(cfg))
+    for k in range(n_params):
+        assert f"parameter({k})" in text, k
+    # batched data inputs
+    assert "s32[2,4]" in text                     # tokens/pos/slots
+    assert f"f32[2,4,{cfg.max_ctx}]" in text      # bias
+    s, dm = cfg.max_ctx, cfg.d_model
+    assert f"f32[2,{2 * cfg.n_layers},{s},{dm}]" in text  # caches
+    # batched logits output
+    assert "f32[2,4,128]" in text
+
+
+def test_batched_lowering_matches_vmap_eager():
+    """Row i of the batched graph must be bit-identical to the
+    single-sequence forward on row i — the fused scheduler's
+    token-exactness contract."""
+    import jax.numpy as jnp
+    from compile.model import forward_infer
+
+    cfg = MODELS["ppd-d"]
+    params = init_params(cfg, jax.random.PRNGKey(2))
+    b, n, s = 2, 1, cfg.max_ctx
+    rng = np.random.default_rng(7)
+    tokens = rng.integers(0, 128, (b, n)).astype(np.int32)
+    pos = np.zeros((b, n), np.int32)
+    slots = np.zeros((b, n), np.int32)
+    bias = np.full((b, n, s), -1e9, np.float32)
+    bias[:, 0, 0] = 0.0
+    cache = np.zeros((b, 2 * cfg.n_layers, s, cfg.d_model), np.float32)
+
+    def one(tk, p, sl, bi, ca):
+        return forward_infer(params, cfg, tk, p, sl, bi, ca)
+
+    batched = jax.vmap(one)(jnp.asarray(tokens), jnp.asarray(pos),
+                            jnp.asarray(slots), jnp.asarray(bias),
+                            jnp.asarray(cache))
+    for i in range(b):
+        single = one(jnp.asarray(tokens[i]), jnp.asarray(pos[i]),
+                     jnp.asarray(slots[i]), jnp.asarray(bias[i]),
+                     jnp.asarray(cache[i]))
+        for bt, st in zip(batched, single):
+            np.testing.assert_array_equal(np.asarray(bt[i]), np.asarray(st))
+    # and the batched text itself lowers
+    text = lower_fwd_batch(cfg, b, n)
+    assert "ENTRY" in text
 
 
 def test_medusa_hlo_lowering():

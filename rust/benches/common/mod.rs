@@ -29,6 +29,9 @@ pub struct EngineRun {
     pub decode_s: f64,
     pub input_len_sum: usize,
     pub outputs: Vec<Vec<u32>>,
+    /// target-model device calls during the run (from `RuntimeStats`) —
+    /// differs from `steps` once forwards are batched
+    pub forwards: usize,
 }
 
 impl EngineRun {
@@ -46,6 +49,12 @@ impl EngineRun {
 
     pub fn mean_input(&self) -> f64 {
         self.input_len_sum as f64 / self.steps.max(1) as f64
+    }
+
+    /// Device calls per generated token — the batching-visibility
+    /// metric: 1/τ when unbatched, lower once steps fuse.
+    pub fn forwards_per_token(&self) -> f64 {
+        self.forwards as f64 / self.tokens.max(1) as f64
     }
 }
 
@@ -71,7 +80,11 @@ pub fn run_engine(
         decode_s: 0.0,
         input_len_sum: 0,
         outputs: Vec::new(),
+        forwards: 0,
     };
+    // reset the runtime's device-call counters so `forwards` covers
+    // exactly this run (prefill included — clients pay for it too)
+    let _ = rt.take_stats();
     for it in items {
         let r: GenerationResult = engine.generate_with_cache(&it.prompt, max_new, &mut cache)?;
         agg.tokens += r.tokens.len();
@@ -81,6 +94,7 @@ pub fn run_engine(
         agg.input_len_sum += r.input_lens.iter().sum::<usize>();
         agg.outputs.push(r.tokens);
     }
+    agg.forwards = rt.take_stats().forwards;
     Ok(agg)
 }
 

@@ -24,8 +24,8 @@ fn main() {
     let Some(root) = artifacts_root() else { return };
     println!("=== Table 1: vanilla vs Medusa vs PPD ===\n");
     let mut table = Table::new(&[
-        "model", "method", "T tok/s", "tau", "L_fp ms", "quality", "P_tr %", "S_tr", "S_input",
-        "speedup(cpu)", "speedup(a100)", "speedup(4090)",
+        "model", "method", "T tok/s", "tau", "fwd/tok", "L_fp ms", "quality", "P_tr %", "S_tr",
+        "S_input", "speedup(cpu)", "speedup(a100)", "speedup(4090)",
     ]);
 
     // paper: MobileLLaMA greedy; Vicuna-7B/13B non-greedy
@@ -85,6 +85,9 @@ fn main() {
                 format!("{:?}", kind).to_lowercase(),
                 format!("{:.0}", r.throughput()),
                 format!("{:.2}", r.tau()),
+                // device calls per token from RuntimeStats: the metric
+                // step fusion shrinks (1/τ plus prefill when unbatched)
+                format!("{:.3}", r.forwards_per_token()),
                 format!("{:.2}", r.mean_l_fp() * 1e3),
                 quality,
                 ptr,

@@ -1,0 +1,250 @@
+//! Collation: pack ragged per-sequence step plans into one padded
+//! `[batch, tree_len]` device layout, and split the batched outputs
+//! back into per-sequence rows.
+//!
+//! Padding follows the single-sequence `Runtime::forward` conventions:
+//! pad *columns* (a real row shorter than the tree-length bucket) and
+//! pad *rows* (batch slots beyond the real sequences) both mask their
+//! bias fully and route their KV writes to the reserved trash slot
+//! `max_ctx - 1`, which generation never commits (the kv-cache manager
+//! caps usable context at `max_ctx - RESERVED_SLOTS`).  Each real row
+//! carries its own cache snapshot — the batched graph is a vmap of the
+//! single-sequence graph, so row `i` attends only over cache plane `i`.
+//!
+//! `collate` → device → `split` is a per-row identity on the real
+//! (unpadded) region; `rust/tests/properties.rs` proves the round trip
+//! for random tree shapes and batch sizes.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{StepOutput, NEG_INF};
+
+use super::BatchItem;
+
+/// A padded batch ready for one `forward_batch` device call.
+#[derive(Debug, Clone)]
+pub struct CollatedBatch {
+    /// real sequences in the batch (`row_lens.len()`)
+    pub rows: usize,
+    /// padded batch size (the `b` of the `fwd_b{b}_n{n}` bucket)
+    pub batch: usize,
+    /// padded tree length (the `n` of the bucket)
+    pub n: usize,
+    pub max_ctx: usize,
+    /// KV planes (2 × layers)
+    pub planes: usize,
+    pub d: usize,
+    /// real token count of each row, in batch order
+    pub row_lens: Vec<usize>,
+    /// `[batch, n]` row-major
+    pub tokens: Vec<i32>,
+    /// `[batch, n]`
+    pub pos: Vec<i32>,
+    /// `[batch, n]` — pad entries point at the trash slot
+    pub slots: Vec<i32>,
+    /// `[batch, n, max_ctx]` — pad entries fully masked
+    pub bias: Vec<f32>,
+    /// `[batch, planes, max_ctx, d]` stacked per-row cache snapshots
+    pub cache: Vec<f32>,
+}
+
+/// Pack `items` into the padded `[batch, n]` layout.  `batch >= items.len()`
+/// and `n >= max(plan lens)` must hold (the caller picked the buckets).
+pub fn collate(
+    items: &[BatchItem<'_>],
+    batch: usize,
+    n: usize,
+    planes: usize,
+    max_ctx: usize,
+    d: usize,
+) -> Result<CollatedBatch> {
+    let k = items.len();
+    if k == 0 {
+        bail!("collate: empty batch");
+    }
+    if k > batch {
+        bail!("collate: {k} plans exceed batch bucket {batch}");
+    }
+    let trash = (max_ctx - 1) as i32;
+    let mut row_lens = Vec::with_capacity(k);
+    let mut tokens = vec![0i32; batch * n];
+    let mut pos = vec![0i32; batch * n];
+    let mut slots = vec![trash; batch * n];
+    let mut bias = vec![NEG_INF; batch * n * max_ctx];
+    let mut cache = vec![0.0f32; batch * planes * max_ctx * d];
+
+    for (i, item) in items.iter().enumerate() {
+        item.plan.validate()?;
+        let ni = item.plan.len();
+        if ni > n {
+            bail!("collate: plan of {ni} tokens exceeds tree-length bucket {n}");
+        }
+        if item.plan.max_ctx != max_ctx {
+            bail!(
+                "collate: plan context {} != batch context {max_ctx}",
+                item.plan.max_ctx
+            );
+        }
+        let (l_c, s_c, d_c) = item.cache.shape();
+        if (2 * l_c, s_c, d_c) != (planes, max_ctx, d) {
+            bail!(
+                "collate: cache shape ({l_c},{s_c},{d_c}) incompatible with batch ({},{max_ctx},{d})",
+                planes / 2
+            );
+        }
+        row_lens.push(ni);
+        let base = i * n;
+        for (j, &t) in item.plan.tokens.iter().enumerate() {
+            tokens[base + j] = t as i32;
+        }
+        for (j, &p) in item.plan.pos.iter().enumerate() {
+            pos[base + j] = p as i32;
+        }
+        for (j, &sl) in item.plan.slots.iter().enumerate() {
+            slots[base + j] = sl as i32;
+        }
+        let bias_base = i * n * max_ctx;
+        bias[bias_base..bias_base + ni * max_ctx].copy_from_slice(&item.plan.bias);
+        let cache_base = i * planes * max_ctx * d;
+        cache[cache_base..cache_base + planes * max_ctx * d]
+            .copy_from_slice(item.cache.as_slice());
+    }
+
+    Ok(CollatedBatch {
+        rows: k,
+        batch,
+        n,
+        max_ctx,
+        planes,
+        d,
+        row_lens,
+        tokens,
+        pos,
+        slots,
+        bias,
+        cache,
+    })
+}
+
+/// Split a batched forward's padded outputs back into per-sequence
+/// [`StepOutput`]s, trimmed to each row's real token count.
+///
+/// Shapes (row-major flats): `logits [batch, n, vocab]`,
+/// `hidden [batch, n, d]`, `new_kv [batch, planes, n, d]`.
+pub fn split(
+    c: &CollatedBatch,
+    logits: &[f32],
+    hidden: &[f32],
+    new_kv: &[f32],
+    vocab: usize,
+) -> Result<Vec<StepOutput>> {
+    let (b, n, d, planes) = (c.batch, c.n, c.d, c.planes);
+    if logits.len() != b * n * vocab {
+        bail!("split: logits are {} values, want {}", logits.len(), b * n * vocab);
+    }
+    if hidden.len() != b * n * d {
+        bail!("split: hidden is {} values, want {}", hidden.len(), b * n * d);
+    }
+    if new_kv.len() != b * planes * n * d {
+        bail!("split: new_kv is {} values, want {}", new_kv.len(), b * planes * n * d);
+    }
+    let mut outs = Vec::with_capacity(c.rows);
+    for (i, &ni) in c.row_lens.iter().enumerate() {
+        let lb = i * n * vocab;
+        let hb = i * n * d;
+        let mut kv = Vec::with_capacity(planes * ni * d);
+        for p in 0..planes {
+            let base = (i * planes + p) * n * d;
+            kv.extend_from_slice(&new_kv[base..base + ni * d]);
+        }
+        outs.push(StepOutput {
+            n: ni,
+            logits: logits[lb..lb + ni * vocab].to_vec(),
+            hidden: hidden[hb..hb + ni * d].to_vec(),
+            new_kv: kv,
+        });
+    }
+    Ok(outs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batch::PlanInputs;
+    use crate::kvcache::HostKvCache;
+
+    fn plan(n: usize, s: usize, tag: u32) -> PlanInputs {
+        PlanInputs {
+            tokens: (0..n as u32).map(|j| tag + j).collect(),
+            pos: (0..n as u32).collect(),
+            slots: (0..n as u32).map(|j| 3 + j).collect(),
+            bias: vec![0.5; n * s],
+            max_ctx: s,
+        }
+    }
+
+    #[test]
+    fn collate_pads_rows_and_columns() {
+        let s = 16;
+        let c1 = HostKvCache::new(2, s, 4);
+        let c2 = HostKvCache::new(2, s, 4);
+        let p1 = plan(3, s, 100);
+        let p2 = plan(1, s, 200);
+        let items = [
+            BatchItem { plan: &p1, cache: &c1 },
+            BatchItem { plan: &p2, cache: &c2 },
+        ];
+        let c = collate(&items, 4, 4, 4, s, 4).unwrap();
+        assert_eq!(c.rows, 2);
+        assert_eq!(c.row_lens, vec![3, 1]);
+        // row 0 real tokens then pad
+        assert_eq!(&c.tokens[..4], &[100, 101, 102, 0]);
+        // pad column routes to the trash slot with a fully masked row
+        assert_eq!(c.slots[3], (s - 1) as i32);
+        assert!(c.bias[3 * s..4 * s].iter().all(|&b| b == NEG_INF));
+        // pad rows (2, 3) fully masked, trash-slotted
+        for r in 2..4 {
+            assert!(c.slots[r * 4..(r + 1) * 4].iter().all(|&sl| sl == (s - 1) as i32));
+            assert!(c.bias[r * 4 * s..(r + 1) * 4 * s].iter().all(|&b| b == NEG_INF));
+        }
+    }
+
+    #[test]
+    fn collate_rejects_oversized_inputs() {
+        let s = 16;
+        let c1 = HostKvCache::new(2, s, 4);
+        let p_long = plan(5, s, 0);
+        let items = [BatchItem { plan: &p_long, cache: &c1 }];
+        assert!(collate(&items, 1, 4, 4, s, 4).is_err(), "plan longer than n bucket");
+        let p = plan(2, s, 0);
+        let many: Vec<BatchItem> =
+            (0..3).map(|_| BatchItem { plan: &p, cache: &c1 }).collect();
+        assert!(collate(&many, 2, 4, 4, s, 4).is_err(), "more plans than batch bucket");
+        let wrong_cache = HostKvCache::new(3, s, 4);
+        let items = [BatchItem { plan: &p, cache: &wrong_cache }];
+        assert!(collate(&items, 1, 4, 4, s, 4).is_err(), "foreign cache shape");
+    }
+
+    #[test]
+    fn split_trims_to_row_lens() {
+        let s = 16;
+        let (vocab, d, planes) = (5, 4, 4);
+        let c1 = HostKvCache::new(2, s, d);
+        let p1 = plan(2, s, 10);
+        let items = [BatchItem { plan: &p1, cache: &c1 }];
+        let c = collate(&items, 2, 4, planes, s, d).unwrap();
+        // synthesize a padded device output with addressable values
+        let logits: Vec<f32> = (0..c.batch * c.n * vocab).map(|x| x as f32).collect();
+        let hidden: Vec<f32> = (0..c.batch * c.n * d).map(|x| 0.5 * x as f32).collect();
+        let kv: Vec<f32> = (0..c.batch * planes * c.n * d).map(|x| 2.0 * x as f32).collect();
+        let outs = split(&c, &logits, &hidden, &kv, vocab).unwrap();
+        assert_eq!(outs.len(), 1);
+        let o = &outs[0];
+        assert_eq!(o.n, 2);
+        assert_eq!(o.logits.len(), 2 * vocab);
+        assert_eq!(o.logits[..vocab], logits[..vocab]);
+        assert_eq!(o.new_kv.len(), planes * 2 * d);
+        // plane 1 rows start at the padded plane stride, trimmed to n_i
+        assert_eq!(o.new_kv[2 * d], kv[c.n * d]);
+    }
+}

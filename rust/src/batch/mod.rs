@@ -1,0 +1,170 @@
+//! Batched step execution: fuse all in-flight tree steps into **one**
+//! device call per scheduler tick.
+//!
+//! PR 2's step scheduler interleaves sequences but still issues one
+//! `Runtime::forward` per sequence per tick — fair, but the device sees
+//! N small latency-bound dispatches where it could see one.  This
+//! module splits the engine step into a *plan/apply* pair so the
+//! scheduler can batch the middle:
+//!
+//! ```text
+//!   tick:  plan_step(seq_0) ┐
+//!          plan_step(seq_1) ├── collate ──▶ forward_batch ──▶ split
+//!          plan_step(seq_k) ┘                  (1 call)          │
+//!          apply_step(seq_i, row_i)  ◀──────────────────────────┘
+//! ```
+//!
+//! * [`BatchStepEngine`] is an **extension trait** over
+//!   [`DecodeEngine`]: `plan_step` emits the tree tokens / positions /
+//!   attention-bias rows one decode step wants to run, and `apply_step`
+//!   consumes that step's slice of the batched output.  The defaults
+//!   return [`StepPlan::Fallback`], which tells the scheduler to run
+//!   the engine's monolithic `step` instead — so engines adopt fused
+//!   stepping incrementally (vanilla/ppd/medusa are native; the
+//!   lookup/speculative engines fall back until they grow plans).
+//! * [`collator`] packs the ragged per-sequence plans into one padded
+//!   `[batch, tree_len]` layout and splits the batched outputs back
+//!   into per-sequence rows.
+//! * `Runtime::forward_batch` executes the padded batch on a batched
+//!   HLO bucket when the artifacts carry one (`fwd_b{B}_n{N}.hlo.txt`),
+//!   and falls back to per-row `forward` calls otherwise — the fused
+//!   scheduler stays correct on old artifact sets, it just doesn't get
+//!   the dispatch amortization.
+//!
+//! The invariant the whole design hangs on: for a plan-native engine,
+//! `step(seq, cache)` **is** `plan_step` → `forward` → `apply_step`
+//! (see [`step_via_plan`]) — the fused and unfused paths share every
+//! line of decode logic except the device call, which is what makes
+//! fused-vs-unfused token-exactness testable and believable.
+
+pub mod collator;
+
+use anyhow::{bail, Result};
+
+use crate::decoding::{DecodeEngine, SeqState, StepOutcome};
+use crate::kvcache::HostKvCache;
+use crate::runtime::{Runtime, StepOutput};
+
+/// The device-facing half of one planned decode step: exactly the
+/// arguments `Runtime::forward` takes, minus the cache (the scheduler
+/// owns that).  `bias` is `[tokens.len(), max_ctx]` row-major.
+#[derive(Debug, Clone)]
+pub struct PlanInputs {
+    pub tokens: Vec<u32>,
+    pub pos: Vec<u32>,
+    pub slots: Vec<u32>,
+    pub bias: Vec<f32>,
+    /// row stride of `bias` (the model's context length)
+    pub max_ctx: usize,
+}
+
+impl PlanInputs {
+    /// Number of tree tokens this step runs.
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// Shape sanity: pos/slots lengths and the bias row stride.
+    pub fn validate(&self) -> Result<()> {
+        let n = self.tokens.len();
+        if self.pos.len() != n || self.slots.len() != n {
+            bail!("plan: inconsistent input lengths");
+        }
+        if self.bias.len() != n * self.max_ctx {
+            bail!("plan: bias is {} values, want {}", self.bias.len(), n * self.max_ctx);
+        }
+        Ok(())
+    }
+}
+
+/// What `plan_step` decided for one sequence this tick.
+pub enum StepPlan {
+    /// The engine has no fused support for this step — the scheduler
+    /// must run the monolithic [`DecodeEngine::step`] instead.
+    Fallback,
+    /// The sequence retired without needing a forward pass (EOS seen,
+    /// budget filled, context exhausted).  `SeqState::finish` has
+    /// already been applied.
+    Finished(StepOutcome),
+    /// Rows to run in this tick's fused forward.
+    Forward(PlanInputs),
+}
+
+/// One sequence's contribution to a fused forward: its plan and a
+/// read-only snapshot of its KV cache.
+pub struct BatchItem<'a> {
+    pub plan: &'a PlanInputs,
+    pub cache: &'a HostKvCache,
+}
+
+/// One sequence's slice of a fused forward's result, handed to
+/// `apply_step` together with the plan that produced it.
+pub struct StepResult<'a> {
+    pub plan: &'a PlanInputs,
+    pub out: &'a StepOutput,
+}
+
+/// Extension trait over [`DecodeEngine`] for fused batched stepping.
+///
+/// The default impls opt out: `plan_step` returns
+/// [`StepPlan::Fallback`] and the scheduler keeps calling `step` — any
+/// engine becomes schedulable under `--fuse-steps` with an empty
+/// `impl BatchStepEngine for X {}`.  Native engines override all three
+/// methods and the contract is:
+///
+/// > `plan_step(seq)` → one `forward` over the plan → `apply_step`
+/// > must leave `seq` and `cache` byte-identical to `step(seq)`,
+/// > including RNG consumption.
+pub trait BatchStepEngine: DecodeEngine {
+    /// Plan one decode step for `seq` without running it.  May retire
+    /// the sequence (returning [`StepPlan::Finished`]) when the step
+    /// would not reach the device.
+    fn plan_step(&mut self, _seq: &mut SeqState, _cache: &HostKvCache) -> Result<StepPlan> {
+        Ok(StepPlan::Fallback)
+    }
+
+    /// Consume one sequence's slice of the batched output: scatter KV,
+    /// verify, compact, account — everything `step` did after its
+    /// forward call.
+    fn apply_step(
+        &mut self,
+        _seq: &mut SeqState,
+        _res: &StepResult<'_>,
+        _cache: &mut HostKvCache,
+    ) -> Result<StepOutcome> {
+        bail!("engine has no fused step support (plan_step returned Fallback)")
+    }
+
+    /// Execute every plan in one device call (or the closest the
+    /// backend can get).  `results[i]` corresponds to `items[i]` and is
+    /// trimmed to that plan's real row count.
+    fn forward_batch(&mut self, _items: &[BatchItem<'_>]) -> Result<Vec<StepOutput>> {
+        bail!("engine has no fused step support (plan_step returned Fallback)")
+    }
+}
+
+/// The shared unfused driver for plan-native engines: their
+/// [`DecodeEngine::step`] is this function, so the per-sequence and
+/// fused paths execute the same plan/apply code and can only differ in
+/// how the forward pass is dispatched.
+pub fn step_via_plan<E: BatchStepEngine + ?Sized>(
+    rt: &Runtime,
+    engine: &mut E,
+    seq: &mut SeqState,
+    cache: &mut HostKvCache,
+) -> Result<StepOutcome> {
+    match engine.plan_step(seq, cache)? {
+        StepPlan::Finished(o) => Ok(o),
+        StepPlan::Fallback => bail!("plan-native engine planned Fallback"),
+        StepPlan::Forward(plan) => {
+            let t = std::time::Instant::now();
+            let out = rt.forward(&plan.tokens, &plan.pos, &plan.slots, &plan.bias, cache.as_slice())?;
+            seq.res.decode_s += t.elapsed().as_secs_f64();
+            engine.apply_step(seq, &StepResult { plan: &plan, out: &out }, cache)
+        }
+    }
+}

@@ -30,6 +30,10 @@ pub struct ModelConfig {
     pub n_prompt: usize,
     pub rope_theta: f64,
     pub buckets: Vec<usize>,
+    /// batch sizes the AOT step also lowered batched graphs for
+    /// (`fwd_b{B}_n{N}.hlo.txt`); empty for pre-v2 artifact sets, in
+    /// which case `forward_batch` falls back to per-row forwards
+    pub batch_buckets: Vec<usize>,
     pub trained: bool,
     pub medusa: bool,
     pub param_count: usize,
@@ -57,6 +61,18 @@ impl ModelConfig {
                 .iter()
                 .map(|b| b.as_usize())
                 .collect::<Result<_>>()?,
+            batch_buckets: match j.get("batch_buckets") {
+                Some(b) => {
+                    // the forward_batch bucket selector walks this list
+                    // in order looking for the smallest cover — keep it
+                    // sorted regardless of how the exporter wrote it
+                    let mut bb: Vec<usize> =
+                        b.as_arr()?.iter().map(|x| x.as_usize()).collect::<Result<_>>()?;
+                    bb.sort_unstable();
+                    bb
+                }
+                None => Vec::new(),
+            },
             trained: j.req("trained")?.as_bool()?,
             medusa: j.req("medusa")?.as_bool()?,
             param_count: j.req("param_count")?.as_usize()?,
@@ -110,6 +126,12 @@ impl ArtifactPaths {
     /// Short-KV-context variant (perf: KV-length bucketing).
     pub fn fwd_hlo_kv(&self, bucket: usize, kv: usize) -> PathBuf {
         self.model_dir().join(format!("fwd_n{bucket}_s{kv}.hlo.txt"))
+    }
+
+    /// Batched forward graph: `batch` sequences × `bucket` tree tokens
+    /// (the fused step-execution path).
+    pub fn fwd_hlo_batch(&self, batch: usize, bucket: usize) -> PathBuf {
+        self.model_dir().join(format!("fwd_b{batch}_n{bucket}.hlo.txt"))
     }
 
     pub fn weights_bin(&self) -> PathBuf {
@@ -203,12 +225,32 @@ mod tests {
         assert_eq!(cfg.bucket_for(9).unwrap(), 64);
         assert!(cfg.bucket_for(65).is_err());
         assert!(cfg.trainable_fraction() < 0.001);
+        // pre-v2 artifact sets carry no batched graphs
+        assert!(cfg.batch_buckets.is_empty());
+    }
+
+    #[test]
+    fn batch_buckets_parse_when_present() {
+        let dir = std::env::temp_dir().join("ppd_cfg_test_batch");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("config.json"),
+            r#"{"name":"t","vocab":128,"d_model":64,"n_layers":2,"n_heads":2,
+                "d_head":32,"d_mlp":176,"max_ctx":512,"n_prompt":3,"n_ept":1,
+                "rope_theta":10000.0,"buckets":[1,8,64],"batch_buckets":[1,2,4,8],
+                "trained":true,"medusa":false,"param_count":1000000,
+                "prompt_param_count":192}"#,
+        )
+        .unwrap();
+        let cfg = ModelConfig::load(&dir).unwrap();
+        assert_eq!(cfg.batch_buckets, vec![1, 2, 4, 8]);
     }
 
     #[test]
     fn paths_layout() {
         let p = ArtifactPaths::new("/a", "ppd-m");
         assert_eq!(p.fwd_hlo(8), PathBuf::from("/a/ppd-m/fwd_n8.hlo.txt"));
+        assert_eq!(p.fwd_hlo_batch(4, 8), PathBuf::from("/a/ppd-m/fwd_b4_n8.hlo.txt"));
         assert_eq!(p.trace("chat"), PathBuf::from("/a/traces/chat.json"));
         assert!(p.accept_stats(Some("ept4")).to_str().unwrap().contains("ept4"));
     }

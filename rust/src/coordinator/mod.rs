@@ -56,16 +56,16 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use crate::batch::BatchStepEngine;
 use crate::config::{ArtifactPaths, ServeConfig};
 use crate::decoding::lookup::{ChainEngine, LookaheadProposer, PldProposer, RestProposer};
 use crate::decoding::medusa::MedusaEngine;
 use crate::decoding::ppd::PpdEngine;
 use crate::decoding::speculative::SpeculativeEngine;
 use crate::decoding::vanilla::VanillaEngine;
-use crate::decoding::DecodeEngine;
 use crate::kvcache::SharedCachePool;
-use crate::metrics::QueueStats;
-use crate::runtime::Runtime;
+use crate::metrics::{QueueStats, RuntimeAgg};
+use crate::runtime::{Runtime, RuntimeStats};
 use crate::tree::builder::AcceptStats;
 use crate::workload;
 
@@ -112,6 +112,9 @@ impl EngineKind {
 
 /// Build an engine over runtimes the caller owns (single-threaded use:
 /// examples, benches).  `draft` is required for the speculative kinds.
+/// Every engine is a [`BatchStepEngine`] — plan-native ones
+/// (vanilla/ppd/medusa) fuse under `--fuse-steps`, the rest fall back
+/// to per-sequence stepping.
 pub fn build_engine<'rt>(
     kind: EngineKind,
     rt: &'rt Runtime,
@@ -119,7 +122,7 @@ pub fn build_engine<'rt>(
     paths: &ArtifactPaths,
     cfg: &ServeConfig,
     seed: u64,
-) -> Result<Box<dyn DecodeEngine + 'rt>> {
+) -> Result<Box<dyn BatchStepEngine + 'rt>> {
     let stats_path = paths.accept_stats(None);
     Ok(match kind {
         EngineKind::Vanilla => Box::new(VanillaEngine::new(rt, cfg.temperature, seed)),
@@ -169,6 +172,7 @@ pub struct WorkerCtx {
     queue: Arc<WorkQueue>,
     pool: Arc<SharedCachePool>,
     stats: Arc<QueueStats>,
+    rt_agg: Arc<RuntimeAgg>,
     policy: SchedPolicy,
     /// one-shot startup signal (taken on first use so a worker that
     /// panics before signaling drops its sender and fails spawn fast)
@@ -191,6 +195,13 @@ impl WorkerCtx {
     pub fn fail(&self, e: anyhow::Error) {
         self.signal(Err(e));
     }
+
+    /// Flush a worker's device-call counters into the coordinator's
+    /// aggregate (call when the worker drains: each thread owns its
+    /// `Runtime`, so the counters only become shareable here).
+    pub fn absorb_runtime_stats(&self, stats: &RuntimeStats) {
+        self.rt_agg.absorb(stats);
+    }
 }
 
 /// Builds one worker's engine and serves jobs until the queue closes.
@@ -211,7 +222,7 @@ pub trait WorkerBackend: Send + Sync + 'static {
 /// turned into error responses: a silently-dead worker would leave
 /// queued jobs holding reply senders forever and wedge every submitter
 /// — the worker must outlive any one bad request.
-pub fn serve_jobs(worker: usize, engine: &mut dyn DecodeEngine, ctx: &WorkerCtx) {
+pub fn serve_jobs(worker: usize, engine: &mut dyn BatchStepEngine, ctx: &WorkerCtx) {
     let mut sched = StepScheduler::new(worker, ctx.policy);
     loop {
         if sched.is_empty() {
@@ -275,6 +286,11 @@ impl WorkerBackend for ModelBackend {
             };
         ctx.ready();
         serve_jobs(worker, engine.as_mut(), &ctx);
+        // queue closed and drained: flush this worker's device-call
+        // counters (target model only — draft forwards are a different
+        // hot path and would skew forwards-per-token)
+        drop(engine);
+        ctx.absorb_runtime_stats(&rt.take_stats());
     }
 }
 
@@ -283,6 +299,7 @@ pub struct Coordinator {
     queue: Arc<WorkQueue>,
     pool: Arc<SharedCachePool>,
     stats: Arc<QueueStats>,
+    rt_agg: Arc<RuntimeAgg>,
     collector_tx: mpsc::Sender<Response>,
     collector_rx: Mutex<mpsc::Receiver<Response>>,
     queue_capacity: usize,
@@ -352,6 +369,7 @@ impl Coordinator {
         // in-flight sequence, across all workers
         let pool = Arc::new(SharedCachePool::new(workers * policy.max_inflight));
         let stats = Arc::new(QueueStats::new());
+        let rt_agg = Arc::new(RuntimeAgg::default());
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
 
         let mut handles = Vec::with_capacity(workers);
@@ -360,6 +378,7 @@ impl Coordinator {
                 queue: Arc::clone(&queue),
                 pool: Arc::clone(&pool),
                 stats: Arc::clone(&stats),
+                rt_agg: Arc::clone(&rt_agg),
                 policy,
                 ready: Mutex::new(Some(ready_tx.clone())),
             };
@@ -395,6 +414,7 @@ impl Coordinator {
             queue,
             pool,
             stats,
+            rt_agg,
             collector_tx,
             collector_rx: Mutex::new(collector_rx),
             queue_capacity: workers * DEFAULT_QUEUE_PER_WORKER,
@@ -416,6 +436,26 @@ impl Coordinator {
     /// Queue/backpressure counters (live).
     pub fn queue_stats(&self) -> &QueueStats {
         &self.stats
+    }
+
+    /// Handle to the workers' aggregated device-call counters.  Workers
+    /// flush on drain, so the snapshot is complete only after the
+    /// coordinator is dropped — keep a clone of this handle across the
+    /// drop to read final forwards-per-token (see
+    /// `examples/serve_requests.rs`).
+    pub fn runtime_agg(&self) -> Arc<RuntimeAgg> {
+        Arc::clone(&self.rt_agg)
+    }
+
+    /// Live serving metrics as one Prometheus-exposition text block —
+    /// the payload of the TCP protocol's `metrics` request.
+    pub fn metrics_text(&self) -> String {
+        let mut text = self.stats.to_prometheus();
+        text.push_str(&format!("ppd_workers {}\n", self.n_workers));
+        text.push_str(&format!("ppd_caches_created {}\n", self.pool.created()));
+        text.push_str(&format!("ppd_caches_outstanding {}\n", self.pool.outstanding()));
+        text.push_str(&format!("ppd_queue_capacity {}\n", self.queue_capacity));
+        text
     }
 
     /// Total KV caches the pool ever allocated

@@ -1,5 +1,6 @@
 //! Step-level continuous batching: one worker, many in-flight
-//! sequences, one PPD tree step per sequence per tick.
+//! sequences, one PPD tree step per sequence per tick — and, under
+//! `--fuse-steps`, **one device call** per tick for all of them.
 //!
 //! ```text
 //!            WorkQueue ──try_pop──┐  (admission between steps,
@@ -10,6 +11,10 @@
 //!   └───┼────────────────┼──────────────┼───────────┘
 //!       ▼ retired on EOS/budget/cancel  ▼
 //!     reply channel (out-of-order)    cache → SharedCachePool
+//!
+//!   fused tick (--fuse-steps):
+//!     plan(A) plan(B) plan(C) ──▶ forward_batch ──▶ apply(A..C)
+//!                                   (1 call)
 //! ```
 //!
 //! This replaces the run-to-completion worker loop: a short request
@@ -31,7 +36,8 @@ use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::time::Duration;
 
-use crate::decoding::{DecodeEngine, SeqState, StepOutcome};
+use crate::batch::{BatchItem, BatchStepEngine, PlanInputs, StepPlan, StepResult};
+use crate::decoding::{SeqState, StepOutcome};
 use crate::kvcache::{HostKvCache, SharedCachePool};
 use crate::metrics::QueueStats;
 use crate::workload;
@@ -51,11 +57,20 @@ pub struct SchedPolicy {
     /// drop jobs older than this at admission (stale work never reaches
     /// a decode step); `None` disables the age check
     pub max_queue_age: Option<Duration>,
+    /// fuse every in-flight sequence's decode step into one
+    /// `forward_batch` device call per tick (`--fuse-steps`); engines
+    /// without a plan/apply split still step per-sequence, token-exact
+    /// either way
+    pub fuse_steps: bool,
 }
 
 impl Default for SchedPolicy {
     fn default() -> Self {
-        SchedPolicy { max_inflight: DEFAULT_MAX_INFLIGHT, max_queue_age: None }
+        SchedPolicy {
+            max_inflight: DEFAULT_MAX_INFLIGHT,
+            max_queue_age: None,
+            fuse_steps: false,
+        }
     }
 }
 
@@ -102,12 +117,13 @@ impl StepScheduler {
 
     /// Admit one job popped off the work queue: run the queue-age and
     /// cancellation checks, check a KV cache out of the pool, and
-    /// prefill via [`DecodeEngine::begin_seq`].  Returns `true` when the
+    /// prefill via [`crate::decoding::DecodeEngine::begin_seq`].
+    /// Returns `true` when the
     /// job joined the in-flight set; on every refusal path the job's
     /// reply channel gets an error [`Response`] instead.
     pub fn admit(
         &mut self,
-        engine: &mut dyn DecodeEngine,
+        engine: &mut dyn BatchStepEngine,
         pool: &SharedCachePool,
         stats: &QueueStats,
         job: Job,
@@ -165,9 +181,51 @@ impl StepScheduler {
     /// decode step (cancelled sequences are aborted instead), finished
     /// sequences retire with their response, and their caches go back
     /// to the pool.  Returns the number of sequences still in flight.
+    ///
+    /// Under `fuse_steps` the pass runs in two phases — collect every
+    /// sequence's [`BatchStepEngine::plan_step`], issue **one**
+    /// `forward_batch` over all collected plans, then apply each
+    /// sequence's slice of the result.  Sequences whose engine has no
+    /// plan/apply split fall back to the monolithic `step` inside the
+    /// same tick, so mixed support stays correct.
     pub fn tick(
         &mut self,
-        engine: &mut dyn DecodeEngine,
+        engine: &mut dyn BatchStepEngine,
+        pool: &SharedCachePool,
+        stats: &QueueStats,
+    ) -> usize {
+        if self.policy.fuse_steps {
+            self.tick_fused(engine, pool, stats)
+        } else {
+            self.tick_serial(engine, pool, stats)
+        }
+    }
+
+    /// Route one sequence's step/apply result: keep it running, retire
+    /// it with its response, or retire it with the error/panic message.
+    /// Shared by the serial tick, the fused tick's fallback arm, and
+    /// the fused apply phase, so the three paths cannot drift.
+    fn settle(
+        &mut self,
+        fl: Inflight,
+        stepped: std::thread::Result<anyhow::Result<StepOutcome>>,
+        pool: &SharedCachePool,
+        stats: &QueueStats,
+    ) {
+        match stepped {
+            Ok(Ok(StepOutcome::Running)) => self.running.push_back(fl),
+            Ok(Ok(StepOutcome::Finished(_))) => self.retire_ok(fl, pool, stats),
+            Ok(Err(e)) => self.retire_err(fl, pool, stats, format!("{e:#}")),
+            Err(panic) => {
+                self.retire_err(fl, pool, stats, format!("worker panicked: {}", panic_msg(panic)))
+            }
+        }
+    }
+
+    /// The unfused pass: one `forward` per sequence (PR 2 behavior).
+    fn tick_serial(
+        &mut self,
+        engine: &mut dyn BatchStepEngine,
         pool: &SharedCachePool,
         stats: &QueueStats,
     ) -> usize {
@@ -183,12 +241,108 @@ impl StepScheduler {
             stats.on_step();
             let stepped =
                 catch_unwind(AssertUnwindSafe(|| engine.step(&mut fl.seq, &mut fl.cache)));
-            match stepped {
-                Ok(Ok(StepOutcome::Running)) => self.running.push_back(fl),
-                Ok(Ok(StepOutcome::Finished(_))) => self.retire_ok(fl, pool, stats),
+            self.settle(fl, stepped, pool, stats);
+        }
+        self.running.len()
+    }
+
+    /// The fused pass: plan everything, one device call, apply
+    /// everything.  Token-exactness vs [`StepScheduler::tick_serial`]
+    /// rests on plan/forward/apply being the *same code* `step` runs
+    /// (see `batch::step_via_plan`) plus `forward_batch` being
+    /// row-equivalent to per-row `forward` — both are asserted by the
+    /// deterministic harness in `rust/tests/scheduler.rs`.
+    fn tick_fused(
+        &mut self,
+        engine: &mut dyn BatchStepEngine,
+        pool: &SharedCachePool,
+        stats: &QueueStats,
+    ) -> usize {
+        // phase 1: cancellation checks + plans (finish/fallback paths
+        // resolve immediately, fused plans accumulate)
+        let mut fused: Vec<(Inflight, PlanInputs)> = Vec::new();
+        for _ in 0..self.running.len() {
+            let mut fl = self.running.pop_front().expect("non-empty running set");
+            if fl.job.cancel.is_cancelled() {
+                fl.cache.reset();
+                stats.on_cancel();
+                self.retire_err(fl, pool, stats, "cancelled mid-flight".into());
+                continue;
+            }
+            stats.on_step();
+            let planned =
+                catch_unwind(AssertUnwindSafe(|| engine.plan_step(&mut fl.seq, &fl.cache)));
+            match planned {
+                Ok(Ok(StepPlan::Forward(plan))) => fused.push((fl, plan)),
+                Ok(Ok(StepPlan::Finished(_))) => self.retire_ok(fl, pool, stats),
+                Ok(Ok(StepPlan::Fallback)) => {
+                    // no plan/apply split: monolithic per-sequence step
+                    let stepped = catch_unwind(AssertUnwindSafe(|| {
+                        engine.step(&mut fl.seq, &mut fl.cache)
+                    }));
+                    self.settle(fl, stepped, pool, stats);
+                }
                 Ok(Err(e)) => self.retire_err(fl, pool, stats, format!("{e:#}")),
-                Err(panic) => {
-                    self.retire_err(fl, pool, stats, format!("worker panicked: {}", panic_msg(panic)))
+                Err(panic) => self.retire_err(
+                    fl,
+                    pool,
+                    stats,
+                    format!("worker panicked: {}", panic_msg(panic)),
+                ),
+            }
+        }
+        if fused.is_empty() {
+            return self.running.len();
+        }
+
+        // phase 2: one fused forward over every planned sequence
+        stats.on_fused_batch(fused.len());
+        let t0 = std::time::Instant::now();
+        let forwarded = {
+            let items: Vec<BatchItem<'_>> = fused
+                .iter()
+                .map(|(fl, plan)| BatchItem { plan, cache: &fl.cache })
+                .collect();
+            catch_unwind(AssertUnwindSafe(|| engine.forward_batch(&items)))
+        };
+        // attribute the shared device call evenly across its riders
+        let share = t0.elapsed().as_secs_f64() / fused.len() as f64;
+
+        // phase 3: apply each sequence's slice of the result
+        match forwarded {
+            Ok(Ok(outs)) if outs.len() == fused.len() => {
+                for ((mut fl, plan), out) in fused.into_iter().zip(outs) {
+                    fl.seq.res.decode_s += share;
+                    let applied = catch_unwind(AssertUnwindSafe(|| {
+                        engine.apply_step(
+                            &mut fl.seq,
+                            &StepResult { plan: &plan, out: &out },
+                            &mut fl.cache,
+                        )
+                    }));
+                    self.settle(fl, applied, pool, stats);
+                }
+            }
+            Ok(Ok(outs)) => {
+                let msg = format!(
+                    "forward_batch returned {} outputs for {} plans",
+                    outs.len(),
+                    fused.len()
+                );
+                for (fl, _) in fused {
+                    self.retire_err(fl, pool, stats, msg.clone());
+                }
+            }
+            Ok(Err(e)) => {
+                let msg = format!("{e:#}");
+                for (fl, _) in fused {
+                    self.retire_err(fl, pool, stats, msg.clone());
+                }
+            }
+            Err(panic) => {
+                let msg = format!("worker panicked: {}", panic_msg(panic));
+                for (fl, _) in fused {
+                    self.retire_err(fl, pool, stats, msg.clone());
                 }
             }
         }

@@ -96,8 +96,15 @@ fn handle_conn(
             Ok(_) => {
                 let trimmed = line.trim();
                 if !trimmed.is_empty() {
-                    let resp = serve_line(coord, trimmed, &out);
-                    writeln!(out, "{}", resp.to_json())?;
+                    if is_metrics_request(trimmed) {
+                        // scrapes answer from live counters without
+                        // touching the queue; they still count toward
+                        // `max_requests` (every response line does)
+                        writeln!(out, "{}", metrics_response(coord))?;
+                    } else {
+                        let resp = serve_line(coord, trimmed, &out);
+                        writeln!(out, "{}", resp.to_json())?;
+                    }
                     served.fetch_add(1, Ordering::Relaxed);
                 }
                 line.clear();
@@ -123,6 +130,29 @@ fn handle_conn(
         }
     }
     Ok(())
+}
+
+/// Is this line a metrics scrape rather than a generation request?
+/// Accepted forms: the bare word `metrics` or a JSON object with
+/// `"metrics": true` — a `metrics` key with any other value is NOT a
+/// scrape (a generation request carrying a stray `metrics` field must
+/// not silently get a metrics dump instead of its completion).
+fn is_metrics_request(trimmed: &str) -> bool {
+    trimmed == "metrics"
+        || crate::util::json::Json::parse(trimmed)
+            .ok()
+            .and_then(|j| j.get("metrics").and_then(|v| v.as_bool().ok()))
+            == Some(true)
+}
+
+/// Shared-nothing metrics export: the full Prometheus text block rides
+/// in one JSON line (`{"metrics": "ppd_queue_...\n..."}`), so scrapers
+/// reuse the line protocol instead of needing a second port.
+fn metrics_response(coord: &Coordinator) -> crate::util::json::Json {
+    crate::util::json::Json::obj(vec![(
+        "metrics",
+        crate::util::json::Json::str(&coord.metrics_text()),
+    )])
 }
 
 fn serve_line(coord: &Coordinator, trimmed: &str, stream: &TcpStream) -> Response {
@@ -202,4 +232,16 @@ pub fn client_request(addr: &str, prompt: &str, max_new: usize) -> Result<crate:
     let mut line = String::new();
     reader.read_line(&mut line)?;
     crate::util::json::Json::parse(line.trim())
+}
+
+/// Scrape the server's metrics line and return the decoded Prometheus
+/// text block.
+pub fn client_metrics(addr: &str) -> Result<String> {
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    writeln!(stream, "{}", r#"{"metrics": true}"#)?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let j = crate::util::json::Json::parse(line.trim())?;
+    Ok(j.req("metrics")?.as_str()?.to_string())
 }

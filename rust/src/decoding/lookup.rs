@@ -343,6 +343,15 @@ impl<P: ChainProposer + Clone + Send + 'static> DecodeEngine for ChainEngine<'_,
     }
 }
 
+// Chain engines build their tree from retrieval state that changes
+// *during* the step (proposer clones, datastore hits), so they have no
+// native plan/apply split yet: the default `StepPlan::Fallback` makes
+// the fused scheduler run their monolithic `step` per sequence.
+impl<P: ChainProposer + Clone + Send + 'static> crate::batch::BatchStepEngine
+    for ChainEngine<'_, P>
+{
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

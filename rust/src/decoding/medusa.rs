@@ -8,9 +8,10 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
+use crate::batch::{BatchItem, BatchStepEngine, PlanInputs, StepPlan, StepResult};
 use crate::config::ServeConfig;
 use crate::kvcache::HostKvCache;
-use crate::runtime::Runtime;
+use crate::runtime::{Runtime, StepOutput};
 use crate::tree::builder::{build_candidate_tree, AcceptStats};
 use crate::tree::{assemble_step, GuessSet, SparseTree, TreeLayout};
 use crate::util::rng::Rng;
@@ -121,52 +122,68 @@ impl DecodeEngine for MedusaEngine<'_> {
     }
 
     fn step(&mut self, seq: &mut SeqState, cache: &mut HostKvCache) -> Result<StepOutcome> {
+        // plan → forward → apply: the identical code the fused
+        // scheduler runs, minus the batching
+        let rt = self.rt;
+        crate::batch::step_via_plan(rt, self, seq, cache)
+    }
+}
+
+impl BatchStepEngine for MedusaEngine<'_> {
+    fn plan_step(&mut self, seq: &mut SeqState, cache: &HostKvCache) -> Result<StepPlan> {
         if let Some(r) = seq.finished {
-            return Ok(StepOutcome::Finished(r));
+            return Ok(StepPlan::Finished(StepOutcome::Finished(r)));
         }
         if seq.eos_seen {
-            return Ok(seq.finish(FinishReason::Eos));
+            return Ok(StepPlan::Finished(seq.finish(FinishReason::Eos)));
         }
         if seq.res.tokens.len() >= seq.max_new {
-            return Ok(seq.finish(FinishReason::Budget));
+            return Ok(StepPlan::Finished(seq.finish(FinishReason::Budget)));
         }
         let t = Instant::now();
-        let vocab = self.rt.cfg.vocab;
-        let d = self.rt.cfg.d_model;
         let max_ctx = self.rt.cfg.max_ctx;
-        let remaining = seq.max_new - seq.res.tokens.len();
-
-        let (root, guesses) = {
-            let st = seq.inner.downcast_ref::<MedusaSeq>().expect("medusa seq state");
-            (st.root, st.guesses.clone())
-        };
         let committed = cache.committed();
         if committed + self.tree.input_len() + 2 >= max_ctx {
             seq.res.decode_s += t.elapsed().as_secs_f64();
-            return Ok(seq.finish(FinishReason::Context));
+            return Ok(StepPlan::Finished(seq.finish(FinishReason::Context)));
         }
+        let st = seq.inner.downcast_ref::<MedusaSeq>().expect("medusa seq state");
         let inputs = assemble_step(
             &self.tree,
             &self.layout,
-            &guesses,
-            root,
+            &st.guesses,
+            st.root,
             committed as u32,
             committed,
             max_ctx,
         )?;
-        let out = self.rt.forward(
-            &inputs.tokens,
-            &inputs.pos,
-            &inputs.slots,
-            &inputs.bias,
-            cache.as_slice(),
-        )?;
-        cache.scatter(&out.new_kv, &inputs.slots)?;
+        seq.res.decode_s += t.elapsed().as_secs_f64();
+        Ok(StepPlan::Forward(PlanInputs {
+            tokens: inputs.tokens,
+            pos: inputs.pos,
+            slots: inputs.slots,
+            bias: inputs.bias,
+            max_ctx,
+        }))
+    }
 
-        let v = verify(&self.tree, &self.layout, &out, &inputs.tokens, self.mode, vocab, &mut seq.rng);
-        let mut accepted_slots = vec![inputs.slots[0]];
+    fn apply_step(
+        &mut self,
+        seq: &mut SeqState,
+        res: &StepResult<'_>,
+        cache: &mut HostKvCache,
+    ) -> Result<StepOutcome> {
+        let t = Instant::now();
+        let vocab = self.rt.cfg.vocab;
+        let d = self.rt.cfg.d_model;
+        let remaining = seq.max_new - seq.res.tokens.len();
+        let out: &StepOutput = res.out;
+        cache.scatter(&out.new_kv, &res.plan.slots)?;
+
+        let v = verify(&self.tree, &self.layout, out, &res.plan.tokens, self.mode, vocab, &mut seq.rng);
+        let mut accepted_slots = vec![res.plan.slots[0]];
         accepted_slots.extend(
-            v.accepted_nodes.iter().map(|&n| inputs.slots[self.layout.node_input[n]]),
+            v.accepted_nodes.iter().map(|&n| res.plan.slots[self.layout.node_input[n]]),
         );
         cache.compact(&accepted_slots)?;
 
@@ -175,6 +192,8 @@ impl DecodeEngine for MedusaEngine<'_> {
         // accounting is still capped to the kept tokens
         seq.eos_seen |= record_step(&mut seq.res, &v.emitted, remaining, self.tree.input_len());
 
+        // the head pass stays per-sequence even under fused stepping
+        // (a follow-on could batch it too)
         let hid = out.hidden_row(self.layout.node_input[v.final_node], d).to_vec();
         let next_guesses = self.guesses_from_hidden(&hid)?;
         let next_root = *v.emitted.last().unwrap();
@@ -191,5 +210,9 @@ impl DecodeEngine for MedusaEngine<'_> {
             return Ok(seq.finish(FinishReason::Budget));
         }
         Ok(StepOutcome::Running)
+    }
+
+    fn forward_batch(&mut self, items: &[BatchItem<'_>]) -> Result<Vec<StepOutput>> {
+        self.rt.forward_batch(items)
     }
 }

@@ -21,6 +21,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::batch::{BatchItem, BatchStepEngine, PlanInputs, StepPlan, StepResult};
 use crate::config::ServeConfig;
 use crate::kvcache::HostKvCache;
 use crate::runtime::{Runtime, StepOutput};
@@ -100,6 +101,22 @@ impl<'rt> PpdEngine<'rt> {
             }
         }
     }
+
+    /// The tree-state index this step runs under — a pure function of
+    /// the sequence cursor, so `plan_step` and `apply_step` recompute
+    /// the same `T_k` independently.
+    ///
+    /// A state-k tree emits at most k+1 tokens, so near the cap a
+    /// shallower tree produces the same kept output with a much smaller
+    /// forward pass.
+    fn state_for(&self, seq: &SeqState) -> usize {
+        let remaining = seq.max_new - seq.res.tokens.len();
+        let st = seq.inner.downcast_ref::<PpdSeq>().expect("ppd seq state");
+        st.state
+            .min(st.guesses.depth())
+            .min(self.set.trees.len() - 1)
+            .min(remaining - 1)
+    }
 }
 
 impl DecodeEngine for PpdEngine<'_> {
@@ -145,67 +162,82 @@ impl DecodeEngine for PpdEngine<'_> {
     }
 
     fn step(&mut self, seq: &mut SeqState, cache: &mut HostKvCache) -> Result<StepOutcome> {
+        // plan → forward → apply: the identical code the fused
+        // scheduler runs, minus the batching
+        let rt = self.rt;
+        crate::batch::step_via_plan(rt, self, seq, cache)
+    }
+}
+
+impl BatchStepEngine for PpdEngine<'_> {
+    fn plan_step(&mut self, seq: &mut SeqState, cache: &HostKvCache) -> Result<StepPlan> {
         if let Some(r) = seq.finished {
-            return Ok(StepOutcome::Finished(r));
+            return Ok(StepPlan::Finished(StepOutcome::Finished(r)));
         }
         if seq.eos_seen {
-            return Ok(seq.finish(FinishReason::Eos));
+            return Ok(StepPlan::Finished(seq.finish(FinishReason::Eos)));
         }
         if seq.res.tokens.len() >= seq.max_new {
-            return Ok(seq.finish(FinishReason::Budget));
+            return Ok(StepPlan::Finished(seq.finish(FinishReason::Budget)));
         }
         let t = Instant::now();
-        let vocab = self.rt.cfg.vocab;
         let max_ctx = self.rt.cfg.max_ctx;
-        let remaining = seq.max_new - seq.res.tokens.len();
-
-        let (root, state, guesses) = {
-            let st = seq.inner.downcast_ref::<PpdSeq>().expect("ppd seq state");
-            (st.root, st.state, st.guesses.clone())
-        };
-        // a state-k tree emits at most k+1 tokens, so near the cap a
-        // shallower tree produces the same kept output with a much
-        // smaller forward pass
-        let state_k = state
-            .min(guesses.depth())
-            .min(self.set.trees.len() - 1)
-            .min(remaining - 1);
+        let state_k = self.state_for(seq);
         let tree = &self.set.trees[state_k];
         let layout = &self.set.layouts[state_k];
         let committed = cache.committed();
         if committed + tree.input_len() + 2 >= max_ctx {
             seq.res.decode_s += t.elapsed().as_secs_f64();
-            return Ok(seq.finish(FinishReason::Context));
+            return Ok(StepPlan::Finished(seq.finish(FinishReason::Context)));
         }
+        let st = seq.inner.downcast_ref::<PpdSeq>().expect("ppd seq state");
         let inputs = assemble_step(
             tree,
             layout,
-            &guesses,
-            root,
+            &st.guesses,
+            st.root,
             committed as u32,
             committed,
             max_ctx,
         )?;
-        let out = self.rt.forward(
-            &inputs.tokens,
-            &inputs.pos,
-            &inputs.slots,
-            &inputs.bias,
-            cache.as_slice(),
-        )?;
-        cache.scatter(&out.new_kv, &inputs.slots)?;
+        seq.res.decode_s += t.elapsed().as_secs_f64();
+        Ok(StepPlan::Forward(PlanInputs {
+            tokens: inputs.tokens,
+            pos: inputs.pos,
+            slots: inputs.slots,
+            bias: inputs.bias,
+            max_ctx,
+        }))
+    }
 
-        let v = verify(tree, layout, &out, &inputs.tokens, self.mode, vocab, &mut seq.rng);
+    fn apply_step(
+        &mut self,
+        seq: &mut SeqState,
+        res: &StepResult<'_>,
+        cache: &mut HostKvCache,
+    ) -> Result<StepOutcome> {
+        let t = Instant::now();
+        let vocab = self.rt.cfg.vocab;
+        let remaining = seq.max_new - seq.res.tokens.len();
+        // the cursor is untouched between plan and apply, so this
+        // recovers exactly the tree the plan was assembled from
+        let state_k = self.state_for(seq);
+        let tree = &self.set.trees[state_k];
+        let layout = &self.set.layouts[state_k];
+        let out: &StepOutput = res.out;
+        cache.scatter(&out.new_kv, &res.plan.slots)?;
+
+        let v = verify(tree, layout, out, &res.plan.tokens, self.mode, vocab, &mut seq.rng);
         // compact: root + accepted candidate rows become committed
-        let mut accepted_slots = vec![inputs.slots[0]];
+        let mut accepted_slots = vec![res.plan.slots[0]];
         accepted_slots.extend(
-            v.accepted_nodes.iter().map(|&n| inputs.slots[layout.node_input[n]]),
+            v.accepted_nodes.iter().map(|&n| res.plan.slots[layout.node_input[n]]),
         );
         cache.compact(&accepted_slots)?;
 
         seq.eos_seen |= record_step(&mut seq.res, &v.emitted, remaining, tree.input_len());
 
-        let next_guesses = self.extract_guesses(layout, v.final_node, &out);
+        let next_guesses = self.extract_guesses(layout, v.final_node, out);
         let next_state = tree.nodes[v.final_node].prompt_len;
         let next_root = *v.emitted.last().unwrap();
         {
@@ -222,5 +254,9 @@ impl DecodeEngine for PpdEngine<'_> {
             return Ok(seq.finish(FinishReason::Budget));
         }
         Ok(StepOutcome::Running)
+    }
+
+    fn forward_batch(&mut self, items: &[BatchItem<'_>]) -> Result<Vec<StepOutput>> {
+        self.rt.forward_batch(items)
     }
 }

@@ -349,3 +349,8 @@ impl DecodeEngine for SpeculativeEngine<'_> {
         Ok(StepOutcome::Running)
     }
 }
+
+// A speculative step is a draft *loop* plus one target forward; fusing
+// it needs draft-side batching first.  The default `StepPlan::Fallback`
+// keeps it correct (per-sequence `step`) under `--fuse-steps`.
+impl crate::batch::BatchStepEngine for SpeculativeEngine<'_> {}

@@ -4,8 +4,9 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::batch::{BatchItem, BatchStepEngine, PlanInputs, StepPlan, StepResult};
 use crate::kvcache::HostKvCache;
-use crate::runtime::{Runtime, NEG_INF};
+use crate::runtime::{Runtime, StepOutput, NEG_INF};
 use crate::util::argmax;
 use crate::util::rng::Rng;
 
@@ -75,18 +76,26 @@ impl DecodeEngine for VanillaEngine<'_> {
     }
 
     fn step(&mut self, seq: &mut SeqState, cache: &mut HostKvCache) -> Result<StepOutcome> {
+        // plan → forward → apply: the identical code the fused
+        // scheduler runs, minus the batching
+        let rt = self.rt;
+        crate::batch::step_via_plan(rt, self, seq, cache)
+    }
+}
+
+impl BatchStepEngine for VanillaEngine<'_> {
+    fn plan_step(&mut self, seq: &mut SeqState, cache: &HostKvCache) -> Result<StepPlan> {
         if let Some(r) = seq.finished {
-            return Ok(StepOutcome::Finished(r));
+            return Ok(StepPlan::Finished(StepOutcome::Finished(r)));
         }
         if seq.res.tokens.len() >= seq.max_new {
-            return Ok(seq.finish(FinishReason::Budget));
+            return Ok(StepPlan::Finished(seq.finish(FinishReason::Budget)));
         }
         if cache.remaining() <= 1 {
-            return Ok(seq.finish(FinishReason::Context));
+            return Ok(StepPlan::Finished(seq.finish(FinishReason::Context)));
         }
         let t = Instant::now();
         let s = self.rt.cfg.max_ctx;
-        let vocab = self.rt.cfg.vocab;
         let next = seq.inner.downcast_ref::<VanillaSeq>().expect("vanilla seq state").next;
 
         let c = cache.committed();
@@ -95,18 +104,36 @@ impl DecodeEngine for VanillaEngine<'_> {
         // emitted — a successor token would never be kept
         if next == crate::config::EOS_ID {
             seq.res.decode_s += t.elapsed().as_secs_f64();
-            return Ok(seq.finish(FinishReason::Eos));
+            return Ok(StepPlan::Finished(seq.finish(FinishReason::Eos)));
         }
         if seq.res.tokens.len() >= seq.max_new {
             seq.res.decode_s += t.elapsed().as_secs_f64();
-            return Ok(seq.finish(FinishReason::Budget));
+            return Ok(StepPlan::Finished(seq.finish(FinishReason::Budget)));
         }
         let mut bias = vec![NEG_INF; s];
         for b in bias.iter_mut().take(c + 1) {
             *b = 0.0;
         }
-        let out = self.rt.forward(&[next], &[c as u32], &[c as u32], &bias, cache.as_slice())?;
-        cache.scatter(&out.new_kv, &[c as u32])?;
+        seq.res.decode_s += t.elapsed().as_secs_f64();
+        Ok(StepPlan::Forward(PlanInputs {
+            tokens: vec![next],
+            pos: vec![c as u32],
+            slots: vec![c as u32],
+            bias,
+            max_ctx: s,
+        }))
+    }
+
+    fn apply_step(
+        &mut self,
+        seq: &mut SeqState,
+        res: &StepResult<'_>,
+        cache: &mut HostKvCache,
+    ) -> Result<StepOutcome> {
+        let t = Instant::now();
+        let vocab = self.rt.cfg.vocab;
+        let out: &StepOutput = res.out;
+        cache.scatter(&out.new_kv, &res.plan.slots)?;
         cache.commit_contiguous(1)?;
         seq.res.steps += 1;
         seq.res.accepted_per_step.push(1);
@@ -115,5 +142,9 @@ impl DecodeEngine for VanillaEngine<'_> {
         seq.inner.downcast_mut::<VanillaSeq>().expect("vanilla seq state").next = picked;
         seq.res.decode_s += t.elapsed().as_secs_f64();
         Ok(StepOutcome::Running)
+    }
+
+    fn forward_batch(&mut self, items: &[BatchItem<'_>]) -> Result<Vec<StepOutput>> {
+        self.rt.forward_batch(items)
     }
 }

@@ -12,12 +12,15 @@
 //!                  hardware-aware sizing
 //! * [`decoding`] — vanilla / PPD / Medusa / lookup / speculative
 //!                  engines, all resumable (`begin_seq`/`step`)
+//! * [`batch`]    — fused batched stepping: plan/apply step split,
+//!                  ragged-plan collation, one device call per tick
 //! * [`coordinator`] — multi-worker serving layer: shared work queue,
 //!                  step-level continuous batching (`--max-inflight`),
 //!                  capped KV-cache pool, cancellation/queue-aging,
 //!                  out-of-order completion, TCP server
 //! * [`workload`] — trace loading + synthetic workload generation
 pub mod baselines;
+pub mod batch;
 pub mod config;
 pub mod coordinator;
 pub mod decoding;

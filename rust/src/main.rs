@@ -49,7 +49,7 @@ impl Args {
             };
             if let Some((k, v)) = name.split_once('=') {
                 flags.insert(k.to_string(), v.to_string());
-            } else if matches!(name, "force" | "greedy") {
+            } else if matches!(name, "force" | "greedy" | "fuse-steps") {
                 flags.insert(name.to_string(), "true".to_string());
             } else {
                 let v = it.next().ok_or_else(|| anyhow!("--{name} needs a value"))?;
@@ -117,9 +117,11 @@ fn print_help() {
            info        list artifact models and configs\n\
            generate    --model M --engine {{{}}} --prompt TEXT [--max-new N] [--temp T]\n\
            serve       --model M [--port 7878] [--engine ppd] [--workers N]\n\
-                       [--max-inflight 4] [--max-queue-age-ms MS]\n\
+                       [--max-inflight 4] [--max-queue-age-ms MS] [--fuse-steps]\n\
                        continuous batching: each worker interleaves up to\n\
-                       --max-inflight sequences one decode step at a time\n\
+                       --max-inflight sequences one decode step at a time;\n\
+                       --fuse-steps batches every in-flight tree step into\n\
+                       one forward_batch device call per tick\n\
            calibrate   --model M [--force]  measure per-bucket forward latency\n\
            sweep       --model M            theoretical-speedup curve vs tree size\n\
            trees       --model M            print the dynamic sparse tree set\n\n\
@@ -201,6 +203,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let ms: u64 = ms.parse().context("--max-queue-age-ms")?;
         policy.max_queue_age = Some(std::time::Duration::from_millis(ms));
     }
+    policy.fuse_steps = args.get("fuse-steps").is_some();
     let draft = match kind {
         EngineKind::Spec | EngineKind::SpecPpd => Some(args.get("draft").unwrap_or("ppd-d").to_string()),
         _ => None,

@@ -3,8 +3,10 @@
 //! coordinator/benches emit.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::Duration;
 
+use crate::runtime::RuntimeStats;
 use crate::util::json::Json;
 
 /// Fixed-boundary latency histogram (log-spaced), allocation-free on the
@@ -100,6 +102,47 @@ pub struct QueueStats {
     expired: AtomicU64,
     /// sequences aborted mid-flight by their cancel flag
     cancelled: AtomicU64,
+    /// fused `forward_batch` calls issued by step schedulers
+    fused_batches: AtomicU64,
+    /// sequences served through those fused calls
+    fused_rows: AtomicU64,
+    /// largest single fused batch observed
+    max_fused_batch: AtomicU64,
+    /// per-tick fused batch-size histogram
+    fused_hist: FusedHist,
+}
+
+/// Histogram slots for the fused batch-size distribution: slot `i`
+/// counts fused calls that served `i + 1` sequences; the last slot
+/// aggregates everything at or beyond `FUSED_HIST_SLOTS`.
+pub const FUSED_HIST_SLOTS: usize = 16;
+
+#[derive(Debug)]
+pub struct FusedHist([AtomicU64; FUSED_HIST_SLOTS]);
+
+impl Default for FusedHist {
+    fn default() -> Self {
+        FusedHist(std::array::from_fn(|_| AtomicU64::new(0)))
+    }
+}
+
+impl FusedHist {
+    fn record(&self, batch: usize) {
+        let slot = batch.clamp(1, FUSED_HIST_SLOTS) - 1;
+        self.0[slot].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `(batch_size, count)` pairs for every non-empty slot.
+    pub fn nonzero(&self) -> Vec<(usize, u64)> {
+        self.0
+            .iter()
+            .enumerate()
+            .filter_map(|(i, c)| {
+                let n = c.load(Ordering::Relaxed);
+                (n > 0).then_some((i + 1, n))
+            })
+            .collect()
+    }
 }
 
 impl QueueStats {
@@ -147,6 +190,15 @@ impl QueueStats {
     /// Record a sequence aborted by its cancel flag.
     pub fn on_cancel(&self) {
         self.cancelled.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one fused `forward_batch` call that served `batch`
+    /// sequences in a single device dispatch.
+    pub fn on_fused_batch(&self, batch: usize) {
+        self.fused_batches.fetch_add(1, Ordering::Relaxed);
+        self.fused_rows.fetch_add(batch as u64, Ordering::Relaxed);
+        self.max_fused_batch.fetch_max(batch as u64, Ordering::Relaxed);
+        self.fused_hist.record(batch);
     }
 
     /// Requests accepted but not yet picked up (the live queue depth).
@@ -203,6 +255,56 @@ impl QueueStats {
         self.cancelled.load(Ordering::Relaxed)
     }
 
+    pub fn fused_batches_total(&self) -> u64 {
+        self.fused_batches.load(Ordering::Relaxed)
+    }
+
+    pub fn fused_rows_total(&self) -> u64 {
+        self.fused_rows.load(Ordering::Relaxed)
+    }
+
+    pub fn max_fused_batch(&self) -> u64 {
+        self.max_fused_batch.load(Ordering::Relaxed)
+    }
+
+    /// `(batch_size, count)` pairs of the fused batch-size histogram.
+    pub fn fused_hist(&self) -> Vec<(usize, u64)> {
+        self.fused_hist.nonzero()
+    }
+
+    /// All counters as one Prometheus-exposition-format text block
+    /// (newline-separated `name value` lines) — what the TCP `metrics`
+    /// request serves for shared-nothing scraping.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut push = |name: &str, v: u64| {
+            out.push_str("ppd_queue_");
+            out.push_str(name);
+            out.push(' ');
+            out.push_str(&v.to_string());
+            out.push('\n');
+        };
+        push("enqueued_total", self.enqueued_total());
+        push("completed_total", self.completed_total());
+        push("rejected_total", self.rejected_total());
+        push("depth", self.depth());
+        push("in_flight", self.in_flight());
+        push("max_depth", self.max_depth());
+        push("busy_workers", self.busy_workers());
+        push("admitted_total", self.admitted_total());
+        push("sched_steps_total", self.sched_steps_total());
+        push("max_inflight_seqs", self.max_inflight_seqs());
+        push("expired_total", self.expired_total());
+        push("cancelled_total", self.cancelled_total());
+        push("fused_batches_total", self.fused_batches_total());
+        push("fused_rows_total", self.fused_rows_total());
+        push("max_fused_batch", self.max_fused_batch());
+        for (b, c) in self.fused_hist() {
+            out.push_str(&format!("ppd_queue_fused_batch_size_total{{batch=\"{b}\"}} {c}\n"));
+        }
+        out
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("enqueued", Json::Num(self.enqueued_total() as f64)),
@@ -217,7 +319,30 @@ impl QueueStats {
             ("max_inflight_seqs", Json::Num(self.max_inflight_seqs() as f64)),
             ("expired", Json::Num(self.expired_total() as f64)),
             ("cancelled", Json::Num(self.cancelled_total() as f64)),
+            ("fused_batches", Json::Num(self.fused_batches_total() as f64)),
+            ("fused_rows", Json::Num(self.fused_rows_total() as f64)),
+            ("max_fused_batch", Json::Num(self.max_fused_batch() as f64)),
         ])
+    }
+}
+
+/// Thread-safe aggregate of per-worker [`RuntimeStats`]: each worker
+/// owns its `Runtime` (the PJRT client is not `Send`), so device-call
+/// counters are flushed here when the worker drains — the coordinator
+/// keeps a handle that outlives the workers, which is how a serving run
+/// reports forwards-per-token after shutdown.
+#[derive(Debug, Default)]
+pub struct RuntimeAgg {
+    inner: Mutex<RuntimeStats>,
+}
+
+impl RuntimeAgg {
+    pub fn absorb(&self, stats: &RuntimeStats) {
+        self.inner.lock().unwrap().absorb(stats);
+    }
+
+    pub fn snapshot(&self) -> RuntimeStats {
+        self.inner.lock().unwrap().clone()
     }
 }
 
@@ -239,6 +364,14 @@ pub struct ServeReport {
     pub expired: u64,
     /// sequences aborted by cancellation
     pub cancelled: u64,
+    /// fused `forward_batch` calls (from [`QueueStats`])
+    pub fused_batches: u64,
+    /// sequences served through fused calls (from [`QueueStats`])
+    pub fused_rows: u64,
+    /// largest single fused batch (from [`QueueStats`])
+    pub max_fused_batch: u64,
+    /// fused batch-size histogram `(batch, count)` (from [`QueueStats`])
+    pub fused_hist: Vec<(usize, u64)>,
 }
 
 impl ServeReport {
@@ -263,6 +396,19 @@ impl ServeReport {
         self.peak_inflight = q.max_inflight_seqs();
         self.expired = q.expired_total();
         self.cancelled = q.cancelled_total();
+        self.fused_batches = q.fused_batches_total();
+        self.fused_rows = q.fused_rows_total();
+        self.max_fused_batch = q.max_fused_batch();
+        self.fused_hist = q.fused_hist();
+    }
+
+    /// Mean sequences per fused device call (0 when fusion never ran).
+    pub fn mean_fused_batch(&self) -> f64 {
+        if self.fused_batches == 0 {
+            0.0
+        } else {
+            self.fused_rows as f64 / self.fused_batches as f64
+        }
     }
 
     pub fn throughput_tok_s(&self) -> f64 {
@@ -298,6 +444,10 @@ impl ServeReport {
             ("peak_inflight", Json::Num(self.peak_inflight as f64)),
             ("expired", Json::Num(self.expired as f64)),
             ("cancelled", Json::Num(self.cancelled as f64)),
+            ("fused_batches", Json::Num(self.fused_batches as f64)),
+            ("fused_rows", Json::Num(self.fused_rows as f64)),
+            ("max_fused_batch", Json::Num(self.max_fused_batch as f64)),
+            ("mean_fused_batch", Json::Num(self.mean_fused_batch())),
         ])
     }
 }
@@ -375,6 +525,71 @@ mod tests {
         assert_eq!(j.req("max_inflight_seqs").unwrap().as_usize().unwrap(), 2);
         assert_eq!(j.req("expired").unwrap().as_usize().unwrap(), 1);
         assert_eq!(j.req("cancelled").unwrap().as_usize().unwrap(), 1);
+    }
+
+    #[test]
+    fn fused_counters_and_histogram() {
+        let q = QueueStats::new();
+        q.on_fused_batch(1);
+        q.on_fused_batch(3);
+        q.on_fused_batch(3);
+        q.on_fused_batch(40); // clamps into the top slot
+        assert_eq!(q.fused_batches_total(), 4);
+        assert_eq!(q.fused_rows_total(), 1 + 3 + 3 + 40);
+        assert_eq!(q.max_fused_batch(), 40);
+        let hist = q.fused_hist();
+        assert!(hist.contains(&(1, 1)));
+        assert!(hist.contains(&(3, 2)));
+        assert!(hist.contains(&(FUSED_HIST_SLOTS, 1)));
+        let j = q.to_json();
+        assert_eq!(j.req("fused_batches").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(j.req("max_fused_batch").unwrap().as_usize().unwrap(), 40);
+    }
+
+    #[test]
+    fn prometheus_text_carries_counters() {
+        let q = QueueStats::new();
+        q.on_enqueue(1);
+        q.on_dequeue();
+        q.on_admit(1);
+        q.on_fused_batch(2);
+        q.on_complete();
+        let text = q.to_prometheus();
+        assert!(text.contains("ppd_queue_enqueued_total 1\n"), "{text}");
+        assert!(text.contains("ppd_queue_completed_total 1\n"), "{text}");
+        assert!(text.contains("ppd_queue_fused_batches_total 1\n"), "{text}");
+        assert!(text.contains("ppd_queue_fused_batch_size_total{batch=\"2\"} 1\n"), "{text}");
+        // every line is `name value` (prometheus exposition style)
+        for line in text.lines() {
+            assert_eq!(line.split(' ').count(), 2, "bad line {line}");
+        }
+    }
+
+    #[test]
+    fn runtime_agg_absorbs_across_workers() {
+        let agg = RuntimeAgg::default();
+        let a = RuntimeStats {
+            forwards: 10,
+            forward_batches: 3,
+            batch_rows: 9,
+            per_batch: [(3, 3)].into_iter().collect(),
+            ..Default::default()
+        };
+        agg.absorb(&a);
+        let b = RuntimeStats {
+            forwards: 5,
+            forward_batches: 1,
+            batch_rows: 2,
+            per_batch: [(2, 1)].into_iter().collect(),
+            ..Default::default()
+        };
+        agg.absorb(&b);
+        let snap = agg.snapshot();
+        assert_eq!(snap.forwards, 15);
+        assert_eq!(snap.forward_batches, 4);
+        assert_eq!(snap.batch_rows, 11);
+        assert_eq!(snap.per_batch.get(&3), Some(&3));
+        assert!((snap.mean_batch_rows() - 2.75).abs() < 1e-9);
     }
 
     #[test]

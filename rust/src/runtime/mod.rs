@@ -55,6 +55,10 @@ impl StepOutput {
 }
 
 /// Execution counters (perf pass + metrics).
+///
+/// `forwards` counts *device calls*: a fused `forward_batch` over k
+/// sequences that hits a batched executable bumps it by 1 (that is the
+/// whole point), while its serial fallback bumps it k times.
 #[derive(Debug, Default, Clone)]
 pub struct RuntimeStats {
     pub forwards: usize,
@@ -62,12 +66,54 @@ pub struct RuntimeStats {
     pub upload_s: f64,
     pub download_s: f64,
     pub per_bucket: BTreeMap<usize, (usize, f64)>,
+    /// `forward_batch` invocations (fused or fallen back)
+    pub forward_batches: usize,
+    /// sequences served through `forward_batch`
+    pub batch_rows: usize,
+    /// batch-size histogram of `forward_batch` calls
+    pub per_batch: BTreeMap<usize, usize>,
+}
+
+impl RuntimeStats {
+    pub fn absorb(&mut self, other: &RuntimeStats) {
+        self.forwards += other.forwards;
+        self.forward_s += other.forward_s;
+        self.upload_s += other.upload_s;
+        self.download_s += other.download_s;
+        for (&b, &(c, s)) in &other.per_bucket {
+            let e = self.per_bucket.entry(b).or_insert((0, 0.0));
+            e.0 += c;
+            e.1 += s;
+        }
+        self.forward_batches += other.forward_batches;
+        self.batch_rows += other.batch_rows;
+        for (&b, &c) in &other.per_batch {
+            *self.per_batch.entry(b).or_insert(0) += c;
+        }
+    }
+
+    /// Mean sequences per `forward_batch` call — the amortization
+    /// factor fused stepping achieved (0 when it never ran).
+    pub fn mean_batch_rows(&self) -> f64 {
+        if self.forward_batches == 0 {
+            0.0
+        } else {
+            self.batch_rows as f64 / self.forward_batches as f64
+        }
+    }
 }
 
 pub struct Runtime {
     pub cfg: ModelConfig,
     client: PjRtClient,
     executables: BTreeMap<(usize, usize), PjRtLoadedExecutable>,
+    /// batched forward graphs present in the artifact set, keyed
+    /// `(batch, tree_len)` (empty on pre-v2 artifacts).  Compiled
+    /// **lazily** on first `forward_batch` use: most runtime users
+    /// (generate, calibrate, benches, unfused serving) never fuse, and
+    /// on a real backend each compile costs seconds of startup.
+    batch_graphs: BTreeMap<(usize, usize), std::path::PathBuf>,
+    batch_executables: RefCell<BTreeMap<(usize, usize), PjRtLoadedExecutable>>,
     /// available KV context lengths, ascending (e.g. [256, 512])
     kv_buckets: Vec<usize>,
     weight_bufs: Vec<PjRtBuffer>,
@@ -142,6 +188,19 @@ impl Runtime {
         }
         kv_buckets.sort_unstable();
 
+        // batched forward graphs (fused step execution): record which
+        // (batch, tree_len) combinations the AOT step emitted, but
+        // defer compilation to first use — cheap stat calls here
+        let mut batch_graphs = BTreeMap::new();
+        for &b in cfg.batch_buckets.iter().filter(|&&b| b > 1) {
+            for &n in &cfg.buckets {
+                let p = paths.fwd_hlo_batch(b, n);
+                if p.exists() {
+                    batch_graphs.insert((b, n), p);
+                }
+            }
+        }
+
         let weights_host = Weights::load(&paths.weights_bin(), &paths.weights_manifest())?;
         let mut weight_bufs = Vec::with_capacity(weights_host.entries.len());
         let mut weight_lits = Vec::with_capacity(weights_host.entries.len());
@@ -165,6 +224,8 @@ impl Runtime {
             cfg,
             client,
             executables,
+            batch_graphs,
+            batch_executables: RefCell::new(BTreeMap::new()),
             kv_buckets,
             weight_bufs,
             _weight_lits: weight_lits,
@@ -368,6 +429,163 @@ impl Runtime {
         e.0 += 1;
         e.1 += exec_s + upload_s + download_s;
         Ok(out)
+    }
+
+    /// One fused forward over many sequences' tree steps: the core of
+    /// batched step execution (`--fuse-steps`).  `items[i]` pairs one
+    /// sequence's planned step with a snapshot of its own KV cache;
+    /// `results[i]` is that sequence's output, trimmed to its real row
+    /// count — byte-compatible with calling [`Runtime::forward`] per
+    /// item.
+    ///
+    /// Dispatch policy: pick the smallest `(batch, tree_len)` bucket
+    /// covering the batch from the AOT'd `fwd_b{B}_n{N}` graphs; when
+    /// the artifact set carries none that fit (pre-v2 artifacts, or an
+    /// oversized batch), fall back to per-row `forward` calls — the
+    /// scheduler stays correct, it just loses the dispatch
+    /// amortization.  Stats record every call either way so the
+    /// fallback is visible in `per_batch` vs `forwards`.
+    pub fn forward_batch(
+        &self,
+        items: &[crate::batch::BatchItem<'_>],
+    ) -> Result<Vec<StepOutput>> {
+        let k = items.len();
+        if k == 0 {
+            return Ok(Vec::new());
+        }
+        {
+            let mut st = self.stats.borrow_mut();
+            st.forward_batches += 1;
+            st.batch_rows += k;
+            *st.per_batch.entry(k).or_insert(0) += 1;
+        }
+        if k == 1 {
+            // a lone rider gets the plain single-sequence graph: the
+            // smallest batched bucket is b=2, which would double the
+            // cache upload (the dominant transfer) for no benefit
+            let it = &items[0];
+            return Ok(vec![self.forward(
+                &it.plan.tokens,
+                &it.plan.pos,
+                &it.plan.slots,
+                &it.plan.bias,
+                it.cache.as_slice(),
+            )?]);
+        }
+        let s = self.cfg.max_ctx;
+        let d = self.cfg.d_model;
+        let l2 = 2 * self.cfg.n_layers;
+        let max_n = items.iter().map(|it| it.plan.len()).max().unwrap_or(0);
+        let key = self.cfg.bucket_for(max_n).ok().and_then(|n_bucket| {
+            self.cfg
+                .batch_buckets
+                .iter()
+                .copied()
+                .filter(|&b| b >= k)
+                .find(|&b| self.batch_graphs.contains_key(&(b, n_bucket)))
+                .map(|b| (b, n_bucket))
+        });
+        let Some((b_bucket, n_bucket)) = key else {
+            // serial fallback: no batched graph covers this batch
+            return items
+                .iter()
+                .map(|it| {
+                    self.forward(
+                        &it.plan.tokens,
+                        &it.plan.pos,
+                        &it.plan.slots,
+                        &it.plan.bias,
+                        it.cache.as_slice(),
+                    )
+                })
+                .collect();
+        };
+        // lazy compile: the first fused call for this bucket pays the
+        // compile; everyone who never fuses pays nothing at load
+        let mut exes = self.batch_executables.borrow_mut();
+        if !exes.contains_key(&(b_bucket, n_bucket)) {
+            let p = &self.batch_graphs[&(b_bucket, n_bucket)];
+            let proto = HloModuleProto::from_text_file(p)
+                .map_err(|e| anyhow!("loading {}: {e}", p.display()))?;
+            let exe = self
+                .client
+                .compile(&XlaComputation::from_proto(&proto))
+                .map_err(|e| anyhow!("compiling batch bucket ({b_bucket},{n_bucket}): {e}"))?;
+            exes.insert((b_bucket, n_bucket), exe);
+        }
+        let exe = exes.get(&(b_bucket, n_bucket)).expect("just compiled");
+
+        let t0 = std::time::Instant::now();
+        let c = crate::batch::collator::collate(items, b_bucket, n_bucket, l2, s, d)?;
+        let mut bufs: Vec<PjRtBuffer> = Vec::with_capacity(5);
+        bufs.push(
+            self.client
+                .buffer_from_host_buffer(&c.tokens, &[b_bucket, n_bucket], None)
+                .map_err(|e| anyhow!("{e}"))?,
+        );
+        bufs.push(
+            self.client
+                .buffer_from_host_buffer(&c.pos, &[b_bucket, n_bucket], None)
+                .map_err(|e| anyhow!("{e}"))?,
+        );
+        bufs.push(
+            self.client
+                .buffer_from_host_buffer(&c.slots, &[b_bucket, n_bucket], None)
+                .map_err(|e| anyhow!("{e}"))?,
+        );
+        bufs.push(
+            self.client
+                .buffer_from_host_buffer(&c.bias, &[b_bucket, n_bucket, s], None)
+                .map_err(|e| anyhow!("{e}"))?,
+        );
+        bufs.push(
+            self.client
+                .buffer_from_host_buffer(&c.cache, &[b_bucket, l2, s, d], None)
+                .map_err(|e| anyhow!("{e}"))?,
+        );
+        let upload_s = t0.elapsed().as_secs_f64();
+
+        let mut args: Vec<&PjRtBuffer> = bufs.iter().collect();
+        args.extend(self.weight_bufs.iter());
+
+        let t1 = std::time::Instant::now();
+        let outs = exe
+            .execute_b::<&PjRtBuffer>(&args)
+            .map_err(|e| anyhow!("forward_batch bucket ({b_bucket},{n_bucket}): {e}"))?;
+        let result = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching batched step output: {e}"))?;
+        let exec_s = t1.elapsed().as_secs_f64();
+
+        let t2 = std::time::Instant::now();
+        let (l_logits, l_hidden, l_kv) = result
+            .to_tuple3()
+            .map_err(|e| anyhow!("untupling batched step output: {e}"))?;
+        let logits = to_f32_vec(&l_logits)?;
+        let hidden = to_f32_vec(&l_hidden)?;
+        let kv = to_f32_vec(&l_kv)?;
+        let split = crate::batch::collator::split(&c, &logits, &hidden, &kv, self.cfg.vocab)?;
+        let download_s = t2.elapsed().as_secs_f64();
+
+        let mut st = self.stats.borrow_mut();
+        // one device call, however many sequences rode along
+        st.forwards += 1;
+        st.forward_s += exec_s;
+        st.upload_s += upload_s;
+        st.download_s += download_s;
+        let e = st.per_bucket.entry(n_bucket).or_insert((0, 0.0));
+        e.0 += 1;
+        e.1 += exec_s + upload_s + download_s;
+        Ok(split)
+    }
+
+    /// Batch buckets with at least one batched graph in the artifact
+    /// set (compiled lazily on first fused use).
+    pub fn batch_buckets(&self) -> Vec<usize> {
+        let mut b: Vec<usize> = self.batch_graphs.keys().map(|&(b, _)| b).collect();
+        b.sort_unstable();
+        b.dedup();
+        b
     }
 
     /// Medusa-baseline heads: hidden row -> [K][vocab] logits.

@@ -117,6 +117,10 @@ impl DecodeEngine for MockEngine {
     }
 }
 
+// no plan/apply split: under a fused policy this engine still steps
+// per-sequence via the default StepPlan::Fallback
+impl ppd::batch::BatchStepEngine for MockEngine {}
+
 struct MockBackend {
     delay: Duration,
 }
@@ -196,7 +200,7 @@ fn cache_pool_never_exceeds_admission_budget() {
     let coord = Coordinator::spawn_with_backend_policy(
         Arc::new(MockBackend { delay: Duration::from_millis(2) }),
         workers,
-        SchedPolicy { max_inflight, max_queue_age: None },
+        SchedPolicy { max_inflight, ..Default::default() },
     )
     .expect("spawn");
     for _ in 0..5 {
@@ -307,6 +311,66 @@ fn panicking_request_gets_error_and_worker_survives() {
     let resp2 = rx.recv_timeout(Duration::from_secs(5)).expect("follow-up response");
     assert!(resp2.error.is_none(), "{:?}", resp2.error);
     assert_eq!(resp2.tokens, expected_tokens(&[1, 2], 4, 1));
+}
+
+#[test]
+fn fused_policy_falls_back_for_engines_without_plans() {
+    // this mock has no plan/apply split: a fused scheduler must serve
+    // it through the monolithic step path, token-exactly, and the
+    // fused-batch counters must stay at zero (nothing actually fused)
+    let coord = Coordinator::spawn_with_backend_policy(
+        Arc::new(MockBackend { delay: Duration::ZERO }),
+        2,
+        SchedPolicy { max_inflight: 4, fuse_steps: true, ..Default::default() },
+    )
+    .expect("spawn");
+    let reqs = mk_reqs(12);
+    let expect: Vec<Vec<u32>> = reqs
+        .iter()
+        .map(|r| expected_tokens(&r.prompt, r.max_new, r.seed))
+        .collect();
+    let resps = coord.run_batch(reqs).expect("batch");
+    for (i, r) in resps.iter().enumerate() {
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.tokens, expect[i], "fused fallback perturbed request {i}");
+    }
+    assert_eq!(coord.queue_stats().fused_batches_total(), 0);
+}
+
+#[test]
+fn tcp_metrics_roundtrip_exports_queue_counters() {
+    // shared-nothing metrics export: a scrape over the TCP line
+    // protocol reflects the counters the served requests accumulated
+    let coord = spawn_mock(2, 0);
+    let addr = "127.0.0.1:17935";
+    let server = std::thread::spawn(move || {
+        ppd::coordinator::server::serve(coord, addr, Some(4)).unwrap();
+    });
+    std::thread::sleep(Duration::from_millis(200));
+    for i in 0..2 {
+        let resp =
+            ppd::coordinator::server::client_request(addr, &format!("metrics req {i}"), 4)
+                .unwrap();
+        assert!(resp.get("error").is_none(), "{resp}");
+    }
+    let text = ppd::coordinator::server::client_metrics(addr).unwrap();
+    // `"metrics": false` is NOT a scrape: it parses as a (bad)
+    // generation request and gets an error response, not the dump
+    {
+        use std::io::{BufRead, BufReader, Write};
+        let mut stream = std::net::TcpStream::connect(addr).unwrap();
+        writeln!(stream, "{}", r#"{"metrics": false}"#).unwrap();
+        let mut line = String::new();
+        BufReader::new(stream).read_line(&mut line).unwrap();
+        let j = ppd::util::json::Json::parse(line.trim()).unwrap();
+        assert!(j.get("error").is_some(), "metrics=false must not scrape: {j}");
+    }
+    server.join().unwrap();
+    assert!(text.contains("ppd_queue_enqueued_total 2\n"), "{text}");
+    assert!(text.contains("ppd_queue_completed_total 2\n"), "{text}");
+    assert!(text.contains("ppd_queue_fused_batches_total 0\n"), "{text}");
+    assert!(text.contains("ppd_workers 2\n"), "{text}");
+    assert!(text.contains("ppd_caches_outstanding 0\n"), "{text}");
 }
 
 #[test]

@@ -242,7 +242,7 @@ fn coordinator_multi_worker_matches_single_worker() {
     let Some(root) = artifacts_root() else { return };
     // max_inflight 1 reproduces the strictly-serial PR 1 behavior: the
     // pool bound collapses back to one cache per worker
-    let serial = SchedPolicy { max_inflight: 1, max_queue_age: None };
+    let serial = SchedPolicy { max_inflight: 1, ..Default::default() };
     let spawn = |workers| {
         Coordinator::spawn_with_policy(
             root.clone(),
@@ -289,7 +289,7 @@ fn continuous_batching_matches_serial_on_real_ppd_engine() {
             EngineKind::Ppd,
             greedy_cfg(),
             1,
-            SchedPolicy { max_inflight, max_queue_age: None },
+            SchedPolicy { max_inflight, ..Default::default() },
         )
         .unwrap()
     };
@@ -309,6 +309,59 @@ fn continuous_batching_matches_serial_on_real_ppd_engine() {
     assert!(batching.caches_created() <= 4);
     assert_eq!(batching.caches_outstanding(), 0);
     assert!(batching.queue_stats().max_inflight_seqs() >= 2, "batch never interleaved");
+}
+
+#[test]
+fn fused_stepping_matches_unfused_on_real_ppd_engine() {
+    // the fused-execution acceptance invariant on the *real* engine:
+    // collecting every in-flight tree step into one forward_batch call
+    // (batched HLO when present, per-row fallback otherwise) must be
+    // token-exact with per-sequence stepping
+    let Some(root) = artifacts_root() else { return };
+    let spawn = |fuse_steps| {
+        Coordinator::spawn_with_policy(
+            root.clone(),
+            "ppd-d".into(),
+            None,
+            EngineKind::Ppd,
+            greedy_cfg(),
+            1,
+            SchedPolicy { max_inflight: 4, fuse_steps, ..Default::default() },
+        )
+        .unwrap()
+    };
+    let fused = spawn(true);
+    let unfused = spawn(false);
+    let mk = || -> Vec<Request> {
+        (0..8)
+            .map(|i| Request::new(i, workload::encode(PROMPTS[i as usize % 3]), 16 + (i as usize % 3) * 4))
+            .collect()
+    };
+    let a = fused.run_batch(mk()).unwrap();
+    let b = unfused.run_batch(mk()).unwrap();
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert!(x.error.is_none(), "{:?}", x.error);
+        assert_eq!(x.tokens, y.tokens, "request {i} perturbed by fused stepping");
+    }
+    let stats = fused.queue_stats();
+    assert!(stats.fused_batches_total() > 0, "fusion never engaged");
+    assert!(stats.max_fused_batch() >= 2, "no tick ever fused >1 sequence");
+    // the batched-HLO path must actually amortize device calls: if
+    // forward_batch silently fell back to per-row forwards (missing /
+    // mismatched fwd_b{B}_n{N} artifacts), fused device calls would
+    // equal unfused and this catches it
+    let fused_agg = fused.runtime_agg();
+    let unfused_agg = unfused.runtime_agg();
+    drop(fused);
+    drop(unfused);
+    let (f, u) = (fused_agg.snapshot(), unfused_agg.snapshot());
+    assert!(f.forward_batches > 0);
+    assert!(
+        f.forwards < u.forwards,
+        "fused path issued {} device calls vs {} unfused — batched HLO never engaged",
+        f.forwards,
+        u.forwards
+    );
 }
 
 #[test]

@@ -10,10 +10,15 @@
 //!    position/slot consistency under random tree shapes
 //!  * KV cache: scatter/compact equals a reference simulator under
 //!    random operation sequences
+//!  * batch collation: ragged plans → pad → split round-trips every
+//!    sequence's logits rows and KV entries for random tree shapes and
+//!    batch sizes
 //!  * verification: greedy walk equals brute-force longest-matching path
 //!  * chains_to_tree: merged tree reproduces every proposed chain
 //!  * JSON: parse∘serialize is the identity on random values
 
+use ppd::batch::collator::{collate, split};
+use ppd::batch::{BatchItem, PlanInputs};
 use ppd::decoding::lookup::chains_to_tree;
 use ppd::decoding::verify::{verify, VerifyMode};
 use ppd::kvcache::HostKvCache;
@@ -282,6 +287,151 @@ fn prop_cache_scatter_compact_truncate_roundtrip() {
         cache.reset();
         assert_eq!(cache.committed(), 0, "seed {seed}");
         assert_eq!(cache.remaining(), cache.capacity(), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_collate_pad_split_roundtrip_preserves_every_sequence() {
+    // random ragged batches: k plans of random tree length, each with a
+    // uniquely tagged cache; collation must place every real value in
+    // its padded slot (pads masked/trash-routed), and splitting a
+    // synthetic padded device output must hand every sequence exactly
+    // its own logits rows and KV entries
+    let (layers, s, d, vocab) = (2usize, 32usize, 3usize, 7usize);
+    let planes = 2 * layers;
+    let batch_buckets = [1usize, 2, 4, 8];
+    let neg_inf = ppd::runtime::NEG_INF;
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed + 4242);
+        let k = 1 + rng.below(6); // 1..=6 sequences
+        // build plans + caches (owned first; BatchItem borrows)
+        let mut plans: Vec<PlanInputs> = Vec::new();
+        let mut caches: Vec<HostKvCache> = Vec::new();
+        for i in 0..k {
+            let n_i = 1 + rng.below(6); // 1..=6 tree tokens
+            let committed = rng.below(8);
+            let tag = (seed * 100 + i as u64) as u32;
+            let mut bias = vec![0.0f32; n_i * s];
+            for (j, b) in bias.iter_mut().enumerate() {
+                // addressable bias values so padding bugs show up
+                *b = (tag as f32) + j as f32 * 0.25;
+            }
+            plans.push(PlanInputs {
+                tokens: (0..n_i as u32).map(|j| tag + j).collect(),
+                pos: (0..n_i as u32).map(|j| committed as u32 + j).collect(),
+                slots: (0..n_i as u32).map(|j| committed as u32 + j).collect(),
+                bias,
+                max_ctx: s,
+            });
+            let mut cache = HostKvCache::new(layers, s, d);
+            if committed > 0 {
+                let kv: Vec<f32> = (0..planes * committed * d)
+                    .map(|x| tag as f32 + x as f32)
+                    .collect();
+                let slots: Vec<u32> = (0..committed as u32).collect();
+                cache.scatter(&kv, &slots).unwrap();
+                cache.commit_contiguous(committed).unwrap();
+            }
+            caches.push(cache);
+        }
+        let items: Vec<BatchItem> = plans
+            .iter()
+            .zip(&caches)
+            .map(|(plan, cache)| BatchItem { plan, cache })
+            .collect();
+        let max_n = plans.iter().map(|p| p.len()).max().unwrap();
+        let n_bucket = max_n.next_power_of_two();
+        let b_bucket = *batch_buckets.iter().find(|&&b| b >= k).unwrap();
+        let c = collate(&items, b_bucket, n_bucket, planes, s, d)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+
+        // padded layout holds every real value in place
+        assert_eq!(c.rows, k, "seed {seed}");
+        for (i, plan) in plans.iter().enumerate() {
+            let n_i = plan.len();
+            assert_eq!(c.row_lens[i], n_i, "seed {seed}");
+            for j in 0..n_bucket {
+                let idx = i * n_bucket + j;
+                if j < n_i {
+                    assert_eq!(c.tokens[idx], plan.tokens[j] as i32, "seed {seed}");
+                    assert_eq!(c.pos[idx], plan.pos[j] as i32, "seed {seed}");
+                    assert_eq!(c.slots[idx], plan.slots[j] as i32, "seed {seed}");
+                    let brow = &c.bias[idx * s..(idx + 1) * s];
+                    assert_eq!(brow, &plan.bias[j * s..(j + 1) * s], "seed {seed}");
+                } else {
+                    // pad columns: trash slot, fully masked
+                    assert_eq!(c.slots[idx], (s - 1) as i32, "seed {seed}");
+                    assert!(
+                        c.bias[idx * s..(idx + 1) * s].iter().all(|&b| b == neg_inf),
+                        "seed {seed}: pad column visible"
+                    );
+                }
+            }
+            // the row's cache snapshot rides along verbatim
+            let base = i * planes * s * d;
+            assert_eq!(
+                &c.cache[base..base + planes * s * d],
+                caches[i].as_slice(),
+                "seed {seed}: cache block {i} corrupted"
+            );
+        }
+        // pad rows fully masked + trash-routed
+        for r in k..b_bucket {
+            let base = r * n_bucket;
+            assert!(
+                c.slots[base..base + n_bucket].iter().all(|&sl| sl == (s - 1) as i32),
+                "seed {seed}"
+            );
+            assert!(
+                c.bias[base * s..(base + n_bucket) * s].iter().all(|&b| b == neg_inf),
+                "seed {seed}: pad row visible"
+            );
+        }
+
+        // synthesize the padded device output with addressable values
+        // (a pure function of the padded coordinate)
+        let logits: Vec<f32> =
+            (0..b_bucket * n_bucket * vocab).map(|x| x as f32 * 0.5).collect();
+        let hidden: Vec<f32> = (0..b_bucket * n_bucket * d).map(|x| x as f32 * 2.0).collect();
+        let new_kv: Vec<f32> =
+            (0..b_bucket * planes * n_bucket * d).map(|x| x as f32 * 3.0).collect();
+        let outs = split(&c, &logits, &hidden, &new_kv, vocab)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(outs.len(), k, "seed {seed}");
+        for (i, (out, plan)) in outs.iter().zip(&plans).enumerate() {
+            let n_i = plan.len();
+            assert_eq!(out.n, n_i, "seed {seed}");
+            assert_eq!(out.logits.len(), n_i * vocab, "seed {seed}");
+            assert_eq!(out.hidden.len(), n_i * d, "seed {seed}");
+            assert_eq!(out.new_kv.len(), planes * n_i * d, "seed {seed}");
+            // every logits row is exactly the padded row's prefix
+            for j in 0..n_i {
+                let src = (i * n_bucket + j) * vocab;
+                assert_eq!(
+                    &out.logits[j * vocab..(j + 1) * vocab],
+                    &logits[src..src + vocab],
+                    "seed {seed}: logits row ({i},{j}) misrouted"
+                );
+                let hsrc = (i * n_bucket + j) * d;
+                assert_eq!(
+                    &out.hidden[j * d..(j + 1) * d],
+                    &hidden[hsrc..hsrc + d],
+                    "seed {seed}: hidden row ({i},{j}) misrouted"
+                );
+            }
+            // every KV entry: plane p, token j of row i
+            for p in 0..planes {
+                for j in 0..n_i {
+                    let dst = (p * n_i + j) * d;
+                    let src = ((i * planes + p) * n_bucket + j) * d;
+                    assert_eq!(
+                        &out.new_kv[dst..dst + d],
+                        &new_kv[src..src + d],
+                        "seed {seed}: kv entry ({i},{p},{j}) misrouted"
+                    );
+                }
+            }
+        }
     }
 }
 
