@@ -5,10 +5,12 @@
 //! verification -> KV compaction, caches pooled), and reports
 //! latency/throughput like a serving benchmark.
 //!
-//!     cargo run --release --example serve_requests [model] [engine] [workers] [fuse]
+//!     cargo run --release --example serve_requests [model] [engine] [workers] [fuse|shared]
 //!
 //! Pass `fuse` as the 4th argument to batch every in-flight tree step
-//! into one device call per tick; the final device line reports
+//! into one device call per tick, or `shared` to additionally route
+//! every worker's tick through ONE device dispatcher (one runtime, one
+//! device queue — `--shared-runtime`); the final device line reports
 //! forwards-per-token either way, which is where the batching win
 //! shows up.
 
@@ -32,12 +34,15 @@ fn main() -> Result<()> {
         .map(|w| w.parse().expect("workers must be a number"))
         .unwrap_or(2);
     let kind = EngineKind::parse(&engine)?;
-    let fuse_steps = std::env::args().nth(4).as_deref() == Some("fuse");
+    let mode = std::env::args().nth(4).unwrap_or_default();
+    let fuse_steps = mode == "fuse";
+    let shared_runtime = mode == "shared";
     let max_new = 48;
 
     let cfg = ServeConfig { n_candidates: 6, n_prompt_budget: 10, ..Default::default() };
     println!(
-        "spawning coordinator: model={model} engine={engine} workers={workers} fuse={fuse_steps}"
+        "spawning coordinator: model={model} engine={engine} workers={workers} \
+         fuse={fuse_steps} shared={shared_runtime}"
     );
     let draft = matches!(kind, EngineKind::Spec | EngineKind::SpecPpd).then(|| "ppd-d".to_string());
     let coord = Coordinator::spawn_with_policy(
@@ -47,7 +52,7 @@ fn main() -> Result<()> {
         kind,
         cfg,
         workers,
-        SchedPolicy { fuse_steps, ..Default::default() },
+        SchedPolicy { fuse_steps, shared_runtime, ..Default::default() },
     )?;
 
     let mut table = Table::new(&["task", "reqs", "tok", "tok/s", "mean tau", "p50 lat (ms)", "p95 lat (ms)"]);
@@ -98,6 +103,18 @@ fn main() -> Result<()> {
     // device-call accounting: workers flush their RuntimeStats on
     // drain, so shut the pool down first, then report forwards per
     // token — the number --fuse-steps exists to shrink
+    let dispatch = coord.dispatch_stats();
+    if shared_runtime {
+        println!(
+            "dispatcher: {} cross-worker batches (mean width {:.2}, {} spanning >1 worker), \
+             {} solo forwards, peak queue depth {}",
+            dispatch.batches_total(),
+            dispatch.mean_width(),
+            dispatch.multi_worker_batches_total(),
+            dispatch.solo_forwards_total(),
+            dispatch.max_queue_depth()
+        );
+    }
     let agg = coord.runtime_agg();
     drop(coord);
     let rt_stats = agg.snapshot();

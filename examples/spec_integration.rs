@@ -12,7 +12,7 @@ use anyhow::Result;
 use ppd::config::{ArtifactPaths, ServeConfig};
 use ppd::coordinator::{build_engine, EngineKind};
 use ppd::decoding::DecodeEngine;
-use ppd::runtime::Runtime;
+use ppd::runtime::{Device, Runtime};
 use ppd::util::bench::Table;
 use ppd::workload::load_trace;
 
@@ -33,7 +33,7 @@ fn main() -> Result<()> {
     let mut cache =
         ppd::kvcache::HostKvCache::new(target.cfg.n_layers, target.cfg.max_ctx, target.cfg.d_model);
     for kind in [EngineKind::Spec, EngineKind::SpecPpd] {
-        let mut engine = build_engine(kind, &target, Some(&draft), &paths, &cfg, 0)?;
+        let mut engine = build_engine(kind, &target, Some(&draft as &dyn Device), &paths, &cfg, 0)?;
         let (mut tok, mut steps, mut dsteps, mut time) = (0usize, 0usize, 0usize, 0.0f64);
         let mut outputs = Vec::new();
         for it in &items {

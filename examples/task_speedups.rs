@@ -10,7 +10,7 @@ use ppd::config::{ArtifactPaths, ServeConfig};
 use ppd::coordinator::{build_engine, EngineKind};
 use ppd::decoding::vanilla::VanillaEngine;
 use ppd::decoding::DecodeEngine;
-use ppd::runtime::Runtime;
+use ppd::runtime::{Device, Runtime};
 use ppd::util::bench::Table;
 use ppd::workload::load_trace;
 
@@ -45,7 +45,7 @@ fn main() -> Result<()> {
         table.row(&[task.into(), "vanilla".into(), format!("{:.0}", v_tok as f64 / v_time), "1.00".into(), "-".into()]);
 
         for kind in [EngineKind::Ppd, EngineKind::Medusa, EngineKind::Pld, EngineKind::Spec] {
-            let mut engine = build_engine(kind, &rt, Some(&draft), &paths, &cfg, 0)?;
+            let mut engine = build_engine(kind, &rt, Some(&draft as &dyn Device), &paths, &cfg, 0)?;
             let mut tok = 0usize;
             let mut time = 0.0;
             let mut steps = 0usize;

@@ -7,7 +7,7 @@ use ppd::config::{ArtifactPaths, ServeConfig};
 use ppd::coordinator::{build_engine, EngineKind};
 use ppd::decoding::{DecodeEngine, GenerationResult};
 use ppd::runtime::calibrate::Calibration;
-use ppd::runtime::Runtime;
+use ppd::runtime::{Device, Runtime};
 use ppd::workload::{load_trace, TraceItem};
 
 pub fn artifacts_root() -> Option<PathBuf> {
@@ -67,7 +67,8 @@ pub fn run_engine(
     items: &[&TraceItem],
     max_new: usize,
 ) -> anyhow::Result<EngineRun> {
-    let mut engine = build_engine(kind, rt, draft, paths, cfg, 0)?;
+    let mut engine =
+        build_engine(kind, rt, draft.map(|d| d as &dyn Device), paths, cfg, 0)?;
     // one cache reused across the whole run (engines borrow per call;
     // allocating ~MBs per trace item would pollute the measurements)
     let (l, s, d) = engine.cache_shape();

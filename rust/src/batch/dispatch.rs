@@ -1,0 +1,889 @@
+//! Shared-runtime device dispatch: ONE device queue for all workers.
+//!
+//! PR 3 fused every in-flight tree step *within* a worker into one
+//! `forward_batch` call, but with N workers the device still saw N
+//! calls per wall tick.  This module inverts the worker↔runtime
+//! ownership: under `--shared-runtime` the workers stop owning a
+//! `Runtime` each and instead submit their per-tick step plans to a
+//! single [`DeviceDispatcher`] that owns the one runtime, coalesces
+//! submissions arriving within a tick window across *all* workers into
+//! one `forward_batch` over the union (picking the covering
+//! `fwd_b{B}_n{N}` bucket), and routes each row's [`StepOutput`] back
+//! to its submitting scheduler over a reply channel:
+//!
+//! ```text
+//!   scheduler 0 ── plans ──┐
+//!   scheduler 1 ── plans ──┤   DeviceDispatcher        ┌─ device
+//!   scheduler 2 ── plans ──┼──▶ window/barrier ──────▶ │ forward_batch
+//!   scheduler 3 ── plans ──┘   (1 call / wall tick)    └─ (1 queue)
+//!        ▲  per-row StepOutputs via reply channels  │
+//!        └──────────────────────────────────────────┘
+//! ```
+//!
+//! Pipelined/hardware-co-designed speculative systems (SPEED,
+//! arXiv:2310.12072; HADES, arXiv:2412.19925) get their throughput from
+//! keeping one deep device queue full instead of many shallow ones —
+//! this is that topology for the PPD serving stack.
+//!
+//! ## Barrier and timeout
+//!
+//! Schedulers `register` with the dispatcher for the duration of a busy
+//! spell (≥1 fused row per tick) and deregister when they drain.  The
+//! dispatcher opens a *window* on the first submission of a round and
+//! flushes as soon as every registered scheduler has submitted — or
+//! when the window times out, so one slow/stuck worker can never stall
+//! the batch indefinitely.  Solo requests (prefill chunks, fallback
+//! steps, medusa head passes from engines holding a [`SharedRuntime`])
+//! are executed immediately, *inside* the collection loop, which is
+//! what keeps an admitting worker from deadlocking a waiting window.
+//!
+//! ## Failure isolation
+//!
+//! A panic or error in the device executor fails every rider of that
+//! one batch with an error reply — the dispatcher thread itself
+//! survives, and each scheduler turns its reply into per-sequence error
+//! retirements, so one poisoned batch cannot take down the worker pool.
+//! Caches travel with the submission by move and are always returned in
+//! the reply, error or not; only a dead dispatcher loses them, and the
+//! scheduler then reconciles the pool with
+//! [`crate::kvcache::SharedCachePool::forget`].
+
+use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{ArtifactPaths, ModelConfig};
+use crate::kvcache::HostKvCache;
+use crate::metrics::{fused_slot_label, FusedHist};
+use crate::runtime::{Device, Runtime, StepOutput};
+use crate::util::json::Json;
+use crate::util::panic_message;
+
+use super::{BatchItem, PlanInputs};
+
+/// Default coalescing window: how long the dispatcher waits for the
+/// remaining registered schedulers after a round's first submission.
+/// The barrier usually short-circuits well before this; the window only
+/// bounds the damage of a straggler.
+pub const DEFAULT_WINDOW: Duration = Duration::from_millis(5);
+
+/// One sequence's contribution to a cross-worker fused tick: the
+/// planned step plus its KV cache, moved in and returned (in order)
+/// with the reply.
+pub struct TickRow {
+    pub plan: PlanInputs,
+    pub cache: HostKvCache,
+}
+
+/// The dispatcher's answer to one scheduler's tick submission.
+pub struct TickReply {
+    /// the submission's rows (plans + caches), in submission order —
+    /// returned even on error, so the scheduler can run its apply phase
+    /// against the plan and check every cache back in
+    pub rows: Vec<TickRow>,
+    /// per-row outputs in submission order, or the batch-wide failure
+    pub outs: Result<Vec<StepOutput>>,
+    /// the fused device call's wallclock share attributed to each row
+    /// (elapsed / union width)
+    pub row_share_s: f64,
+}
+
+struct TickSub {
+    worker: usize,
+    rows: Vec<TickRow>,
+    reply: mpsc::Sender<TickReply>,
+}
+
+enum DeviceRequest {
+    /// one scheduler's whole tick — fused across workers within the
+    /// window
+    Tick(TickSub),
+    /// a one-off forward (prefill chunk, per-sequence fallback step)
+    /// executed immediately
+    Solo {
+        plan: PlanInputs,
+        cache: Vec<f32>,
+        reply: mpsc::Sender<Result<StepOutput>>,
+    },
+    /// a medusa head pass for an engine behind a [`SharedRuntime`]
+    Medusa {
+        hidden: Vec<f32>,
+        reply: mpsc::Sender<Result<Vec<Vec<f32>>>>,
+    },
+}
+
+/// What the dispatcher runs device work against.  [`Runtime`] is the
+/// production implementation; the deterministic scheduler harness
+/// injects counting mocks.  Method names are distinct from
+/// [`Device`]'s so a type can implement both without call-site
+/// ambiguity.
+pub trait DeviceExecutor {
+    fn exec_forward(
+        &self,
+        tokens: &[u32],
+        pos: &[u32],
+        slots: &[u32],
+        bias: &[f32],
+        cache: &[f32],
+    ) -> Result<StepOutput>;
+
+    /// Execute the whole (cross-worker) union in as few device calls as
+    /// the backend can manage — for [`Runtime`] that is one batched HLO
+    /// execution when a covering `fwd_b{B}_n{N}` bucket exists.
+    fn exec_forward_batch(&self, items: &[BatchItem<'_>]) -> Result<Vec<StepOutput>>;
+
+    fn exec_medusa_heads(&self, _hidden: &[f32]) -> Result<Vec<Vec<f32>>> {
+        Err(anyhow!("device executor has no medusa heads"))
+    }
+}
+
+impl DeviceExecutor for Runtime {
+    fn exec_forward(
+        &self,
+        tokens: &[u32],
+        pos: &[u32],
+        slots: &[u32],
+        bias: &[f32],
+        cache: &[f32],
+    ) -> Result<StepOutput> {
+        Runtime::forward(self, tokens, pos, slots, bias, cache)
+    }
+
+    fn exec_forward_batch(&self, items: &[BatchItem<'_>]) -> Result<Vec<StepOutput>> {
+        Runtime::forward_batch(self, items)
+    }
+
+    fn exec_medusa_heads(&self, hidden: &[f32]) -> Result<Vec<Vec<f32>>> {
+        Runtime::medusa_heads(self, hidden)
+    }
+}
+
+/// Dispatcher-side counters, shared with the coordinator for the
+/// Prometheus export (`ppd_dispatch_*`).
+#[derive(Debug, Default)]
+pub struct DispatchStats {
+    /// cross-worker fused device dispatches
+    batches: AtomicU64,
+    /// rows across those dispatches
+    rows: AtomicU64,
+    /// widest single cross-worker batch
+    max_width: AtomicU64,
+    /// dispatches that carried rows from more than one worker — the
+    /// whole point of the shared runtime
+    multi_worker_batches: AtomicU64,
+    /// solo forwards served outside tick fusion (prefill, fallback)
+    solo_forwards: AtomicU64,
+    /// submissions currently parked in the dispatcher's channel/window
+    /// (live gauge)
+    queue_depth: AtomicU64,
+    max_queue_depth: AtomicU64,
+    /// union-width histogram (clamped into the overflow slot, never
+    /// dropped — with N workers × max-inflight rows a tick easily
+    /// exceeds the slot count)
+    width_hist: FusedHist,
+    /// fused rows attributed to their submitting worker
+    rows_by_worker: Mutex<BTreeMap<usize, u64>>,
+}
+
+impl DispatchStats {
+    fn on_submit(&self) {
+        let d = self.queue_depth.fetch_add(1, Ordering::Relaxed) + 1;
+        self.max_queue_depth.fetch_max(d, Ordering::Relaxed);
+    }
+
+    fn on_take(&self) {
+        // saturating: a submit raced with dispatcher shutdown is benign
+        let _ = self.queue_depth.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |d| Some(d.saturating_sub(1)),
+        );
+    }
+
+    fn record_batch(&self, widths: &[(usize, usize)]) {
+        let total: usize = widths.iter().map(|&(_, n)| n).sum();
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.rows.fetch_add(total as u64, Ordering::Relaxed);
+        self.max_width.fetch_max(total as u64, Ordering::Relaxed);
+        self.width_hist.record(total);
+        if widths.iter().filter(|&&(_, n)| n > 0).count() > 1 {
+            self.multi_worker_batches.fetch_add(1, Ordering::Relaxed);
+        }
+        let mut by_worker = self.rows_by_worker.lock().unwrap();
+        for &(w, n) in widths {
+            *by_worker.entry(w).or_insert(0) += n as u64;
+        }
+    }
+
+    /// Solo forwards are counted separately and deliberately NOT added
+    /// to `rows_by_worker`: that map means "fused rows planned by
+    /// worker w" in BOTH topologies (the worker-owned path only ever
+    /// attributes `batch_rows`), so the two stay comparable.
+    fn record_solo(&self) {
+        self.solo_forwards.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn batches_total(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    pub fn rows_total(&self) -> u64 {
+        self.rows.load(Ordering::Relaxed)
+    }
+
+    pub fn max_width(&self) -> u64 {
+        self.max_width.load(Ordering::Relaxed)
+    }
+
+    pub fn multi_worker_batches_total(&self) -> u64 {
+        self.multi_worker_batches.load(Ordering::Relaxed)
+    }
+
+    pub fn solo_forwards_total(&self) -> u64 {
+        self.solo_forwards.load(Ordering::Relaxed)
+    }
+
+    pub fn queue_depth(&self) -> u64 {
+        self.queue_depth.load(Ordering::Relaxed)
+    }
+
+    pub fn max_queue_depth(&self) -> u64 {
+        self.max_queue_depth.load(Ordering::Relaxed)
+    }
+
+    /// `(width, count)` pairs of the cross-worker width histogram.
+    pub fn width_hist(&self) -> Vec<(usize, u64)> {
+        self.width_hist.nonzero()
+    }
+
+    pub fn rows_by_worker(&self) -> BTreeMap<usize, u64> {
+        self.rows_by_worker.lock().unwrap().clone()
+    }
+
+    /// Mean rows per cross-worker device dispatch (0 when none ran).
+    pub fn mean_width(&self) -> f64 {
+        let b = self.batches_total();
+        if b == 0 {
+            0.0
+        } else {
+            self.rows_total() as f64 / b as f64
+        }
+    }
+
+    /// Prometheus-exposition text block (`ppd_dispatch_*` lines) —
+    /// appended to [`crate::coordinator::Coordinator::metrics_text`].
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut push = |name: &str, v: u64| {
+            out.push_str("ppd_dispatch_");
+            out.push_str(name);
+            out.push(' ');
+            out.push_str(&v.to_string());
+            out.push('\n');
+        };
+        push("batches_total", self.batches_total());
+        push("rows_total", self.rows_total());
+        push("max_width", self.max_width());
+        push("multi_worker_batches_total", self.multi_worker_batches_total());
+        push("solo_forwards_total", self.solo_forwards_total());
+        push("queue_depth", self.queue_depth());
+        push("max_queue_depth", self.max_queue_depth());
+        for (w, c) in self.width_hist() {
+            let label = fused_slot_label(w);
+            out.push_str(&format!("ppd_dispatch_width_total{{width=\"{label}\"}} {c}\n"));
+        }
+        for (w, r) in self.rows_by_worker() {
+            out.push_str(&format!("ppd_dispatch_rows_by_worker{{worker=\"{w}\"}} {r}\n"));
+        }
+        out
+    }
+}
+
+/// The scheduler-side handle: submit ticks, run solo forwards, and
+/// track the barrier registration.  Clone one per worker.
+#[derive(Clone)]
+pub struct DispatcherHandle {
+    tx: mpsc::Sender<DeviceRequest>,
+    active: Arc<AtomicUsize>,
+    stats: Arc<DispatchStats>,
+}
+
+impl DispatcherHandle {
+    /// Join the tick barrier: the dispatcher will wait (up to its
+    /// window) for this scheduler's submission each round.  Call before
+    /// the first submission of a busy spell.
+    pub fn register(&self) {
+        self.active.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Leave the tick barrier (busy spell over, or no fused rows this
+    /// tick).  Call only between submissions, never with one pending.
+    pub fn deregister(&self) {
+        self.active.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Schedulers currently registered at the barrier.
+    pub fn active(&self) -> usize {
+        self.active.load(Ordering::SeqCst)
+    }
+
+    pub fn stats(&self) -> Arc<DispatchStats> {
+        Arc::clone(&self.stats)
+    }
+
+    /// Submit one scheduler tick's fused rows; the caches move with the
+    /// submission and come back in the reply.  On a dead dispatcher the
+    /// rows are handed straight back so the caller can retire its
+    /// sequences and check its caches in.
+    pub fn submit_tick(
+        &self,
+        worker: usize,
+        rows: Vec<TickRow>,
+    ) -> std::result::Result<mpsc::Receiver<TickReply>, Vec<TickRow>> {
+        let (reply, rx) = mpsc::channel();
+        self.stats.on_submit();
+        match self.tx.send(DeviceRequest::Tick(TickSub { worker, rows, reply })) {
+            Ok(()) => Ok(rx),
+            Err(mpsc::SendError(req)) => {
+                self.stats.on_take();
+                match req {
+                    DeviceRequest::Tick(sub) => Err(sub.rows),
+                    _ => Err(Vec::new()),
+                }
+            }
+        }
+    }
+
+    /// One blocking forward round-trip (prefill chunks, fallback steps).
+    ///
+    /// The cache snapshot is *copied* across the channel (the caller
+    /// still holds `&mut` on its `HostKvCache`, so the move-and-return
+    /// pattern tick submissions use is not available here).  That cost
+    /// lands only on admission/fallback paths, never on the fused
+    /// steady-state tick.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward(
+        &self,
+        tokens: &[u32],
+        pos: &[u32],
+        slots: &[u32],
+        bias: &[f32],
+        cache: &[f32],
+        max_ctx: usize,
+    ) -> Result<StepOutput> {
+        let plan = PlanInputs {
+            tokens: tokens.to_vec(),
+            pos: pos.to_vec(),
+            slots: slots.to_vec(),
+            bias: bias.to_vec(),
+            max_ctx,
+        };
+        let (reply, rx) = mpsc::channel();
+        self.stats.on_submit();
+        self.tx
+            .send(DeviceRequest::Solo { plan, cache: cache.to_vec(), reply })
+            .map_err(|_| {
+                self.stats.on_take();
+                anyhow!("device dispatcher is gone")
+            })?;
+        rx.recv().map_err(|_| anyhow!("device dispatcher dropped a forward"))?
+    }
+
+    /// One blocking medusa-heads round-trip.
+    pub fn medusa_heads(&self, hidden: &[f32]) -> Result<Vec<Vec<f32>>> {
+        let (reply, rx) = mpsc::channel();
+        self.stats.on_submit();
+        self.tx
+            .send(DeviceRequest::Medusa { hidden: hidden.to_vec(), reply })
+            .map_err(|_| {
+                self.stats.on_take();
+                anyhow!("device dispatcher is gone")
+            })?;
+        rx.recv().map_err(|_| anyhow!("device dispatcher dropped a head pass"))?
+    }
+}
+
+/// The device side: owns the request queue and (in production) the one
+/// `Runtime`.  Drive it with [`DeviceDispatcher::run`] on a dedicated
+/// thread, or [`DeviceDispatcher::pump`] from a single-threaded test
+/// harness scripting wall ticks by hand.
+pub struct DeviceDispatcher {
+    rx: mpsc::Receiver<DeviceRequest>,
+    active: Arc<AtomicUsize>,
+    stats: Arc<DispatchStats>,
+    window: Duration,
+}
+
+impl DeviceDispatcher {
+    pub fn stats(&self) -> Arc<DispatchStats> {
+        Arc::clone(&self.stats)
+    }
+
+    /// Build a dispatcher and the handle its schedulers submit through.
+    pub fn channel(window: Duration, stats: Arc<DispatchStats>) -> (DispatcherHandle, Self) {
+        let (tx, rx) = mpsc::channel();
+        let active = Arc::new(AtomicUsize::new(0));
+        let handle =
+            DispatcherHandle { tx, active: Arc::clone(&active), stats: Arc::clone(&stats) };
+        (handle, DeviceDispatcher { rx, active, stats, window })
+    }
+
+    /// Serve until every [`DispatcherHandle`] clone is dropped (i.e. the
+    /// worker pool drained).
+    pub fn run(self, exec: &dyn DeviceExecutor) {
+        loop {
+            match self.rx.recv() {
+                Err(_) => return,
+                Ok(DeviceRequest::Tick(sub)) => {
+                    self.stats.on_take();
+                    let subs = self.collect(sub, exec);
+                    self.flush_ticks(subs, exec);
+                }
+                Ok(other) => {
+                    self.stats.on_take();
+                    self.serve_solo(other, exec);
+                }
+            }
+        }
+    }
+
+    /// Gather one round: wait until every registered scheduler has
+    /// submitted or the window times out, serving solo requests
+    /// immediately so an admitting worker can't wedge the barrier.
+    fn collect(&self, first: TickSub, exec: &dyn DeviceExecutor) -> Vec<TickSub> {
+        let mut subs = vec![first];
+        let deadline = Instant::now() + self.window;
+        loop {
+            if subs.len() >= self.active.load(Ordering::SeqCst).max(1) {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(DeviceRequest::Tick(s)) => {
+                    self.stats.on_take();
+                    subs.push(s);
+                }
+                Ok(other) => {
+                    self.stats.on_take();
+                    self.serve_solo(other, exec);
+                }
+                Err(_) => break, // window expired or senders gone: flush
+            }
+        }
+        subs
+    }
+
+    /// Drain everything currently queued and fuse every pending tick
+    /// into ONE device call; returns the number of device calls issued
+    /// (solos included).  The deterministic harness's "wall tick".
+    pub fn pump(&self, exec: &dyn DeviceExecutor) -> usize {
+        let mut calls = 0;
+        let mut subs = Vec::new();
+        while let Ok(req) = self.rx.try_recv() {
+            self.stats.on_take();
+            match req {
+                DeviceRequest::Tick(s) => subs.push(s),
+                other => calls += self.serve_solo(other, exec),
+            }
+        }
+        if !subs.is_empty() {
+            calls += self.flush_ticks(subs, exec);
+        }
+        calls
+    }
+
+    fn serve_solo(&self, req: DeviceRequest, exec: &dyn DeviceExecutor) -> usize {
+        match req {
+            DeviceRequest::Solo { plan, cache, reply } => {
+                self.stats.record_solo();
+                let r = catch_unwind(AssertUnwindSafe(|| {
+                    exec.exec_forward(&plan.tokens, &plan.pos, &plan.slots, &plan.bias, &cache)
+                }));
+                let r = match r {
+                    Ok(r) => r,
+                    Err(p) => Err(anyhow!("device executor panicked: {}", panic_message(p))),
+                };
+                let _ = reply.send(r);
+                1
+            }
+            DeviceRequest::Medusa { hidden, reply } => {
+                let r = catch_unwind(AssertUnwindSafe(|| exec.exec_medusa_heads(&hidden)));
+                let r = match r {
+                    Ok(r) => r,
+                    Err(p) => Err(anyhow!("device executor panicked: {}", panic_message(p))),
+                };
+                let _ = reply.send(r);
+                1
+            }
+            // defensive: a tick routed here fuses alone
+            DeviceRequest::Tick(sub) => self.flush_ticks(vec![sub], exec),
+        }
+    }
+
+    /// Fuse one round's submissions into a single `forward_batch` over
+    /// the union and route each slice (plus its caches) back.  Failure
+    /// is batch-wide but dispatcher-local: every rider gets the error,
+    /// the thread survives.
+    fn flush_ticks(&self, subs: Vec<TickSub>, exec: &dyn DeviceExecutor) -> usize {
+        let total: usize = subs.iter().map(|s| s.rows.len()).sum();
+        if total == 0 {
+            for s in subs {
+                let _ = s.reply.send(TickReply {
+                    rows: Vec::new(),
+                    outs: Ok(Vec::new()),
+                    row_share_s: 0.0,
+                });
+            }
+            return 0;
+        }
+        let widths: Vec<(usize, usize)> =
+            subs.iter().map(|s| (s.worker, s.rows.len())).collect();
+        self.stats.record_batch(&widths);
+
+        let t0 = Instant::now();
+        let result = {
+            let items: Vec<BatchItem<'_>> = subs
+                .iter()
+                .flat_map(|s| {
+                    s.rows.iter().map(|r| BatchItem { plan: &r.plan, cache: &r.cache })
+                })
+                .collect();
+            catch_unwind(AssertUnwindSafe(|| exec.exec_forward_batch(&items)))
+        };
+        let share = t0.elapsed().as_secs_f64() / total as f64;
+
+        match result {
+            Ok(Ok(mut outs)) if outs.len() == total => {
+                for s in subs {
+                    let TickSub { rows, reply, .. } = s;
+                    let mine: Vec<StepOutput> = outs.drain(..rows.len()).collect();
+                    let _ = reply.send(TickReply {
+                        rows,
+                        outs: Ok(mine),
+                        row_share_s: share,
+                    });
+                }
+            }
+            other => {
+                let msg = match other {
+                    Ok(Ok(outs)) => format!(
+                        "device dispatcher: executor returned {} outputs for {} rows",
+                        outs.len(),
+                        total
+                    ),
+                    Ok(Err(e)) => format!("{e:#}"),
+                    Err(p) => format!("device executor panicked: {}", panic_message(p)),
+                };
+                for s in subs {
+                    let TickSub { rows, reply, .. } = s;
+                    let _ = reply.send(TickReply {
+                        rows,
+                        outs: Err(anyhow!("{msg}")),
+                        row_share_s: 0.0,
+                    });
+                }
+            }
+        }
+        1
+    }
+}
+
+/// Worker-side [`Device`] over the dispatcher: in shared-runtime mode
+/// the engines are built over this handle instead of a thread-local
+/// `Runtime`, so every device call — prefill, fallback steps, medusa
+/// heads — round-trips through the single device queue.  Metadata
+/// (`ModelConfig`, medusa head count) is read from the artifact set on
+/// disk so construction needs no device round-trip.
+pub struct SharedRuntime {
+    cfg: ModelConfig,
+    worker: usize,
+    handle: DispatcherHandle,
+    medusa_heads_n: usize,
+}
+
+impl SharedRuntime {
+    pub fn connect(
+        paths: &ArtifactPaths,
+        worker: usize,
+        handle: DispatcherHandle,
+    ) -> Result<Self> {
+        let cfg = ModelConfig::load(&paths.model_dir())?;
+        let mut medusa_heads_n = 0;
+        if cfg.medusa && paths.medusa_hlo().exists() {
+            // same convention as Runtime::load_medusa: the wk entry's
+            // leading dim is the head count.  Parse strictly — a silent
+            // default here would let the worker build a tree of the
+            // wrong depth against the device-host's real head pass.
+            let (_, manifest) = paths.medusa_weights();
+            let j = Json::from_file(&manifest)?;
+            // no wk entry falls back to 3, exactly like Runtime::
+            // load_medusa — the two topologies must agree on the same
+            // artifact set; a present-but-malformed entry is an error
+            medusa_heads_n = match j
+                .as_arr()?
+                .iter()
+                .find(|e| e.get("name").and_then(|n| n.as_str().ok()) == Some("wk"))
+            {
+                Some(wk) => wk
+                    .req("shape")?
+                    .as_arr()?
+                    .first()
+                    .ok_or_else(|| anyhow!("medusa wk entry has an empty shape"))?
+                    .as_usize()?,
+                None => 3,
+            };
+        }
+        Ok(SharedRuntime { cfg, worker, handle, medusa_heads_n })
+    }
+
+    pub fn handle(&self) -> &DispatcherHandle {
+        &self.handle
+    }
+}
+
+impl Device for SharedRuntime {
+    fn cfg(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    fn forward(
+        &self,
+        tokens: &[u32],
+        pos: &[u32],
+        slots: &[u32],
+        bias: &[f32],
+        cache: &[f32],
+    ) -> Result<StepOutput> {
+        self.handle.forward(tokens, pos, slots, bias, cache, self.cfg.max_ctx)
+    }
+
+    fn forward_batch(&self, items: &[BatchItem<'_>]) -> Result<Vec<StepOutput>> {
+        // clone the rows into an owned tick submission and ride the
+        // cross-worker window like a scheduler tick would
+        let rows: Vec<TickRow> = items
+            .iter()
+            .map(|it| TickRow { plan: it.plan.clone(), cache: it.cache.clone() })
+            .collect();
+        let rx = self
+            .handle
+            .submit_tick(self.worker, rows)
+            .map_err(|_| anyhow!("device dispatcher is gone"))?;
+        let reply = rx.recv().map_err(|_| anyhow!("device dispatcher dropped a batch"))?;
+        reply.outs
+    }
+
+    fn has_medusa(&self) -> bool {
+        self.medusa_heads_n > 0
+    }
+
+    fn medusa_n_heads(&self) -> usize {
+        self.medusa_heads_n
+    }
+
+    fn medusa_heads(&self, hidden: &[f32]) -> Result<Vec<Vec<f32>>> {
+        self.handle.medusa_heads(hidden)
+    }
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Echo executor: output row i's logits carry plan i's first token,
+    /// so routing mixups are visible; counts device calls.
+    struct EchoExec {
+        calls: AtomicU64,
+        fail: bool,
+    }
+
+    impl EchoExec {
+        fn new() -> Self {
+            EchoExec { calls: AtomicU64::new(0), fail: false }
+        }
+    }
+
+    impl DeviceExecutor for EchoExec {
+        fn exec_forward(
+            &self,
+            tokens: &[u32],
+            _pos: &[u32],
+            _slots: &[u32],
+            _bias: &[f32],
+            _cache: &[f32],
+        ) -> Result<StepOutput> {
+            self.calls.fetch_add(1, Ordering::Relaxed);
+            Ok(StepOutput {
+                n: 1,
+                logits: vec![tokens[0] as f32],
+                hidden: vec![],
+                new_kv: vec![],
+            })
+        }
+
+        fn exec_forward_batch(&self, items: &[BatchItem<'_>]) -> Result<Vec<StepOutput>> {
+            self.calls.fetch_add(1, Ordering::Relaxed);
+            if self.fail {
+                return Err(anyhow!("injected device failure"));
+            }
+            Ok(items
+                .iter()
+                .map(|it| StepOutput {
+                    n: 1,
+                    logits: vec![it.plan.tokens[0] as f32],
+                    hidden: vec![],
+                    new_kv: vec![],
+                })
+                .collect())
+        }
+    }
+
+    fn row(tag: u32) -> TickRow {
+        TickRow {
+            plan: PlanInputs {
+                tokens: vec![tag],
+                pos: vec![0],
+                slots: vec![0],
+                bias: vec![0.0; 8],
+                max_ctx: 8,
+            },
+            cache: HostKvCache::new(1, 8, 2),
+        }
+    }
+
+    #[test]
+    fn pump_fuses_all_pending_ticks_into_one_call_and_routes_rows_back() {
+        let stats = Arc::new(DispatchStats::default());
+        let (handle, disp) = DeviceDispatcher::channel(DEFAULT_WINDOW, Arc::clone(&stats));
+        let exec = EchoExec::new();
+
+        // three workers submit ragged ticks in one wall tick
+        let rx0 = handle.submit_tick(0, vec![row(10), row(11)]).unwrap();
+        let rx1 = handle.submit_tick(1, vec![row(20)]).unwrap();
+        let rx2 = handle.submit_tick(2, vec![row(30), row(31), row(32)]).unwrap();
+        assert_eq!(stats.queue_depth(), 3);
+
+        let calls = disp.pump(&exec);
+        assert_eq!(calls, 1, "all three submissions must fuse into one device call");
+        assert_eq!(exec.calls.load(Ordering::Relaxed), 1);
+        assert_eq!(stats.queue_depth(), 0);
+        assert_eq!(stats.batches_total(), 1);
+        assert_eq!(stats.rows_total(), 6);
+        assert_eq!(stats.max_width(), 6);
+        assert_eq!(stats.multi_worker_batches_total(), 1);
+        assert_eq!(stats.rows_by_worker().get(&2), Some(&3));
+
+        // every worker gets exactly its own rows back, in order
+        let r0 = rx0.recv().unwrap();
+        let outs0 = r0.outs.unwrap();
+        assert_eq!(outs0.len(), 2);
+        assert_eq!(outs0[0].logits, vec![10.0]);
+        assert_eq!(outs0[1].logits, vec![11.0]);
+        assert_eq!(r0.rows.len(), 2);
+        let r1 = rx1.recv().unwrap();
+        assert_eq!(r1.outs.unwrap()[0].logits, vec![20.0]);
+        let r2 = rx2.recv().unwrap();
+        let outs2 = r2.outs.unwrap();
+        assert_eq!(outs2[2].logits, vec![32.0]);
+    }
+
+    #[test]
+    fn executor_failure_fails_every_rider_but_returns_caches() {
+        let stats = Arc::new(DispatchStats::default());
+        let (handle, disp) = DeviceDispatcher::channel(DEFAULT_WINDOW, Arc::clone(&stats));
+        let exec = EchoExec { calls: AtomicU64::new(0), fail: true };
+        let rx0 = handle.submit_tick(0, vec![row(1)]).unwrap();
+        let rx1 = handle.submit_tick(1, vec![row(2)]).unwrap();
+        disp.pump(&exec);
+        for rx in [rx0, rx1] {
+            let r = rx.recv().unwrap();
+            assert_eq!(r.rows.len(), 1, "rows (and caches) must come back even on failure");
+            assert!(format!("{:#}", r.outs.unwrap_err()).contains("injected"));
+        }
+    }
+
+    #[test]
+    fn dead_dispatcher_returns_rows_to_the_submitter() {
+        let stats = Arc::new(DispatchStats::default());
+        let (handle, disp) = DeviceDispatcher::channel(DEFAULT_WINDOW, Arc::clone(&stats));
+        drop(disp);
+        let rows = handle.submit_tick(0, vec![row(1), row(2)]).unwrap_err();
+        assert_eq!(rows.len(), 2, "rows (and caches) come straight back");
+        assert_eq!(stats.queue_depth(), 0);
+    }
+
+    #[test]
+    fn solo_requests_execute_immediately() {
+        let stats = Arc::new(DispatchStats::default());
+        let (handle, disp) = DeviceDispatcher::channel(DEFAULT_WINDOW, Arc::clone(&stats));
+        let done = std::thread::spawn(move || disp.run(&EchoExec::new()));
+        let out = handle
+            .forward(&[42], &[0], &[0], &[0.0; 8], &[0.0; 16], 8)
+            .unwrap();
+        assert_eq!(out.logits, vec![42.0]);
+        assert_eq!(handle.stats().solo_forwards_total(), 1);
+        drop(handle);
+        done.join().unwrap();
+    }
+
+    #[test]
+    fn threaded_run_barriers_registered_workers_into_one_call() {
+        let stats = Arc::new(DispatchStats::default());
+        let (handle, disp) = DeviceDispatcher::channel(Duration::from_millis(200), stats);
+        let exec_thread = std::thread::spawn(move || {
+            let exec = EchoExec::new();
+            disp.run(&exec);
+            exec.calls.load(Ordering::Relaxed)
+        });
+        // two registered workers submit from separate threads; the
+        // barrier must fuse them into one device call
+        handle.register();
+        handle.register();
+        let h1 = {
+            let h = handle.clone();
+            std::thread::spawn(move || {
+                let rx = h.submit_tick(0, vec![row(7)]).unwrap();
+                rx.recv().unwrap().outs.unwrap()[0].logits.clone()
+            })
+        };
+        let h2 = {
+            let h = handle.clone();
+            std::thread::spawn(move || {
+                let rx = h.submit_tick(1, vec![row(9)]).unwrap();
+                rx.recv().unwrap().outs.unwrap()[0].logits.clone()
+            })
+        };
+        assert_eq!(h1.join().unwrap(), vec![7.0]);
+        assert_eq!(h2.join().unwrap(), vec![9.0]);
+        handle.deregister();
+        handle.deregister();
+        let stats = handle.stats();
+        drop(handle);
+        let calls = exec_thread.join().unwrap();
+        assert_eq!(calls, 1, "barrier failed to fuse the two workers");
+        assert_eq!(stats.multi_worker_batches_total(), 1);
+    }
+
+    #[test]
+    fn oversized_width_clamps_into_overflow_histogram_slot() {
+        // >16 rows in one tick (4 workers × 8 inflight reaches 32) must
+        // land in the clamped overflow slot, not vanish
+        let stats = Arc::new(DispatchStats::default());
+        let (handle, disp) = DeviceDispatcher::channel(DEFAULT_WINDOW, Arc::clone(&stats));
+        let exec = EchoExec::new();
+        let rows: Vec<TickRow> = (0..20u32).map(row).collect();
+        let rx = handle.submit_tick(0, rows).unwrap();
+        disp.pump(&exec);
+        assert_eq!(rx.recv().unwrap().outs.unwrap().len(), 20);
+        let hist = stats.width_hist();
+        assert_eq!(hist, vec![(crate::metrics::FUSED_HIST_SLOTS, 1)]);
+        assert!(stats.to_prometheus().contains("ppd_dispatch_width_total{width=\"16+\"} 1\n"));
+    }
+}

@@ -38,12 +38,13 @@
 //! fused-vs-unfused token-exactness testable and believable.
 
 pub mod collator;
+pub mod dispatch;
 
 use anyhow::{bail, Result};
 
 use crate::decoding::{DecodeEngine, SeqState, StepOutcome};
 use crate::kvcache::HostKvCache;
-use crate::runtime::{Runtime, StepOutput};
+use crate::runtime::{Device, StepOutput};
 
 /// The device-facing half of one planned decode step: exactly the
 /// arguments `Runtime::forward` takes, minus the cache (the scheduler
@@ -152,7 +153,7 @@ pub trait BatchStepEngine: DecodeEngine {
 /// fused paths execute the same plan/apply code and can only differ in
 /// how the forward pass is dispatched.
 pub fn step_via_plan<E: BatchStepEngine + ?Sized>(
-    rt: &Runtime,
+    rt: &dyn Device,
     engine: &mut E,
     seq: &mut SeqState,
     cache: &mut HostKvCache,

@@ -10,11 +10,24 @@
 //!   │ (mutex+cv)   │      │  StepScheduler: ≤ max-inflight seqs │    channels
 //!   └──────────────┘      │  caches ⇄ SharedCachePool (capped)  │
 //!                         └─────────────────────────────────────┘
+//!
+//!   --shared-runtime inverts the worker↔runtime ownership:
+//!   ┌──────────────┐   ┌──────────────────────────┐  ticks  ┌────────────┐
+//!   │  WorkQueue   │──▶│ worker 0..N: engine over │ ──────▶ │ Device-    │
+//!   └──────────────┘   │ SharedRuntime handle     │ ◀────── │ Dispatcher │
+//!                      └──────────────────────────┘ replies │ + Runtime  │
+//!                        (schedulers → dispatcher → device)  └────────────┘
 //! ```
 //!
 //! * The PJRT client is not `Send`, so each worker thread *owns* its
 //!   `Runtime` and engine (vLLM's router/worker split at miniature
 //!   scale).  Workers pull from one shared [`queue::WorkQueue`].
+//! * Under `SchedPolicy::shared_runtime` (`--shared-runtime`) the
+//!   topology inverts: ONE device-host thread owns THE runtime behind a
+//!   [`crate::batch::dispatch::DeviceDispatcher`], workers build their
+//!   engines over a [`crate::batch::dispatch::SharedRuntime`] handle,
+//!   and every worker's fused tick coalesces into one device call per
+//!   wall tick (cross-worker fusion).
 //! * Each worker runs a [`scheduler::StepScheduler`]: it holds up to
 //!   `--max-inflight` sequences, admits new jobs from the queue
 //!   *between decode steps*, round-robins one PPD tree step per
@@ -56,6 +69,9 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use crate::batch::dispatch::{
+    DeviceDispatcher, DispatcherHandle, DispatchStats, SharedRuntime, DEFAULT_WINDOW,
+};
 use crate::batch::BatchStepEngine;
 use crate::config::{ArtifactPaths, ServeConfig};
 use crate::decoding::lookup::{ChainEngine, LookaheadProposer, PldProposer, RestProposer};
@@ -65,7 +81,7 @@ use crate::decoding::speculative::SpeculativeEngine;
 use crate::decoding::vanilla::VanillaEngine;
 use crate::kvcache::SharedCachePool;
 use crate::metrics::{QueueStats, RuntimeAgg};
-use crate::runtime::{Runtime, RuntimeStats};
+use crate::runtime::{Device, Runtime, RuntimeStats};
 use crate::tree::builder::AcceptStats;
 use crate::workload;
 
@@ -117,8 +133,8 @@ impl EngineKind {
 /// to per-sequence stepping.
 pub fn build_engine<'rt>(
     kind: EngineKind,
-    rt: &'rt Runtime,
-    draft: Option<&'rt Runtime>,
+    rt: &'rt dyn Device,
+    draft: Option<&'rt dyn Device>,
     paths: &ArtifactPaths,
     cfg: &ServeConfig,
     seed: u64,
@@ -160,7 +176,7 @@ pub fn build_engine<'rt>(
         }
         EngineKind::SpecPpd => {
             let draft = draft.ok_or_else(|| anyhow!("spec+ppd engine needs a draft model"))?;
-            let draft_paths = ArtifactPaths::new(paths.root.clone(), &draft.cfg.name);
+            let draft_paths = ArtifactPaths::new(paths.root.clone(), &draft.cfg().name);
             let stats = AcceptStats::load(&draft_paths.accept_stats(None), "ppd")?;
             Box::new(SpeculativeEngine::new_ppd(rt, draft, &stats, cfg, 4, seed)?)
         }
@@ -174,6 +190,9 @@ pub struct WorkerCtx {
     stats: Arc<QueueStats>,
     rt_agg: Arc<RuntimeAgg>,
     policy: SchedPolicy,
+    /// shared-runtime mode: the handle this worker submits device work
+    /// through (`None` when each worker owns its own `Runtime`)
+    dispatch: Option<DispatcherHandle>,
     /// one-shot startup signal (taken on first use so a worker that
     /// panics before signaling drops its sender and fails spawn fast)
     ready: Mutex<Option<mpsc::Sender<Result<()>>>>,
@@ -196,6 +215,12 @@ impl WorkerCtx {
         self.signal(Err(e));
     }
 
+    /// Shared-runtime mode: the dispatcher handle this worker's
+    /// scheduler (and `SharedRuntime`-backed engine) submit through.
+    pub fn dispatcher(&self) -> Option<&DispatcherHandle> {
+        self.dispatch.as_ref()
+    }
+
     /// Flush a worker's device-call counters into the coordinator's
     /// aggregate (call when the worker drains: each thread owns its
     /// `Runtime`, so the counters only become shareable here).
@@ -204,11 +229,67 @@ impl WorkerCtx {
     }
 }
 
+/// Context for the dedicated device-host thread spawned under
+/// `--shared-runtime`: it owns the [`DeviceDispatcher`] (and, in
+/// production, THE `Runtime` — the PJRT client never leaves this
+/// thread).  Backends signal startup exactly like workers do, then hand
+/// an executor to [`DeviceHost::serve`].
+pub struct DeviceHost {
+    dispatcher: DeviceDispatcher,
+    rt_agg: Arc<RuntimeAgg>,
+    ready: Mutex<Option<mpsc::Sender<Result<()>>>>,
+}
+
+impl DeviceHost {
+    fn signal(&self, r: Result<()>) {
+        if let Some(tx) = self.ready.lock().unwrap().take() {
+            let _ = tx.send(r);
+        }
+    }
+
+    /// Report failed device startup; `Coordinator::spawn` returns this
+    /// error (and the dispatcher drops, failing worker round-trips
+    /// fast).
+    pub fn fail(&self, e: anyhow::Error) {
+        self.signal(Err(e));
+    }
+
+    /// Handle to the coordinator's post-drain runtime aggregate, for
+    /// backends that flush executor counters after [`DeviceHost::serve`]
+    /// returns.
+    pub fn runtime_agg(&self) -> Arc<RuntimeAgg> {
+        Arc::clone(&self.rt_agg)
+    }
+
+    /// Signal readiness and serve dispatch requests until every worker
+    /// (handle clone) is gone, then flush the dispatcher's per-worker
+    /// row attribution into the runtime aggregate.
+    pub fn serve(self, exec: &dyn crate::batch::dispatch::DeviceExecutor) {
+        self.signal(Ok(()));
+        let stats = self.dispatcher.stats();
+        self.dispatcher.run(exec);
+        let rows_by_worker = stats
+            .rows_by_worker()
+            .into_iter()
+            .map(|(w, r)| (w, r as usize))
+            .collect();
+        self.rt_agg.absorb(&RuntimeStats { rows_by_worker, ..Default::default() });
+    }
+}
+
 /// Builds one worker's engine and serves jobs until the queue closes.
 /// Implementations call `ctx.ready()` (or `ctx.fail(e)`) once setup is
 /// done, then hand their engine to [`serve_jobs`].
 pub trait WorkerBackend: Send + Sync + 'static {
     fn run(&self, worker: usize, ctx: WorkerCtx);
+
+    /// Shared-runtime mode: run the device-host thread that owns the
+    /// one runtime/executor.  Called on a dedicated thread when the
+    /// policy sets `shared_runtime`; backends that support it override
+    /// this with a [`DeviceHost::serve`] call.
+    fn run_device(&self, host: DeviceHost) {
+        host.fail(anyhow!("backend has no shared-runtime device host"));
+    }
 }
 
 /// The shared worker loop, now a step-level scheduler: block for work
@@ -223,7 +304,12 @@ pub trait WorkerBackend: Send + Sync + 'static {
 /// queued jobs holding reply senders forever and wedge every submitter
 /// — the worker must outlive any one bad request.
 pub fn serve_jobs(worker: usize, engine: &mut dyn BatchStepEngine, ctx: &WorkerCtx) {
-    let mut sched = StepScheduler::new(worker, ctx.policy);
+    let mut sched = match ctx.dispatcher() {
+        // shared-runtime mode: fused ticks go to the coordinator's one
+        // device dispatcher and coalesce across workers
+        Some(h) => StepScheduler::with_dispatcher(worker, ctx.policy, h.clone()),
+        None => StepScheduler::new(worker, ctx.policy),
+    };
     loop {
         if sched.is_empty() {
             // idle: block until work arrives; `None` means the queue is
@@ -267,10 +353,9 @@ pub struct ModelBackend {
 impl WorkerBackend for ModelBackend {
     fn run(&self, worker: usize, ctx: WorkerCtx) {
         let paths = ArtifactPaths::new(self.root.clone(), &self.model);
-        let rt = match Runtime::load(&paths) {
-            Ok(rt) => rt,
-            Err(e) => return ctx.fail(e),
-        };
+        // draft models stay worker-owned even in shared mode: their
+        // forwards are a different hot path (and model) than the fused
+        // target steps
         let draft_rt = match &self.draft_model {
             Some(dm) => match Runtime::load(&ArtifactPaths::new(self.root.clone(), dm)) {
                 Ok(rt) => Some(rt),
@@ -278,9 +363,35 @@ impl WorkerBackend for ModelBackend {
             },
             None => None,
         };
+        let draft_dev = draft_rt.as_ref().map(|d| d as &dyn Device);
+        if let Some(handle) = ctx.dispatcher() {
+            // shared-runtime topology: no worker-local target runtime —
+            // every device call round-trips through the dispatcher
+            let shared = match SharedRuntime::connect(&paths, worker, handle.clone()) {
+                Ok(s) => s,
+                Err(e) => return ctx.fail(e),
+            };
+            let mut engine = match build_engine(
+                self.kind,
+                &shared,
+                draft_dev,
+                &paths,
+                &self.cfg,
+                worker as u64,
+            ) {
+                Ok(e) => e,
+                Err(e) => return ctx.fail(e),
+            };
+            ctx.ready();
+            serve_jobs(worker, engine.as_mut(), &ctx);
+            return;
+        }
+        let rt = match Runtime::load(&paths) {
+            Ok(rt) => rt,
+            Err(e) => return ctx.fail(e),
+        };
         let mut engine =
-            match build_engine(self.kind, &rt, draft_rt.as_ref(), &paths, &self.cfg, worker as u64)
-            {
+            match build_engine(self.kind, &rt, draft_dev, &paths, &self.cfg, worker as u64) {
                 Ok(e) => e,
                 Err(e) => return ctx.fail(e),
             };
@@ -290,7 +401,26 @@ impl WorkerBackend for ModelBackend {
         // counters (target model only — draft forwards are a different
         // hot path and would skew forwards-per-token)
         drop(engine);
-        ctx.absorb_runtime_stats(&rt.take_stats());
+        let mut stats = rt.take_stats();
+        // attribute this worker-owned runtime's fused rows to the worker
+        if stats.batch_rows > 0 {
+            stats.rows_by_worker.insert(worker, stats.batch_rows);
+        }
+        ctx.absorb_runtime_stats(&stats);
+    }
+
+    fn run_device(&self, host: DeviceHost) {
+        // shared-runtime device host: loads THE runtime and serves every
+        // worker's submissions from this one thread (PJRT clients are
+        // not Send, so the runtime lives and dies here)
+        let paths = ArtifactPaths::new(self.root.clone(), &self.model);
+        let rt = match Runtime::load(&paths) {
+            Ok(rt) => rt,
+            Err(e) => return host.fail(e),
+        };
+        let agg = host.runtime_agg();
+        host.serve(&rt);
+        agg.absorb(&rt.take_stats());
     }
 }
 
@@ -300,12 +430,16 @@ pub struct Coordinator {
     pool: Arc<SharedCachePool>,
     stats: Arc<QueueStats>,
     rt_agg: Arc<RuntimeAgg>,
+    dispatch_stats: Arc<DispatchStats>,
     collector_tx: mpsc::Sender<Response>,
     collector_rx: Mutex<mpsc::Receiver<Response>>,
     queue_capacity: usize,
     n_workers: usize,
     policy: SchedPolicy,
     workers: Vec<JoinHandle<()>>,
+    /// the shared-runtime device-host thread (policy.shared_runtime);
+    /// joined after the workers so its request senders are gone first
+    device: Option<JoinHandle<()>>,
 }
 
 impl Coordinator {
@@ -370,7 +504,29 @@ impl Coordinator {
         let pool = Arc::new(SharedCachePool::new(workers * policy.max_inflight));
         let stats = Arc::new(QueueStats::new());
         let rt_agg = Arc::new(RuntimeAgg::default());
+        let dispatch_stats = Arc::new(DispatchStats::default());
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+
+        // shared-runtime topology: ONE device-host thread owns the
+        // runtime; workers get dispatcher handles instead
+        let mut ready_count = workers;
+        let (dispatch_handle, device) = if policy.shared_runtime {
+            let (handle, dispatcher) =
+                DeviceDispatcher::channel(DEFAULT_WINDOW, Arc::clone(&dispatch_stats));
+            let host = DeviceHost {
+                dispatcher,
+                rt_agg: Arc::clone(&rt_agg),
+                ready: Mutex::new(Some(ready_tx.clone())),
+            };
+            let backend = Arc::clone(&backend);
+            ready_count += 1;
+            (
+                Some(handle),
+                Some(std::thread::spawn(move || backend.run_device(host))),
+            )
+        } else {
+            (None, None)
+        };
 
         let mut handles = Vec::with_capacity(workers);
         for w in 0..workers {
@@ -380,15 +536,19 @@ impl Coordinator {
                 stats: Arc::clone(&stats),
                 rt_agg: Arc::clone(&rt_agg),
                 policy,
+                dispatch: dispatch_handle.clone(),
                 ready: Mutex::new(Some(ready_tx.clone())),
             };
             let backend = Arc::clone(&backend);
             handles.push(std::thread::spawn(move || backend.run(w, ctx)));
         }
         drop(ready_tx);
+        // workers hold the only live dispatcher senders from here on:
+        // when the pool drains, the dispatcher sees disconnect and exits
+        drop(dispatch_handle);
 
         let mut startup: Result<()> = Ok(());
-        for _ in 0..workers {
+        for _ in 0..ready_count {
             match ready_rx.recv() {
                 Ok(Ok(())) => {}
                 Ok(Err(e)) => {
@@ -406,6 +566,9 @@ impl Coordinator {
             for h in handles {
                 let _ = h.join();
             }
+            if let Some(d) = device {
+                let _ = d.join();
+            }
             return Err(e);
         }
 
@@ -415,12 +578,14 @@ impl Coordinator {
             pool,
             stats,
             rt_agg,
+            dispatch_stats,
             collector_tx,
             collector_rx: Mutex::new(collector_rx),
             queue_capacity: workers * DEFAULT_QUEUE_PER_WORKER,
             n_workers: workers,
             policy,
             workers: handles,
+            device,
         })
     }
 
@@ -447,11 +612,22 @@ impl Coordinator {
         Arc::clone(&self.rt_agg)
     }
 
+    /// Dispatcher-side counters (cross-worker fused widths, queue
+    /// depth).  All-zero unless the policy runs `--shared-runtime`.
+    pub fn dispatch_stats(&self) -> &DispatchStats {
+        &self.dispatch_stats
+    }
+
     /// Live serving metrics as one Prometheus-exposition text block —
     /// the payload of the TCP protocol's `metrics` request.
     pub fn metrics_text(&self) -> String {
         let mut text = self.stats.to_prometheus();
+        text.push_str(&self.dispatch_stats.to_prometheus());
         text.push_str(&format!("ppd_workers {}\n", self.n_workers));
+        text.push_str(&format!(
+            "ppd_shared_runtime {}\n",
+            u8::from(self.policy.shared_runtime)
+        ));
         text.push_str(&format!("ppd_caches_created {}\n", self.pool.created()));
         text.push_str(&format!("ppd_caches_outstanding {}\n", self.pool.outstanding()));
         text.push_str(&format!("ppd_queue_capacity {}\n", self.queue_capacity));
@@ -580,6 +756,11 @@ impl Drop for Coordinator {
         self.queue.close();
         for h in self.workers.drain(..) {
             let _ = h.join();
+        }
+        // workers are gone, so their dispatcher senders are dropped and
+        // the device host's run loop exits; join it last
+        if let Some(d) = self.device.take() {
+            let _ = d.join();
         }
     }
 }

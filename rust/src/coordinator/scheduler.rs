@@ -36,10 +36,12 @@ use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::time::Duration;
 
+use crate::batch::dispatch::{DispatcherHandle, TickReply, TickRow};
 use crate::batch::{BatchItem, BatchStepEngine, PlanInputs, StepPlan, StepResult};
 use crate::decoding::{SeqState, StepOutcome};
 use crate::kvcache::{HostKvCache, SharedCachePool};
 use crate::metrics::QueueStats;
+use crate::util::panic_message;
 use crate::workload;
 
 use super::queue::Job;
@@ -62,6 +64,14 @@ pub struct SchedPolicy {
     /// without a plan/apply split still step per-sequence, token-exact
     /// either way
     pub fuse_steps: bool,
+    /// submit fused ticks to the coordinator's single
+    /// [`crate::batch::dispatch::DeviceDispatcher`] instead of the
+    /// worker's own device (`--shared-runtime`): all workers' steps
+    /// coalesce into ONE device call per wall tick.  Implies fused
+    /// planning; engines without a plan/apply split still step
+    /// per-sequence (their device calls ride the dispatcher as solo
+    /// requests when the engine holds a `SharedRuntime`).
+    pub shared_runtime: bool,
 }
 
 impl Default for SchedPolicy {
@@ -70,6 +80,7 @@ impl Default for SchedPolicy {
             max_inflight: DEFAULT_MAX_INFLIGHT,
             max_queue_age: None,
             fuse_steps: false,
+            shared_runtime: false,
         }
     }
 }
@@ -84,6 +95,21 @@ struct Inflight {
     cache: HostKvCache,
 }
 
+/// One sequence whose tick is in flight at the device dispatcher: its
+/// cache (and plan) travel with the submission and come back with the
+/// reply, so only the job/state halves stay here.
+struct PendingRow {
+    job: Job,
+    queue_s: f64,
+    seq: SeqState,
+}
+
+/// A submitted-but-not-yet-applied shared tick.
+struct PendingTick {
+    rows: Vec<PendingRow>,
+    rx: std::sync::mpsc::Receiver<TickReply>,
+}
+
 /// The per-worker step scheduler.  Drive it with [`StepScheduler::admit`]
 /// (one popped job) and [`StepScheduler::tick`] (one round-robin pass);
 /// it owns the in-flight set and returns every cache to the pool on
@@ -92,11 +118,43 @@ pub struct StepScheduler {
     worker: usize,
     policy: SchedPolicy,
     running: VecDeque<Inflight>,
+    /// shared-runtime mode: the handle fused ticks are submitted through
+    dispatch: Option<DispatcherHandle>,
+    /// whether this scheduler currently participates in the dispatcher's
+    /// tick barrier (registered for the length of a busy spell)
+    registered: bool,
+    /// a submitted shared tick awaiting its reply/apply phase
+    pending: Option<PendingTick>,
 }
 
 impl StepScheduler {
     pub fn new(worker: usize, policy: SchedPolicy) -> Self {
-        StepScheduler { worker, policy, running: VecDeque::new() }
+        StepScheduler {
+            worker,
+            policy,
+            running: VecDeque::new(),
+            dispatch: None,
+            registered: false,
+            pending: None,
+        }
+    }
+
+    /// A scheduler in shared-runtime mode: fused ticks go to the
+    /// coordinator's [`crate::batch::dispatch::DeviceDispatcher`]
+    /// through `dispatch` and coalesce with every other worker's tick.
+    pub fn with_dispatcher(
+        worker: usize,
+        policy: SchedPolicy,
+        dispatch: DispatcherHandle,
+    ) -> Self {
+        StepScheduler {
+            worker,
+            policy,
+            running: VecDeque::new(),
+            dispatch: Some(dispatch),
+            registered: false,
+            pending: None,
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -171,7 +229,7 @@ impl StepScheduler {
             }
             Err(panic) => {
                 pool.checkin(cache);
-                self.refuse(stats, job, queue_s, format!("worker panicked: {}", panic_msg(panic)));
+                self.refuse(stats, job, queue_s, format!("worker panicked: {}", panic_message(panic)));
                 false
             }
         }
@@ -194,7 +252,10 @@ impl StepScheduler {
         pool: &SharedCachePool,
         stats: &QueueStats,
     ) -> usize {
-        if self.policy.fuse_steps {
+        if self.dispatch.is_some() {
+            self.tick_shared_submit(engine, pool, stats);
+            self.tick_shared_complete(engine, pool, stats)
+        } else if self.policy.fuse_steps {
             self.tick_fused(engine, pool, stats)
         } else {
             self.tick_serial(engine, pool, stats)
@@ -217,7 +278,7 @@ impl StepScheduler {
             Ok(Ok(StepOutcome::Finished(_))) => self.retire_ok(fl, pool, stats),
             Ok(Err(e)) => self.retire_err(fl, pool, stats, format!("{e:#}")),
             Err(panic) => {
-                self.retire_err(fl, pool, stats, format!("worker panicked: {}", panic_msg(panic)))
+                self.retire_err(fl, pool, stats, format!("worker panicked: {}", panic_message(panic)))
             }
         }
     }
@@ -246,20 +307,15 @@ impl StepScheduler {
         self.running.len()
     }
 
-    /// The fused pass: plan everything, one device call, apply
-    /// everything.  Token-exactness vs [`StepScheduler::tick_serial`]
-    /// rests on plan/forward/apply being the *same code* `step` runs
-    /// (see `batch::step_via_plan`) plus `forward_batch` being
-    /// row-equivalent to per-row `forward` — both are asserted by the
-    /// deterministic harness in `rust/tests/scheduler.rs`.
-    fn tick_fused(
+    /// Phase 1 of every fused pass (local or shared): cancellation
+    /// checks + plans.  Finish/fallback/error paths resolve immediately;
+    /// plans that want a forward accumulate and are returned.
+    fn plan_phase(
         &mut self,
         engine: &mut dyn BatchStepEngine,
         pool: &SharedCachePool,
         stats: &QueueStats,
-    ) -> usize {
-        // phase 1: cancellation checks + plans (finish/fallback paths
-        // resolve immediately, fused plans accumulate)
+    ) -> Vec<(Inflight, PlanInputs)> {
         let mut fused: Vec<(Inflight, PlanInputs)> = Vec::new();
         for _ in 0..self.running.len() {
             let mut fl = self.running.pop_front().expect("non-empty running set");
@@ -287,10 +343,28 @@ impl StepScheduler {
                     fl,
                     pool,
                     stats,
-                    format!("worker panicked: {}", panic_msg(panic)),
+                    format!("worker panicked: {}", panic_message(panic)),
                 ),
             }
         }
+        fused
+    }
+
+    /// The locally fused pass: plan everything, one device call, apply
+    /// everything.  Token-exactness vs [`StepScheduler::tick_serial`]
+    /// rests on plan/forward/apply being the *same code* `step` runs
+    /// (see `batch::step_via_plan`) plus `forward_batch` being
+    /// row-equivalent to per-row `forward` — both are asserted by the
+    /// deterministic harness in `rust/tests/scheduler.rs`.
+    fn tick_fused(
+        &mut self,
+        engine: &mut dyn BatchStepEngine,
+        pool: &SharedCachePool,
+        stats: &QueueStats,
+    ) -> usize {
+        // phase 1: cancellation checks + plans (finish/fallback paths
+        // resolve immediately, fused plans accumulate)
+        let fused = self.plan_phase(engine, pool, stats);
         if fused.is_empty() {
             return self.running.len();
         }
@@ -340,13 +414,216 @@ impl StepScheduler {
                 }
             }
             Err(panic) => {
-                let msg = format!("worker panicked: {}", panic_msg(panic));
+                let msg = format!("worker panicked: {}", panic_message(panic));
                 for (fl, _) in fused {
                     self.retire_err(fl, pool, stats, msg.clone());
                 }
             }
         }
         self.running.len()
+    }
+
+    /// Shared-runtime phase A: plan every in-flight sequence and submit
+    /// the fused rows (plans + caches, by move) to the device
+    /// dispatcher.  Registration with the dispatcher's tick barrier
+    /// tracks the busy spell: a scheduler with no fused rows leaves the
+    /// barrier so the window never waits on it.
+    ///
+    /// `pub` (with [`StepScheduler::tick_shared_complete`]) so the
+    /// deterministic harness can interleave many schedulers' submissions
+    /// around one scripted dispatcher flush per wall tick; the threaded
+    /// worker loop calls the pair back to back via [`StepScheduler::tick`].
+    pub fn tick_shared_submit(
+        &mut self,
+        engine: &mut dyn BatchStepEngine,
+        pool: &SharedCachePool,
+        stats: &QueueStats,
+    ) {
+        if self.pending.is_some() {
+            // a submitted tick must be applied before the next plan pass
+            self.tick_shared_complete(engine, pool, stats);
+        }
+        let Some(dispatch) = self.dispatch.clone() else {
+            // no dispatcher attached: a plain locally-fused tick is the
+            // correct behavior (defensive — `tick` never routes here
+            // without one, and planning before this check would have
+            // dropped the plans on the floor)
+            self.tick_fused(engine, pool, stats);
+            return;
+        };
+        let fused = self.plan_phase(engine, pool, stats);
+        if fused.is_empty() {
+            if self.registered {
+                dispatch.deregister();
+                self.registered = false;
+            }
+            return;
+        }
+        if !self.registered {
+            dispatch.register();
+            self.registered = true;
+        }
+        // per-scheduler submission width (the cross-worker union width
+        // lands in the dispatcher's own histogram)
+        stats.on_fused_batch(fused.len());
+        let mut rows = Vec::with_capacity(fused.len());
+        let mut pend = Vec::with_capacity(fused.len());
+        for (fl, plan) in fused {
+            let Inflight { job, queue_s, seq, cache } = fl;
+            rows.push(TickRow { plan, cache });
+            pend.push(PendingRow { job, queue_s, seq });
+        }
+        match dispatch.submit_tick(self.worker, rows) {
+            Ok(rx) => self.pending = Some(PendingTick { rows: pend, rx }),
+            Err(rows_back) => {
+                // dead dispatcher: rows came straight back, retire all
+                let mut back = rows_back.into_iter();
+                for p in pend {
+                    match back.next() {
+                        Some(TickRow { cache, .. }) => {
+                            let fl = Inflight {
+                                job: p.job,
+                                queue_s: p.queue_s,
+                                seq: p.seq,
+                                cache,
+                            };
+                            self.retire_err(
+                                fl,
+                                pool,
+                                stats,
+                                "device dispatcher is gone".into(),
+                            );
+                        }
+                        None => self.retire_lost(
+                            p,
+                            pool,
+                            stats,
+                            "device dispatcher is gone".into(),
+                        ),
+                    }
+                }
+            }
+        }
+    }
+
+    /// Shared-runtime phase B: receive the fused tick's reply and apply
+    /// each sequence's slice (panic-isolated per row, exactly like the
+    /// local fused apply phase).  Returns the number of sequences still
+    /// in flight.
+    pub fn tick_shared_complete(
+        &mut self,
+        engine: &mut dyn BatchStepEngine,
+        pool: &SharedCachePool,
+        stats: &QueueStats,
+    ) -> usize {
+        let Some(PendingTick { rows, rx }) = self.pending.take() else {
+            return self.running.len();
+        };
+        match rx.recv() {
+            Err(_) => {
+                // the dispatcher died holding our rows: the caches are
+                // unrecoverable — reconcile the pool and answer errors
+                for p in rows {
+                    self.retire_lost(p, pool, stats, "device dispatcher is gone".into());
+                }
+            }
+            Ok(TickReply { rows: back, outs, row_share_s }) => {
+                let mut back = back.into_iter();
+                match outs {
+                    Ok(outs) if outs.len() == rows.len() => {
+                        for (p, out) in rows.into_iter().zip(outs) {
+                            match back.next() {
+                                Some(TickRow { plan, cache }) => {
+                                    let mut fl = Inflight {
+                                        job: p.job,
+                                        queue_s: p.queue_s,
+                                        seq: p.seq,
+                                        cache,
+                                    };
+                                    // attribute the shared device call
+                                    // evenly across its riders
+                                    fl.seq.res.decode_s += row_share_s;
+                                    let applied = catch_unwind(AssertUnwindSafe(|| {
+                                        engine.apply_step(
+                                            &mut fl.seq,
+                                            &StepResult { plan: &plan, out: &out },
+                                            &mut fl.cache,
+                                        )
+                                    }));
+                                    self.settle(fl, applied, pool, stats);
+                                }
+                                None => self.retire_lost(
+                                    p,
+                                    pool,
+                                    stats,
+                                    "device dispatcher lost a row".into(),
+                                ),
+                            }
+                        }
+                    }
+                    Ok(outs) => {
+                        let msg = format!(
+                            "device dispatcher returned {} outputs for {} rows",
+                            outs.len(),
+                            rows.len()
+                        );
+                        self.retire_all_shared(rows, back, pool, stats, msg);
+                    }
+                    Err(e) => {
+                        let msg = format!("{e:#}");
+                        self.retire_all_shared(rows, back, pool, stats, msg);
+                    }
+                }
+            }
+        }
+        if self.registered && self.running.is_empty() {
+            if let Some(d) = &self.dispatch {
+                d.deregister();
+            }
+            self.registered = false;
+        }
+        self.running.len()
+    }
+
+    /// Retire every pending row of a failed shared tick with `msg`,
+    /// checking returned caches back in (or reconciling the pool for
+    /// rows the dispatcher lost).
+    fn retire_all_shared(
+        &self,
+        rows: Vec<PendingRow>,
+        mut back: std::vec::IntoIter<TickRow>,
+        pool: &SharedCachePool,
+        stats: &QueueStats,
+        msg: String,
+    ) {
+        for p in rows {
+            match back.next() {
+                Some(TickRow { cache, .. }) => {
+                    let fl =
+                        Inflight { job: p.job, queue_s: p.queue_s, seq: p.seq, cache };
+                    self.retire_err(fl, pool, stats, msg.clone());
+                }
+                None => self.retire_lost(p, pool, stats, msg.clone()),
+            }
+        }
+    }
+
+    /// Retire a sequence whose cache is gone (moved into a dispatcher
+    /// submission that will never reply): answer the error and
+    /// reconcile the pool's outstanding count.
+    fn retire_lost(
+        &self,
+        p: PendingRow,
+        pool: &SharedCachePool,
+        stats: &QueueStats,
+        msg: String,
+    ) {
+        pool.forget();
+        let mut resp = Response::error(p.job.req.id, msg);
+        resp.queue_s = p.queue_s;
+        resp.worker = self.worker;
+        stats.on_complete();
+        let _ = p.job.reply.send(resp);
     }
 
     /// Refuse a job that never entered the in-flight set.
@@ -390,10 +667,16 @@ impl StepScheduler {
     }
 }
 
-fn panic_msg(panic: Box<dyn std::any::Any + Send>) -> String {
-    panic
-        .downcast_ref::<&str>()
-        .map(|s| s.to_string())
-        .or_else(|| panic.downcast_ref::<String>().cloned())
-        .unwrap_or_else(|| "unknown panic".into())
+impl Drop for StepScheduler {
+    fn drop(&mut self) {
+        // a scheduler dying mid-spell (worker thread teardown) must not
+        // leave the dispatcher's barrier waiting a full window per round
+        if self.registered {
+            if let Some(d) = &self.dispatch {
+                d.deregister();
+            }
+            self.registered = false;
+        }
+    }
 }
+

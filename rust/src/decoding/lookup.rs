@@ -22,7 +22,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::kvcache::HostKvCache;
-use crate::runtime::Runtime;
+use crate::runtime::Device;
 use crate::tree::{assemble_step, GuessSet, SparseTree, TreeNode};
 use crate::util::rng::Rng;
 
@@ -215,7 +215,7 @@ pub fn chains_to_tree(chains: &[Vec<u32>], max_depth: usize, max_nodes: usize) -
 
 /// The generic chain-speculation engine (verification shared with PPD).
 pub struct ChainEngine<'rt, P: ChainProposer> {
-    rt: &'rt Runtime,
+    rt: &'rt dyn Device,
     /// template proposer; each sequence gets a reset clone
     proposer: P,
     max_depth: usize,
@@ -232,7 +232,7 @@ struct ChainSeq<P> {
 }
 
 impl<'rt, P: ChainProposer> ChainEngine<'rt, P> {
-    pub fn new(rt: &'rt Runtime, proposer: P, max_depth: usize, max_nodes: usize, seed: u64) -> Self {
+    pub fn new(rt: &'rt dyn Device, proposer: P, max_depth: usize, max_nodes: usize, seed: u64) -> Self {
         ChainEngine { rt, proposer, max_depth, max_nodes, seed }
     }
 }
@@ -243,7 +243,7 @@ impl<P: ChainProposer + Clone + Send + 'static> DecodeEngine for ChainEngine<'_,
     }
 
     fn cache_shape(&self) -> (usize, usize, usize) {
-        (self.rt.cfg.n_layers, self.rt.cfg.max_ctx, self.rt.cfg.d_model)
+        (self.rt.cfg().n_layers, self.rt.cfg().max_ctx, self.rt.cfg().d_model)
     }
 
     fn begin_request(&mut self, seed: u64) {
@@ -262,7 +262,7 @@ impl<P: ChainProposer + Clone + Send + 'static> DecodeEngine for ChainEngine<'_,
         cache: &mut HostKvCache,
     ) -> Result<SeqState> {
         cache.reset();
-        let vocab = self.rt.cfg.vocab;
+        let vocab = self.rt.cfg().vocab;
         // drop state harvested from previous requests (lookahead's
         // n-gram pool): without this, one request's generation would
         // leak into the next request's proposals
@@ -297,8 +297,8 @@ impl<P: ChainProposer + Clone + Send + 'static> DecodeEngine for ChainEngine<'_,
             return Ok(seq.finish(FinishReason::Budget));
         }
         let t = Instant::now();
-        let vocab = self.rt.cfg.vocab;
-        let max_ctx = self.rt.cfg.max_ctx;
+        let vocab = self.rt.cfg().vocab;
+        let max_ctx = self.rt.cfg().max_ctx;
         let remaining = seq.max_new - seq.res.tokens.len();
 
         let (root, chains) = {

@@ -11,7 +11,7 @@ use anyhow::{bail, Result};
 use crate::batch::{BatchItem, BatchStepEngine, PlanInputs, StepPlan, StepResult};
 use crate::config::ServeConfig;
 use crate::kvcache::HostKvCache;
-use crate::runtime::{Runtime, StepOutput};
+use crate::runtime::{Device, StepOutput};
 use crate::tree::builder::{build_candidate_tree, AcceptStats};
 use crate::tree::{assemble_step, GuessSet, SparseTree, TreeLayout};
 use crate::util::rng::Rng;
@@ -21,7 +21,7 @@ use super::verify::{softmax_temp, verify, VerifyMode};
 use super::{prefill, record_step, DecodeEngine, FinishReason, SeqState, StepOutcome};
 
 pub struct MedusaEngine<'rt> {
-    rt: &'rt Runtime,
+    rt: &'rt dyn Device,
     pub tree: SparseTree,
     layout: TreeLayout,
     mode: VerifyMode,
@@ -38,9 +38,9 @@ struct MedusaSeq {
 impl<'rt> MedusaEngine<'rt> {
     /// `n_candidates` sizes the static tree (Medusa's published config
     /// uses 63 nodes; at our scale Table 1 uses the same ratio).
-    pub fn new(rt: &'rt Runtime, stats: &AcceptStats, cfg: &ServeConfig, n_candidates: usize, seed: u64) -> Result<Self> {
+    pub fn new(rt: &'rt dyn Device, stats: &AcceptStats, cfg: &ServeConfig, n_candidates: usize, seed: u64) -> Result<Self> {
         if !rt.has_medusa() {
-            bail!("model {} has no medusa heads artifact", rt.cfg.name);
+            bail!("model {} has no medusa heads artifact", rt.cfg().name);
         }
         let depth = rt.medusa_n_heads();
         let tree = build_candidate_tree(stats, depth, n_candidates, cfg.top_r);
@@ -85,7 +85,7 @@ impl DecodeEngine for MedusaEngine<'_> {
     }
 
     fn cache_shape(&self) -> (usize, usize, usize) {
-        (self.rt.cfg.n_layers, self.rt.cfg.max_ctx, self.rt.cfg.d_model)
+        (self.rt.cfg().n_layers, self.rt.cfg().max_ctx, self.rt.cfg().d_model)
     }
 
     fn begin_request(&mut self, seed: u64) {
@@ -104,8 +104,8 @@ impl DecodeEngine for MedusaEngine<'_> {
         cache: &mut HostKvCache,
     ) -> Result<SeqState> {
         cache.reset();
-        let vocab = self.rt.cfg.vocab;
-        let d = self.rt.cfg.d_model;
+        let vocab = self.rt.cfg().vocab;
+        let d = self.rt.cfg().d_model;
         let mut rng = Rng::new(seed);
 
         let t0 = Instant::now();
@@ -141,7 +141,7 @@ impl BatchStepEngine for MedusaEngine<'_> {
             return Ok(StepPlan::Finished(seq.finish(FinishReason::Budget)));
         }
         let t = Instant::now();
-        let max_ctx = self.rt.cfg.max_ctx;
+        let max_ctx = self.rt.cfg().max_ctx;
         let committed = cache.committed();
         if committed + self.tree.input_len() + 2 >= max_ctx {
             seq.res.decode_s += t.elapsed().as_secs_f64();
@@ -174,8 +174,8 @@ impl BatchStepEngine for MedusaEngine<'_> {
         cache: &mut HostKvCache,
     ) -> Result<StepOutcome> {
         let t = Instant::now();
-        let vocab = self.rt.cfg.vocab;
-        let d = self.rt.cfg.d_model;
+        let vocab = self.rt.cfg().vocab;
+        let d = self.rt.cfg().d_model;
         let remaining = seq.max_new - seq.res.tokens.len();
         let out: &StepOutput = res.out;
         cache.scatter(&out.new_kv, &res.plan.slots)?;

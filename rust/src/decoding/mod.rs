@@ -22,7 +22,7 @@ use anyhow::{bail, Result};
 
 use crate::config::EOS_ID;
 use crate::kvcache::HostKvCache;
-use crate::runtime::{Runtime, StepOutput, NEG_INF};
+use crate::runtime::{Device, StepOutput, NEG_INF};
 use crate::util::rng::Rng;
 
 /// Outcome of one generation, with the accounting every bench needs.
@@ -246,15 +246,15 @@ pub trait DecodeEngine {
 /// Prefill the prompt into `cache` in bucket-sized causal chunks and
 /// return the model outputs of the **last** chunk (its final row are the
 /// logits/hidden of the last prompt token).
-pub fn prefill(rt: &Runtime, cache: &mut HostKvCache, prompt: &[u32]) -> Result<StepOutput> {
+pub fn prefill(rt: &dyn Device, cache: &mut HostKvCache, prompt: &[u32]) -> Result<StepOutput> {
     if prompt.is_empty() {
         bail!("empty prompt");
     }
-    let s = rt.cfg.max_ctx;
+    let s = rt.cfg().max_ctx;
     if prompt.len() > cache.remaining() {
         bail!("prompt of {} tokens exceeds context {}", prompt.len(), cache.capacity());
     }
-    let max_bucket = *rt.cfg.buckets.iter().max().unwrap();
+    let max_bucket = *rt.cfg().buckets.iter().max().unwrap();
     let mut out: Option<StepOutput> = None;
     let mut done = 0;
     while done < prompt.len() {

@@ -24,7 +24,7 @@ use anyhow::Result;
 use crate::batch::{BatchItem, BatchStepEngine, PlanInputs, StepPlan, StepResult};
 use crate::config::ServeConfig;
 use crate::kvcache::HostKvCache;
-use crate::runtime::{Runtime, StepOutput};
+use crate::runtime::{Device, StepOutput};
 use crate::tree::builder::AcceptStats;
 use crate::tree::dynamic::DynamicTreeSet;
 use crate::tree::{assemble_step, GuessSet, TreeLayout};
@@ -35,7 +35,7 @@ use super::verify::{softmax_temp, verify, VerifyMode};
 use super::{prefill, record_step, DecodeEngine, FinishReason, SeqState, StepOutcome};
 
 pub struct PpdEngine<'rt> {
-    rt: &'rt Runtime,
+    rt: &'rt dyn Device,
     pub set: DynamicTreeSet,
     mode: VerifyMode,
     top_r: usize,
@@ -53,14 +53,14 @@ struct PpdSeq {
 }
 
 impl<'rt> PpdEngine<'rt> {
-    pub fn new(rt: &'rt Runtime, stats: &AcceptStats, cfg: &ServeConfig, seed: u64) -> Result<Self> {
-        let m = rt.cfg.n_prompt;
+    pub fn new(rt: &'rt dyn Device, stats: &AcceptStats, cfg: &ServeConfig, seed: u64) -> Result<Self> {
+        let m = rt.cfg().n_prompt;
         let set = DynamicTreeSet::build(stats, m, cfg.n_candidates, cfg.n_prompt_budget, cfg.top_r)?;
         Ok(Self::with_tree_set(rt, set, cfg, seed))
     }
 
     /// Use a pre-built tree set (benches build static/random/sized sets).
-    pub fn with_tree_set(rt: &'rt Runtime, set: DynamicTreeSet, cfg: &ServeConfig, seed: u64) -> Self {
+    pub fn with_tree_set(rt: &'rt dyn Device, set: DynamicTreeSet, cfg: &ServeConfig, seed: u64) -> Self {
         let mode = if cfg.temperature <= 0.0 {
             VerifyMode::Greedy
         } else {
@@ -80,7 +80,7 @@ impl<'rt> PpdEngine<'rt> {
         node: usize,
         out: &StepOutput,
     ) -> GuessSet {
-        let vocab = self.rt.cfg.vocab;
+        let vocab = self.rt.cfg().vocab;
         let mut per_distance = Vec::new();
         for &row in &layout.prompt_input[node] {
             let probs = softmax(out.logits_row(row, vocab));
@@ -125,7 +125,7 @@ impl DecodeEngine for PpdEngine<'_> {
     }
 
     fn cache_shape(&self) -> (usize, usize, usize) {
-        (self.rt.cfg.n_layers, self.rt.cfg.max_ctx, self.rt.cfg.d_model)
+        (self.rt.cfg().n_layers, self.rt.cfg().max_ctx, self.rt.cfg().d_model)
     }
 
     fn begin_request(&mut self, seed: u64) {
@@ -144,7 +144,7 @@ impl DecodeEngine for PpdEngine<'_> {
         cache: &mut HostKvCache,
     ) -> Result<SeqState> {
         cache.reset();
-        let vocab = self.rt.cfg.vocab;
+        let vocab = self.rt.cfg().vocab;
         let mut rng = Rng::new(seed);
 
         let t0 = Instant::now();
@@ -181,7 +181,7 @@ impl BatchStepEngine for PpdEngine<'_> {
             return Ok(StepPlan::Finished(seq.finish(FinishReason::Budget)));
         }
         let t = Instant::now();
-        let max_ctx = self.rt.cfg.max_ctx;
+        let max_ctx = self.rt.cfg().max_ctx;
         let state_k = self.state_for(seq);
         let tree = &self.set.trees[state_k];
         let layout = &self.set.layouts[state_k];
@@ -217,7 +217,7 @@ impl BatchStepEngine for PpdEngine<'_> {
         cache: &mut HostKvCache,
     ) -> Result<StepOutcome> {
         let t = Instant::now();
-        let vocab = self.rt.cfg.vocab;
+        let vocab = self.rt.cfg().vocab;
         let remaining = seq.max_new - seq.res.tokens.len();
         // the cursor is untouched between plan and apply, so this
         // recovers exactly the tree the plan was assembled from

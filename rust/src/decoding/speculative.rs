@@ -19,7 +19,7 @@ use anyhow::Result;
 
 use crate::config::ServeConfig;
 use crate::kvcache::HostKvCache;
-use crate::runtime::{Runtime, NEG_INF};
+use crate::runtime::{Device, NEG_INF};
 use crate::tree::builder::AcceptStats;
 use crate::tree::dynamic::DynamicTreeSet;
 use crate::tree::{assemble_step, GuessSet};
@@ -40,8 +40,8 @@ pub enum DraftMode {
 }
 
 pub struct SpeculativeEngine<'a> {
-    target: &'a Runtime,
-    draft: &'a Runtime,
+    target: &'a dyn Device,
+    draft: &'a dyn Device,
     mode: DraftMode,
     /// speculation length per round
     pub gamma: usize,
@@ -63,13 +63,13 @@ struct SpecSeq {
 }
 
 impl<'a> SpeculativeEngine<'a> {
-    pub fn new_vanilla(target: &'a Runtime, draft: &'a Runtime, gamma: usize, seed: u64) -> Self {
+    pub fn new_vanilla(target: &'a dyn Device, draft: &'a dyn Device, gamma: usize, seed: u64) -> Self {
         Self::new(target, draft, DraftMode::Vanilla, gamma, seed)
     }
 
     pub fn new_ppd(
-        target: &'a Runtime,
-        draft: &'a Runtime,
+        target: &'a dyn Device,
+        draft: &'a dyn Device,
         stats: &AcceptStats,
         cfg: &ServeConfig,
         gamma: usize,
@@ -77,7 +77,7 @@ impl<'a> SpeculativeEngine<'a> {
     ) -> Result<Self> {
         let set = DynamicTreeSet::build(
             stats,
-            draft.cfg.n_prompt,
+            draft.cfg().n_prompt,
             cfg.n_candidates,
             cfg.n_prompt_budget,
             cfg.top_r,
@@ -85,12 +85,12 @@ impl<'a> SpeculativeEngine<'a> {
         Ok(Self::new(target, draft, DraftMode::Ppd { set, top_r: cfg.top_r }, gamma, seed))
     }
 
-    fn new(target: &'a Runtime, draft: &'a Runtime, mode: DraftMode, gamma: usize, seed: u64) -> Self {
+    fn new(target: &'a dyn Device, draft: &'a dyn Device, mode: DraftMode, gamma: usize, seed: u64) -> Self {
         SpeculativeEngine { target, draft, mode, gamma, seed, draft_free: Vec::new() }
     }
 
     fn draft_shape(&self) -> (usize, usize, usize) {
-        (self.draft.cfg.n_layers, self.draft.cfg.max_ctx, self.draft.cfg.d_model)
+        (self.draft.cfg().n_layers, self.draft.cfg().max_ctx, self.draft.cfg().d_model)
     }
 
     /// Retire a sequence: move its draft cache back to the engine's
@@ -120,8 +120,8 @@ impl<'a> SpeculativeEngine<'a> {
         root: u32,
         limit: usize,
     ) -> Result<(Vec<u32>, usize)> {
-        let vocab = self.draft.cfg.vocab;
-        let s = self.draft.cfg.max_ctx;
+        let vocab = self.draft.cfg().vocab;
+        let s = self.draft.cfg().max_ctx;
         match &self.mode {
             DraftMode::Vanilla => {
                 let mut chain = Vec::with_capacity(limit);
@@ -199,7 +199,7 @@ impl<'a> SpeculativeEngine<'a> {
         if accepted.is_empty() {
             return Ok(());
         }
-        let s = self.draft.cfg.max_ctx;
+        let s = self.draft.cfg().max_ctx;
         let base = draft_cache.committed();
         let n = accepted.len();
         let pos: Vec<u32> = (0..n as u32).map(|i| base as u32 + i).collect();
@@ -225,7 +225,7 @@ impl DecodeEngine for SpeculativeEngine<'_> {
     }
 
     fn cache_shape(&self) -> (usize, usize, usize) {
-        (self.target.cfg.n_layers, self.target.cfg.max_ctx, self.target.cfg.d_model)
+        (self.target.cfg().n_layers, self.target.cfg().max_ctx, self.target.cfg().d_model)
     }
 
     fn begin_request(&mut self, seed: u64) {
@@ -249,7 +249,7 @@ impl DecodeEngine for SpeculativeEngine<'_> {
             HostKvCache::new(l, s, d)
         });
         draft_cache.reset();
-        let vocab = self.target.cfg.vocab;
+        let vocab = self.target.cfg().vocab;
 
         let t0 = Instant::now();
         let pre_t = prefill(self.target, target_cache, prompt)?;
@@ -275,8 +275,8 @@ impl DecodeEngine for SpeculativeEngine<'_> {
             return Ok(self.finish_and_reclaim(seq, FinishReason::Budget));
         }
         let t = Instant::now();
-        let vocab = self.target.cfg.vocab;
-        let s = self.target.cfg.max_ctx;
+        let vocab = self.target.cfg().vocab;
+        let s = self.target.cfg().max_ctx;
         let remaining = seq.max_new - seq.res.tokens.len();
 
         let root = seq.inner.downcast_ref::<SpecSeq>().expect("spec seq state").root;

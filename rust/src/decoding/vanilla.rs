@@ -6,7 +6,7 @@ use anyhow::Result;
 
 use crate::batch::{BatchItem, BatchStepEngine, PlanInputs, StepPlan, StepResult};
 use crate::kvcache::HostKvCache;
-use crate::runtime::{Runtime, StepOutput, NEG_INF};
+use crate::runtime::{Device, StepOutput, NEG_INF};
 use crate::util::argmax;
 use crate::util::rng::Rng;
 
@@ -14,7 +14,7 @@ use super::verify::softmax_temp;
 use super::{prefill, DecodeEngine, FinishReason, SeqState, StepOutcome};
 
 pub struct VanillaEngine<'rt> {
-    rt: &'rt Runtime,
+    rt: &'rt dyn Device,
     temperature: f32,
     seed: u64,
 }
@@ -25,7 +25,7 @@ struct VanillaSeq {
 }
 
 impl<'rt> VanillaEngine<'rt> {
-    pub fn new(rt: &'rt Runtime, temperature: f32, seed: u64) -> Self {
+    pub fn new(rt: &'rt dyn Device, temperature: f32, seed: u64) -> Self {
         VanillaEngine { rt, temperature, seed }
     }
 
@@ -45,7 +45,7 @@ impl DecodeEngine for VanillaEngine<'_> {
     }
 
     fn cache_shape(&self) -> (usize, usize, usize) {
-        (self.rt.cfg.n_layers, self.rt.cfg.max_ctx, self.rt.cfg.d_model)
+        (self.rt.cfg().n_layers, self.rt.cfg().max_ctx, self.rt.cfg().d_model)
     }
 
     fn begin_request(&mut self, seed: u64) {
@@ -64,7 +64,7 @@ impl DecodeEngine for VanillaEngine<'_> {
         cache: &mut HostKvCache,
     ) -> Result<SeqState> {
         cache.reset();
-        let vocab = self.rt.cfg.vocab;
+        let vocab = self.rt.cfg().vocab;
         let mut rng = Rng::new(seed);
 
         let t0 = Instant::now();
@@ -95,7 +95,7 @@ impl BatchStepEngine for VanillaEngine<'_> {
             return Ok(StepPlan::Finished(seq.finish(FinishReason::Context)));
         }
         let t = Instant::now();
-        let s = self.rt.cfg.max_ctx;
+        let s = self.rt.cfg().max_ctx;
         let next = seq.inner.downcast_ref::<VanillaSeq>().expect("vanilla seq state").next;
 
         let c = cache.committed();
@@ -131,7 +131,7 @@ impl BatchStepEngine for VanillaEngine<'_> {
         cache: &mut HostKvCache,
     ) -> Result<StepOutcome> {
         let t = Instant::now();
-        let vocab = self.rt.cfg.vocab;
+        let vocab = self.rt.cfg().vocab;
         let out: &StepOutput = res.out;
         cache.scatter(&out.new_kv, &res.plan.slots)?;
         cache.commit_contiguous(1)?;

@@ -302,6 +302,19 @@ impl SharedCachePool {
         }
     }
 
+    /// Reconcile a cache that is *gone* — moved into a device-dispatcher
+    /// submission whose reply channel died with the dispatcher, so there
+    /// is no `HostKvCache` to hand back.  Decrements `outstanding` (the
+    /// cap must not stay consumed by a dead device thread); the lost
+    /// allocation itself is not re-pooled, so a later checkout may
+    /// allocate a replacement within the cap.
+    pub fn forget(&self) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(pool) = g.as_mut() {
+            pool.outstanding = pool.outstanding.saturating_sub(1);
+        }
+    }
+
     /// Total caches ever allocated (the pool-efficiency metric: stays
     /// at `workers × max_inflight` under steady load).
     pub fn created(&self) -> usize {

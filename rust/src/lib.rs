@@ -13,7 +13,10 @@
 //! * [`decoding`] — vanilla / PPD / Medusa / lookup / speculative
 //!                  engines, all resumable (`begin_seq`/`step`)
 //! * [`batch`]    — fused batched stepping: plan/apply step split,
-//!                  ragged-plan collation, one device call per tick
+//!                  ragged-plan collation, one device call per tick —
+//!                  and the shared-runtime `DeviceDispatcher`
+//!                  (`--shared-runtime`): one device call per wall tick
+//!                  across ALL workers
 //! * [`coordinator`] — multi-worker serving layer: shared work queue,
 //!                  step-level continuous batching (`--max-inflight`),
 //!                  capped KV-cache pool, cancellation/queue-aging,

@@ -18,6 +18,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use ppd::config::{ArtifactPaths, ModelConfig, ServeConfig};
 use ppd::coordinator::{build_engine, Coordinator, EngineKind, SchedPolicy};
 use ppd::decoding::DecodeEngine;
+use ppd::runtime::Device;
 use ppd::runtime::calibrate::Calibration;
 use ppd::runtime::Runtime;
 use ppd::tree::builder::AcceptStats;
@@ -49,7 +50,7 @@ impl Args {
             };
             if let Some((k, v)) = name.split_once('=') {
                 flags.insert(k.to_string(), v.to_string());
-            } else if matches!(name, "force" | "greedy" | "fuse-steps") {
+            } else if matches!(name, "force" | "greedy" | "fuse-steps" | "shared-runtime") {
                 flags.insert(name.to_string(), "true".to_string());
             } else {
                 let v = it.next().ok_or_else(|| anyhow!("--{name} needs a value"))?;
@@ -118,10 +119,13 @@ fn print_help() {
            generate    --model M --engine {{{}}} --prompt TEXT [--max-new N] [--temp T]\n\
            serve       --model M [--port 7878] [--engine ppd] [--workers N]\n\
                        [--max-inflight 4] [--max-queue-age-ms MS] [--fuse-steps]\n\
+                       [--shared-runtime]\n\
                        continuous batching: each worker interleaves up to\n\
                        --max-inflight sequences one decode step at a time;\n\
                        --fuse-steps batches every in-flight tree step into\n\
-                       one forward_batch device call per tick\n\
+                       one forward_batch device call per tick;\n\
+                       --shared-runtime routes ALL workers' ticks through\n\
+                       one device dispatcher: 1 device call per wall tick\n\
            calibrate   --model M [--force]  measure per-bucket forward latency\n\
            sweep       --model M            theoretical-speedup curve vs tree size\n\
            trees       --model M            print the dynamic sparse tree set\n\n\
@@ -173,7 +177,8 @@ fn cmd_generate(args: &Args) -> Result<()> {
         }
         _ => None,
     };
-    let mut engine = build_engine(kind, &rt, draft.as_ref(), &paths, &cfg, 0)?;
+    let mut engine =
+        build_engine(kind, &rt, draft.as_ref().map(|d| d as &dyn Device), &paths, &cfg, 0)?;
     let prompt = workload::encode(prompt_text);
     let r = engine.generate(&prompt, max_new)?;
     println!("── {} | {} ──", rt.cfg.name, engine.name());
@@ -204,6 +209,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         policy.max_queue_age = Some(std::time::Duration::from_millis(ms));
     }
     policy.fuse_steps = args.get("fuse-steps").is_some();
+    policy.shared_runtime = args.get("shared-runtime").is_some();
     let draft = match kind {
         EngineKind::Spec | EngineKind::SpecPpd => Some(args.get("draft").unwrap_or("ppd-d").to_string()),
         _ => None,

@@ -114,8 +114,22 @@ pub struct QueueStats {
 
 /// Histogram slots for the fused batch-size distribution: slot `i`
 /// counts fused calls that served `i + 1` sequences; the last slot
-/// aggregates everything at or beyond `FUSED_HIST_SLOTS`.
+/// aggregates everything at or beyond `FUSED_HIST_SLOTS` (a tick wider
+/// than the slot count — reachable once fusion spans workers — is
+/// **clamped** into it, never dropped; regression-tested in this module
+/// and labeled `"16+"` in the Prometheus text).
 pub const FUSED_HIST_SLOTS: usize = 16;
+
+/// Prometheus label for a histogram slot reported by
+/// [`FusedHist::nonzero`]: the overflow slot is `"16+"` so a scrape
+/// can't mistake clamped wide ticks for exactly-16-row ticks.
+pub fn fused_slot_label(batch: usize) -> String {
+    if batch >= FUSED_HIST_SLOTS {
+        format!("{FUSED_HIST_SLOTS}+")
+    } else {
+        batch.to_string()
+    }
+}
 
 #[derive(Debug)]
 pub struct FusedHist([AtomicU64; FUSED_HIST_SLOTS]);
@@ -127,12 +141,15 @@ impl Default for FusedHist {
 }
 
 impl FusedHist {
-    fn record(&self, batch: usize) {
+    /// Record one batch of `batch` rows, clamping oversize batches into
+    /// the last (overflow) slot.
+    pub fn record(&self, batch: usize) {
         let slot = batch.clamp(1, FUSED_HIST_SLOTS) - 1;
         self.0[slot].fetch_add(1, Ordering::Relaxed);
     }
 
-    /// `(batch_size, count)` pairs for every non-empty slot.
+    /// `(batch_size, count)` pairs for every non-empty slot; the entry
+    /// at `FUSED_HIST_SLOTS` aggregates every batch at or beyond it.
     pub fn nonzero(&self) -> Vec<(usize, u64)> {
         self.0
             .iter()
@@ -300,7 +317,8 @@ impl QueueStats {
         push("fused_rows_total", self.fused_rows_total());
         push("max_fused_batch", self.max_fused_batch());
         for (b, c) in self.fused_hist() {
-            out.push_str(&format!("ppd_queue_fused_batch_size_total{{batch=\"{b}\"}} {c}\n"));
+            let label = fused_slot_label(b);
+            out.push_str(&format!("ppd_queue_fused_batch_size_total{{batch=\"{label}\"}} {c}\n"));
         }
         out
     }
@@ -528,6 +546,29 @@ mod tests {
     }
 
     #[test]
+    fn oversized_fused_batches_clamp_into_the_overflow_slot() {
+        // regression: >FUSED_HIST_SLOTS-row ticks are routine once
+        // fusion spans workers (N workers × max-inflight rows per wall
+        // tick) — they must land in the clamped last slot, labeled
+        // "16+" in the scrape, never be dropped
+        let q = QueueStats::new();
+        q.on_fused_batch(FUSED_HIST_SLOTS + 1);
+        q.on_fused_batch(64);
+        assert_eq!(q.fused_hist(), vec![(FUSED_HIST_SLOTS, 2)]);
+        assert_eq!(q.fused_rows_total(), (FUSED_HIST_SLOTS + 1 + 64) as u64);
+        assert_eq!(q.fused_batches_total(), 2);
+        let text = q.to_prometheus();
+        assert!(
+            text.contains("ppd_queue_fused_batch_size_total{batch=\"16+\"} 2\n"),
+            "{text}"
+        );
+        assert!(!text.contains("batch=\"17\""), "{text}");
+        assert_eq!(fused_slot_label(3), "3");
+        assert_eq!(fused_slot_label(FUSED_HIST_SLOTS), "16+");
+        assert_eq!(fused_slot_label(40), "16+");
+    }
+
+    #[test]
     fn fused_counters_and_histogram() {
         let q = QueueStats::new();
         q.on_fused_batch(1);
@@ -590,6 +631,25 @@ mod tests {
         assert_eq!(snap.batch_rows, 11);
         assert_eq!(snap.per_batch.get(&3), Some(&3));
         assert!((snap.mean_batch_rows() - 2.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn runtime_agg_merges_per_worker_row_attribution() {
+        // the shared dispatcher and worker-owned runtimes both flush
+        // rows_by_worker fragments; the aggregate must merge, not clobber
+        let agg = RuntimeAgg::default();
+        agg.absorb(&RuntimeStats {
+            rows_by_worker: [(0usize, 4usize), (1, 2)].into_iter().collect(),
+            ..Default::default()
+        });
+        agg.absorb(&RuntimeStats {
+            rows_by_worker: [(1usize, 3usize), (2, 7)].into_iter().collect(),
+            ..Default::default()
+        });
+        let snap = agg.snapshot();
+        assert_eq!(snap.rows_by_worker.get(&0), Some(&4));
+        assert_eq!(snap.rows_by_worker.get(&1), Some(&5));
+        assert_eq!(snap.rows_by_worker.get(&2), Some(&7));
     }
 
     #[test]

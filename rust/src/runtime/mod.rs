@@ -72,6 +72,13 @@ pub struct RuntimeStats {
     pub batch_rows: usize,
     /// batch-size histogram of `forward_batch` calls
     pub per_batch: BTreeMap<usize, usize>,
+    /// fused rows attributed to the worker that planned them.  In the
+    /// worker-owned-runtime topology each worker flushes its own rows
+    /// under its own id; under `--shared-runtime` the device dispatcher
+    /// attributes every row of every cross-worker batch to its
+    /// submitting scheduler, so the post-drain aggregate still answers
+    /// "who drove the device".
+    pub rows_by_worker: BTreeMap<usize, usize>,
 }
 
 impl RuntimeStats {
@@ -89,6 +96,9 @@ impl RuntimeStats {
         self.batch_rows += other.batch_rows;
         for (&b, &c) in &other.per_batch {
             *self.per_batch.entry(b).or_insert(0) += c;
+        }
+        for (&w, &r) in &other.rows_by_worker {
+            *self.rows_by_worker.entry(w).or_insert(0) += r;
         }
     }
 
@@ -630,6 +640,85 @@ impl Runtime {
 
     pub fn take_stats(&self) -> RuntimeStats {
         std::mem::take(&mut *self.stats.borrow_mut())
+    }
+}
+
+/// The device surface decode engines run against.
+///
+/// [`Runtime`] is the worker-owned implementation (each worker thread
+/// owns a PJRT client — it is not `Send`).  Under `--shared-runtime`
+/// the workers instead hold a [`crate::batch::dispatch::SharedRuntime`]
+/// handle that round-trips every call through the single
+/// `DeviceDispatcher`-owned runtime, which is what lets N schedulers
+/// share one device queue.  Engines are written against `&dyn Device`
+/// so the two topologies run the *same* decode code.
+pub trait Device {
+    /// Model + bucket metadata (shape math, bucket selection, vocab).
+    fn cfg(&self) -> &ModelConfig;
+
+    /// One forward step over `n` tree tokens (see [`Runtime::forward`]).
+    fn forward(
+        &self,
+        tokens: &[u32],
+        pos: &[u32],
+        slots: &[u32],
+        bias: &[f32],
+        cache: &[f32],
+    ) -> Result<StepOutput>;
+
+    /// One fused forward over many sequences' planned steps (see
+    /// [`Runtime::forward_batch`]).
+    fn forward_batch(
+        &self,
+        items: &[crate::batch::BatchItem<'_>],
+    ) -> Result<Vec<StepOutput>>;
+
+    fn has_medusa(&self) -> bool {
+        false
+    }
+
+    fn medusa_n_heads(&self) -> usize {
+        0
+    }
+
+    fn medusa_heads(&self, _hidden: &[f32]) -> Result<Vec<Vec<f32>>> {
+        bail!("device has no medusa heads")
+    }
+}
+
+impl Device for Runtime {
+    fn cfg(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    fn forward(
+        &self,
+        tokens: &[u32],
+        pos: &[u32],
+        slots: &[u32],
+        bias: &[f32],
+        cache: &[f32],
+    ) -> Result<StepOutput> {
+        Runtime::forward(self, tokens, pos, slots, bias, cache)
+    }
+
+    fn forward_batch(
+        &self,
+        items: &[crate::batch::BatchItem<'_>],
+    ) -> Result<Vec<StepOutput>> {
+        Runtime::forward_batch(self, items)
+    }
+
+    fn has_medusa(&self) -> bool {
+        Runtime::has_medusa(self)
+    }
+
+    fn medusa_n_heads(&self) -> usize {
+        Runtime::medusa_n_heads(self)
+    }
+
+    fn medusa_heads(&self, hidden: &[f32]) -> Result<Vec<Vec<f32>>> {
+        Runtime::medusa_heads(self, hidden)
     }
 }
 

@@ -49,6 +49,17 @@ fn nan_low(x: f32) -> f32 {
     }
 }
 
+/// Human-readable message out of a caught panic payload (the
+/// `catch_unwind` sites in the scheduler and the device dispatcher
+/// share this so their error responses cannot drift).
+pub fn panic_message(panic: Box<dyn std::any::Any + Send>) -> String {
+    panic
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| panic.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "unknown panic".into())
+}
+
 /// Shannon entropy of a probability distribution (nats).
 pub fn entropy(probs: &[f32]) -> f32 {
     probs

@@ -125,11 +125,41 @@ struct MockBackend {
     delay: Duration,
 }
 
+/// Shared-runtime device host for a deviceless mock: this engine has no
+/// plan/apply split, so nothing ever reaches the dispatcher — but the
+/// host thread must still exist for the topology (and its gauges) to
+/// come up.
+struct NoDeviceExec;
+
+impl ppd::batch::dispatch::DeviceExecutor for NoDeviceExec {
+    fn exec_forward(
+        &self,
+        _tokens: &[u32],
+        _pos: &[u32],
+        _slots: &[u32],
+        _bias: &[f32],
+        _cache: &[f32],
+    ) -> Result<ppd::runtime::StepOutput> {
+        anyhow::bail!("mock backend has no device")
+    }
+
+    fn exec_forward_batch(
+        &self,
+        _items: &[ppd::batch::BatchItem<'_>],
+    ) -> Result<Vec<ppd::runtime::StepOutput>> {
+        anyhow::bail!("mock backend has no device")
+    }
+}
+
 impl WorkerBackend for MockBackend {
     fn run(&self, worker: usize, ctx: WorkerCtx) {
         let mut engine = MockEngine::new(self.delay);
         ctx.ready();
         serve_jobs(worker, &mut engine, &ctx);
+    }
+
+    fn run_device(&self, host: ppd::coordinator::DeviceHost) {
+        host.serve(&NoDeviceExec);
     }
 }
 
@@ -371,6 +401,46 @@ fn tcp_metrics_roundtrip_exports_queue_counters() {
     assert!(text.contains("ppd_queue_fused_batches_total 0\n"), "{text}");
     assert!(text.contains("ppd_workers 2\n"), "{text}");
     assert!(text.contains("ppd_caches_outstanding 0\n"), "{text}");
+    // dispatcher gauges ride the same scrape (zero outside
+    // --shared-runtime, but always present so dashboards need no
+    // topology-conditional panels)
+    assert!(text.contains("ppd_shared_runtime 0\n"), "{text}");
+    assert!(text.contains("ppd_dispatch_batches_total 0\n"), "{text}");
+    assert!(text.contains("ppd_dispatch_rows_total 0\n"), "{text}");
+    assert!(text.contains("ppd_dispatch_queue_depth 0\n"), "{text}");
+    assert!(text.contains("ppd_dispatch_max_width 0\n"), "{text}");
+}
+
+#[test]
+fn metrics_text_carries_dispatcher_gauges_under_shared_runtime() {
+    // under --shared-runtime the dispatcher gauges go live: batches,
+    // cross-worker width histogram, queue depth — in metrics_text and
+    // through the TCP client_metrics round trip
+    let coord = Coordinator::spawn_with_backend_policy(
+        Arc::new(MockBackend { delay: Duration::ZERO }),
+        2,
+        SchedPolicy { max_inflight: 2, shared_runtime: true, ..Default::default() },
+    )
+    .expect("spawn");
+    // this mock has no plan/apply split, so its steps never reach the
+    // dispatcher — but the topology line and gauges must still export
+    let resps = coord.run_batch(mk_reqs(4)).expect("batch");
+    assert!(resps.iter().all(|r| r.error.is_none()));
+    let text = coord.metrics_text();
+    assert!(text.contains("ppd_shared_runtime 1\n"), "{text}");
+    assert!(text.contains("ppd_dispatch_queue_depth 0\n"), "{text}");
+    assert!(text.contains("ppd_dispatch_batches_total"), "{text}");
+
+    let addr = "127.0.0.1:17937";
+    let server = std::thread::spawn(move || {
+        ppd::coordinator::server::serve(coord, addr, Some(1)).unwrap();
+    });
+    std::thread::sleep(Duration::from_millis(200));
+    let scraped = ppd::coordinator::server::client_metrics(addr).unwrap();
+    server.join().unwrap();
+    assert!(scraped.contains("ppd_shared_runtime 1\n"), "{scraped}");
+    assert!(scraped.contains("ppd_dispatch_queue_depth 0\n"), "{scraped}");
+    assert!(scraped.contains("ppd_dispatch_solo_forwards_total 0\n"), "{scraped}");
 }
 
 #[test]

@@ -31,20 +31,31 @@
 //!  * fused stepping issues ≥2× fewer device calls than per-sequence
 //!    stepping for the same workload at depth 4, with ≥1 tick where
 //!    one `forward_batch` served >1 sequence;
+//!  * shared-runtime dispatch ([`SharedHarness`]: many schedulers, one
+//!    scripted `DeviceDispatcher`): token-exact vs serial AND
+//!    per-worker-fused at workers 1/2/4 × max_inflight 1/2/4, exactly
+//!    ONE device call per wall tick with 4 busy workers (vs 4
+//!    per-worker-fused), mid-flight admission, cancellation, and
+//!    dead-dispatcher recovery (errors + pool reconciliation);
 //!  * the full coordinator (threads + queue + scheduler) end to end,
-//!    with the worker count taken from `PPD_TEST_WORKERS` and fusion
-//!    from `PPD_TEST_FUSE` (CI matrix).
+//!    with the worker count taken from `PPD_TEST_WORKERS`, fusion from
+//!    `PPD_TEST_FUSE`, and shared-runtime dispatch from
+//!    `PPD_TEST_SHARED` (CI matrix).
 
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::Duration;
 
 use anyhow::{bail, Result};
 
+use ppd::batch::dispatch::{
+    DeviceDispatcher, DeviceExecutor, DispatchStats, DEFAULT_WINDOW,
+};
 use ppd::batch::{BatchItem, BatchStepEngine, PlanInputs, StepPlan, StepResult};
 use ppd::coordinator::queue::Job;
 use ppd::coordinator::{
-    serve_jobs, Coordinator, Request, Response, SchedPolicy, StepScheduler, WorkerBackend,
-    WorkerCtx,
+    serve_jobs, Coordinator, DeviceHost, Request, Response, SchedPolicy, StepScheduler,
+    WorkerBackend, WorkerCtx,
 };
 use ppd::decoding::{DecodeEngine, FinishReason, GenerationResult, SeqState, StepOutcome};
 use ppd::kvcache::{HostKvCache, SharedCachePool};
@@ -305,7 +316,7 @@ struct Harness {
 
 impl Harness {
     fn new(max_inflight: usize, max_queue_age: Option<Duration>) -> Self {
-        Self::with_policy(SchedPolicy { max_inflight, max_queue_age, fuse_steps: false })
+        Self::with_policy(SchedPolicy { max_inflight, max_queue_age, ..Default::default() })
     }
 
     /// A harness whose scheduler fuses every tick's steps into one
@@ -313,8 +324,8 @@ impl Harness {
     fn fused(max_inflight: usize) -> Self {
         Self::with_policy(SchedPolicy {
             max_inflight,
-            max_queue_age: None,
             fuse_steps: true,
+            ..Default::default()
         })
     }
 
@@ -533,7 +544,7 @@ fn out_of_order_retirement_routes_replies_to_their_own_channels() {
     let stats = QueueStats::new();
     let mut sched = StepScheduler::new(
         0,
-        SchedPolicy { max_inflight: 2, max_queue_age: None, fuse_steps: false },
+        SchedPolicy { max_inflight: 2, ..Default::default() },
     );
 
     let (tx_long, rx_long) = mpsc::channel();
@@ -642,6 +653,362 @@ fn panicking_begin_seq_refuses_job_and_keeps_scheduler_alive() {
     assert_eq!(h.drain().len(), 1);
 }
 
+// ---- scripted shared-runtime harness (many schedulers, no threads) ----
+
+/// The dispatcher-side executor for shared-runtime tests: echoes every
+/// plan's tag row (the same contract as `MockEngine::forward_batch`, so
+/// `apply_step`'s routing check still bites) and counts device calls.
+struct MockExec {
+    forwards: AtomicUsize,
+    /// union width of every fused device call, in order
+    widths: Mutex<Vec<usize>>,
+    /// artificial device latency (threaded cancellation tests need wall
+    /// ticks slow enough for a cancel to land mid-flight)
+    delay: Duration,
+}
+
+impl MockExec {
+    fn new() -> Self {
+        Self::with_delay(Duration::ZERO)
+    }
+
+    fn with_delay(delay: Duration) -> Self {
+        MockExec { forwards: AtomicUsize::new(0), widths: Mutex::new(Vec::new()), delay }
+    }
+
+    fn forwards(&self) -> usize {
+        self.forwards.load(Ordering::SeqCst)
+    }
+}
+
+impl DeviceExecutor for MockExec {
+    fn exec_forward(
+        &self,
+        tokens: &[u32],
+        _pos: &[u32],
+        _slots: &[u32],
+        _bias: &[f32],
+        _cache: &[f32],
+    ) -> Result<StepOutput> {
+        self.forwards.fetch_add(1, Ordering::SeqCst);
+        Ok(StepOutput { n: 1, logits: vec![tokens[0] as f32], hidden: vec![], new_kv: vec![] })
+    }
+
+    fn exec_forward_batch(&self, items: &[BatchItem<'_>]) -> Result<Vec<StepOutput>> {
+        self.forwards.fetch_add(1, Ordering::SeqCst); // ONE call, any width
+        self.widths.lock().unwrap().push(items.len());
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        Ok(items
+            .iter()
+            .map(|it| StepOutput {
+                n: 1,
+                logits: vec![it.plan.tokens[0] as f32],
+                hidden: vec![],
+                new_kv: vec![],
+            })
+            .collect())
+    }
+}
+
+/// N hand-driven schedulers sharing ONE dispatcher/executor — the
+/// deterministic model of the `--shared-runtime` topology.  A wall tick
+/// is: every scheduler plans + submits, the dispatcher flushes once,
+/// every scheduler applies.
+struct SharedHarness {
+    scheds: Vec<StepScheduler>,
+    engines: Vec<MockEngine>,
+    pool: SharedCachePool,
+    stats: QueueStats,
+    dispatcher: DeviceDispatcher,
+    dstats: Arc<DispatchStats>,
+    exec: MockExec,
+    tx: mpsc::Sender<Response>,
+    rx: mpsc::Receiver<Response>,
+}
+
+impl SharedHarness {
+    fn new(workers: usize, max_inflight: usize) -> Self {
+        let dstats = Arc::new(DispatchStats::default());
+        let (handle, dispatcher) =
+            DeviceDispatcher::channel(DEFAULT_WINDOW, Arc::clone(&dstats));
+        let policy =
+            SchedPolicy { max_inflight, shared_runtime: true, ..Default::default() };
+        let scheds = (0..workers)
+            .map(|w| StepScheduler::with_dispatcher(w, policy, handle.clone()))
+            .collect();
+        let engines = (0..workers).map(|_| MockEngine::new()).collect();
+        let (tx, rx) = mpsc::channel();
+        SharedHarness {
+            scheds,
+            engines,
+            pool: SharedCachePool::new(workers * max_inflight),
+            stats: QueueStats::new(),
+            dispatcher,
+            dstats,
+            exec: MockExec::new(),
+            tx,
+            rx,
+        }
+    }
+
+    fn admit(&mut self, w: usize, req: Request) -> (bool, ppd::coordinator::CancelFlag) {
+        let job = Job::new(req, self.tx.clone());
+        let cancel = job.cancel.clone();
+        let ok = self.scheds[w].admit(&mut self.engines[w], &self.pool, &self.stats, job);
+        (ok, cancel)
+    }
+
+    fn busy(&self) -> bool {
+        self.scheds.iter().any(|s| !s.is_empty())
+    }
+
+    /// One wall tick across every scheduler; returns the device calls
+    /// it cost (the tentpole claim: ≤ 1, however many workers ran).
+    fn wall_tick(&mut self) -> usize {
+        for (s, e) in self.scheds.iter_mut().zip(self.engines.iter_mut()) {
+            s.tick_shared_submit(e, &self.pool, &self.stats);
+        }
+        let calls = self.dispatcher.pump(&self.exec);
+        for (s, e) in self.scheds.iter_mut().zip(self.engines.iter_mut()) {
+            s.tick_shared_complete(e, &self.pool, &self.stats);
+        }
+        calls
+    }
+
+    fn drain_responses(&mut self) -> Vec<Response> {
+        let mut out = Vec::new();
+        while let Ok(r) = self.rx.try_recv() {
+            out.push(r);
+        }
+        out
+    }
+}
+
+#[test]
+fn shared_runtime_is_token_exact_at_every_worker_and_inflight_depth() {
+    // the tentpole acceptance invariant: routing every worker's tick
+    // through one shared dispatcher is output-transparent at workers
+    // 1/2/4 × max_inflight 1/2/4 — and no wall tick ever costs more
+    // than one device call
+    let (_, expect) = workload_reqs(8);
+    for workers in [1usize, 2, 4] {
+        for max_inflight in [1usize, 2, 4] {
+            let mut h = SharedHarness::new(workers, max_inflight);
+            let (reqs, _) = workload_reqs(8);
+            let mut pending: std::collections::VecDeque<Request> =
+                reqs.into_iter().collect();
+            while !pending.is_empty() || h.busy() {
+                // opportunistic admission on every scheduler with a free
+                // slot — sequences join mid-flight constantly
+                for w in 0..workers {
+                    if h.scheds[w].has_capacity() {
+                        if let Some(r) = pending.pop_front() {
+                            let (ok, _) = h.admit(w, r);
+                            assert!(ok, "admission refused with free capacity");
+                        }
+                    }
+                }
+                let calls = h.wall_tick();
+                assert!(
+                    calls <= 1,
+                    "workers={workers} inflight={max_inflight}: wall tick cost {calls} device calls"
+                );
+            }
+            let mut resps = h.drain_responses();
+            resps.sort_by_key(|r| r.id);
+            assert_eq!(resps.len(), 8);
+            for (r, want) in resps.iter().zip(&expect) {
+                assert!(r.error.is_none(), "{:?}", r.error);
+                assert_eq!(
+                    r.tokens, *want,
+                    "shared runtime perturbed request {} (workers={workers}, inflight={max_inflight})",
+                    r.id
+                );
+            }
+            assert_eq!(h.pool.outstanding(), 0);
+            assert_eq!(h.dstats.queue_depth(), 0, "submissions leaked in the window");
+            // every scheduled step's row went through the dispatcher
+            assert_eq!(h.dstats.rows_total(), h.stats.sched_steps_total());
+            assert_eq!(h.exec.forwards(), h.dstats.batches_total() as usize);
+        }
+    }
+}
+
+#[test]
+fn shared_dispatch_is_one_device_call_per_wall_tick_with_four_workers() {
+    // acceptance criterion, exactly: 4 busy workers under the shared
+    // runtime cost 1 device call per wall tick where the per-worker-
+    // fused topology costs 4 — token-exactly, including a mid-flight
+    // admission and a cancellation
+    let workers = 4;
+    let mut h = SharedHarness::new(workers, 2);
+    let mut fused: Vec<Harness> = (0..workers).map(|_| Harness::fused(2)).collect();
+
+    // the same 4 requests (one per worker) on both topologies
+    let (reqs_a, expect) = workload_reqs(4);
+    let (reqs_b, _) = workload_reqs(4);
+    for (w, r) in reqs_a.into_iter().enumerate() {
+        assert!(h.admit(w, r).0);
+    }
+    for (w, r) in reqs_b.into_iter().enumerate() {
+        assert!(fused[w].admit(r).0);
+    }
+    // a doomed second sequence on worker 0, cancelled at tick 1
+    let (ok, cancel) = h.admit(0, mk_req(91, "cancelled mid flight", 40));
+    assert!(ok);
+    let (ok, cancel_twin) = fused[0].admit(mk_req(91, "cancelled mid flight", 40));
+    assert!(ok);
+
+    // a late arrival admitted mid-flight on worker 1, at tick 2
+    let mut late =
+        Some((mk_req(90, "late arrival", 5), mk_req(90, "late arrival", 5)));
+    let want_late = {
+        let r = &late.as_ref().unwrap().0;
+        reference_tokens(&r.prompt, r.max_new, r.seed)
+    };
+
+    let mut tick = 0usize;
+    while h.busy() || fused.iter().any(|f| !f.sched.is_empty()) {
+        if tick == 1 {
+            cancel.cancel();
+            cancel_twin.cancel();
+        }
+        if tick == 2 {
+            let (a, b) = late.take().expect("late admitted exactly once");
+            assert!(h.admit(1, a).0, "mid-flight admission refused");
+            assert!(fused[1].admit(b).0);
+        }
+        let all_busy = h.scheds.iter().all(|s| !s.is_empty());
+        let calls = h.wall_tick();
+        assert!(calls <= 1, "wall tick {tick} cost {calls} device calls");
+        let fused_calls: usize = fused
+            .iter_mut()
+            .map(|f| {
+                let before = f.engine.forwards;
+                if !f.sched.is_empty() {
+                    f.tick();
+                }
+                f.engine.forwards - before
+            })
+            .sum();
+        if all_busy {
+            assert_eq!(
+                calls, 1,
+                "tick {tick}: 4 busy workers must cost exactly ONE shared device call"
+            );
+            assert_eq!(
+                fused_calls, workers,
+                "tick {tick}: per-worker fusion costs one call per busy worker"
+            );
+        }
+        tick += 1;
+        assert!(tick < 200, "workload failed to drain");
+    }
+    assert!(late.is_none(), "the mid-flight admission case never ran");
+
+    // token-exactness: shared responses == per-worker-fused responses
+    // == the run-to-completion reference
+    let mut a = h.drain_responses();
+    a.sort_by_key(|r| r.id);
+    let mut b: Vec<Response> = fused.iter_mut().flat_map(|f| f.drain()).collect();
+    b.sort_by_key(|r| r.id);
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.tokens, y.tokens, "shared diverged from per-worker-fused on {}", x.id);
+        assert_eq!(x.error.is_some(), y.error.is_some());
+    }
+    for (r, want) in a.iter().take(4).zip(&expect) {
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.tokens, *want, "shared runtime perturbed request {}", r.id);
+    }
+    let late_resp = a.iter().find(|r| r.id == 90).expect("late request completed");
+    assert_eq!(late_resp.tokens, want_late, "mid-flight admission perturbed the late request");
+    let doomed_resp = a.iter().find(|r| r.id == 91).expect("cancelled request answered");
+    assert!(doomed_resp.error.as_deref().unwrap_or_default().contains("cancelled"));
+    // cross-worker fusion demonstrably engaged
+    assert!(h.dstats.multi_worker_batches_total() > 0, "no batch ever spanned workers");
+    assert!(h.dstats.max_width() >= 2);
+    assert_eq!(h.pool.outstanding(), 0);
+}
+
+#[test]
+fn shared_scheduler_cancellation_frees_cache_and_costs_no_device_call() {
+    let mut h = SharedHarness::new(2, 2);
+    let (ok, cancel) = h.admit(0, mk_req(0, "cancel me in shared mode", 50));
+    assert!(ok);
+    h.wall_tick();
+    h.wall_tick();
+    assert_eq!(h.pool.outstanding(), 1);
+    cancel.cancel();
+    let calls = h.wall_tick();
+    assert_eq!(calls, 0, "a tick that only cancels must not touch the device");
+    assert!(!h.busy());
+    assert_eq!(h.pool.outstanding(), 0, "cancel must return the cache to the pool");
+    assert_eq!(h.stats.cancelled_total(), 1);
+    let resp = h.rx.try_recv().expect("cancelled sequence answers its channel");
+    assert!(resp.error.as_deref().unwrap_or_default().contains("cancelled"));
+}
+
+#[test]
+fn dead_dispatcher_fails_sequences_and_reconciles_the_pool() {
+    // submit-side loss: the dispatcher dies before the next tick — the
+    // rows come straight back, sequences retire with errors, caches
+    // return to the pool
+    let mut h = SharedHarness::new(2, 1);
+    let (ok, _) = h.admit(0, mk_req(0, "submit side loss", 9));
+    assert!(ok);
+    let (ok, _) = h.admit(1, mk_req(1, "submit side loss b", 9));
+    assert!(ok);
+    h.wall_tick();
+    let (_, dummy) =
+        DeviceDispatcher::channel(DEFAULT_WINDOW, Arc::new(DispatchStats::default()));
+    drop(std::mem::replace(&mut h.dispatcher, dummy));
+    h.wall_tick();
+    assert!(!h.busy());
+    assert_eq!(h.pool.outstanding(), 0, "returned rows must check their caches in");
+    let resps = h.drain_responses();
+    assert_eq!(resps.len(), 2);
+    for r in resps {
+        assert!(
+            r.error.as_deref().unwrap_or_default().contains("dispatcher"),
+            "{:?}",
+            r.error
+        );
+    }
+
+    // reply-side loss: submissions are in flight when the dispatcher
+    // dies — the caches are gone with it, and the pool's outstanding
+    // count must be reconciled (not leaked against the cap)
+    let mut h = SharedHarness::new(2, 1);
+    let (ok, _) = h.admit(0, mk_req(0, "reply side loss", 9));
+    assert!(ok);
+    let (ok, _) = h.admit(1, mk_req(1, "reply side loss b", 9));
+    assert!(ok);
+    for (s, e) in h.scheds.iter_mut().zip(h.engines.iter_mut()) {
+        s.tick_shared_submit(e, &h.pool, &h.stats);
+    }
+    assert_eq!(h.pool.outstanding(), 2);
+    let (_, dummy) =
+        DeviceDispatcher::channel(DEFAULT_WINDOW, Arc::new(DispatchStats::default()));
+    drop(std::mem::replace(&mut h.dispatcher, dummy));
+    for (s, e) in h.scheds.iter_mut().zip(h.engines.iter_mut()) {
+        s.tick_shared_complete(e, &h.pool, &h.stats);
+    }
+    assert!(!h.busy());
+    assert_eq!(h.pool.outstanding(), 0, "lost caches must be forgotten, not leaked");
+    let resps = h.drain_responses();
+    assert_eq!(resps.len(), 2);
+    for r in resps {
+        assert!(r.error.is_some());
+    }
+    // the freed budget is usable again: a fresh admission succeeds
+    let (ok, _) = h.admit(0, mk_req(7, "after the loss", 2));
+    assert!(ok);
+}
+
 // ---- full coordinator (threads + queue + scheduler) ----
 
 struct MockBackend {
@@ -654,10 +1021,30 @@ impl WorkerBackend for MockBackend {
         ctx.ready();
         serve_jobs(worker, &mut engine, &ctx);
         // flush device-call counters exactly like ModelBackend does
+        let mut rows_by_worker = std::collections::BTreeMap::new();
+        if engine.batch_rows > 0 {
+            rows_by_worker.insert(worker, engine.batch_rows);
+        }
         ctx.absorb_runtime_stats(&RuntimeStats {
             forwards: engine.forwards,
             forward_batches: engine.batch_calls,
             batch_rows: engine.batch_rows,
+            rows_by_worker,
+            ..Default::default()
+        });
+    }
+
+    fn run_device(&self, host: DeviceHost) {
+        // shared-runtime device host with the mock executor — the same
+        // wiring ModelBackend::run_device uses around a real Runtime
+        let exec = MockExec::with_delay(self.step_delay);
+        let agg = host.runtime_agg();
+        host.serve(&exec);
+        let widths = exec.widths.lock().unwrap();
+        agg.absorb(&RuntimeStats {
+            forwards: exec.forwards(),
+            forward_batches: widths.len(),
+            batch_rows: widths.iter().sum(),
             ..Default::default()
         });
     }
@@ -676,10 +1063,17 @@ fn test_fuse() -> bool {
     std::env::var("PPD_TEST_FUSE").as_deref() == Ok("1")
 }
 
+/// CI matrix knob: `PPD_TEST_SHARED=1` runs the coordinator e2e tests
+/// under the shared-runtime dispatcher.
+fn test_shared() -> bool {
+    std::env::var("PPD_TEST_SHARED").as_deref() == Ok("1")
+}
+
 #[test]
 fn coordinator_continuous_batching_is_token_exact_end_to_end() {
     let workers = test_workers();
     let fuse = test_fuse();
+    let shared = test_shared();
     let reqs = |n: u64| -> Vec<Request> {
         (0..n).map(|i| mk_req(i, &format!("e2e request {i}"), 4 + (i as usize % 7))).collect()
     };
@@ -691,13 +1085,23 @@ fn coordinator_continuous_batching_is_token_exact_end_to_end() {
     let batching = Coordinator::spawn_with_backend_policy(
         std::sync::Arc::new(MockBackend { step_delay: Duration::ZERO }),
         workers,
-        SchedPolicy { max_inflight: 4, max_queue_age: None, fuse_steps: fuse },
+        SchedPolicy {
+            max_inflight: 4,
+            fuse_steps: fuse,
+            shared_runtime: shared,
+            ..Default::default()
+        },
     )
     .expect("spawn batching");
     let serial = Coordinator::spawn_with_backend_policy(
         std::sync::Arc::new(MockBackend { step_delay: Duration::ZERO }),
         workers,
-        SchedPolicy { max_inflight: 1, max_queue_age: None, fuse_steps: fuse },
+        SchedPolicy {
+            max_inflight: 1,
+            fuse_steps: fuse,
+            shared_runtime: shared,
+            ..Default::default()
+        },
     )
     .expect("spawn serial");
 
@@ -717,11 +1121,82 @@ fn coordinator_continuous_batching_is_token_exact_end_to_end() {
     assert_eq!(stats.admitted_total(), 24);
     assert!(stats.sched_steps_total() > 0);
     assert!(stats.max_inflight_seqs() <= 4);
-    if fuse {
+    if fuse || shared {
         assert!(stats.fused_batches_total() > 0, "fusion never engaged end to end");
     } else {
         assert_eq!(stats.fused_batches_total(), 0);
     }
+    if shared {
+        assert!(
+            batching.dispatch_stats().batches_total() > 0,
+            "shared runtime never dispatched a fused batch"
+        );
+        assert_eq!(batching.dispatch_stats().queue_depth(), 0);
+    } else {
+        assert_eq!(batching.dispatch_stats().batches_total(), 0);
+    }
+}
+
+#[test]
+fn shared_coordinator_fuses_across_workers_end_to_end() {
+    // the threaded version of the tentpole claim: with 4 workers the
+    // shared-runtime coordinator's device sees strictly fewer calls
+    // than the per-worker-fused topology for the same workload, with
+    // batches that demonstrably span workers — token-exactly
+    let workers = 4;
+    let reqs = |n: u64| -> Vec<Request> {
+        (0..n).map(|i| mk_req(i, &format!("cross worker {i}"), 10)).collect()
+    };
+    let expect: Vec<Vec<u32>> = reqs(16)
+        .iter()
+        .map(|r| reference_tokens(&r.prompt, r.max_new, r.seed))
+        .collect();
+    let run = |shared: bool| -> (RuntimeStats, u64, u64, f64) {
+        let coord = Coordinator::spawn_with_backend_policy(
+            std::sync::Arc::new(MockBackend { step_delay: Duration::from_millis(1) }),
+            workers,
+            SchedPolicy {
+                max_inflight: 2,
+                fuse_steps: !shared,
+                shared_runtime: shared,
+                ..Default::default()
+            },
+        )
+        .expect("spawn");
+        let resps = coord.run_batch(reqs(16)).expect("batch");
+        for (i, r) in resps.iter().enumerate() {
+            assert!(r.error.is_none(), "{:?}", r.error);
+            assert_eq!(r.tokens, expect[i], "shared={shared} perturbed request {i}");
+        }
+        assert_eq!(coord.caches_outstanding(), 0);
+        let d = coord.dispatch_stats();
+        let (batches, multi, width) =
+            (d.batches_total(), d.multi_worker_batches_total(), d.mean_width());
+        let agg = coord.runtime_agg();
+        drop(coord); // joins workers + device host, which flush counters
+        (agg.snapshot(), batches, multi, width)
+    };
+    let (fused_agg, fused_batches, _, _) = run(false);
+    let (shared_agg, batches, multi, width) = run(true);
+    assert_eq!(fused_batches, 0, "per-worker mode must not touch the dispatcher");
+    assert!(batches > 0, "shared mode never dispatched");
+    assert!(multi > 0, "no device call ever carried rows from >1 worker");
+    assert!(width > 1.0, "mean cross-worker width {width} never exceeded one row");
+    assert!(
+        shared_agg.forwards < fused_agg.forwards,
+        "shared runtime issued {} device calls vs {} per-worker-fused — cross-worker \
+         fusion bought nothing",
+        shared_agg.forwards,
+        fused_agg.forwards
+    );
+    // rows are attributed to the schedulers that planned them
+    let by_worker = &shared_agg.rows_by_worker;
+    assert!(by_worker.len() >= 2, "rows_by_worker {by_worker:?} names <2 workers");
+    assert_eq!(
+        by_worker.values().sum::<usize>(),
+        shared_agg.batch_rows,
+        "per-worker row attribution must cover every fused row"
+    );
 }
 
 #[test]
@@ -737,7 +1212,7 @@ fn fused_coordinator_cuts_device_calls_end_to_end() {
         let coord = Coordinator::spawn_with_backend_policy(
             std::sync::Arc::new(MockBackend { step_delay: Duration::ZERO }),
             1,
-            SchedPolicy { max_inflight: 4, max_queue_age: None, fuse_steps: fuse },
+            SchedPolicy { max_inflight: 4, fuse_steps: fuse, ..Default::default() },
         )
         .expect("spawn");
         let resps = coord.run_batch(reqs(16)).expect("batch");
@@ -765,7 +1240,12 @@ fn coordinator_cancel_flag_aborts_inflight_request() {
     let coord = Coordinator::spawn_with_backend_policy(
         std::sync::Arc::new(MockBackend { step_delay: Duration::from_millis(2) }),
         1,
-        SchedPolicy { max_inflight: 2, max_queue_age: None, fuse_steps: test_fuse() },
+        SchedPolicy {
+            max_inflight: 2,
+            fuse_steps: test_fuse(),
+            shared_runtime: test_shared(),
+            ..Default::default()
+        },
     )
     .expect("spawn");
     let (tx, rx) = mpsc::channel();
