@@ -1,0 +1,59 @@
+//! Scheduler throughput sweep → `BENCH_sched.json` (the CI bench
+//! trajectory).
+//!
+//! Runs the deterministic mock-backend coordinator (no model artifacts
+//! needed) across the scheduling topologies — serial vs fused vs
+//! shared-runtime dispatch, at 1 and 4 workers — and writes one JSON
+//! report with tokens/s, device calls per token, and mean fused width
+//! per point.  The report is validated before it is written, so a
+//! malformed artifact fails the producing process, not a downstream
+//! consumer.
+//!
+//!     cargo run --release --example bench_sched [out.json]
+
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use ppd::bench::{run_sweep, validate_report, SweepConfig, SweepMode};
+use ppd::util::json::Json;
+
+fn main() -> Result<()> {
+    let out = std::env::args().nth(1).unwrap_or_else(|| "BENCH_sched.json".into());
+    let mut runs = Vec::new();
+    for mode in SweepMode::all() {
+        for workers in [1usize, 4] {
+            let cfg = SweepConfig {
+                mode,
+                workers,
+                max_inflight: 4,
+                requests: 32,
+                max_new: 16,
+                device_latency: Duration::from_micros(200),
+            };
+            let j = run_sweep(&cfg)
+                .with_context(|| format!("sweep {mode:?} workers={workers}"))?;
+            println!(
+                "{:>6} workers={} : {:>9.0} tok/s, {:.3} device calls/token, \
+                 mean width {:.2}",
+                mode.name(),
+                workers,
+                j.req("tokens_per_s")?.as_f64()?,
+                j.req("device_calls_per_token")?.as_f64()?,
+                j.req("mean_fused_width")?.as_f64()?,
+            );
+            runs.push(j);
+        }
+    }
+    let report = Json::obj(vec![
+        ("bench", Json::Str("sched".into())),
+        ("schema", Json::Num(1.0)),
+        ("runs", Json::Arr(runs)),
+    ]);
+    // refuse to write a malformed trajectory point
+    validate_report(&report).context("bench report failed validation")?;
+    std::fs::write(&out, format!("{report}\n"))
+        .with_context(|| format!("writing {out}"))?;
+    println!("wrote {out}");
+    Ok(())
+}

@@ -14,10 +14,17 @@ Outputs per model, under ``artifacts/<model>/``:
   weights.json       ordered (name, shape, offset_f32, len_f32) manifest
   weights.bin        little-endian f32 flat dump, same order
   fwd_n<k>.hlo.txt   forward graph for each input-length bucket k
+  fwd_n<k>_s<kv>.hlo.txt  short-KV-context variant of the bucket (the
+                     rust runtime picks the smallest context covering
+                     the referenced slots, shrinking the cache upload)
   fwd_b<b>_n<k>.hlo.txt  batched forward: b sequences x k tree tokens
                      (vmap of the single-sequence graph; the rust
                      coordinator's --fuse-steps path runs one of these
                      per scheduler tick instead of b separate forwards)
+  fwd_b<b>_n<k>_s<kv>.hlo.txt  short-KV variant of the batched graph —
+                     under --shared-runtime the fused tick uploads a
+                     stacked [b, 2L, kv, d] cache union, so shrinking
+                     kv cuts the dominant transfer by the union width
   medusa.hlo.txt     (if heads trained) hidden -> [K, V] head logits
 
 Usage:  python -m compile.aot [--models ppd-m,...] [--out ../artifacts]
@@ -41,7 +48,10 @@ from .model import (MODELS, ModelConfig, VOCAB, forward_infer, init_params,
 BUCKETS = [1, 2, 4, 8, 16, 32, 64, 128, 256]
 # Short-KV-context variants (perf pass: KV-length bucketing — the rust
 # runtime picks the smallest context that covers the referenced slots,
-# halving cache upload + attention compute for short contexts).
+# halving cache upload + attention compute for short contexts).  The
+# same list gates the batched graphs: fwd_b<b>_n<k>_s<kv> is lowered
+# for every (b, k) pair that gets a full-context batched graph, so the
+# fused/shared dispatch path can shrink the stacked cache-union upload.
 KV_VARIANTS = [256]
 KV_VARIANT_MAX_N = 64
 # Batched step-execution buckets (fused scheduling): one graph per
@@ -200,7 +210,10 @@ def export_model(model: str, art: str, buckets=None, use_pallas=True) -> None:
                 with open(path, "w") as f:
                     f.write(text)
                 print(f"[aot] {model}: fwd_n{n}_s{kv} -> {len(text)} chars")
-        # batched step-execution variants (b=1 is the graph above)
+        # batched step-execution variants (b=1 is the graph above),
+        # each with the same short-KV ladder as the single-sequence
+        # bucket so the fused/shared dispatch can shrink the stacked
+        # cache-union upload
         for b in BATCH_BUCKETS:
             if b > 1 and n <= BATCH_MAX_N:
                 path = os.path.join(out, f"fwd_b{b}_n{n}.hlo.txt")
@@ -208,6 +221,15 @@ def export_model(model: str, art: str, buckets=None, use_pallas=True) -> None:
                 with open(path, "w") as f:
                     f.write(text)
                 print(f"[aot] {model}: fwd_b{b}_n{n} -> {len(text)} chars")
+                for kv in KV_VARIANTS:
+                    if kv < cfg.max_ctx and n <= KV_VARIANT_MAX_N:
+                        path = os.path.join(out, f"fwd_b{b}_n{n}_s{kv}.hlo.txt")
+                        text = lower_fwd_batch(cfg, b, n, use_pallas=use_pallas,
+                                               max_ctx=kv)
+                        with open(path, "w") as f:
+                            f.write(text)
+                        print(f"[aot] {model}: fwd_b{b}_n{n}_s{kv} -> "
+                              f"{len(text)} chars")
 
     medusa = load_trained(f"{model}-medusa", art)
     has_medusa = medusa is not None
@@ -225,6 +247,7 @@ def export_model(model: str, art: str, buckets=None, use_pallas=True) -> None:
         "d_mlp": cfg.d_mlp, "max_ctx": cfg.max_ctx, "n_prompt": cfg.n_prompt,
         "n_ept": cfg.n_ept, "rope_theta": cfg.rope_theta,
         "buckets": buckets, "batch_buckets": BATCH_BUCKETS,
+        "kv_buckets": [kv for kv in KV_VARIANTS if kv < cfg.max_ctx],
         "trained": trained, "medusa": has_medusa,
         "param_count": param_count(cfg),
         "prompt_param_count": prompt_param_count(cfg),
@@ -254,10 +277,13 @@ def main() -> None:
 
     # v2: batched step-execution graphs (fwd_b<b>_n<k>) + batch_buckets
     # in per-model configs; the rust loader treats their absence as v1
-    # and falls back to per-row forwards
+    # and falls back to per-row forwards.  kv_buckets lists the
+    # short-KV contexts both the single-sequence and batched graphs are
+    # additionally lowered at (per-model configs filter to < max_ctx).
     manifest = {"models": models,
                 "buckets": buckets or BUCKETS,
                 "batch_buckets": BATCH_BUCKETS,
+                "kv_buckets": KV_VARIANTS,
                 "format": "hlo-text+f32-weights-v2"}
     with open(os.path.join(args.out, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1)

@@ -14,7 +14,7 @@ import numpy as np
 import pytest
 from jax._src.lib import xla_client as xc
 
-from compile.aot import (BATCH_BUCKETS, export_model, lower_fwd,
+from compile.aot import (BATCH_BUCKETS, KV_VARIANTS, export_model, lower_fwd,
                          lower_fwd_batch, lower_medusa, write_weights)
 from compile.model import MODELS, init_params, weight_names, weight_shapes
 
@@ -32,12 +32,18 @@ def test_export_writes_all_files(exported):
               "fwd_n1.hlo.txt", "fwd_n4.hlo.txt"):
         assert os.path.exists(os.path.join(d, f)), f
     # batched step-execution graphs: every batch bucket > 1 for every
-    # decode-sized tree-len bucket
+    # decode-sized tree-len bucket, plus their short-KV variants (the
+    # fused dispatch path shrinks the stacked cache-union upload)
+    cfg = MODELS["ppd-d"]
     for b in BATCH_BUCKETS:
         if b > 1:
             for n in (1, 4):
                 f = f"fwd_b{b}_n{n}.hlo.txt"
                 assert os.path.exists(os.path.join(d, f)), f
+                for kv in KV_VARIANTS:
+                    if kv < cfg.max_ctx:
+                        f = f"fwd_b{b}_n{n}_s{kv}.hlo.txt"
+                        assert os.path.exists(os.path.join(d, f)), f
 
 
 def test_weights_bin_matches_manifest(exported):
@@ -73,11 +79,13 @@ def test_hlo_text_parses_and_has_right_param_count(exported):
 def test_config_json_fields(exported):
     cfg = json.load(open(os.path.join(exported, "ppd-d", "config.json")))
     for field in ("vocab", "d_model", "n_layers", "n_heads", "max_ctx",
-                  "n_prompt", "buckets", "batch_buckets", "param_count",
-                  "prompt_param_count", "rope_theta"):
+                  "n_prompt", "buckets", "batch_buckets", "kv_buckets",
+                  "param_count", "prompt_param_count", "rope_theta"):
         assert field in cfg
     assert cfg["buckets"] == [1, 4]
     assert cfg["batch_buckets"] == BATCH_BUCKETS
+    assert cfg["kv_buckets"] == [kv for kv in KV_VARIANTS
+                                 if kv < cfg["max_ctx"]]
 
 
 def test_lowered_hlo_executes_via_xla_client():
@@ -127,6 +135,28 @@ def test_batched_hlo_shapes_and_param_count(exported):
     s, dm = cfg.max_ctx, cfg.d_model
     assert f"f32[2,{2 * cfg.n_layers},{s},{dm}]" in text  # caches
     # batched logits output
+    assert "f32[2,4,128]" in text
+
+
+def test_batched_short_kv_hlo_shapes(exported):
+    """The batched short-KV variant keeps the parameter contract but
+    carries kv-length bias/cache inputs — the rust collator truncates
+    the stacked snapshots to exactly these shapes before upload."""
+    d = os.path.join(exported, "ppd-d")
+    cfg = MODELS["ppd-d"]
+    kv = KV_VARIANTS[0]
+    assert kv < cfg.max_ctx, "fixture model must have a short-KV ladder"
+    text = open(os.path.join(d, f"fwd_b2_n4_s{kv}.hlo.txt")).read()
+    assert "ENTRY" in text
+    n_params = 5 + len(weight_names(cfg))
+    for k in range(n_params):
+        assert f"parameter({k})" in text, k
+    assert "s32[2,4]" in text                              # tokens/pos/slots
+    assert f"f32[2,4,{kv}]" in text                        # truncated bias
+    assert f"f32[2,{2 * cfg.n_layers},{kv},{cfg.d_model}]" in text  # caches
+    # full-context shapes must NOT appear in the data inputs
+    assert f"f32[2,4,{cfg.max_ctx}]" not in text
+    # batched logits output is unchanged
     assert "f32[2,4,128]" in text
 
 

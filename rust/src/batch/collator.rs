@@ -6,14 +6,29 @@
 //! pad *columns* (a real row shorter than the tree-length bucket) and
 //! pad *rows* (batch slots beyond the real sequences) both mask their
 //! bias fully and route their KV writes to the reserved trash slot
-//! `max_ctx - 1`, which generation never commits (the kv-cache manager
-//! caps usable context at `max_ctx - RESERVED_SLOTS`).  Each real row
-//! carries its own cache snapshot — the batched graph is a vmap of the
-//! single-sequence graph, so row `i` attends only over cache plane `i`.
+//! `kv - 1`, which generation never commits (the kv-cache manager caps
+//! usable context at `max_ctx - RESERVED_SLOTS`, and the kv bucket
+//! selector only shrinks to contexts whose trash row clears every
+//! referenced slot).  Each real row carries its own cache snapshot —
+//! the batched graph is a vmap of the single-sequence graph, so row `i`
+//! attends only over cache plane `i`.
+//!
+//! ## KV-length truncation
+//!
+//! `kv` is the *device* context length (the `_s{kv}` graph variant the
+//! caller selected); `max_ctx` is the plans'/caches' full host context.
+//! When `kv < max_ctx` the collator truncates every bias row and every
+//! cache plane to the first `kv` slots — under `--shared-runtime` the
+//! stacked `[batch, 2L, kv, d]` cache union is the dominant transfer,
+//! so this is where the upload actually shrinks.  Rows above `kv` are
+//! never referenced (the selector guarantees `kv > union max slot + 1`)
+//! and bias columns beyond the committed+scratch region are masked, so
+//! truncation is value-exact; `collate` rejects any slot the selected
+//! bucket does not cover.
 //!
 //! `collate` → device → `split` is a per-row identity on the real
 //! (unpadded) region; `rust/tests/properties.rs` proves the round trip
-//! for random tree shapes and batch sizes.
+//! for random tree shapes, batch sizes, and kv truncations.
 
 use anyhow::{bail, Result};
 
@@ -30,7 +45,11 @@ pub struct CollatedBatch {
     pub batch: usize,
     /// padded tree length (the `n` of the bucket)
     pub n: usize,
+    /// the plans'/caches' full host context length
     pub max_ctx: usize,
+    /// the *device* context length (`kv <= max_ctx`): bias and cache
+    /// are truncated to this many slots (KV-length bucketing)
+    pub kv: usize,
     /// KV planes (2 × layers)
     pub planes: usize,
     pub d: usize,
@@ -40,16 +59,19 @@ pub struct CollatedBatch {
     pub tokens: Vec<i32>,
     /// `[batch, n]`
     pub pos: Vec<i32>,
-    /// `[batch, n]` — pad entries point at the trash slot
+    /// `[batch, n]` — pad entries point at the trash slot `kv - 1`
     pub slots: Vec<i32>,
-    /// `[batch, n, max_ctx]` — pad entries fully masked
+    /// `[batch, n, kv]` — pad entries fully masked
     pub bias: Vec<f32>,
-    /// `[batch, planes, max_ctx, d]` stacked per-row cache snapshots
+    /// `[batch, planes, kv, d]` stacked per-row cache snapshots,
+    /// truncated to the selected kv bucket
     pub cache: Vec<f32>,
 }
 
-/// Pack `items` into the padded `[batch, n]` layout.  `batch >= items.len()`
-/// and `n >= max(plan lens)` must hold (the caller picked the buckets).
+/// Pack `items` into the padded `[batch, n]` layout, truncating bias
+/// and cache to the `kv` device context.  `batch >= items.len()`,
+/// `n >= max(plan lens)` and `kv <= max_ctx` covering every referenced
+/// slot must hold (the caller picked the buckets).
 pub fn collate(
     items: &[BatchItem<'_>],
     batch: usize,
@@ -57,6 +79,7 @@ pub fn collate(
     planes: usize,
     max_ctx: usize,
     d: usize,
+    kv: usize,
 ) -> Result<CollatedBatch> {
     let k = items.len();
     if k == 0 {
@@ -65,13 +88,16 @@ pub fn collate(
     if k > batch {
         bail!("collate: {k} plans exceed batch bucket {batch}");
     }
-    let trash = (max_ctx - 1) as i32;
+    if kv == 0 || kv > max_ctx {
+        bail!("collate: kv bucket {kv} outside (0, {max_ctx}]");
+    }
+    let trash = (kv - 1) as i32;
     let mut row_lens = Vec::with_capacity(k);
     let mut tokens = vec![0i32; batch * n];
     let mut pos = vec![0i32; batch * n];
     let mut slots = vec![trash; batch * n];
-    let mut bias = vec![NEG_INF; batch * n * max_ctx];
-    let mut cache = vec![0.0f32; batch * planes * max_ctx * d];
+    let mut bias = vec![NEG_INF; batch * n * kv];
+    let mut cache = vec![0.0f32; batch * planes * kv * d];
 
     for (i, item) in items.iter().enumerate() {
         item.plan.validate()?;
@@ -101,13 +127,27 @@ pub fn collate(
             pos[base + j] = p as i32;
         }
         for (j, &sl) in item.plan.slots.iter().enumerate() {
+            // the selected bucket must keep its trash row (kv - 1)
+            // above every real write — a violation means the caller's
+            // kv selection ran on a different union than this one
+            if sl as usize + 1 >= kv {
+                bail!("collate: slot {sl} not covered by kv bucket {kv}");
+            }
             slots[base + j] = sl as i32;
         }
-        let bias_base = i * n * max_ctx;
-        bias[bias_base..bias_base + ni * max_ctx].copy_from_slice(&item.plan.bias);
-        let cache_base = i * planes * max_ctx * d;
-        cache[cache_base..cache_base + planes * max_ctx * d]
-            .copy_from_slice(item.cache.as_slice());
+        // bias rows truncated from the max_ctx stride to kv columns
+        for j in 0..ni {
+            let dst = (base + j) * kv;
+            let src = j * max_ctx;
+            bias[dst..dst + kv].copy_from_slice(&item.plan.bias[src..src + kv]);
+        }
+        // cache planes truncated to the first kv slots
+        let full = item.cache.as_slice();
+        for p in 0..planes {
+            let dst = ((i * planes) + p) * kv * d;
+            let src = p * max_ctx * d;
+            cache[dst..dst + kv * d].copy_from_slice(&full[src..src + kv * d]);
+        }
     }
 
     Ok(CollatedBatch {
@@ -115,6 +155,7 @@ pub fn collate(
         batch,
         n,
         max_ctx,
+        kv,
         planes,
         d,
         row_lens,
@@ -194,7 +235,7 @@ mod tests {
             BatchItem { plan: &p1, cache: &c1 },
             BatchItem { plan: &p2, cache: &c2 },
         ];
-        let c = collate(&items, 4, 4, 4, s, 4).unwrap();
+        let c = collate(&items, 4, 4, 4, s, 4, s).unwrap();
         assert_eq!(c.rows, 2);
         assert_eq!(c.row_lens, vec![3, 1]);
         // row 0 real tokens then pad
@@ -215,14 +256,69 @@ mod tests {
         let c1 = HostKvCache::new(2, s, 4);
         let p_long = plan(5, s, 0);
         let items = [BatchItem { plan: &p_long, cache: &c1 }];
-        assert!(collate(&items, 1, 4, 4, s, 4).is_err(), "plan longer than n bucket");
+        assert!(collate(&items, 1, 4, 4, s, 4, s).is_err(), "plan longer than n bucket");
         let p = plan(2, s, 0);
         let many: Vec<BatchItem> =
             (0..3).map(|_| BatchItem { plan: &p, cache: &c1 }).collect();
-        assert!(collate(&many, 2, 4, 4, s, 4).is_err(), "more plans than batch bucket");
+        assert!(collate(&many, 2, 4, 4, s, 4, s).is_err(), "more plans than batch bucket");
         let wrong_cache = HostKvCache::new(3, s, 4);
         let items = [BatchItem { plan: &p, cache: &wrong_cache }];
-        assert!(collate(&items, 1, 4, 4, s, 4).is_err(), "foreign cache shape");
+        assert!(collate(&items, 1, 4, 4, s, 4, s).is_err(), "foreign cache shape");
+        // kv bucket outside (0, max_ctx] or not covering a slot
+        let items = [BatchItem { plan: &p, cache: &c1 }];
+        assert!(collate(&items, 1, 4, 4, s, 4, 0).is_err(), "kv 0");
+        assert!(collate(&items, 1, 4, 4, s, 4, s + 1).is_err(), "kv > max_ctx");
+        // p's slots reach 4; kv=5 puts slot 4 on the trash row
+        assert!(collate(&items, 1, 4, 4, s, 4, 5).is_err(), "slot on the trash row");
+    }
+
+    #[test]
+    fn collate_truncates_bias_and_cache_to_the_kv_bucket() {
+        let s = 16;
+        let kv = 8;
+        let d = 4;
+        let mut c1 = HostKvCache::new(2, s, d);
+        // committed rows carry addressable values so truncation bugs show
+        let rows: Vec<f32> = (0..4 * 2 * d).map(|x| x as f32).collect();
+        c1.scatter(&rows, &[0, 1]).unwrap();
+        c1.commit_contiguous(2).unwrap();
+        let mut p1 = plan(2, s, 100);
+        // addressable bias so column truncation is checkable
+        for (j, b) in p1.bias.iter_mut().enumerate() {
+            *b = j as f32;
+        }
+        let items = [BatchItem { plan: &p1, cache: &c1 }];
+        let c = collate(&items, 2, 2, 4, s, d, kv).unwrap();
+        assert_eq!(c.kv, kv);
+        assert_eq!(c.bias.len(), 2 * 2 * kv);
+        assert_eq!(c.cache.len(), 2 * 4 * kv * d, "upload did not shrink");
+        // bias row j is the first kv columns of the full row
+        for j in 0..2 {
+            assert_eq!(
+                &c.bias[j * kv..(j + 1) * kv],
+                &p1.bias[j * s..j * s + kv],
+                "bias row {j}"
+            );
+        }
+        // every cache plane is the first kv slots of the full plane
+        let full = c1.as_slice();
+        for p in 0..4 {
+            assert_eq!(
+                &c.cache[p * kv * d..(p + 1) * kv * d],
+                &full[p * s * d..p * s * d + kv * d],
+                "plane {p}"
+            );
+        }
+        // pads route to the truncated trash slot, not the full one
+        assert_eq!(c.slots[2], (kv - 1) as i32);
+        // split is agnostic to the truncation: vocab-shaped outputs
+        let vocab = 3;
+        let logits: Vec<f32> = (0..c.batch * c.n * vocab).map(|x| x as f32).collect();
+        let hidden: Vec<f32> = (0..c.batch * c.n * d).map(|x| x as f32).collect();
+        let kv_out: Vec<f32> = (0..c.batch * 4 * c.n * d).map(|x| x as f32).collect();
+        let outs = split(&c, &logits, &hidden, &kv_out, vocab).unwrap();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].n, 2);
     }
 
     #[test]
@@ -232,7 +328,7 @@ mod tests {
         let c1 = HostKvCache::new(2, s, d);
         let p1 = plan(2, s, 10);
         let items = [BatchItem { plan: &p1, cache: &c1 }];
-        let c = collate(&items, 2, 4, planes, s, d).unwrap();
+        let c = collate(&items, 2, 4, planes, s, d, s).unwrap();
         // synthesize a padded device output with addressable values
         let logits: Vec<f32> = (0..c.batch * c.n * vocab).map(|x| x as f32).collect();
         let hidden: Vec<f32> = (0..c.batch * c.n * d).map(|x| 0.5 * x as f32).collect();

@@ -63,7 +63,7 @@ use crate::runtime::{Device, Runtime, StepOutput};
 use crate::util::json::Json;
 use crate::util::panic_message;
 
-use super::{BatchItem, PlanInputs};
+use super::{union_max_slot, BatchItem, BatchMeta, PlanInputs};
 
 /// Default coalescing window: how long the dispatcher waits for the
 /// remaining registered schedulers after a round's first submission.
@@ -136,6 +136,18 @@ pub trait DeviceExecutor {
     /// execution when a covering `fwd_b{B}_n{N}` bucket exists.
     fn exec_forward_batch(&self, items: &[BatchItem<'_>]) -> Result<Vec<StepOutput>>;
 
+    /// [`DeviceExecutor::exec_forward_batch`] plus execution metadata
+    /// (the KV context the union ran at).  The dispatcher calls this
+    /// variant so kv-bucket selection lands in the live
+    /// `ppd_dispatch_kv_bucket` counters; executors without KV
+    /// bucketing inherit the default empty meta.
+    fn exec_forward_batch_meta(
+        &self,
+        items: &[BatchItem<'_>],
+    ) -> Result<(Vec<StepOutput>, BatchMeta)> {
+        Ok((self.exec_forward_batch(items)?, BatchMeta::default()))
+    }
+
     fn exec_medusa_heads(&self, _hidden: &[f32]) -> Result<Vec<Vec<f32>>> {
         Err(anyhow!("device executor has no medusa heads"))
     }
@@ -155,6 +167,13 @@ impl DeviceExecutor for Runtime {
 
     fn exec_forward_batch(&self, items: &[BatchItem<'_>]) -> Result<Vec<StepOutput>> {
         Runtime::forward_batch(self, items)
+    }
+
+    fn exec_forward_batch_meta(
+        &self,
+        items: &[BatchItem<'_>],
+    ) -> Result<(Vec<StepOutput>, BatchMeta)> {
+        Runtime::forward_batch_meta(self, items)
     }
 
     fn exec_medusa_heads(&self, hidden: &[f32]) -> Result<Vec<Vec<f32>>> {
@@ -187,6 +206,13 @@ pub struct DispatchStats {
     width_hist: FusedHist,
     /// fused rows attributed to their submitting worker
     rows_by_worker: Mutex<BTreeMap<usize, u64>>,
+    /// fused dispatches per selected KV context (`ppd_dispatch_kv_bucket`):
+    /// how often the union fit a short `_s{kv}` graph vs full context —
+    /// the live view of the cache-upload win
+    kv_hist: Mutex<BTreeMap<usize, u64>>,
+    /// highest KV slot any union ever referenced (computed across
+    /// workers before collation; bounds which kv buckets can engage)
+    max_union_slot: AtomicU64,
 }
 
 impl DispatchStats {
@@ -227,6 +253,16 @@ impl DispatchStats {
         self.solo_forwards.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record the KV context one fused dispatch executed at.
+    fn record_kv(&self, kv: usize) {
+        *self.kv_hist.lock().unwrap().entry(kv).or_insert(0) += 1;
+    }
+
+    /// Record the union's max occupied slot (computed before collation).
+    fn record_union_slot(&self, max_slot: usize) {
+        self.max_union_slot.fetch_max(max_slot as u64, Ordering::Relaxed);
+    }
+
     pub fn batches_total(&self) -> u64 {
         self.batches.load(Ordering::Relaxed)
     }
@@ -264,6 +300,16 @@ impl DispatchStats {
         self.rows_by_worker.lock().unwrap().clone()
     }
 
+    /// `(kv_context, count)` pairs: fused dispatches per executed KV
+    /// bucket (empty until a batched executable reports its context).
+    pub fn kv_hist(&self) -> BTreeMap<usize, u64> {
+        self.kv_hist.lock().unwrap().clone()
+    }
+
+    pub fn max_union_slot(&self) -> u64 {
+        self.max_union_slot.load(Ordering::Relaxed)
+    }
+
     /// Mean rows per cross-worker device dispatch (0 when none ran).
     pub fn mean_width(&self) -> f64 {
         let b = self.batches_total();
@@ -292,9 +338,13 @@ impl DispatchStats {
         push("solo_forwards_total", self.solo_forwards_total());
         push("queue_depth", self.queue_depth());
         push("max_queue_depth", self.max_queue_depth());
+        push("max_union_slot", self.max_union_slot());
         for (w, c) in self.width_hist() {
             let label = fused_slot_label(w);
             out.push_str(&format!("ppd_dispatch_width_total{{width=\"{label}\"}} {c}\n"));
+        }
+        for (kv, c) in self.kv_hist() {
+            out.push_str(&format!("ppd_dispatch_kv_bucket_total{{kv=\"{kv}\"}} {c}\n"));
         }
         for (w, r) in self.rows_by_worker() {
             out.push_str(&format!("ppd_dispatch_rows_by_worker{{worker=\"{w}\"}} {r}\n"));
@@ -555,12 +605,21 @@ impl DeviceDispatcher {
                     s.rows.iter().map(|r| BatchItem { plan: &r.plan, cache: &r.cache })
                 })
                 .collect();
-            catch_unwind(AssertUnwindSafe(|| exec.exec_forward_batch(&items)))
+            // the union max-slot is a cross-WORKER property: computed
+            // here, over every rider, before the executor collates —
+            // it is what the kv-bucket selection inside the executor
+            // keys off, and what bounds how small the stacked cache
+            // upload can get this tick
+            self.stats.record_union_slot(union_max_slot(&items));
+            catch_unwind(AssertUnwindSafe(|| exec.exec_forward_batch_meta(&items)))
         };
         let share = t0.elapsed().as_secs_f64() / total as f64;
 
         match result {
-            Ok(Ok(mut outs)) if outs.len() == total => {
+            Ok(Ok((mut outs, meta))) if outs.len() == total => {
+                if let Some(kv) = meta.kv {
+                    self.stats.record_kv(kv);
+                }
                 for s in subs {
                     let TickSub { rows, reply, .. } = s;
                     let mine: Vec<StepOutput> = outs.drain(..rows.len()).collect();
@@ -573,7 +632,7 @@ impl DeviceDispatcher {
             }
             other => {
                 let msg = match other {
-                    Ok(Ok(outs)) => format!(
+                    Ok(Ok((outs, _))) => format!(
                         "device dispatcher: executor returned {} outputs for {} rows",
                         outs.len(),
                         total

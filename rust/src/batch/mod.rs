@@ -102,6 +102,71 @@ pub struct BatchItem<'a> {
     pub cache: &'a HostKvCache,
 }
 
+/// How a fused batch actually executed, for observability (the
+/// dispatcher folds this into `ppd_dispatch_kv_bucket` counts).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct BatchMeta {
+    /// KV context the batched executable ran at: `Some(kv)` when a
+    /// `fwd_b{B}_n{N}[_s{kv}]` graph executed the union (full context
+    /// reports `Some(max_ctx)`); `None` when the batch fell back to
+    /// per-row forwards, which pick their own per-row contexts.
+    pub kv: Option<usize>,
+}
+
+/// Highest KV slot any plan in the union references — the quantity
+/// KV-length bucketing covers.  Under `--shared-runtime` the union
+/// spans workers, so this is computed over the whole cross-worker batch
+/// *before* collation: one long rider forces the full context for the
+/// tick, all-short riders shrink the stacked cache upload for everyone.
+pub fn union_max_slot(items: &[BatchItem<'_>]) -> usize {
+    items
+        .iter()
+        .flat_map(|it| it.plan.slots.iter().copied())
+        .max()
+        .unwrap_or(0) as usize
+}
+
+/// Smallest compiled KV context covering `max_slot`: the bucket must
+/// keep its reserved trash row (`kv - 1`) above every referenced slot,
+/// hence the strict `kv > max_slot + 1`.  `available` reports whether a
+/// variant at that context length actually exists (graph on disk /
+/// executable loaded); selection falls back to `full_ctx` when nothing
+/// shorter covers, and `disabled` (the `PPD_DISABLE_KV_BUCKETS` escape
+/// hatch) forces the fallback unconditionally.
+pub fn select_kv_bucket(
+    kv_buckets: &[usize],
+    full_ctx: usize,
+    max_slot: usize,
+    disabled: bool,
+    available: impl Fn(usize) -> bool,
+) -> usize {
+    if disabled {
+        return full_ctx;
+    }
+    kv_buckets
+        .iter()
+        .copied()
+        .filter(|&kv| kv < full_ctx)
+        .find(|&kv| kv > max_slot + 1 && available(kv))
+        .unwrap_or(full_ctx)
+}
+
+/// Smallest batch bucket that fits `rows` sequences and has a graph for
+/// the `n_bucket` tree length (`available(b, n_bucket)`); `None` sends
+/// the caller to the per-row fallback.
+pub fn select_batch_bucket(
+    batch_buckets: &[usize],
+    rows: usize,
+    n_bucket: usize,
+    available: impl Fn(usize, usize) -> bool,
+) -> Option<usize> {
+    batch_buckets
+        .iter()
+        .copied()
+        .filter(|&b| b >= rows)
+        .find(|&b| available(b, n_bucket))
+}
+
 /// One sequence's slice of a fused forward's result, handed to
 /// `apply_step` together with the plan that produced it.
 pub struct StepResult<'a> {
@@ -167,5 +232,85 @@ pub fn step_via_plan<E: BatchStepEngine + ?Sized>(
             seq.res.decode_s += t.elapsed().as_secs_f64();
             engine.apply_step(seq, &StepResult { plan: &plan, out: &out }, cache)
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(slots: Vec<u32>, s: usize) -> PlanInputs {
+        let n = slots.len();
+        PlanInputs {
+            tokens: vec![1; n],
+            pos: (0..n as u32).collect(),
+            slots,
+            bias: vec![0.0; n * s],
+            max_ctx: s,
+        }
+    }
+
+    #[test]
+    fn union_max_slot_spans_every_item() {
+        let s = 64;
+        let p1 = plan(vec![3, 9], s);
+        let p2 = plan(vec![40, 2], s);
+        let c1 = HostKvCache::new(2, s, 4);
+        let c2 = HostKvCache::new(2, s, 4);
+        let items = [
+            BatchItem { plan: &p1, cache: &c1 },
+            BatchItem { plan: &p2, cache: &c2 },
+        ];
+        assert_eq!(union_max_slot(&items), 40);
+        assert_eq!(union_max_slot(&[]), 0);
+    }
+
+    #[test]
+    fn select_kv_picks_smallest_cover() {
+        let buckets = [64, 128, 256];
+        // slot 30: 64 > 31 covers, and it is the smallest
+        assert_eq!(select_kv_bucket(&buckets, 512, 30, false, |_| true), 64);
+        // slot 63: 64 > 64 is false (the trash row must stay clear), so 128
+        assert_eq!(select_kv_bucket(&buckets, 512, 63, false, |_| true), 128);
+        // slot 62 is the largest slot 64 still covers
+        assert_eq!(select_kv_bucket(&buckets, 512, 62, false, |_| true), 64);
+    }
+
+    #[test]
+    fn select_kv_falls_back_to_full_ctx() {
+        let buckets = [64, 128, 256];
+        // max slot beyond every variant: full context
+        assert_eq!(select_kv_bucket(&buckets, 512, 400, false, |_| true), 512);
+        // a bucket >= full_ctx in the list is never "short": full context
+        assert_eq!(select_kv_bucket(&[512], 512, 4, false, |_| true), 512);
+        // nothing lowered at all: full context
+        assert_eq!(select_kv_bucket(&[], 512, 4, false, |_| true), 512);
+    }
+
+    #[test]
+    fn select_kv_respects_disable_and_availability() {
+        let buckets = [64, 128, 256];
+        // PPD_DISABLE_KV_BUCKETS forces full context even when covered
+        assert_eq!(select_kv_bucket(&buckets, 512, 10, true, |_| true), 512);
+        // a covering bucket whose graph is missing is skipped for the
+        // next size up (e.g. the batched variant was never lowered)
+        assert_eq!(
+            select_kv_bucket(&buckets, 512, 10, false, |kv| kv >= 128),
+            128
+        );
+        assert_eq!(select_kv_bucket(&buckets, 512, 10, false, |_| false), 512);
+    }
+
+    #[test]
+    fn select_batch_picks_smallest_available_cover() {
+        let bb = [1usize, 2, 4, 8];
+        assert_eq!(select_batch_bucket(&bb, 3, 16, |_, _| true), Some(4));
+        // exact fit wins over the next size up
+        assert_eq!(select_batch_bucket(&bb, 4, 16, |_, _| true), Some(4));
+        // missing graph for the small bucket: next cover is taken
+        assert_eq!(select_batch_bucket(&bb, 3, 16, |b, _| b >= 8), Some(8));
+        // nothing fits: per-row fallback
+        assert_eq!(select_batch_bucket(&bb, 9, 16, |_, _| true), None);
+        assert_eq!(select_batch_bucket(&bb, 2, 16, |_, _| false), None);
     }
 }

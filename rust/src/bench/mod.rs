@@ -1,0 +1,527 @@
+//! Deterministic scheduler throughput sweep — the CI `bench-smoke`
+//! trajectory (`BENCH_sched.json`).
+//!
+//! The serving stack's perf claims (fused stepping cuts device calls,
+//! the shared runtime fuses across workers) were only ever asserted as
+//! *inequalities* in tests; nothing recorded the actual numbers, so a
+//! regression that kept the inequality true but halved the win was
+//! invisible.  This module runs the full coordinator (queue →
+//! schedulers → pool → dispatcher) over a deterministic mock engine
+//! with a fixed per-device-call latency, so the resulting tokens/s and
+//! device-calls-per-token are a pure function of the *scheduling*
+//! machinery — comparable run over run, machine over machine, without
+//! model artifacts.
+//!
+//! The mock models the one cost that matters to the scheduler: each
+//! device call (fused or not) costs `device_latency` wallclock.  Serial
+//! stepping pays it per sequence per tick; fused stepping pays it once
+//! per worker tick; the shared runtime pays it once per *wall* tick.
+//! The sweep surfaces exactly that ladder.
+//!
+//! Used by `examples/bench_sched.rs`, which writes the JSON artifact CI
+//! uploads on every run.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::batch::dispatch::DeviceExecutor;
+use crate::batch::{BatchItem, BatchStepEngine, PlanInputs, StepPlan, StepResult};
+use crate::coordinator::{
+    serve_jobs, Coordinator, DeviceHost, Request, SchedPolicy, WorkerBackend, WorkerCtx,
+};
+use crate::decoding::{DecodeEngine, FinishReason, SeqState, StepOutcome};
+use crate::kvcache::HostKvCache;
+use crate::metrics::ServeReport;
+use crate::runtime::{RuntimeStats, StepOutput};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::workload;
+
+/// Cache shape the bench engine generates against (tiny: the bench
+/// measures scheduling, not transfers).
+const SHAPE: (usize, usize, usize) = (2, 64, 4);
+
+/// Scheduler topology a sweep point runs under.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SweepMode {
+    /// one device call per sequence per tick (PR 2 behavior)
+    Serial,
+    /// `--fuse-steps`: one device call per worker tick
+    Fused,
+    /// `--shared-runtime`: one device call per wall tick, all workers
+    Shared,
+}
+
+impl SweepMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            SweepMode::Serial => "serial",
+            SweepMode::Fused => "fused",
+            SweepMode::Shared => "shared",
+        }
+    }
+
+    pub fn all() -> [SweepMode; 3] {
+        [SweepMode::Serial, SweepMode::Fused, SweepMode::Shared]
+    }
+}
+
+/// One sweep point.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    pub mode: SweepMode,
+    pub workers: usize,
+    pub max_inflight: usize,
+    pub requests: usize,
+    pub max_new: usize,
+    /// modeled device latency charged per device call
+    pub device_latency: Duration,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            mode: SweepMode::Serial,
+            workers: 1,
+            max_inflight: 4,
+            requests: 24,
+            max_new: 12,
+            device_latency: Duration::from_micros(200),
+        }
+    }
+}
+
+/// Deterministic mock engine: token `i` of a request is
+/// `3 + (sum(prompt) + i + rng_i) % 124` — a pure function of
+/// `(prompt, seed)` that never emits control ids, so bench outputs are
+/// reproducible, order-independent, and always exactly `max_new` tokens
+/// long.  Every device call (unfused step or fused batch) sleeps
+/// `delay` and bumps the call counters the report reads.
+struct BenchEngine {
+    seed: u64,
+    delay: Duration,
+    forwards: usize,
+    batch_calls: usize,
+    batch_rows: usize,
+}
+
+struct BenchSeq {
+    base: u64,
+}
+
+fn bench_tag(base: u64, emitted: usize) -> u32 {
+    ((base + emitted as u64) % 1009) as u32
+}
+
+impl BenchEngine {
+    fn new(delay: Duration) -> Self {
+        BenchEngine { seed: 0, delay, forwards: 0, batch_calls: 0, batch_rows: 0 }
+    }
+
+    fn charge(&self) {
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+    }
+
+    fn advance(&mut self, seq: &mut SeqState, cache: &mut HostKvCache) -> Result<StepOutcome> {
+        let base = seq.inner.downcast_ref::<BenchSeq>().expect("bench seq").base;
+        if cache.remaining() > 0 {
+            cache.commit_contiguous(1)?;
+        }
+        let i = seq.res.tokens.len() as u64;
+        let r = seq.rng.below(97) as u64;
+        // offset past the PAD/BOS/EOS ids so every request emits
+        // exactly max_new tokens (no surprise EOS truncation — the
+        // sweep's token totals must be a constant of the config)
+        seq.res.tokens.push(3 + ((base + i + r) % 124) as u32);
+        seq.res.steps += 1;
+        seq.res.accepted_per_step.push(1);
+        seq.res.input_lens.push(1);
+        if seq.res.tokens.len() >= seq.max_new {
+            return Ok(seq.finish(FinishReason::Budget));
+        }
+        Ok(StepOutcome::Running)
+    }
+}
+
+impl DecodeEngine for BenchEngine {
+    fn name(&self) -> &'static str {
+        "bench-sweep"
+    }
+
+    fn cache_shape(&self) -> (usize, usize, usize) {
+        SHAPE
+    }
+
+    fn begin_request(&mut self, seed: u64) {
+        self.seed = seed;
+    }
+
+    fn request_seed(&self) -> u64 {
+        self.seed
+    }
+
+    fn begin_seq(
+        &mut self,
+        prompt: &[u32],
+        max_new: usize,
+        seed: u64,
+        cache: &mut HostKvCache,
+    ) -> Result<SeqState> {
+        cache.reset();
+        cache.commit_contiguous(prompt.len().min(cache.capacity()))?;
+        let base: u64 = prompt.iter().map(|&t| t as u64).sum();
+        Ok(SeqState::new(max_new, Rng::new(seed), Box::new(BenchSeq { base })))
+    }
+
+    fn step(&mut self, seq: &mut SeqState, cache: &mut HostKvCache) -> Result<StepOutcome> {
+        if let Some(r) = seq.finished {
+            return Ok(StepOutcome::Finished(r));
+        }
+        if seq.res.tokens.len() >= seq.max_new {
+            return Ok(seq.finish(FinishReason::Budget));
+        }
+        self.forwards += 1; // one device call per unfused step
+        self.charge();
+        self.advance(seq, cache)
+    }
+}
+
+impl BatchStepEngine for BenchEngine {
+    fn plan_step(&mut self, seq: &mut SeqState, cache: &HostKvCache) -> Result<StepPlan> {
+        if let Some(r) = seq.finished {
+            return Ok(StepPlan::Finished(StepOutcome::Finished(r)));
+        }
+        if seq.res.tokens.len() >= seq.max_new {
+            return Ok(StepPlan::Finished(seq.finish(FinishReason::Budget)));
+        }
+        let base = seq.inner.downcast_ref::<BenchSeq>().expect("bench seq").base;
+        let tag = bench_tag(base, seq.res.tokens.len());
+        Ok(StepPlan::Forward(PlanInputs {
+            tokens: vec![tag],
+            pos: vec![cache.committed() as u32],
+            slots: vec![cache.committed() as u32],
+            bias: vec![0.0; SHAPE.1],
+            max_ctx: SHAPE.1,
+        }))
+    }
+
+    fn apply_step(
+        &mut self,
+        seq: &mut SeqState,
+        res: &StepResult<'_>,
+        cache: &mut HostKvCache,
+    ) -> Result<StepOutcome> {
+        let base = seq.inner.downcast_ref::<BenchSeq>().expect("bench seq").base;
+        let want = bench_tag(base, seq.res.tokens.len()) as f32;
+        if res.out.logits != [want] {
+            bail!("bench row routed to the wrong sequence");
+        }
+        self.advance(seq, cache)
+    }
+
+    fn forward_batch(&mut self, items: &[BatchItem<'_>]) -> Result<Vec<StepOutput>> {
+        self.forwards += 1; // ONE device call for the whole batch
+        self.batch_calls += 1;
+        self.batch_rows += items.len();
+        self.charge();
+        Ok(items
+            .iter()
+            .map(|it| StepOutput {
+                n: 1,
+                logits: vec![it.plan.tokens[0] as f32],
+                hidden: vec![],
+                new_kv: vec![],
+            })
+            .collect())
+    }
+}
+
+/// Dispatcher-side executor for the shared topology: same echo
+/// contract, same modeled latency, counters flushed on drain.
+struct BenchExec {
+    delay: Duration,
+    forwards: AtomicUsize,
+    batches: AtomicUsize,
+    rows: AtomicUsize,
+}
+
+impl DeviceExecutor for BenchExec {
+    fn exec_forward(
+        &self,
+        tokens: &[u32],
+        _pos: &[u32],
+        _slots: &[u32],
+        _bias: &[f32],
+        _cache: &[f32],
+    ) -> Result<StepOutput> {
+        self.forwards.fetch_add(1, Ordering::Relaxed);
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        Ok(StepOutput { n: 1, logits: vec![tokens[0] as f32], hidden: vec![], new_kv: vec![] })
+    }
+
+    fn exec_forward_batch(&self, items: &[BatchItem<'_>]) -> Result<Vec<StepOutput>> {
+        self.forwards.fetch_add(1, Ordering::Relaxed);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.rows.fetch_add(items.len(), Ordering::Relaxed);
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        Ok(items
+            .iter()
+            .map(|it| StepOutput {
+                n: 1,
+                logits: vec![it.plan.tokens[0] as f32],
+                hidden: vec![],
+                new_kv: vec![],
+            })
+            .collect())
+    }
+}
+
+struct BenchBackend {
+    delay: Duration,
+}
+
+impl WorkerBackend for BenchBackend {
+    fn run(&self, worker: usize, ctx: WorkerCtx) {
+        let mut engine = BenchEngine::new(self.delay);
+        ctx.ready();
+        serve_jobs(worker, &mut engine, &ctx);
+        let mut rows_by_worker = std::collections::BTreeMap::new();
+        if engine.batch_rows > 0 {
+            rows_by_worker.insert(worker, engine.batch_rows);
+        }
+        ctx.absorb_runtime_stats(&RuntimeStats {
+            forwards: engine.forwards,
+            forward_batches: engine.batch_calls,
+            batch_rows: engine.batch_rows,
+            rows_by_worker,
+            ..Default::default()
+        });
+    }
+
+    fn run_device(&self, host: DeviceHost) {
+        let exec = BenchExec {
+            delay: self.delay,
+            forwards: AtomicUsize::new(0),
+            batches: AtomicUsize::new(0),
+            rows: AtomicUsize::new(0),
+        };
+        let agg = host.runtime_agg();
+        host.serve(&exec);
+        agg.absorb(&RuntimeStats {
+            forwards: exec.forwards.load(Ordering::Relaxed),
+            forward_batches: exec.batches.load(Ordering::Relaxed),
+            batch_rows: exec.rows.load(Ordering::Relaxed),
+            ..Default::default()
+        });
+    }
+}
+
+/// Run one sweep point through the full coordinator and report it as a
+/// JSON object (tokens/s, device calls per token, mean fused width).
+pub fn run_sweep(cfg: &SweepConfig) -> Result<Json> {
+    if cfg.requests == 0 || cfg.max_new == 0 {
+        bail!("sweep needs requests > 0 and max_new > 0");
+    }
+    let policy = SchedPolicy {
+        max_inflight: cfg.max_inflight,
+        fuse_steps: cfg.mode == SweepMode::Fused,
+        shared_runtime: cfg.mode == SweepMode::Shared,
+        ..Default::default()
+    };
+    let coord = Coordinator::spawn_with_backend_policy(
+        Arc::new(BenchBackend { delay: cfg.device_latency }),
+        cfg.workers,
+        policy,
+    )?;
+    let reqs: Vec<Request> = (0..cfg.requests)
+        .map(|i| {
+            Request::new(
+                i as u64,
+                workload::encode(&format!("bench request {i}")),
+                cfg.max_new,
+            )
+        })
+        .collect();
+    let t0 = Instant::now();
+    let resps = coord.run_batch(reqs)?;
+    let wall_s = t0.elapsed().as_secs_f64();
+    let mut tokens = 0usize;
+    for r in &resps {
+        if let Some(e) = &r.error {
+            bail!("bench request {} failed: {e}", r.id);
+        }
+        tokens += r.tokens.len();
+    }
+    if tokens == 0 {
+        bail!("bench produced no tokens");
+    }
+    let mut report = ServeReport::new();
+    report.absorb_queue_stats(coord.queue_stats());
+    // mean rows per device dispatch: per-worker fused width locally,
+    // cross-worker union width under the shared runtime
+    let mean_width = match cfg.mode {
+        SweepMode::Shared => coord.dispatch_stats().mean_width(),
+        _ => report.mean_fused_batch(),
+    };
+    let agg = coord.runtime_agg();
+    drop(coord); // workers + device host flush their counters on drain
+    let rt = agg.snapshot();
+    if rt.forwards == 0 {
+        bail!("backend flushed no device calls");
+    }
+    Ok(Json::obj(vec![
+        ("mode", Json::Str(cfg.mode.name().into())),
+        ("workers", Json::Num(cfg.workers as f64)),
+        ("max_inflight", Json::Num(cfg.max_inflight as f64)),
+        ("requests", Json::Num(resps.len() as f64)),
+        ("generated_tokens", Json::Num(tokens as f64)),
+        ("wall_s", Json::Num(wall_s)),
+        ("tokens_per_s", Json::Num(tokens as f64 / wall_s.max(1e-9))),
+        ("device_calls", Json::Num(rt.forwards as f64)),
+        ("device_calls_per_token", Json::Num(rt.forwards as f64 / tokens as f64)),
+        ("mean_fused_width", Json::Num(mean_width)),
+    ]))
+}
+
+/// Keys every sweep-point object must carry, with finite numeric values
+/// — the contract `BENCH_sched.json` consumers (the CI trajectory)
+/// parse against.
+pub const RUN_KEYS: &[&str] = &[
+    "mode",
+    "workers",
+    "max_inflight",
+    "requests",
+    "generated_tokens",
+    "wall_s",
+    "tokens_per_s",
+    "device_calls",
+    "device_calls_per_token",
+    "mean_fused_width",
+];
+
+/// Validate a full bench report (`{"bench": "sched", "schema": 1,
+/// "runs": [...]}`): the example refuses to write malformed output,
+/// and CI re-validates the written artifact.
+pub fn validate_report(j: &Json) -> Result<()> {
+    if j.req("bench")?.as_str()? != "sched" {
+        bail!("bench field must be \"sched\"");
+    }
+    let _ = j.req("schema")?.as_usize()?;
+    let runs = j.req("runs")?.as_arr()?;
+    if runs.is_empty() {
+        bail!("report carries no runs");
+    }
+    for (i, run) in runs.iter().enumerate() {
+        for &key in RUN_KEYS {
+            let v = run
+                .get(key)
+                .ok_or_else(|| anyhow!("run {i} is missing key {key}"))?;
+            if key == "mode" {
+                let m = v.as_str()?;
+                if !SweepMode::all().iter().any(|s| s.name() == m) {
+                    bail!("run {i}: unknown mode {m}");
+                }
+            } else {
+                let x = v.as_f64()?;
+                if !x.is_finite() || x < 0.0 {
+                    bail!("run {i}: {key} is {x}");
+                }
+            }
+        }
+        if run.req("generated_tokens")?.as_f64()? <= 0.0 {
+            bail!("run {i} generated no tokens");
+        }
+        if run.req("device_calls")?.as_f64()? <= 0.0 {
+            bail!("run {i} recorded no device calls");
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick(mode: SweepMode, workers: usize) -> SweepConfig {
+        SweepConfig {
+            mode,
+            workers,
+            requests: 8,
+            max_new: 6,
+            device_latency: Duration::ZERO,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn sweep_reports_are_well_formed_for_every_mode() {
+        let mut runs = Vec::new();
+        for mode in SweepMode::all() {
+            let j = run_sweep(&quick(mode, 2)).expect("sweep");
+            // every required key present and sane
+            for &key in RUN_KEYS {
+                assert!(j.get(key).is_some(), "{mode:?} missing {key}");
+            }
+            assert_eq!(j.req("mode").unwrap().as_str().unwrap(), mode.name());
+            assert_eq!(j.req("generated_tokens").unwrap().as_usize().unwrap(), 8 * 6);
+            assert!(j.req("device_calls").unwrap().as_f64().unwrap() > 0.0);
+            runs.push(j);
+        }
+        let report = Json::obj(vec![
+            ("bench", Json::Str("sched".into())),
+            ("schema", Json::Num(1.0)),
+            ("runs", Json::Arr(runs)),
+        ]);
+        validate_report(&report).expect("assembled report validates");
+    }
+
+    #[test]
+    fn fused_cuts_device_calls_vs_serial() {
+        // the first rung of the ladder the bench records (the shared
+        // rung depends on wall-tick alignment, so only the CI
+        // trajectory tracks it numerically)
+        let calls = |mode| {
+            run_sweep(&quick(mode, 2))
+                .unwrap()
+                .req("device_calls")
+                .unwrap()
+                .as_f64()
+                .unwrap()
+        };
+        let serial = calls(SweepMode::Serial);
+        let fused = calls(SweepMode::Fused);
+        assert!(
+            fused < serial,
+            "fused {fused} must issue fewer device calls than serial {serial}"
+        );
+        // fused widths engaged
+        let j = run_sweep(&quick(SweepMode::Fused, 1)).unwrap();
+        assert!(j.req("mean_fused_width").unwrap().as_f64().unwrap() >= 1.0);
+    }
+
+    #[test]
+    fn validate_report_rejects_malformed_output() {
+        assert!(validate_report(&Json::obj(vec![])).is_err(), "empty object");
+        let no_runs = Json::obj(vec![
+            ("bench", Json::Str("sched".into())),
+            ("schema", Json::Num(1.0)),
+            ("runs", Json::Arr(vec![])),
+        ]);
+        assert!(validate_report(&no_runs).is_err(), "no runs");
+        let bad_run = Json::obj(vec![
+            ("bench", Json::Str("sched".into())),
+            ("schema", Json::Num(1.0)),
+            ("runs", Json::Arr(vec![Json::obj(vec![("mode", Json::Str("serial".into()))])])),
+        ]);
+        assert!(validate_report(&bad_run).is_err(), "missing keys");
+    }
+}

@@ -34,6 +34,12 @@ pub struct ModelConfig {
     /// (`fwd_b{B}_n{N}.hlo.txt`); empty for pre-v2 artifact sets, in
     /// which case `forward_batch` falls back to per-row forwards
     pub batch_buckets: Vec<usize>,
+    /// short-KV context lengths the AOT step also lowered variants at
+    /// (`fwd_n{N}_s{kv}` and `fwd_b{B}_n{N}_s{kv}`).  Older artifact
+    /// sets omit the key; they only ever carried 256-slot variants, so
+    /// that is the probe default — the runtime only loads variants
+    /// whose files actually exist.
+    pub kv_buckets: Vec<usize>,
     pub trained: bool,
     pub medusa: bool,
     pub param_count: usize,
@@ -72,6 +78,20 @@ impl ModelConfig {
                     bb
                 }
                 None => Vec::new(),
+            },
+            kv_buckets: match j.get("kv_buckets") {
+                Some(b) => {
+                    // the covering-bucket selector walks this list in
+                    // order looking for the smallest cover — keep it
+                    // sorted regardless of how the exporter wrote it
+                    let mut kb: Vec<usize> =
+                        b.as_arr()?.iter().map(|x| x.as_usize()).collect::<Result<_>>()?;
+                    kb.sort_unstable();
+                    kb
+                }
+                // pre-kv_buckets artifact sets only ever shipped
+                // 256-slot variants (probed by file existence anyway)
+                None => vec![256],
             },
             trained: j.req("trained")?.as_bool()?,
             medusa: j.req("medusa")?.as_bool()?,
@@ -132,6 +152,12 @@ impl ArtifactPaths {
     /// (the fused step-execution path).
     pub fn fwd_hlo_batch(&self, batch: usize, bucket: usize) -> PathBuf {
         self.model_dir().join(format!("fwd_b{batch}_n{bucket}.hlo.txt"))
+    }
+
+    /// Short-KV-context variant of the batched graph: the fused tick's
+    /// stacked cache-union upload shrinks to `[batch, 2L, kv, d]`.
+    pub fn fwd_hlo_batch_kv(&self, batch: usize, bucket: usize, kv: usize) -> PathBuf {
+        self.model_dir().join(format!("fwd_b{batch}_n{bucket}_s{kv}.hlo.txt"))
     }
 
     pub fn weights_bin(&self) -> PathBuf {
@@ -227,6 +253,8 @@ mod tests {
         assert!(cfg.trainable_fraction() < 0.001);
         // pre-v2 artifact sets carry no batched graphs
         assert!(cfg.batch_buckets.is_empty());
+        // …and pre-kv_buckets sets fall back to the historical 256 probe
+        assert_eq!(cfg.kv_buckets, vec![256]);
     }
 
     #[test]
@@ -247,10 +275,31 @@ mod tests {
     }
 
     #[test]
+    fn kv_buckets_parse_sorted_when_present() {
+        let dir = std::env::temp_dir().join("ppd_cfg_test_kv");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("config.json"),
+            r#"{"name":"t","vocab":128,"d_model":64,"n_layers":2,"n_heads":2,
+                "d_head":32,"d_mlp":176,"max_ctx":512,"n_prompt":3,"n_ept":1,
+                "rope_theta":10000.0,"buckets":[1,8,64],"batch_buckets":[1,2],
+                "kv_buckets":[256,128],"trained":true,"medusa":false,
+                "param_count":1000000,"prompt_param_count":192}"#,
+        )
+        .unwrap();
+        let cfg = ModelConfig::load(&dir).unwrap();
+        assert_eq!(cfg.kv_buckets, vec![128, 256]);
+    }
+
+    #[test]
     fn paths_layout() {
         let p = ArtifactPaths::new("/a", "ppd-m");
         assert_eq!(p.fwd_hlo(8), PathBuf::from("/a/ppd-m/fwd_n8.hlo.txt"));
         assert_eq!(p.fwd_hlo_batch(4, 8), PathBuf::from("/a/ppd-m/fwd_b4_n8.hlo.txt"));
+        assert_eq!(
+            p.fwd_hlo_batch_kv(4, 8, 256),
+            PathBuf::from("/a/ppd-m/fwd_b4_n8_s256.hlo.txt")
+        );
         assert_eq!(p.trace("chat"), PathBuf::from("/a/traces/chat.json"));
         assert!(p.accept_stats(Some("ept4")).to_str().unwrap().contains("ept4"));
     }

@@ -623,6 +623,25 @@ impl Coordinator {
     pub fn metrics_text(&self) -> String {
         let mut text = self.stats.to_prometheus();
         text.push_str(&self.dispatch_stats.to_prometheus());
+        // runtime-side device-call counters, keyed (tree bucket, kv
+        // context) so short-KV variant executions are not aggregated
+        // into the full-ctx bucket line.  Workers flush on drain, so
+        // these go live at end-of-run; the live view of kv selection
+        // is ppd_dispatch_kv_bucket above.
+        let rt = self.rt_agg.snapshot();
+        for (&(n, kv), &(c, _)) in &rt.per_bucket {
+            text.push_str(&format!(
+                "ppd_runtime_bucket_forwards_total{{n=\"{n}\",kv=\"{kv}\"}} {c}\n"
+            ));
+        }
+        for (&kv, &c) in &rt.per_kv {
+            text.push_str(&format!("ppd_runtime_kv_forwards_total{{kv=\"{kv}\"}} {c}\n"));
+        }
+        for (&kv, &c) in &rt.batch_per_kv {
+            text.push_str(&format!(
+                "ppd_runtime_batch_kv_forwards_total{{kv=\"{kv}\"}} {c}\n"
+            ));
+        }
         text.push_str(&format!("ppd_workers {}\n", self.n_workers));
         text.push_str(&format!(
             "ppd_shared_runtime {}\n",

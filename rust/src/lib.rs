@@ -22,8 +22,11 @@
 //!                  capped KV-cache pool, cancellation/queue-aging,
 //!                  out-of-order completion, TCP server
 //! * [`workload`] — trace loading + synthetic workload generation
+//! * [`bench`]    — deterministic mock-backend scheduler sweep (the CI
+//!                  `BENCH_sched.json` throughput trajectory)
 pub mod baselines;
 pub mod batch;
+pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod decoding;

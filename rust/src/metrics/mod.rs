@@ -614,6 +614,13 @@ mod tests {
             forward_batches: 3,
             batch_rows: 9,
             per_batch: [(3, 3)].into_iter().collect(),
+            // (tree bucket, kv context) keys: the full-ctx and short-KV
+            // executions of the same tree bucket stay separate lines
+            per_bucket: [((16, 512), (2, 0.5)), ((16, 256), (8, 0.25))]
+                .into_iter()
+                .collect(),
+            per_kv: [(512usize, 2usize), (256, 8)].into_iter().collect(),
+            batch_per_kv: [(256usize, 3usize)].into_iter().collect(),
             ..Default::default()
         };
         agg.absorb(&a);
@@ -622,6 +629,9 @@ mod tests {
             forward_batches: 1,
             batch_rows: 2,
             per_batch: [(2, 1)].into_iter().collect(),
+            per_bucket: [((16, 256), (1, 0.25))].into_iter().collect(),
+            per_kv: [(256usize, 1usize)].into_iter().collect(),
+            batch_per_kv: [(256usize, 1usize), (512, 2)].into_iter().collect(),
             ..Default::default()
         };
         agg.absorb(&b);
@@ -631,6 +641,14 @@ mod tests {
         assert_eq!(snap.batch_rows, 11);
         assert_eq!(snap.per_batch.get(&3), Some(&3));
         assert!((snap.mean_batch_rows() - 2.75).abs() < 1e-9);
+        // kv-variant usage merges under its own key — it must never be
+        // aggregated into the full-ctx line of the same tree bucket
+        assert_eq!(snap.per_bucket.get(&(16, 512)), Some(&(2, 0.5)));
+        assert_eq!(snap.per_bucket.get(&(16, 256)), Some(&(9, 0.5)));
+        assert_eq!(snap.per_kv.get(&256), Some(&9));
+        assert_eq!(snap.per_kv.get(&512), Some(&2));
+        assert_eq!(snap.batch_per_kv.get(&256), Some(&4));
+        assert_eq!(snap.batch_per_kv.get(&512), Some(&2));
     }
 
     #[test]

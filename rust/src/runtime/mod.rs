@@ -65,7 +65,19 @@ pub struct RuntimeStats {
     pub forward_s: f64,
     pub upload_s: f64,
     pub download_s: f64,
-    pub per_bucket: BTreeMap<usize, (usize, f64)>,
+    /// device calls + time keyed by `(tree_len_bucket, kv_context)`:
+    /// a short-KV variant (`fwd_n{N}_s{kv}` / `fwd_b{B}_n{N}_s{kv}`)
+    /// gets its own line instead of being aggregated into the full-ctx
+    /// bucket, so the scrape shows which contexts actually executed
+    pub per_bucket: BTreeMap<(usize, usize), (usize, f64)>,
+    /// device calls per selected KV context (the kv-bucketing win:
+    /// counts move from the full-ctx key to the short buckets)
+    pub per_kv: BTreeMap<usize, usize>,
+    /// batched (`fwd_b{B}_n{N}[_s{kv}]`) executions per selected KV
+    /// context — split out from `per_kv` so "did the BATCHED short-KV
+    /// graphs engage" is answerable without guessing which single-
+    /// sequence forwards (prefill chunks) contributed which counts
+    pub batch_per_kv: BTreeMap<usize, usize>,
     /// `forward_batch` invocations (fused or fallen back)
     pub forward_batches: usize,
     /// sequences served through `forward_batch`
@@ -91,6 +103,12 @@ impl RuntimeStats {
             let e = self.per_bucket.entry(b).or_insert((0, 0.0));
             e.0 += c;
             e.1 += s;
+        }
+        for (&kv, &c) in &other.per_kv {
+            *self.per_kv.entry(kv).or_insert(0) += c;
+        }
+        for (&kv, &c) in &other.batch_per_kv {
+            *self.batch_per_kv.entry(kv).or_insert(0) += c;
         }
         self.forward_batches += other.forward_batches;
         self.batch_rows += other.batch_rows;
@@ -118,12 +136,14 @@ pub struct Runtime {
     client: PjRtClient,
     executables: BTreeMap<(usize, usize), PjRtLoadedExecutable>,
     /// batched forward graphs present in the artifact set, keyed
-    /// `(batch, tree_len)` (empty on pre-v2 artifacts).  Compiled
+    /// `(batch, tree_len, kv_context)` — full-context graphs under
+    /// `kv = max_ctx`, short-KV variants (`fwd_b{B}_n{N}_s{kv}`) under
+    /// their truncated context (empty on pre-v2 artifacts).  Compiled
     /// **lazily** on first `forward_batch` use: most runtime users
     /// (generate, calibrate, benches, unfused serving) never fuse, and
     /// on a real backend each compile costs seconds of startup.
-    batch_graphs: BTreeMap<(usize, usize), std::path::PathBuf>,
-    batch_executables: RefCell<BTreeMap<(usize, usize), PjRtLoadedExecutable>>,
+    batch_graphs: BTreeMap<(usize, usize, usize), std::path::PathBuf>,
+    batch_executables: RefCell<BTreeMap<(usize, usize, usize), PjRtLoadedExecutable>>,
     /// available KV context lengths, ascending (e.g. [256, 512])
     kv_buckets: Vec<usize>,
     weight_bufs: Vec<PjRtBuffer>,
@@ -159,8 +179,30 @@ fn upload_via_literal() -> bool {
     std::env::var("PPD_UPLOAD_VIA_LITERAL").is_ok()
 }
 
+/// Process-wide override for `PPD_DISABLE_KV_BUCKETS`: 0 = follow the
+/// env var, 1 = force-disable, 2 = force-enable.  Tests A/B the toggle
+/// through [`set_kv_buckets_disabled`] instead of `std::env::set_var` —
+/// mutating the environment while worker threads `getenv` on every
+/// forward is undefined behavior on glibc.
+static KV_DISABLE_OVERRIDE: std::sync::atomic::AtomicU8 = std::sync::atomic::AtomicU8::new(0);
+
+/// Force KV-length bucketing off (`Some(true)`), on (`Some(false)`), or
+/// back under `PPD_DISABLE_KV_BUCKETS` control (`None`).
+pub fn set_kv_buckets_disabled(force: Option<bool>) {
+    let v = match force {
+        None => 0,
+        Some(true) => 1,
+        Some(false) => 2,
+    };
+    KV_DISABLE_OVERRIDE.store(v, std::sync::atomic::Ordering::Relaxed);
+}
+
 fn kv_buckets_disabled() -> bool {
-    std::env::var("PPD_DISABLE_KV_BUCKETS").is_ok()
+    match KV_DISABLE_OVERRIDE.load(std::sync::atomic::Ordering::Relaxed) {
+        1 => true,
+        2 => false,
+        _ => std::env::var("PPD_DISABLE_KV_BUCKETS").is_ok(),
+    }
 }
 
 impl Runtime {
@@ -181,7 +223,7 @@ impl Runtime {
                 .map_err(|e| anyhow!("compiling bucket {b}: {e}"))?;
             executables.insert((b, cfg.max_ctx), exe);
             // optional short-context variants (perf: KV-length bucketing)
-            for &kb in &[256usize] {
+            for &kb in cfg.kv_buckets.iter().filter(|&&kb| kb < cfg.max_ctx) {
                 let p = paths.fwd_hlo_kv(b, kb);
                 if p.exists() {
                     let proto = HloModuleProto::from_text_file(&p)
@@ -199,14 +241,23 @@ impl Runtime {
         kv_buckets.sort_unstable();
 
         // batched forward graphs (fused step execution): record which
-        // (batch, tree_len) combinations the AOT step emitted, but
+        // (batch, tree_len, kv) combinations the AOT step emitted, but
         // defer compilation to first use — cheap stat calls here
         let mut batch_graphs = BTreeMap::new();
         for &b in cfg.batch_buckets.iter().filter(|&&b| b > 1) {
             for &n in &cfg.buckets {
                 let p = paths.fwd_hlo_batch(b, n);
                 if p.exists() {
-                    batch_graphs.insert((b, n), p);
+                    batch_graphs.insert((b, n, cfg.max_ctx), p);
+                    // short-KV variants of the batched graph: the fused
+                    // tick's stacked cache-union upload shrinks to
+                    // [B, 2L, kv, d] when the union fits
+                    for &kb in cfg.kv_buckets.iter().filter(|&&kb| kb < cfg.max_ctx) {
+                        let pk = paths.fwd_hlo_batch_kv(b, n, kb);
+                        if pk.exists() {
+                            batch_graphs.insert((b, n, kb), pk);
+                        }
+                    }
                 }
             }
         }
@@ -319,15 +370,13 @@ impl Runtime {
         // slot — halves the cache upload AND the attention compute for
         // short contexts.
         let max_slot = slots.iter().copied().max().unwrap_or(0) as usize;
-        let s_sel = if kv_buckets_disabled() {
-            s
-        } else {
-            self.kv_buckets
-                .iter()
-                .copied()
-                .find(|&kb| kb > max_slot + 1 && self.executables.contains_key(&(bucket, kb)))
-                .unwrap_or(s)
-        };
+        let s_sel = crate::batch::select_kv_bucket(
+            &self.kv_buckets,
+            s,
+            max_slot,
+            kv_buckets_disabled(),
+            |kb| self.executables.contains_key(&(bucket, kb)),
+        );
         let exe = self
             .executables
             .get(&(bucket, s_sel))
@@ -434,10 +483,10 @@ impl Runtime {
         st.forward_s += exec_s;
         st.upload_s += upload_s;
         st.download_s += download_s;
-        let e = st.per_bucket.entry(bucket).or_insert((0, 0.0));
-        let _ = s_sel;
+        let e = st.per_bucket.entry((bucket, s_sel)).or_insert((0, 0.0));
         e.0 += 1;
         e.1 += exec_s + upload_s + download_s;
+        *st.per_kv.entry(s_sel).or_insert(0) += 1;
         Ok(out)
     }
 
@@ -449,19 +498,32 @@ impl Runtime {
     /// item.
     ///
     /// Dispatch policy: pick the smallest `(batch, tree_len)` bucket
-    /// covering the batch from the AOT'd `fwd_b{B}_n{N}` graphs; when
-    /// the artifact set carries none that fit (pre-v2 artifacts, or an
-    /// oversized batch), fall back to per-row `forward` calls — the
-    /// scheduler stays correct, it just loses the dispatch
-    /// amortization.  Stats record every call either way so the
-    /// fallback is visible in `per_batch` vs `forwards`.
+    /// covering the batch from the AOT'd `fwd_b{B}_n{N}` graphs, then
+    /// the smallest KV context whose `_s{kv}` variant covers the
+    /// union's max occupied slot (shrinking the stacked cache upload —
+    /// the dominant transfer under `--shared-runtime`); when the
+    /// artifact set carries no batched graph that fits (pre-v2
+    /// artifacts, or an oversized batch), fall back to per-row
+    /// `forward` calls — the scheduler stays correct, it just loses
+    /// the dispatch amortization.  Stats record every call either way
+    /// so the fallback is visible in `per_batch` vs `forwards`.
     pub fn forward_batch(
         &self,
         items: &[crate::batch::BatchItem<'_>],
     ) -> Result<Vec<StepOutput>> {
+        self.forward_batch_meta(items).map(|(outs, _)| outs)
+    }
+
+    /// [`Runtime::forward_batch`] plus execution metadata (the selected
+    /// KV bucket) — the device dispatcher records it so the kv win is
+    /// visible live in the `ppd_dispatch_kv_bucket` scrape counters.
+    pub fn forward_batch_meta(
+        &self,
+        items: &[crate::batch::BatchItem<'_>],
+    ) -> Result<(Vec<StepOutput>, crate::batch::BatchMeta)> {
         let k = items.len();
         if k == 0 {
-            return Ok(Vec::new());
+            return Ok((Vec::new(), crate::batch::BatchMeta::default()));
         }
         {
             let mut st = self.stats.borrow_mut();
@@ -472,32 +534,31 @@ impl Runtime {
         if k == 1 {
             // a lone rider gets the plain single-sequence graph: the
             // smallest batched bucket is b=2, which would double the
-            // cache upload (the dominant transfer) for no benefit
+            // cache upload (the dominant transfer) for no benefit —
+            // the single-sequence path runs its own kv bucketing
             let it = &items[0];
-            return Ok(vec![self.forward(
+            let out = self.forward(
                 &it.plan.tokens,
                 &it.plan.pos,
                 &it.plan.slots,
                 &it.plan.bias,
                 it.cache.as_slice(),
-            )?]);
+            )?;
+            return Ok((vec![out], crate::batch::BatchMeta::default()));
         }
         let s = self.cfg.max_ctx;
         let d = self.cfg.d_model;
         let l2 = 2 * self.cfg.n_layers;
         let max_n = items.iter().map(|it| it.plan.len()).max().unwrap_or(0);
         let key = self.cfg.bucket_for(max_n).ok().and_then(|n_bucket| {
-            self.cfg
-                .batch_buckets
-                .iter()
-                .copied()
-                .filter(|&b| b >= k)
-                .find(|&b| self.batch_graphs.contains_key(&(b, n_bucket)))
-                .map(|b| (b, n_bucket))
+            crate::batch::select_batch_bucket(&self.cfg.batch_buckets, k, n_bucket, |b, n| {
+                self.batch_graphs.contains_key(&(b, n, s))
+            })
+            .map(|b| (b, n_bucket))
         });
         let Some((b_bucket, n_bucket)) = key else {
             // serial fallback: no batched graph covers this batch
-            return items
+            let outs = items
                 .iter()
                 .map(|it| {
                     self.forward(
@@ -508,25 +569,45 @@ impl Runtime {
                         it.cache.as_slice(),
                     )
                 })
-                .collect();
+                .collect::<Result<Vec<_>>>()?;
+            return Ok((outs, crate::batch::BatchMeta::default()));
         };
+        // KV-length bucketing over the UNION: the smallest `_s{kv}`
+        // variant covering the highest slot any rider references —
+        // computed across the whole (cross-worker) batch before
+        // collation, so one long rider keeps the full context while
+        // all-short riders shrink every row's share of the upload.
+        // Candidates come from the CONFIG ladder, not the loaded
+        // single-sequence variants: a batched `_s{kv}` graph must stay
+        // selectable even if its single-sequence sibling is missing
+        // (the availability closure does the real per-graph check).
+        let max_slot = crate::batch::union_max_slot(items);
+        let s_sel = crate::batch::select_kv_bucket(
+            &self.cfg.kv_buckets,
+            s,
+            max_slot,
+            kv_buckets_disabled(),
+            |kv| self.batch_graphs.contains_key(&(b_bucket, n_bucket, kv)),
+        );
         // lazy compile: the first fused call for this bucket pays the
         // compile; everyone who never fuses pays nothing at load
         let mut exes = self.batch_executables.borrow_mut();
-        if !exes.contains_key(&(b_bucket, n_bucket)) {
-            let p = &self.batch_graphs[&(b_bucket, n_bucket)];
+        if !exes.contains_key(&(b_bucket, n_bucket, s_sel)) {
+            let p = &self.batch_graphs[&(b_bucket, n_bucket, s_sel)];
             let proto = HloModuleProto::from_text_file(p)
                 .map_err(|e| anyhow!("loading {}: {e}", p.display()))?;
             let exe = self
                 .client
                 .compile(&XlaComputation::from_proto(&proto))
-                .map_err(|e| anyhow!("compiling batch bucket ({b_bucket},{n_bucket}): {e}"))?;
-            exes.insert((b_bucket, n_bucket), exe);
+                .map_err(|e| {
+                    anyhow!("compiling batch bucket ({b_bucket},{n_bucket},{s_sel}): {e}")
+                })?;
+            exes.insert((b_bucket, n_bucket, s_sel), exe);
         }
-        let exe = exes.get(&(b_bucket, n_bucket)).expect("just compiled");
+        let exe = exes.get(&(b_bucket, n_bucket, s_sel)).expect("just compiled");
 
         let t0 = std::time::Instant::now();
-        let c = crate::batch::collator::collate(items, b_bucket, n_bucket, l2, s, d)?;
+        let c = crate::batch::collator::collate(items, b_bucket, n_bucket, l2, s, d, s_sel)?;
         let mut bufs: Vec<PjRtBuffer> = Vec::with_capacity(5);
         bufs.push(
             self.client
@@ -545,12 +626,12 @@ impl Runtime {
         );
         bufs.push(
             self.client
-                .buffer_from_host_buffer(&c.bias, &[b_bucket, n_bucket, s], None)
+                .buffer_from_host_buffer(&c.bias, &[b_bucket, n_bucket, s_sel], None)
                 .map_err(|e| anyhow!("{e}"))?,
         );
         bufs.push(
             self.client
-                .buffer_from_host_buffer(&c.cache, &[b_bucket, l2, s, d], None)
+                .buffer_from_host_buffer(&c.cache, &[b_bucket, l2, s_sel, d], None)
                 .map_err(|e| anyhow!("{e}"))?,
         );
         let upload_s = t0.elapsed().as_secs_f64();
@@ -561,7 +642,7 @@ impl Runtime {
         let t1 = std::time::Instant::now();
         let outs = exe
             .execute_b::<&PjRtBuffer>(&args)
-            .map_err(|e| anyhow!("forward_batch bucket ({b_bucket},{n_bucket}): {e}"))?;
+            .map_err(|e| anyhow!("forward_batch bucket ({b_bucket},{n_bucket},{s_sel}): {e}"))?;
         let result = outs[0][0]
             .to_literal_sync()
             .map_err(|e| anyhow!("fetching batched step output: {e}"))?;
@@ -583,19 +664,31 @@ impl Runtime {
         st.forward_s += exec_s;
         st.upload_s += upload_s;
         st.download_s += download_s;
-        let e = st.per_bucket.entry(n_bucket).or_insert((0, 0.0));
+        let e = st.per_bucket.entry((n_bucket, s_sel)).or_insert((0, 0.0));
         e.0 += 1;
         e.1 += exec_s + upload_s + download_s;
-        Ok(split)
+        *st.per_kv.entry(s_sel).or_insert(0) += 1;
+        *st.batch_per_kv.entry(s_sel).or_insert(0) += 1;
+        Ok((split, crate::batch::BatchMeta { kv: Some(s_sel) }))
     }
 
     /// Batch buckets with at least one batched graph in the artifact
     /// set (compiled lazily on first fused use).
     pub fn batch_buckets(&self) -> Vec<usize> {
-        let mut b: Vec<usize> = self.batch_graphs.keys().map(|&(b, _)| b).collect();
+        let mut b: Vec<usize> = self.batch_graphs.keys().map(|&(b, _, _)| b).collect();
         b.sort_unstable();
         b.dedup();
         b
+    }
+
+    /// KV contexts the batched graphs were additionally lowered at
+    /// (ascending, full context included) — the artifact-gated tests
+    /// use this to assert the `_s{kv}` variants shipped.
+    pub fn batch_kv_buckets(&self) -> Vec<usize> {
+        let mut kv: Vec<usize> = self.batch_graphs.keys().map(|&(_, _, kv)| kv).collect();
+        kv.sort_unstable();
+        kv.dedup();
+        kv
     }
 
     /// Medusa-baseline heads: hidden row -> [K][vocab] logits.

@@ -372,6 +372,90 @@ fn fused_stepping_matches_unfused_on_real_ppd_engine() {
 }
 
 #[test]
+fn batched_short_kv_buckets_match_full_ctx_on_real_ppd_engine() {
+    // the KV-length-bucketing acceptance invariant on the *real*
+    // engine: executing fused ticks on the short-KV batched graphs
+    // (`fwd_b{B}_n{N}_s{kv}`, stacked cache union truncated to the
+    // union's covering bucket) must be token-exact with full-context
+    // batched execution — and the short buckets must demonstrably
+    // execute, so a silently-missing `_s{kv}` artifact can't pass
+    let Some(root) = artifacts_root() else { return };
+    let max_ctx;
+    {
+        let rt = load("ppd-d", &root);
+        max_ctx = rt.cfg.max_ctx;
+        let short: Vec<usize> = rt
+            .batch_kv_buckets()
+            .into_iter()
+            .filter(|&kv| kv < max_ctx)
+            .collect();
+        if short.is_empty() {
+            // CI fails on this marker (did-not-skip guard): the
+            // artifacts job must export the batched _s{kv} graphs
+            eprintln!(
+                "[skip] artifacts missing batched _s{{kv}} graphs — re-run compile.aot"
+            );
+            return;
+        }
+    }
+    let spawn = || {
+        Coordinator::spawn_with_policy(
+            root.clone(),
+            "ppd-d".into(),
+            None,
+            EngineKind::Ppd,
+            greedy_cfg(),
+            1,
+            SchedPolicy { max_inflight: 4, fuse_steps: true, ..Default::default() },
+        )
+        .unwrap()
+    };
+    let mk = || -> Vec<Request> {
+        (0..8)
+            .map(|i| {
+                Request::new(
+                    i,
+                    workload::encode(PROMPTS[i as usize % 3]),
+                    16 + (i as usize % 3) * 4,
+                )
+            })
+            .collect()
+    };
+    // kv-bucketed run (default), then full-context run with bucketing
+    // forced off via the programmatic override (NOT std::env::set_var:
+    // mutating the env while sibling tests' worker threads getenv on
+    // every forward is UB on glibc)
+    let bucketed = spawn();
+    let a = bucketed.run_batch(mk()).unwrap();
+    let agg_b = bucketed.runtime_agg();
+    drop(bucketed);
+    ppd::runtime::set_kv_buckets_disabled(Some(true));
+    let full = spawn();
+    let b = full.run_batch(mk()).unwrap();
+    let agg_f = full.runtime_agg();
+    drop(full);
+    ppd::runtime::set_kv_buckets_disabled(None);
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert!(x.error.is_none(), "{:?}", x.error);
+        assert_eq!(x.tokens, y.tokens, "request {i} perturbed by batched kv bucketing");
+    }
+    let (sb, sf) = (agg_b.snapshot(), agg_f.snapshot());
+    assert!(sb.forward_batches > 0, "fused stepping never engaged");
+    // a short-KV BATCHED bucket actually executed the union…
+    assert!(
+        sb.batch_per_kv.keys().any(|&kv| kv < max_ctx),
+        "batched _s{{kv}} graphs never executed: {:?}",
+        sb.batch_per_kv
+    );
+    // …and the disabled run proves the toggle: full context only
+    assert!(
+        sf.batch_per_kv.keys().all(|&kv| kv == max_ctx),
+        "PPD_DISABLE_KV_BUCKETS leaked short buckets: {:?}",
+        sf.batch_per_kv
+    );
+}
+
+#[test]
 fn shared_runtime_matches_fused_and_serial_on_real_ppd_engine() {
     // the shared-dispatch acceptance invariant on the *real* engine:
     // routing every worker's fused tick through ONE device dispatcher

@@ -12,7 +12,9 @@
 //!    random operation sequences
 //!  * batch collation: ragged plans → pad → split round-trips every
 //!    sequence's logits rows and KV entries for random tree shapes and
-//!    batch sizes
+//!    batch sizes — and KV-length truncation (the `_s{kv}` batched
+//!    variants) preserves every real bias/cache value while leaving
+//!    the per-row splits unchanged
 //!  * verification: greedy walk equals brute-force longest-matching path
 //!  * chains_to_tree: merged tree reproduces every proposed chain
 //!  * JSON: parse∘serialize is the identity on random values
@@ -342,7 +344,7 @@ fn prop_collate_pad_split_roundtrip_preserves_every_sequence() {
         let max_n = plans.iter().map(|p| p.len()).max().unwrap();
         let n_bucket = max_n.next_power_of_two();
         let b_bucket = *batch_buckets.iter().find(|&&b| b >= k).unwrap();
-        let c = collate(&items, b_bucket, n_bucket, planes, s, d)
+        let c = collate(&items, b_bucket, n_bucket, planes, s, d, s)
             .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
 
         // padded layout holds every real value in place
@@ -431,6 +433,66 @@ fn prop_collate_pad_split_roundtrip_preserves_every_sequence() {
                     );
                 }
             }
+        }
+
+        // KV-length truncation: collating the same batch at a short kv
+        // bucket must (a) shrink the device bias/cache layouts, (b)
+        // keep every real value in place, and (c) leave the per-row
+        // splits byte-identical — kv bucketing is a pure transfer
+        // optimization, invisible to the apply phase.
+        let kv = 16usize; // slots reach committed(<8) + n_i(<=6) - 1 <= 12 < kv-1
+        assert!(kv < s);
+        let ck = collate(&items, b_bucket, n_bucket, planes, s, d, kv)
+            .unwrap_or_else(|e| panic!("seed {seed}: kv collate: {e}"));
+        assert_eq!(ck.kv, kv, "seed {seed}");
+        assert_eq!(ck.bias.len(), b_bucket * n_bucket * kv, "seed {seed}");
+        assert_eq!(
+            ck.cache.len(),
+            b_bucket * planes * kv * d,
+            "seed {seed}: cache upload did not shrink"
+        );
+        for (i, plan) in plans.iter().enumerate() {
+            let n_i = plan.len();
+            for j in 0..n_bucket {
+                let idx = i * n_bucket + j;
+                if j < n_i {
+                    // tokens/pos/slots unchanged by truncation
+                    assert_eq!(ck.tokens[idx], c.tokens[idx], "seed {seed}");
+                    assert_eq!(ck.pos[idx], c.pos[idx], "seed {seed}");
+                    assert_eq!(ck.slots[idx], c.slots[idx], "seed {seed}");
+                    // the bias row is the full row's first kv columns
+                    assert_eq!(
+                        &ck.bias[idx * kv..(idx + 1) * kv],
+                        &plan.bias[j * s..j * s + kv],
+                        "seed {seed}: truncated bias row ({i},{j})"
+                    );
+                } else {
+                    // pads route to the TRUNCATED trash slot
+                    assert_eq!(ck.slots[idx], (kv - 1) as i32, "seed {seed}");
+                }
+            }
+            // every cache plane is the full plane's first kv slots
+            let full = caches[i].as_slice();
+            for p in 0..planes {
+                let dst = (i * planes + p) * kv * d;
+                let src = p * s * d;
+                assert_eq!(
+                    &ck.cache[dst..dst + kv * d],
+                    &full[src..src + kv * d],
+                    "seed {seed}: truncated cache plane ({i},{p})"
+                );
+            }
+        }
+        // splitting the same device output through the truncated batch
+        // yields byte-identical per-row results
+        let outs_kv = split(&ck, &logits, &hidden, &new_kv, vocab)
+            .unwrap_or_else(|e| panic!("seed {seed}: kv split: {e}"));
+        assert_eq!(outs_kv.len(), outs.len(), "seed {seed}");
+        for (i, (a, b)) in outs.iter().zip(&outs_kv).enumerate() {
+            assert_eq!(a.n, b.n, "seed {seed}");
+            assert_eq!(a.logits, b.logits, "seed {seed}: kv truncation changed split {i}");
+            assert_eq!(a.hidden, b.hidden, "seed {seed}: kv truncation changed split {i}");
+            assert_eq!(a.new_kv, b.new_kv, "seed {seed}: kv truncation changed split {i}");
         }
     }
 }

@@ -37,6 +37,11 @@
 //!    ONE device call per wall tick with 4 busy workers (vs 4
 //!    per-worker-fused), mid-flight admission, cancellation, and
 //!    dead-dispatcher recovery (errors + pool reconciliation);
+//!  * KV-length bucketing for batched graphs ([`KvExec`] rides the real
+//!    collate/truncate/split pipeline): short-KV-bucketed vs full-ctx
+//!    execution token-exact at workers 1/2/4 × max_inflight 1/2/4,
+//!    with the smallest covering bucket demonstrably selected (via the
+//!    dispatcher's kv histogram) when every rider is short;
 //!  * the full coordinator (threads + queue + scheduler) end to end,
 //!    with the worker count taken from `PPD_TEST_WORKERS`, fusion from
 //!    `PPD_TEST_FUSE`, and shared-runtime dispatch from
@@ -51,7 +56,11 @@ use anyhow::{bail, Result};
 use ppd::batch::dispatch::{
     DeviceDispatcher, DeviceExecutor, DispatchStats, DEFAULT_WINDOW,
 };
-use ppd::batch::{BatchItem, BatchStepEngine, PlanInputs, StepPlan, StepResult};
+use ppd::batch::collator::{collate, split};
+use ppd::batch::{
+    select_kv_bucket, union_max_slot, BatchItem, BatchMeta, BatchStepEngine, PlanInputs,
+    StepPlan, StepResult,
+};
 use ppd::coordinator::queue::Job;
 use ppd::coordinator::{
     serve_jobs, Coordinator, DeviceHost, Request, Response, SchedPolicy, StepScheduler,
@@ -133,6 +142,13 @@ impl MockEngine {
             bail!("cache mixup: committed {} != expected {}", cache.committed(), expect);
         }
         if cache.remaining() > 0 {
+            // write this step's tag into the committed row so the cache
+            // carries real data — the kv-bucketing executor compares
+            // truncated uploads byte-for-byte against these rows
+            let slot = cache.committed() as u32;
+            let (l, _s, d) = cache.shape();
+            let row = vec![mock_tag(base, seq.res.tokens.len()) as f32; 2 * l * d];
+            cache.scatter(&row, &[slot])?;
             cache.commit_contiguous(1)?;
         }
         let i = seq.res.tokens.len() as u64;
@@ -712,24 +728,111 @@ impl DeviceExecutor for MockExec {
     }
 }
 
+/// KV-bucketing executor: runs the REAL union-max-slot → covering-
+/// bucket → collate(truncate) → split pipeline `Runtime::forward_batch`
+/// uses, over the mock engine's echo contract.  Every fused call
+/// verifies the truncated cache-union upload still carries each row's
+/// committed bytes exactly (the mock engine scatters a per-step tag
+/// into its cache, so corruption is detectable), then echoes each
+/// row's tag back through `split` — a selection, truncation, or
+/// routing bug either errors the batch here or trips `apply_step`'s
+/// wrong-tag check.  Reports the selected kv through the meta channel
+/// so the dispatcher's `ppd_dispatch_kv_bucket` histogram fills in.
+struct KvExec {
+    kv_buckets: Vec<usize>,
+    /// models `PPD_DISABLE_KV_BUCKETS` without touching process env
+    /// (the runtime reads the env var; selection itself is this flag)
+    disabled: bool,
+    forwards: AtomicUsize,
+}
+
+impl KvExec {
+    fn new(kv_buckets: Vec<usize>, disabled: bool) -> Self {
+        KvExec { kv_buckets, disabled, forwards: AtomicUsize::new(0) }
+    }
+
+    fn run(&self, items: &[BatchItem<'_>]) -> Result<(Vec<StepOutput>, usize)> {
+        self.forwards.fetch_add(1, Ordering::SeqCst);
+        let full = SHAPE.1;
+        let (planes, d) = (2 * SHAPE.0, SHAPE.2);
+        let max_slot = union_max_slot(items);
+        let kv = select_kv_bucket(&self.kv_buckets, full, max_slot, self.disabled, |_| true);
+        let k = items.len();
+        let n = items.iter().map(|it| it.plan.len()).max().unwrap_or(1);
+        let c = collate(items, k, n, planes, full, d, kv)?;
+        // the truncated union must still carry every row's cache bytes
+        for (i, it) in items.iter().enumerate() {
+            let full_cache = it.cache.as_slice();
+            for p in 0..planes {
+                let dst = (i * planes + p) * kv * d;
+                let src = p * full * d;
+                if c.cache[dst..dst + kv * d] != full_cache[src..src + kv * d] {
+                    bail!("kv truncation corrupted row {i} plane {p}");
+                }
+            }
+        }
+        // echo each row's tag token through the padded device layout
+        let vocab = 1;
+        let mut logits = vec![0.0f32; k * n * vocab];
+        for i in 0..k {
+            logits[i * n] = c.tokens[i * n] as f32;
+        }
+        let hidden = vec![0.0f32; k * n * d];
+        let new_kv = vec![0.0f32; k * planes * n * d];
+        Ok((split(&c, &logits, &hidden, &new_kv, vocab)?, kv))
+    }
+}
+
+impl DeviceExecutor for KvExec {
+    fn exec_forward(
+        &self,
+        tokens: &[u32],
+        _pos: &[u32],
+        _slots: &[u32],
+        _bias: &[f32],
+        _cache: &[f32],
+    ) -> Result<StepOutput> {
+        self.forwards.fetch_add(1, Ordering::SeqCst);
+        Ok(StepOutput { n: 1, logits: vec![tokens[0] as f32], hidden: vec![], new_kv: vec![] })
+    }
+
+    fn exec_forward_batch(&self, items: &[BatchItem<'_>]) -> Result<Vec<StepOutput>> {
+        self.run(items).map(|(outs, _)| outs)
+    }
+
+    fn exec_forward_batch_meta(
+        &self,
+        items: &[BatchItem<'_>],
+    ) -> Result<(Vec<StepOutput>, BatchMeta)> {
+        self.run(items).map(|(outs, kv)| (outs, BatchMeta { kv: Some(kv) }))
+    }
+}
+
 /// N hand-driven schedulers sharing ONE dispatcher/executor — the
 /// deterministic model of the `--shared-runtime` topology.  A wall tick
 /// is: every scheduler plans + submits, the dispatcher flushes once,
-/// every scheduler applies.
-struct SharedHarness {
+/// every scheduler applies.  Generic over the executor so the
+/// kv-bucketing tests can swap in [`KvExec`]; defaults to [`MockExec`].
+struct SharedHarness<E: DeviceExecutor = MockExec> {
     scheds: Vec<StepScheduler>,
     engines: Vec<MockEngine>,
     pool: SharedCachePool,
     stats: QueueStats,
     dispatcher: DeviceDispatcher,
     dstats: Arc<DispatchStats>,
-    exec: MockExec,
+    exec: E,
     tx: mpsc::Sender<Response>,
     rx: mpsc::Receiver<Response>,
 }
 
-impl SharedHarness {
+impl SharedHarness<MockExec> {
     fn new(workers: usize, max_inflight: usize) -> Self {
+        Self::with_exec(workers, max_inflight, MockExec::new())
+    }
+}
+
+impl<E: DeviceExecutor> SharedHarness<E> {
+    fn with_exec(workers: usize, max_inflight: usize, exec: E) -> Self {
         let dstats = Arc::new(DispatchStats::default());
         let (handle, dispatcher) =
             DeviceDispatcher::channel(DEFAULT_WINDOW, Arc::clone(&dstats));
@@ -747,7 +850,7 @@ impl SharedHarness {
             stats: QueueStats::new(),
             dispatcher,
             dstats,
-            exec: MockExec::new(),
+            exec,
             tx,
             rx,
         }
@@ -834,6 +937,124 @@ fn shared_runtime_is_token_exact_at_every_worker_and_inflight_depth() {
             assert_eq!(h.exec.forwards(), h.dstats.batches_total() as usize);
         }
     }
+}
+
+#[test]
+fn kv_bucketed_shared_dispatch_is_token_exact_at_every_depth() {
+    // acceptance (KV-length bucketing for batched graphs): executing
+    // the cross-worker union at the smallest covering kv bucket —
+    // through the REAL collate/truncate/split pipeline — is
+    // token-exact with full-context execution at workers 1/2/4 ×
+    // max_inflight 1/2/4, and the dispatcher's kv histogram shows the
+    // short buckets actually engaging
+    let (_, expect) = workload_reqs(8);
+    for workers in [1usize, 2, 4] {
+        for max_inflight in [1usize, 2, 4] {
+            let mut per_mode: Vec<Vec<Response>> = Vec::new();
+            for disabled in [false, true] {
+                let mut h = SharedHarness::with_exec(
+                    workers,
+                    max_inflight,
+                    KvExec::new(vec![16, 32, 48], disabled),
+                );
+                let (reqs, _) = workload_reqs(8);
+                let mut pending: std::collections::VecDeque<Request> =
+                    reqs.into_iter().collect();
+                while !pending.is_empty() || h.busy() {
+                    for w in 0..workers {
+                        if h.scheds[w].has_capacity() {
+                            if let Some(r) = pending.pop_front() {
+                                assert!(h.admit(w, r).0, "admission refused");
+                            }
+                        }
+                    }
+                    let calls = h.wall_tick();
+                    assert!(
+                        calls <= 1,
+                        "workers={workers} inflight={max_inflight}: {calls} calls per tick"
+                    );
+                }
+                let mut resps = h.drain_responses();
+                resps.sort_by_key(|r| r.id);
+                assert_eq!(resps.len(), 8);
+                for (r, want) in resps.iter().zip(&expect) {
+                    assert!(r.error.is_none(), "disabled={disabled}: {:?}", r.error);
+                    assert_eq!(
+                        r.tokens, *want,
+                        "kv bucketing (disabled={disabled}) perturbed request {} \
+                         (workers={workers}, inflight={max_inflight})",
+                        r.id
+                    );
+                }
+                assert_eq!(h.pool.outstanding(), 0);
+                let hist = h.dstats.kv_hist();
+                assert!(!hist.is_empty(), "no fused batch reported its kv context");
+                if disabled {
+                    // PPD_DISABLE_KV_BUCKETS semantics: full ctx only
+                    assert!(
+                        hist.keys().all(|&kv| kv == SHAPE.1),
+                        "disabled run left full context: {hist:?}"
+                    );
+                } else {
+                    // these prompts keep every slot below 47, so some
+                    // short bucket must have been selected
+                    assert!(
+                        hist.keys().any(|&kv| kv < SHAPE.1),
+                        "short kv buckets never engaged: {hist:?}"
+                    );
+                }
+                per_mode.push(resps);
+            }
+            // bucketed == full-context, byte for byte
+            for (a, b) in per_mode[0].iter().zip(&per_mode[1]) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(
+                    a.tokens, b.tokens,
+                    "short-kv vs full-ctx diverged on request {} \
+                     (workers={workers}, inflight={max_inflight})",
+                    a.id
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn all_short_riders_select_the_smallest_kv_bucket() {
+    // acceptance: when every rider is short, the union max slot stays
+    // below the smallest bucket and ONLY that bucket executes —
+    // observable through the new kv-bucket stats
+    let workers = 2;
+    let mut h =
+        SharedHarness::with_exec(workers, 2, KvExec::new(vec![16, 32, 48], false));
+    let reqs: Vec<Request> =
+        (0..4).map(|i| Request::new(i, workload::encode("ab"), 4)).collect();
+    let expect: Vec<Vec<u32>> = reqs
+        .iter()
+        .map(|r| reference_tokens(&r.prompt, r.max_new, r.seed))
+        .collect();
+    for (i, r) in reqs.into_iter().enumerate() {
+        assert!(h.admit(i % workers, r).0);
+    }
+    let mut ticks = 0;
+    while h.busy() {
+        assert!(h.wall_tick() <= 1);
+        ticks += 1;
+        assert!(ticks < 50, "workload failed to drain");
+    }
+    let mut resps = h.drain_responses();
+    resps.sort_by_key(|r| r.id);
+    assert_eq!(resps.len(), 4);
+    for (r, want) in resps.iter().zip(&expect) {
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.tokens, *want);
+    }
+    // prompt "ab" commits 2 rows and 4 steps keep every slot ≤ 6: the
+    // 16-slot bucket covers every tick, so nothing larger may appear
+    let hist = h.dstats.kv_hist();
+    assert_eq!(hist.keys().copied().collect::<Vec<_>>(), vec![16], "{hist:?}");
+    assert!(h.dstats.max_union_slot() < 15, "{}", h.dstats.max_union_slot());
+    assert_eq!(h.pool.outstanding(), 0);
 }
 
 #[test]
