@@ -71,6 +71,14 @@ use super::{union_max_slot, BatchItem, BatchMeta, PlanInputs};
 /// bounds the damage of a straggler.
 pub const DEFAULT_WINDOW: Duration = Duration::from_millis(5);
 
+/// Lock a stats mutex, recovering from poisoning: these mutexes only
+/// guard plain counter maps (always left in a consistent state), so a
+/// panic elsewhere while holding one must not cascade into the
+/// dispatcher thread or the metrics scrape.
+fn lock_stats<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 /// One sequence's contribution to a cross-worker fused tick: the
 /// planned step plus its KV cache, moved in and returned (in order)
 /// with the reply.
@@ -239,7 +247,7 @@ impl DispatchStats {
         if widths.iter().filter(|&&(_, n)| n > 0).count() > 1 {
             self.multi_worker_batches.fetch_add(1, Ordering::Relaxed);
         }
-        let mut by_worker = self.rows_by_worker.lock().unwrap();
+        let mut by_worker = lock_stats(&self.rows_by_worker);
         for &(w, n) in widths {
             *by_worker.entry(w).or_insert(0) += n as u64;
         }
@@ -255,7 +263,7 @@ impl DispatchStats {
 
     /// Record the KV context one fused dispatch executed at.
     fn record_kv(&self, kv: usize) {
-        *self.kv_hist.lock().unwrap().entry(kv).or_insert(0) += 1;
+        *lock_stats(&self.kv_hist).entry(kv).or_insert(0) += 1;
     }
 
     /// Record the union's max occupied slot (computed before collation).
@@ -297,13 +305,13 @@ impl DispatchStats {
     }
 
     pub fn rows_by_worker(&self) -> BTreeMap<usize, u64> {
-        self.rows_by_worker.lock().unwrap().clone()
+        lock_stats(&self.rows_by_worker).clone()
     }
 
     /// `(kv_context, count)` pairs: fused dispatches per executed KV
     /// bucket (empty until a batched executable reports its context).
     pub fn kv_hist(&self) -> BTreeMap<usize, u64> {
-        self.kv_hist.lock().unwrap().clone()
+        lock_stats(&self.kv_hist).clone()
     }
 
     pub fn max_union_slot(&self) -> u64 {
@@ -824,9 +832,9 @@ mod tests {
         let exec = EchoExec::new();
 
         // three workers submit ragged ticks in one wall tick
-        let rx0 = handle.submit_tick(0, vec![row(10), row(11)]).unwrap();
-        let rx1 = handle.submit_tick(1, vec![row(20)]).unwrap();
-        let rx2 = handle.submit_tick(2, vec![row(30), row(31), row(32)]).unwrap();
+        let rx0 = handle.submit_tick(0, vec![row(10), row(11)]).expect("dispatcher alive");
+        let rx1 = handle.submit_tick(1, vec![row(20)]).expect("dispatcher alive");
+        let rx2 = handle.submit_tick(2, vec![row(30), row(31), row(32)]).expect("dispatcher alive");
         assert_eq!(stats.queue_depth(), 3);
 
         let calls = disp.pump(&exec);
@@ -840,16 +848,16 @@ mod tests {
         assert_eq!(stats.rows_by_worker().get(&2), Some(&3));
 
         // every worker gets exactly its own rows back, in order
-        let r0 = rx0.recv().unwrap();
-        let outs0 = r0.outs.unwrap();
+        let r0 = rx0.recv().expect("reply must arrive");
+        let outs0 = r0.outs.expect("fused step must succeed");
         assert_eq!(outs0.len(), 2);
         assert_eq!(outs0[0].logits, vec![10.0]);
         assert_eq!(outs0[1].logits, vec![11.0]);
         assert_eq!(r0.rows.len(), 2);
-        let r1 = rx1.recv().unwrap();
-        assert_eq!(r1.outs.unwrap()[0].logits, vec![20.0]);
-        let r2 = rx2.recv().unwrap();
-        let outs2 = r2.outs.unwrap();
+        let r1 = rx1.recv().expect("reply must arrive");
+        assert_eq!(r1.outs.expect("fused step must succeed")[0].logits, vec![20.0]);
+        let r2 = rx2.recv().expect("reply must arrive");
+        let outs2 = r2.outs.expect("fused step must succeed");
         assert_eq!(outs2[2].logits, vec![32.0]);
     }
 
@@ -858,11 +866,11 @@ mod tests {
         let stats = Arc::new(DispatchStats::default());
         let (handle, disp) = DeviceDispatcher::channel(DEFAULT_WINDOW, Arc::clone(&stats));
         let exec = EchoExec { calls: AtomicU64::new(0), fail: true };
-        let rx0 = handle.submit_tick(0, vec![row(1)]).unwrap();
-        let rx1 = handle.submit_tick(1, vec![row(2)]).unwrap();
+        let rx0 = handle.submit_tick(0, vec![row(1)]).expect("dispatcher alive");
+        let rx1 = handle.submit_tick(1, vec![row(2)]).expect("dispatcher alive");
         disp.pump(&exec);
         for rx in [rx0, rx1] {
-            let r = rx.recv().unwrap();
+            let r = rx.recv().expect("reply must arrive");
             assert_eq!(r.rows.len(), 1, "rows (and caches) must come back even on failure");
             assert!(format!("{:#}", r.outs.unwrap_err()).contains("injected"));
         }
@@ -885,11 +893,11 @@ mod tests {
         let done = std::thread::spawn(move || disp.run(&EchoExec::new()));
         let out = handle
             .forward(&[42], &[0], &[0], &[0.0; 8], &[0.0; 16], 8)
-            .unwrap();
+            .expect("solo forward must succeed");
         assert_eq!(out.logits, vec![42.0]);
         assert_eq!(handle.stats().solo_forwards_total(), 1);
         drop(handle);
-        done.join().unwrap();
+        done.join().expect("thread must exit cleanly");
     }
 
     #[test]
@@ -908,24 +916,26 @@ mod tests {
         let h1 = {
             let h = handle.clone();
             std::thread::spawn(move || {
-                let rx = h.submit_tick(0, vec![row(7)]).unwrap();
-                rx.recv().unwrap().outs.unwrap()[0].logits.clone()
+                let rx = h.submit_tick(0, vec![row(7)]).expect("dispatcher alive");
+                let reply = rx.recv().expect("reply must arrive");
+                reply.outs.expect("fused step must succeed")[0].logits.clone()
             })
         };
         let h2 = {
             let h = handle.clone();
             std::thread::spawn(move || {
-                let rx = h.submit_tick(1, vec![row(9)]).unwrap();
-                rx.recv().unwrap().outs.unwrap()[0].logits.clone()
+                let rx = h.submit_tick(1, vec![row(9)]).expect("dispatcher alive");
+                let reply = rx.recv().expect("reply must arrive");
+                reply.outs.expect("fused step must succeed")[0].logits.clone()
             })
         };
-        assert_eq!(h1.join().unwrap(), vec![7.0]);
-        assert_eq!(h2.join().unwrap(), vec![9.0]);
+        assert_eq!(h1.join().expect("thread must exit cleanly"), vec![7.0]);
+        assert_eq!(h2.join().expect("thread must exit cleanly"), vec![9.0]);
         handle.deregister();
         handle.deregister();
         let stats = handle.stats();
         drop(handle);
-        let calls = exec_thread.join().unwrap();
+        let calls = exec_thread.join().expect("thread must exit cleanly");
         assert_eq!(calls, 1, "barrier failed to fuse the two workers");
         assert_eq!(stats.multi_worker_batches_total(), 1);
     }
@@ -938,9 +948,10 @@ mod tests {
         let (handle, disp) = DeviceDispatcher::channel(DEFAULT_WINDOW, Arc::clone(&stats));
         let exec = EchoExec::new();
         let rows: Vec<TickRow> = (0..20u32).map(row).collect();
-        let rx = handle.submit_tick(0, rows).unwrap();
+        let rx = handle.submit_tick(0, rows).expect("dispatcher alive");
         disp.pump(&exec);
-        assert_eq!(rx.recv().unwrap().outs.unwrap().len(), 20);
+        let reply = rx.recv().expect("reply must arrive");
+        assert_eq!(reply.outs.expect("fused step must succeed").len(), 20);
         let hist = stats.width_hist();
         assert_eq!(hist, vec![(crate::metrics::FUSED_HIST_SLOTS, 1)]);
         assert!(stats.to_prometheus().contains("ppd_dispatch_width_total{width=\"16+\"} 1\n"));

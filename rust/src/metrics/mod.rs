@@ -2,6 +2,8 @@
 //! depth/backpressure gauges, and the aggregated report the
 //! coordinator/benches emit.
 
+pub mod registry;
+
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;

@@ -1,0 +1,126 @@
+//! Single source of truth for every `ppd_*` Prometheus metric the
+//! serving stack exposes.
+//!
+//! The emission sites stay where they are (`QueueStats::to_prometheus`,
+//! `DispatchStats::to_prometheus`, `Coordinator::metrics_text`) — this
+//! module exists so the *names and label keys* live in exactly one
+//! place.  `cargo xtask analyze` parses these tables and fails the
+//! build when a `ppd_*` string literal anywhere in the crate drifts
+//! from them, when a declared metric stops being emitted, or when a
+//! name is missing from the README's metrics table.  Adding a metric
+//! therefore means: emit it, declare it here, document it in README.md
+//! — the analysis job enforces all three.
+
+/// `(metric name, label keys, help text)`.
+///
+/// Kept as a tuple rather than a struct so the declaration below stays
+/// a flat, machine-parseable literal table (the xtask check reads the
+/// string literals positionally: first = name, last = help, middle =
+/// labels).
+pub type MetricDecl = (&'static str, &'static [&'static str], &'static str);
+
+pub const METRICS: &[MetricDecl] = &[
+    // -- shared work queue (QueueStats::to_prometheus) ----------------
+    ("ppd_queue_enqueued_total", &[], "requests accepted into the shared work queue"),
+    ("ppd_queue_completed_total", &[], "requests fully served"),
+    ("ppd_queue_rejected_total", &[], "requests refused at admission (queue full)"),
+    ("ppd_queue_expired_total", &[], "requests dropped by queue-age policy before starting"),
+    ("ppd_queue_cancelled_total", &[], "requests cancelled by the client mid-flight"),
+    ("ppd_queue_admitted_total", &[], "sequences admitted into a scheduler's inflight set"),
+    ("ppd_queue_sched_steps_total", &[], "scheduler step-loop iterations"),
+    ("ppd_queue_depth", &[], "requests parked in the queue right now"),
+    ("ppd_queue_max_depth", &[], "high-water queue depth"),
+    ("ppd_queue_in_flight", &[], "requests currently being served"),
+    ("ppd_queue_busy_workers", &[], "workers currently inside a request"),
+    ("ppd_queue_max_inflight_seqs", &[], "high-water per-worker inflight sequence count"),
+    ("ppd_queue_fused_batches_total", &[], "fused multi-sequence device steps"),
+    ("ppd_queue_fused_rows_total", &[], "sequence rows carried by fused steps"),
+    ("ppd_queue_max_fused_batch", &[], "widest single fused step"),
+    ("ppd_queue_fused_batch_size_total", &["batch"], "fused step count by batch width"),
+    ("ppd_queue_capacity", &[], "configured queue capacity"),
+    // -- shared-runtime dispatcher (DispatchStats::to_prometheus) -----
+    ("ppd_dispatch_batches_total", &[], "cross-worker fused device dispatches"),
+    ("ppd_dispatch_rows_total", &[], "rows across cross-worker dispatches"),
+    ("ppd_dispatch_max_width", &[], "widest cross-worker dispatch"),
+    ("ppd_dispatch_multi_worker_batches_total", &[], "dispatches fusing rows from >1 worker"),
+    ("ppd_dispatch_solo_forwards_total", &[], "solo forwards served outside tick fusion"),
+    ("ppd_dispatch_queue_depth", &[], "submissions parked at the dispatcher right now"),
+    ("ppd_dispatch_max_queue_depth", &[], "high-water dispatcher queue depth"),
+    ("ppd_dispatch_max_union_slot", &[], "highest KV slot any union referenced"),
+    ("ppd_dispatch_width_total", &["width"], "cross-worker dispatch count by union width"),
+    ("ppd_dispatch_kv_bucket_total", &["kv"], "fused dispatches by executed KV context"),
+    ("ppd_dispatch_rows_by_worker", &["worker"], "fused rows attributed to submitting worker"),
+    // -- runtime forward counters (Coordinator::metrics_text) ---------
+    ("ppd_runtime_bucket_forwards_total", &["n", "kv"], "forwards by (token bucket, kv context)"),
+    ("ppd_runtime_kv_forwards_total", &["kv"], "single-sequence forwards by kv context"),
+    ("ppd_runtime_batch_kv_forwards_total", &["kv"], "batched forwards by kv context"),
+    // -- coordinator gauges (Coordinator::metrics_text) ---------------
+    ("ppd_workers", &[], "serving worker thread count"),
+    ("ppd_shared_runtime", &[], "1 when the shared-runtime dispatcher topology is active"),
+    ("ppd_caches_created", &[], "KV caches ever built by the capped pool"),
+    ("ppd_caches_outstanding", &[], "KV caches currently checked out"),
+];
+
+/// Name prefixes the emission code concatenates suffixes onto (the
+/// `push(suffix)` builders in `QueueStats::to_prometheus` and
+/// `DispatchStats::to_prometheus`).  A string literal equal to one of
+/// these is name-building, not an undeclared metric.
+pub const METRIC_PREFIXES: &[&str] = &["ppd_queue_", "ppd_dispatch_"];
+
+/// `ppd_*` string literals that are NOT metric names: temp-dir names in
+/// tests and bench-local identifiers interpolated into messages.  The
+/// xtask scan treats a literal starting with one of these as benign.
+pub const NON_METRIC_ALLOW: &[&str] =
+    &["ppd_cfg_test", "ppd_cal_test", "ppd_w_test", "ppd_stats_test", "ppd_trace_test"];
+
+/// Look up a metric declaration by exact name.
+pub fn find(name: &str) -> Option<&'static MetricDecl> {
+    METRICS.iter().find(|m| m.0 == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_are_unique_and_well_formed() {
+        for (i, (name, _, help)) in METRICS.iter().enumerate() {
+            let well_formed =
+                name.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_');
+            assert!(name.starts_with("ppd_") && well_formed, "bad metric name {name}");
+            assert!(!help.is_empty(), "{name} has no help text");
+            assert!(
+                !METRICS[..i].iter().any(|m| m.0 == *name),
+                "duplicate metric declaration {name}"
+            );
+        }
+    }
+
+    /// Every line the live exporters emit must resolve to a declared
+    /// metric with the declared label keys — the in-crate half of the
+    /// drift guard (`cargo xtask analyze` covers the literal scan).
+    #[test]
+    fn exporter_output_matches_registry() {
+        let queue = crate::metrics::QueueStats::new();
+        let dispatch = crate::batch::dispatch::DispatchStats::default();
+        for text in [queue.to_prometheus(), dispatch.to_prometheus()] {
+            for line in text.lines() {
+                let name_part = line.split(' ').next().expect("metric line");
+                let (name, labels) = match name_part.split_once('{') {
+                    Some((n, rest)) => (n, Some(rest)),
+                    None => (name_part, None),
+                };
+                let decl = find(name).unwrap_or_else(|| panic!("undeclared metric {name}"));
+                if let Some(rest) = labels {
+                    for kv in rest.trim_end_matches('}').split(',') {
+                        let key = kv.split('=').next().expect("label key");
+                        assert!(
+                            decl.1.contains(&key),
+                            "metric {name} emits undeclared label {key}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,168 @@
+//! Stress tests for the dispatcher's tick barrier under concurrent
+//! register/submit/deregister churn and mid-window shutdown.
+//!
+//! These are the races the nightly ThreadSanitizer job is pointed at
+//! (see `.github/workflows/sanitizers.yml`): the barrier in
+//! `DeviceDispatcher::collect` reads the registered-scheduler count
+//! while worker threads mutate it, and `run` exits on channel
+//! disconnect while a window may still be holding submissions.  The
+//! iteration counts are deliberately small so the suite stays fast
+//! under TSan's ~10x slowdown.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use ppd::batch::dispatch::{DeviceDispatcher, DeviceExecutor, DispatchStats, TickRow};
+use ppd::batch::{BatchItem, PlanInputs};
+use ppd::kvcache::HostKvCache;
+use ppd::runtime::StepOutput;
+
+/// Echoes each row's first token back as its logit, counting calls and
+/// rows; the tiny sleep in the batch path widens the window in which a
+/// deregistering scheduler can race the barrier.
+#[derive(Default)]
+struct EchoExec {
+    calls: AtomicU64,
+    rows: AtomicU64,
+}
+
+impl DeviceExecutor for EchoExec {
+    fn exec_forward(
+        &self,
+        tokens: &[u32],
+        _pos: &[u32],
+        _slots: &[u32],
+        _bias: &[f32],
+        _cache: &[f32],
+    ) -> Result<StepOutput> {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.rows.fetch_add(1, Ordering::Relaxed);
+        Ok(StepOutput { n: 1, logits: vec![tokens[0] as f32], hidden: vec![], new_kv: vec![] })
+    }
+
+    fn exec_forward_batch(&self, items: &[BatchItem<'_>]) -> Result<Vec<StepOutput>> {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.rows.fetch_add(items.len() as u64, Ordering::Relaxed);
+        thread::sleep(Duration::from_micros(200));
+        Ok(items
+            .iter()
+            .map(|it| StepOutput {
+                n: 1,
+                logits: vec![it.plan.tokens[0] as f32],
+                hidden: vec![],
+                new_kv: vec![],
+            })
+            .collect())
+    }
+}
+
+fn row(tag: u32) -> TickRow {
+    TickRow {
+        plan: PlanInputs {
+            tokens: vec![tag],
+            pos: vec![0],
+            slots: vec![0],
+            bias: vec![0.0; 8],
+            max_ctx: 8,
+        },
+        cache: HostKvCache::new(1, 8, 2),
+    }
+}
+
+/// Many schedulers registering, submitting, and deregistering in tight
+/// loops against one live dispatcher thread: every submission must be
+/// answered with its own echo, the queue must drain to zero, and the
+/// dispatcher must exit once the last handle drops.
+#[test]
+fn tick_barrier_survives_register_deregister_churn() {
+    const THREADS: usize = 8;
+    const ITERS: u32 = 24;
+
+    let stats = Arc::new(DispatchStats::default());
+    let window = Duration::from_micros(500);
+    let (handle, disp) = DeviceDispatcher::channel(window, Arc::clone(&stats));
+    let exec = Arc::new(EchoExec::default());
+    let dexec = Arc::clone(&exec);
+    let disp_thread = thread::spawn(move || disp.run(&*dexec));
+
+    let mut workers = Vec::new();
+    for t in 0..THREADS {
+        let h = handle.clone();
+        workers.push(thread::spawn(move || {
+            for i in 0..ITERS {
+                let tag = (t as u32) * 1000 + i;
+                h.register();
+                let rx = h.submit_tick(t, vec![row(tag)]).expect("dispatcher alive");
+                let reply = rx.recv().expect("reply must arrive");
+                let outs = reply.outs.expect("echo step cannot fail");
+                assert_eq!(outs.len(), 1);
+                assert_eq!(outs[0].logits, vec![tag as f32], "reply misrouted");
+                assert_eq!(reply.rows.len(), 1, "caches must come back with the reply");
+                h.deregister();
+            }
+        }));
+    }
+    for w in workers {
+        w.join().expect("churn thread panicked");
+    }
+
+    let expected = (THREADS as u64) * u64::from(ITERS);
+    assert_eq!(stats.rows_total(), expected, "every submitted row must be dispatched");
+    assert_eq!(exec.rows.load(Ordering::Relaxed), expected);
+    assert_eq!(stats.queue_depth(), 0, "queue must drain after churn");
+    assert_eq!(handle.active(), 0, "every register matched a deregister");
+
+    drop(handle);
+    disp_thread.join().expect("dispatcher must exit once all handles drop");
+}
+
+/// A scheduler that gives up on a tick (drops its reply receiver)
+/// must not wedge or kill the dispatcher: later submissions — in the
+/// same fused round and in later rounds — still get their replies.
+#[test]
+fn dropped_reply_receivers_do_not_wedge_the_dispatcher() {
+    let stats = Arc::new(DispatchStats::default());
+    let (handle, disp) = DeviceDispatcher::channel(Duration::from_micros(500), Arc::clone(&stats));
+    let exec = EchoExec::default();
+
+    for round in 0..32u32 {
+        let kept = handle.submit_tick(0, vec![row(round)]).expect("dispatcher alive");
+        drop(handle.submit_tick(1, vec![row(10_000 + round)]).expect("dispatcher alive"));
+        disp.pump(&exec);
+        let reply = kept.recv().expect("kept receiver must get its reply");
+        assert_eq!(reply.outs.expect("echo step cannot fail")[0].logits, vec![round as f32]);
+    }
+
+    assert_eq!(stats.queue_depth(), 0, "abandoned ticks must still be drained");
+    assert_eq!(stats.rows_total(), 64, "abandoned rows are dispatched, not dropped");
+}
+
+/// The shutdown race itself: a window opens waiting on a second
+/// registered scheduler, and every handle is dropped before it ever
+/// submits.  The disconnect must flush the half-full window (the
+/// submitted row still gets its reply) and the dispatcher must exit
+/// instead of waiting on the vanished scheduler.
+#[test]
+fn shutdown_mid_window_flushes_pending_rows_and_joins() {
+    let stats = Arc::new(DispatchStats::default());
+    let window = Duration::from_secs(30); // far longer than the test: only disconnect can end it
+    let (handle, disp) = DeviceDispatcher::channel(window, Arc::clone(&stats));
+    let exec = Arc::new(EchoExec::default());
+    let dexec = Arc::clone(&exec);
+    let disp_thread = thread::spawn(move || disp.run(&*dexec));
+
+    handle.register();
+    handle.register(); // second scheduler never submits
+    let rx = handle.submit_tick(0, vec![row(5)]).expect("dispatcher alive");
+    drop(handle);
+
+    let reply = rx.recv().expect("half-full window must flush on disconnect");
+    assert_eq!(reply.outs.expect("echo step cannot fail")[0].logits, vec![5.0]);
+    disp_thread.join().expect("dispatcher must exit once all handles drop");
+    assert_eq!(stats.queue_depth(), 0);
+    assert_eq!(exec.calls.load(Ordering::Relaxed), 1);
+}

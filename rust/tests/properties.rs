@@ -31,6 +31,16 @@ use ppd::tree::{assemble_step, GuessSet, SparseTree};
 use ppd::util::json::Json;
 use ppd::util::rng::Rng;
 
+/// Seed count per property, overridable via `PPD_PROP_SEEDS` so slow
+/// interpreters can bound runtime (the nightly Miri job runs with
+/// `PPD_PROP_SEEDS=3`; an unset or unparsable value keeps the default).
+fn seeds(default: u64) -> u64 {
+    std::env::var("PPD_PROP_SEEDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
 fn random_stats(rng: &mut Rng) -> AcceptStats {
     AcceptStats::synthetic(
         3,
@@ -42,7 +52,7 @@ fn random_stats(rng: &mut Rng) -> AcceptStats {
 
 #[test]
 fn prop_dynamic_tree_structure() {
-    for seed in 0..40u64 {
+    for seed in 0..seeds(40) {
         let mut rng = Rng::new(seed);
         let stats = random_stats(&mut rng);
         let nc = 1 + rng.below(24);
@@ -80,7 +90,7 @@ fn prop_dynamic_tree_structure() {
 
 #[test]
 fn prop_better_stats_never_hurt_tau() {
-    for seed in 0..20u64 {
+    for seed in 0..seeds(20) {
         let mut rng = Rng::new(seed + 100);
         let top1 = 0.2 + 0.5 * rng.next_f64();
         let weak = AcceptStats::synthetic(3, top1, 0.4, 0.7);
@@ -95,7 +105,7 @@ fn prop_better_stats_never_hurt_tau() {
 fn prop_layout_bias_closure() {
     // ancestors must be transitively closed and sibling-free for random
     // dynamic trees; bias rows expose exactly committed+ancestors+self
-    for seed in 0..30u64 {
+    for seed in 0..seeds(30) {
         let mut rng = Rng::new(seed + 7);
         let stats = random_stats(&mut rng);
         let set = DynamicTreeSet::build(&stats, 3, 1 + rng.below(16), 3 + rng.below(24), 10).unwrap();
@@ -147,7 +157,7 @@ fn prop_kvcache_matches_reference_simulator() {
     let planes = 4;
     let s = 64;
     let d = 3;
-    for seed in 0..30u64 {
+    for seed in 0..seeds(30) {
         let mut rng = Rng::new(seed + 31);
         let mut cache = HostKvCache::new(planes / 2, s, d);
         let mut reference = RefCache {
@@ -219,7 +229,7 @@ fn prop_cache_scatter_compact_truncate_roundtrip() {
     let planes = 4;
     let s = 48;
     let d = 2;
-    for seed in 0..40u64 {
+    for seed in 0..seeds(40) {
         let mut rng = Rng::new(seed + 977);
         let mut cache = HostKvCache::new(planes / 2, s, d);
         // shadow model: the row values the committed region must hold
@@ -303,7 +313,7 @@ fn prop_collate_pad_split_roundtrip_preserves_every_sequence() {
     let planes = 2 * layers;
     let batch_buckets = [1usize, 2, 4, 8];
     let neg_inf = ppd::runtime::NEG_INF;
-    for seed in 0..40u64 {
+    for seed in 0..seeds(40) {
         let mut rng = Rng::new(seed + 4242);
         let k = 1 + rng.below(6); // 1..=6 sequences
         // build plans + caches (owned first; BatchItem borrows)
@@ -530,7 +540,7 @@ fn brute_force_greedy(tree: &SparseTree, tokens: &[u32], argmax: &dyn Fn(usize) 
 #[test]
 fn prop_greedy_verify_equals_brute_force() {
     let vocab = 16usize;
-    for seed in 0..40u64 {
+    for seed in 0..seeds(40) {
         let mut rng = Rng::new(seed + 57);
         let stats = random_stats(&mut rng);
         let set = DynamicTreeSet::build(&stats, 3, 1 + rng.below(12), 6 + rng.below(12), 6).unwrap();
@@ -576,7 +586,7 @@ fn tokens_distinct_per_parent(tree: &SparseTree, layout: &ppd::tree::TreeLayout,
 
 #[test]
 fn prop_chains_to_tree_reproduces_chains() {
-    for seed in 0..40u64 {
+    for seed in 0..seeds(40) {
         let mut rng = Rng::new(seed + 91);
         let n_chains = 1 + rng.below(5);
         let chains: Vec<Vec<u32>> = (0..n_chains)
@@ -622,7 +632,7 @@ fn prop_json_roundtrip_random_values() {
             ),
         }
     }
-    for seed in 0..200u64 {
+    for seed in 0..seeds(200) {
         let mut rng = Rng::new(seed + 3);
         let v = gen(&mut rng, 0);
         let text = v.to_string();

@@ -1,0 +1,23 @@
+"""Seeded fixture exporter for the artifact-contract check.
+
+Docstring template mentions like fwd_n<k>.hlo.txt are ignored by the
+scan (triple-quoted strings are dropped).
+"""
+
+BUCKETS = [8]
+KV_VARIANTS = [256]
+KV_VARIANT_MAX_N = 64
+BATCH_BUCKETS = [2]
+BATCH_MAX_N = 64
+
+
+def export(model, n, models):
+    names = [f"fwd_n{n}.hlo.txt", "medusa.hlo.txt"]
+    config = {
+        "name": model,
+        "kv_buckets": KV_VARIANTS,
+    }
+    manifest = {
+        "models": models,
+    }
+    return names, config, manifest

@@ -1,0 +1,21 @@
+// Seeded fixture consumer for the artifact-contract check: one template
+// the exporter never produces, one config key it never writes, one kv
+// fallback it never exports.  Scanned, never compiled.
+
+pub fn graph_names(bucket: usize, batch: usize) -> Vec<String> {
+    vec![
+        format!("fwd_n{bucket}.hlo.txt"),
+        format!("fwd_x{batch}_n{bucket}.hlo.txt"), // seeded: exporter never writes fwd_x*
+        "medusa.hlo.txt".to_string(),
+    ]
+}
+
+pub fn load(j: &Json) -> (String, String, Vec<u64>) {
+    let name = j.req("name");
+    let missing = j.req("missing_key"); // seeded: aot.py never writes this
+    let kv = match j.get("kv_buckets") {
+        Some(v) => v,
+        None => vec![512], // seeded: 512 is not a KV_VARIANT
+    };
+    (name, missing, kv)
+}

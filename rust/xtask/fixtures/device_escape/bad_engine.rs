@@ -1,0 +1,17 @@
+// Seeded violation fixture for the device-escape lint: a decode engine
+// reaching for Runtime directly.  (Mentioning Runtime in this comment
+// is legal — comments are stripped before the scan.)
+
+use crate::runtime::Runtime; // seeded violation 1
+
+pub struct BadEngine<'a> {
+    rt: &'a Runtime, // seeded violation 2
+    shared: SharedRuntime, // legal: SharedRuntime routes through the dispatcher
+}
+
+impl BadEngine<'_> {
+    fn step(&self) {
+        let _ = self.rt;
+        let _ = &self.shared;
+    }
+}

@@ -1,0 +1,10 @@
+// Seeded violation fixture for the env-mutation lint.  Scanned by the
+// xtask self-tests, never compiled.
+// Mentioning set_var in a comment must NOT fire.
+
+fn poke_env() {
+    std::env::set_var("PPD_KV_BUCKETS", "0"); // seeded violation 1
+    let msg = "remove_var inside a string literal is also fine";
+    std::env::remove_var("PPD_KV_BUCKETS"); // seeded violation 2
+    let _ = msg;
+}

@@ -1,0 +1,17 @@
+// Seeded fixture registry: one duplicate declaration, one metric no
+// fixture src emits, one metric the fixture README omits.
+
+pub type MetricDecl = (&'static str, &'static [&'static str], &'static str);
+
+pub const METRICS: &[MetricDecl] = &[
+    ("ppd_fx_good_total", &[], "a good counter"),
+    ("ppd_fx_labeled_total", &["kv"], "a labeled counter"),
+    ("ppd_fx_dup_total", &[], "declared twice"),
+    ("ppd_fx_dup_total", &[], "declared twice again"),
+    ("ppd_fx_undocumented_total", &[], "missing from the fixture README"),
+    ("ppd_fx_never_emitted_total", &[], "declared but never emitted"),
+];
+
+pub const METRIC_PREFIXES: &[&str] = &[];
+
+pub const NON_METRIC_ALLOW: &[&str] = &["ppd_fx_tmp"];

@@ -1,0 +1,13 @@
+// Seeded fixture emitter: one label mismatch, one undeclared literal,
+// one allowlisted temp-dir name.
+
+pub fn emit() -> String {
+    let mut out = String::new();
+    out.push_str("ppd_fx_good_total 1\n");
+    out.push_str("ppd_fx_dup_total 1\n");
+    out.push_str("ppd_fx_undocumented_total 1\n");
+    out.push_str("ppd_fx_labeled_total{wrong=\"x\"} 2\n"); // label mismatch
+    out.push_str("ppd_fx_unknown_total 3\n"); // undeclared
+    out.push_str("ppd_fx_tmp_dir"); // allowlisted
+    out
+}

@@ -1,0 +1,5 @@
+// Seeded fixture: a module with zero unwrap/expect sites.
+
+pub fn fine() -> usize {
+    0
+}

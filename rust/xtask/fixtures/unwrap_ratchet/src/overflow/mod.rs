@@ -1,0 +1,20 @@
+// Seeded fixture: 2 unwraps + 1 expect in live code; the test-region
+// unwrap and the unwrap_or must not count.
+
+pub fn live(x: Option<u32>, y: Option<u32>) -> u32 {
+    let a = x.unwrap();
+    let b = y.unwrap();
+    let c = x.expect("seeded expect");
+    let d = x.unwrap_or(0);
+    a + b + c + d
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwraps_in_tests_are_free() {
+        let v: Option<u32> = Some(1);
+        assert_eq!(v.unwrap(), 1);
+        v.expect("also free");
+    }
+}

@@ -1,0 +1,513 @@
+//! Artifact-contract check: the graph-name/config contract that is
+//! duplicated between `python/compile/aot.py` (the producer) and the
+//! Rust `config`/`runtime` parsers (the consumer) must agree.
+//!
+//! Cross-checked:
+//! * the `fwd_*`/`medusa*` HLO file-name templates (placeholders
+//!   normalised to `{}`) must match set-for-set in both directions;
+//! * every `config.json` key the Rust loader `req(...)`s or
+//!   `get(...)`s must be written by aot.py's config dict;
+//! * the manifest key `main.rs` reads (`models`) must be written by
+//!   aot.py's manifest dict;
+//! * the Rust `kv_buckets` fallback (`None => vec![...]`) must be a
+//!   subset of aot.py's `KV_VARIANTS` — a fallback the exporter never
+//!   produces would 404 at graph-load time;
+//! * concrete `fwd_b{B}_n{N}_s{kv}.hlo.txt` names asserted in ci.yml
+//!   must be combinations the exporter actually emits (bucket
+//!   membership and the `*_MAX_N` caps).
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use crate::checks::{rel, Violation};
+use crate::scan::{self, Scan};
+
+pub fn check(root: &Path) -> Vec<Violation> {
+    check_paths(
+        &root.join("python/compile/aot.py"),
+        &root.join("rust/src/config/mod.rs"),
+        Some(&root.join("rust/src/main.rs")),
+        Some(&root.join(".github/workflows/ci.yml")),
+        root,
+    )
+}
+
+struct AotFacts {
+    buckets: Vec<u64>,
+    kv_variants: Vec<u64>,
+    batch_buckets: Vec<u64>,
+    kv_variant_max_n: Option<u64>,
+    batch_max_n: Option<u64>,
+    templates: BTreeSet<String>,
+    config_keys: BTreeSet<String>,
+    manifest_keys: BTreeSet<String>,
+}
+
+pub fn check_paths(
+    aot_path: &Path,
+    config_rs_path: &Path,
+    main_rs_path: Option<&Path>,
+    ci_path: Option<&Path>,
+    root: &Path,
+) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let aot_file = rel(aot_path, root);
+    let cfg_file = rel(config_rs_path, root);
+    let aot_src = match std::fs::read_to_string(aot_path) {
+        Ok(s) => s,
+        Err(e) => return vec![Violation::new(aot_file, 0, format!("unreadable: {e}"))],
+    };
+    let aot = parse_aot(&aot_src, &aot_file, &mut out);
+
+    let cfg_src = match std::fs::read_to_string(config_rs_path) {
+        Ok(s) => s,
+        Err(e) => return vec![Violation::new(cfg_file, 0, format!("unreadable: {e}"))],
+    };
+    let sc = scan::scan_rust(&cfg_src);
+    let regions = scan::test_regions(&sc.code);
+
+    // rust-side templates + config keys (non-test code only)
+    let mut rs_templates = BTreeSet::new();
+    let mut req_keys = BTreeSet::new();
+    let mut get_keys = BTreeSet::new();
+    for lit in &sc.strings {
+        if scan::in_test_region(&regions, lit.offset) {
+            continue;
+        }
+        let base = lit.content.rsplit('/').next().unwrap_or(&lit.content);
+        if base.ends_with(".hlo.txt") && (base.starts_with("fwd_") || base.starts_with("medusa")) {
+            rs_templates.insert(norm_template(base));
+        }
+        match call_before(&sc.code, lit.offset) {
+            Some("req") => {
+                req_keys.insert(lit.content.clone());
+            }
+            Some("get") => {
+                get_keys.insert(lit.content.clone());
+            }
+            _ => {}
+        }
+    }
+
+    for t in aot.templates.difference(&rs_templates) {
+        out.push(Violation::new(
+            aot_file.clone(),
+            0,
+            format!("template `{t}` produced by aot.py but not consumed by the rust config"),
+        ));
+    }
+    for t in rs_templates.difference(&aot.templates) {
+        out.push(Violation::new(
+            cfg_file.clone(),
+            0,
+            format!("template `{t}` expected by the rust config but not produced by aot.py"),
+        ));
+    }
+    for k in req_keys.iter().chain(get_keys.iter()) {
+        if !aot.config_keys.contains(k) {
+            out.push(Violation::new(
+                aot_file.clone(),
+                0,
+                format!("rust config loader reads key `{k}` but aot.py never writes it"),
+            ));
+        }
+    }
+
+    // kv_buckets fallback ∈ KV_VARIANTS
+    for (line, vals) in none_vec_fallbacks(&sc.code, &regions) {
+        for v in vals {
+            if !aot.kv_variants.is_empty() && !aot.kv_variants.contains(&v) {
+                out.push(Violation::new(
+                    cfg_file.clone(),
+                    line,
+                    format!(
+                        "kv fallback `{v}` is not in aot.py KV_VARIANTS {:?} — the \
+                         exporter never produces that graph",
+                        aot.kv_variants
+                    ),
+                ));
+            }
+        }
+    }
+
+    // manifest contract: main.rs reads manifest["models"]
+    if let Some(main_path) = main_rs_path {
+        if let Ok(main_src) = std::fs::read_to_string(main_path) {
+            let msc = scan::scan_rust(&main_src);
+            let reads_models = !scan::ident_occurrences(&msc.code, "load_manifest").is_empty()
+                && msc
+                    .strings
+                    .iter()
+                    .any(|l| l.content == "models" && call_before(&msc.code, l.offset) == Some("req"));
+            if reads_models && !aot.manifest_keys.contains("models") {
+                out.push(Violation::new(
+                    aot_file.clone(),
+                    0,
+                    "manifest key `models` is read by rust/src/main.rs but aot.py never writes it",
+                ));
+            }
+        }
+    }
+
+    // ci.yml asserted artifact names
+    if let Some(ci) = ci_path {
+        if let Ok(ci_src) = std::fs::read_to_string(ci) {
+            check_ci_names(&ci_src, &rel(ci, root), &aot, &mut out);
+        }
+    }
+    out
+}
+
+/// The callee identifier immediately before a string literal's opening
+/// quote, if the literal is that call's first argument (`req("k")`).
+fn call_before(code: &str, content_offset: usize) -> Option<&'static str> {
+    // content_offset points at the content start; the (blanked) opening
+    // quote sits one byte before it
+    if content_offset < 5 {
+        return None;
+    }
+    let before = &code[content_offset - 5..content_offset - 1];
+    if before == "req(" {
+        Some("req")
+    } else if before == "get(" {
+        Some("get")
+    } else {
+        None
+    }
+}
+
+/// `None => vec![ ... ]` fallback arms in non-test code: (line, values).
+fn none_vec_fallbacks(code: &str, regions: &[(usize, usize)]) -> Vec<(usize, Vec<u64>)> {
+    let bytes = code.as_bytes();
+    let mut out = Vec::new();
+    for occ in scan::ident_occurrences(code, "None") {
+        if scan::in_test_region(regions, occ) {
+            continue;
+        }
+        let mut i = occ + 4;
+        let skip_ws = |i: &mut usize| {
+            while *i < bytes.len() && bytes[*i].is_ascii_whitespace() {
+                *i += 1;
+            }
+        };
+        skip_ws(&mut i);
+        if !code[i..].starts_with("=>") {
+            continue;
+        }
+        i += 2;
+        skip_ws(&mut i);
+        if !code[i..].starts_with("vec!") {
+            continue;
+        }
+        i += 4;
+        skip_ws(&mut i);
+        if i >= bytes.len() || bytes[i] != b'[' {
+            continue;
+        }
+        let close = match scan::find_sub(bytes, i, b"]") {
+            Some(c) => c,
+            None => continue,
+        };
+        out.push((scan::line_of(code, occ), parse_ints(&code[i..close])));
+    }
+    out
+}
+
+fn check_ci_names(ci: &str, ci_file: &str, aot: &AotFacts, out: &mut Vec<Violation>) {
+    let bytes = ci.as_bytes();
+    let mut i = 0usize;
+    while let Some(p) = scan::find_sub(bytes, i, b"fwd_b") {
+        i = p + 1;
+        let mut j = p + 5;
+        let b = match take_int(bytes, &mut j) {
+            Some(v) => v,
+            None => continue,
+        };
+        if !ci[j..].starts_with("_n") {
+            continue;
+        }
+        j += 2;
+        let n = match take_int(bytes, &mut j) {
+            Some(v) => v,
+            None => continue,
+        };
+        let mut kv = None;
+        if ci[j..].starts_with("_s") {
+            j += 2;
+            kv = take_int(bytes, &mut j);
+        }
+        if !ci[j..].starts_with(".hlo.txt") {
+            continue;
+        }
+        let line = scan::line_of(ci, p);
+        if !aot.batch_buckets.is_empty() && !aot.batch_buckets.contains(&b) {
+            out.push(Violation::new(
+                ci_file.to_string(),
+                line,
+                format!("ci asserts batch bucket {b}, aot.py BATCH_BUCKETS is {:?}", aot.batch_buckets),
+            ));
+        }
+        if !aot.buckets.is_empty() && !aot.buckets.contains(&n) {
+            out.push(Violation::new(
+                ci_file.to_string(),
+                line,
+                format!("ci asserts token bucket {n}, aot.py BUCKETS is {:?}", aot.buckets),
+            ));
+        }
+        if let Some(max) = aot.batch_max_n {
+            if n > max {
+                out.push(Violation::new(
+                    ci_file.to_string(),
+                    line,
+                    format!("ci asserts n={n} above aot.py BATCH_MAX_N={max}"),
+                ));
+            }
+        }
+        if let Some(kv) = kv {
+            if !aot.kv_variants.is_empty() && !aot.kv_variants.contains(&kv) {
+                out.push(Violation::new(
+                    ci_file.to_string(),
+                    line,
+                    format!("ci asserts kv variant {kv}, aot.py KV_VARIANTS is {:?}", aot.kv_variants),
+                ));
+            }
+            if let Some(max) = aot.kv_variant_max_n {
+                if n > max {
+                    out.push(Violation::new(
+                        ci_file.to_string(),
+                        line,
+                        format!("ci asserts n={n} above aot.py KV_VARIANT_MAX_N={max}"),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+fn take_int(bytes: &[u8], i: &mut usize) -> Option<u64> {
+    let start = *i;
+    while *i < bytes.len() && bytes[*i].is_ascii_digit() {
+        *i += 1;
+    }
+    if *i == start {
+        return None;
+    }
+    std::str::from_utf8(&bytes[start..*i]).ok()?.parse().ok()
+}
+
+fn parse_ints(s: &str) -> Vec<u64> {
+    let mut out = Vec::new();
+    let bytes = s.as_bytes();
+    let mut i = 0usize;
+    while i < bytes.len() {
+        if bytes[i].is_ascii_digit() {
+            let mut j = i;
+            if let Some(v) = take_int(bytes, &mut j) {
+                out.push(v);
+            }
+            i = j;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Normalise `{anything}` placeholder spans to `{}`.
+fn norm_template(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c == '{' {
+            for d in chars.by_ref() {
+                if d == '}' {
+                    break;
+                }
+            }
+            out.push_str("{}");
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+fn parse_aot(src: &str, aot_file: &str, out: &mut Vec<Violation>) -> AotFacts {
+    let sc = scan::scan_python(src);
+    let mut facts = AotFacts {
+        buckets: py_int_list(&sc, "BUCKETS").unwrap_or_default(),
+        kv_variants: py_int_list(&sc, "KV_VARIANTS").unwrap_or_default(),
+        batch_buckets: py_int_list(&sc, "BATCH_BUCKETS").unwrap_or_default(),
+        kv_variant_max_n: py_int(&sc, "KV_VARIANT_MAX_N"),
+        batch_max_n: py_int(&sc, "BATCH_MAX_N"),
+        templates: BTreeSet::new(),
+        config_keys: dict_keys(&sc, "config"),
+        manifest_keys: dict_keys(&sc, "manifest"),
+    };
+    for (name, ok) in [
+        ("BUCKETS", !facts.buckets.is_empty()),
+        ("KV_VARIANTS", !facts.kv_variants.is_empty()),
+        ("BATCH_BUCKETS", !facts.batch_buckets.is_empty()),
+        ("KV_VARIANT_MAX_N", facts.kv_variant_max_n.is_some()),
+        ("BATCH_MAX_N", facts.batch_max_n.is_some()),
+    ] {
+        if !ok {
+            out.push(Violation::new(
+                aot_file.to_string(),
+                0,
+                format!("cannot parse `{name}` from aot.py — the contract check is blind"),
+            ));
+        }
+    }
+    for lit in &sc.strings {
+        let s = lit.content.as_str();
+        if s.ends_with(".hlo.txt") && (s.starts_with("fwd_") || s.starts_with("medusa")) {
+            facts.templates.insert(norm_template(s));
+        }
+    }
+    facts
+}
+
+/// `NAME = [ints...]` at statement level in blanked python code.
+fn py_int_list(sc: &Scan, name: &str) -> Option<Vec<u64>> {
+    let bytes = sc.code.as_bytes();
+    for occ in scan::ident_occurrences(&sc.code, name) {
+        let mut i = occ + name.len();
+        while i < bytes.len() && bytes[i] == b' ' {
+            i += 1;
+        }
+        if i >= bytes.len() || bytes[i] != b'=' || sc.code[i..].starts_with("==") {
+            continue;
+        }
+        i += 1;
+        while i < bytes.len() && bytes[i] == b' ' {
+            i += 1;
+        }
+        if i >= bytes.len() || bytes[i] != b'[' {
+            continue;
+        }
+        let close = scan::find_sub(bytes, i, b"]")?;
+        let vals = parse_ints(&sc.code[i..close]);
+        if !vals.is_empty() {
+            return Some(vals);
+        }
+    }
+    None
+}
+
+/// `NAME = <int>` at statement level in blanked python code.
+fn py_int(sc: &Scan, name: &str) -> Option<u64> {
+    let bytes = sc.code.as_bytes();
+    for occ in scan::ident_occurrences(&sc.code, name) {
+        let mut i = occ + name.len();
+        while i < bytes.len() && bytes[i] == b' ' {
+            i += 1;
+        }
+        if i >= bytes.len() || bytes[i] != b'=' || sc.code[i..].starts_with("==") {
+            continue;
+        }
+        i += 1;
+        while i < bytes.len() && bytes[i] == b' ' {
+            i += 1;
+        }
+        let mut j = i;
+        if let Some(v) = take_int(bytes, &mut j) {
+            return Some(v);
+        }
+    }
+    None
+}
+
+/// Keys of the first `NAME = { ... }` dict assignment: string literals
+/// inside the braces whose closing quote is followed by `:`.
+fn dict_keys(sc: &Scan, name: &str) -> BTreeSet<String> {
+    let bytes = sc.code.as_bytes();
+    let mut out = BTreeSet::new();
+    for occ in scan::ident_occurrences(&sc.code, name) {
+        let mut i = occ + name.len();
+        while i < bytes.len() && bytes[i] == b' ' {
+            i += 1;
+        }
+        if i >= bytes.len() || bytes[i] != b'=' || sc.code[i..].starts_with("==") {
+            continue;
+        }
+        i += 1;
+        while i < bytes.len() && (bytes[i] == b' ' || bytes[i] == b'\n') {
+            i += 1;
+        }
+        if i >= bytes.len() || bytes[i] != b'{' {
+            continue;
+        }
+        let mut depth = 0i64;
+        let mut k = i;
+        let mut end = bytes.len();
+        while k < bytes.len() {
+            match bytes[k] {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        end = k;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        for lit in &sc.strings {
+            if lit.offset <= i || lit.offset >= end {
+                continue;
+            }
+            // closing quote sits right after the raw content
+            let mut after = lit.offset + lit.content.len() + 1;
+            while after < bytes.len() && bytes[after] == b' ' {
+                after += 1;
+            }
+            if after < bytes.len() && bytes[after] == b':' {
+                out.insert(lit.content.clone());
+            }
+        }
+        return out;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    #[test]
+    fn seeded_contract_drift_is_caught() {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("fixtures/artifact_contract");
+        let v = check_paths(
+            &dir.join("aot.py"),
+            &dir.join("config.rs"),
+            None,
+            Some(&dir.join("ci.yml")),
+            &dir,
+        );
+        let msgs: Vec<String> = v.iter().map(Violation::render).collect();
+        assert!(
+            msgs.iter().any(|m| m.contains("template `fwd_x{}_n{}.hlo.txt` expected by the rust config")),
+            "{msgs:?}"
+        );
+        assert!(msgs.iter().any(|m| m.contains("reads key `missing_key`")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("kv fallback `512`")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("batch bucket 3")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("kv variant 999")), "{msgs:?}");
+        assert_eq!(v.len(), 5, "{msgs:?}");
+    }
+
+    #[test]
+    fn the_repo_is_clean() {
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../..");
+        let v = check(&root);
+        assert!(
+            v.is_empty(),
+            "{:?}",
+            v.iter().map(Violation::render).collect::<Vec<_>>()
+        );
+    }
+}

@@ -1,0 +1,69 @@
+//! Device-escape lint: decode engines reach the device only through
+//! the `runtime::Device` trait.
+//!
+//! The one-call-per-tick invariant (PR 3/4) holds because every engine
+//! in `rust/src/decoding/` is generic over `dyn Device` — a `Runtime`
+//! borrowed directly would let an engine issue device calls that bypass
+//! the fused tick plan and the shared-runtime dispatcher.  The lint
+//! bans the `Runtime` identifier from the decoding tree outright: no
+//! imports, no fields, no inherent-method calls.  (`SharedRuntime` — a
+//! `Device` impl that routes through the dispatcher — is a different
+//! identifier and stays legal, as do doc-comment mentions.)
+
+use std::path::Path;
+
+use crate::checks::{rel, Violation};
+use crate::scan;
+
+pub fn check(root: &Path) -> Vec<Violation> {
+    check_dir(&root.join("rust/src/decoding"), root)
+}
+
+pub fn check_dir(dir: &Path, root: &Path) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for file in scan::rust_files(&[dir.to_path_buf()], &[]) {
+        let src = match std::fs::read_to_string(&file) {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let sc = scan::scan_rust(&src);
+        let name = rel(&file, root);
+        for off in scan::ident_occurrences(&sc.code, "Runtime") {
+            out.push(Violation::new(
+                name.clone(),
+                scan::line_of(&sc.code, off),
+                "decode engines must reach the device through the `runtime::Device` \
+                 trait; a direct `Runtime` reference bypasses the fused tick plan and \
+                 the shared-runtime dispatcher (one-call-per-tick invariant)",
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    #[test]
+    fn seeded_runtime_reference_is_caught() {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("fixtures/device_escape");
+        let v = check_dir(&dir, &dir);
+        // the fixture engine imports Runtime and holds a &Runtime field:
+        // two hits; its SharedRuntime use and doc-comment mention are legal
+        assert_eq!(v.len(), 2, "{:?}", v.iter().map(Violation::render).collect::<Vec<_>>());
+        assert!(v.iter().all(|x| x.file.ends_with("bad_engine.rs")));
+    }
+
+    #[test]
+    fn the_repo_is_clean() {
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../..");
+        let v = check(&root);
+        assert!(
+            v.is_empty(),
+            "{:?}",
+            v.iter().map(Violation::render).collect::<Vec<_>>()
+        );
+    }
+}

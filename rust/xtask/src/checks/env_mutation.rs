@@ -1,0 +1,89 @@
+//! Env-mutation lint: no `std::env::set_var` / `remove_var` anywhere in
+//! the Rust tree.
+//!
+//! PR 5 shipped (and had to hand-fix) a test that flipped an env var
+//! while worker threads were live — `setenv` racing `getenv` is
+//! undefined behaviour in glibc, and with `set_var` becoming `unsafe`
+//! in edition 2024 the language agrees.  Configuration wants to flow
+//! through programmatic overrides (e.g.
+//! `runtime::set_kv_buckets_disabled`) that are scoped and
+//! thread-safe, so the lint bans the identifiers outright — tests
+//! included, because tests are exactly where the race shipped from.
+
+use std::path::Path;
+
+use crate::checks::{rel, Violation};
+use crate::scan;
+
+const BANNED: &[&str] = &["set_var", "remove_var"];
+
+pub fn check(root: &Path) -> Vec<Violation> {
+    let files = scan::rust_files(
+        &[root.join("rust"), root.join("examples")],
+        &[root.join("rust/xtask")],
+    );
+    let mut out = Vec::new();
+    for file in files {
+        out.extend(check_file(&file, root));
+    }
+    out
+}
+
+pub fn check_file(path: &Path, root: &Path) -> Vec<Violation> {
+    let src = match std::fs::read_to_string(path) {
+        Ok(s) => s,
+        Err(_) => return Vec::new(),
+    };
+    let sc = scan::scan_rust(&src);
+    let file = rel(path, root);
+    let mut out = Vec::new();
+    for name in BANNED {
+        for off in scan::ident_occurrences(&sc.code, name) {
+            out.push(Violation::new(
+                file.clone(),
+                scan::line_of(&sc.code, off),
+                format!(
+                    "forbidden env mutation `{name}`: mutating the process environment \
+                     while threads run is UB (glibc setenv/getenv race) — use a \
+                     programmatic override such as `runtime::set_kv_buckets_disabled` \
+                     instead"
+                ),
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn fixture(name: &str) -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("fixtures").join(name)
+    }
+
+    #[test]
+    fn seeded_violations_are_caught_and_comments_are_not() {
+        let path = fixture("env_mutation/bad_env.rs");
+        let root = fixture("env_mutation");
+        let v = check_file(&path, &root);
+        // the fixture seeds exactly one set_var and one remove_var call;
+        // its comment and string mentions must NOT fire
+        assert_eq!(v.len(), 2, "{:?}", v.iter().map(Violation::render).collect::<Vec<_>>());
+        assert!(v[0].msg.contains("set_var"));
+        assert!(v[1].msg.contains("remove_var"));
+        assert!(v.iter().all(|x| x.line > 0));
+    }
+
+    #[test]
+    fn the_repo_is_clean() {
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../..");
+        let v = check(&root);
+        assert!(
+            v.is_empty(),
+            "{:?}",
+            v.iter().map(Violation::render).collect::<Vec<_>>()
+        );
+    }
+}

@@ -1,0 +1,408 @@
+//! Metrics-registry check: every `ppd_*` string literal in the crate
+//! must agree with `rust/src/metrics/registry.rs`.
+//!
+//! Enforced, in both directions:
+//! * an undeclared `ppd_*` literal anywhere in src/tests/benches/
+//!   examples fails (drift: someone emitted or asserted a metric the
+//!   registry doesn't know);
+//! * label keys written next to a declared name (`name{key="..."}`)
+//!   must match the declared label set exactly;
+//! * duplicate or ill-formed registry names fail;
+//! * a declared metric that no non-test src file emits fails (dead
+//!   registry entries rot the docs);
+//! * a declared metric missing from README.md fails (the README metrics
+//!   table is the operator-facing contract).
+//!
+//! Emission is recognised either as a literal containing the full name
+//! or — for the `push(suffix)` builder pattern in the exporters — as a
+//! declared prefix literal plus the exact suffix literal in the same
+//! file.
+
+use std::path::{Path, PathBuf};
+
+use crate::checks::{rel, Violation};
+use crate::scan::{self, Scan, StrLit};
+
+pub struct Registry {
+    /// (name, label keys)
+    pub metrics: Vec<(String, Vec<String>)>,
+    pub prefixes: Vec<String>,
+    pub allow: Vec<String>,
+}
+
+pub fn check(root: &Path) -> Vec<Violation> {
+    check_paths(
+        &root.join("rust/src/metrics/registry.rs"),
+        &[
+            root.join("rust/src"),
+            root.join("rust/tests"),
+            root.join("rust/benches"),
+            root.join("examples"),
+        ],
+        &root.join("rust/src"),
+        &root.join("README.md"),
+        root,
+    )
+}
+
+pub fn check_paths(
+    registry_path: &Path,
+    scan_roots: &[PathBuf],
+    emission_root: &Path,
+    readme_path: &Path,
+    root: &Path,
+) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let reg_src = match std::fs::read_to_string(registry_path) {
+        Ok(s) => s,
+        Err(e) => {
+            out.push(Violation::new(rel(registry_path, root), 0, format!("unreadable: {e}")));
+            return out;
+        }
+    };
+    let registry = match parse_registry(&reg_src) {
+        Ok(r) => r,
+        Err(msg) => {
+            out.push(Violation::new(rel(registry_path, root), 0, msg));
+            return out;
+        }
+    };
+    let reg_file = rel(registry_path, root);
+
+    // registry self-consistency
+    for (i, (name, _)) in registry.metrics.iter().enumerate() {
+        if !name.starts_with("ppd_")
+            || !name.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+        {
+            out.push(Violation::new(
+                reg_file.clone(),
+                0,
+                format!("ill-formed metric name `{name}` (want ppd_[a-z0-9_]+)"),
+            ));
+        }
+        if registry.metrics[..i].iter().any(|(n, _)| n == name) {
+            out.push(Violation::new(
+                reg_file.clone(),
+                0,
+                format!("duplicate metric declaration `{name}`"),
+            ));
+        }
+    }
+
+    // literal scan + per-file emission inventory
+    let files = scan::rust_files(scan_roots, &[]);
+    let mut emissions: Vec<Vec<String>> = Vec::new();
+    for file in &files {
+        if file == registry_path {
+            continue;
+        }
+        let src = match std::fs::read_to_string(file) {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let sc = scan::scan_rust(&src);
+        let regions = scan::test_regions(&sc.code);
+        let name = rel(file, root);
+        let mut nontest = Vec::new();
+        for lit in &sc.strings {
+            let s = lit.content.replace("{{", "{").replace("}}", "}");
+            scan_literal(&s, lit, &name, &registry, &mut out);
+            if !scan::in_test_region(&regions, lit.offset) {
+                nontest.push(s);
+            }
+        }
+        if file.starts_with(emission_root) {
+            emissions.push(nontest);
+        }
+    }
+
+    // every declared metric must be emitted somewhere in non-test src
+    for (name, _) in &registry.metrics {
+        let emitted = emissions.iter().any(|lits| {
+            if lits.iter().any(|s| s.contains(name.as_str())) {
+                return true;
+            }
+            registry.prefixes.iter().any(|p| {
+                name.starts_with(p.as_str())
+                    && lits.iter().any(|s| s == p)
+                    && lits.iter().any(|s| s == &name[p.len()..])
+            })
+        });
+        if !emitted {
+            out.push(Violation::new(
+                reg_file.clone(),
+                0,
+                format!("metric `{name}` is declared but never emitted by non-test src"),
+            ));
+        }
+    }
+
+    // README coverage
+    match std::fs::read_to_string(readme_path) {
+        Ok(readme) => {
+            for (name, _) in &registry.metrics {
+                if !readme.contains(name.as_str()) {
+                    out.push(Violation::new(
+                        rel(readme_path, root),
+                        0,
+                        format!("metric `{name}` is not documented in the README metrics table"),
+                    ));
+                }
+            }
+        }
+        Err(e) => out.push(Violation::new(rel(readme_path, root), 0, format!("unreadable: {e}"))),
+    }
+    out
+}
+
+/// Classify every `ppd_*` token in one (brace-normalised) literal.
+fn scan_literal(s: &str, lit: &StrLit, file: &str, registry: &Registry, out: &mut Vec<Violation>) {
+    let bytes = s.as_bytes();
+    let mut i = 0usize;
+    while let Some(p) = scan::find_sub(bytes, i, b"ppd_") {
+        i = p + 1;
+        // token boundary on the left; a token right after `{` is a
+        // format-placeholder interpolation (`{ppd_tau:.2}`), not a name
+        if p > 0 {
+            let prev = bytes[p - 1];
+            if prev.is_ascii_lowercase() || prev.is_ascii_digit() || prev == b'_' || prev == b'{' {
+                continue;
+            }
+        }
+        let mut end = p;
+        while end < bytes.len()
+            && (bytes[end].is_ascii_lowercase() || bytes[end].is_ascii_digit() || bytes[end] == b'_')
+        {
+            end += 1;
+        }
+        let tok = &s[p..end];
+        if let Some((_, labels)) = registry.metrics.iter().find(|(n, _)| n == tok) {
+            if end < bytes.len() && bytes[end] == b'{' {
+                match parse_labels(bytes, end) {
+                    Some(mut keys) => {
+                        let mut want = labels.clone();
+                        keys.sort();
+                        want.sort();
+                        if keys != want {
+                            out.push(Violation::new(
+                                file.to_string(),
+                                lit.line,
+                                format!(
+                                    "metric `{tok}` written with labels {keys:?}, registry \
+                                     declares {want:?}"
+                                ),
+                            ));
+                        }
+                    }
+                    None => out.push(Violation::new(
+                        file.to_string(),
+                        lit.line,
+                        format!("malformed label block after metric `{tok}`"),
+                    )),
+                }
+            }
+            continue;
+        }
+        if registry.prefixes.iter().any(|pfx| pfx == tok) {
+            continue;
+        }
+        if registry.allow.iter().any(|a| tok.starts_with(a.as_str())) {
+            continue;
+        }
+        out.push(Violation::new(
+            file.to_string(),
+            lit.line,
+            format!(
+                "undeclared `ppd_*` literal `{tok}` — declare it in \
+                 rust/src/metrics/registry.rs (METRICS) or allowlist it (NON_METRIC_ALLOW)"
+            ),
+        ));
+    }
+}
+
+/// Parse `{key="...",key="..."}` starting at the `{`; values may carry
+/// `{placeholder}` interpolations.  Returns the keys, or None on a
+/// malformed block.
+fn parse_labels(bytes: &[u8], open: usize) -> Option<Vec<String>> {
+    let mut keys = Vec::new();
+    let mut i = open + 1;
+    loop {
+        let start = i;
+        while i < bytes.len() && (bytes[i].is_ascii_lowercase() || bytes[i] == b'_') {
+            i += 1;
+        }
+        if i == start || i >= bytes.len() || bytes[i] != b'=' {
+            return None;
+        }
+        keys.push(String::from_utf8_lossy(&bytes[start..i]).into_owned());
+        i += 1;
+        if i >= bytes.len() || bytes[i] != b'"' {
+            return None;
+        }
+        i += 1;
+        while i < bytes.len() && bytes[i] != b'"' {
+            i += 1;
+        }
+        if i >= bytes.len() {
+            return None;
+        }
+        i += 1; // closing quote
+        match bytes.get(i) {
+            Some(b',') => i += 1,
+            Some(b'}') => return Some(keys),
+            _ => return None,
+        }
+    }
+}
+
+/// Parse the three declaration tables out of registry.rs source.
+pub fn parse_registry(src: &str) -> Result<Registry, String> {
+    let sc = scan::scan_rust(src);
+    let (ma, mb) = const_value_range(&sc, "METRICS")
+        .ok_or("cannot locate `const METRICS` table in registry.rs")?;
+    let mut metrics = Vec::new();
+    for (ga, gb) in paren_groups(&sc.code, ma, mb) {
+        let lits: Vec<&StrLit> =
+            sc.strings.iter().filter(|l| l.offset >= ga && l.offset < gb).collect();
+        if lits.len() < 2 {
+            return Err(format!(
+                "metric entry at byte {ga} has {} string literals, want name + help",
+                lits.len()
+            ));
+        }
+        let name = lits[0].content.clone();
+        let labels = lits[1..lits.len() - 1].iter().map(|l| l.content.clone()).collect();
+        metrics.push((name, labels));
+    }
+    if metrics.is_empty() {
+        return Err("METRICS table is empty".into());
+    }
+    let read_list = |ident: &str| -> Result<Vec<String>, String> {
+        let (a, b) = const_value_range(&sc, ident)
+            .ok_or_else(|| format!("cannot locate `const {ident}` in registry.rs"))?;
+        Ok(sc
+            .strings
+            .iter()
+            .filter(|l| l.offset >= a && l.offset < b)
+            .map(|l| l.content.clone())
+            .collect())
+    };
+    Ok(Registry {
+        metrics,
+        prefixes: read_list("METRIC_PREFIXES")?,
+        allow: read_list("NON_METRIC_ALLOW")?,
+    })
+}
+
+/// Byte range of the `[...]` value of `const <ident>: ... = &[...]` —
+/// the occurrence preceded by `const`, value brackets after the `=`.
+fn const_value_range(sc: &Scan, ident: &str) -> Option<(usize, usize)> {
+    let bytes = sc.code.as_bytes();
+    for occ in scan::ident_occurrences(&sc.code, ident) {
+        let before = sc.code[..occ].trim_end();
+        if !before.ends_with("const") {
+            continue;
+        }
+        let eq = scan::find_sub(bytes, occ, b"=")?;
+        let open = scan::find_sub(bytes, eq, b"[")?;
+        let mut depth = 0i64;
+        let mut k = open;
+        while k < bytes.len() {
+            match bytes[k] {
+                b'[' => depth += 1,
+                b']' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Some((open, k + 1));
+                    }
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        return None;
+    }
+    None
+}
+
+/// Top-level `(...)` group ranges within `[a, b)`.
+fn paren_groups(code: &str, a: usize, b: usize) -> Vec<(usize, usize)> {
+    let bytes = code.as_bytes();
+    let mut out = Vec::new();
+    let mut depth = 0i64;
+    let mut start = 0usize;
+    for k in a..b.min(bytes.len()) {
+        match bytes[k] {
+            b'(' => {
+                if depth == 0 {
+                    start = k;
+                }
+                depth += 1;
+            }
+            b')' => {
+                depth -= 1;
+                if depth == 0 {
+                    out.push((start, k + 1));
+                }
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn fixture_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("fixtures/metrics_registry")
+    }
+
+    #[test]
+    fn seeded_fixture_violations_are_caught() {
+        let dir = fixture_dir();
+        let v = check_paths(
+            &dir.join("registry.rs"),
+            &[dir.join("src")],
+            &dir.join("src"),
+            &dir.join("README.md"),
+            &dir,
+        );
+        let msgs: Vec<String> = v.iter().map(Violation::render).collect();
+        assert!(msgs.iter().any(|m| m.contains("duplicate metric declaration `ppd_fx_dup_total`")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("undeclared `ppd_*` literal `ppd_fx_unknown_total`")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("metric `ppd_fx_labeled_total` written with labels")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("`ppd_fx_never_emitted_total` is declared but never emitted")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("`ppd_fx_undocumented_total` is not documented")), "{msgs:?}");
+        assert_eq!(v.len(), 5, "{msgs:?}");
+    }
+
+    #[test]
+    fn the_repo_is_clean() {
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../..");
+        let v = check(&root);
+        assert!(
+            v.is_empty(),
+            "{:?}",
+            v.iter().map(Violation::render).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn registry_parses_the_real_declarations() {
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../..");
+        let src = std::fs::read_to_string(root.join("rust/src/metrics/registry.rs"))
+            .expect("registry source");
+        let reg = parse_registry(&src).expect("parse");
+        assert!(reg.metrics.len() >= 30);
+        assert!(reg.prefixes.iter().any(|p| p == "ppd_queue_"));
+        let (_, labels) = reg
+            .metrics
+            .iter()
+            .find(|(n, _)| n == "ppd_runtime_bucket_forwards_total")
+            .expect("declared");
+        assert_eq!(labels, &["n", "kv"]);
+    }
+}

@@ -1,0 +1,37 @@
+//! The five project-invariant checks `cargo xtask analyze` runs.
+
+pub mod artifact_contract;
+pub mod device_escape;
+pub mod env_mutation;
+pub mod metrics_registry;
+pub mod unwrap_ratchet;
+
+use std::path::Path;
+
+/// One finding: `file` is repo-relative, `line` is 1-based (0 for
+/// file-level findings).
+pub struct Violation {
+    pub file: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+impl Violation {
+    pub fn new(file: impl Into<String>, line: usize, msg: impl Into<String>) -> Self {
+        Violation { file: file.into(), line, msg: msg.into() }
+    }
+
+    pub fn render(&self) -> String {
+        if self.line == 0 {
+            format!("{}: {}", self.file, self.msg)
+        } else {
+            format!("{}:{}: {}", self.file, self.line, self.msg)
+        }
+    }
+}
+
+/// Repo-relative display path (falls back to the full path when the
+/// file is outside `root`, e.g. fixture scans in the self-tests).
+pub fn rel(path: &Path, root: &Path) -> String {
+    path.strip_prefix(root).unwrap_or(path).display().to_string()
+}

@@ -1,0 +1,209 @@
+//! Unwrap ratchet: per-module `.unwrap()` / `.expect(` counts in
+//! non-test code must not grow past the committed baseline.
+//!
+//! `rust/xtask/unwrap-baseline.txt` holds `module: count` lines, one
+//! per directory (or top-level file) under `rust/src`.  Growth in the
+//! enforced hot-path modules (`batch`, `coordinator`, `runtime`) is a
+//! violation — convert the new site to a typed error, or, when it
+//! really is an invariant, an `.expect("why this cannot fail")` plus a
+//! deliberate baseline bump (`cargo xtask analyze --update-baselines`).
+//! Growth elsewhere only warns; shrinkage anywhere prints a reminder to
+//! ratchet the baseline down.  Test-region code (`#[cfg(test)]`) is not
+//! counted: tests may unwrap freely.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::checks::Violation;
+use crate::scan;
+
+pub const ENFORCED: &[&str] = &["batch", "coordinator", "runtime"];
+
+pub fn baseline_path(root: &Path) -> std::path::PathBuf {
+    root.join("rust/xtask/unwrap-baseline.txt")
+}
+
+pub fn check(root: &Path, update: bool) -> Vec<Violation> {
+    let counts = count_modules(&root.join("rust/src"));
+    let path = baseline_path(root);
+    if update {
+        let mut text = String::from(
+            "# Non-test .unwrap()/.expect( sites per module under rust/src.\n\
+             # Maintained by `cargo xtask analyze --update-baselines`; growth in\n\
+             # batch/coordinator/runtime fails `cargo xtask analyze`.\n",
+        );
+        for (module, n) in &counts {
+            text.push_str(&format!("{module}: {n}\n"));
+        }
+        if let Err(e) = std::fs::write(&path, text) {
+            return vec![Violation::new(path.display().to_string(), 0, format!("write failed: {e}"))];
+        }
+        return Vec::new();
+    }
+    let baseline_src = match std::fs::read_to_string(&path) {
+        Ok(s) => s,
+        Err(e) => {
+            return vec![Violation::new(
+                "rust/xtask/unwrap-baseline.txt",
+                0,
+                format!("unreadable ({e}) — run `cargo xtask analyze --update-baselines`"),
+            )]
+        }
+    };
+    compare(&counts, &parse_baseline(&baseline_src))
+}
+
+pub fn compare(
+    counts: &BTreeMap<String, usize>,
+    baseline: &BTreeMap<String, usize>,
+) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for (module, &n) in counts {
+        let base = baseline.get(module).copied().unwrap_or(0);
+        if n > base {
+            if ENFORCED.contains(&module.as_str()) {
+                out.push(Violation::new(
+                    "rust/xtask/unwrap-baseline.txt",
+                    0,
+                    format!(
+                        "unwrap/expect count in `{module}` grew {base} -> {n}: convert the \
+                         new site to a typed error, or justify it and run \
+                         `cargo xtask analyze --update-baselines`"
+                    ),
+                ));
+            } else {
+                eprintln!(
+                    "warning: unwrap/expect count in `{module}` grew {base} -> {n} \
+                     (unenforced module; consider updating the baseline)"
+                );
+            }
+        } else if n < base {
+            eprintln!(
+                "note: unwrap/expect count in `{module}` shrank {base} -> {n} — run \
+                 `cargo xtask analyze --update-baselines` to ratchet down"
+            );
+        }
+    }
+    out
+}
+
+pub fn parse_baseline(src: &str) -> BTreeMap<String, usize> {
+    let mut out = BTreeMap::new();
+    for line in src.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some((module, n)) = line.split_once(':') {
+            if let Ok(n) = n.trim().parse() {
+                out.insert(module.trim().to_string(), n);
+            }
+        }
+    }
+    out
+}
+
+/// Non-test unwrap/expect counts keyed by first path component under
+/// `src_root` (top-level files count under their file stem).
+pub fn count_modules(src_root: &Path) -> BTreeMap<String, usize> {
+    let mut out = BTreeMap::new();
+    for file in scan::rust_files(&[src_root.to_path_buf()], &[]) {
+        let module = match file.strip_prefix(src_root).ok().and_then(|r| {
+            let mut comps = r.components();
+            let first = comps.next()?.as_os_str().to_string_lossy().into_owned();
+            Some(if comps.next().is_some() {
+                first
+            } else {
+                first.trim_end_matches(".rs").to_string()
+            })
+        }) {
+            Some(m) => m,
+            None => continue,
+        };
+        let src = match std::fs::read_to_string(&file) {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        *out.entry(module).or_insert(0) += count_file(&src);
+    }
+    out
+}
+
+pub fn count_file(src: &str) -> usize {
+    let sc = scan::scan_rust(src);
+    let regions = scan::test_regions(&sc.code);
+    let bytes = sc.code.as_bytes();
+    let mut n = 0usize;
+    for (name, want_empty_parens) in [("unwrap", true), ("expect", false)] {
+        for occ in scan::ident_occurrences(&sc.code, name) {
+            // method position: a `.` before the ident (whitespace
+            // between allowed — chained calls wrap across lines)
+            let mut d = occ;
+            while d > 0 && bytes[d - 1].is_ascii_whitespace() {
+                d -= 1;
+            }
+            if d == 0 || bytes[d - 1] != b'.' || scan::in_test_region(&regions, occ) {
+                continue;
+            }
+            let mut i = occ + name.len();
+            while i < bytes.len() && bytes[i].is_ascii_whitespace() {
+                i += 1;
+            }
+            if i >= bytes.len() || bytes[i] != b'(' {
+                continue;
+            }
+            if want_empty_parens {
+                let mut j = i + 1;
+                while j < bytes.len() && bytes[j].is_ascii_whitespace() {
+                    j += 1;
+                }
+                if j >= bytes.len() || bytes[j] != b')' {
+                    continue;
+                }
+            }
+            n += 1;
+        }
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn fixture_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("fixtures/unwrap_ratchet")
+    }
+
+    #[test]
+    fn counts_skip_tests_and_non_call_idents() {
+        let counts = count_modules(&fixture_dir().join("src"));
+        // overflow/mod.rs seeds 2 unwraps + 1 expect in live code, plus
+        // test-region unwraps and an `unwrap_or` that must not count
+        assert_eq!(counts.get("overflow"), Some(&3), "{counts:?}");
+        assert_eq!(counts.get("ok"), Some(&0), "{counts:?}");
+    }
+
+    #[test]
+    fn growth_over_baseline_fails_enforced_modules_only() {
+        let mut counts = BTreeMap::new();
+        counts.insert("batch".to_string(), 5);
+        counts.insert("metrics".to_string(), 9);
+        let baseline = parse_baseline("# comment\nbatch: 4\nmetrics: 2\n");
+        let v = compare(&counts, &baseline);
+        assert_eq!(v.len(), 1, "{:?}", v.iter().map(Violation::render).collect::<Vec<_>>());
+        assert!(v[0].msg.contains("`batch` grew 4 -> 5"));
+    }
+
+    #[test]
+    fn the_repo_matches_its_baseline() {
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../..");
+        let v = check(&root, false);
+        assert!(
+            v.is_empty(),
+            "{:?}",
+            v.iter().map(Violation::render).collect::<Vec<_>>()
+        );
+    }
+}

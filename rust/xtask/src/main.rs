@@ -1,0 +1,93 @@
+//! `cargo xtask analyze` — the project static-analysis suite.
+//!
+//! Five checks over the whole repo (see ISSUE 6 / README "Static
+//! analysis & sanitizers"):
+//!
+//! * `env-mutation`      — no `std::env::set_var`/`remove_var` in rust/
+//! * `device-escape`     — decoding engines use `Device`, never `Runtime`
+//! * `metrics-registry`  — `ppd_*` literals agree with metrics/registry.rs
+//! * `artifact-contract` — aot.py and the rust config parsers agree
+//! * `unwrap-ratchet`    — per-module unwrap counts never grow
+//!
+//! Exit code 1 when any check finds a violation.  Flags:
+//!
+//!     cargo xtask analyze [--check NAME] [--root PATH] [--update-baselines]
+
+mod checks;
+mod scan;
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use checks::Violation;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: cargo xtask analyze [--check NAME] [--root PATH] [--update-baselines]\n\
+         checks: env-mutation device-escape metrics-registry artifact-contract unwrap-ratchet"
+    );
+    std::process::exit(2);
+}
+
+fn main() -> ExitCode {
+    let mut args = std::env::args().skip(1);
+    match args.next().as_deref() {
+        Some("analyze") => {}
+        _ => usage(),
+    }
+    let mut root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let mut only: Option<String> = None;
+    let mut update = false;
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => root = PathBuf::from(args.next().unwrap_or_else(|| usage())),
+            "--check" => only = Some(args.next().unwrap_or_else(|| usage())),
+            "--update-baselines" => update = true,
+            _ => usage(),
+        }
+    }
+    let root = root.canonicalize().unwrap_or(root);
+
+    type Check = fn(&std::path::Path) -> Vec<Violation>;
+    let table: &[(&str, Check)] = &[
+        ("env-mutation", checks::env_mutation::check),
+        ("device-escape", checks::device_escape::check),
+        ("metrics-registry", checks::metrics_registry::check),
+        ("artifact-contract", checks::artifact_contract::check),
+    ];
+
+    let mut total = 0usize;
+    let wanted = |name: &str| only.as_deref().map_or(true, |o| o == name);
+    for (name, run) in table {
+        if !wanted(name) {
+            continue;
+        }
+        total += report(name, run(&root));
+    }
+    if wanted("unwrap-ratchet") {
+        total += report("unwrap-ratchet", checks::unwrap_ratchet::check(&root, update));
+        if update {
+            println!("unwrap-ratchet    : baseline rewritten");
+        }
+    }
+
+    if total == 0 {
+        println!("analyze: all checks clean");
+        ExitCode::SUCCESS
+    } else {
+        println!("analyze: {total} violation(s)");
+        ExitCode::FAILURE
+    }
+}
+
+fn report(name: &str, violations: Vec<Violation>) -> usize {
+    if violations.is_empty() {
+        println!("{name:<18}: ok");
+    } else {
+        println!("{name:<18}: {} violation(s)", violations.len());
+        for v in &violations {
+            println!("  {}", v.render());
+        }
+    }
+    violations.len()
+}

@@ -1,0 +1,450 @@
+//! Token-level Rust/Python source scanning shared by every check.
+//!
+//! A deliberate non-goal is full parsing: `syn` would drag a dependency
+//! tree into the no-network container, and each check here needs only
+//! token-level facts — where comments and string literals are, where
+//! `#[cfg(test)]` regions span, where an identifier occurs.  The
+//! scanner blanks comment text and literal *contents* to spaces
+//! (newlines preserved), so byte offsets and line numbers in the
+//! blanked code match the original source exactly.
+
+/// One string literal: `offset` is the byte offset of the content start
+/// in the original source, `line` its 1-based line, `content` the
+/// unescaped text.
+pub struct StrLit {
+    pub offset: usize,
+    pub line: usize,
+    pub content: String,
+}
+
+pub struct Scan {
+    /// source with comments and literal contents blanked to spaces
+    pub code: String,
+    pub strings: Vec<StrLit>,
+}
+
+fn blank(out: &mut [u8], a: usize, b: usize) {
+    let b = b.min(out.len());
+    for byte in &mut out[a..b] {
+        if *byte != b'\n' {
+            *byte = b' ';
+        }
+    }
+}
+
+fn count_nl(bytes: &[u8], a: usize, b: usize) -> usize {
+    bytes[a..b.min(bytes.len())].iter().filter(|&&c| c == b'\n').count()
+}
+
+fn prev_is_ident(bytes: &[u8], i: usize) -> bool {
+    i > 0 && (bytes[i - 1].is_ascii_alphanumeric() || bytes[i - 1] == b'_')
+}
+
+fn unescape(raw: &str) -> String {
+    let mut out = String::with_capacity(raw.len());
+    let mut it = raw.chars();
+    while let Some(c) = it.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match it.next() {
+            Some('n') => out.push('\n'),
+            Some('t') => out.push('\t'),
+            Some('r') => out.push('\r'),
+            Some('0') => out.push('\0'),
+            Some('\\') => out.push('\\'),
+            Some('"') => out.push('"'),
+            Some('\'') => out.push('\''),
+            Some(other) => {
+                out.push('\\');
+                out.push(other);
+            }
+            None => out.push('\\'),
+        }
+    }
+    out
+}
+
+/// Scan Rust source: blank comments/literals, collect string literals.
+pub fn scan_rust(src: &str) -> Scan {
+    let bytes = src.as_bytes();
+    let n = bytes.len();
+    let mut out = bytes.to_vec();
+    let mut strings = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+
+    while i < n {
+        let c = bytes[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        // line comment
+        if c == b'/' && i + 1 < n && bytes[i + 1] == b'/' {
+            let mut j = i;
+            while j < n && bytes[j] != b'\n' {
+                j += 1;
+            }
+            blank(&mut out, i, j);
+            i = j;
+            continue;
+        }
+        // block comment (nested)
+        if c == b'/' && i + 1 < n && bytes[i + 1] == b'*' {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if bytes[j] == b'/' && j + 1 < n && bytes[j + 1] == b'*' {
+                    depth += 1;
+                    j += 2;
+                } else if bytes[j] == b'*' && j + 1 < n && bytes[j + 1] == b'/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    if bytes[j] == b'\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+            }
+            blank(&mut out, i, j);
+            i = j;
+            continue;
+        }
+        // raw (byte) strings: r"..", r#".."#, br#".."# — guard against
+        // plain identifiers starting with r/b
+        if (c == b'r' || (c == b'b' && i + 1 < n && bytes[i + 1] == b'r')) && !prev_is_ident(bytes, i)
+        {
+            let mut j = i + if c == b'b' { 2 } else { 1 };
+            let mut hashes = 0usize;
+            while j < n && bytes[j] == b'#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && bytes[j] == b'"' {
+                let start = j + 1;
+                let mut k = start;
+                let end = loop {
+                    if k >= n {
+                        break n;
+                    }
+                    if bytes[k] == b'"'
+                        && k + 1 + hashes <= n
+                        && bytes[k + 1..k + 1 + hashes].iter().all(|&h| h == b'#')
+                    {
+                        break k;
+                    }
+                    k += 1;
+                };
+                strings.push(StrLit { offset: start, line, content: src[start..end].to_string() });
+                let stop = (end + 1 + hashes).min(n);
+                line += count_nl(bytes, i, stop);
+                blank(&mut out, i, stop);
+                i = stop;
+                continue;
+            }
+            // not a raw string after all (e.g. `r#type` raw ident, or a
+            // plain ident) — consume one byte and keep going
+            i += 1;
+            continue;
+        }
+        // plain / byte string
+        if c == b'"' || (c == b'b' && i + 1 < n && bytes[i + 1] == b'"' && !prev_is_ident(bytes, i))
+        {
+            let start = i + if c == b'b' { 2 } else { 1 };
+            let mut j = start;
+            while j < n {
+                match bytes[j] {
+                    b'\\' => j += 2,
+                    b'"' => break,
+                    _ => j += 1,
+                }
+            }
+            let end = j.min(n);
+            strings.push(StrLit { offset: start, line, content: unescape(&src[start..end]) });
+            let stop = (end + 1).min(n);
+            line += count_nl(bytes, i, stop);
+            blank(&mut out, i, stop);
+            i = stop;
+            continue;
+        }
+        // char literal vs lifetime
+        if c == b'\'' {
+            if i + 1 < n && bytes[i + 1] == b'\\' {
+                let mut j = i + 2;
+                while j < n && bytes[j] != b'\'' {
+                    j += 1;
+                }
+                blank(&mut out, i, (j + 1).min(n));
+                i = (j + 1).min(n);
+                continue;
+            }
+            if i + 2 < n && bytes[i + 2] == b'\'' {
+                blank(&mut out, i, i + 3);
+                i += 3;
+                continue;
+            }
+            i += 1; // lifetime
+            continue;
+        }
+        // skip over plain identifiers wholesale so ident-leading `b`/`r`
+        // never re-enter the literal branches mid-word
+        if c.is_ascii_alphabetic() || c == b'_' {
+            let mut j = i + 1;
+            while j < n && (bytes[j].is_ascii_alphanumeric() || bytes[j] == b'_') {
+                j += 1;
+            }
+            i = j;
+            continue;
+        }
+        i += 1;
+    }
+    // only ASCII bytes were overwritten (with ASCII spaces), so the
+    // result is valid UTF-8
+    Scan { code: String::from_utf8(out).expect("blanking preserves UTF-8"), strings }
+}
+
+/// Scan Python source: blank `#` comments, triple-quoted strings
+/// entirely, and single-quoted literal contents; collect the
+/// single-quoted literals (raw, no unescaping — the aot.py contract
+/// strings contain no escapes).
+pub fn scan_python(src: &str) -> Scan {
+    let bytes = src.as_bytes();
+    let n = bytes.len();
+    let mut out = bytes.to_vec();
+    let mut strings = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+
+    while i < n {
+        let c = bytes[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == b'#' {
+            let mut j = i;
+            while j < n && bytes[j] != b'\n' {
+                j += 1;
+            }
+            blank(&mut out, i, j);
+            i = j;
+            continue;
+        }
+        if c == b'"' || c == b'\'' {
+            // triple-quoted: blank whole literal, keep nothing
+            if i + 2 < n && bytes[i + 1] == c && bytes[i + 2] == c {
+                let mut j = i + 3;
+                while j + 2 < n && !(bytes[j] == c && bytes[j + 1] == c && bytes[j + 2] == c) {
+                    j += 1;
+                }
+                let stop = (j + 3).min(n);
+                line += count_nl(bytes, i, stop);
+                blank(&mut out, i, stop);
+                i = stop;
+                continue;
+            }
+            let start = i + 1;
+            let mut j = start;
+            while j < n && bytes[j] != c {
+                if bytes[j] == b'\\' {
+                    j += 1;
+                }
+                j += 1;
+            }
+            let end = j.min(n);
+            strings.push(StrLit { offset: start, line, content: src[start..end].to_string() });
+            let stop = (end + 1).min(n);
+            line += count_nl(bytes, i, stop);
+            blank(&mut out, i, stop);
+            i = stop;
+            continue;
+        }
+        i += 1;
+    }
+    Scan { code: String::from_utf8(out).expect("blanking preserves UTF-8"), strings }
+}
+
+/// 1-based line of a byte offset in `text`.
+pub fn line_of(text: &str, offset: usize) -> usize {
+    text.as_bytes()[..offset.min(text.len())].iter().filter(|&&c| c == b'\n').count() + 1
+}
+
+/// Byte ranges of `#[cfg(test)]`-gated items (attribute through the
+/// matching close brace of the item's block).
+pub fn test_regions(code: &str) -> Vec<(usize, usize)> {
+    let bytes = code.as_bytes();
+    let pat = b"#[cfg(test)]";
+    let mut regions = Vec::new();
+    let mut i = 0usize;
+    while let Some(p) = find_sub(bytes, i, pat) {
+        let mut j = p + pat.len();
+        while j < bytes.len() && bytes[j] != b'{' {
+            j += 1;
+        }
+        let mut depth = 0i64;
+        let mut k = j;
+        let mut end = bytes.len();
+        while k < bytes.len() {
+            match bytes[k] {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        end = k + 1;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        regions.push((p, end));
+        i = end.max(p + 1);
+    }
+    regions
+}
+
+pub fn in_test_region(regions: &[(usize, usize)], offset: usize) -> bool {
+    regions.iter().any(|&(a, b)| a <= offset && offset < b)
+}
+
+/// Byte offsets of exact-identifier occurrences of `ident` in blanked
+/// code (so `Runtime` never matches `SharedRuntime` or `RuntimeStats`).
+pub fn ident_occurrences(code: &str, ident: &str) -> Vec<usize> {
+    let bytes = code.as_bytes();
+    let pat = ident.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while let Some(p) = find_sub(bytes, i, pat) {
+        let before_ok = !prev_is_ident(bytes, p);
+        let after = p + pat.len();
+        let after_ok = after >= bytes.len()
+            || !(bytes[after].is_ascii_alphanumeric() || bytes[after] == b'_');
+        if before_ok && after_ok {
+            out.push(p);
+        }
+        i = p + 1;
+    }
+    out
+}
+
+/// Naive substring search from `from`.
+pub fn find_sub(haystack: &[u8], from: usize, needle: &[u8]) -> Option<usize> {
+    if needle.is_empty() || haystack.len() < needle.len() {
+        return None;
+    }
+    let last = haystack.len() - needle.len();
+    let mut i = from;
+    while i <= last {
+        if &haystack[i..i + needle.len()] == needle {
+            return Some(i);
+        }
+        i += 1;
+    }
+    None
+}
+
+/// All `.rs` files under `roots` (recursive, sorted), skipping `target`,
+/// `.git`, and anything under `exclude`.
+pub fn rust_files(
+    roots: &[std::path::PathBuf],
+    exclude: &[std::path::PathBuf],
+) -> Vec<std::path::PathBuf> {
+    let mut out = Vec::new();
+    for root in roots {
+        walk(root, exclude, &mut out);
+    }
+    out.sort();
+    out
+}
+
+fn walk(dir: &std::path::Path, exclude: &[std::path::PathBuf], out: &mut Vec<std::path::PathBuf>) {
+    if exclude.iter().any(|e| dir.starts_with(e)) {
+        return;
+    }
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return,
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            let name = entry.file_name();
+            if name == "target" || name == ".git" || name == "fixtures" {
+                continue;
+            }
+            walk(&path, exclude, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_are_blanked_but_offsets_hold() {
+        let src = "let a = \"x{y}\"; // set_var in a comment\nlet b = 'c';\n";
+        let sc = scan_rust(src);
+        assert_eq!(sc.strings.len(), 1);
+        assert_eq!(sc.strings[0].content, "x{y}");
+        assert_eq!(sc.strings[0].line, 1);
+        assert!(!sc.code.contains("set_var"));
+        assert!(!sc.code.contains("x{y}"));
+        assert_eq!(sc.code.len(), src.len());
+        assert_eq!(line_of(&sc.code, sc.code.find("let b").expect("b")), 2);
+    }
+
+    #[test]
+    fn raw_strings_lifetimes_and_nested_comments() {
+        let src = "fn f<'a>(x: &'a str) { let r = r#\"a \"quote\" b\"#; /* outer /* inner */ still */ let c = '\\n'; }";
+        let sc = scan_rust(src);
+        assert_eq!(sc.strings.len(), 1);
+        assert_eq!(sc.strings[0].content, "a \"quote\" b");
+        assert!(!sc.code.contains("inner"));
+        assert!(sc.code.contains("fn f<'a>"));
+    }
+
+    #[test]
+    fn escapes_unescape_and_unicode_survives() {
+        let src = "let s = \"a\\\"b\\n\"; // ──▶ arrows\nlet t = \"ok\";";
+        let sc = scan_rust(src);
+        assert_eq!(sc.strings[0].content, "a\"b\n");
+        assert_eq!(sc.strings[1].content, "ok");
+        assert_eq!(sc.strings[1].line, 2);
+    }
+
+    #[test]
+    fn test_region_spans_the_mod_block() {
+        let code = "fn live() {}\n#[cfg(test)]\nmod tests {\n fn inner() { x.unwrap() }\n}\nfn after() {}\n";
+        let sc = scan_rust(code);
+        let regions = test_regions(&sc.code);
+        assert_eq!(regions.len(), 1);
+        assert!(in_test_region(&regions, sc.code.find("unwrap").expect("u")));
+        assert!(!in_test_region(&regions, sc.code.find("live").expect("l")));
+        assert!(!in_test_region(&regions, sc.code.find("after").expect("a")));
+    }
+
+    #[test]
+    fn ident_occurrences_respect_boundaries() {
+        let sc = scan_rust("use a::Runtime; let x: SharedRuntime = y; RuntimeStats::new();");
+        assert_eq!(ident_occurrences(&sc.code, "Runtime").len(), 1);
+    }
+
+    #[test]
+    fn python_docstrings_are_dropped_and_fstrings_kept() {
+        let src = "\"\"\"doc fwd_n<k>.hlo.txt\"\"\"\nX = [1, 2]\nname = f\"fwd_n{n}.hlo.txt\"  # comment \"quoted\"\n";
+        let sc = scan_python(src);
+        assert_eq!(sc.strings.len(), 1);
+        assert_eq!(sc.strings[0].content, "fwd_n{n}.hlo.txt");
+        assert!(sc.code.contains("X = [1, 2]"));
+        assert!(!sc.code.contains("comment"));
+    }
+}

@@ -1,0 +1,99 @@
+#!/usr/bin/env python3
+"""Bench-trajectory regression gate for the scheduler sweep.
+
+Compares a fresh ``BENCH_sched.json`` (written by
+``cargo run --release --example bench_sched``) against the committed
+``BENCH_baseline.json`` and fails when device calls per token regress:
+
+* every sweep point's value must stay at or under its committed
+  ``ceiling`` (a hard structural bound: the fusion ladder with margin);
+* points that carry a numeric ``reference`` must additionally stay
+  within ``growth_pct`` (default 10%) of it.
+
+``serial`` points are a pure function of the scheduler (one device call
+per generated token), so their references are exact.  ``fused`` and
+``shared`` points go through live threads and coalescing windows, so
+their baseline starts ceiling-only; seed tight references from a
+trusted machine with::
+
+    python3 tools/bench_gate.py BENCH_sched.json BENCH_baseline.json --seed
+
+which fills each ``reference`` from the fresh run (and is a no-op on
+the ceilings).  CI runs the plain compare form.
+"""
+
+import argparse
+import json
+import sys
+
+
+def load_points(report):
+    if report.get("bench") != "sched" or "runs" not in report:
+        raise SystemExit("bench_gate: fresh artifact is not a sched sweep report")
+    points = {}
+    for run in report["runs"]:
+        key = f"{run['mode']}/{int(run['workers'])}"
+        points[key] = float(run["device_calls_per_token"])
+    return points
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("fresh", help="BENCH_sched.json from this run")
+    ap.add_argument("baseline", help="committed BENCH_baseline.json")
+    ap.add_argument(
+        "--seed",
+        action="store_true",
+        help="rewrite the baseline's references from the fresh run",
+    )
+    args = ap.parse_args()
+
+    with open(args.fresh) as f:
+        fresh = load_points(json.load(f))
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    gate = baseline.get("gate", {})
+    growth = 1.0 + float(gate.get("growth_pct", 10)) / 100.0
+    expected = baseline.get("points", {})
+
+    missing = sorted(set(expected) - set(fresh))
+    if missing:
+        raise SystemExit(f"bench_gate: fresh run is missing sweep points: {missing}")
+
+    if args.seed:
+        for key, spec in expected.items():
+            spec["reference"] = round(fresh[key], 4)
+        with open(args.baseline, "w") as f:
+            json.dump(baseline, f, indent=2)
+            f.write("\n")
+        print(f"bench_gate: seeded {len(expected)} references into {args.baseline}")
+        return
+
+    failures = []
+    print("bench_gate: device calls per token (fresh vs committed)")
+    for key in sorted(expected):
+        spec = expected[key]
+        value = fresh[key]
+        ceiling = float(spec["ceiling"])
+        reference = spec.get("reference")
+        limit = ceiling
+        detail = f"ceiling {ceiling:.3f}"
+        if reference is not None:
+            limit = min(limit, float(reference) * growth)
+            detail += f", reference {float(reference):.3f} (+{gate.get('growth_pct', 10)}%)"
+        verdict = "ok" if value <= limit else "FAIL"
+        print(f"  {key:>9}: {value:.4f}  [{detail}] {verdict}")
+        if value > limit:
+            failures.append(f"{key}: {value:.4f} > {limit:.4f} ({detail})")
+
+    if failures:
+        print("bench_gate: device-call trajectory regressed:", file=sys.stderr)
+        for line in failures:
+            print(f"  {line}", file=sys.stderr)
+        raise SystemExit(1)
+    print("bench_gate: trajectory holds")
+
+
+if __name__ == "__main__":
+    main()
