@@ -3,7 +3,8 @@
 //!
 //! Runs the deterministic mock-backend coordinator (no model artifacts
 //! needed) across the scheduling topologies — serial vs fused vs
-//! shared-runtime dispatch, at 1 and 4 workers — and writes one JSON
+//! shared-runtime dispatch vs pipelined shared dispatch, at 1 and 4
+//! workers — and writes one JSON
 //! report with tokens/s, device calls per token, and mean fused width
 //! per point.  The report is validated before it is written, so a
 //! malformed artifact fails the producing process, not a downstream

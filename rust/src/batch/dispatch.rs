@@ -48,9 +48,9 @@
 //! scheduler then reconciles the pool with
 //! [`crate::kvcache::SharedCachePool::forget`].
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -63,13 +63,75 @@ use crate::runtime::{Device, Runtime, StepOutput};
 use crate::util::json::Json;
 use crate::util::panic_message;
 
-use super::{union_max_slot, BatchItem, BatchMeta, PlanInputs};
+use super::collator::CollatedBatch;
+use super::{union_max_slot, BatchInventory, BatchItem, BatchMeta, PlanInputs};
 
 /// Default coalescing window: how long the dispatcher waits for the
 /// remaining registered schedulers after a round's first submission.
 /// The barrier usually short-circuits well before this; the window only
 /// bounds the damage of a straggler.
 pub const DEFAULT_WINDOW: Duration = Duration::from_millis(5);
+
+/// Floor of the adaptive window: even a fleet whose submissions land
+/// back-to-back keeps a small grace period for scheduling jitter.
+const WINDOW_FLOOR: Duration = Duration::from_micros(200);
+
+/// Safety margin the adaptive window applies over the observed p95
+/// inter-submission spread.
+const WINDOW_MARGIN: f64 = 2.0;
+
+/// How many recent rounds' spreads the tuner remembers.
+const WINDOW_SAMPLES: usize = 64;
+
+/// Rounds observed before the tuner trusts its p95 over the configured
+/// window.
+const WINDOW_WARMUP: usize = 8;
+
+/// p95-of-spread × margin, clamped to `[WINDOW_FLOOR, cap]` — the pure
+/// core of the adaptive coalescing window.  `sorted_us` are recent
+/// first-to-last submission spreads in microseconds, ascending.
+fn adaptive_window(sorted_us: &[f64], cap: Duration) -> Duration {
+    if sorted_us.is_empty() {
+        return cap;
+    }
+    let p95 = crate::util::bench::quantile(sorted_us, 0.95);
+    Duration::from_micros((p95 * WINDOW_MARGIN).ceil() as u64).clamp(WINDOW_FLOOR, cap)
+}
+
+/// Sizes the coalescing window from observed inter-submission spreads:
+/// a fleet whose schedulers submit within ~100µs of each other gets a
+/// ~200µs window instead of the fixed 5ms `DEFAULT_WINDOW`, so a
+/// deregistration race or one straggler costs a fraction of the old
+/// worst case.  Warm-up rounds (and an empty history) fall back to the
+/// configured cap, which also stays the upper clamp.
+struct WindowTuner {
+    spreads: VecDeque<Duration>,
+    cap: Duration,
+}
+
+impl WindowTuner {
+    fn new(cap: Duration) -> Self {
+        WindowTuner { spreads: VecDeque::with_capacity(WINDOW_SAMPLES), cap }
+    }
+
+    /// Record one round's first-to-last submission spread.
+    fn observe(&mut self, spread: Duration) {
+        if self.spreads.len() == WINDOW_SAMPLES {
+            self.spreads.pop_front();
+        }
+        self.spreads.push_back(spread);
+    }
+
+    /// The window the next round should wait on a straggler.
+    fn window(&self) -> Duration {
+        if self.spreads.len() < WINDOW_WARMUP {
+            return self.cap;
+        }
+        let mut us: Vec<f64> = self.spreads.iter().map(|d| d.as_secs_f64() * 1e6).collect();
+        us.sort_by(|a, b| a.total_cmp(b));
+        adaptive_window(&us, self.cap)
+    }
+}
 
 /// Lock a stats mutex, recovering from poisoning: these mutexes only
 /// guard plain counter maps (always left in a consistent state), so a
@@ -159,6 +221,23 @@ pub trait DeviceExecutor {
     fn exec_medusa_heads(&self, _hidden: &[f32]) -> Result<Vec<Vec<f32>>> {
         Err(anyhow!("device executor has no medusa heads"))
     }
+
+    /// A `Send` snapshot of the executor's batched-graph inventory, if
+    /// it has one — lets the pipelined dispatcher pick buckets and
+    /// collate round k+1 on its collector stage while round k executes
+    /// here.  `None` (the default) keeps collation inside
+    /// [`DeviceExecutor::exec_forward_batch_meta`].
+    fn batch_inventory(&self) -> Option<BatchInventory> {
+        None
+    }
+
+    /// Execute a round the dispatcher already collated against this
+    /// executor's [`DeviceExecutor::batch_inventory`].  Only reached
+    /// when that inventory planned the batch, so the default is
+    /// unreachable for executors that never advertise one.
+    fn exec_collated(&self, _c: &CollatedBatch) -> Result<(Vec<StepOutput>, BatchMeta)> {
+        Err(anyhow!("device executor cannot run pre-collated rounds"))
+    }
 }
 
 impl DeviceExecutor for Runtime {
@@ -186,6 +265,14 @@ impl DeviceExecutor for Runtime {
 
     fn exec_medusa_heads(&self, hidden: &[f32]) -> Result<Vec<Vec<f32>>> {
         Runtime::medusa_heads(self, hidden)
+    }
+
+    fn batch_inventory(&self) -> Option<BatchInventory> {
+        Runtime::batch_inventory(self)
+    }
+
+    fn exec_collated(&self, c: &CollatedBatch) -> Result<(Vec<StepOutput>, BatchMeta)> {
+        Runtime::forward_collated(self, c)
     }
 }
 
@@ -221,6 +308,19 @@ pub struct DispatchStats {
     /// highest KV slot any union ever referenced (computed across
     /// workers before collation; bounds which kv buckets can engage)
     max_union_slot: AtomicU64,
+    /// rounds fully assembled (collected + collated) while the device
+    /// stage was still executing the previous round — the pipelined
+    /// overlap actually happening, not just configured
+    overlap_batches: AtomicU64,
+    /// fused rounds whose union was collated on the collector stage
+    /// (outside the executor call) rather than inside it
+    overlap_precollated_batches: AtomicU64,
+    /// µs spent inside fused device executions — the occupancy
+    /// numerator (wallclock since dispatcher start is the denominator)
+    device_busy_us: AtomicU64,
+    /// current adaptive coalescing window in µs (gauge; the configured
+    /// cap until the tuner warms up)
+    window_us: AtomicU64,
 }
 
 impl DispatchStats {
@@ -271,6 +371,26 @@ impl DispatchStats {
         self.max_union_slot.fetch_max(max_slot as u64, Ordering::Relaxed);
     }
 
+    /// A round was assembled while the device executed its predecessor.
+    fn record_overlap(&self) {
+        self.overlap_batches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A round's union was collated on the collector stage.
+    fn record_precollated(&self) {
+        self.overlap_precollated_batches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Account device-execution wallclock (occupancy numerator).
+    fn add_busy(&self, us: u64) {
+        self.device_busy_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    /// Publish the window the collector is currently waiting on.
+    fn set_window_us(&self, us: u64) {
+        self.window_us.store(us, Ordering::Relaxed);
+    }
+
     pub fn batches_total(&self) -> u64 {
         self.batches.load(Ordering::Relaxed)
     }
@@ -318,6 +438,22 @@ impl DispatchStats {
         self.max_union_slot.load(Ordering::Relaxed)
     }
 
+    pub fn overlap_batches_total(&self) -> u64 {
+        self.overlap_batches.load(Ordering::Relaxed)
+    }
+
+    pub fn overlap_precollated_batches_total(&self) -> u64 {
+        self.overlap_precollated_batches.load(Ordering::Relaxed)
+    }
+
+    pub fn device_busy_us_total(&self) -> u64 {
+        self.device_busy_us.load(Ordering::Relaxed)
+    }
+
+    pub fn window_us(&self) -> u64 {
+        self.window_us.load(Ordering::Relaxed)
+    }
+
     /// Mean rows per cross-worker device dispatch (0 when none ran).
     pub fn mean_width(&self) -> f64 {
         let b = self.batches_total();
@@ -347,6 +483,10 @@ impl DispatchStats {
         push("queue_depth", self.queue_depth());
         push("max_queue_depth", self.max_queue_depth());
         push("max_union_slot", self.max_union_slot());
+        push("overlap_batches_total", self.overlap_batches_total());
+        push("overlap_precollated_batches_total", self.overlap_precollated_batches_total());
+        push("device_busy_us_total", self.device_busy_us_total());
+        push("window_us", self.window_us());
         for (w, c) in self.width_hist() {
             let label = fused_slot_label(w);
             out.push_str(&format!("ppd_dispatch_width_total{{width=\"{label}\"}} {c}\n"));
@@ -465,15 +605,66 @@ impl DispatcherHandle {
     }
 }
 
+/// One fused round, assembled (and when the executor advertises a
+/// [`BatchInventory`], already collated) away from the device call —
+/// the unit the pipelined dispatcher's collector stage hands its
+/// device stage.
+struct PreparedRound {
+    subs: Vec<TickSub>,
+    /// union width (rows across all submissions)
+    total: usize,
+    /// `(worker, rows)` per submission, in arrival order
+    widths: Vec<(usize, usize)>,
+    /// highest KV slot the union references
+    max_slot: usize,
+    /// the padded union, packed on the preparing thread; `None` routes
+    /// the round through the executor's own collation/fallback path
+    collated: Option<CollatedBatch>,
+}
+
+/// What the collector stage forwards to the device stage.
+enum Staged {
+    Round(PreparedRound),
+    /// solo/medusa requests pass through; they execute between rounds
+    Request(DeviceRequest),
+}
+
+/// Assemble one round: flatten widths, scan the union's max slot, and
+/// — given an inventory — collate the padded batch right here, so a
+/// pipelined collector does the host work while the device executes
+/// the previous round.  A collation miss (lone rider, no covering
+/// graph, oversize) leaves `collated` empty and the executor path
+/// keeps owning the fallback policy.
+fn prepare_round(subs: Vec<TickSub>, inv: Option<&BatchInventory>) -> PreparedRound {
+    let total: usize = subs.iter().map(|s| s.rows.len()).sum();
+    let widths: Vec<(usize, usize)> = subs.iter().map(|s| (s.worker, s.rows.len())).collect();
+    let (max_slot, collated) = {
+        let items: Vec<BatchItem<'_>> = subs
+            .iter()
+            .flat_map(|s| s.rows.iter().map(|r| BatchItem { plan: &r.plan, cache: &r.cache }))
+            .collect();
+        let collated = match inv.map(|inv| inv.collate(&items)) {
+            Some(Some(Ok(c))) => Some(c),
+            // Some(Err): the executor path re-runs the same collation
+            // and surfaces the error batch-wide — no silent divergence
+            _ => None,
+        };
+        (union_max_slot(&items), collated)
+    };
+    PreparedRound { subs, total, widths, max_slot, collated }
+}
+
 /// The device side: owns the request queue and (in production) the one
 /// `Runtime`.  Drive it with [`DeviceDispatcher::run`] on a dedicated
-/// thread, or [`DeviceDispatcher::pump`] from a single-threaded test
+/// thread, or [`DeviceDispatcher::pump`] /
+/// [`DeviceDispatcher::pump_pipelined`] from a single-threaded test
 /// harness scripting wall ticks by hand.
 pub struct DeviceDispatcher {
     rx: mpsc::Receiver<DeviceRequest>,
     active: Arc<AtomicUsize>,
     stats: Arc<DispatchStats>,
     window: Duration,
+    pipelined: bool,
 }
 
 impl DeviceDispatcher {
@@ -487,12 +678,21 @@ impl DeviceDispatcher {
         let active = Arc::new(AtomicUsize::new(0));
         let handle =
             DispatcherHandle { tx, active: Arc::clone(&active), stats: Arc::clone(&stats) };
-        (handle, DeviceDispatcher { rx, active, stats, window })
+        (handle, DeviceDispatcher { rx, active, stats, window, pipelined: false })
+    }
+
+    /// Switch [`DeviceDispatcher::run`] to the double-buffered
+    /// collector + device topology (`--pipelined`).
+    pub fn set_pipelined(&mut self, on: bool) {
+        self.pipelined = on;
     }
 
     /// Serve until every [`DispatcherHandle`] clone is dropped (i.e. the
     /// worker pool drained).
     pub fn run(self, exec: &dyn DeviceExecutor) {
+        if self.pipelined {
+            return self.run_pipelined(exec);
+        }
         loop {
             match self.rx.recv() {
                 Err(_) => return,
@@ -507,6 +707,113 @@ impl DeviceDispatcher {
                 }
             }
         }
+    }
+
+    /// The double-buffered serve loop: a *collector* thread owns the
+    /// request queue — barriers/windows each round, forwards solos, and
+    /// collates round k+1's union against the executor's
+    /// [`BatchInventory`] — while THIS thread (which owns the
+    /// non-`Send` executor) drains a depth-1 staging channel and runs
+    /// the device calls.  Round k+1's host work (queue drain, width
+    /// scan, padded collation) overlaps round k's device execution:
+    ///
+    /// ```text
+    ///   workers ──ticks/solos──▶ collector ──PreparedRound──▶ device
+    ///                            (window,      (depth-1        (exec,
+    ///                             collate)      buffer)         reply)
+    /// ```
+    ///
+    /// The coalescing window adapts per round: p95 of recent
+    /// first-to-last submission spreads × margin, clamped to the
+    /// configured window ([`WindowTuner`]).  Shutdown stays lossless —
+    /// when the last handle drops, the collector flushes what it
+    /// holds, closes the staging channel, and this thread drains every
+    /// staged round before returning, so a round in *each* buffer
+    /// still gets its replies.
+    fn run_pipelined(self, exec: &dyn DeviceExecutor) {
+        let DeviceDispatcher { rx, active, stats, window, .. } = self;
+        let inv = exec.batch_inventory();
+        let busy = Arc::new(AtomicBool::new(false));
+        let (staged_tx, staged_rx) = mpsc::sync_channel::<Staged>(1);
+        std::thread::scope(|scope| {
+            let c_stats = Arc::clone(&stats);
+            let c_busy = Arc::clone(&busy);
+            scope.spawn(move || {
+                let mut tuner = WindowTuner::new(window);
+                loop {
+                    let first = match rx.recv() {
+                        Err(_) => break,
+                        Ok(DeviceRequest::Tick(sub)) => {
+                            c_stats.on_take();
+                            sub
+                        }
+                        Ok(other) => {
+                            c_stats.on_take();
+                            if staged_tx.send(Staged::Request(other)).is_err() {
+                                break;
+                            }
+                            continue;
+                        }
+                    };
+                    let round_window = tuner.window();
+                    c_stats.set_window_us(round_window.as_micros() as u64);
+                    let t0 = Instant::now();
+                    let mut last_sub = t0;
+                    let deadline = t0 + round_window;
+                    let mut subs = vec![first];
+                    loop {
+                        if subs.len() >= active.load(Ordering::SeqCst).max(1) {
+                            break;
+                        }
+                        let now = Instant::now();
+                        if now >= deadline {
+                            break;
+                        }
+                        match rx.recv_timeout(deadline - now) {
+                            Ok(DeviceRequest::Tick(s)) => {
+                                c_stats.on_take();
+                                last_sub = Instant::now();
+                                subs.push(s);
+                            }
+                            Ok(other) => {
+                                c_stats.on_take();
+                                if staged_tx.send(Staged::Request(other)).is_err() {
+                                    return;
+                                }
+                            }
+                            Err(_) => break, // window expired or senders gone
+                        }
+                    }
+                    // the spread is submission-to-submission, not
+                    // first-to-timeout: a straggler that never came
+                    // must not ratchet the window back up to the cap
+                    tuner.observe(last_sub - t0);
+                    let round = prepare_round(subs, inv.as_ref());
+                    if c_busy.load(Ordering::Relaxed) {
+                        // assembled while the device stage still ran
+                        // the previous round: the overlap is real
+                        c_stats.record_overlap();
+                    }
+                    if staged_tx.send(Staged::Round(round)).is_err() {
+                        break;
+                    }
+                }
+                // rx disconnected: dropping staged_tx lets the device
+                // stage drain what is buffered and exit
+            });
+            for staged in staged_rx.iter() {
+                match staged {
+                    Staged::Request(req) => {
+                        Self::serve_solo_with(&stats, req, exec);
+                    }
+                    Staged::Round(round) => {
+                        busy.store(true, Ordering::Relaxed);
+                        Self::exec_round_with(&stats, round, exec);
+                        busy.store(false, Ordering::Relaxed);
+                    }
+                }
+            }
+        });
     }
 
     /// Gather one round: wait until every registered scheduler has
@@ -542,6 +849,20 @@ impl DeviceDispatcher {
     /// into ONE device call; returns the number of device calls issued
     /// (solos included).  The deterministic harness's "wall tick".
     pub fn pump(&self, exec: &dyn DeviceExecutor) -> usize {
+        self.pump_inner(exec, false)
+    }
+
+    /// [`DeviceDispatcher::pump`] through the pipelined code path: the
+    /// round is prepared (and, inventory permitting, collated) by
+    /// [`prepare_round`] before the executor sees it — exactly what the
+    /// threaded collector stage does, minus the threads, so the
+    /// deterministic harness can pin the pre-collated path's outputs
+    /// against the executor-collated path's.
+    pub fn pump_pipelined(&self, exec: &dyn DeviceExecutor) -> usize {
+        self.pump_inner(exec, true)
+    }
+
+    fn pump_inner(&self, exec: &dyn DeviceExecutor, pipelined: bool) -> usize {
         let mut calls = 0;
         let mut subs = Vec::new();
         while let Ok(req) = self.rx.try_recv() {
@@ -552,15 +873,24 @@ impl DeviceDispatcher {
             }
         }
         if !subs.is_empty() {
-            calls += self.flush_ticks(subs, exec);
+            let inv = if pipelined { exec.batch_inventory() } else { None };
+            calls += Self::exec_round_with(&self.stats, prepare_round(subs, inv.as_ref()), exec);
         }
         calls
     }
 
     fn serve_solo(&self, req: DeviceRequest, exec: &dyn DeviceExecutor) -> usize {
+        Self::serve_solo_with(&self.stats, req, exec)
+    }
+
+    fn serve_solo_with(
+        stats: &DispatchStats,
+        req: DeviceRequest,
+        exec: &dyn DeviceExecutor,
+    ) -> usize {
         match req {
             DeviceRequest::Solo { plan, cache, reply } => {
-                self.stats.record_solo();
+                stats.record_solo();
                 let r = catch_unwind(AssertUnwindSafe(|| {
                     exec.exec_forward(&plan.tokens, &plan.pos, &plan.slots, &plan.bias, &cache)
                 }));
@@ -581,7 +911,9 @@ impl DeviceDispatcher {
                 1
             }
             // defensive: a tick routed here fuses alone
-            DeviceRequest::Tick(sub) => self.flush_ticks(vec![sub], exec),
+            DeviceRequest::Tick(sub) => {
+                Self::exec_round_with(stats, prepare_round(vec![sub], None), exec)
+            }
         }
     }
 
@@ -590,7 +922,20 @@ impl DeviceDispatcher {
     /// is batch-wide but dispatcher-local: every rider gets the error,
     /// the thread survives.
     fn flush_ticks(&self, subs: Vec<TickSub>, exec: &dyn DeviceExecutor) -> usize {
-        let total: usize = subs.iter().map(|s| s.rows.len()).sum();
+        Self::exec_round_with(&self.stats, prepare_round(subs, None), exec)
+    }
+
+    /// Execute one prepared round: the device half of a fused tick,
+    /// shared by the unpipelined loop, the pipelined device stage, and
+    /// the scripted pumps.  When the round carries a pre-collated
+    /// union, the executor runs it directly ([`DeviceExecutor::
+    /// exec_collated`]); otherwise it collates internally.
+    fn exec_round_with(
+        stats: &DispatchStats,
+        round: PreparedRound,
+        exec: &dyn DeviceExecutor,
+    ) -> usize {
+        let PreparedRound { subs, total, widths, max_slot, collated } = round;
         if total == 0 {
             for s in subs {
                 let _ = s.reply.send(TickReply {
@@ -601,32 +946,37 @@ impl DeviceDispatcher {
             }
             return 0;
         }
-        let widths: Vec<(usize, usize)> =
-            subs.iter().map(|s| (s.worker, s.rows.len())).collect();
-        self.stats.record_batch(&widths);
+        stats.record_batch(&widths);
+        // the union max-slot is a cross-WORKER property: computed over
+        // every rider before collation — it is what the kv-bucket
+        // selection keys off, and what bounds how small the stacked
+        // cache upload can get this tick
+        stats.record_union_slot(max_slot);
 
         let t0 = Instant::now();
-        let result = {
-            let items: Vec<BatchItem<'_>> = subs
-                .iter()
-                .flat_map(|s| {
-                    s.rows.iter().map(|r| BatchItem { plan: &r.plan, cache: &r.cache })
-                })
-                .collect();
-            // the union max-slot is a cross-WORKER property: computed
-            // here, over every rider, before the executor collates —
-            // it is what the kv-bucket selection inside the executor
-            // keys off, and what bounds how small the stacked cache
-            // upload can get this tick
-            self.stats.record_union_slot(union_max_slot(&items));
-            catch_unwind(AssertUnwindSafe(|| exec.exec_forward_batch_meta(&items)))
+        let result = match &collated {
+            Some(c) => {
+                stats.record_precollated();
+                catch_unwind(AssertUnwindSafe(|| exec.exec_collated(c)))
+            }
+            None => {
+                let items: Vec<BatchItem<'_>> = subs
+                    .iter()
+                    .flat_map(|s| {
+                        s.rows.iter().map(|r| BatchItem { plan: &r.plan, cache: &r.cache })
+                    })
+                    .collect();
+                catch_unwind(AssertUnwindSafe(|| exec.exec_forward_batch_meta(&items)))
+            }
         };
-        let share = t0.elapsed().as_secs_f64() / total as f64;
+        let elapsed = t0.elapsed();
+        stats.add_busy(elapsed.as_micros() as u64);
+        let share = elapsed.as_secs_f64() / total as f64;
 
         match result {
             Ok(Ok((mut outs, meta))) if outs.len() == total => {
                 if let Some(kv) = meta.kv {
-                    self.stats.record_kv(kv);
+                    stats.record_kv(kv);
                 }
                 for s in subs {
                     let TickSub { rows, reply, .. } = s;
@@ -955,5 +1305,118 @@ mod tests {
         let hist = stats.width_hist();
         assert_eq!(hist, vec![(crate::metrics::FUSED_HIST_SLOTS, 1)]);
         assert!(stats.to_prometheus().contains("ppd_dispatch_width_total{width=\"16+\"} 1\n"));
+    }
+
+    #[test]
+    fn adaptive_window_scales_with_spread_and_clamps() {
+        let cap = Duration::from_millis(5);
+        // empty history: fall back to the cap
+        assert_eq!(adaptive_window(&[], cap), cap);
+        // tight fleet: p95 of ~100µs spreads → 200µs window, not 5ms
+        let tight: Vec<f64> = (0..64).map(|i| 90.0 + (i % 10) as f64).collect();
+        let w = adaptive_window(&tight, cap);
+        assert!(w < Duration::from_micros(250), "window {w:?} should shrink toward 2×p95");
+        assert!(w >= WINDOW_FLOOR);
+        // sub-floor spreads clamp up to the floor
+        assert_eq!(adaptive_window(&[1.0, 2.0, 3.0], cap), WINDOW_FLOOR);
+        // huge spreads clamp down to the configured cap
+        assert_eq!(adaptive_window(&[50_000.0], cap), cap);
+    }
+
+    #[test]
+    fn window_tuner_warms_up_then_tracks_p95() {
+        let cap = Duration::from_millis(5);
+        let mut t = WindowTuner::new(cap);
+        for _ in 0..WINDOW_WARMUP - 1 {
+            t.observe(Duration::from_micros(100));
+            assert_eq!(t.window(), cap, "tuner must not trust a short history");
+        }
+        t.observe(Duration::from_micros(100));
+        let w = t.window();
+        assert!(w < cap, "after warmup the window should follow the observed spread");
+        assert!(w >= WINDOW_FLOOR);
+        // the ring forgets: flood with large spreads and the window
+        // ratchets back toward the cap
+        for _ in 0..WINDOW_SAMPLES {
+            t.observe(Duration::from_millis(4));
+        }
+        assert_eq!(t.window(), cap);
+    }
+
+    #[test]
+    fn pipelined_run_fuses_barriers_and_drains_on_shutdown() {
+        let stats = Arc::new(DispatchStats::default());
+        let (handle, mut disp) =
+            DeviceDispatcher::channel(Duration::from_millis(200), Arc::clone(&stats));
+        disp.set_pipelined(true);
+        let exec_thread = std::thread::spawn(move || {
+            let exec = EchoExec::new();
+            disp.run(&exec);
+            exec.calls.load(Ordering::Relaxed)
+        });
+        // a solo passes through the collector to the device stage
+        let out = handle
+            .forward(&[42], &[0], &[0], &[0.0; 8], &[0.0; 16], 8)
+            .expect("solo forward must succeed");
+        assert_eq!(out.logits, vec![42.0]);
+        // two registered workers: the collector must still barrier them
+        // into one fused round
+        handle.register();
+        handle.register();
+        let h1 = {
+            let h = handle.clone();
+            std::thread::spawn(move || {
+                let rx = h.submit_tick(0, vec![row(7)]).expect("dispatcher alive");
+                rx.recv().expect("reply must arrive").outs.expect("fused step must succeed")
+                    [0]
+                .logits
+                .clone()
+            })
+        };
+        let h2 = {
+            let h = handle.clone();
+            std::thread::spawn(move || {
+                let rx = h.submit_tick(1, vec![row(9)]).expect("dispatcher alive");
+                rx.recv().expect("reply must arrive").outs.expect("fused step must succeed")
+                    [0]
+                .logits
+                .clone()
+            })
+        };
+        assert_eq!(h1.join().expect("thread must exit cleanly"), vec![7.0]);
+        assert_eq!(h2.join().expect("thread must exit cleanly"), vec![9.0]);
+        handle.deregister();
+        handle.deregister();
+        drop(handle);
+        let calls = exec_thread.join().expect("dispatcher thread must exit cleanly");
+        assert_eq!(calls, 2, "one solo + one fused round");
+        assert_eq!(stats.batches_total(), 1);
+        assert_eq!(stats.solo_forwards_total(), 1);
+        assert_eq!(stats.multi_worker_batches_total(), 1);
+        assert!(
+            stats.to_prometheus().contains("ppd_dispatch_overlap_batches_total"),
+            "pipelined counters must be exported"
+        );
+    }
+
+    #[test]
+    fn pipelined_shutdown_answers_a_round_in_each_buffer() {
+        // a round parked in the staging buffer AND one mid-collection at
+        // shutdown must both get replies: drop the handles right after
+        // submitting and only then let the device stage run
+        let stats = Arc::new(DispatchStats::default());
+        let (handle, mut disp) =
+            DeviceDispatcher::channel(Duration::from_micros(50), Arc::clone(&stats));
+        disp.set_pipelined(true);
+        let rx0 = handle.submit_tick(0, vec![row(1)]).expect("dispatcher alive");
+        let rx1 = handle.submit_tick(0, vec![row(2)]).expect("dispatcher alive");
+        let rx2 = handle.submit_tick(0, vec![row(3)]).expect("dispatcher alive");
+        drop(handle);
+        let exec = EchoExec::new();
+        disp.run(&exec);
+        for (rx, want) in [(rx0, 1.0), (rx1, 2.0), (rx2, 3.0)] {
+            let reply = rx.recv().expect("shutdown must stay lossless");
+            assert_eq!(reply.outs.expect("fused step must succeed")[0].logits, vec![want]);
+        }
     }
 }

@@ -167,6 +167,74 @@ pub fn select_batch_bucket(
         .find(|&b| available(b, n_bucket))
 }
 
+/// `Send`-safe snapshot of an executor's batched-graph inventory:
+/// everything the bucket selectors and the [`collator`] need, detached
+/// from the (non-`Send`) runtime that owns the graphs.  The device
+/// dispatcher's pipelined collector stage uses it to pick buckets and
+/// pack round k+1's padded union on the host *while round k executes
+/// on the device* — collation leaves the executor call and overlaps.
+///
+/// `kv_disabled` is latched when the snapshot is taken, so toggling
+/// the `PPD_DISABLE_KV_BUCKETS` escape hatch mid-run does not reach an
+/// already-running dispatcher (tests snapshot after setting it).
+#[derive(Debug, Clone)]
+pub struct BatchInventory {
+    /// tree-length ladder (`cfg.buckets`, ascending)
+    pub tree_buckets: Vec<usize>,
+    /// batched-graph batch ladder (`cfg.batch_buckets`, ascending)
+    pub batch_buckets: Vec<usize>,
+    /// KV-context ladder candidates (`cfg.kv_buckets`, ascending)
+    pub kv_buckets: Vec<usize>,
+    /// `(b, n, kv)` triples with a graph in the artifact set
+    pub available: std::collections::BTreeSet<(usize, usize, usize)>,
+    /// KV planes (2 × layers)
+    pub planes: usize,
+    /// full host context length
+    pub max_ctx: usize,
+    /// model feature dim
+    pub d: usize,
+    /// the `PPD_DISABLE_KV_BUCKETS` escape hatch, latched at snapshot
+    pub kv_disabled: bool,
+}
+
+impl BatchInventory {
+    /// The `(b, n, kv)` bucket triple `Runtime::forward_batch_meta`
+    /// would select for `items` — the same smallest-cover walks over
+    /// the same ladders — or `None` when the batch must take a
+    /// non-collated executor path (lone rider, oversized tree or
+    /// batch, no covering graph).
+    pub fn plan(&self, items: &[BatchItem<'_>]) -> Option<(usize, usize, usize)> {
+        if items.len() < 2 {
+            // a lone rider takes the single-sequence graph (b=2 would
+            // double its cache upload) — mirror the executor's policy
+            return None;
+        }
+        let max_n = items.iter().map(|it| it.plan.len()).max().unwrap_or(0);
+        let n_bucket = self.tree_buckets.iter().copied().filter(|&b| b >= max_n).min()?;
+        let b_bucket = select_batch_bucket(&self.batch_buckets, items.len(), n_bucket, |b, n| {
+            self.available.contains(&(b, n, self.max_ctx))
+        })?;
+        let kv = select_kv_bucket(
+            &self.kv_buckets,
+            self.max_ctx,
+            union_max_slot(items),
+            self.kv_disabled,
+            |kv| self.available.contains(&(b_bucket, n_bucket, kv)),
+        );
+        Some((b_bucket, n_bucket, kv))
+    }
+
+    /// Plan + pack: the host half of a fused round, runnable on any
+    /// thread.  `None` routes the round to the executor's own
+    /// `forward_batch` (which owns the fallback policy); `Some(Err)`
+    /// surfaces a collation failure (a slot outside the selected
+    /// bucket).
+    pub fn collate(&self, items: &[BatchItem<'_>]) -> Option<Result<collator::CollatedBatch>> {
+        let (b, n, kv) = self.plan(items)?;
+        Some(collator::collate(items, b, n, self.planes, self.max_ctx, self.d, kv))
+    }
+}
+
 /// One sequence's slice of a fused forward's result, handed to
 /// `apply_step` together with the plan that produced it.
 pub struct StepResult<'a> {
@@ -299,6 +367,51 @@ mod tests {
             128
         );
         assert_eq!(select_kv_bucket(&buckets, 512, 10, false, |_| false), 512);
+    }
+
+    #[test]
+    fn inventory_plans_the_executor_selection() {
+        let s = 64;
+        let inv = BatchInventory {
+            tree_buckets: vec![4, 8, 16],
+            batch_buckets: vec![2, 4, 8],
+            kv_buckets: vec![16, 32],
+            available: [(2, 8, s), (2, 8, 16), (4, 8, s)].into_iter().collect(),
+            planes: 2,
+            max_ctx: s,
+            d: 4,
+            kv_disabled: false,
+        };
+        let c1 = HostKvCache::new(1, s, 4);
+        let c2 = HostKvCache::new(1, s, 4);
+        // two short riders: b=2 fits, n=8 covers 5 tokens, kv=16 covers
+        // slot 9 (trash row 15 stays clear)
+        let p1 = plan(vec![3, 9, 1, 2, 4], s);
+        let p2 = plan(vec![0, 1], s);
+        let items =
+            [BatchItem { plan: &p1, cache: &c1 }, BatchItem { plan: &p2, cache: &c2 }];
+        assert_eq!(inv.plan(&items), Some((2, 8, 16)));
+        // a long rider pushes the union past every short variant: the
+        // b=2 full-context graph is selected
+        let p3 = plan(vec![40], s);
+        let long =
+            [BatchItem { plan: &p1, cache: &c1 }, BatchItem { plan: &p3, cache: &c2 }];
+        assert_eq!(inv.plan(&long), Some((2, 8, s)));
+        // three riders need b=4, which only ships at full context
+        let trio = [
+            BatchItem { plan: &p1, cache: &c1 },
+            BatchItem { plan: &p2, cache: &c2 },
+            BatchItem { plan: &p2, cache: &c2 },
+        ];
+        assert_eq!(inv.plan(&trio), Some((4, 8, s)));
+        // lone riders and oversized batches route to the executor
+        assert_eq!(inv.plan(&items[..1]), None);
+        let nine: Vec<BatchItem<'_>> =
+            (0..9).map(|_| BatchItem { plan: &p2, cache: &c2 }).collect();
+        assert_eq!(inv.plan(&nine), None);
+        // collation agrees with the plan it picked
+        let c = inv.collate(&items).expect("covered").expect("collates");
+        assert_eq!((c.batch, c.n, c.kv, c.rows), (2, 8, 16, 2));
     }
 
     #[test]

@@ -53,6 +53,9 @@ pub enum SweepMode {
     Fused,
     /// `--shared-runtime`: one device call per wall tick, all workers
     Shared,
+    /// `--shared-runtime --pipelined`: one device call per wall tick,
+    /// with host planning/admission overlapping device execution
+    Pipelined,
 }
 
 impl SweepMode {
@@ -61,11 +64,12 @@ impl SweepMode {
             SweepMode::Serial => "serial",
             SweepMode::Fused => "fused",
             SweepMode::Shared => "shared",
+            SweepMode::Pipelined => "pipelined",
         }
     }
 
-    pub fn all() -> [SweepMode; 3] {
-        [SweepMode::Serial, SweepMode::Fused, SweepMode::Shared]
+    pub fn all() -> [SweepMode; 4] {
+        [SweepMode::Serial, SweepMode::Fused, SweepMode::Shared, SweepMode::Pipelined]
     }
 }
 
@@ -334,7 +338,8 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<Json> {
     let policy = SchedPolicy {
         max_inflight: cfg.max_inflight,
         fuse_steps: cfg.mode == SweepMode::Fused,
-        shared_runtime: cfg.mode == SweepMode::Shared,
+        shared_runtime: matches!(cfg.mode, SweepMode::Shared | SweepMode::Pipelined),
+        pipelined: cfg.mode == SweepMode::Pipelined,
         ..Default::default()
     };
     let coord = Coordinator::spawn_with_backend_policy(
@@ -369,7 +374,7 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<Json> {
     // mean rows per device dispatch: per-worker fused width locally,
     // cross-worker union width under the shared runtime
     let mean_width = match cfg.mode {
-        SweepMode::Shared => coord.dispatch_stats().mean_width(),
+        SweepMode::Shared | SweepMode::Pipelined => coord.dispatch_stats().mean_width(),
         _ => report.mean_fused_batch(),
     };
     let agg = coord.runtime_agg();

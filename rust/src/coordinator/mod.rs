@@ -306,10 +306,21 @@ pub trait WorkerBackend: Send + Sync + 'static {
 pub fn serve_jobs(worker: usize, engine: &mut dyn BatchStepEngine, ctx: &WorkerCtx) {
     let mut sched = match ctx.dispatcher() {
         // shared-runtime mode: fused ticks go to the coordinator's one
-        // device dispatcher and coalesce across workers
-        Some(h) => StepScheduler::with_dispatcher(worker, ctx.policy, h.clone()),
+        // device dispatcher and coalesce across workers; the pool/stats
+        // handles let a tearing-down scheduler reconcile a tick that is
+        // still at the dispatcher
+        Some(h) => StepScheduler::with_dispatcher(
+            worker,
+            ctx.policy,
+            h.clone(),
+            Arc::clone(&ctx.pool),
+            Arc::clone(&ctx.stats),
+        ),
         None => StepScheduler::new(worker, ctx.policy),
     };
+    if ctx.policy.pipelined && ctx.dispatcher().is_some() {
+        return serve_jobs_pipelined(engine, ctx, &mut sched);
+    }
     loop {
         if sched.is_empty() {
             // idle: block until work arrives; `None` means the queue is
@@ -337,6 +348,58 @@ pub fn serve_jobs(worker: usize, engine: &mut dyn BatchStepEngine, ctx: &WorkerC
         // one decode step for every in-flight sequence; finished
         // sequences retire and free their caches inside
         sched.tick(engine, &ctx.pool, &ctx.stats);
+    }
+}
+
+/// The pipelined shared-runtime worker loop (`--pipelined`): the tick
+/// splits into submit / complete halves so the host-side work of the
+/// NEXT round — queue admission, prefill, planning — runs while the
+/// device executes the round already submitted, instead of the worker
+/// sitting blocked in `recv` the whole time.
+///
+/// Admission here is fuse-aware rather than one-per-tick: under backlog
+/// the worker fills to the next `fwd_b{B}` bucket boundary
+/// ([`scheduler::admission_quota`]) because a wider fused round is what
+/// actually amortizes the device call; without backlog it degrades to
+/// the unpipelined loop's one-admission-per-tick pacing so a lone
+/// worker still cannot hoover a burst away from its idle siblings.
+fn serve_jobs_pipelined(
+    engine: &mut dyn BatchStepEngine,
+    ctx: &WorkerCtx,
+    sched: &mut StepScheduler,
+) {
+    loop {
+        if sched.is_empty() {
+            match ctx.queue.pop() {
+                Some(job) => {
+                    sched.admit(engine, &ctx.pool, &ctx.stats, job);
+                }
+                None => return,
+            }
+        }
+        // phase A: plan this round and hand it to the dispatcher — the
+        // device can start as soon as every registered worker has done
+        // the same
+        sched.tick_shared_submit(engine, &ctx.pool, &ctx.stats);
+        // overlap window: the device is (or will shortly be) executing
+        // the submitted round; spend it admitting and prefilling the
+        // next round's sequences instead of blocking on the reply
+        let quota = scheduler::admission_quota(
+            ctx.queue.depth(),
+            sched.len(),
+            ctx.policy.max_inflight,
+            scheduler::FUSE_ADMIT_BUCKETS,
+        );
+        for _ in 0..quota {
+            match ctx.queue.try_pop() {
+                Polled::Job(job) => {
+                    sched.admit(engine, &ctx.pool, &ctx.stats, *job);
+                }
+                _ => break,
+            }
+        }
+        // phase B: collect the submitted round's outputs and apply them
+        sched.tick_shared_complete(engine, &ctx.pool, &ctx.stats);
     }
 }
 
@@ -511,8 +574,12 @@ impl Coordinator {
         // runtime; workers get dispatcher handles instead
         let mut ready_count = workers;
         let (dispatch_handle, device) = if policy.shared_runtime {
-            let (handle, dispatcher) =
+            let (handle, mut dispatcher) =
                 DeviceDispatcher::channel(DEFAULT_WINDOW, Arc::clone(&dispatch_stats));
+            // --pipelined: the dispatcher double-buffers — a collector
+            // stage stages round k+1 (window + collation) while the
+            // device stage executes round k
+            dispatcher.set_pipelined(policy.pipelined);
             let host = DeviceHost {
                 dispatcher,
                 rt_agg: Arc::clone(&rt_agg),

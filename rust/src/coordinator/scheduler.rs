@@ -34,6 +34,7 @@
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
 use std::time::Duration;
 
 use crate::batch::dispatch::{DispatcherHandle, TickReply, TickRow};
@@ -49,6 +50,49 @@ use super::request::Response;
 
 /// Default per-worker in-flight sequence budget (`--max-inflight`).
 pub const DEFAULT_MAX_INFLIGHT: usize = 4;
+
+/// The config-default `fwd_b{B}` batched-graph ladder, used by
+/// [`admission_quota`] to size fuse-aware admission bursts.  Admission
+/// only needs a *target width* — if the artifact set carries a
+/// different ladder the dispatcher still picks the real bucket at
+/// collation time, so a mismatch costs a little padding, never
+/// correctness.
+pub const FUSE_ADMIT_BUCKETS: &[usize] = &[2, 4, 8];
+
+/// How long a dropping scheduler waits for an in-flight shared tick's
+/// reply before declaring its caches lost (teardown reconciliation —
+/// see [`StepScheduler`]'s `Drop`).  A live dispatcher flushes the
+/// round within its coalescing window (≤ ~5ms), and a dead one
+/// disconnects the channel instantly, so this bound is only reached
+/// when the dispatcher is wedged mid-execution.
+const PENDING_DRAIN_TIMEOUT: Duration = Duration::from_millis(250);
+
+/// How many jobs a shared-runtime worker should admit this tick.
+///
+/// The default is one per tick — PR 2's pacing rule, which spreads a
+/// burst across workers so no scheduler hoovers the whole queue — but
+/// when a backlog is visible (`queue_depth > 1`) trickling one job per
+/// tick keeps the fused batch narrow for several rounds.  Fuse-aware
+/// admission instead fills the in-flight set up to the next
+/// `fwd_b{B}` batch-bucket boundary in one tick, so the cross-worker
+/// union reaches a compiled batched graph's width immediately.
+pub fn admission_quota(
+    queue_depth: usize,
+    running: usize,
+    max_inflight: usize,
+    buckets: &[usize],
+) -> usize {
+    let cap = max_inflight.max(1).saturating_sub(running).min(queue_depth);
+    if cap == 0 {
+        return 0;
+    }
+    if queue_depth <= 1 {
+        // no backlog: the pacing rule stays in force
+        return 1;
+    }
+    let target = buckets.iter().copied().filter(|&b| b > running).min().unwrap_or(running + 1);
+    (target - running).clamp(1, cap)
+}
 
 /// Per-worker scheduling policy.
 #[derive(Debug, Clone, Copy)]
@@ -72,6 +116,15 @@ pub struct SchedPolicy {
     /// per-sequence (their device calls ride the dispatcher as solo
     /// requests when the engine holds a `SharedRuntime`).
     pub shared_runtime: bool,
+    /// overlap host work with device work (`--pipelined`, implies
+    /// `shared_runtime`): the worker loop admits and plans round k+1
+    /// between submitting round k and applying its reply, the
+    /// dispatcher double-buffers (collates round k+1's union while
+    /// round k executes) and sizes its coalescing window from the
+    /// observed p95 inter-submission spread, and admission is
+    /// fuse-aware ([`admission_quota`]).  Token-exact vs the
+    /// unpipelined shared path — only the overlap changes.
+    pub pipelined: bool,
 }
 
 impl Default for SchedPolicy {
@@ -81,6 +134,7 @@ impl Default for SchedPolicy {
             max_queue_age: None,
             fuse_steps: false,
             shared_runtime: false,
+            pipelined: false,
         }
     }
 }
@@ -125,6 +179,10 @@ pub struct StepScheduler {
     registered: bool,
     /// a submitted shared tick awaiting its reply/apply phase
     pending: Option<PendingTick>,
+    /// teardown handles (shared-runtime mode only): `Drop` must be able
+    /// to reconcile a still-pending tick's caches with the pool and
+    /// count its error replies, without the worker loop's borrows
+    teardown: Option<(Arc<SharedCachePool>, Arc<QueueStats>)>,
 }
 
 impl StepScheduler {
@@ -136,16 +194,21 @@ impl StepScheduler {
             dispatch: None,
             registered: false,
             pending: None,
+            teardown: None,
         }
     }
 
     /// A scheduler in shared-runtime mode: fused ticks go to the
     /// coordinator's [`crate::batch::dispatch::DeviceDispatcher`]
     /// through `dispatch` and coalesce with every other worker's tick.
+    /// The pool/stats handles let `Drop` reconcile a tick that is still
+    /// at the dispatcher when the worker tears down.
     pub fn with_dispatcher(
         worker: usize,
         policy: SchedPolicy,
         dispatch: DispatcherHandle,
+        pool: Arc<SharedCachePool>,
+        stats: Arc<QueueStats>,
     ) -> Self {
         StepScheduler {
             worker,
@@ -154,19 +217,33 @@ impl StepScheduler {
             dispatch: Some(dispatch),
             registered: false,
             pending: None,
+            teardown: Some((pool, stats)),
         }
     }
 
+    /// Whether a submitted shared tick is awaiting its reply/apply
+    /// phase — the pipelined worker loop must not exit (and the
+    /// harness must not assume quiescence) while this holds.
+    pub fn has_pending(&self) -> bool {
+        self.pending.is_some()
+    }
+
+    /// In-flight sequence count — including rows of a submitted tick
+    /// still at the dispatcher.  Pipelined admission runs *between*
+    /// submit and complete, when every submitted row has been moved out
+    /// of `running` into `pending`; counting only `running` there would
+    /// let a worker admit past `max_inflight` (and past the cache
+    /// pool's cap) every overlap window.
     pub fn len(&self) -> usize {
-        self.running.len()
+        self.running.len() + self.pending.as_ref().map_or(0, |p| p.rows.len())
     }
 
     pub fn is_empty(&self) -> bool {
-        self.running.is_empty()
+        self.len() == 0
     }
 
     pub fn has_capacity(&self) -> bool {
-        self.running.len() < self.policy.max_inflight.max(1)
+        self.len() < self.policy.max_inflight.max(1)
     }
 
     pub fn policy(&self) -> SchedPolicy {
@@ -187,14 +264,18 @@ impl StepScheduler {
         job: Job,
     ) -> bool {
         stats.on_dequeue();
-        let queue_s = job.enqueued.elapsed().as_secs_f64();
+        // one clock reading: the reported `queue_s` and the age-check
+        // decision must agree (two `elapsed()` calls can straddle the
+        // threshold and refuse a job while quoting a compliant age)
+        let queued = job.enqueued.elapsed();
+        let queue_s = queued.as_secs_f64();
         if job.cancel.is_cancelled() {
             stats.on_cancel();
             self.refuse(stats, job, queue_s, "cancelled before admission".into());
             return false;
         }
         if let Some(age) = self.policy.max_queue_age {
-            if job.enqueued.elapsed() > age {
+            if queued > age {
                 stats.on_expire();
                 self.refuse(
                     stats,
@@ -218,7 +299,7 @@ impl StepScheduler {
         }));
         match begun {
             Ok(Ok(seq)) => {
-                stats.on_admit(self.running.len() + 1);
+                stats.on_admit(self.len() + 1);
                 self.running.push_back(Inflight { job, queue_s, seq, cache });
                 true
             }
@@ -677,6 +758,64 @@ impl Drop for StepScheduler {
             }
             self.registered = false;
         }
+        // a tick still at the dispatcher holds this scheduler's caches
+        // and unanswered reply channels: wait briefly for the round to
+        // flush (deregistering above stopped the barrier from waiting
+        // on us), check returned caches back in, and for anything the
+        // dispatcher never returns reconcile the pool's outstanding
+        // count — silently dropping `pending` leaks both.
+        let Some(PendingTick { rows, rx }) = self.pending.take() else {
+            return;
+        };
+        let mut back = rx.recv_timeout(PENDING_DRAIN_TIMEOUT).ok().map(|r| r.rows.into_iter());
+        let msg = "worker shut down with a tick in flight";
+        for p in rows {
+            let cache = back.as_mut().and_then(|b| b.next()).map(|row| row.cache);
+            if let Some((pool, stats)) = &self.teardown {
+                match cache {
+                    Some(c) => pool.checkin(c),
+                    None => pool.forget(),
+                }
+                stats.on_complete();
+            }
+            let mut resp = Response::error(p.job.req.id, msg.into());
+            resp.queue_s = p.queue_s;
+            resp.worker = self.worker;
+            let _ = p.job.reply.send(resp);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quota_is_one_without_a_backlog() {
+        assert_eq!(admission_quota(1, 0, 4, FUSE_ADMIT_BUCKETS), 1);
+        assert_eq!(admission_quota(1, 2, 4, FUSE_ADMIT_BUCKETS), 1);
+        assert_eq!(admission_quota(0, 0, 4, FUSE_ADMIT_BUCKETS), 0);
+    }
+
+    #[test]
+    fn quota_fills_to_the_next_bucket_boundary_under_backlog() {
+        // empty worker, deep queue: fill straight to b=2
+        assert_eq!(admission_quota(8, 0, 4, FUSE_ADMIT_BUCKETS), 2);
+        // 2 running: next boundary is 4
+        assert_eq!(admission_quota(8, 2, 4, FUSE_ADMIT_BUCKETS), 2);
+        // 3 running: one seat to the b=4 boundary
+        assert_eq!(admission_quota(8, 3, 4, FUSE_ADMIT_BUCKETS), 1);
+    }
+
+    #[test]
+    fn quota_respects_inflight_capacity_and_queue_depth() {
+        // capacity caps the burst below the boundary
+        assert_eq!(admission_quota(8, 1, 2, FUSE_ADMIT_BUCKETS), 1);
+        assert_eq!(admission_quota(8, 4, 4, FUSE_ADMIT_BUCKETS), 0);
+        // the queue can run out before the boundary
+        assert_eq!(admission_quota(2, 0, 8, FUSE_ADMIT_BUCKETS), 2);
+        // above the top bucket the quota degrades to one-per-tick
+        assert_eq!(admission_quota(16, 8, 16, FUSE_ADMIT_BUCKETS), 1);
     }
 }
 

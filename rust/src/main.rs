@@ -50,7 +50,7 @@ impl Args {
             };
             if let Some((k, v)) = name.split_once('=') {
                 flags.insert(k.to_string(), v.to_string());
-            } else if matches!(name, "force" | "greedy" | "fuse-steps" | "shared-runtime") {
+            } else if matches!(name, "force" | "greedy" | "fuse-steps" | "shared-runtime" | "pipelined") {
                 flags.insert(name.to_string(), "true".to_string());
             } else {
                 let v = it.next().ok_or_else(|| anyhow!("--{name} needs a value"))?;
@@ -119,13 +119,15 @@ fn print_help() {
            generate    --model M --engine {{{}}} --prompt TEXT [--max-new N] [--temp T]\n\
            serve       --model M [--port 7878] [--engine ppd] [--workers N]\n\
                        [--max-inflight 4] [--max-queue-age-ms MS] [--fuse-steps]\n\
-                       [--shared-runtime]\n\
+                       [--shared-runtime] [--pipelined]\n\
                        continuous batching: each worker interleaves up to\n\
                        --max-inflight sequences one decode step at a time;\n\
                        --fuse-steps batches every in-flight tree step into\n\
                        one forward_batch device call per tick;\n\
                        --shared-runtime routes ALL workers' ticks through\n\
-                       one device dispatcher: 1 device call per wall tick\n\
+                       one device dispatcher: 1 device call per wall tick;\n\
+                       --pipelined overlaps host planning/admission with\n\
+                       device execution (double-buffered dispatcher)\n\
            calibrate   --model M [--force]  measure per-bucket forward latency\n\
            sweep       --model M            theoretical-speedup curve vs tree size\n\
            trees       --model M            print the dynamic sparse tree set\n\n\
@@ -210,6 +212,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     policy.fuse_steps = args.get("fuse-steps").is_some();
     policy.shared_runtime = args.get("shared-runtime").is_some();
+    policy.pipelined = args.get("pipelined").is_some();
+    if policy.pipelined && !policy.shared_runtime {
+        return Err(anyhow::anyhow!("--pipelined requires --shared-runtime"));
+    }
     let draft = match kind {
         EngineKind::Spec | EngineKind::SpecPpd => Some(args.get("draft").unwrap_or("ppd-d").to_string()),
         _ => None,

@@ -50,6 +50,10 @@ pub const METRICS: &[MetricDecl] = &[
     ("ppd_dispatch_width_total", &["width"], "cross-worker dispatch count by union width"),
     ("ppd_dispatch_kv_bucket_total", &["kv"], "fused dispatches by executed KV context"),
     ("ppd_dispatch_rows_by_worker", &["worker"], "fused rows attributed to submitting worker"),
+    ("ppd_dispatch_overlap_batches_total", &[], "rounds assembled while the device still ran the previous round (pipelined overlap observed)"),
+    ("ppd_dispatch_overlap_precollated_batches_total", &[], "fused rounds collated on the collector stage instead of inside the executor"),
+    ("ppd_dispatch_device_busy_us_total", &[], "microseconds spent inside fused device executions (occupancy numerator)"),
+    ("ppd_dispatch_window_us", &[], "current adaptive coalescing window in microseconds"),
     // -- runtime forward counters (Coordinator::metrics_text) ---------
     ("ppd_runtime_bucket_forwards_total", &["n", "kv"], "forwards by (token bucket, kv context)"),
     ("ppd_runtime_kv_forwards_total", &["kv"], "single-sequence forwards by kv context"),

@@ -525,13 +525,8 @@ impl Runtime {
         if k == 0 {
             return Ok((Vec::new(), crate::batch::BatchMeta::default()));
         }
-        {
-            let mut st = self.stats.borrow_mut();
-            st.forward_batches += 1;
-            st.batch_rows += k;
-            *st.per_batch.entry(k).or_insert(0) += 1;
-        }
         if k == 1 {
+            self.note_batch_call(1);
             // a lone rider gets the plain single-sequence graph: the
             // smallest batched bucket is b=2, which would double the
             // cache upload (the dominant transfer) for no benefit —
@@ -558,6 +553,7 @@ impl Runtime {
         });
         let Some((b_bucket, n_bucket)) = key else {
             // serial fallback: no batched graph covers this batch
+            self.note_batch_call(k);
             let outs = items
                 .iter()
                 .map(|it| {
@@ -589,11 +585,67 @@ impl Runtime {
             kv_buckets_disabled(),
             |kv| self.batch_graphs.contains_key(&(b_bucket, n_bucket, kv)),
         );
+        let c = crate::batch::collator::collate(items, b_bucket, n_bucket, l2, s, d, s_sel)?;
+        self.forward_collated(&c)
+    }
+
+    /// Batched-call accounting shared by every `forward_batch` entry
+    /// path (fused, lone-rider, serial fallback, pre-collated).
+    fn note_batch_call(&self, rows: usize) {
+        let mut st = self.stats.borrow_mut();
+        st.forward_batches += 1;
+        st.batch_rows += rows;
+        *st.per_batch.entry(rows).or_insert(0) += 1;
+    }
+
+    /// A `Send`-safe snapshot of the batched-graph inventory (ladders,
+    /// available `(b, n, kv)` triples, dims), or `None` when the
+    /// artifact set carries no batched graphs.  The device dispatcher's
+    /// pipelined collector stage plans and collates round k+1's union
+    /// against this while round k executes here.
+    pub fn batch_inventory(&self) -> Option<crate::batch::BatchInventory> {
+        if self.batch_graphs.is_empty() {
+            return None;
+        }
+        Some(crate::batch::BatchInventory {
+            tree_buckets: self.cfg.buckets.clone(),
+            batch_buckets: self.cfg.batch_buckets.clone(),
+            kv_buckets: self.cfg.kv_buckets.clone(),
+            available: self.batch_graphs.keys().copied().collect(),
+            planes: 2 * self.cfg.n_layers,
+            max_ctx: self.cfg.max_ctx,
+            d: self.cfg.d_model,
+            kv_disabled: kv_buckets_disabled(),
+        })
+    }
+
+    /// Execute an already-collated batch on its `(batch, n, kv)` bucket
+    /// graph: the device half of [`Runtime::forward_batch_meta`], also
+    /// reachable directly by the dispatcher when collation happened on
+    /// its collector stage (pipelined mode).  Byte-identical outputs
+    /// either way — both paths run the same collator and the same
+    /// executable.
+    pub fn forward_collated(
+        &self,
+        c: &crate::batch::collator::CollatedBatch,
+    ) -> Result<(Vec<StepOutput>, crate::batch::BatchMeta)> {
+        self.note_batch_call(c.rows);
+        let (b_bucket, n_bucket, s_sel) = (c.batch, c.n, c.kv);
+        let (l2, d) = (c.planes, c.d);
+        if d != self.cfg.d_model || l2 != 2 * self.cfg.n_layers || c.max_ctx != self.cfg.max_ctx {
+            bail!(
+                "collated batch shaped for a different model: planes {l2} d {d} ctx {}",
+                c.max_ctx
+            );
+        }
         // lazy compile: the first fused call for this bucket pays the
         // compile; everyone who never fuses pays nothing at load
         let mut exes = self.batch_executables.borrow_mut();
         if !exes.contains_key(&(b_bucket, n_bucket, s_sel)) {
-            let p = &self.batch_graphs[&(b_bucket, n_bucket, s_sel)];
+            let p = self
+                .batch_graphs
+                .get(&(b_bucket, n_bucket, s_sel))
+                .ok_or_else(|| anyhow!("no batched graph for ({b_bucket},{n_bucket},{s_sel})"))?;
             let proto = HloModuleProto::from_text_file(p)
                 .map_err(|e| anyhow!("loading {}: {e}", p.display()))?;
             let exe = self
@@ -607,7 +659,6 @@ impl Runtime {
         let exe = exes.get(&(b_bucket, n_bucket, s_sel)).expect("just compiled");
 
         let t0 = std::time::Instant::now();
-        let c = crate::batch::collator::collate(items, b_bucket, n_bucket, l2, s, d, s_sel)?;
         let mut bufs: Vec<PjRtBuffer> = Vec::with_capacity(5);
         bufs.push(
             self.client

@@ -25,12 +25,28 @@ impl BenchStats {
         BenchStats {
             iters: n,
             mean_s: total / n as f64,
-            median_s: samples[n / 2],
-            p95_s: samples[(n as f64 * 0.95) as usize % n],
+            median_s: quantile(&samples, 0.5),
+            p95_s: quantile(&samples, 0.95),
             min_s: samples[0],
             total_s: total,
         }
     }
+}
+
+/// Linearly interpolated quantile of a pre-sorted sample set (the
+/// "R-7" estimator: rank `q * (n - 1)`, interpolating between the two
+/// neighboring order statistics).  The median of an even-sized set is
+/// the mean of the middle pair, and p95 of a small set no longer
+/// collapses to the max (`(n * 0.95) as usize` truncated to `n - 1`
+/// for every n ≤ 20, which inflated every p95 the bench gate reads).
+pub fn quantile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=1.0).contains(&q), "quantile {q} outside [0, 1]");
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
 }
 
 /// Run `f` for `warmup` unrecorded and `iters` recorded iterations.
@@ -103,6 +119,28 @@ mod tests {
         assert_eq!(s.median_s, 3.0);
         assert_eq!(s.min_s, 1.0);
         assert!((s.mean_s - 3.0).abs() < 1e-12);
+        // p95 interpolates between the 4th and 5th order statistics
+        // (rank 0.95 * 4 = 3.8) instead of pinning to the max
+        assert!((s.p95_s - 4.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn even_sample_median_averages_the_middle_pair() {
+        let s = BenchStats::from_samples(vec![4.0, 1.0, 3.0, 2.0]);
+        assert_eq!(s.median_s, 2.5);
+        assert!((s.p95_s - 3.85).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantiles_interpolate_known_ranks() {
+        let sorted: Vec<f64> = (1..=20).map(f64::from).collect();
+        // rank 0.95 * 19 = 18.05 → 19 + 0.05 (the old truncating index
+        // returned 20.0, the max, for every n ≤ 20)
+        assert!((quantile(&sorted, 0.95) - 19.05).abs() < 1e-12);
+        assert_eq!(quantile(&sorted, 0.0), 1.0);
+        assert_eq!(quantile(&sorted, 1.0), 20.0);
+        assert_eq!(quantile(&sorted, 0.5), 10.5);
+        assert_eq!(quantile(&[7.0], 0.95), 7.0);
     }
 
     #[test]
@@ -114,9 +152,16 @@ mod tests {
     }
 
     #[test]
-    fn table_rejects_wrong_arity() {
+    fn table_accepts_matching_arity() {
         let mut t = Table::new(&["a", "b"]);
         t.row(&["1".into(), "2".into()]);
         assert_eq!(t.rows.len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "assertion")]
+    fn table_rejects_wrong_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only one cell".into()]);
     }
 }

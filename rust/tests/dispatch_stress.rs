@@ -1,18 +1,22 @@
 //! Stress tests for the dispatcher's tick barrier under concurrent
-//! register/submit/deregister churn and mid-window shutdown.
+//! register/submit/deregister churn and mid-window shutdown — on both
+//! the classic single-loop path and the pipelined two-stage
+//! (collector + device) path.
 //!
 //! These are the races the nightly ThreadSanitizer job is pointed at
 //! (see `.github/workflows/sanitizers.yml`): the barrier in
 //! `DeviceDispatcher::collect` reads the registered-scheduler count
-//! while worker threads mutate it, and `run` exits on channel
-//! disconnect while a window may still be holding submissions.  The
+//! while worker threads mutate it, `run` exits on channel disconnect
+//! while a window may still be holding submissions, and the pipelined
+//! collector assembles round k+1 while the device stage executes round
+//! k (with shutdown possibly catching a round in each buffer).  The
 //! iteration counts are deliberately small so the suite stays fast
 //! under TSan's ~10x slowdown.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -165,4 +169,197 @@ fn shutdown_mid_window_flushes_pending_rows_and_joins() {
     disp_thread.join().expect("dispatcher must exit once all handles drop");
     assert_eq!(stats.queue_depth(), 0);
     assert_eq!(exec.calls.load(Ordering::Relaxed), 1);
+}
+
+/// Blocks inside each fused batch until the test releases it, reporting
+/// entry over a channel — turns "the device is mid-round" from a race
+/// into a deterministic state, so the pipelined tests can *prove*
+/// rounds are assembled while the previous round executes rather than
+/// hope a sleep lined up.
+struct GateExec {
+    rows: AtomicU64,
+    entered: mpsc::Sender<()>,
+    release: Mutex<mpsc::Receiver<()>>,
+}
+
+impl GateExec {
+    /// `(executor, entered_rx, release_tx)`: recv on `entered_rx` to
+    /// know a batch is executing, send on `release_tx` to let it finish.
+    fn new() -> (Self, mpsc::Receiver<()>, mpsc::Sender<()>) {
+        let (entered_tx, entered_rx) = mpsc::channel();
+        let (release_tx, release_rx) = mpsc::channel();
+        let exec = GateExec {
+            rows: AtomicU64::new(0),
+            entered: entered_tx,
+            release: Mutex::new(release_rx),
+        };
+        (exec, entered_rx, release_tx)
+    }
+}
+
+impl DeviceExecutor for GateExec {
+    fn exec_forward(
+        &self,
+        tokens: &[u32],
+        _pos: &[u32],
+        _slots: &[u32],
+        _bias: &[f32],
+        _cache: &[f32],
+    ) -> Result<StepOutput> {
+        Ok(StepOutput { n: 1, logits: vec![tokens[0] as f32], hidden: vec![], new_kv: vec![] })
+    }
+
+    fn exec_forward_batch(&self, items: &[BatchItem<'_>]) -> Result<Vec<StepOutput>> {
+        self.rows.fetch_add(items.len() as u64, Ordering::Relaxed);
+        let _ = self.entered.send(());
+        // a dropped release sender must not wedge the device stage —
+        // ignore the error and let the batch finish
+        let _ = self.release.lock().expect("gate lock").recv();
+        Ok(items
+            .iter()
+            .map(|it| StepOutput {
+                n: 1,
+                logits: vec![it.plan.tokens[0] as f32],
+                hidden: vec![],
+                new_kv: vec![],
+            })
+            .collect())
+    }
+}
+
+/// The same register/submit/deregister churn as the first test, but
+/// through the pipelined two-stage serve loop: every reply must still
+/// be routed to its own submitter, the queue must drain, and the
+/// collector + device stages must both exit once the last handle
+/// drops.  The echo executor's in-batch sleep keeps the device stage
+/// busy so the collector genuinely races it.
+#[test]
+fn pipelined_tick_barrier_survives_register_deregister_churn() {
+    const THREADS: usize = 8;
+    const ITERS: u32 = 24;
+
+    let stats = Arc::new(DispatchStats::default());
+    let (handle, mut disp) =
+        DeviceDispatcher::channel(Duration::from_micros(500), Arc::clone(&stats));
+    disp.set_pipelined(true);
+    let exec = Arc::new(EchoExec::default());
+    let dexec = Arc::clone(&exec);
+    let disp_thread = thread::spawn(move || disp.run(&*dexec));
+
+    let mut workers = Vec::new();
+    for t in 0..THREADS {
+        let h = handle.clone();
+        workers.push(thread::spawn(move || {
+            for i in 0..ITERS {
+                let tag = (t as u32) * 1000 + i;
+                h.register();
+                let rx = h.submit_tick(t, vec![row(tag)]).expect("dispatcher alive");
+                let reply = rx.recv().expect("reply must arrive");
+                let outs = reply.outs.expect("echo step cannot fail");
+                assert_eq!(outs.len(), 1);
+                assert_eq!(outs[0].logits, vec![tag as f32], "reply misrouted");
+                assert_eq!(reply.rows.len(), 1, "caches must come back with the reply");
+                h.deregister();
+            }
+        }));
+    }
+    for w in workers {
+        w.join().expect("churn thread panicked");
+    }
+
+    let expected = (THREADS as u64) * u64::from(ITERS);
+    assert_eq!(stats.rows_total(), expected, "every submitted row must be dispatched");
+    assert_eq!(exec.rows.load(Ordering::Relaxed), expected);
+    assert_eq!(stats.queue_depth(), 0, "queue must drain after churn");
+    assert_eq!(handle.active(), 0, "every register matched a deregister");
+    assert!(stats.window_us() > 0, "collector must publish its adaptive window");
+    assert!(stats.device_busy_us_total() > 0, "device busy time must accumulate");
+
+    drop(handle);
+    disp_thread.join().expect("both pipelined stages must exit once all handles drop");
+}
+
+/// The overlap the pipelined topology exists for, made deterministic:
+/// with the device stage gated open inside round 1, rounds 2 and 3 are
+/// submitted and must be fully assembled by the collector — and
+/// counted as overlap — *before* round 1 is released.
+#[test]
+fn pipelined_collector_assembles_rounds_while_device_executes() {
+    let stats = Arc::new(DispatchStats::default());
+    let (handle, mut disp) =
+        DeviceDispatcher::channel(Duration::from_micros(500), Arc::clone(&stats));
+    disp.set_pipelined(true);
+    let (exec, entered, release) = GateExec::new();
+    let exec = Arc::new(exec);
+    let dexec = Arc::clone(&exec);
+    let disp_thread = thread::spawn(move || disp.run(&*dexec));
+
+    let rx1 = handle.submit_tick(0, vec![row(21)]).expect("dispatcher alive");
+    entered.recv().expect("device stage must enter round 1");
+    // the device is now provably mid-round; these two rounds can only
+    // be assembled during its execution
+    let rx2 = handle.submit_tick(0, vec![row(22)]).expect("dispatcher alive");
+    let rx3 = handle.submit_tick(0, vec![row(23)]).expect("dispatcher alive");
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while stats.overlap_batches_total() < 2 {
+        assert!(
+            Instant::now() < deadline,
+            "collector never assembled rounds 2 and 3 during round 1's execution"
+        );
+        thread::sleep(Duration::from_micros(200));
+    }
+
+    release.send(()).expect("device stage holds the gate");
+    let r1 = rx1.recv().expect("round 1 reply");
+    assert_eq!(r1.outs.expect("echo step cannot fail")[0].logits, vec![21.0]);
+    for (rx, want) in [(rx2, 22.0), (rx3, 23.0)] {
+        entered.recv().expect("device stage must take the staged round");
+        release.send(()).expect("device stage holds the gate");
+        let reply = rx.recv().expect("staged round reply");
+        assert_eq!(reply.outs.expect("echo step cannot fail")[0].logits, vec![want]);
+    }
+
+    assert_eq!(stats.batches_total(), 3);
+    assert_eq!(stats.rows_total(), 3);
+    assert_eq!(stats.overlap_batches_total(), 2, "exactly rounds 2 and 3 overlapped");
+    assert!(stats.device_busy_us_total() > 0);
+    drop(handle);
+    disp_thread.join().expect("both pipelined stages must exit once all handles drop");
+}
+
+/// Shutdown with work parked in *every* pipeline buffer: round 1 held
+/// open on the device stage, round 2 staged in the depth-1 buffer,
+/// round 3 at the collector — then every handle drops.  All three must
+/// still be answered and both stages must join.
+#[test]
+fn pipelined_shutdown_with_rounds_in_both_buffers_stays_lossless() {
+    let stats = Arc::new(DispatchStats::default());
+    let (handle, mut disp) =
+        DeviceDispatcher::channel(Duration::from_micros(500), Arc::clone(&stats));
+    disp.set_pipelined(true);
+    let (exec, entered, release) = GateExec::new();
+    let exec = Arc::new(exec);
+    let dexec = Arc::clone(&exec);
+    let disp_thread = thread::spawn(move || disp.run(&*dexec));
+
+    let rx1 = handle.submit_tick(0, vec![row(31)]).expect("dispatcher alive");
+    entered.recv().expect("device stage must enter round 1");
+    let rx2 = handle.submit_tick(0, vec![row(32)]).expect("dispatcher alive");
+    let rx3 = handle.submit_tick(0, vec![row(33)]).expect("dispatcher alive");
+    drop(handle);
+
+    release.send(()).expect("device stage holds the gate");
+    let r1 = rx1.recv().expect("round 1 must be answered despite shutdown");
+    assert_eq!(r1.outs.expect("echo step cannot fail")[0].logits, vec![31.0]);
+    for (rx, want) in [(rx2, 32.0), (rx3, 33.0)] {
+        entered.recv().expect("buffered round must still reach the device stage");
+        release.send(()).expect("device stage holds the gate");
+        let reply = rx.recv().expect("buffered round must be answered despite shutdown");
+        assert_eq!(reply.outs.expect("echo step cannot fail")[0].logits, vec![want]);
+    }
+
+    disp_thread.join().expect("both pipelined stages must exit after the lossless drain");
+    assert_eq!(stats.rows_total(), 3, "no buffered round may be dropped at shutdown");
+    assert_eq!(stats.queue_depth(), 0);
+    assert_eq!(exec.rows.load(Ordering::Relaxed), 3);
 }

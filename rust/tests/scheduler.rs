@@ -42,10 +42,19 @@
 //!    execution token-exact at workers 1/2/4 × max_inflight 1/2/4,
 //!    with the smallest covering bucket demonstrably selected (via the
 //!    dispatcher's kv histogram) when every rider is short;
+//!  * pipelined split ticks ([`SharedHarness`] in pipelined mode:
+//!    submit → admit inside the overlap window → pump → complete, every
+//!    round flushed through the dispatcher's prepare/pre-collate path):
+//!    token-exact vs the unpipelined shared path at workers 1/2/4 ×
+//!    max_inflight 1/2/4 — including mid-flight admission landing while
+//!    a round is at the dispatcher, cancellation, a dispatcher dying
+//!    mid-overlap, and scheduler teardown with a tick still in flight
+//!    (caches reconciled with the pool, reply channels answered);
 //!  * the full coordinator (threads + queue + scheduler) end to end,
 //!    with the worker count taken from `PPD_TEST_WORKERS`, fusion from
-//!    `PPD_TEST_FUSE`, and shared-runtime dispatch from
-//!    `PPD_TEST_SHARED` (CI matrix).
+//!    `PPD_TEST_FUSE`, shared-runtime dispatch from `PPD_TEST_SHARED`,
+//!    and the pipelined split-tick loop from `PPD_TEST_PIPELINED`
+//!    (CI matrix).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -56,10 +65,10 @@ use anyhow::{bail, Result};
 use ppd::batch::dispatch::{
     DeviceDispatcher, DeviceExecutor, DispatchStats, DEFAULT_WINDOW,
 };
-use ppd::batch::collator::{collate, split};
+use ppd::batch::collator::{collate, split, CollatedBatch};
 use ppd::batch::{
-    select_kv_bucket, union_max_slot, BatchItem, BatchMeta, BatchStepEngine, PlanInputs,
-    StepPlan, StepResult,
+    select_kv_bucket, union_max_slot, BatchInventory, BatchItem, BatchMeta, BatchStepEngine,
+    PlanInputs, StepPlan, StepResult,
 };
 use ppd::coordinator::queue::Job;
 use ppd::coordinator::{
@@ -806,6 +815,53 @@ impl DeviceExecutor for KvExec {
     ) -> Result<(Vec<StepOutput>, BatchMeta)> {
         self.run(items).map(|(outs, kv)| (outs, BatchMeta { kv: Some(kv) }))
     }
+
+    /// Advertise a batched-graph inventory so the pipelined dispatcher
+    /// pre-collates rounds on its collector stage — the path
+    /// `Runtime::batch_inventory` feeds in production.  Single-token
+    /// plans, `fwd_b{2,4,8}` ladder, every kv variant present.
+    fn batch_inventory(&self) -> Option<BatchInventory> {
+        let (planes, d) = (2 * SHAPE.0, SHAPE.2);
+        let tree_buckets = vec![1];
+        let batch_buckets = vec![2, 4, 8];
+        let mut available = std::collections::BTreeSet::new();
+        for &b in &batch_buckets {
+            for &n in &tree_buckets {
+                available.insert((b, n, SHAPE.1));
+                for &kv in &self.kv_buckets {
+                    available.insert((b, n, kv));
+                }
+            }
+        }
+        Some(BatchInventory {
+            tree_buckets,
+            batch_buckets,
+            kv_buckets: self.kv_buckets.clone(),
+            available,
+            planes,
+            max_ctx: SHAPE.1,
+            d,
+            kv_disabled: self.disabled,
+        })
+    }
+
+    /// Execute a round the collector stage already collated: echo each
+    /// real row's tag through the padded `[batch, n]` device layout and
+    /// split — the same contract as [`KvExec::run`], so a divergence
+    /// between the pre-collated and executor-collated paths trips
+    /// `apply_step`'s wrong-tag check.
+    fn exec_collated(&self, c: &CollatedBatch) -> Result<(Vec<StepOutput>, BatchMeta)> {
+        self.forwards.fetch_add(1, Ordering::SeqCst);
+        let (b, n, d, planes) = (c.batch, c.n, c.d, c.planes);
+        let vocab = 1;
+        let mut logits = vec![0.0f32; b * n * vocab];
+        for i in 0..c.rows {
+            logits[i * n] = c.tokens[i * n] as f32;
+        }
+        let hidden = vec![0.0f32; b * n * d];
+        let new_kv = vec![0.0f32; b * planes * n * d];
+        Ok((split(c, &logits, &hidden, &new_kv, vocab)?, BatchMeta { kv: Some(c.kv) }))
+    }
 }
 
 /// N hand-driven schedulers sharing ONE dispatcher/executor — the
@@ -816,11 +872,14 @@ impl DeviceExecutor for KvExec {
 struct SharedHarness<E: DeviceExecutor = MockExec> {
     scheds: Vec<StepScheduler>,
     engines: Vec<MockEngine>,
-    pool: SharedCachePool,
-    stats: QueueStats,
+    pool: Arc<SharedCachePool>,
+    stats: Arc<QueueStats>,
     dispatcher: DeviceDispatcher,
     dstats: Arc<DispatchStats>,
     exec: E,
+    /// flush rounds through the dispatcher's pipelined prepare/
+    /// pre-collate path (`pump_pipelined`) instead of the plain pump
+    pipelined: bool,
     tx: mpsc::Sender<Response>,
     rx: mpsc::Receiver<Response>,
 }
@@ -829,28 +888,51 @@ impl SharedHarness<MockExec> {
     fn new(workers: usize, max_inflight: usize) -> Self {
         Self::with_exec(workers, max_inflight, MockExec::new())
     }
+
+    fn pipelined(workers: usize, max_inflight: usize) -> Self {
+        Self::build(workers, max_inflight, MockExec::new(), true)
+    }
 }
 
 impl<E: DeviceExecutor> SharedHarness<E> {
     fn with_exec(workers: usize, max_inflight: usize, exec: E) -> Self {
+        Self::build(workers, max_inflight, exec, false)
+    }
+
+    fn build(workers: usize, max_inflight: usize, exec: E, pipelined: bool) -> Self {
         let dstats = Arc::new(DispatchStats::default());
         let (handle, dispatcher) =
             DeviceDispatcher::channel(DEFAULT_WINDOW, Arc::clone(&dstats));
-        let policy =
-            SchedPolicy { max_inflight, shared_runtime: true, ..Default::default() };
+        let policy = SchedPolicy {
+            max_inflight,
+            shared_runtime: true,
+            pipelined,
+            ..Default::default()
+        };
+        let pool = Arc::new(SharedCachePool::new(workers * max_inflight));
+        let stats = Arc::new(QueueStats::new());
         let scheds = (0..workers)
-            .map(|w| StepScheduler::with_dispatcher(w, policy, handle.clone()))
+            .map(|w| {
+                StepScheduler::with_dispatcher(
+                    w,
+                    policy,
+                    handle.clone(),
+                    Arc::clone(&pool),
+                    Arc::clone(&stats),
+                )
+            })
             .collect();
         let engines = (0..workers).map(|_| MockEngine::new()).collect();
         let (tx, rx) = mpsc::channel();
         SharedHarness {
             scheds,
             engines,
-            pool: SharedCachePool::new(workers * max_inflight),
-            stats: QueueStats::new(),
+            pool,
+            stats,
             dispatcher,
             dstats,
             exec,
+            pipelined,
             tx,
             rx,
         }
@@ -867,16 +949,38 @@ impl<E: DeviceExecutor> SharedHarness<E> {
         self.scheds.iter().any(|s| !s.is_empty())
     }
 
-    /// One wall tick across every scheduler; returns the device calls
-    /// it cost (the tentpole claim: ≤ 1, however many workers ran).
-    fn wall_tick(&mut self) -> usize {
+    /// Phase A of a wall tick: every scheduler plans and submits its
+    /// fused rows to the dispatcher.
+    fn submit_all(&mut self) {
         for (s, e) in self.scheds.iter_mut().zip(self.engines.iter_mut()) {
             s.tick_shared_submit(e, &self.pool, &self.stats);
         }
-        let calls = self.dispatcher.pump(&self.exec);
+    }
+
+    /// The dispatcher flush; pipelined harnesses route through
+    /// [`DeviceDispatcher::pump_pipelined`] so every round takes the
+    /// prepare/pre-collate path the collector stage runs in production.
+    fn pump_round(&mut self) -> usize {
+        if self.pipelined {
+            self.dispatcher.pump_pipelined(&self.exec)
+        } else {
+            self.dispatcher.pump(&self.exec)
+        }
+    }
+
+    /// Phase B: every scheduler joins its reply and applies the round.
+    fn complete_all(&mut self) {
         for (s, e) in self.scheds.iter_mut().zip(self.engines.iter_mut()) {
             s.tick_shared_complete(e, &self.pool, &self.stats);
         }
+    }
+
+    /// One wall tick across every scheduler; returns the device calls
+    /// it cost (the tentpole claim: ≤ 1, however many workers ran).
+    fn wall_tick(&mut self) -> usize {
+        self.submit_all();
+        let calls = self.pump_round();
+        self.complete_all();
         calls
     }
 
@@ -1230,6 +1334,288 @@ fn dead_dispatcher_fails_sequences_and_reconciles_the_pool() {
     assert!(ok);
 }
 
+#[test]
+fn pipelined_shared_dispatch_is_token_exact_at_every_depth() {
+    // tentpole acceptance: the pipelined split-tick path — submission
+    // first, admission landing INSIDE the overlap window while the
+    // round is at the dispatcher, rounds flushed through the
+    // prepare/pre-collate path — is output-transparent vs the
+    // unpipelined shared path and the reference at workers 1/2/4 ×
+    // max_inflight 1/2/4
+    let (_, expect) = workload_reqs(8);
+    for workers in [1usize, 2, 4] {
+        for max_inflight in [1usize, 2, 4] {
+            let mut per_mode: Vec<Vec<Response>> = Vec::new();
+            for pipelined in [false, true] {
+                let mut h = if pipelined {
+                    SharedHarness::pipelined(workers, max_inflight)
+                } else {
+                    SharedHarness::new(workers, max_inflight)
+                };
+                let (reqs, _) = workload_reqs(8);
+                let mut pending: std::collections::VecDeque<Request> =
+                    reqs.into_iter().collect();
+                while !pending.is_empty() || h.busy() {
+                    h.submit_all();
+                    // mid-flight admission in the overlap window: the
+                    // submitted rows are away at the dispatcher, yet
+                    // `len()` must still count them — capacity is never
+                    // exceeded by overlap-window admissions
+                    for w in 0..workers {
+                        assert!(h.scheds[w].len() <= max_inflight, "overlap over-admitted");
+                        if h.scheds[w].has_capacity() {
+                            if let Some(r) = pending.pop_front() {
+                                assert!(h.admit(w, r).0, "admission refused");
+                            }
+                        }
+                    }
+                    let calls = h.pump_round();
+                    assert!(
+                        calls <= 1,
+                        "workers={workers} inflight={max_inflight} pipelined={pipelined}: \
+                         wall tick cost {calls} device calls"
+                    );
+                    h.complete_all();
+                }
+                let mut resps = h.drain_responses();
+                resps.sort_by_key(|r| r.id);
+                assert_eq!(resps.len(), 8);
+                for (r, want) in resps.iter().zip(&expect) {
+                    assert!(r.error.is_none(), "pipelined={pipelined}: {:?}", r.error);
+                    assert_eq!(
+                        r.tokens, *want,
+                        "pipelined={pipelined} perturbed request {} \
+                         (workers={workers}, inflight={max_inflight})",
+                        r.id
+                    );
+                }
+                assert_eq!(h.pool.outstanding(), 0);
+                assert!(
+                    h.stats.max_inflight_seqs() as usize <= max_inflight,
+                    "overlap-window admission exceeded max_inflight"
+                );
+                assert_eq!(h.dstats.queue_depth(), 0);
+                per_mode.push(resps);
+            }
+            for (a, b) in per_mode[0].iter().zip(&per_mode[1]) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(
+                    a.tokens, b.tokens,
+                    "pipelined diverged from unpipelined on request {} \
+                     (workers={workers}, inflight={max_inflight})",
+                    a.id
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pipelined_precollated_rounds_are_token_exact_at_every_depth() {
+    // the collector-stage collation path: [`KvExec`] advertises a
+    // batched-graph inventory, so the pipelined pump pre-collates every
+    // multi-rider round (bucket selection + truncation on the host
+    // stage) and executes it via `exec_collated` — which must be
+    // token-exact with the executor-collated unpipelined path at
+    // workers 1/2/4 × max_inflight 1/2/4
+    let (_, expect) = workload_reqs(8);
+    for workers in [1usize, 2, 4] {
+        for max_inflight in [1usize, 2, 4] {
+            let mut per_mode: Vec<Vec<Response>> = Vec::new();
+            for pipelined in [false, true] {
+                let mut h = SharedHarness::build(
+                    workers,
+                    max_inflight,
+                    KvExec::new(vec![16, 32, 48], false),
+                    pipelined,
+                );
+                let (reqs, _) = workload_reqs(8);
+                let mut pending: std::collections::VecDeque<Request> =
+                    reqs.into_iter().collect();
+                while !pending.is_empty() || h.busy() {
+                    h.submit_all();
+                    for w in 0..workers {
+                        if h.scheds[w].has_capacity() {
+                            if let Some(r) = pending.pop_front() {
+                                assert!(h.admit(w, r).0, "admission refused");
+                            }
+                        }
+                    }
+                    assert!(h.pump_round() <= 1);
+                    h.complete_all();
+                }
+                let mut resps = h.drain_responses();
+                resps.sort_by_key(|r| r.id);
+                assert_eq!(resps.len(), 8);
+                for (r, want) in resps.iter().zip(&expect) {
+                    assert!(r.error.is_none(), "pipelined={pipelined}: {:?}", r.error);
+                    assert_eq!(
+                        r.tokens, *want,
+                        "pre-collated round perturbed request {} \
+                         (workers={workers}, inflight={max_inflight}, pipelined={pipelined})",
+                        r.id
+                    );
+                }
+                assert_eq!(h.pool.outstanding(), 0);
+                if pipelined && workers * max_inflight >= 2 {
+                    // multi-rider rounds exist at this depth, and every
+                    // one of them fits a fwd_b{2,4,8} bucket: the
+                    // collector stage must have collated them
+                    assert!(
+                        h.dstats.overlap_precollated_batches_total() > 0,
+                        "inventory present but no round was pre-collated \
+                         (workers={workers}, inflight={max_inflight})"
+                    );
+                    // kv-bucket selection survives the move to the
+                    // collector stage: these prompts stay short
+                    assert!(
+                        h.dstats.kv_hist().keys().any(|&kv| kv < SHAPE.1),
+                        "short kv buckets never engaged on the pre-collated path"
+                    );
+                }
+                per_mode.push(resps);
+            }
+            for (a, b) in per_mode[0].iter().zip(&per_mode[1]) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(
+                    a.tokens, b.tokens,
+                    "pre-collated diverged from executor-collated on request {} \
+                     (workers={workers}, inflight={max_inflight})",
+                    a.id
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pipelined_cancellation_frees_cache_and_costs_no_device_call() {
+    let mut h = SharedHarness::pipelined(2, 2);
+    let (ok, cancel) = h.admit(0, mk_req(0, "cancel me in pipelined mode", 50));
+    assert!(ok);
+    h.wall_tick();
+    h.wall_tick();
+    assert_eq!(h.pool.outstanding(), 1);
+    cancel.cancel();
+    let calls = h.wall_tick();
+    assert_eq!(calls, 0, "a tick that only cancels must not touch the device");
+    assert!(!h.busy());
+    assert_eq!(h.pool.outstanding(), 0, "cancel must return the cache to the pool");
+    assert_eq!(h.stats.cancelled_total(), 1);
+    let resp = h.rx.try_recv().expect("cancelled sequence answers its channel");
+    assert!(resp.error.as_deref().unwrap_or_default().contains("cancelled"));
+}
+
+#[test]
+fn pipelined_dead_dispatcher_mid_overlap_fails_rows_and_reconciles() {
+    // the overlap window's worst case: the dispatcher dies while a
+    // submitted round is in flight AND a new admission just landed in
+    // the window — the round's caches are lost (forgotten, not
+    // leaked), the newcomer survives to fail cleanly on its own submit
+    let mut h = SharedHarness::pipelined(2, 2);
+    assert!(h.admit(0, mk_req(0, "overlap loss a", 9)).0);
+    assert!(h.admit(1, mk_req(1, "overlap loss b", 9)).0);
+    h.submit_all();
+    assert!(h.admit(0, mk_req(2, "joined mid overlap", 3)).0);
+    assert_eq!(h.pool.outstanding(), 3);
+    let (_, dummy) =
+        DeviceDispatcher::channel(DEFAULT_WINDOW, Arc::new(DispatchStats::default()));
+    drop(std::mem::replace(&mut h.dispatcher, dummy));
+    h.complete_all();
+    assert_eq!(h.pool.outstanding(), 1, "lost caches forgotten, the newcomer's kept");
+    let resps = h.drain_responses();
+    assert_eq!(resps.len(), 2);
+    for r in &resps {
+        assert!(
+            r.error.as_deref().unwrap_or_default().contains("dispatcher"),
+            "{:?}",
+            r.error
+        );
+    }
+    // the mid-overlap admission retires on its next submit: the dead
+    // dispatcher hands its rows straight back
+    h.submit_all();
+    h.complete_all();
+    assert!(!h.busy());
+    assert_eq!(h.pool.outstanding(), 0);
+    let resps = h.drain_responses();
+    assert_eq!(resps.len(), 1);
+    assert_eq!(resps[0].id, 2);
+    assert!(resps[0].error.as_deref().unwrap_or_default().contains("dispatcher"));
+}
+
+#[test]
+fn dropping_scheduler_with_inflight_tick_reconciles_caches_and_answers() {
+    // regression: `StepScheduler::Drop` used to silently drop a pending
+    // shared tick — leaking the rows' caches against the pool cap and
+    // leaving their reply channels unanswered forever.  Teardown must
+    // reconcile all three reply scenarios.
+
+    // (a) the round was flushed and the reply is waiting: the caches
+    // come back and must be checked IN (reusable), the jobs answered
+    let mut h = SharedHarness::new(1, 2);
+    assert!(h.admit(0, mk_req(0, "torn down a", 9)).0);
+    assert!(h.admit(0, mk_req(1, "torn down b", 9)).0);
+    h.submit_all();
+    h.pump_round();
+    assert!(h.scheds[0].has_pending());
+    assert_eq!(h.pool.outstanding(), 2);
+    h.scheds.clear(); // Drop with the reply queued
+    assert_eq!(h.pool.outstanding(), 0, "returned caches must check back in");
+    let resps = h.drain_responses();
+    assert_eq!(resps.len(), 2);
+    for r in &resps {
+        assert!(
+            r.error.as_deref().unwrap_or_default().contains("shut down"),
+            "{:?}",
+            r.error
+        );
+    }
+    let c = h.pool.checkout(SHAPE.0, SHAPE.1, SHAPE.2).expect("freed capacity reusable");
+    assert_eq!(h.pool.created(), 2, "reconciled caches are reused, not reallocated");
+    h.pool.checkin(c);
+
+    // (b) the dispatcher died holding the round: the reply channel is
+    // disconnected — teardown must forget the lost caches immediately,
+    // not wait out the drain timeout
+    let mut h = SharedHarness::new(1, 2);
+    assert!(h.admit(0, mk_req(0, "torn down c", 9)).0);
+    h.submit_all();
+    let (_, dummy) =
+        DeviceDispatcher::channel(DEFAULT_WINDOW, Arc::new(DispatchStats::default()));
+    drop(std::mem::replace(&mut h.dispatcher, dummy));
+    let t0 = std::time::Instant::now();
+    h.scheds.clear();
+    assert!(
+        t0.elapsed() < Duration::from_millis(200),
+        "a disconnected reply must not cost the full drain timeout"
+    );
+    assert_eq!(h.pool.outstanding(), 0, "lost caches must be forgotten, not leaked");
+    let resps = h.drain_responses();
+    assert_eq!(resps.len(), 1);
+    assert!(resps[0].error.is_some());
+
+    // (c) the dispatcher is alive but wedged (never flushes): teardown
+    // waits out the bounded drain timeout, then forgets
+    let mut h = SharedHarness::new(1, 2);
+    assert!(h.admit(0, mk_req(0, "torn down d", 9)).0);
+    h.submit_all();
+    let t0 = std::time::Instant::now();
+    h.scheds.clear();
+    assert!(
+        t0.elapsed() >= Duration::from_millis(200),
+        "a wedged dispatcher should cost the bounded drain timeout"
+    );
+    assert_eq!(h.pool.outstanding(), 0, "wedged-dispatcher caches reconciled by forget");
+    let resps = h.drain_responses();
+    assert_eq!(resps.len(), 1);
+    assert!(
+        resps[0].error.as_deref().unwrap_or_default().contains("shut down"),
+        "{:?}",
+        resps[0].error
+    );
+}
+
 // ---- full coordinator (threads + queue + scheduler) ----
 
 struct MockBackend {
@@ -1290,11 +1676,21 @@ fn test_shared() -> bool {
     std::env::var("PPD_TEST_SHARED").as_deref() == Ok("1")
 }
 
+/// CI matrix knob: `PPD_TEST_PIPELINED=1` runs the coordinator e2e
+/// tests through the pipelined split-tick worker loop and the
+/// double-buffered dispatcher (the matrix only sets it together with
+/// `PPD_TEST_SHARED=1`, since `--pipelined` rides the shared
+/// dispatcher).
+fn test_pipelined() -> bool {
+    std::env::var("PPD_TEST_PIPELINED").as_deref() == Ok("1")
+}
+
 #[test]
 fn coordinator_continuous_batching_is_token_exact_end_to_end() {
     let workers = test_workers();
     let fuse = test_fuse();
     let shared = test_shared();
+    let pipelined = test_pipelined();
     let reqs = |n: u64| -> Vec<Request> {
         (0..n).map(|i| mk_req(i, &format!("e2e request {i}"), 4 + (i as usize % 7))).collect()
     };
@@ -1310,6 +1706,7 @@ fn coordinator_continuous_batching_is_token_exact_end_to_end() {
             max_inflight: 4,
             fuse_steps: fuse,
             shared_runtime: shared,
+            pipelined,
             ..Default::default()
         },
     )
@@ -1321,6 +1718,7 @@ fn coordinator_continuous_batching_is_token_exact_end_to_end() {
             max_inflight: 1,
             fuse_steps: fuse,
             shared_runtime: shared,
+            pipelined,
             ..Default::default()
         },
     )
@@ -1421,6 +1819,50 @@ fn shared_coordinator_fuses_across_workers_end_to_end() {
 }
 
 #[test]
+fn pipelined_coordinator_is_token_exact_end_to_end() {
+    // the threaded version of the pipelined claim: the split-tick
+    // worker loop + double-buffered dispatcher (collector thread,
+    // adaptive window, staged rounds) serve exactly the tokens the
+    // unpipelined shared topology serves, and the pipelined stats
+    // channel fills in (adaptive window reported, device busy time
+    // accumulated)
+    let workers = 4;
+    let reqs = |n: u64| -> Vec<Request> {
+        (0..n).map(|i| mk_req(i, &format!("pipelined e2e {i}"), 10)).collect()
+    };
+    let expect: Vec<Vec<u32>> = reqs(16)
+        .iter()
+        .map(|r| reference_tokens(&r.prompt, r.max_new, r.seed))
+        .collect();
+    for pipelined in [false, true] {
+        let coord = Coordinator::spawn_with_backend_policy(
+            std::sync::Arc::new(MockBackend { step_delay: Duration::from_millis(1) }),
+            workers,
+            SchedPolicy {
+                max_inflight: 2,
+                shared_runtime: true,
+                pipelined,
+                ..Default::default()
+            },
+        )
+        .expect("spawn");
+        let resps = coord.run_batch(reqs(16)).expect("batch");
+        for (i, r) in resps.iter().enumerate() {
+            assert!(r.error.is_none(), "pipelined={pipelined}: {:?}", r.error);
+            assert_eq!(r.tokens, expect[i], "pipelined={pipelined} perturbed request {i}");
+        }
+        assert_eq!(coord.caches_outstanding(), 0);
+        let d = coord.dispatch_stats();
+        assert!(d.batches_total() > 0, "pipelined={pipelined}: never dispatched");
+        assert_eq!(d.queue_depth(), 0);
+        if pipelined {
+            assert!(d.window_us() > 0, "adaptive window never reported");
+            assert!(d.device_busy_us_total() > 0, "device busy time never accumulated");
+        }
+    }
+}
+
+#[test]
 fn fused_coordinator_cuts_device_calls_end_to_end() {
     // one worker so the schedule is load-deterministic enough to
     // compare: the fused coordinator must issue ≥2× fewer device calls
@@ -1465,6 +1907,7 @@ fn coordinator_cancel_flag_aborts_inflight_request() {
             max_inflight: 2,
             fuse_steps: test_fuse(),
             shared_runtime: test_shared(),
+            pipelined: test_pipelined(),
             ..Default::default()
         },
     )

@@ -3,23 +3,30 @@
 
 Compares a fresh ``BENCH_sched.json`` (written by
 ``cargo run --release --example bench_sched``) against the committed
-``BENCH_baseline.json`` and fails when device calls per token regress:
+``BENCH_baseline.json`` and fails when the trajectory regresses:
 
-* every sweep point's value must stay at or under its committed
-  ``ceiling`` (a hard structural bound: the fusion ladder with margin);
+* every sweep point's ``device_calls_per_token`` must stay at or under
+  its committed ``ceiling`` (a hard structural bound: the fusion ladder
+  with margin);
 * points that carry a numeric ``reference`` must additionally stay
-  within ``growth_pct`` (default 10%) of it.
+  within ``growth_pct`` (default 10%) of it;
+* points that carry a numeric ``tps_reference`` must keep
+  ``tokens_per_s`` above ``tps_reference × (1 - tps_drop_pct/100)``
+  (default 30% — wallclock throughput varies across machines far more
+  than the structural call counts do, so the drop allowance is
+  deliberately generous and only catches collapses).
 
 ``serial`` points are a pure function of the scheduler (one device call
-per generated token), so their references are exact.  ``fused`` and
-``shared`` points go through live threads and coalescing windows, so
-their baseline starts ceiling-only; seed tight references from a
-trusted machine with::
+per generated token), so their references are exact.  ``fused``,
+``shared``, and ``pipelined`` points go through live threads and
+coalescing windows, so their baseline starts ceiling-only; seed tight
+references (device-call and tokens/s both) from a trusted machine
+with::
 
     python3 tools/bench_gate.py BENCH_sched.json BENCH_baseline.json --seed
 
-which fills each ``reference`` from the fresh run (and is a no-op on
-the ceilings).  CI runs the plain compare form.
+which fills each ``reference``/``tps_reference`` from the fresh run
+(and is a no-op on the ceilings).  CI runs the plain compare form.
 """
 
 import argparse
@@ -33,7 +40,10 @@ def load_points(report):
     points = {}
     for run in report["runs"]:
         key = f"{run['mode']}/{int(run['workers'])}"
-        points[key] = float(run["device_calls_per_token"])
+        points[key] = {
+            "device_calls_per_token": float(run["device_calls_per_token"]),
+            "tokens_per_s": float(run["tokens_per_s"]),
+        }
     return points
 
 
@@ -44,7 +54,8 @@ def main():
     ap.add_argument(
         "--seed",
         action="store_true",
-        help="rewrite the baseline's references from the fresh run",
+        help="rewrite the baseline's references (device-call and tokens/s) "
+        "from the fresh run",
     )
     args = ap.parse_args()
 
@@ -55,6 +66,8 @@ def main():
 
     gate = baseline.get("gate", {})
     growth = 1.0 + float(gate.get("growth_pct", 10)) / 100.0
+    tps_drop_pct = float(gate.get("tps_drop_pct", 30))
+    tps_keep = 1.0 - tps_drop_pct / 100.0
     expected = baseline.get("points", {})
 
     missing = sorted(set(expected) - set(fresh))
@@ -63,7 +76,8 @@ def main():
 
     if args.seed:
         for key, spec in expected.items():
-            spec["reference"] = round(fresh[key], 4)
+            spec["reference"] = round(fresh[key]["device_calls_per_token"], 4)
+            spec["tps_reference"] = round(fresh[key]["tokens_per_s"], 1)
         with open(args.baseline, "w") as f:
             json.dump(baseline, f, indent=2)
             f.write("\n")
@@ -74,7 +88,7 @@ def main():
     print("bench_gate: device calls per token (fresh vs committed)")
     for key in sorted(expected):
         spec = expected[key]
-        value = fresh[key]
+        value = fresh[key]["device_calls_per_token"]
         ceiling = float(spec["ceiling"])
         reference = spec.get("reference")
         limit = ceiling
@@ -83,12 +97,29 @@ def main():
             limit = min(limit, float(reference) * growth)
             detail += f", reference {float(reference):.3f} (+{gate.get('growth_pct', 10)}%)"
         verdict = "ok" if value <= limit else "FAIL"
-        print(f"  {key:>9}: {value:.4f}  [{detail}] {verdict}")
+        print(f"  {key:>11}: {value:.4f}  [{detail}] {verdict}")
         if value > limit:
             failures.append(f"{key}: {value:.4f} > {limit:.4f} ({detail})")
 
+    print("bench_gate: tokens/s (fresh vs committed floor)")
+    for key in sorted(expected):
+        spec = expected[key]
+        tps_ref = spec.get("tps_reference")
+        tps = fresh[key]["tokens_per_s"]
+        if tps_ref is None:
+            print(f"  {key:>11}: {tps:10.0f}  [no reference seeded]")
+            continue
+        floor = float(tps_ref) * tps_keep
+        verdict = "ok" if tps >= floor else "FAIL"
+        print(
+            f"  {key:>11}: {tps:10.0f}  [reference {float(tps_ref):.0f}, "
+            f"floor -{tps_drop_pct:.0f}%] {verdict}"
+        )
+        if tps < floor:
+            failures.append(f"{key}: {tps:.0f} tok/s < floor {floor:.0f}")
+
     if failures:
-        print("bench_gate: device-call trajectory regressed:", file=sys.stderr)
+        print("bench_gate: bench trajectory regressed:", file=sys.stderr)
         for line in failures:
             print(f"  {line}", file=sys.stderr)
         raise SystemExit(1)
