@@ -5,10 +5,10 @@
 //! needed) across the scheduling topologies — serial vs fused vs
 //! shared-runtime dispatch vs pipelined shared dispatch, at 1 and 4
 //! workers — and writes one JSON
-//! report with tokens/s, device calls per token, and mean fused width
-//! per point.  The report is validated before it is written, so a
-//! malformed artifact fails the producing process, not a downstream
-//! consumer.
+//! report with tokens/s, device calls per token, mean fused width, and
+//! exact p50/p95/p99 TTFT + inter-token latency per point.  The report
+//! is validated before it is written, so a malformed artifact fails the
+//! producing process, not a downstream consumer.
 //!
 //!     cargo run --release --example bench_sched [out.json]
 
@@ -36,12 +36,14 @@ fn main() -> Result<()> {
                 .with_context(|| format!("sweep {mode:?} workers={workers}"))?;
             println!(
                 "{:>6} workers={} : {:>9.0} tok/s, {:.3} device calls/token, \
-                 mean width {:.2}",
+                 mean width {:.2}, ttft p95 {:.0}us, itl p95 {:.0}us",
                 mode.name(),
                 workers,
                 j.req("tokens_per_s")?.as_f64()?,
                 j.req("device_calls_per_token")?.as_f64()?,
                 j.req("mean_fused_width")?.as_f64()?,
+                j.req("ttft_p95_us")?.as_f64()?,
+                j.req("itl_p95_us")?.as_f64()?,
             );
             runs.push(j);
         }

@@ -1,0 +1,114 @@
+//! Record a Chrome trace from a live TCP server → `TRACE_sched.json`
+//! (the flight-recorder end-to-end path CI exercises in the scheduler
+//! matrix).
+//!
+//! Spawns the bench sweep's mock-backend coordinator (no model
+//! artifacts needed), enables trace sampling, serves it over TCP,
+//! drives concurrent generation clients, snapshots the recorder with
+//! the `trace` request, validates the Chrome shape (one `recv` and one
+//! `retire` event per request), and writes the JSON for Perfetto.
+//!
+//!     cargo run --release --example trace_record [out.json]
+//!
+//! Topology follows the scheduler-matrix env knobs (`PPD_TEST_WORKERS`,
+//! `PPD_TEST_FUSE`, `PPD_TEST_SHARED`, `PPD_TEST_PIPELINED`), so every
+//! matrix cell records its own topology's trace.
+
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use ppd::bench::{spawn_sweep_coordinator, SweepConfig, SweepMode};
+use ppd::coordinator::server;
+
+fn env_flag(name: &str) -> bool {
+    std::env::var(name).map(|v| v == "1").unwrap_or(false)
+}
+
+fn main() -> Result<()> {
+    let out = std::env::args().nth(1).unwrap_or_else(|| "TRACE_sched.json".into());
+    let workers: usize =
+        std::env::var("PPD_TEST_WORKERS").ok().and_then(|v| v.parse().ok()).unwrap_or(2);
+    let mode = if env_flag("PPD_TEST_PIPELINED") {
+        SweepMode::Pipelined
+    } else if env_flag("PPD_TEST_SHARED") {
+        SweepMode::Shared
+    } else if env_flag("PPD_TEST_FUSE") {
+        SweepMode::Fused
+    } else {
+        SweepMode::Serial
+    };
+    let cfg = SweepConfig {
+        mode,
+        workers,
+        max_inflight: 4,
+        requests: 16,
+        max_new: 8,
+        device_latency: Duration::from_micros(200),
+    };
+    let (requests, max_new) = (cfg.requests, cfg.max_new);
+    let coord = spawn_sweep_coordinator(&cfg)?;
+    coord.tracer().set_enabled(true);
+
+    let addr = "127.0.0.1:17951";
+    // one connection per generation plus the trace scrape, then serve
+    // returns and the join below surfaces any server-side error
+    let srv = std::thread::spawn(move || server::serve(coord, addr, Some(requests as u64 + 1)));
+    std::thread::sleep(Duration::from_millis(200));
+
+    let clients = 4usize;
+    std::thread::scope(|s| -> Result<()> {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                s.spawn(move || -> Result<()> {
+                    for i in 0..requests / clients {
+                        let resp = server::client_request(
+                            addr,
+                            &format!("trace record {c}/{i}"),
+                            max_new,
+                        )?;
+                        if let Some(e) = resp.get("error") {
+                            bail!("request {c}/{i} failed: {e}");
+                        }
+                    }
+                    Ok(())
+                })
+            })
+            .collect();
+        for h in handles {
+            match h.join() {
+                Ok(r) => r?,
+                Err(_) => bail!("client thread panicked"),
+            }
+        }
+        Ok(())
+    })?;
+
+    let trace = server::client_trace(addr).context("trace scrape")?;
+    match srv.join() {
+        Ok(r) => r.context("server exit")?,
+        Err(_) => bail!("server thread panicked"),
+    }
+
+    let events = trace.req("traceEvents")?.as_arr()?;
+    let (mut recv, mut retire) = (0usize, 0usize);
+    for e in events {
+        match e.get("name").and_then(|n| n.as_str().ok()) {
+            Some("recv") => recv += 1,
+            Some("retire") => retire += 1,
+            _ => {}
+        }
+    }
+    if recv != requests || retire != requests {
+        bail!("expected {requests} recv + retire events, got recv={recv} retire={retire}");
+    }
+    let dropped = trace.req("otherData")?.req("dropped_events")?.as_f64()?;
+    println!(
+        "{} workers={workers} : {} trace events ({recv} requests), {dropped} dropped",
+        mode.name(),
+        events.len(),
+    );
+    std::fs::write(&out, format!("{trace}\n")).with_context(|| format!("writing {out}"))?;
+    println!("wrote {out} — load it at https://ui.perfetto.dev");
+    Ok(())
+}

@@ -60,6 +60,7 @@ use crate::config::{ArtifactPaths, ModelConfig};
 use crate::kvcache::HostKvCache;
 use crate::metrics::{fused_slot_label, FusedHist};
 use crate::runtime::{Device, Runtime, StepOutput};
+use crate::trace::{Phase, TraceTrack, Tracer, NO_REQ};
 use crate::util::json::Json;
 use crate::util::panic_message;
 
@@ -605,6 +606,32 @@ impl DispatcherHandle {
     }
 }
 
+/// The dispatcher's trace attachment: the shared "dispatcher" track
+/// plus the round counter that keys a round's window-wait, collate, and
+/// device spans together.  The collector and device stages of the
+/// pipelined topology share one of these by reference — their spans
+/// interleave on the same track, which is exactly what makes the
+/// overlap (collate of round k+1 inside device round k) visible in the
+/// exported trace.
+struct DispatchTrace {
+    track: TraceTrack,
+    next_round: AtomicU64,
+}
+
+impl DispatchTrace {
+    fn begin_round(&self) -> u64 {
+        self.next_round.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    fn now(&self) -> u64 {
+        self.track.now_us()
+    }
+
+    fn span(&self, phase: Phase, round: u64, n: u32, start_us: u64, end_us: u64) {
+        self.track.span(phase, NO_REQ, round, n, start_us, end_us);
+    }
+}
+
 /// One fused round, assembled (and when the executor advertises a
 /// [`BatchInventory`], already collated) away from the device call —
 /// the unit the pipelined dispatcher's collector stage hands its
@@ -620,6 +647,8 @@ struct PreparedRound {
     /// the padded union, packed on the preparing thread; `None` routes
     /// the round through the executor's own collation/fallback path
     collated: Option<CollatedBatch>,
+    /// trace round number (0 when no tracer is attached)
+    round: u64,
 }
 
 /// What the collector stage forwards to the device stage.
@@ -635,7 +664,7 @@ enum Staged {
 /// the previous round.  A collation miss (lone rider, no covering
 /// graph, oversize) leaves `collated` empty and the executor path
 /// keeps owning the fallback policy.
-fn prepare_round(subs: Vec<TickSub>, inv: Option<&BatchInventory>) -> PreparedRound {
+fn prepare_round(subs: Vec<TickSub>, inv: Option<&BatchInventory>, round: u64) -> PreparedRound {
     let total: usize = subs.iter().map(|s| s.rows.len()).sum();
     let widths: Vec<(usize, usize)> = subs.iter().map(|s| (s.worker, s.rows.len())).collect();
     let (max_slot, collated) = {
@@ -651,7 +680,7 @@ fn prepare_round(subs: Vec<TickSub>, inv: Option<&BatchInventory>) -> PreparedRo
         };
         (union_max_slot(&items), collated)
     };
-    PreparedRound { subs, total, widths, max_slot, collated }
+    PreparedRound { subs, total, widths, max_slot, collated, round }
 }
 
 /// The device side: owns the request queue and (in production) the one
@@ -665,6 +694,7 @@ pub struct DeviceDispatcher {
     stats: Arc<DispatchStats>,
     window: Duration,
     pipelined: bool,
+    trace: Option<DispatchTrace>,
 }
 
 impl DeviceDispatcher {
@@ -678,13 +708,23 @@ impl DeviceDispatcher {
         let active = Arc::new(AtomicUsize::new(0));
         let handle =
             DispatcherHandle { tx, active: Arc::clone(&active), stats: Arc::clone(&stats) };
-        (handle, DeviceDispatcher { rx, active, stats, window, pipelined: false })
+        (handle, DeviceDispatcher { rx, active, stats, window, pipelined: false, trace: None })
     }
 
     /// Switch [`DeviceDispatcher::run`] to the double-buffered
     /// collector + device topology (`--pipelined`).
     pub fn set_pipelined(&mut self, on: bool) {
         self.pipelined = on;
+    }
+
+    /// Attach the flight recorder's "dispatcher" track: every round's
+    /// window-wait/collate/device spans land there (subject to the
+    /// tracer's sampling gate).
+    pub fn set_tracer(&mut self, tracer: &Arc<Tracer>) {
+        self.trace = Some(DispatchTrace {
+            track: tracer.track("dispatcher"),
+            next_round: AtomicU64::new(0),
+        });
     }
 
     /// Serve until every [`DispatcherHandle`] clone is dropped (i.e. the
@@ -698,8 +738,14 @@ impl DeviceDispatcher {
                 Err(_) => return,
                 Ok(DeviceRequest::Tick(sub)) => {
                     self.stats.on_take();
+                    let trace = self.trace.as_ref();
+                    let round = trace.map_or(0, |t| t.begin_round());
+                    let w0 = trace.map(|t| t.now());
                     let subs = self.collect(sub, exec);
-                    self.flush_ticks(subs, exec);
+                    if let (Some(t), Some(w0)) = (trace, w0) {
+                        t.span(Phase::WindowWait, round, subs.len() as u32, w0, t.now());
+                    }
+                    self.flush_ticks(subs, exec, round);
                 }
                 Ok(other) => {
                     self.stats.on_take();
@@ -731,13 +777,17 @@ impl DeviceDispatcher {
     /// staged round before returning, so a round in *each* buffer
     /// still gets its replies.
     fn run_pipelined(self, exec: &dyn DeviceExecutor) {
-        let DeviceDispatcher { rx, active, stats, window, .. } = self;
+        let DeviceDispatcher { rx, active, stats, window, trace, .. } = self;
         let inv = exec.batch_inventory();
         let busy = Arc::new(AtomicBool::new(false));
         let (staged_tx, staged_rx) = mpsc::sync_channel::<Staged>(1);
         std::thread::scope(|scope| {
             let c_stats = Arc::clone(&stats);
             let c_busy = Arc::clone(&busy);
+            // the collector and device stages share the one "dispatcher"
+            // track by reference: their spans interleave there, keyed by
+            // the round counter, which is what makes the overlap visible
+            let c_trace = trace.as_ref();
             scope.spawn(move || {
                 let mut tuner = WindowTuner::new(window);
                 loop {
@@ -755,6 +805,8 @@ impl DeviceDispatcher {
                             continue;
                         }
                     };
+                    let round_id = c_trace.map_or(0, |t| t.begin_round());
+                    let w0 = c_trace.map(|t| t.now());
                     let round_window = tuner.window();
                     c_stats.set_window_us(round_window.as_micros() as u64);
                     let t0 = Instant::now();
@@ -788,7 +840,14 @@ impl DeviceDispatcher {
                     // first-to-timeout: a straggler that never came
                     // must not ratchet the window back up to the cap
                     tuner.observe(last_sub - t0);
-                    let round = prepare_round(subs, inv.as_ref());
+                    let c0 = c_trace.map(|t| t.now());
+                    if let (Some(t), Some(w0), Some(c0)) = (c_trace, w0, c0) {
+                        t.span(Phase::WindowWait, round_id, subs.len() as u32, w0, c0);
+                    }
+                    let round = prepare_round(subs, inv.as_ref(), round_id);
+                    if let (Some(t), Some(c0)) = (c_trace, c0) {
+                        t.span(Phase::Collate, round_id, round.total as u32, c0, t.now());
+                    }
                     if c_busy.load(Ordering::Relaxed) {
                         // assembled while the device stage still ran
                         // the previous round: the overlap is real
@@ -804,11 +863,11 @@ impl DeviceDispatcher {
             for staged in staged_rx.iter() {
                 match staged {
                     Staged::Request(req) => {
-                        Self::serve_solo_with(&stats, req, exec);
+                        Self::serve_solo_with(&stats, trace.as_ref(), req, exec);
                     }
                     Staged::Round(round) => {
                         busy.store(true, Ordering::Relaxed);
-                        Self::exec_round_with(&stats, round, exec);
+                        Self::exec_round_with(&stats, trace.as_ref(), round, exec);
                         busy.store(false, Ordering::Relaxed);
                     }
                 }
@@ -874,23 +933,31 @@ impl DeviceDispatcher {
         }
         if !subs.is_empty() {
             let inv = if pipelined { exec.batch_inventory() } else { None };
-            calls += Self::exec_round_with(&self.stats, prepare_round(subs, inv.as_ref()), exec);
+            let round = self.trace.as_ref().map_or(0, |t| t.begin_round());
+            calls += Self::exec_round_with(
+                &self.stats,
+                self.trace.as_ref(),
+                prepare_round(subs, inv.as_ref(), round),
+                exec,
+            );
         }
         calls
     }
 
     fn serve_solo(&self, req: DeviceRequest, exec: &dyn DeviceExecutor) -> usize {
-        Self::serve_solo_with(&self.stats, req, exec)
+        Self::serve_solo_with(&self.stats, self.trace.as_ref(), req, exec)
     }
 
     fn serve_solo_with(
         stats: &DispatchStats,
+        trace: Option<&DispatchTrace>,
         req: DeviceRequest,
         exec: &dyn DeviceExecutor,
     ) -> usize {
         match req {
             DeviceRequest::Solo { plan, cache, reply } => {
                 stats.record_solo();
+                let s0 = trace.map(|t| t.now());
                 let r = catch_unwind(AssertUnwindSafe(|| {
                     exec.exec_forward(&plan.tokens, &plan.pos, &plan.slots, &plan.bias, &cache)
                 }));
@@ -898,6 +965,9 @@ impl DeviceDispatcher {
                     Ok(r) => r,
                     Err(p) => Err(anyhow!("device executor panicked: {}", panic_message(p))),
                 };
+                if let (Some(t), Some(s0)) = (trace, s0) {
+                    t.span(Phase::Solo, 0, 1, s0, t.now());
+                }
                 let _ = reply.send(r);
                 1
             }
@@ -912,7 +982,8 @@ impl DeviceDispatcher {
             }
             // defensive: a tick routed here fuses alone
             DeviceRequest::Tick(sub) => {
-                Self::exec_round_with(stats, prepare_round(vec![sub], None), exec)
+                let round = trace.map_or(0, |t| t.begin_round());
+                Self::exec_round_with(stats, trace, prepare_round(vec![sub], None, round), exec)
             }
         }
     }
@@ -921,8 +992,9 @@ impl DeviceDispatcher {
     /// the union and route each slice (plus its caches) back.  Failure
     /// is batch-wide but dispatcher-local: every rider gets the error,
     /// the thread survives.
-    fn flush_ticks(&self, subs: Vec<TickSub>, exec: &dyn DeviceExecutor) -> usize {
-        Self::exec_round_with(&self.stats, prepare_round(subs, None), exec)
+    fn flush_ticks(&self, subs: Vec<TickSub>, exec: &dyn DeviceExecutor, round: u64) -> usize {
+        let prepared = prepare_round(subs, None, round);
+        Self::exec_round_with(&self.stats, self.trace.as_ref(), prepared, exec)
     }
 
     /// Execute one prepared round: the device half of a fused tick,
@@ -932,10 +1004,11 @@ impl DeviceDispatcher {
     /// exec_collated`]); otherwise it collates internally.
     fn exec_round_with(
         stats: &DispatchStats,
+        trace: Option<&DispatchTrace>,
         round: PreparedRound,
         exec: &dyn DeviceExecutor,
     ) -> usize {
-        let PreparedRound { subs, total, widths, max_slot, collated } = round;
+        let PreparedRound { subs, total, widths, max_slot, collated, round: round_id } = round;
         if total == 0 {
             for s in subs {
                 let _ = s.reply.send(TickReply {
@@ -953,6 +1026,7 @@ impl DeviceDispatcher {
         // cache upload can get this tick
         stats.record_union_slot(max_slot);
 
+        let d0 = trace.map(|t| t.now());
         let t0 = Instant::now();
         let result = match &collated {
             Some(c) => {
@@ -971,6 +1045,9 @@ impl DeviceDispatcher {
         };
         let elapsed = t0.elapsed();
         stats.add_busy(elapsed.as_micros() as u64);
+        if let (Some(t), Some(d0)) = (trace, d0) {
+            t.span(Phase::Device, round_id, total as u32, d0, t.now());
+        }
         let share = elapsed.as_secs_f64() / total as f64;
 
         match result {

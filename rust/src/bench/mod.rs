@@ -329,12 +329,11 @@ impl WorkerBackend for BenchBackend {
     }
 }
 
-/// Run one sweep point through the full coordinator and report it as a
-/// JSON object (tokens/s, device calls per token, mean fused width).
-pub fn run_sweep(cfg: &SweepConfig) -> Result<Json> {
-    if cfg.requests == 0 || cfg.max_new == 0 {
-        bail!("sweep needs requests > 0 and max_new > 0");
-    }
+/// Spawn a config's mock-backend coordinator without running the
+/// sweep: the topology knobs map to `SchedPolicy` exactly as the sweep
+/// maps them.  Shared with `examples/trace_record.rs`, which serves the
+/// coordinator over TCP to record a live Chrome trace artifact-free.
+pub fn spawn_sweep_coordinator(cfg: &SweepConfig) -> Result<Coordinator> {
     let policy = SchedPolicy {
         max_inflight: cfg.max_inflight,
         fuse_steps: cfg.mode == SweepMode::Fused,
@@ -342,11 +341,23 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<Json> {
         pipelined: cfg.mode == SweepMode::Pipelined,
         ..Default::default()
     };
-    let coord = Coordinator::spawn_with_backend_policy(
+    Coordinator::spawn_with_backend_policy(
         Arc::new(BenchBackend { delay: cfg.device_latency }),
         cfg.workers,
         policy,
-    )?;
+    )
+}
+
+/// Run one sweep point through the full coordinator and report it as a
+/// JSON object (tokens/s, device calls per token, mean fused width).
+pub fn run_sweep(cfg: &SweepConfig) -> Result<Json> {
+    if cfg.requests == 0 || cfg.max_new == 0 {
+        bail!("sweep needs requests > 0 and max_new > 0");
+    }
+    let coord = spawn_sweep_coordinator(cfg)?;
+    // keep raw latency samples so the report carries exact interpolated
+    // quantiles, not bucket-boundary estimates (must precede any submit)
+    coord.request_latency().set_keep_samples(true);
     let reqs: Vec<Request> = (0..cfg.requests)
         .map(|i| {
             Request::new(
@@ -377,6 +388,7 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<Json> {
         SweepMode::Shared | SweepMode::Pipelined => coord.dispatch_stats().mean_width(),
         _ => report.mean_fused_batch(),
     };
+    let samples = coord.request_latency().samples();
     let agg = coord.runtime_agg();
     drop(coord); // workers + device host flush their counters on drain
     let rt = agg.snapshot();
@@ -394,7 +406,25 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<Json> {
         ("device_calls", Json::Num(rt.forwards as f64)),
         ("device_calls_per_token", Json::Num(rt.forwards as f64 / tokens as f64)),
         ("mean_fused_width", Json::Num(mean_width)),
+        ("ttft_p50_us", Json::Num(sample_quantile_us(&samples.ttft_us, 0.50))),
+        ("ttft_p95_us", Json::Num(sample_quantile_us(&samples.ttft_us, 0.95))),
+        ("ttft_p99_us", Json::Num(sample_quantile_us(&samples.ttft_us, 0.99))),
+        ("itl_p50_us", Json::Num(sample_quantile_us(&samples.itl_us, 0.50))),
+        ("itl_p95_us", Json::Num(sample_quantile_us(&samples.itl_us, 0.95))),
+        ("itl_p99_us", Json::Num(sample_quantile_us(&samples.itl_us, 0.99))),
     ]))
+}
+
+/// Exact interpolated quantile (µs) over the raw latency samples the
+/// coordinator kept; 0.0 for an empty set (e.g. a sweep whose requests
+/// finish in one step records no inter-token gaps).
+fn sample_quantile_us(us: &[u64], q: f64) -> f64 {
+    if us.is_empty() {
+        return 0.0;
+    }
+    let mut sorted: Vec<f64> = us.iter().map(|&u| u as f64).collect();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    crate::util::bench::quantile(&sorted, q)
 }
 
 /// Keys every sweep-point object must carry, with finite numeric values
@@ -411,6 +441,12 @@ pub const RUN_KEYS: &[&str] = &[
     "device_calls",
     "device_calls_per_token",
     "mean_fused_width",
+    "ttft_p50_us",
+    "ttft_p95_us",
+    "ttft_p99_us",
+    "itl_p50_us",
+    "itl_p95_us",
+    "itl_p99_us",
 ];
 
 /// Validate a full bench report (`{"bench": "sched", "schema": 1,
@@ -479,6 +515,13 @@ mod tests {
             assert_eq!(j.req("mode").unwrap().as_str().unwrap(), mode.name());
             assert_eq!(j.req("generated_tokens").unwrap().as_usize().unwrap(), 8 * 6);
             assert!(j.req("device_calls").unwrap().as_f64().unwrap() > 0.0);
+            // latency quantiles are ordered (p50 ≤ p95 ≤ p99) and the
+            // multi-step requests must have recorded inter-token gaps
+            let q = |k: &str| j.req(k).unwrap().as_f64().unwrap();
+            assert!(q("ttft_p50_us") <= q("ttft_p95_us"), "{mode:?} ttft order");
+            assert!(q("ttft_p95_us") <= q("ttft_p99_us"), "{mode:?} ttft order");
+            assert!(q("itl_p50_us") <= q("itl_p95_us"), "{mode:?} itl order");
+            assert!(q("itl_p95_us") <= q("itl_p99_us"), "{mode:?} itl order");
             runs.push(j);
         }
         let report = Json::obj(vec![

@@ -80,8 +80,9 @@ use crate::decoding::ppd::PpdEngine;
 use crate::decoding::speculative::SpeculativeEngine;
 use crate::decoding::vanilla::VanillaEngine;
 use crate::kvcache::SharedCachePool;
-use crate::metrics::{QueueStats, RuntimeAgg};
+use crate::metrics::{QueueStats, RequestLatency, RuntimeAgg};
 use crate::runtime::{Device, Runtime, RuntimeStats};
+use crate::trace::{Phase, TraceTrack, Tracer};
 use crate::tree::builder::AcceptStats;
 use crate::workload;
 
@@ -193,6 +194,12 @@ pub struct WorkerCtx {
     /// shared-runtime mode: the handle this worker submits device work
     /// through (`None` when each worker owns its own `Runtime`)
     dispatch: Option<DispatcherHandle>,
+    /// the pool's flight recorder — each worker records onto its own
+    /// "worker-N" track; whether anything lands in the rings is decided
+    /// by the tracer's sampling gate (`--trace-sample`)
+    trace: Arc<Tracer>,
+    /// per-request latency histograms (always on; atomic buckets)
+    latency: Arc<RequestLatency>,
     /// one-shot startup signal (taken on first use so a worker that
     /// panics before signaling drops its sender and fails spawn fast)
     ready: Mutex<Option<mpsc::Sender<Result<()>>>>,
@@ -318,6 +325,13 @@ pub fn serve_jobs(worker: usize, engine: &mut dyn BatchStepEngine, ctx: &WorkerC
         ),
         None => StepScheduler::new(worker, ctx.policy),
     };
+    // every scheduler reports onto its own trace track and into the one
+    // shared latency recorder; the tracer's gate keeps the span side
+    // near-free when sampling is off
+    sched.set_observer(scheduler::SchedObserver {
+        track: ctx.trace.track(&format!("worker-{worker}")),
+        latency: Arc::clone(&ctx.latency),
+    });
     if ctx.policy.pipelined && ctx.dispatcher().is_some() {
         return serve_jobs_pipelined(engine, ctx, &mut sched);
     }
@@ -499,6 +513,10 @@ pub struct Coordinator {
     queue_capacity: usize,
     n_workers: usize,
     policy: SchedPolicy,
+    tracer: Arc<Tracer>,
+    latency: Arc<RequestLatency>,
+    /// submission-side track: one Recv instant per accepted request
+    server_track: TraceTrack,
     workers: Vec<JoinHandle<()>>,
     /// the shared-runtime device-host thread (policy.shared_runtime);
     /// joined after the workers so its request senders are gone first
@@ -568,6 +586,8 @@ impl Coordinator {
         let stats = Arc::new(QueueStats::new());
         let rt_agg = Arc::new(RuntimeAgg::default());
         let dispatch_stats = Arc::new(DispatchStats::default());
+        let tracer = Tracer::wall();
+        let latency = Arc::new(RequestLatency::default());
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
 
         // shared-runtime topology: ONE device-host thread owns the
@@ -580,6 +600,7 @@ impl Coordinator {
             // stage stages round k+1 (window + collation) while the
             // device stage executes round k
             dispatcher.set_pipelined(policy.pipelined);
+            dispatcher.set_tracer(&tracer);
             let host = DeviceHost {
                 dispatcher,
                 rt_agg: Arc::clone(&rt_agg),
@@ -604,6 +625,8 @@ impl Coordinator {
                 rt_agg: Arc::clone(&rt_agg),
                 policy,
                 dispatch: dispatch_handle.clone(),
+                trace: Arc::clone(&tracer),
+                latency: Arc::clone(&latency),
                 ready: Mutex::new(Some(ready_tx.clone())),
             };
             let backend = Arc::clone(&backend);
@@ -640,6 +663,7 @@ impl Coordinator {
         }
 
         let (collector_tx, collector_rx) = mpsc::channel();
+        let server_track = tracer.track("server");
         Ok(Coordinator {
             queue,
             pool,
@@ -651,6 +675,9 @@ impl Coordinator {
             queue_capacity: workers * DEFAULT_QUEUE_PER_WORKER,
             n_workers: workers,
             policy,
+            tracer,
+            latency,
+            server_track,
             workers: handles,
             device,
         })
@@ -685,6 +712,24 @@ impl Coordinator {
         &self.dispatch_stats
     }
 
+    /// The pool's flight recorder: flip its sampling gate
+    /// (`--trace-sample`), inspect its rings, or snapshot it.
+    pub fn tracer(&self) -> &Arc<Tracer> {
+        &self.tracer
+    }
+
+    /// Per-request latency recorder (always-on histograms; optional
+    /// raw-sample retention for benches and tests).
+    pub fn request_latency(&self) -> &Arc<RequestLatency> {
+        &self.latency
+    }
+
+    /// Chrome trace-event snapshot of the flight recorder — the payload
+    /// of the TCP protocol's `trace` request, loadable in Perfetto.
+    pub fn trace_json(&self) -> crate::util::json::Json {
+        self.tracer.chrome_trace_json()
+    }
+
     /// Live serving metrics as one Prometheus-exposition text block —
     /// the payload of the TCP protocol's `metrics` request.
     pub fn metrics_text(&self) -> String {
@@ -717,6 +762,11 @@ impl Coordinator {
         text.push_str(&format!("ppd_caches_created {}\n", self.pool.created()));
         text.push_str(&format!("ppd_caches_outstanding {}\n", self.pool.outstanding()));
         text.push_str(&format!("ppd_queue_capacity {}\n", self.queue_capacity));
+        text.push_str(&self.latency.to_prometheus());
+        text.push_str(&format!(
+            "ppd_trace_ring_dropped_total {}\n",
+            self.tracer.dropped_total()
+        ));
         text
     }
 
@@ -762,7 +812,12 @@ impl Coordinator {
         reply: mpsc::Sender<Response>,
         cancel: CancelFlag,
     ) -> Result<()> {
-        let job = Job { req, enqueued: Instant::now(), cancel, reply };
+        // one clock read stamps both the Recv instant and the job's
+        // enqueue origin, so queue-wait/TTFT/e2e samples and the trace
+        // chain share a timeline exactly
+        let now_us = self.tracer.now_us();
+        self.server_track.instant(Phase::Recv, req.id, 0, 0, now_us);
+        let job = Job { req, enqueued: Instant::now(), enqueue_us: now_us, cancel, reply };
         match self.queue.push(job) {
             Ok(depth) => {
                 self.stats.on_enqueue(depth);

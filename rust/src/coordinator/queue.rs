@@ -42,13 +42,17 @@ impl CancelFlag {
 pub struct Job {
     pub req: Request,
     pub enqueued: Instant,
+    /// Enqueue timestamp on the coordinator's trace clock (µs) —
+    /// the origin of the request's queue-wait/TTFT/e2e latency samples
+    /// and its trace-span chain.  0 when the submitter records no trace.
+    pub enqueue_us: u64,
     pub cancel: CancelFlag,
     pub reply: mpsc::Sender<Response>,
 }
 
 impl Job {
     pub fn new(req: Request, reply: mpsc::Sender<Response>) -> Self {
-        Job { req, enqueued: Instant::now(), cancel: CancelFlag::new(), reply }
+        Job { req, enqueued: Instant::now(), enqueue_us: 0, cancel: CancelFlag::new(), reply }
     }
 }
 

@@ -41,7 +41,8 @@ use crate::batch::dispatch::{DispatcherHandle, TickReply, TickRow};
 use crate::batch::{BatchItem, BatchStepEngine, PlanInputs, StepPlan, StepResult};
 use crate::decoding::{SeqState, StepOutcome};
 use crate::kvcache::{HostKvCache, SharedCachePool};
-use crate::metrics::QueueStats;
+use crate::metrics::{QueueStats, RequestLatency};
+use crate::trace::{Phase, TraceTrack, NO_REQ};
 use crate::util::panic_message;
 use crate::workload;
 
@@ -139,6 +140,29 @@ impl Default for SchedPolicy {
     }
 }
 
+/// Observability attachment for one scheduler: the worker's trace
+/// track plus the coordinator-wide latency histograms.  Timestamps come
+/// off the track's injected clock, so the trace-event stream and the
+/// histograms describe the same timeline (and the scripted-clock
+/// harness controls both).
+pub struct SchedObserver {
+    pub track: TraceTrack,
+    pub latency: Arc<RequestLatency>,
+}
+
+/// Per-request trace/latency bookkeeping, all in µs on the tracer
+/// clock.  `mark_us` is the gapless-chain cursor: every span a request
+/// records starts where its previous one ended.
+#[derive(Debug, Clone, Copy, Default)]
+struct ReqTiming {
+    enqueue_us: u64,
+    mark_us: u64,
+    /// clock at the last token emission (TTFT vs ITL accounting)
+    last_emit_us: Option<u64>,
+    /// generated-token count at the last emission check
+    tokens_seen: usize,
+}
+
 /// One admitted sequence: its job (id, reply channel, cancel flag), its
 /// resumable decode state, and the KV cache checked out for its
 /// lifetime.
@@ -147,6 +171,7 @@ struct Inflight {
     queue_s: f64,
     seq: SeqState,
     cache: HostKvCache,
+    t: ReqTiming,
 }
 
 /// One sequence whose tick is in flight at the device dispatcher: its
@@ -156,6 +181,7 @@ struct PendingRow {
     job: Job,
     queue_s: f64,
     seq: SeqState,
+    t: ReqTiming,
 }
 
 /// A submitted-but-not-yet-applied shared tick.
@@ -183,6 +209,11 @@ pub struct StepScheduler {
     /// to reconcile a still-pending tick's caches with the pool and
     /// count its error replies, without the worker loop's borrows
     teardown: Option<(Arc<SharedCachePool>, Arc<QueueStats>)>,
+    /// trace track + latency histograms ([`StepScheduler::set_observer`])
+    observer: Option<SchedObserver>,
+    /// monotonically increasing tick number — the `round` key on this
+    /// worker's trace events
+    tick_seq: u64,
 }
 
 impl StepScheduler {
@@ -195,6 +226,8 @@ impl StepScheduler {
             registered: false,
             pending: None,
             teardown: None,
+            observer: None,
+            tick_seq: 0,
         }
     }
 
@@ -218,7 +251,72 @@ impl StepScheduler {
             registered: false,
             pending: None,
             teardown: Some((pool, stats)),
+            observer: None,
+            tick_seq: 0,
         }
+    }
+
+    /// Attach the worker's trace track and the coordinator-wide latency
+    /// histograms.  Latency recording is always on once attached; span
+    /// recording additionally obeys the tracer's sampling gate.
+    pub fn set_observer(&mut self, observer: SchedObserver) {
+        self.observer = Some(observer);
+    }
+
+    /// Clock read on the observer's timeline (`None` when detached).
+    fn obs_now(&self) -> Option<u64> {
+        self.observer.as_ref().map(|o| o.track.now_us())
+    }
+
+    /// Record `phase` as the next link of a request's gapless span
+    /// chain: the span covers `[mark, now]` and the mark advances.
+    fn note_span(&self, t: &mut ReqTiming, phase: Phase, req: u64) {
+        if let Some(o) = &self.observer {
+            let now = o.track.now_us();
+            o.track.span(phase, req, self.tick_seq, 0, t.mark_us, now);
+            t.mark_us = now;
+        }
+    }
+
+    /// TTFT/ITL accounting + `emit` instant after a step that may have
+    /// produced tokens.  One clock read serves both the histogram
+    /// sample and the trace timestamp, so quantiles recomputed from the
+    /// trace match the exported histograms exactly.
+    fn note_emit(&self, fl: &mut Inflight) {
+        let Some(o) = &self.observer else { return };
+        let n = fl.seq.res.tokens.len();
+        if n <= fl.t.tokens_seen {
+            return;
+        }
+        let now = o.track.now_us();
+        match fl.t.last_emit_us {
+            None => o.latency.record_ttft(now.saturating_sub(fl.t.enqueue_us)),
+            Some(prev) => o.latency.record_itl(now.saturating_sub(prev)),
+        }
+        o.track.instant(
+            Phase::Emit,
+            fl.job.req.id,
+            self.tick_seq,
+            (n - fl.t.tokens_seen) as u32,
+            now,
+        );
+        fl.t.last_emit_us = Some(now);
+        fl.t.tokens_seen = n;
+    }
+
+    /// Close out one scheduler tick's attribution span on the worker
+    /// track (`round` = tick number, `n` = rows the tick touched).
+    fn note_tick(&self, start: Option<u64>, rows: u32) {
+        if let (Some(o), Some(start)) = (&self.observer, start) {
+            o.track.span(Phase::Tick, NO_REQ, self.tick_seq, rows, start, o.track.now_us());
+        }
+    }
+
+    /// Structured stderr record for a caught worker panic: the client
+    /// gets the error response, this line is the server-side
+    /// post-mortem breadcrumb.
+    fn log_panic(&self, phase: &str, req: u64, msg: &str) {
+        eprintln!("ppd-panic worker={} phase={phase} request={req} msg={msg:?}", self.worker);
     }
 
     /// Whether a submitted shared tick is awaiting its reply/apply
@@ -264,6 +362,7 @@ impl StepScheduler {
         job: Job,
     ) -> bool {
         stats.on_dequeue();
+        let t_dequeue = self.obs_now();
         // one clock reading: the reported `queue_s` and the age-check
         // decision must agree (two `elapsed()` calls can straddle the
         // threshold and refuse a job while quoting a compliant age)
@@ -300,7 +399,22 @@ impl StepScheduler {
         match begun {
             Ok(Ok(seq)) => {
                 stats.on_admit(self.len() + 1);
-                self.running.push_back(Inflight { job, queue_s, seq, cache });
+                let mut t = ReqTiming {
+                    enqueue_us: job.enqueue_us,
+                    tokens_seen: seq.res.tokens.len(),
+                    ..Default::default()
+                };
+                if let (Some(o), Some(start)) = (&self.observer, t_dequeue) {
+                    // queue wait ends where admission begins; admission
+                    // (cache checkout + prefill) ends at `now`
+                    o.latency.record_queue_wait(start.saturating_sub(job.enqueue_us));
+                    let (id, tick) = (job.req.id, self.tick_seq);
+                    o.track.span(Phase::Enqueue, id, tick, 0, job.enqueue_us, start);
+                    let now = o.track.now_us();
+                    o.track.span(Phase::Admit, job.req.id, self.tick_seq, 0, start, now);
+                    t.mark_us = now;
+                }
+                self.running.push_back(Inflight { job, queue_s, seq, cache, t });
                 true
             }
             Ok(Err(e)) => {
@@ -310,7 +424,9 @@ impl StepScheduler {
             }
             Err(panic) => {
                 pool.checkin(cache);
-                self.refuse(stats, job, queue_s, format!("worker panicked: {}", panic_message(panic)));
+                let msg = panic_message(panic);
+                self.log_panic("admit", job.req.id, &msg);
+                self.refuse(stats, job, queue_s, format!("worker panicked: {msg}"));
                 false
             }
         }
@@ -359,7 +475,9 @@ impl StepScheduler {
             Ok(Ok(StepOutcome::Finished(_))) => self.retire_ok(fl, pool, stats),
             Ok(Err(e)) => self.retire_err(fl, pool, stats, format!("{e:#}")),
             Err(panic) => {
-                self.retire_err(fl, pool, stats, format!("worker panicked: {}", panic_message(panic)))
+                let msg = panic_message(panic);
+                self.log_panic("step", fl.job.req.id, &msg);
+                self.retire_err(fl, pool, stats, format!("worker panicked: {msg}"))
             }
         }
     }
@@ -371,6 +489,9 @@ impl StepScheduler {
         pool: &SharedCachePool,
         stats: &QueueStats,
     ) -> usize {
+        self.tick_seq += 1;
+        let tick_start = self.obs_now();
+        let rows = self.running.len() as u32;
         for _ in 0..self.running.len() {
             let mut fl = self.running.pop_front().expect("non-empty running set");
             if fl.job.cancel.is_cancelled() {
@@ -383,8 +504,12 @@ impl StepScheduler {
             stats.on_step();
             let stepped =
                 catch_unwind(AssertUnwindSafe(|| engine.step(&mut fl.seq, &mut fl.cache)));
+            // the monolithic step is device work from the request's view
+            self.note_span(&mut fl.t, Phase::Device, fl.job.req.id);
+            self.note_emit(&mut fl);
             self.settle(fl, stepped, pool, stats);
         }
+        self.note_tick(tick_start, rows);
         self.running.len()
     }
 
@@ -409,6 +534,8 @@ impl StepScheduler {
             stats.on_step();
             let planned =
                 catch_unwind(AssertUnwindSafe(|| engine.plan_step(&mut fl.seq, &fl.cache)));
+            // every outcome ends the plan phase for this request
+            self.note_span(&mut fl.t, Phase::Plan, fl.job.req.id);
             match planned {
                 Ok(Ok(StepPlan::Forward(plan))) => fused.push((fl, plan)),
                 Ok(Ok(StepPlan::Finished(_))) => self.retire_ok(fl, pool, stats),
@@ -417,15 +544,16 @@ impl StepScheduler {
                     let stepped = catch_unwind(AssertUnwindSafe(|| {
                         engine.step(&mut fl.seq, &mut fl.cache)
                     }));
+                    self.note_span(&mut fl.t, Phase::Device, fl.job.req.id);
+                    self.note_emit(&mut fl);
                     self.settle(fl, stepped, pool, stats);
                 }
                 Ok(Err(e)) => self.retire_err(fl, pool, stats, format!("{e:#}")),
-                Err(panic) => self.retire_err(
-                    fl,
-                    pool,
-                    stats,
-                    format!("worker panicked: {}", panic_message(panic)),
-                ),
+                Err(panic) => {
+                    let msg = panic_message(panic);
+                    self.log_panic("plan", fl.job.req.id, &msg);
+                    self.retire_err(fl, pool, stats, format!("worker panicked: {msg}"))
+                }
             }
         }
         fused
@@ -443,10 +571,13 @@ impl StepScheduler {
         pool: &SharedCachePool,
         stats: &QueueStats,
     ) -> usize {
+        self.tick_seq += 1;
+        let tick_start = self.obs_now();
         // phase 1: cancellation checks + plans (finish/fallback paths
         // resolve immediately, fused plans accumulate)
         let fused = self.plan_phase(engine, pool, stats);
         if fused.is_empty() {
+            self.note_tick(tick_start, 0);
             return self.running.len();
         }
 
@@ -464,10 +595,12 @@ impl StepScheduler {
         let share = t0.elapsed().as_secs_f64() / fused.len() as f64;
 
         // phase 3: apply each sequence's slice of the result
+        let batch = fused.len() as u32;
         match forwarded {
             Ok(Ok(outs)) if outs.len() == fused.len() => {
                 for ((mut fl, plan), out) in fused.into_iter().zip(outs) {
                     fl.seq.res.decode_s += share;
+                    self.note_span(&mut fl.t, Phase::Device, fl.job.req.id);
                     let applied = catch_unwind(AssertUnwindSafe(|| {
                         engine.apply_step(
                             &mut fl.seq,
@@ -475,6 +608,8 @@ impl StepScheduler {
                             &mut fl.cache,
                         )
                     }));
+                    self.note_span(&mut fl.t, Phase::Apply, fl.job.req.id);
+                    self.note_emit(&mut fl);
                     self.settle(fl, applied, pool, stats);
                 }
             }
@@ -495,12 +630,14 @@ impl StepScheduler {
                 }
             }
             Err(panic) => {
-                let msg = format!("worker panicked: {}", panic_message(panic));
+                let msg = panic_message(panic);
                 for (fl, _) in fused {
-                    self.retire_err(fl, pool, stats, msg.clone());
+                    self.log_panic("forward", fl.job.req.id, &msg);
+                    self.retire_err(fl, pool, stats, format!("worker panicked: {msg}"));
                 }
             }
         }
+        self.note_tick(tick_start, batch);
         self.running.len()
     }
 
@@ -532,12 +669,15 @@ impl StepScheduler {
             self.tick_fused(engine, pool, stats);
             return;
         };
+        self.tick_seq += 1;
+        let tick_start = self.obs_now();
         let fused = self.plan_phase(engine, pool, stats);
         if fused.is_empty() {
             if self.registered {
                 dispatch.deregister();
                 self.registered = false;
             }
+            self.note_tick(tick_start, 0);
             return;
         }
         if !self.registered {
@@ -550,12 +690,18 @@ impl StepScheduler {
         let mut rows = Vec::with_capacity(fused.len());
         let mut pend = Vec::with_capacity(fused.len());
         for (fl, plan) in fused {
-            let Inflight { job, queue_s, seq, cache } = fl;
+            let Inflight { job, queue_s, seq, cache, t } = fl;
             rows.push(TickRow { plan, cache });
-            pend.push(PendingRow { job, queue_s, seq });
+            pend.push(PendingRow { job, queue_s, seq, t });
         }
         match dispatch.submit_tick(self.worker, rows) {
-            Ok(rx) => self.pending = Some(PendingTick { rows: pend, rx }),
+            Ok(rx) => {
+                for p in &mut pend {
+                    self.note_span(&mut p.t, Phase::Submit, p.job.req.id);
+                }
+                self.note_tick(tick_start, pend.len() as u32);
+                self.pending = Some(PendingTick { rows: pend, rx });
+            }
             Err(rows_back) => {
                 // dead dispatcher: rows came straight back, retire all
                 let mut back = rows_back.into_iter();
@@ -567,6 +713,7 @@ impl StepScheduler {
                                 queue_s: p.queue_s,
                                 seq: p.seq,
                                 cache,
+                                t: p.t,
                             };
                             self.retire_err(
                                 fl,
@@ -620,10 +767,14 @@ impl StepScheduler {
                                         queue_s: p.queue_s,
                                         seq: p.seq,
                                         cache,
+                                        t: p.t,
                                     };
                                     // attribute the shared device call
                                     // evenly across its riders
                                     fl.seq.res.decode_s += row_share_s;
+                                    // the wait since submit was the
+                                    // dispatcher window + device round
+                                    self.note_span(&mut fl.t, Phase::Device, fl.job.req.id);
                                     let applied = catch_unwind(AssertUnwindSafe(|| {
                                         engine.apply_step(
                                             &mut fl.seq,
@@ -631,6 +782,8 @@ impl StepScheduler {
                                             &mut fl.cache,
                                         )
                                     }));
+                                    self.note_span(&mut fl.t, Phase::Apply, fl.job.req.id);
+                                    self.note_emit(&mut fl);
                                     self.settle(fl, applied, pool, stats);
                                 }
                                 None => self.retire_lost(
@@ -681,7 +834,7 @@ impl StepScheduler {
             match back.next() {
                 Some(TickRow { cache, .. }) => {
                     let fl =
-                        Inflight { job: p.job, queue_s: p.queue_s, seq: p.seq, cache };
+                        Inflight { job: p.job, queue_s: p.queue_s, seq: p.seq, cache, t: p.t };
                     self.retire_err(fl, pool, stats, msg.clone());
                 }
                 None => self.retire_lost(p, pool, stats, msg.clone()),
@@ -700,6 +853,10 @@ impl StepScheduler {
         msg: String,
     ) {
         pool.forget();
+        if let Some(o) = &self.observer {
+            let now = o.track.now_us();
+            o.track.span(Phase::Retire, p.job.req.id, self.tick_seq, 0, p.t.mark_us, now);
+        }
         let mut resp = Response::error(p.job.req.id, msg);
         resp.queue_s = p.queue_s;
         resp.worker = self.worker;
@@ -718,8 +875,13 @@ impl StepScheduler {
     }
 
     fn retire_ok(&self, fl: Inflight, pool: &SharedCachePool, stats: &QueueStats) {
-        let Inflight { job, queue_s, seq, cache } = fl;
+        let Inflight { job, queue_s, seq, cache, t } = fl;
         pool.checkin(cache);
+        if let Some(o) = &self.observer {
+            let now = o.track.now_us();
+            o.latency.record_e2e(now.saturating_sub(t.enqueue_us));
+            o.track.span(Phase::Retire, job.req.id, self.tick_seq, 0, t.mark_us, now);
+        }
         let r = seq.into_result();
         let resp = Response {
             id: job.req.id,
@@ -738,8 +900,14 @@ impl StepScheduler {
     }
 
     fn retire_err(&self, fl: Inflight, pool: &SharedCachePool, stats: &QueueStats, msg: String) {
-        let Inflight { job, queue_s, cache, .. } = fl;
+        let Inflight { job, queue_s, cache, t, .. } = fl;
         pool.checkin(cache);
+        if let Some(o) = &self.observer {
+            // no e2e sample — the histograms describe served requests —
+            // but the chain still closes with a retire span
+            let now = o.track.now_us();
+            o.track.span(Phase::Retire, job.req.id, self.tick_seq, 0, t.mark_us, now);
+        }
         let mut resp = Response::error(job.req.id, msg);
         resp.queue_s = queue_s;
         resp.worker = self.worker;

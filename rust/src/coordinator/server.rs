@@ -101,6 +101,8 @@ fn handle_conn(
                         // touching the queue; they still count toward
                         // `max_requests` (every response line does)
                         writeln!(out, "{}", metrics_response(coord))?;
+                    } else if is_trace_request(trimmed) {
+                        writeln!(out, "{}", trace_response(coord))?;
                     } else {
                         let resp = serve_line(coord, trimmed, &out);
                         writeln!(out, "{}", resp.to_json())?;
@@ -153,6 +155,24 @@ fn metrics_response(coord: &Coordinator) -> crate::util::json::Json {
         "metrics",
         crate::util::json::Json::str(&coord.metrics_text()),
     )])
+}
+
+/// Is this line a flight-recorder snapshot request?  Same strict shape
+/// as metrics scrapes: the bare word `trace` or `"trace": true` — any
+/// other `trace` value belongs to a generation request.
+fn is_trace_request(trimmed: &str) -> bool {
+    trimmed == "trace"
+        || crate::util::json::Json::parse(trimmed)
+            .ok()
+            .and_then(|j| j.get("trace").and_then(|v| v.as_bool().ok()))
+            == Some(true)
+}
+
+/// Trace export: the Chrome trace-event snapshot rides in one JSON line
+/// (`{"trace": {"traceEvents": [...]}}`).  Save the inner object to a
+/// file and open it in Perfetto / `chrome://tracing`.
+fn trace_response(coord: &Coordinator) -> crate::util::json::Json {
+    crate::util::json::Json::obj(vec![("trace", coord.trace_json())])
 }
 
 fn serve_line(coord: &Coordinator, trimmed: &str, stream: &TcpStream) -> Response {
@@ -244,4 +264,17 @@ pub fn client_metrics(addr: &str) -> Result<String> {
     reader.read_line(&mut line)?;
     let j = crate::util::json::Json::parse(line.trim())?;
     Ok(j.req("metrics")?.as_str()?.to_string())
+}
+
+/// Fetch the server's flight-recorder snapshot and return the Chrome
+/// trace-event object (the value under `"trace"`), ready to write to a
+/// `.json` file for Perfetto.
+pub fn client_trace(addr: &str) -> Result<crate::util::json::Json> {
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    writeln!(stream, "{}", r#"{"trace": true}"#)?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let j = crate::util::json::Json::parse(line.trim())?;
+    Ok(j.req("trace")?.clone())
 }

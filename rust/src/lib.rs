@@ -24,6 +24,9 @@
 //! * [`workload`] — trace loading + synthetic workload generation
 //! * [`bench`]    — deterministic mock-backend scheduler sweep (the CI
 //!                  `BENCH_sched.json` throughput trajectory)
+//! * [`trace`]    — request-lifecycle flight recorder: bounded per-track
+//!                  event rings, scripted-clock injection, Chrome
+//!                  trace-event export (TCP `trace` request / Perfetto)
 pub mod baselines;
 pub mod batch;
 pub mod bench;
@@ -33,6 +36,7 @@ pub mod decoding;
 pub mod kvcache;
 pub mod metrics;
 pub mod runtime;
+pub mod trace;
 pub mod tree;
 pub mod util;
 pub mod workload;

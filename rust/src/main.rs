@@ -50,7 +50,10 @@ impl Args {
             };
             if let Some((k, v)) = name.split_once('=') {
                 flags.insert(k.to_string(), v.to_string());
-            } else if matches!(name, "force" | "greedy" | "fuse-steps" | "shared-runtime" | "pipelined") {
+            } else if matches!(
+                name,
+                "force" | "greedy" | "fuse-steps" | "shared-runtime" | "pipelined" | "trace-sample"
+            ) {
                 flags.insert(name.to_string(), "true".to_string());
             } else {
                 let v = it.next().ok_or_else(|| anyhow!("--{name} needs a value"))?;
@@ -119,7 +122,7 @@ fn print_help() {
            generate    --model M --engine {{{}}} --prompt TEXT [--max-new N] [--temp T]\n\
            serve       --model M [--port 7878] [--engine ppd] [--workers N]\n\
                        [--max-inflight 4] [--max-queue-age-ms MS] [--fuse-steps]\n\
-                       [--shared-runtime] [--pipelined]\n\
+                       [--shared-runtime] [--pipelined] [--trace-sample]\n\
                        continuous batching: each worker interleaves up to\n\
                        --max-inflight sequences one decode step at a time;\n\
                        --fuse-steps batches every in-flight tree step into\n\
@@ -127,7 +130,10 @@ fn print_help() {
                        --shared-runtime routes ALL workers' ticks through\n\
                        one device dispatcher: 1 device call per wall tick;\n\
                        --pipelined overlaps host planning/admission with\n\
-                       device execution (double-buffered dispatcher)\n\
+                       device execution (double-buffered dispatcher);\n\
+                       --trace-sample records request-lifecycle spans into\n\
+                       the bounded flight recorder (snapshot via the TCP\n\
+                       `trace` request; load the JSON in Perfetto)\n\
            calibrate   --model M [--force]  measure per-bucket forward latency\n\
            sweep       --model M            theoretical-speedup curve vs tree size\n\
            trees       --model M            print the dynamic sparse tree set\n\n\
@@ -229,6 +235,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         workers,
         policy,
     )?;
+    if args.get("trace-sample").is_some() {
+        // flip the flight recorder's sampling gate: lifecycle spans land
+        // in the bounded per-track rings and the TCP `trace` request
+        // returns a Chrome trace snapshot.  Off (the default) the
+        // instrumentation costs one relaxed atomic load per site.
+        coord.tracer().set_enabled(true);
+    }
     let max = args.get("max-requests").map(|m| m.parse()).transpose()?;
     ppd::coordinator::server::serve(coord, &format!("127.0.0.1:{port}"), max)
 }

@@ -366,6 +366,206 @@ impl RuntimeAgg {
     }
 }
 
+/// Fixed µs bucket upper bounds shared by all `ppd_request_*_us`
+/// histograms: a ×2 ladder from 100µs to ~13s.  Fixed (not adaptive)
+/// so scrapes from different workers/runs are always mergeable and the
+/// deterministic harness can recompute the exact bucket counts.
+pub const REQUEST_US_BOUNDS: &[u64] = &[
+    100,
+    200,
+    400,
+    800,
+    1_600,
+    3_200,
+    6_400,
+    12_800,
+    25_600,
+    51_200,
+    102_400,
+    204_800,
+    409_600,
+    819_200,
+    1_638_400,
+    3_276_800,
+    6_553_600,
+    13_107_200,
+];
+
+/// Bucket-boundary quantile estimate over non-cumulative per-bucket
+/// counts laid out as [`REQUEST_US_BOUNDS`] plus one overflow slot.
+/// Shared (pub) so tests can recompute quantiles from scraped bucket
+/// lines and compare them against the live histogram exactly.
+pub fn us_bucket_quantile(counts: &[u64], q: f64) -> f64 {
+    let n: u64 = counts.iter().sum();
+    if n == 0 {
+        return 0.0;
+    }
+    let target = (q * n as f64).ceil().max(1.0) as u64;
+    let mut acc = 0u64;
+    for (i, &c) in counts.iter().enumerate() {
+        acc += c;
+        if acc >= target {
+            return REQUEST_US_BOUNDS.get(i).map_or(f64::INFINITY, |&b| b as f64);
+        }
+    }
+    f64::INFINITY
+}
+
+/// Atomic fixed-bucket histogram over microsecond samples — the
+/// always-on backing store for the per-request latency metrics.
+/// Recording is two relaxed atomic adds; no locks, no allocation.
+#[derive(Debug)]
+pub struct UsHistogram {
+    /// one slot per bound plus the overflow (+Inf) slot
+    counts: Vec<AtomicU64>,
+}
+
+impl Default for UsHistogram {
+    fn default() -> Self {
+        UsHistogram {
+            counts: (0..=REQUEST_US_BOUNDS.len()).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+}
+
+impl UsHistogram {
+    pub fn record(&self, us: u64) {
+        let idx = REQUEST_US_BOUNDS.partition_point(|&b| b < us);
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total samples recorded.
+    pub fn count(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Non-cumulative per-bucket counts ([`REQUEST_US_BOUNDS`] order,
+    /// overflow slot last).
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Bucket-boundary quantile estimate (upper bound of the target
+    /// bucket; `+Inf` when the sample landed in the overflow slot).
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        us_bucket_quantile(&self.bucket_counts(), q)
+    }
+}
+
+/// Snapshot of the raw latency samples (µs) kept when
+/// [`RequestLatency::set_keep_samples`] is on — the bench sweep uses
+/// these to compute exact interpolated quantiles rather than
+/// bucket-boundary estimates.
+#[derive(Debug, Clone, Default)]
+pub struct LatencySamples {
+    pub ttft_us: Vec<u64>,
+    pub itl_us: Vec<u64>,
+    pub e2e_us: Vec<u64>,
+    pub queue_wait_us: Vec<u64>,
+}
+
+/// The four per-request latency histograms the coordinator exports:
+///
+/// * **queue_wait** — enqueue → admission into a step scheduler
+/// * **ttft** — enqueue → first emitted token (time-to-first-token)
+/// * **itl** — gap between consecutive token-emitting steps
+///   (inter-token latency; one sample per emitting step after the first)
+/// * **e2e** — enqueue → response sent
+///
+/// All timestamps come from the coordinator's trace clock, so the trace
+/// event stream and these histograms describe the same timeline — a
+/// property the deterministic harness asserts.  Always on (unlike the
+/// trace rings): recording is a handful of relaxed atomics per step.
+#[derive(Debug, Default)]
+pub struct RequestLatency {
+    ttft: UsHistogram,
+    itl: UsHistogram,
+    e2e: UsHistogram,
+    queue_wait: UsHistogram,
+    keep: std::sync::atomic::AtomicBool,
+    samples: Mutex<LatencySamples>,
+}
+
+impl RequestLatency {
+    pub fn record_queue_wait(&self, us: u64) {
+        self.queue_wait.record(us);
+        if self.keep.load(Ordering::Relaxed) {
+            self.samples.lock().unwrap().queue_wait_us.push(us);
+        }
+    }
+
+    pub fn record_ttft(&self, us: u64) {
+        self.ttft.record(us);
+        if self.keep.load(Ordering::Relaxed) {
+            self.samples.lock().unwrap().ttft_us.push(us);
+        }
+    }
+
+    pub fn record_itl(&self, us: u64) {
+        self.itl.record(us);
+        if self.keep.load(Ordering::Relaxed) {
+            self.samples.lock().unwrap().itl_us.push(us);
+        }
+    }
+
+    pub fn record_e2e(&self, us: u64) {
+        self.e2e.record(us);
+        if self.keep.load(Ordering::Relaxed) {
+            self.samples.lock().unwrap().e2e_us.push(us);
+        }
+    }
+
+    /// Also retain raw samples (off by default; the bench sweep turns it
+    /// on to compute exact interpolated p50/p95/p99).
+    pub fn set_keep_samples(&self, on: bool) {
+        self.keep.store(on, Ordering::Relaxed);
+    }
+
+    pub fn samples(&self) -> LatencySamples {
+        self.samples.lock().unwrap().clone()
+    }
+
+    pub fn ttft(&self) -> &UsHistogram {
+        &self.ttft
+    }
+
+    pub fn itl(&self) -> &UsHistogram {
+        &self.itl
+    }
+
+    pub fn e2e(&self) -> &UsHistogram {
+        &self.e2e
+    }
+
+    pub fn queue_wait(&self) -> &UsHistogram {
+        &self.queue_wait
+    }
+
+    /// Prometheus text: cumulative `{le="..."}` bucket lines (all
+    /// buckets, `+Inf` last) for each of the four histograms — the block
+    /// `Coordinator::metrics_text` appends to the queue/dispatch text.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        let hists: [(&str, &UsHistogram); 4] = [
+            ("ppd_request_queue_wait_us", &self.queue_wait),
+            ("ppd_request_ttft_us", &self.ttft),
+            ("ppd_request_itl_us", &self.itl),
+            ("ppd_request_e2e_us", &self.e2e),
+        ];
+        for (name, h) in hists {
+            let mut acc = 0u64;
+            for (i, c) in h.bucket_counts().into_iter().enumerate() {
+                acc += c;
+                let le = REQUEST_US_BOUNDS
+                    .get(i)
+                    .map_or_else(|| "+Inf".to_string(), |b| b.to_string());
+                out.push_str(&format!("{name}{{le=\"{le}\"}} {acc}\n"));
+            }
+        }
+        out
+    }
+}
+
 /// Aggregated serving report.
 #[derive(Debug, Clone, Default)]
 pub struct ServeReport {
@@ -686,6 +886,69 @@ mod tests {
         assert_eq!(r.expired, 1);
         let j = r.to_json();
         assert_eq!(j.req("peak_inflight").unwrap().as_usize().unwrap(), 3);
+    }
+
+    #[test]
+    fn us_histogram_buckets_and_quantiles() {
+        let h = UsHistogram::default();
+        // 100 lands in the first bucket (le="100"), 101 in the second.
+        h.record(100);
+        h.record(101);
+        h.record(5_000);
+        h.record(1_000_000_000); // overflow slot
+        assert_eq!(h.count(), 4);
+        let counts = h.bucket_counts();
+        assert_eq!(counts.len(), REQUEST_US_BOUNDS.len() + 1);
+        assert_eq!(counts[0], 1);
+        assert_eq!(counts[1], 1);
+        assert_eq!(*counts.last().unwrap(), 1);
+        assert_eq!(h.quantile_us(0.25), 100.0);
+        assert_eq!(h.quantile_us(0.75), 6_400.0);
+        assert!(h.quantile_us(1.0).is_infinite());
+        // the shared recompute helper agrees with the live histogram
+        for q in [0.25, 0.5, 0.75, 0.99] {
+            assert_eq!(h.quantile_us(q), us_bucket_quantile(&counts, q));
+        }
+        assert_eq!(us_bucket_quantile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn request_latency_prometheus_is_cumulative_with_inf() {
+        let lat = RequestLatency::default();
+        lat.record_ttft(150);
+        lat.record_ttft(150);
+        lat.record_ttft(300);
+        let text = lat.to_prometheus();
+        assert!(text.contains("ppd_request_ttft_us{le=\"200\"} 2\n"), "{text}");
+        assert!(text.contains("ppd_request_ttft_us{le=\"400\"} 3\n"), "{text}");
+        assert!(text.contains("ppd_request_ttft_us{le=\"+Inf\"} 3\n"), "{text}");
+        // empty histograms still emit their full bucket ladder
+        assert!(text.contains("ppd_request_itl_us{le=\"+Inf\"} 0\n"), "{text}");
+        assert!(text.contains("ppd_request_e2e_us{le=\"+Inf\"} 0\n"), "{text}");
+        assert!(text.contains("ppd_request_queue_wait_us{le=\"100\"} 0\n"), "{text}");
+        // every line is `name{le="..."} value` — two space-split tokens
+        for line in text.lines() {
+            assert_eq!(line.split(' ').count(), 2, "bad line {line}");
+        }
+        let lines = text.lines().count();
+        assert_eq!(lines, 4 * (REQUEST_US_BOUNDS.len() + 1));
+    }
+
+    #[test]
+    fn request_latency_keeps_samples_only_when_asked() {
+        let lat = RequestLatency::default();
+        lat.record_e2e(500);
+        assert!(lat.samples().e2e_us.is_empty());
+        lat.set_keep_samples(true);
+        lat.record_e2e(700);
+        lat.record_itl(10);
+        lat.record_queue_wait(3);
+        let s = lat.samples();
+        assert_eq!(s.e2e_us, vec![700]);
+        assert_eq!(s.itl_us, vec![10]);
+        assert_eq!(s.queue_wait_us, vec![3]);
+        // the histogram saw both samples regardless of the gate
+        assert_eq!(lat.e2e().count(), 2);
     }
 
     #[test]

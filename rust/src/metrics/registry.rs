@@ -63,6 +63,13 @@ pub const METRICS: &[MetricDecl] = &[
     ("ppd_shared_runtime", &[], "1 when the shared-runtime dispatcher topology is active"),
     ("ppd_caches_created", &[], "KV caches ever built by the capped pool"),
     ("ppd_caches_outstanding", &[], "KV caches currently checked out"),
+    // -- per-request latency histograms (RequestLatency::to_prometheus)
+    ("ppd_request_queue_wait_us", &["le"], "enqueue-to-admission wait, cumulative us buckets"),
+    ("ppd_request_ttft_us", &["le"], "enqueue-to-first-token latency, cumulative us buckets"),
+    ("ppd_request_itl_us", &["le"], "gap between token-emitting steps, cumulative us buckets"),
+    ("ppd_request_e2e_us", &["le"], "enqueue-to-response latency, cumulative us buckets"),
+    // -- trace flight recorder (Coordinator::metrics_text) ------------
+    ("ppd_trace_ring_dropped_total", &[], "trace events overwritten in the bounded rings"),
 ];
 
 /// Name prefixes the emission code concatenates suffixes onto (the
@@ -107,7 +114,8 @@ mod tests {
     fn exporter_output_matches_registry() {
         let queue = crate::metrics::QueueStats::new();
         let dispatch = crate::batch::dispatch::DispatchStats::default();
-        for text in [queue.to_prometheus(), dispatch.to_prometheus()] {
+        let latency = crate::metrics::RequestLatency::default();
+        for text in [queue.to_prometheus(), dispatch.to_prometheus(), latency.to_prometheus()] {
             for line in text.lines() {
                 let name_part = line.split(' ').next().expect("metric line");
                 let (name, labels) = match name_part.split_once('{') {

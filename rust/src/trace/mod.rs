@@ -1,0 +1,549 @@
+//! Request-lifecycle tracing: a bounded, low-overhead flight recorder.
+//!
+//! Every stage a request passes through — recv → enqueue → admit → plan →
+//! submit → window-wait → collate → device → apply → emit → retire — is
+//! recorded as a span into a fixed-capacity [`TraceRing`], one ring per
+//! track ("worker-N" for each scheduler thread, "dispatcher" for the shared
+//! device loop, "server" for the submission side).  Rings never grow: when
+//! full, the oldest event is overwritten and a drop counter ticks, so the
+//! recorder is safe to leave attached to a long-running server and always
+//! holds the most recent window of activity.
+//!
+//! Design points:
+//!
+//! - **Clock injection.**  All timestamps come from a [`TraceClock`];
+//!   production uses [`WallClock`] (µs since tracer creation) while the
+//!   deterministic test harness uses [`ScriptedClock`] to script time and
+//!   pin exact span layouts.
+//! - **Sampling gate.**  The whole recorder sits behind one relaxed
+//!   [`AtomicBool`]; when disabled (the default — enable with
+//!   `--trace-sample`), instrumentation sites cost a single atomic load and
+//!   no ring is touched.  Latency *histograms* are recorded regardless —
+//!   they are cheap fixed-size atomics and always exported.
+//! - **Gapless chains.**  Instrumentation passes a per-request `mark`
+//!   cursor forward: every span starts where the previous one ended, so a
+//!   retired request tiles `[enqueue, retire]` with no gaps — a property
+//!   the harness asserts.
+//! - **Chrome trace export.**  [`Tracer::chrome_trace_json`] merges the
+//!   rings into Chrome trace-event JSON (`"X"` complete events on one
+//!   named track per ring) loadable in Perfetto / `chrome://tracing`; the
+//!   TCP `trace` request serves the same snapshot remotely.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Default per-track ring capacity (events).  At ~40 bytes per event a
+/// full ring is ~320 KiB per track — a few MiB for a large worker pool.
+pub const DEFAULT_RING_CAP: usize = 8192;
+
+/// Sentinel request id for events that are batch- or tick-scoped rather
+/// than tied to a single request (dispatcher rounds, scheduler ticks).
+pub const NO_REQ: u64 = u64::MAX;
+
+/// Lifecycle phase of a span.  Ordering here mirrors the order phases
+/// occur in within one request's life.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Phase {
+    /// Request arrived at the coordinator (instant, server track).
+    Recv,
+    /// Waiting in the work queue (enqueue → admit).
+    Enqueue,
+    /// Admission: cache checkout + prefill (`begin_seq`).
+    Admit,
+    /// Decode-plan construction for one step.
+    Plan,
+    /// Handing planned rows to the shared dispatcher.
+    Submit,
+    /// Dispatcher batching window (dispatcher track).
+    WindowWait,
+    /// Cross-worker collation of a round (dispatcher track).
+    Collate,
+    /// Device execution (worker-side wait, or dispatcher-side busy span).
+    Device,
+    /// Applying device outputs back onto the sequence.
+    Apply,
+    /// New tokens became visible (instant; `n` = tokens emitted).
+    Emit,
+    /// Request left the scheduler (response sent).
+    Retire,
+    /// One whole scheduler tick (worker track; `n` = rows touched).
+    Tick,
+    /// A solo (unbatched) forward served inline by the dispatcher.
+    Solo,
+}
+
+impl Phase {
+    /// Stable lower-case name used in the Chrome trace export.
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Recv => "recv",
+            Phase::Enqueue => "enqueue",
+            Phase::Admit => "admit",
+            Phase::Plan => "plan",
+            Phase::Submit => "submit",
+            Phase::WindowWait => "window_wait",
+            Phase::Collate => "collate",
+            Phase::Device => "device",
+            Phase::Apply => "apply",
+            Phase::Emit => "emit",
+            Phase::Retire => "retire",
+            Phase::Tick => "tick",
+            Phase::Solo => "solo",
+        }
+    }
+}
+
+/// One recorded span (or instant, when `start_us == end_us`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub phase: Phase,
+    /// Request id, or [`NO_REQ`] for batch/tick-scoped events.
+    pub req: u64,
+    /// Dispatch round (dispatcher track) or scheduler tick sequence
+    /// (worker tracks); 0 when not applicable.
+    pub round: u64,
+    /// Payload count: rows in a batch, tokens emitted; 0 when unused.
+    pub n: u32,
+    pub start_us: u64,
+    pub end_us: u64,
+}
+
+/// Injectable monotonic clock; all trace timestamps and latency samples
+/// come from one of these so scripted tests control time exactly.
+pub trait TraceClock: Send + Sync {
+    /// Microseconds since an arbitrary (per-clock) origin.
+    fn now_us(&self) -> u64;
+}
+
+/// Production clock: µs elapsed since construction.
+pub struct WallClock(Instant);
+
+impl WallClock {
+    pub fn new() -> Self {
+        WallClock(Instant::now())
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TraceClock for WallClock {
+    fn now_us(&self) -> u64 {
+        self.0.elapsed().as_micros() as u64
+    }
+}
+
+/// Deterministic clock for the test harness: time only moves when the
+/// script says so.
+#[derive(Default)]
+pub struct ScriptedClock(AtomicU64);
+
+impl ScriptedClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn advance(&self, us: u64) {
+        self.0.fetch_add(us, Ordering::SeqCst);
+    }
+
+    pub fn set(&self, us: u64) {
+        self.0.store(us, Ordering::SeqCst);
+    }
+}
+
+impl TraceClock for ScriptedClock {
+    fn now_us(&self) -> u64 {
+        self.0.load(Ordering::SeqCst)
+    }
+}
+
+/// Fixed-capacity event ring: push is O(1), the oldest event is
+/// overwritten when full and every overwrite increments a drop counter.
+/// Writers on the same ring (the dispatcher's collector and device
+/// threads share one track) serialize on a short mutex hold.
+pub struct TraceRing {
+    cap: usize,
+    events: Mutex<VecDeque<TraceEvent>>,
+    dropped: AtomicU64,
+}
+
+impl TraceRing {
+    pub fn new(cap: usize) -> Self {
+        TraceRing {
+            cap: cap.max(1),
+            events: Mutex::new(VecDeque::with_capacity(cap.max(1))),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, ev: TraceEvent) {
+        let mut g = match self.events.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        if g.len() == self.cap {
+            g.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        g.push_back(ev);
+    }
+
+    pub fn len(&self) -> usize {
+        match self.events.lock() {
+            Ok(g) => g.len(),
+            Err(p) => p.into_inner().len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events currently held, oldest first.
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        match self.events.lock() {
+            Ok(g) => g.iter().copied().collect(),
+            Err(p) => p.into_inner().iter().copied().collect(),
+        }
+    }
+
+    /// Events overwritten since creation.
+    pub fn dropped_total(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+/// The recorder: a set of named tracks plus the shared clock and the
+/// sampling gate.  Cheap to share (`Arc`); instrumentation sites hold a
+/// [`TraceTrack`] handle so the hot path never touches the track map.
+pub struct Tracer {
+    clock: Arc<dyn TraceClock>,
+    enabled: AtomicBool,
+    cap: usize,
+    tracks: Mutex<BTreeMap<String, (u64, Arc<TraceRing>)>>,
+}
+
+impl Tracer {
+    /// Recorder with an injected clock; starts *disabled* (sampling off).
+    pub fn new(cap: usize, clock: Arc<dyn TraceClock>) -> Arc<Self> {
+        Arc::new(Tracer {
+            clock,
+            enabled: AtomicBool::new(false),
+            cap: cap.max(1),
+            tracks: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    /// Recorder on the wall clock with the default ring capacity.
+    pub fn wall() -> Arc<Self> {
+        Self::new(DEFAULT_RING_CAP, Arc::new(WallClock::new()))
+    }
+
+    /// Flip the sampling gate.  May be toggled at any time; handles pick
+    /// the change up on their next event.
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Current time on the injected clock.  Always live (independent of
+    /// the sampling gate) — latency histograms use the same timeline.
+    pub fn now_us(&self) -> u64 {
+        self.clock.now_us()
+    }
+
+    /// Get-or-create the named track and hand back a recording handle.
+    pub fn track(self: &Arc<Self>, name: &str) -> TraceTrack {
+        let mut g = match self.tracks.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        let next_tid = g.len() as u64 + 1;
+        let (_, ring) = g
+            .entry(name.to_string())
+            .or_insert_with(|| (next_tid, Arc::new(TraceRing::new(self.cap))))
+            .clone();
+        TraceTrack {
+            tracer: Arc::clone(self),
+            ring,
+        }
+    }
+
+    /// Total events overwritten across all tracks.
+    pub fn dropped_total(&self) -> u64 {
+        let g = match self.tracks.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        g.values().map(|(_, r)| r.dropped_total()).sum()
+    }
+
+    /// Per-track snapshot, sorted by track name.
+    pub fn snapshot(&self) -> Vec<(String, Vec<TraceEvent>)> {
+        let g = match self.tracks.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        g.iter()
+            .map(|(name, (_, ring))| (name.clone(), ring.snapshot()))
+            .collect()
+    }
+
+    /// Merge the rings into a Chrome trace-event JSON object:
+    /// `{"traceEvents": [...]}` with one `pid=1` process, one named `tid`
+    /// per track (thread-name metadata events included), and `"X"`
+    /// complete events carrying `ts`/`dur` in µs — the native unit of the
+    /// Chrome trace format, so the file loads directly in Perfetto.
+    pub fn chrome_trace_json(&self) -> Json {
+        let g = match self.tracks.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        let mut events = Vec::new();
+        for (name, (tid, ring)) in g.iter() {
+            events.push(Json::obj(vec![
+                ("name", Json::str("thread_name")),
+                ("ph", Json::str("M")),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(*tid as f64)),
+                ("args", Json::obj(vec![("name", Json::str(name))])),
+            ]));
+            for ev in ring.snapshot() {
+                let mut args = Vec::new();
+                if ev.req != NO_REQ {
+                    args.push(("req", Json::Num(ev.req as f64)));
+                }
+                args.push(("round", Json::Num(ev.round as f64)));
+                if ev.n > 0 {
+                    args.push(("n", Json::Num(ev.n as f64)));
+                }
+                events.push(Json::obj(vec![
+                    ("name", Json::str(ev.phase.name())),
+                    ("ph", Json::str("X")),
+                    ("ts", Json::Num(ev.start_us as f64)),
+                    ("dur", Json::Num(ev.end_us.saturating_sub(ev.start_us) as f64)),
+                    ("pid", Json::Num(1.0)),
+                    ("tid", Json::Num(*tid as f64)),
+                    ("args", Json::obj(args)),
+                ]));
+            }
+        }
+        drop(g);
+        Json::obj(vec![
+            ("traceEvents", Json::Arr(events)),
+            ("displayTimeUnit", Json::str("ms")),
+            (
+                "otherData",
+                Json::obj(vec![(
+                    "dropped_events",
+                    Json::Num(self.dropped_total() as f64),
+                )]),
+            ),
+        ])
+    }
+}
+
+/// Recording handle for one track.  Clone-cheap; safe to share across
+/// the threads that feed the same track.
+#[derive(Clone)]
+pub struct TraceTrack {
+    tracer: Arc<Tracer>,
+    ring: Arc<TraceRing>,
+}
+
+impl TraceTrack {
+    pub fn enabled(&self) -> bool {
+        self.tracer.enabled()
+    }
+
+    /// Clock read (always live, gate-independent).
+    pub fn now_us(&self) -> u64 {
+        self.tracer.now_us()
+    }
+
+    /// Record a span; no-op when sampling is off.
+    pub fn span(&self, phase: Phase, req: u64, round: u64, n: u32, start_us: u64, end_us: u64) {
+        if !self.enabled() {
+            return;
+        }
+        self.ring.record(TraceEvent {
+            phase,
+            req,
+            round,
+            n,
+            start_us,
+            end_us,
+        });
+    }
+
+    /// Record a zero-duration instant; no-op when sampling is off.
+    pub fn instant(&self, phase: Phase, req: u64, round: u64, n: u32, at_us: u64) {
+        self.span(phase, req, round, n, at_us, at_us);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn ev(req: u64, start: u64, end: u64) -> TraceEvent {
+        TraceEvent {
+            phase: Phase::Device,
+            req,
+            round: 0,
+            n: 0,
+            start_us: start,
+            end_us: end,
+        }
+    }
+
+    #[test]
+    fn ring_wraps_and_counts_drops() {
+        let ring = TraceRing::new(4);
+        for i in 0..10 {
+            ring.record(ev(i, i, i + 1));
+        }
+        assert_eq!(ring.len(), 4);
+        assert_eq!(ring.dropped_total(), 6);
+        // The newest events survive (flight-recorder semantics).
+        let got: Vec<u64> = ring.snapshot().iter().map(|e| e.req).collect();
+        assert_eq!(got, vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn ring_under_capacity_drops_nothing() {
+        let ring = TraceRing::new(8);
+        for i in 0..5 {
+            ring.record(ev(i, i, i));
+        }
+        assert_eq!(ring.len(), 5);
+        assert_eq!(ring.dropped_total(), 0);
+    }
+
+    #[test]
+    fn concurrent_writers_lose_no_events_under_capacity() {
+        let ring = Arc::new(TraceRing::new(4096));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let r = Arc::clone(&ring);
+            handles.push(thread::spawn(move || {
+                for i in 0..512u64 {
+                    r.record(ev(t * 1000 + i, i, i + 1));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(ring.len(), 2048);
+        assert_eq!(ring.dropped_total(), 0);
+        // Every writer's events are all present.
+        let snap = ring.snapshot();
+        for t in 0..4u64 {
+            let n = snap.iter().filter(|e| e.req / 1000 == t).count();
+            assert_eq!(n, 512, "writer {t} lost events");
+        }
+    }
+
+    #[test]
+    fn concurrent_writers_account_for_every_overwrite() {
+        let ring = Arc::new(TraceRing::new(64));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let r = Arc::clone(&ring);
+            handles.push(thread::spawn(move || {
+                for i in 0..256u64 {
+                    r.record(ev(t, i, i));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // recorded = kept + dropped, exactly.
+        assert_eq!(ring.len() as u64 + ring.dropped_total(), 4 * 256);
+        assert_eq!(ring.len(), 64);
+    }
+
+    #[test]
+    fn tracer_gate_suppresses_recording_but_not_the_clock() {
+        let clock = Arc::new(ScriptedClock::new());
+        let tracer = Tracer::new(16, clock.clone());
+        let track = tracer.track("worker-0");
+        clock.set(42);
+        assert_eq!(track.now_us(), 42);
+        track.span(Phase::Plan, 1, 0, 0, 0, 42);
+        assert_eq!(tracer.snapshot()[0].1.len(), 0, "disabled tracer recorded");
+        tracer.set_enabled(true);
+        track.span(Phase::Plan, 1, 0, 0, 0, 42);
+        assert_eq!(tracer.snapshot()[0].1.len(), 1);
+    }
+
+    #[test]
+    fn track_handles_share_one_ring_per_name() {
+        let tracer = Tracer::new(16, Arc::new(ScriptedClock::new()));
+        tracer.set_enabled(true);
+        let a = tracer.track("dispatcher");
+        let b = tracer.track("dispatcher");
+        a.instant(Phase::Collate, NO_REQ, 1, 0, 5);
+        b.instant(Phase::Device, NO_REQ, 1, 0, 6);
+        let snap = tracer.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].1.len(), 2);
+    }
+
+    #[test]
+    fn chrome_export_parses_and_names_tracks() {
+        let tracer = Tracer::new(16, Arc::new(ScriptedClock::new()));
+        tracer.set_enabled(true);
+        tracer.track("worker-0").span(Phase::Device, 7, 3, 2, 10, 25);
+        tracer.track("dispatcher").instant(Phase::Collate, NO_REQ, 3, 4, 12);
+        let json = tracer.chrome_trace_json();
+        // Round-trip through the serializer: parse what we printed.
+        let parsed = Json::parse(&json.to_string()).expect("chrome trace JSON parses");
+        let evs = parsed.req("traceEvents").unwrap().as_arr().unwrap();
+        // 2 metadata + 2 data events.
+        assert_eq!(evs.len(), 4);
+        let names: Vec<String> = evs
+            .iter()
+            .map(|e| e.req("name").unwrap().as_str().unwrap().to_string())
+            .collect();
+        assert!(names.iter().any(|n| n == "device"));
+        assert!(names.iter().any(|n| n == "collate"));
+        assert_eq!(names.iter().filter(|n| *n == "thread_name").count(), 2);
+        // The span's ts/dur survive in µs.
+        let dev = evs
+            .iter()
+            .find(|e| e.req("name").unwrap().as_str().unwrap() == "device")
+            .unwrap();
+        assert_eq!(dev.req("ts").unwrap().as_f64().unwrap(), 10.0);
+        assert_eq!(dev.req("dur").unwrap().as_f64().unwrap(), 15.0);
+        // NO_REQ events carry no "req" arg.
+        let col = evs
+            .iter()
+            .find(|e| e.req("name").unwrap().as_str().unwrap() == "collate")
+            .unwrap();
+        assert!(col.req("args").unwrap().get("req").is_none());
+    }
+
+    #[test]
+    fn scripted_clock_advances_on_demand() {
+        let c = ScriptedClock::new();
+        assert_eq!(c.now_us(), 0);
+        c.advance(100);
+        c.advance(17);
+        assert_eq!(c.now_us(), 117);
+    }
+}

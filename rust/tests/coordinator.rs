@@ -444,6 +444,100 @@ fn metrics_text_carries_dispatcher_gauges_under_shared_runtime() {
 }
 
 #[test]
+fn tcp_trace_roundtrip_returns_chrome_trace_snapshot() {
+    // the flight recorder over the line protocol: with sampling on, a
+    // `trace` request returns a Chrome trace-event snapshot whose spans
+    // cover the requests the server just served
+    let coord = spawn_mock(2, 0);
+    coord.tracer().set_enabled(true);
+    let addr = "127.0.0.1:17939";
+    let server = std::thread::spawn(move || {
+        ppd::coordinator::server::serve(coord, addr, Some(5)).unwrap();
+    });
+    std::thread::sleep(Duration::from_millis(200));
+    for i in 0..2 {
+        let resp =
+            ppd::coordinator::server::client_request(addr, &format!("trace req {i}"), 4)
+                .unwrap();
+        assert!(resp.get("error").is_none(), "{resp}");
+    }
+    let trace = ppd::coordinator::server::client_trace(addr).unwrap();
+    // the bare `trace` line works too, and returns the same wrapper
+    let raw = {
+        use std::io::{BufRead, BufReader, Write};
+        let mut stream = std::net::TcpStream::connect(addr).unwrap();
+        writeln!(stream, "trace").unwrap();
+        let mut line = String::new();
+        BufReader::new(stream).read_line(&mut line).unwrap();
+        ppd::util::json::Json::parse(line.trim()).unwrap()
+    };
+    assert!(raw.get("trace").is_some(), "bare `trace` line must scrape: {raw}");
+    // `"trace": false` is NOT a scrape: it parses as a (bad) generation
+    // request and gets an error response, not the snapshot
+    {
+        use std::io::{BufRead, BufReader, Write};
+        let mut stream = std::net::TcpStream::connect(addr).unwrap();
+        writeln!(stream, "{}", r#"{"trace": false}"#).unwrap();
+        let mut line = String::new();
+        BufReader::new(stream).read_line(&mut line).unwrap();
+        let j = ppd::util::json::Json::parse(line.trim()).unwrap();
+        assert!(j.get("error").is_some(), "trace=false must not scrape: {j}");
+    }
+    server.join().unwrap();
+    let events = trace.req("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty(), "served requests must leave trace events");
+    let named = |e: &ppd::util::json::Json, name: &str| {
+        e.get("name").and_then(|n| n.as_str().ok()) == Some(name)
+    };
+    // track metadata plus the lifecycle endpoints: a Recv instant on
+    // the server track and a Retire span on a worker track
+    assert!(events.iter().any(|e| named(e, "thread_name")));
+    assert!(events.iter().any(|e| named(e, "recv")));
+    assert!(events
+        .iter()
+        .any(|e| named(e, "retire") && e.get("args").and_then(|a| a.get("req")).is_some()));
+    assert_eq!(trace.req("displayTimeUnit").unwrap().as_str().unwrap(), "ms");
+    assert!(trace.req("otherData").unwrap().get("dropped_events").is_some());
+}
+
+#[test]
+fn warmed_metrics_text_matches_registry_and_exports_latency() {
+    // the live exporter against the metric registry, from a coordinator
+    // that actually served work: every emitted line must resolve to a
+    // declared metric with declared label keys, and the per-request
+    // latency histograms must carry the served requests
+    let coord = spawn_mock(2, 0);
+    let n = 8usize;
+    let resps = coord.run_batch(mk_reqs(n)).expect("batch");
+    assert!(resps.iter().all(|r| r.error.is_none()));
+    let text = coord.metrics_text();
+    for line in text.lines() {
+        let name_part = line.split(' ').next().expect("metric line");
+        let (name, labels) = match name_part.split_once('{') {
+            Some((n, rest)) => (n, Some(rest)),
+            None => (name_part, None),
+        };
+        let decl = ppd::metrics::registry::find(name)
+            .unwrap_or_else(|| panic!("metrics_text emits undeclared metric {name}"));
+        if let Some(rest) = labels {
+            for kv in rest.trim_end_matches('}').split(',') {
+                let key = kv.split('=').next().expect("label key");
+                assert!(decl.1.contains(&key), "metric {name} emits undeclared label {key}");
+            }
+        }
+    }
+    // 8 served requests: one queue-wait/ttft/e2e sample each, and
+    // (max_new - 1) inter-token gaps each (mk_reqs uses max_new = 8)
+    assert!(text.contains(&format!("ppd_request_queue_wait_us{{le=\"+Inf\"}} {n}\n")), "{text}");
+    assert!(text.contains(&format!("ppd_request_ttft_us{{le=\"+Inf\"}} {n}\n")), "{text}");
+    assert!(text.contains(&format!("ppd_request_e2e_us{{le=\"+Inf\"}} {n}\n")), "{text}");
+    assert!(text.contains(&format!("ppd_request_itl_us{{le=\"+Inf\"}} {}\n", n * 7)), "{text}");
+    // sampling stayed off, so nothing was recorded — let alone dropped
+    assert!(text.contains("ppd_trace_ring_dropped_total 0\n"), "{text}");
+    assert!(coord.tracer().snapshot().iter().all(|(_, evs)| evs.is_empty()));
+}
+
+#[test]
 fn tcp_server_returns_despite_idle_connection() {
     // regression: serve(max_requests) must not hang joining a handler
     // whose client holds the socket open without ever sending a line

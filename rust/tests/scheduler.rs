@@ -63,7 +63,7 @@ use std::time::Duration;
 use anyhow::{bail, Result};
 
 use ppd::batch::dispatch::{
-    DeviceDispatcher, DeviceExecutor, DispatchStats, DEFAULT_WINDOW,
+    DeviceDispatcher, DeviceExecutor, DispatchStats, TickRow, DEFAULT_WINDOW,
 };
 use ppd::batch::collator::{collate, split, CollatedBatch};
 use ppd::batch::{
@@ -71,14 +71,16 @@ use ppd::batch::{
     PlanInputs, StepPlan, StepResult,
 };
 use ppd::coordinator::queue::Job;
+use ppd::coordinator::scheduler::SchedObserver;
 use ppd::coordinator::{
     serve_jobs, Coordinator, DeviceHost, Request, Response, SchedPolicy, StepScheduler,
     WorkerBackend, WorkerCtx,
 };
 use ppd::decoding::{DecodeEngine, FinishReason, GenerationResult, SeqState, StepOutcome};
 use ppd::kvcache::{HostKvCache, SharedCachePool};
-use ppd::metrics::QueueStats;
+use ppd::metrics::{us_bucket_quantile, QueueStats, RequestLatency, REQUEST_US_BOUNDS};
 use ppd::runtime::{RuntimeStats, StepOutput};
+use ppd::trace::{Phase, ScriptedClock, TraceEvent, Tracer, NO_REQ};
 use ppd::util::rng::Rng;
 use ppd::workload;
 
@@ -1927,4 +1929,348 @@ fn coordinator_cancel_flag_aborts_inflight_request() {
         resp.error
     );
     assert_eq!(coord.caches_outstanding(), 0);
+}
+
+// ---- request-lifecycle tracing & latency histograms ----
+
+#[test]
+fn scripted_fused_tick_records_gapless_span_chain_and_exact_latency() {
+    // the flight recorder on a scripted clock: one fused request's whole
+    // life is replayed at known timestamps, so every span boundary and
+    // every latency sample has exactly one correct value
+    let clock = Arc::new(ScriptedClock::new());
+    let tracer = Tracer::new(64, clock.clone());
+    tracer.set_enabled(true);
+    let lat = Arc::new(RequestLatency::default());
+    lat.set_keep_samples(true);
+    let mut h = Harness::fused(2);
+    h.sched.set_observer(SchedObserver {
+        track: tracer.track("worker-0"),
+        latency: Arc::clone(&lat),
+    });
+
+    // Job::new stamps enqueue_us = 0 (the scripted clock's origin)
+    clock.set(100); // queued 100us before the worker dequeued it
+    assert!(h.admit(mk_req(1, "traced request", 3)).0);
+    clock.advance(50); // t=150: first fused tick emits token 1
+    h.tick();
+    clock.advance(25); // t=175: token 2
+    h.tick();
+    clock.advance(25); // t=200: token 3 finishes and retires
+    h.tick();
+    assert!(h.sched.is_empty());
+
+    // exact samples off the scripted timeline, in recording order
+    let s = lat.samples();
+    assert_eq!(s.queue_wait_us, vec![100]);
+    assert_eq!(s.ttft_us, vec![150]);
+    assert_eq!(s.itl_us, vec![25, 25]);
+    assert_eq!(s.e2e_us, vec![200]);
+    // the always-on histograms saw the same events
+    assert_eq!(lat.queue_wait().count(), 1);
+    assert_eq!(lat.ttft().count(), 1);
+    assert_eq!(lat.itl().count(), 2);
+    assert_eq!(lat.e2e().count(), 1);
+
+    let snap = tracer.snapshot();
+    let (_, events) =
+        snap.iter().find(|(name, _)| name == "worker-0").expect("worker track recorded");
+    let req: Vec<&TraceEvent> = events.iter().filter(|e| e.req == 1).collect();
+    let phases: Vec<Phase> = req.iter().map(|e| e.phase).collect();
+    let mut want = vec![Phase::Enqueue, Phase::Admit];
+    for _ in 0..3 {
+        want.extend([Phase::Plan, Phase::Device, Phase::Apply, Phase::Emit]);
+    }
+    want.push(Phase::Retire);
+    assert_eq!(phases, want);
+    // gapless chain: every span starts exactly where the previous one
+    // ended (Emit instants are markers, not chain links)
+    let chain: Vec<&&TraceEvent> = req.iter().filter(|e| e.phase != Phase::Emit).collect();
+    assert_eq!(chain[0].start_us, 0, "Enqueue must start at the enqueue origin");
+    for w in chain.windows(2) {
+        assert_eq!(
+            w[1].start_us, w[0].end_us,
+            "gap between {:?} and {:?}",
+            w[0].phase, w[1].phase
+        );
+    }
+    assert_eq!(chain.last().unwrap().end_us, 200, "Retire must close at the e2e timestamp");
+    // per-tick attribution spans ride the same track, off-request,
+    // numbered by the scheduler's tick counter
+    let ticks: Vec<&TraceEvent> =
+        events.iter().filter(|e| e.phase == Phase::Tick).collect();
+    assert_eq!(ticks.len(), 3);
+    for (i, t) in ticks.iter().enumerate() {
+        assert_eq!(t.req, NO_REQ);
+        assert_eq!(t.round, i as u64 + 1);
+        assert_eq!(t.n, 1, "each tick touched exactly one row");
+    }
+    assert_eq!(tracer.dropped_total(), 0);
+}
+
+/// Device executor that parks inside the fused call until released —
+/// the deterministic way to hold the pipelined dispatcher's device
+/// stage busy while its collector stage assembles the next round.
+struct GatingExec {
+    entered: Mutex<mpsc::Sender<usize>>,
+    release: Mutex<mpsc::Receiver<()>>,
+}
+
+impl DeviceExecutor for GatingExec {
+    fn exec_forward(
+        &self,
+        _tokens: &[u32],
+        _pos: &[u32],
+        _slots: &[u32],
+        _bias: &[f32],
+        _cache: &[f32],
+    ) -> Result<StepOutput> {
+        bail!("gating exec only serves fused rounds")
+    }
+
+    fn exec_forward_batch(&self, items: &[BatchItem<'_>]) -> Result<Vec<StepOutput>> {
+        self.entered.lock().unwrap().send(items.len()).unwrap();
+        self.release.lock().unwrap().recv().unwrap();
+        Ok(items
+            .iter()
+            .map(|_| StepOutput { n: 1, logits: vec![0.0], hidden: vec![], new_kv: vec![] })
+            .collect())
+    }
+}
+
+#[test]
+fn pipelined_dispatcher_trace_proves_collate_overlaps_device() {
+    // the overlap acceptance proof: with the device stage held inside
+    // round 1's execution, round 2 must be windowed AND collated before
+    // round 1 finishes — visible both in the overlap counter and as a
+    // collate(2) span strictly nested inside the device(1) span
+    let (entered_tx, entered_rx) = mpsc::channel();
+    let (release_tx, release_rx) = mpsc::channel();
+    let exec =
+        GatingExec { entered: Mutex::new(entered_tx), release: Mutex::new(release_rx) };
+    let stats = Arc::new(DispatchStats::default());
+    let (handle, mut dispatcher) =
+        DeviceDispatcher::channel(DEFAULT_WINDOW, Arc::clone(&stats));
+    let tracer = Tracer::wall();
+    tracer.set_enabled(true);
+    dispatcher.set_pipelined(true);
+    dispatcher.set_tracer(&tracer);
+
+    let row = || TickRow {
+        plan: PlanInputs {
+            tokens: vec![1],
+            pos: vec![0],
+            slots: vec![0],
+            bias: vec![0.0; SHAPE.1],
+            max_ctx: SHAPE.1,
+        },
+        cache: HostKvCache::new(SHAPE.0, SHAPE.1, SHAPE.2),
+    };
+
+    std::thread::scope(|scope| {
+        scope.spawn(|| dispatcher.run(&exec));
+        // round 1 flushes immediately (no registered schedulers, so the
+        // window never waits) and blocks inside the gated executor
+        let rx1 = handle.submit_tick(0, vec![row()]).expect("submit round 1");
+        assert_eq!(entered_rx.recv_timeout(Duration::from_secs(5)).unwrap(), 1);
+        // round 2 arrives while the device still runs round 1: the
+        // collector stage must assemble it NOW — that is the overlap
+        let rx2 = handle.submit_tick(0, vec![row()]).expect("submit round 2");
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        let collated = |t: &Tracer| {
+            t.snapshot().iter().any(|(name, evs)| {
+                name == "dispatcher"
+                    && evs.iter().any(|e| e.phase == Phase::Collate && e.round == 2)
+            })
+        };
+        while !collated(&tracer) {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "collate(2) never appeared while device(1) was executing"
+            );
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // hold the device a beat longer so device(1) strictly brackets
+        // collate(2) even at microsecond clock resolution
+        std::thread::sleep(Duration::from_millis(2));
+        release_tx.send(()).unwrap();
+        assert_eq!(entered_rx.recv_timeout(Duration::from_secs(5)).unwrap(), 1);
+        release_tx.send(()).unwrap();
+        assert!(rx1.recv_timeout(Duration::from_secs(5)).unwrap().outs.is_ok());
+        assert!(rx2.recv_timeout(Duration::from_secs(5)).unwrap().outs.is_ok());
+        drop(handle); // disconnect: collector flushes, device drains, run returns
+    });
+
+    assert!(stats.overlap_batches_total() >= 1, "overlap counter never fired");
+    let snap = tracer.snapshot();
+    let (_, evs) =
+        snap.iter().find(|(name, _)| name == "dispatcher").expect("dispatcher track");
+    let find = |phase: Phase, round: u64| {
+        evs.iter()
+            .find(|e| e.phase == phase && e.round == round)
+            .unwrap_or_else(|| panic!("no {phase:?} span for round {round}"))
+    };
+    let dev1 = find(Phase::Device, 1);
+    let col2 = find(Phase::Collate, 2);
+    assert!(
+        dev1.start_us <= col2.start_us && col2.end_us < dev1.end_us,
+        "collate(2) [{}, {}] must nest inside device(1) [{}, {}]",
+        col2.start_us,
+        col2.end_us,
+        dev1.start_us,
+        dev1.end_us
+    );
+    // round 2 still got its own full window/collate/device record
+    find(Phase::WindowWait, 2);
+    find(Phase::Device, 2);
+}
+
+#[test]
+fn coordinator_trace_chains_are_gapless_and_match_histograms() {
+    // threads + queue + schedulers + pipelined dispatcher, flight
+    // recorder on: every served request leaves one gapless recv→retire
+    // chain, the Chrome export survives a JSON round-trip, and latency
+    // quantiles recomputed from the trace equal the exported histograms
+    let coord = Coordinator::spawn_with_backend_policy(
+        std::sync::Arc::new(MockBackend { step_delay: Duration::from_millis(1) }),
+        2,
+        SchedPolicy {
+            max_inflight: 2,
+            shared_runtime: true,
+            pipelined: true,
+            ..Default::default()
+        },
+    )
+    .expect("spawn");
+    coord.tracer().set_enabled(true);
+    coord.request_latency().set_keep_samples(true);
+    let max_new = 6usize;
+    let reqs: Vec<Request> =
+        (0..8).map(|i| mk_req(i, &format!("traced e2e {i}"), max_new)).collect();
+    let resps = coord.run_batch(reqs).expect("batch");
+    assert!(resps.iter().all(|r| r.error.is_none()));
+
+    let snap = coord.tracer().snapshot();
+    let (_, server) =
+        snap.iter().find(|(name, _)| name == "server").expect("server track");
+    let mut qw = Vec::new();
+    let mut ttft = Vec::new();
+    let mut itl = Vec::new();
+    let mut e2e = Vec::new();
+    let mut chains = 0;
+    for (name, evs) in &snap {
+        if !name.starts_with("worker-") {
+            continue;
+        }
+        let mut by_req: std::collections::BTreeMap<u64, Vec<&TraceEvent>> =
+            std::collections::BTreeMap::new();
+        for e in evs {
+            if e.req != NO_REQ {
+                by_req.entry(e.req).or_default().push(e);
+            }
+        }
+        for (id, req_evs) in by_req {
+            chains += 1;
+            let chain: Vec<&&TraceEvent> =
+                req_evs.iter().filter(|e| e.phase != Phase::Emit).collect();
+            assert_eq!(chain[0].phase, Phase::Enqueue, "request {id}");
+            assert_eq!(chain[1].phase, Phase::Admit, "request {id}");
+            assert_eq!(chain.last().unwrap().phase, Phase::Retire, "request {id}");
+            for w in chain.windows(2) {
+                assert_eq!(
+                    w[1].start_us, w[0].end_us,
+                    "request {id}: gap between {:?} and {:?}",
+                    w[0].phase, w[1].phase
+                );
+            }
+            // the server-side Recv instant shares the enqueue origin
+            assert!(
+                server.iter().any(|e| e.phase == Phase::Recv
+                    && e.req == id
+                    && e.start_us == chain[0].start_us),
+                "request {id}: no Recv instant at its enqueue origin"
+            );
+            qw.push(chain[1].start_us - chain[0].start_us);
+            e2e.push(chain.last().unwrap().end_us - chain[0].start_us);
+            let emits: Vec<u64> = req_evs
+                .iter()
+                .filter(|e| e.phase == Phase::Emit)
+                .map(|e| e.start_us)
+                .collect();
+            assert_eq!(emits.len(), max_new, "request {id} emit count");
+            ttft.push(emits[0] - chain[0].start_us);
+            for w in emits.windows(2) {
+                itl.push(w[1] - w[0]);
+            }
+        }
+    }
+    assert_eq!(chains, 8, "every request must leave exactly one chain");
+    // the pipelined shared path also recorded its dispatcher rounds
+    let (_, disp) =
+        snap.iter().find(|(name, _)| name == "dispatcher").expect("dispatcher track");
+    assert!(disp.iter().any(|e| e.phase == Phase::Device && e.round > 0));
+    assert!(disp.iter().any(|e| e.phase == Phase::Collate));
+    assert!(snap
+        .iter()
+        .filter(|(name, _)| name.starts_with("worker-"))
+        .any(|(_, evs)| evs.iter().any(|e| e.phase == Phase::Submit)));
+    assert_eq!(coord.tracer().dropped_total(), 0);
+
+    // trace-derived samples == recorded samples (one shared clock read
+    // per event makes this an equality, not an approximation)
+    let s = coord.request_latency().samples();
+    let sorted = |mut v: Vec<u64>| {
+        v.sort_unstable();
+        v
+    };
+    assert_eq!(sorted(qw.clone()), sorted(s.queue_wait_us));
+    assert_eq!(sorted(ttft.clone()), sorted(s.ttft_us));
+    assert_eq!(sorted(itl.clone()), sorted(s.itl_us));
+    assert_eq!(sorted(e2e.clone()), sorted(s.e2e_us));
+    // and the exported histograms are exactly the bucketized trace
+    let bucketize = |samples: &[u64]| {
+        let mut counts = vec![0u64; REQUEST_US_BOUNDS.len() + 1];
+        for &v in samples {
+            counts[REQUEST_US_BOUNDS.partition_point(|&b| b < v)] += 1;
+        }
+        counts
+    };
+    let lat = coord.request_latency();
+    let views: [(&str, &[u64], &ppd::metrics::UsHistogram); 4] = [
+        ("queue_wait", &qw, lat.queue_wait()),
+        ("ttft", &ttft, lat.ttft()),
+        ("itl", &itl, lat.itl()),
+        ("e2e", &e2e, lat.e2e()),
+    ];
+    for (what, samples, hist) in views {
+        let counts = bucketize(samples);
+        assert_eq!(counts, hist.bucket_counts(), "{what} bucket counts diverged");
+        for q in [0.5, 0.95, 0.99] {
+            assert_eq!(
+                us_bucket_quantile(&counts, q),
+                hist.quantile_us(q),
+                "{what} p{} diverged",
+                (q * 100.0) as u32
+            );
+        }
+    }
+
+    // the Chrome export survives a JSON round-trip and carries the
+    // track metadata Perfetto needs
+    let chrome = coord.trace_json();
+    let reparsed = ppd::util::json::Json::parse(&chrome.to_string())
+        .expect("chrome trace JSON round-trip");
+    let events = reparsed.req("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty());
+    let named = |e: &ppd::util::json::Json, name: &str| {
+        e.get("name").and_then(|n| n.as_str().ok()) == Some(name)
+    };
+    assert!(events.iter().any(|e| named(e, "thread_name")));
+    assert!(events
+        .iter()
+        .any(|e| named(e, "retire") && e.get("args").and_then(|a| a.get("req")).is_some()));
+    assert_eq!(reparsed.req("displayTimeUnit").unwrap().as_str().unwrap(), "ms");
+    let dropped =
+        reparsed.req("otherData").unwrap().req("dropped_events").unwrap().as_f64().unwrap();
+    assert_eq!(dropped, 0.0);
 }

@@ -16,6 +16,12 @@ Compares a fresh ``BENCH_sched.json`` (written by
   than the structural call counts do, so the drop allowance is
   deliberately generous and only catches collapses).
 
+Latency quantiles (``ttft_p50_us`` .. ``itl_p99_us``) are **carried,
+not gated**: the compare form prints them for trend reading and
+``--seed`` records them in each point's ``latency`` block, but no
+latency value can fail the gate — scheduling latency on shared CI
+runners is too noisy for a hard threshold.
+
 ``serial`` points are a pure function of the scheduler (one device call
 per generated token), so their references are exact.  ``fused``,
 ``shared``, and ``pipelined`` points go through live threads and
@@ -34,16 +40,33 @@ import json
 import sys
 
 
+# informational fields: carried through --seed and printed by the
+# compare form, never part of any pass/fail decision
+LATENCY_KEYS = (
+    "ttft_p50_us",
+    "ttft_p95_us",
+    "ttft_p99_us",
+    "itl_p50_us",
+    "itl_p95_us",
+    "itl_p99_us",
+)
+
+
 def load_points(report):
     if report.get("bench") != "sched" or "runs" not in report:
         raise SystemExit("bench_gate: fresh artifact is not a sched sweep report")
     points = {}
     for run in report["runs"]:
         key = f"{run['mode']}/{int(run['workers'])}"
-        points[key] = {
+        point = {
             "device_calls_per_token": float(run["device_calls_per_token"]),
             "tokens_per_s": float(run["tokens_per_s"]),
         }
+        # tolerate older artifacts that predate the latency fields
+        for lk in LATENCY_KEYS:
+            if lk in run:
+                point[lk] = float(run[lk])
+        points[key] = point
     return points
 
 
@@ -78,6 +101,15 @@ def main():
         for key, spec in expected.items():
             spec["reference"] = round(fresh[key]["device_calls_per_token"], 4)
             spec["tps_reference"] = round(fresh[key]["tokens_per_s"], 1)
+            latency = {
+                lk: round(fresh[key][lk], 1)
+                for lk in LATENCY_KEYS
+                if lk in fresh[key]
+            }
+            if latency:
+                # carried for trend reading; the compare form never
+                # gates on these
+                spec["latency"] = latency
         with open(args.baseline, "w") as f:
             json.dump(baseline, f, indent=2)
             f.write("\n")
@@ -117,6 +149,22 @@ def main():
         )
         if tps < floor:
             failures.append(f"{key}: {tps:.0f} tok/s < floor {floor:.0f}")
+
+    if any(lk in fresh[key] for key in sorted(expected) for lk in LATENCY_KEYS):
+        print("bench_gate: latency quantiles (informational, never gated)")
+        for key in sorted(expected):
+            point = fresh[key]
+            if not any(lk in point for lk in LATENCY_KEYS):
+                continue
+            ttft = "/".join(
+                f"{point.get(lk, float('nan')):.0f}"
+                for lk in ("ttft_p50_us", "ttft_p95_us", "ttft_p99_us")
+            )
+            itl = "/".join(
+                f"{point.get(lk, float('nan')):.0f}"
+                for lk in ("itl_p50_us", "itl_p95_us", "itl_p99_us")
+            )
+            print(f"  {key:>11}: ttft p50/p95/p99 {ttft} us, itl {itl} us")
 
     if failures:
         print("bench_gate: bench trajectory regressed:", file=sys.stderr)
