@@ -141,12 +141,11 @@ pub fn collate(
             let src = j * max_ctx;
             bias[dst..dst + kv].copy_from_slice(&item.plan.bias[src..src + kv]);
         }
-        // cache planes truncated to the first kv slots
-        let full = item.cache.as_slice();
+        // cache planes truncated to the first kv slots, gathered
+        // storage-agnostically (paged caches copy page by page)
         for p in 0..planes {
             let dst = ((i * planes) + p) * kv * d;
-            let src = p * max_ctx * d;
-            cache[dst..dst + kv * d].copy_from_slice(&full[src..src + kv * d]);
+            item.cache.copy_plane_prefix(p, kv, &mut cache[dst..dst + kv * d]);
         }
     }
 

@@ -913,7 +913,7 @@ impl DeviceDispatcher {
 
     /// [`DeviceDispatcher::pump`] through the pipelined code path: the
     /// round is prepared (and, inventory permitting, collated) by
-    /// [`prepare_round`] before the executor sees it — exactly what the
+    /// `prepare_round` before the executor sees it — exactly what the
     /// threaded collector stage does, minus the threads, so the
     /// deterministic harness can pin the pre-collated path's outputs
     /// against the executor-collated path's.

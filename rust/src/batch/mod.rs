@@ -296,7 +296,7 @@ pub fn step_via_plan<E: BatchStepEngine + ?Sized>(
         StepPlan::Fallback => bail!("plan-native engine planned Fallback"),
         StepPlan::Forward(plan) => {
             let t = std::time::Instant::now();
-            let out = rt.forward(&plan.tokens, &plan.pos, &plan.slots, &plan.bias, cache.as_slice())?;
+            let out = rt.forward(&plan.tokens, &plan.pos, &plan.slots, &plan.bias, &cache.device_snapshot())?;
             seq.res.decode_s += t.elapsed().as_secs_f64();
             engine.apply_step(seq, &StepResult { plan: &plan, out: &out }, cache)
         }

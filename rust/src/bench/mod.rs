@@ -18,6 +18,12 @@
 //! per worker tick; the shared runtime pays it once per *wall* tick.
 //! The sweep surfaces exactly that ladder.
 //!
+//! The [`SweepMode::Prefix`] point additionally runs the paged KV pool
+//! (`--kv-blocks`) with a shared prompt preamble, and every point
+//! reports `resident_kv_bytes`/`prefix_hits` so the memory half of the
+//! paper's claim rides the same trajectory (carried by
+//! `tools/bench_gate.py`, never gated — see `docs/ARCHITECTURE.md`).
+//!
 //! Used by `examples/bench_sched.rs`, which writes the JSON artifact CI
 //! uploads on every run.
 
@@ -56,6 +62,12 @@ pub enum SweepMode {
     /// `--shared-runtime --pipelined`: one device call per wall tick,
     /// with host planning/admission overlapping device execution
     Pipelined,
+    /// `--fuse-steps --kv-blocks`: paged KV cache with prefix reuse —
+    /// every request shares a common prompt preamble, so riders check
+    /// the preamble's pages out of the prefix store instead of
+    /// recomputing (the sweep's memory story: `resident_kv_bytes` and
+    /// `prefix_hits` go live on this point)
+    Prefix,
 }
 
 impl SweepMode {
@@ -65,13 +77,30 @@ impl SweepMode {
             SweepMode::Fused => "fused",
             SweepMode::Shared => "shared",
             SweepMode::Pipelined => "pipelined",
+            SweepMode::Prefix => "prefix",
         }
     }
 
-    pub fn all() -> [SweepMode; 4] {
-        [SweepMode::Serial, SweepMode::Fused, SweepMode::Shared, SweepMode::Pipelined]
+    pub fn all() -> [SweepMode; 5] {
+        [
+            SweepMode::Serial,
+            SweepMode::Fused,
+            SweepMode::Shared,
+            SweepMode::Pipelined,
+            SweepMode::Prefix,
+        ]
     }
 }
+
+/// Common prompt preamble every `Prefix`-mode request starts with —
+/// long enough to span several KV pages at the bench shape (page size
+/// [`crate::kvcache::block_slots_for`]\(64\) = 8 slots), so the prefix
+/// store has real chunks to share.
+const PREFIX_PREAMBLE: &str = "you are a careful assistant; ";
+
+/// Page budget for the `Prefix` sweep point: roomy enough that no
+/// bench request is refused (the point measures reuse, not pressure).
+const PREFIX_KV_BLOCKS: usize = 192;
 
 /// One sweep point.
 #[derive(Debug, Clone)]
@@ -177,7 +206,10 @@ impl DecodeEngine for BenchEngine {
         cache: &mut HostKvCache,
     ) -> Result<SeqState> {
         cache.reset();
-        cache.commit_contiguous(prompt.len().min(cache.capacity()))?;
+        // prefix-aware "prefill": a seeded cache already holds its
+        // first committed() prompt rows, so only the remainder commits
+        let want = prompt.len().min(cache.capacity());
+        cache.commit_contiguous(want.saturating_sub(cache.committed()))?;
         let base: u64 = prompt.iter().map(|&t| t as u64).sum();
         Ok(SeqState::new(max_new, Rng::new(seed), Box::new(BenchSeq { base })))
     }
@@ -336,9 +368,10 @@ impl WorkerBackend for BenchBackend {
 pub fn spawn_sweep_coordinator(cfg: &SweepConfig) -> Result<Coordinator> {
     let policy = SchedPolicy {
         max_inflight: cfg.max_inflight,
-        fuse_steps: cfg.mode == SweepMode::Fused,
+        fuse_steps: matches!(cfg.mode, SweepMode::Fused | SweepMode::Prefix),
         shared_runtime: matches!(cfg.mode, SweepMode::Shared | SweepMode::Pipelined),
         pipelined: cfg.mode == SweepMode::Pipelined,
+        kv_blocks: (cfg.mode == SweepMode::Prefix).then_some(PREFIX_KV_BLOCKS),
         ..Default::default()
     };
     Coordinator::spawn_with_backend_policy(
@@ -360,11 +393,14 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<Json> {
     coord.request_latency().set_keep_samples(true);
     let reqs: Vec<Request> = (0..cfg.requests)
         .map(|i| {
-            Request::new(
-                i as u64,
-                workload::encode(&format!("bench request {i}")),
-                cfg.max_new,
-            )
+            // the prefix point models system-prompt traffic: every
+            // request opens with the same preamble, so its KV pages are
+            // computed once and shared by reference
+            let text = match cfg.mode {
+                SweepMode::Prefix => format!("{PREFIX_PREAMBLE}bench request {i}"),
+                _ => format!("bench request {i}"),
+            };
+            Request::new(i as u64, workload::encode(&text), cfg.max_new)
         })
         .collect();
     let t0 = Instant::now();
@@ -390,6 +426,9 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<Json> {
     };
     let samples = coord.request_latency().samples();
     let agg = coord.runtime_agg();
+    // memory accounting, read while the pool is still alive
+    let resident_kv_bytes = coord.resident_kv_bytes();
+    let prefix_hits = coord.prefix_hits();
     drop(coord); // workers + device host flush their counters on drain
     let rt = agg.snapshot();
     if rt.forwards == 0 {
@@ -412,6 +451,8 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<Json> {
         ("itl_p50_us", Json::Num(sample_quantile_us(&samples.itl_us, 0.50))),
         ("itl_p95_us", Json::Num(sample_quantile_us(&samples.itl_us, 0.95))),
         ("itl_p99_us", Json::Num(sample_quantile_us(&samples.itl_us, 0.99))),
+        ("resident_kv_bytes", Json::Num(resident_kv_bytes as f64)),
+        ("prefix_hits", Json::Num(prefix_hits as f64)),
     ]))
 }
 
@@ -447,6 +488,8 @@ pub const RUN_KEYS: &[&str] = &[
     "itl_p50_us",
     "itl_p95_us",
     "itl_p99_us",
+    "resident_kv_bytes",
+    "prefix_hits",
 ];
 
 /// Validate a full bench report (`{"bench": "sched", "schema": 1,
@@ -554,6 +597,24 @@ mod tests {
         // fused widths engaged
         let j = run_sweep(&quick(SweepMode::Fused, 1)).unwrap();
         assert!(j.req("mean_fused_width").unwrap().as_f64().unwrap() >= 1.0);
+    }
+
+    #[test]
+    fn prefix_mode_shares_pages_and_shrinks_resident_kv() {
+        let fused = run_sweep(&quick(SweepMode::Fused, 2)).expect("fused sweep");
+        let prefix = run_sweep(&quick(SweepMode::Prefix, 2)).expect("prefix sweep");
+        let hits = prefix.req("prefix_hits").unwrap().as_f64().unwrap();
+        assert!(hits > 0.0, "prefix sweep must serve shared prompt pages");
+        assert_eq!(fused.req("prefix_hits").unwrap().as_f64().unwrap(), 0.0);
+        // paged high-water pages are far smaller than whole slabs, even
+        // though the prefix prompts are LONGER (shared preamble)
+        let slab = fused.req("resident_kv_bytes").unwrap().as_f64().unwrap();
+        let paged = prefix.req("resident_kv_bytes").unwrap().as_f64().unwrap();
+        assert!(paged > 0.0 && slab > 0.0);
+        assert!(
+            paged < slab,
+            "paged resident {paged} must undercut slab resident {slab}"
+        );
     }
 
     #[test]

@@ -581,8 +581,14 @@ impl Coordinator {
         }
         let queue = Arc::new(WorkQueue::new());
         // the pool cap is exactly the admission budget: one cache per
-        // in-flight sequence, across all workers
-        let pool = Arc::new(SharedCachePool::new(workers * policy.max_inflight));
+        // in-flight sequence, across all workers.  With --kv-blocks the
+        // caches are paged and jointly bounded by the page budget too,
+        // with prefix sharing on.
+        let cache_cap = workers * policy.max_inflight;
+        let pool = Arc::new(match policy.kv_blocks {
+            Some(blocks) => SharedCachePool::with_block_budget(cache_cap, blocks),
+            None => SharedCachePool::new(cache_cap),
+        });
         let stats = Arc::new(QueueStats::new());
         let rt_agg = Arc::new(RuntimeAgg::default());
         let dispatch_stats = Arc::new(DispatchStats::default());
@@ -761,6 +767,15 @@ impl Coordinator {
         ));
         text.push_str(&format!("ppd_caches_created {}\n", self.pool.created()));
         text.push_str(&format!("ppd_caches_outstanding {}\n", self.pool.outstanding()));
+        // paged-KV accounting: all four read zero on slab pools (no
+        // --kv-blocks), so the lines are stable either way
+        text.push_str(&format!("ppd_kvcache_blocks_used {}\n", self.pool.blocks_used()));
+        text.push_str(&format!("ppd_kvcache_blocks_free {}\n", self.pool.blocks_free()));
+        text.push_str(&format!("ppd_prefix_hits_total {}\n", self.pool.prefix_hits()));
+        text.push_str(&format!(
+            "ppd_prefix_blocks_shared_total {}\n",
+            self.pool.prefix_blocks_shared()
+        ));
         text.push_str(&format!("ppd_queue_capacity {}\n", self.queue_capacity));
         text.push_str(&self.latency.to_prometheus());
         text.push_str(&format!(
@@ -779,6 +794,17 @@ impl Coordinator {
     /// KV caches currently checked out (one per in-flight sequence).
     pub fn caches_outstanding(&self) -> usize {
         self.pool.outstanding()
+    }
+
+    /// Peak resident KV bytes across the run: live pages at high water
+    /// for block-budgeted pools, whole slabs for classic pools.
+    pub fn resident_kv_bytes(&self) -> usize {
+        self.pool.resident_kv_bytes()
+    }
+
+    /// Prompt-prefix store hits served so far (0 without `--kv-blocks`).
+    pub fn prefix_hits(&self) -> u64 {
+        self.pool.prefix_hits()
     }
 
     pub fn queue_capacity(&self) -> usize {

@@ -126,6 +126,13 @@ pub struct SchedPolicy {
     /// fuse-aware ([`admission_quota`]).  Token-exact vs the
     /// unpipelined shared path — only the overlap changes.
     pub pipelined: bool,
+    /// page budget for the paged KV cache (`--kv-blocks`): when set,
+    /// sequences draw fixed-size KV pages from a shared
+    /// [`crate::kvcache::BlockPool`] bounded to this many live pages,
+    /// identical prompt prefixes share pages copy-on-write, and
+    /// admission refuses requests whose footprint does not fit.
+    /// `None` keeps the classic one-slab-per-sequence caches.
+    pub kv_blocks: Option<usize>,
 }
 
 impl Default for SchedPolicy {
@@ -136,6 +143,7 @@ impl Default for SchedPolicy {
             fuse_steps: false,
             shared_runtime: false,
             pipelined: false,
+            kv_blocks: None,
         }
     }
 }
@@ -386,7 +394,9 @@ impl StepScheduler {
             }
         }
         let (l, s, d) = engine.cache_shape();
-        let mut cache = match pool.checkout(l, s, d) {
+        // prompt-aware checkout: block-budgeted pools seed shared
+        // prefix pages and account admission in pages, not slabs
+        let mut cache = match pool.checkout_for_prompt(l, s, d, &job.req.prompt) {
             Ok(c) => c,
             Err(e) => {
                 self.refuse(stats, job, queue_s, format!("{e}"));
@@ -398,6 +408,10 @@ impl StepScheduler {
         }));
         match begun {
             Ok(Ok(seq)) => {
+                // the prompt is prefilled: record its full KV chunks in
+                // the shared prefix store so identical prefixes ride
+                // these pages instead of recomputing (no-op on slabs)
+                pool.publish_prefix(&cache, &job.req.prompt);
                 stats.on_admit(self.len() + 1);
                 let mut t = ReqTiming {
                     enqueue_us: job.enqueue_us,

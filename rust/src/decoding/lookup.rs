@@ -317,7 +317,7 @@ impl<P: ChainProposer + Clone + Send + 'static> DecodeEngine for ChainEngine<'_,
             return Ok(seq.finish(FinishReason::Context));
         }
         let inputs = assemble_step(&tree, &layout, &guesses, root, committed as u32, committed, max_ctx)?;
-        let out = self.rt.forward(&inputs.tokens, &inputs.pos, &inputs.slots, &inputs.bias, cache.as_slice())?;
+        let out = self.rt.forward(&inputs.tokens, &inputs.pos, &inputs.slots, &inputs.bias, &cache.device_snapshot())?;
         cache.scatter(&out.new_kv, &inputs.slots)?;
 
         let v = verify(&tree, &layout, &out, &inputs.tokens, VerifyMode::Greedy, vocab, &mut seq.rng);

@@ -251,12 +251,20 @@ pub fn prefill(rt: &dyn Device, cache: &mut HostKvCache, prompt: &[u32]) -> Resu
         bail!("empty prompt");
     }
     let s = rt.cfg().max_ctx;
-    if prompt.len() > cache.remaining() {
+    // a prefix-seeded cache (shared prompt pages from the pool's radix
+    // store) already holds KV for its first committed() rows: prefill
+    // only the remainder.  The seed is always a *strict* prefix, so the
+    // last prompt token — whose logits start generation — is always
+    // recomputed here.
+    let mut done = cache.committed();
+    if done >= prompt.len() {
+        bail!("cache already holds {done} committed rows, prompt has only {} tokens", prompt.len());
+    }
+    if prompt.len() - done > cache.remaining() {
         bail!("prompt of {} tokens exceeds context {}", prompt.len(), cache.capacity());
     }
     let max_bucket = *rt.cfg().buckets.iter().max().unwrap();
     let mut out: Option<StepOutput> = None;
-    let mut done = 0;
     while done < prompt.len() {
         let chunk = (prompt.len() - done).min(max_bucket);
         let base = cache.committed();
@@ -269,7 +277,7 @@ pub fn prefill(rt: &dyn Device, cache: &mut HostKvCache, prompt: &[u32]) -> Resu
                 bias[i * s + j] = 0.0;
             }
         }
-        let step = rt.forward(tokens, &pos, &slots, &bias, cache.as_slice())?;
+        let step = rt.forward(tokens, &pos, &slots, &bias, &cache.device_snapshot())?;
         cache.scatter(&step.new_kv, &slots)?;
         cache.commit_contiguous(chunk)?;
         out = Some(step);

@@ -133,7 +133,7 @@ impl<'a> SpeculativeEngine<'a> {
                     for (j, b) in bias.iter_mut().enumerate() {
                         *b = if j <= c { 0.0 } else { NEG_INF };
                     }
-                    let out = self.draft.forward(&[cur], &[c as u32], &[c as u32], &bias, draft_cache.as_slice())?;
+                    let out = self.draft.forward(&[cur], &[c as u32], &[c as u32], &bias, &draft_cache.device_snapshot())?;
                     draft_cache.scatter(&out.new_kv, &[c as u32])?;
                     draft_cache.commit_contiguous(1)?;
                     steps += 1;
@@ -156,7 +156,7 @@ impl<'a> SpeculativeEngine<'a> {
                     let layout = &set.layouts[k];
                     let committed = draft_cache.committed();
                     let inputs = assemble_step(tree, layout, &guesses, cur, committed as u32, committed, s)?;
-                    let out = self.draft.forward(&inputs.tokens, &inputs.pos, &inputs.slots, &inputs.bias, draft_cache.as_slice())?;
+                    let out = self.draft.forward(&inputs.tokens, &inputs.pos, &inputs.slots, &inputs.bias, &draft_cache.device_snapshot())?;
                     draft_cache.scatter(&out.new_kv, &inputs.slots)?;
                     let v = verify(tree, layout, &out, &inputs.tokens, VerifyMode::Greedy, vocab, rng);
                     let mut accepted_slots = vec![inputs.slots[0]];
@@ -209,7 +209,7 @@ impl<'a> SpeculativeEngine<'a> {
                 bias[i * s + j] = 0.0;
             }
         }
-        let out = self.draft.forward(accepted, &pos, &pos, &bias, draft_cache.as_slice())?;
+        let out = self.draft.forward(accepted, &pos, &pos, &bias, &draft_cache.device_snapshot())?;
         draft_cache.scatter(&out.new_kv, &pos)?;
         draft_cache.commit_contiguous(n)?;
         Ok(())
@@ -310,7 +310,7 @@ impl DecodeEngine for SpeculativeEngine<'_> {
                 bias[i * s + j] = 0.0;
             }
         }
-        let out = self.target.forward(&tokens, &pos, &pos, &bias, target_cache.as_slice())?;
+        let out = self.target.forward(&tokens, &pos, &pos, &bias, &target_cache.device_snapshot())?;
         target_cache.scatter(&out.new_kv, &pos)?;
 
         // longest matching prefix + bonus

@@ -1,0 +1,381 @@
+//! Fixed-size KV pages, the refcounted block pool, and per-sequence
+//! block tables.
+//!
+//! A *block* (page) is one contiguous `[planes, block_slots, d]` f32
+//! buffer covering `block_slots` consecutive logical cache slots for
+//! every layer's K and V plane.  Sequences never own blocks directly:
+//! a [`BlockTable`] maps each logical slot range to an
+//! `Arc`-refcounted [`BlockRef`], so two sequences sharing a prompt
+//! prefix reference the *same* pages (computed once, counted once
+//! against the budget) until one of them writes — at which point
+//! [`super::HostKvCache`] copies the page out of the share
+//! (copy-on-write).
+//!
+//! The [`BlockPool`] is the budget authority: `--kv-blocks` bounds how
+//! many distinct pages may be live at once across every sequence *and*
+//! the prefix store, and [`super::PoolExhausted`] carries this block
+//! accounting when admission would exceed it.  Freed buffers are
+//! recycled through a free list (zeroed on reuse), and prefix-store
+//! pages nobody references anymore are the eviction reserve when an
+//! allocation or admission is short on budget.
+
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use super::prefix::PrefixStore;
+use super::PoolExhausted;
+
+/// Default page size, in cache slots, for production context lengths.
+/// Pools built over small contexts scale it down — see
+/// [`block_slots_for`].
+pub const DEFAULT_BLOCK_SLOTS: usize = 64;
+
+/// One refcounted KV page: `[planes, block_slots, d]` row-major.
+/// `Arc::strong_count > 1` means the page is shared (by another
+/// sequence's table or the prefix store) and must be copied before a
+/// write.
+pub type BlockRef = Arc<Vec<f32>>;
+
+/// Page size for a cache of `max_ctx` slots: an eighth of the context
+/// (so paging has real granularity even on tiny test shapes), clamped
+/// to `[1, DEFAULT_BLOCK_SLOTS]`.
+pub fn block_slots_for(max_ctx: usize) -> usize {
+    (max_ctx / 8).clamp(1, DEFAULT_BLOCK_SLOTS)
+}
+
+fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// Per-sequence mapping from logical cache slots to pages.  Entry `i`
+/// covers slots `[i*block_slots, (i+1)*block_slots)`; `None` means the
+/// range was never written (reads see zeros).
+///
+/// ```
+/// use ppd::kvcache::BlockTable;
+///
+/// let table = BlockTable::new(256, 64);
+/// assert_eq!(table.len(), 4);            // ceil(256 / 64) entries
+/// assert_eq!(table.location(0), (0, 0)); // slot -> (block, row-in-block)
+/// assert_eq!(table.location(130), (2, 2));
+/// assert_eq!(table.allocated(), 0);      // nothing written yet
+/// ```
+#[derive(Debug, Clone)]
+pub struct BlockTable {
+    blocks: Vec<Option<BlockRef>>,
+    block_slots: usize,
+}
+
+impl BlockTable {
+    pub fn new(max_ctx: usize, block_slots: usize) -> Self {
+        let bs = block_slots.max(1);
+        BlockTable { blocks: vec![None; ceil_div(max_ctx.max(1), bs)], block_slots: bs }
+    }
+
+    pub fn block_slots(&self) -> usize {
+        self.block_slots
+    }
+
+    /// Table entries (allocated or not).
+    pub fn len(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+
+    /// `(block index, row within the block)` for a logical slot.
+    pub fn location(&self, slot: usize) -> (usize, usize) {
+        (slot / self.block_slots, slot % self.block_slots)
+    }
+
+    /// Pages currently backed by real memory.
+    pub fn allocated(&self) -> usize {
+        self.blocks.iter().filter(|b| b.is_some()).count()
+    }
+
+    /// Whether entry `i` is a page some other table or the prefix
+    /// store also references (a write to it must copy first).
+    pub fn is_shared(&self, i: usize) -> bool {
+        matches!(self.blocks.get(i), Some(Some(b)) if Arc::strong_count(b) > 1)
+    }
+
+    pub(crate) fn entries(&self) -> &[Option<BlockRef>] {
+        &self.blocks
+    }
+
+    pub(crate) fn entries_mut(&mut self) -> &mut [Option<BlockRef>] {
+        &mut self.blocks
+    }
+}
+
+/// Shared, budget-bounded allocator of KV pages (plus the prefix store
+/// that rides its mutex and budget).  Cloning the handle shares the
+/// pool.
+#[derive(Debug, Clone)]
+pub struct BlockPool {
+    planes: usize,
+    block_slots: usize,
+    d: usize,
+    state: Arc<Mutex<State>>,
+}
+
+#[derive(Debug)]
+struct State {
+    /// recycled buffers (zeroed on reuse)
+    free: Vec<Vec<f32>>,
+    /// distinct live pages — shared pages count ONCE (the whole point)
+    used: usize,
+    peak_used: usize,
+    budget: usize,
+    store: PrefixStore,
+    hits: u64,
+    blocks_shared: u64,
+    /// logical allocation clock for LRU stamps (deterministic)
+    clock: u64,
+}
+
+impl BlockPool {
+    /// A pool of pages shaped `[2*n_layers, block_slots, d]` with a hard
+    /// budget of `budget` live pages.
+    pub fn new(n_layers: usize, block_slots: usize, d: usize, budget: usize) -> Self {
+        BlockPool {
+            planes: 2 * n_layers,
+            block_slots: block_slots.max(1),
+            d,
+            state: Arc::new(Mutex::new(State {
+                free: Vec::new(),
+                used: 0,
+                peak_used: 0,
+                budget: budget.max(1),
+                store: PrefixStore::default(),
+                hits: 0,
+                blocks_shared: 0,
+                clock: 0,
+            })),
+        }
+    }
+
+    pub fn block_slots(&self) -> usize {
+        self.block_slots
+    }
+
+    /// f32 values per page.
+    pub fn block_len(&self) -> usize {
+        self.planes * self.block_slots * self.d
+    }
+
+    pub fn block_bytes(&self) -> usize {
+        self.block_len() * std::mem::size_of::<f32>()
+    }
+
+    fn lock(&self) -> MutexGuard<'_, State> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Evict idle prefix-store pages until `needed` more allocations
+    /// fit, or fail with block accounting.
+    fn make_room(&self, st: &mut State, needed: usize) -> Result<(), PoolExhausted> {
+        while st.used + needed > st.budget {
+            match st.store.evict_lru() {
+                Some(buf) => {
+                    st.used -= 1;
+                    st.free.push(buf);
+                }
+                None => {
+                    return Err(PoolExhausted {
+                        cap: 0,
+                        blocks_used: st.used,
+                        blocks_budget: st.budget,
+                    })
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Allocate one zeroed page against the budget.
+    pub(crate) fn alloc(&self) -> Result<BlockRef, PoolExhausted> {
+        let mut st = self.lock();
+        self.make_room(&mut st, 1)?;
+        st.used += 1;
+        st.peak_used = st.peak_used.max(st.used);
+        let buf = match st.free.pop() {
+            Some(mut b) => {
+                b.fill(0.0);
+                b
+            }
+            None => vec![0.0; self.block_len()],
+        };
+        Ok(Arc::new(buf))
+    }
+
+    /// Return one reference to a page.  The buffer is only recycled —
+    /// and the budget only credited — when this was the LAST reference
+    /// (shared pages stay live until every holder releases).
+    pub(crate) fn release(&self, block: BlockRef) {
+        let mut st = self.lock();
+        if let Ok(buf) = Arc::try_unwrap(block) {
+            st.used -= 1;
+            st.free.push(buf);
+        }
+    }
+
+    /// Admission check: would `needed` more pages fit (after evicting
+    /// idle prefix pages)?  Nothing is reserved — pages allocate lazily
+    /// as the sequence writes.
+    pub(crate) fn admit(&self, needed: usize) -> Result<(), PoolExhausted> {
+        let mut st = self.lock();
+        self.make_room(&mut st, needed)
+    }
+
+    /// Walk the prefix store for `prompt`, touching LRU stamps.
+    pub(crate) fn lookup(&self, prompt: &[u32]) -> Vec<BlockRef> {
+        let mut st = self.lock();
+        st.clock += 1;
+        let clock = st.clock;
+        st.store.lookup(prompt, self.block_slots, clock)
+    }
+
+    /// Count one prefix hit of `blocks` shared pages.
+    pub(crate) fn note_hit(&self, blocks: usize) {
+        let mut st = self.lock();
+        st.hits += 1;
+        st.blocks_shared += blocks as u64;
+    }
+
+    /// Publish a sequence's full prompt chunks into the prefix store.
+    pub(crate) fn publish(&self, prompt: &[u32], table: &BlockTable, committed: usize) -> usize {
+        let mut st = self.lock();
+        st.clock += 1;
+        let clock = st.clock;
+        st.store.publish(prompt, table.entries(), committed, self.block_slots, clock)
+    }
+
+    /// Pages needed for a prompt of `len` tokens plus one generated
+    /// token, within a usable context of `capacity` slots.
+    pub fn blocks_for_prompt(&self, len: usize, capacity: usize) -> usize {
+        ceil_div((len + 1).min(capacity).max(1), self.block_slots)
+    }
+
+    /// Distinct live pages right now.
+    pub fn blocks_used(&self) -> usize {
+        self.lock().used
+    }
+
+    /// Budget headroom (`budget - used`).
+    pub fn blocks_free(&self) -> usize {
+        let st = self.lock();
+        st.budget.saturating_sub(st.used)
+    }
+
+    pub fn blocks_budget(&self) -> usize {
+        self.lock().budget
+    }
+
+    /// High-water mark of live pages (resident-memory reporting).
+    pub fn peak_blocks_used(&self) -> usize {
+        self.lock().peak_used
+    }
+
+    /// Pages currently pinned by the prefix store.
+    pub fn store_blocks(&self) -> usize {
+        self.lock().store.blocks_held()
+    }
+
+    pub fn prefix_hits(&self) -> u64 {
+        self.lock().hits
+    }
+
+    pub fn prefix_blocks_shared(&self) -> u64 {
+        self.lock().blocks_shared
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_locations_and_len() {
+        let t = BlockTable::new(16, 2);
+        assert_eq!(t.len(), 8);
+        assert_eq!(t.location(0), (0, 0));
+        assert_eq!(t.location(5), (2, 1));
+        assert_eq!(t.allocated(), 0);
+        assert!(!t.is_shared(0));
+    }
+
+    #[test]
+    fn pool_recycles_and_respects_budget() {
+        let p = BlockPool::new(2, 4, 4, 2); // pages of 4*4*4 floats, budget 2
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        assert_eq!(p.blocks_used(), 2);
+        assert_eq!(p.blocks_free(), 0);
+        let err = p.alloc().unwrap_err();
+        assert_eq!(err.blocks_used, 2);
+        assert_eq!(err.blocks_budget, 2);
+        p.release(a);
+        assert_eq!(p.blocks_used(), 1);
+        let c = p.alloc().unwrap();
+        assert!(c.iter().all(|&x| x == 0.0), "recycled page must be zeroed");
+        assert_eq!(p.peak_blocks_used(), 2);
+        drop((b, c));
+    }
+
+    #[test]
+    fn shared_pages_are_counted_once_and_freed_last() {
+        let p = BlockPool::new(2, 4, 4, 4);
+        let a = p.alloc().unwrap();
+        let twin = Arc::clone(&a);
+        assert_eq!(p.blocks_used(), 1);
+        p.release(a); // twin still holds it
+        assert_eq!(p.blocks_used(), 1, "a shared page must stay live");
+        p.release(twin);
+        assert_eq!(p.blocks_used(), 0, "last holder frees the page");
+    }
+
+    #[test]
+    fn idle_store_pages_are_the_eviction_reserve() {
+        let p = BlockPool::new(2, 2, 4, 2);
+        let a = p.alloc().unwrap();
+        let table = {
+            let mut t = BlockTable::new(4, 2);
+            t.entries_mut()[0] = Some(Arc::clone(&a));
+            t
+        };
+        // publish prompt [1,2,3]: one full 2-token chunk backed by `a`
+        assert_eq!(p.publish(&[1, 2, 3], &table, 3), 1);
+        drop(table);
+        p.release(a); // now only the store holds the page
+        assert_eq!(p.blocks_used(), 1);
+        // budget 2: two fresh allocations force an eviction of the
+        // idle store page rather than failing
+        let b = p.alloc().unwrap();
+        let c = p.alloc().unwrap();
+        assert_eq!(p.blocks_used(), 2);
+        assert_eq!(p.store_blocks(), 0, "idle prefix page was evicted");
+        drop((b, c));
+    }
+
+    #[test]
+    fn lookup_never_serves_the_whole_prompt() {
+        let p = BlockPool::new(2, 2, 4, 8);
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        let mut t = BlockTable::new(8, 2);
+        t.entries_mut()[0] = Some(Arc::clone(&a));
+        t.entries_mut()[1] = Some(Arc::clone(&b));
+        let prompt = [1u32, 2, 3, 4];
+        assert_eq!(p.publish(&prompt, &t, 4), 1, "only the strict-prefix chunk is stored");
+        // the 4-token prompt hits its first chunk only: the last token
+        // must be recomputed by the rider
+        assert_eq!(p.lookup(&prompt).len(), 1);
+        // a longer prompt sharing the prefix hits the same chunk
+        assert_eq!(p.lookup(&[1, 2, 3, 9, 9, 9]).len(), 1);
+        // a diverging prompt misses
+        assert_eq!(p.lookup(&[1, 9, 3, 4]).len(), 0);
+        drop((a, b, t));
+    }
+}

@@ -1,4 +1,6 @@
-//! Host-authoritative KV-cache manager.
+//! Host-authoritative KV-cache manager: slab or paged storage behind
+//! one `HostKvCache` API, block-budgeted pools, and cross-request
+//! prefix reuse.
 //!
 //! The forward executables scatter the step's K/V into a *copy* of the
 //! cache on device for attention, and return the new rows; rust owns the
@@ -8,10 +10,26 @@
 //! cache is updated accordingly").  Rejected tree rows simply stay above
 //! `committed` and are dead — the next step's bias never exposes them.
 //!
-//! Layout: `[2L, max_ctx, d]` row-major; layer l's keys at plane `2l`,
-//! values at `2l+1`.  Slot `max_ctx-1` is reserved as the padding trash
-//! row (see `runtime::Runtime::forward`); usable context is
+//! Logical layout: `[2L, max_ctx, d]` row-major; layer l's keys at plane
+//! `2l`, values at `2l+1`.  Slot `max_ctx-1` is reserved as the padding
+//! trash row (see `runtime::Runtime::forward`); usable context is
 //! `max_ctx - RESERVED` slots.
+//!
+//! ## Storage: slab vs paged
+//!
+//! [`HostKvCache::new`] allocates the classic contiguous slab.
+//! [`HostKvCache::new_paged`] instead backs the same logical layout
+//! with fixed-size pages drawn from a shared [`BlockPool`], mapped by a
+//! per-sequence [`BlockTable`] — so a sequence only occupies memory for
+//! the slots it has actually written, identical prompt prefixes can
+//! share pages copy-on-write (the `prefix` module), and admission is
+//! expressed in *block* budgets instead of whole-slab counts.  Every
+//! mutation flows through `scatter`/`compact`/`commit_contiguous`/
+//! `truncate`, so the two storages are behaviorally interchangeable;
+//! the device ABI is untouched because [`HostKvCache::device_snapshot`]
+//! (and the collator's [`HostKvCache::copy_plane_prefix`]) gather pages
+//! back into the contiguous layout the AOT'd graphs expect.  See
+//! `docs/ARCHITECTURE.md` for the full memory model.
 //!
 //! ## Pooling
 //!
@@ -21,39 +39,147 @@
 //! scheduler checks caches out of a [`CachePool`] (wrapped in a
 //! [`SharedCachePool`] so all worker threads draw from one free list).
 //! The pool enforces a hard cap — at most one cache per admitted
-//! sequence, i.e. `workers × max_inflight` — returning a typed
-//! [`PoolExhausted`] error rather than allocating past it, which is the
-//! paper's runtime-memory story (≈0.0004% overhead) carried through to
-//! the serving layer.
+//! sequence, i.e. `workers × max_inflight` — and, when built with a
+//! block budget (`--kv-blocks`), additionally refuses admissions whose
+//! prompt footprint would exceed the budgeted page count, returning a
+//! typed [`PoolExhausted`] carrying the block accounting rather than
+//! allocating past it.  That is the paper's runtime-memory story
+//! (≈0.0004% overhead) carried through to the serving layer.
+
+use std::borrow::Cow;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+pub mod block;
+mod prefix;
+
+pub use block::{block_slots_for, BlockPool, BlockRef, BlockTable, DEFAULT_BLOCK_SLOTS};
+
 pub const RESERVED_SLOTS: usize = 2;
+
+/// Paged backing storage: a block table plus the pool its pages came
+/// from.  Dropping it returns every page reference to the pool (the
+/// buffer itself is only recycled when the last referencing table or
+/// prefix-store node lets go).
+#[derive(Debug, Clone)]
+struct Paged {
+    table: BlockTable,
+    pool: BlockPool,
+}
+
+impl Paged {
+    /// Read one `[d]` row (zeros when the covering page was never
+    /// allocated).
+    fn read_row(&self, plane: usize, slot: usize, d: usize, out: &mut [f32]) {
+        let (bi, off) = self.table.location(slot);
+        match self.table.entries()[bi].as_ref() {
+            Some(b) => {
+                let base = (plane * self.table.block_slots() + off) * d;
+                out.copy_from_slice(&b[base..base + d]);
+            }
+            None => out.fill(0.0),
+        }
+    }
+
+    /// The page for table entry `bi`, allocated on first touch and
+    /// copied out of any share (copy-on-write) so the caller may write.
+    fn writable_block(&mut self, bi: usize) -> Result<&mut Vec<f32>> {
+        if self.table.entries()[bi].is_none() {
+            let fresh = self.pool.alloc()?;
+            self.table.entries_mut()[bi] = Some(fresh);
+        } else if self.table.is_shared(bi) {
+            // copy-on-write: divergence must not touch the shared page
+            let mut fresh = self.pool.alloc()?;
+            {
+                let cur = self.table.entries()[bi].as_ref().expect("checked above");
+                Arc::get_mut(&mut fresh).expect("fresh page is unique").copy_from_slice(cur);
+            }
+            let old = std::mem::replace(&mut self.table.entries_mut()[bi], Some(fresh))
+                .expect("checked above");
+            self.pool.release(old);
+        }
+        let arc = self.table.entries_mut()[bi].as_mut().expect("installed above");
+        Ok(Arc::get_mut(arc).expect("page is unique after COW"))
+    }
+
+    fn release_from(&mut self, first_entry: usize) {
+        for i in first_entry..self.table.len() {
+            if let Some(b) = self.table.entries_mut()[i].take() {
+                self.pool.release(b);
+            }
+        }
+    }
+}
+
+impl Drop for Paged {
+    fn drop(&mut self) {
+        self.release_from(0);
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Storage {
+    Slab(Vec<f32>),
+    Paged(Paged),
+}
 
 #[derive(Debug, Clone)]
 pub struct HostKvCache {
-    data: Vec<f32>,
+    storage: Storage,
     planes: usize,
     max_ctx: usize,
     d: usize,
     /// committed context length (number of finalized tokens)
     committed: usize,
+    /// rows `[0, prefix_len)` were seeded from the shared prefix store;
+    /// `reset()` rolls back to here, not to zero
+    prefix_len: usize,
 }
 
 impl HostKvCache {
+    /// A contiguous-slab cache (the classic layout; always available).
     pub fn new(n_layers: usize, max_ctx: usize, d: usize) -> Self {
         let planes = 2 * n_layers;
         HostKvCache {
-            data: vec![0.0; planes * max_ctx * d],
+            storage: Storage::Slab(vec![0.0; planes * max_ctx * d]),
             planes,
             max_ctx,
             d,
             committed: 0,
+            prefix_len: 0,
         }
+    }
+
+    /// A paged cache drawing fixed-size pages from `pool` on demand.
+    /// Same logical layout and API as a slab cache; memory is only
+    /// occupied for pages actually written.
+    pub fn new_paged(n_layers: usize, max_ctx: usize, d: usize, pool: &BlockPool) -> Self {
+        HostKvCache {
+            storage: Storage::Paged(Paged {
+                table: BlockTable::new(max_ctx, pool.block_slots()),
+                pool: pool.clone(),
+            }),
+            planes: 2 * n_layers,
+            max_ctx,
+            d,
+            committed: 0,
+            prefix_len: 0,
+        }
+    }
+
+    pub fn is_paged(&self) -> bool {
+        matches!(self.storage, Storage::Paged(_))
     }
 
     pub fn committed(&self) -> usize {
         self.committed
+    }
+
+    /// Rows seeded from the shared prefix store at checkout (0 unless
+    /// the pool found a prefix hit for this sequence's prompt).
+    pub fn prefix_len(&self) -> usize {
+        self.prefix_len
     }
 
     /// `(n_layers, max_ctx, d)` — the tuple [`CachePool`] templates on.
@@ -69,12 +195,88 @@ impl HostKvCache {
         self.capacity().saturating_sub(self.committed)
     }
 
+    /// The raw slab (slab storage only — paged callers want
+    /// [`HostKvCache::device_snapshot`]).
+    ///
+    /// # Panics
+    /// On a paged cache, which has no contiguous backing buffer.
     pub fn as_slice(&self) -> &[f32] {
-        &self.data
+        match &self.storage {
+            Storage::Slab(data) => data,
+            Storage::Paged(_) => {
+                panic!("as_slice on a paged cache: use device_snapshot()/copy_plane_prefix()")
+            }
+        }
+    }
+
+    /// The full `[planes, max_ctx, d]` contiguous view the device ABI
+    /// expects: borrowed for slab storage (zero cost), gathered from
+    /// the page table for paged storage (unallocated ranges read as
+    /// zeros — they are masked on device anyway).
+    pub fn device_snapshot(&self) -> Cow<'_, [f32]> {
+        match &self.storage {
+            Storage::Slab(data) => Cow::Borrowed(data.as_slice()),
+            Storage::Paged(p) => {
+                let mut out = vec![0.0; self.planes * self.max_ctx * self.d];
+                let bs = p.table.block_slots();
+                for (bi, e) in p.table.entries().iter().enumerate() {
+                    let Some(b) = e else { continue };
+                    let start = bi * bs;
+                    let take = bs.min(self.max_ctx - start);
+                    for pl in 0..self.planes {
+                        let src = pl * bs * self.d;
+                        let dst = (pl * self.max_ctx + start) * self.d;
+                        out[dst..dst + take * self.d]
+                            .copy_from_slice(&b[src..src + take * self.d]);
+                    }
+                }
+                Cow::Owned(out)
+            }
+        }
+    }
+
+    /// Copy the first `kv` slots of one plane into `dst` (length
+    /// `kv * d`) — the batch collator's per-row gather, paged-aware.
+    pub fn copy_plane_prefix(&self, plane: usize, kv: usize, dst: &mut [f32]) {
+        debug_assert_eq!(dst.len(), kv * self.d);
+        match &self.storage {
+            Storage::Slab(data) => {
+                let src = plane * self.max_ctx * self.d;
+                dst.copy_from_slice(&data[src..src + kv * self.d]);
+            }
+            Storage::Paged(p) => {
+                dst.fill(0.0);
+                let bs = p.table.block_slots();
+                for (bi, e) in p.table.entries().iter().enumerate() {
+                    let start = bi * bs;
+                    if start >= kv {
+                        break;
+                    }
+                    let Some(b) = e else { continue };
+                    let take = bs.min(kv - start);
+                    let src = plane * bs * self.d;
+                    dst[start * self.d..(start + take) * self.d]
+                        .copy_from_slice(&b[src..src + take * self.d]);
+                }
+            }
+        }
     }
 
     /// Scatter the step's returned rows: `new_kv` is `[planes, n, d]`
     /// and token i's row lands at cache slot `slots[i]` in every plane.
+    ///
+    /// On a paged cache this allocates pages on first touch and copies
+    /// shared (prefix) pages out of the share before writing.
+    ///
+    /// ```
+    /// use ppd::kvcache::HostKvCache;
+    ///
+    /// let mut cache = HostKvCache::new(1, 8, 2); // 2 planes, 8 slots, d=2
+    /// // one token's K and V rows, landing at slot 3
+    /// cache.scatter(&[1.0, 1.0, 2.0, 2.0], &[3]).unwrap();
+    /// assert_eq!(cache.row(0, 3), &[1.0, 1.0]);
+    /// assert_eq!(cache.row(1, 3), &[2.0, 2.0]);
+    /// ```
     pub fn scatter(&mut self, new_kv: &[f32], slots: &[u32]) -> Result<()> {
         let n = slots.len();
         if new_kv.len() != self.planes * n * self.d {
@@ -89,20 +291,49 @@ impl HostKvCache {
             if slot >= self.max_ctx {
                 bail!("scatter: slot {slot} out of range");
             }
-            for p in 0..self.planes {
-                let src = (p * n + i) * self.d;
-                let dst = (p * self.max_ctx + slot) * self.d;
-                self.data[dst..dst + self.d].copy_from_slice(&new_kv[src..src + self.d]);
+            match &mut self.storage {
+                Storage::Slab(data) => {
+                    for p in 0..self.planes {
+                        let src = (p * n + i) * self.d;
+                        let dst = (p * self.max_ctx + slot) * self.d;
+                        data[dst..dst + self.d].copy_from_slice(&new_kv[src..src + self.d]);
+                    }
+                }
+                Storage::Paged(pg) => {
+                    let (bi, off) = pg.table.location(slot);
+                    let bs = pg.table.block_slots();
+                    let blk = pg.writable_block(bi)?;
+                    for p in 0..self.planes {
+                        let src = (p * n + i) * self.d;
+                        let dst = (p * bs + off) * self.d;
+                        blk[dst..dst + self.d].copy_from_slice(&new_kv[src..src + self.d]);
+                    }
+                }
             }
         }
         Ok(())
     }
 
     /// Commit `count` already-contiguous rows starting at `committed`
-    /// (prefill path: slots were `committed..committed+count`).
+    /// (prefill path: slots were `committed..committed+count`).  Paged
+    /// caches allocate any still-missing covering pages (zeroed) so the
+    /// committed region is always materialized.
     pub fn commit_contiguous(&mut self, count: usize) -> Result<()> {
         if self.committed + count > self.capacity() {
             bail!("cache overflow: {} + {count} > {}", self.committed, self.capacity());
+        }
+        if count > 0 {
+            if let Storage::Paged(p) = &mut self.storage {
+                let bs = p.table.block_slots();
+                let first = self.committed / bs;
+                let last = (self.committed + count - 1) / bs;
+                for bi in first..=last {
+                    if p.table.entries()[bi].is_none() {
+                        let fresh = p.pool.alloc()?;
+                        p.table.entries_mut()[bi] = Some(fresh);
+                    }
+                }
+            }
         }
         self.committed += count;
         Ok(())
@@ -112,6 +343,18 @@ impl HostKvCache {
     /// (tree scratch positions, in path order) down to the committed
     /// region and advance `committed`.  Slots equal to their target are
     /// skipped (the tree root is written at `committed` already).
+    ///
+    /// ```
+    /// use ppd::kvcache::HostKvCache;
+    ///
+    /// let mut cache = HostKvCache::new(1, 8, 2);
+    /// cache.commit_contiguous(2).unwrap(); // prompt rows at slots 0..2
+    /// // tree scratch rows at slots 2..4; verification accepted slot 3
+    /// cache.scatter(&[5., 5., 6., 6., 7., 7., 8., 8.], &[2, 3]).unwrap();
+    /// cache.compact(&[3]).unwrap();        // slot 3 -> slot 2
+    /// assert_eq!(cache.committed(), 3);
+    /// assert_eq!(cache.row(0, 2), &[6.0, 6.0]);
+    /// ```
     pub fn compact(&mut self, accepted_slots: &[u32]) -> Result<()> {
         if self.committed + accepted_slots.len() > self.capacity() {
             bail!(
@@ -123,8 +366,7 @@ impl HostKvCache {
         }
         for (i, &src) in accepted_slots.iter().enumerate() {
             let src = src as usize;
-            let dst = self.committed + i;
-            if src == dst {
+            if src == self.committed + i {
                 continue;
             }
             if src >= self.max_ctx {
@@ -133,10 +375,47 @@ impl HostKvCache {
             if src < self.committed + i {
                 bail!("compact: slot {src} would overwrite committed rows");
             }
-            for p in 0..self.planes {
-                let s = (p * self.max_ctx + src) * self.d;
-                let t = (p * self.max_ctx + dst) * self.d;
-                self.data.copy_within(s..s + self.d, t);
+        }
+        match &mut self.storage {
+            Storage::Slab(data) => {
+                for (i, &src) in accepted_slots.iter().enumerate() {
+                    let src = src as usize;
+                    let dst = self.committed + i;
+                    if src == dst {
+                        continue;
+                    }
+                    for p in 0..self.planes {
+                        let s = (p * self.max_ctx + src) * self.d;
+                        let t = (p * self.max_ctx + dst) * self.d;
+                        data.copy_within(s..s + self.d, t);
+                    }
+                }
+            }
+            Storage::Paged(pg) => {
+                // gather the accepted rows first, then write them down:
+                // block-safe even when src and dst share a page
+                let k = accepted_slots.len();
+                let mut tmp = vec![0.0; self.planes * k * self.d];
+                for (i, &src) in accepted_slots.iter().enumerate() {
+                    for p in 0..self.planes {
+                        let o = (p * k + i) * self.d;
+                        pg.read_row(p, src as usize, self.d, &mut tmp[o..o + self.d]);
+                    }
+                }
+                let bs = pg.table.block_slots();
+                for (i, &src) in accepted_slots.iter().enumerate() {
+                    let dst = self.committed + i;
+                    if src as usize == dst {
+                        continue;
+                    }
+                    let (bi, off) = pg.table.location(dst);
+                    let blk = pg.writable_block(bi)?;
+                    for p in 0..self.planes {
+                        let s = (p * k + i) * self.d;
+                        let t = (p * bs + off) * self.d;
+                        blk[t..t + self.d].copy_from_slice(&tmp[s..s + self.d]);
+                    }
+                }
             }
         }
         self.committed += accepted_slots.len();
@@ -144,45 +423,119 @@ impl HostKvCache {
     }
 
     /// Roll back to a shorter committed length (request retry/cancel).
+    /// Paged caches release any pages now entirely above `len`.
     pub fn truncate(&mut self, len: usize) -> Result<()> {
         if len > self.committed {
             bail!("truncate to {len} > committed {}", self.committed);
         }
         self.committed = len;
+        self.prefix_len = self.prefix_len.min(len);
+        if let Storage::Paged(p) = &mut self.storage {
+            let bs = p.table.block_slots();
+            let keep = if len == 0 { 0 } else { (len + bs - 1) / bs };
+            p.release_from(keep);
+        }
         Ok(())
     }
 
-    /// Reset for reuse by another sequence.
+    /// Reset for the next sequence *of the same request lifecycle*:
+    /// rolls `committed` back to the seeded prefix (or zero when none).
+    /// Pages above the prefix stay allocated for reuse by this
+    /// sequence; the pool wipes them on checkin.
     pub fn reset(&mut self) {
+        self.committed = self.prefix_len;
+    }
+
+    /// Full clear for pool reuse: forget the prefix seed and (paged)
+    /// release every page back to the pool.
+    pub(crate) fn wipe(&mut self) {
+        self.prefix_len = 0;
         self.committed = 0;
-        // rows above committed are always masked; no need to zero
+        if let Storage::Paged(p) = &mut self.storage {
+            p.release_from(0);
+        }
+    }
+
+    /// Install shared prefix pages covering the first `slots` rows and
+    /// mark them committed (pool checkout path on a prefix hit).
+    pub(crate) fn seed_prefix(&mut self, blocks: &[BlockRef], slots: usize) {
+        if let Storage::Paged(p) = &mut self.storage {
+            debug_assert_eq!(slots, blocks.len() * p.table.block_slots());
+            for (i, b) in blocks.iter().enumerate() {
+                p.table.entries_mut()[i] = Some(Arc::clone(b));
+            }
+            self.committed = slots;
+            self.prefix_len = slots;
+        }
+    }
+
+    /// The page table (paged storage only).
+    pub fn block_table(&self) -> Option<&BlockTable> {
+        match &self.storage {
+            Storage::Slab(_) => None,
+            Storage::Paged(p) => Some(&p.table),
+        }
     }
 
     /// Read one row (test/debug helper).
+    ///
+    /// # Panics
+    /// On a paged cache when the covering page was never allocated.
     pub fn row(&self, plane: usize, slot: usize) -> &[f32] {
-        let base = (plane * self.max_ctx + slot) * self.d;
-        &self.data[base..base + self.d]
+        match &self.storage {
+            Storage::Slab(data) => {
+                let base = (plane * self.max_ctx + slot) * self.d;
+                &data[base..base + self.d]
+            }
+            Storage::Paged(p) => {
+                let (bi, off) = p.table.location(slot);
+                let b = p.table.entries()[bi]
+                    .as_ref()
+                    .unwrap_or_else(|| panic!("row: slot {slot} has no allocated page"));
+                let base = (plane * p.table.block_slots() + off) * self.d;
+                &b[base..base + self.d]
+            }
+        }
     }
 
+    /// Bytes actually resident for this cache: the whole slab, or only
+    /// the allocated pages.
     pub fn memory_bytes(&self) -> usize {
-        self.data.len() * 4
+        match &self.storage {
+            Storage::Slab(data) => data.len() * std::mem::size_of::<f32>(),
+            Storage::Paged(p) => p.table.allocated() * p.pool.block_bytes(),
+        }
     }
 }
 
 /// Typed error for a checkout that would exceed the pool's cap — the
-/// caller (the step scheduler) sized its admission budget wrong, or a
-/// cache leaked past its `checkin`.  Allocating anyway would silently
-/// unbound runtime memory, which is exactly the paper's memory story
-/// inverted.
+/// caller (the step scheduler) sized its admission budget wrong, a
+/// cache leaked past its `checkin`, or (block-budgeted pools) the
+/// request's prompt footprint does not fit the remaining `--kv-blocks`
+/// budget even after evicting idle prefix pages.  Allocating anyway
+/// would silently unbound runtime memory, which is exactly the paper's
+/// memory story inverted.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PoolExhausted {
     /// the pool's outstanding-cache cap
     pub cap: usize,
+    /// live pages at refusal time (0 unless block-budgeted)
+    pub blocks_used: usize,
+    /// the pool's page budget (0 unless block-budgeted)
+    pub blocks_budget: usize,
 }
 
 impl std::fmt::Display for PoolExhausted {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "KV cache pool exhausted: {} caches already checked out", self.cap)
+        if self.blocks_budget > 0 {
+            write!(
+                f,
+                "KV cache pool exhausted: {}/{} blocks in use (cap {} sequences)",
+                self.blocks_used, self.blocks_budget, self.cap
+            )
+        } else {
+            write!(f, "KV cache pool exhausted: {} caches already checked out", self.cap)
+        }
     }
 }
 
@@ -195,7 +548,22 @@ impl std::error::Error for PoolExhausted {}
 /// `workers × max_inflight`), so `created` converges to the live
 /// concurrency and stays there no matter how many requests flow
 /// through — callers that outpace `checkin` get a typed
-/// [`PoolExhausted`] error instead of a silent allocation.
+/// [`PoolExhausted`] error instead of a silent allocation.  Built with
+/// [`CachePool::new_paged`], checkouts are paged caches over a shared
+/// [`BlockPool`] and memory is additionally page-budgeted.
+///
+/// ```
+/// use ppd::kvcache::CachePool;
+///
+/// let mut pool = CachePool::new(2, 64, 4, 2); // cap: 2 outstanding
+/// let a = pool.checkout().unwrap();
+/// let b = pool.checkout().unwrap();
+/// assert!(pool.checkout().is_err()); // typed PoolExhausted
+/// pool.checkin(a);
+/// let c = pool.checkout().unwrap();  // reuses a's buffer
+/// assert_eq!(pool.created, 2);
+/// # drop((b, c));
+/// ```
 #[derive(Debug)]
 pub struct CachePool {
     template: (usize, usize, usize),
@@ -203,6 +571,7 @@ pub struct CachePool {
     pub created: usize,
     outstanding: usize,
     cap: usize,
+    blocks: Option<BlockPool>,
 }
 
 impl CachePool {
@@ -213,7 +582,27 @@ impl CachePool {
             created: 0,
             outstanding: 0,
             cap: cap.max(1),
+            blocks: None,
         }
+    }
+
+    /// A pool whose caches are paged over a shared [`BlockPool`] of
+    /// `block_budget` pages (page size from [`block_slots_for`]).
+    pub fn new_paged(
+        n_layers: usize,
+        max_ctx: usize,
+        d: usize,
+        cap: usize,
+        block_budget: usize,
+    ) -> Self {
+        let mut pool = CachePool::new(n_layers, max_ctx, d, cap);
+        pool.blocks = Some(BlockPool::new(n_layers, block_slots_for(max_ctx), d, block_budget));
+        pool
+    }
+
+    /// The shared page pool, when block-budgeted.
+    pub fn block_pool(&self) -> Option<&BlockPool> {
+        self.blocks.as_ref()
     }
 
     /// Caches currently checked out (≤ `cap`).
@@ -227,7 +616,7 @@ impl CachePool {
 
     pub fn checkout(&mut self) -> Result<HostKvCache, PoolExhausted> {
         if self.outstanding >= self.cap {
-            return Err(PoolExhausted { cap: self.cap });
+            return Err(PoolExhausted { cap: self.cap, blocks_used: 0, blocks_budget: 0 });
         }
         self.outstanding += 1;
         Ok(match self.free.pop() {
@@ -238,16 +627,22 @@ impl CachePool {
             None => {
                 self.created += 1;
                 let (l, s, d) = self.template;
-                HostKvCache::new(l, s, d)
+                match &self.blocks {
+                    Some(bp) => HostKvCache::new_paged(l, s, d, bp),
+                    None => HostKvCache::new(l, s, d),
+                }
             }
         })
     }
 
-    pub fn checkin(&mut self, cache: HostKvCache) {
+    pub fn checkin(&mut self, mut cache: HostKvCache) {
         self.outstanding = self.outstanding.saturating_sub(1);
         // foreign shapes are dropped, not pooled: handing a wrong-shape
         // cache to a later checkout would make `forward` reject it
         if cache.shape() == self.template {
+            // full clear: release pages and forget any prefix seed so
+            // the budget is credited the moment the sequence retires
+            cache.wipe();
             self.free.push(cache);
         }
     }
@@ -256,16 +651,32 @@ impl CachePool {
 /// Thread-safe, lazily-templated [`CachePool`] shared by the
 /// coordinator's workers.  The template shape is only known once the
 /// first worker has loaded its model config, hence the `Option`; the
-/// outstanding-cache cap is fixed at construction.
+/// outstanding-cache cap — and the optional `--kv-blocks` page budget —
+/// are fixed at construction.
 #[derive(Debug)]
 pub struct SharedCachePool {
     cap: usize,
+    /// page budget for paged checkouts; `None` = classic slab caches
+    kv_blocks: Option<usize>,
     inner: std::sync::Mutex<Option<CachePool>>,
 }
 
 impl SharedCachePool {
     pub fn new(cap: usize) -> Self {
-        SharedCachePool { cap: cap.max(1), inner: std::sync::Mutex::new(None) }
+        SharedCachePool { cap: cap.max(1), kv_blocks: None, inner: std::sync::Mutex::new(None) }
+    }
+
+    /// A pool whose caches are paged and jointly bounded by `kv_blocks`
+    /// live pages — the serving layer's real memory ceiling.  Prefix
+    /// reuse is on: [`SharedCachePool::checkout_for_prompt`] seeds
+    /// shared pages and [`SharedCachePool::publish_prefix`] records
+    /// them.
+    pub fn with_block_budget(cap: usize, kv_blocks: usize) -> Self {
+        SharedCachePool {
+            cap: cap.max(1),
+            kv_blocks: Some(kv_blocks.max(1)),
+            inner: std::sync::Mutex::new(None),
+        }
     }
 
     /// Check a cache out, initializing the pool template on first use.
@@ -275,9 +686,29 @@ impl SharedCachePool {
         max_ctx: usize,
         d: usize,
     ) -> Result<HostKvCache, PoolExhausted> {
+        self.checkout_for_prompt(n_layers, max_ctx, d, &[])
+    }
+
+    /// Check a cache out for a specific prompt: on block-budgeted pools
+    /// this walks the shared prefix store, seeds any hit pages
+    /// copy-on-write (the sequence starts with `committed() ==
+    /// prefix_len()` rows it never has to prefill), and refuses
+    /// admission — with block accounting in [`PoolExhausted`] — when
+    /// the *new* pages the prompt needs do not fit the budget.
+    pub fn checkout_for_prompt(
+        &self,
+        n_layers: usize,
+        max_ctx: usize,
+        d: usize,
+        prompt: &[u32],
+    ) -> Result<HostKvCache, PoolExhausted> {
         let mut g = self.inner.lock().unwrap();
         let cap = self.cap;
-        let pool = g.get_or_insert_with(|| CachePool::new(n_layers, max_ctx, d, cap));
+        let kv_blocks = self.kv_blocks;
+        let pool = g.get_or_insert_with(|| match kv_blocks {
+            Some(budget) => CachePool::new_paged(n_layers, max_ctx, d, cap, budget),
+            None => CachePool::new(n_layers, max_ctx, d, cap),
+        });
         if pool.template != (n_layers, max_ctx, d) {
             // heterogeneous shapes (mixed models / per-worker configs):
             // serve a correctly-shaped unpooled cache instead of
@@ -286,13 +717,47 @@ impl SharedCachePool {
             // counts against the cap: the cap bounds live cache memory,
             // not just the template shape.
             if pool.outstanding >= pool.cap {
-                return Err(PoolExhausted { cap: pool.cap });
+                return Err(PoolExhausted {
+                    cap: pool.cap,
+                    blocks_used: 0,
+                    blocks_budget: 0,
+                });
             }
             pool.created += 1;
             pool.outstanding += 1;
             return Ok(HostKvCache::new(n_layers, max_ctx, d));
         }
-        pool.checkout()
+        let mut cache = pool.checkout()?;
+        let Some(bp) = pool.blocks.clone() else { return Ok(cache) };
+        let mut shared = bp.lookup(prompt);
+        // never seed past the usable context
+        shared.truncate(cache.capacity() / bp.block_slots());
+        let needed =
+            bp.blocks_for_prompt(prompt.len(), cache.capacity()).saturating_sub(shared.len());
+        if let Err(mut e) = bp.admit(needed) {
+            e.cap = pool.cap;
+            pool.checkin(cache);
+            return Err(e);
+        }
+        if !shared.is_empty() {
+            let hit = shared.len() * bp.block_slots();
+            cache.seed_prefix(&shared, hit);
+            bp.note_hit(shared.len());
+        }
+        Ok(cache)
+    }
+
+    /// Record a sequence's prompt pages in the shared prefix store so
+    /// later requests with the same prompt prefix ride them.  Call
+    /// after the engine has prefilled (every full prompt chunk within
+    /// `committed()` is published).  No-op on slab pools.
+    pub fn publish_prefix(&self, cache: &HostKvCache, prompt: &[u32]) {
+        let g = self.inner.lock().unwrap();
+        let Some(pool) = g.as_ref() else { return };
+        let Some(bp) = &pool.blocks else { return };
+        if let Some(table) = cache.block_table() {
+            bp.publish(prompt, table, cache.committed());
+        }
     }
 
     pub fn checkin(&self, cache: HostKvCache) {
@@ -307,7 +772,9 @@ impl SharedCachePool {
     /// is no `HostKvCache` to hand back.  Decrements `outstanding` (the
     /// cap must not stay consumed by a dead device thread); the lost
     /// allocation itself is not re-pooled, so a later checkout may
-    /// allocate a replacement within the cap.
+    /// allocate a replacement within the cap.  Paged caches release
+    /// their pages in `Drop` wherever the dispatcher dropped them, so
+    /// the block budget self-heals.
     pub fn forget(&self) {
         let mut g = self.inner.lock().unwrap();
         if let Some(pool) = g.as_mut() {
@@ -329,6 +796,61 @@ impl SharedCachePool {
     pub fn cap(&self) -> usize {
         self.cap
     }
+
+    fn with_blocks<T: Default>(&self, f: impl FnOnce(&BlockPool) -> T) -> T {
+        self.inner
+            .lock()
+            .unwrap()
+            .as_ref()
+            .and_then(|p| p.blocks.as_ref().map(f))
+            .unwrap_or_default()
+    }
+
+    /// Distinct live pages (0 on slab pools).
+    pub fn blocks_used(&self) -> usize {
+        self.with_blocks(|b| b.blocks_used())
+    }
+
+    /// Page-budget headroom (0 on slab pools).
+    pub fn blocks_free(&self) -> usize {
+        self.with_blocks(|b| b.blocks_free())
+    }
+
+    /// High-water mark of live pages (0 on slab pools).
+    pub fn peak_blocks_used(&self) -> usize {
+        self.with_blocks(|b| b.peak_blocks_used())
+    }
+
+    /// Prompt-prefix store hits served so far (0 on slab pools).
+    pub fn prefix_hits(&self) -> u64 {
+        self.with_blocks(|b| b.prefix_hits())
+    }
+
+    /// Total pages handed out by reference from the prefix store.
+    pub fn prefix_blocks_shared(&self) -> u64 {
+        self.with_blocks(|b| b.prefix_blocks_shared())
+    }
+
+    /// Page size in slots (0 on slab pools).
+    pub fn kv_block_slots(&self) -> usize {
+        self.with_blocks(|b| b.block_slots())
+    }
+
+    /// Peak resident KV bytes: live pages at high water for paged
+    /// pools, every slab ever created for slab pools.
+    pub fn resident_kv_bytes(&self) -> usize {
+        let g = self.inner.lock().unwrap();
+        match g.as_ref() {
+            None => 0,
+            Some(p) => match &p.blocks {
+                Some(bp) => bp.peak_blocks_used() * bp.block_bytes(),
+                None => {
+                    let (l, s, d) = p.template;
+                    p.created * 2 * l * s * d * std::mem::size_of::<f32>()
+                }
+            },
+        }
+    }
 }
 
 #[cfg(test)]
@@ -337,6 +859,14 @@ mod tests {
 
     fn mk() -> HostKvCache {
         HostKvCache::new(2, 16, 4) // planes=4, S=16, d=4
+    }
+
+    fn mk_paged(pool: &BlockPool) -> HostKvCache {
+        HostKvCache::new_paged(2, 16, 4, pool)
+    }
+
+    fn small_block_pool(budget: usize) -> BlockPool {
+        BlockPool::new(2, 2, 4, budget) // pages of 2 slots
     }
 
     fn kv_rows(planes: usize, n: usize, d: usize, base: f32) -> Vec<f32> {
@@ -412,6 +942,133 @@ mod tests {
     }
 
     #[test]
+    fn paged_cache_mirrors_slab_semantics() {
+        // the same op sequence on both storages must agree on committed
+        // length and every committed logical byte (rows above committed
+        // are dead in both designs — slab keeps stale garbage there,
+        // paged reads zeros from released pages; the device masks both)
+        let pool = small_block_pool(64);
+        let mut slab = mk();
+        let mut paged = mk_paged(&pool);
+        let kv = kv_rows(4, 3, 4, 1.0);
+        for c in [&mut slab, &mut paged] {
+            c.commit_contiguous(4).unwrap();
+            c.scatter(&kv, &[4, 6, 7]).unwrap();
+            c.compact(&[4, 7]).unwrap();
+            c.truncate(5).unwrap();
+            c.scatter(&kv_rows(4, 1, 4, 9.0), &[5]).unwrap();
+            c.commit_contiguous(1).unwrap();
+        }
+        assert_eq!(slab.committed(), paged.committed());
+        let kv_len = slab.committed();
+        // per-plane collator gathers over the committed region agree
+        for p in 0..4 {
+            let mut a = vec![0.0; kv_len * 4];
+            let mut b = vec![0.0; kv_len * 4];
+            slab.copy_plane_prefix(p, kv_len, &mut a);
+            paged.copy_plane_prefix(p, kv_len, &mut b);
+            assert_eq!(a, b, "plane {p}");
+        }
+        // device snapshots agree row-for-row within the committed region
+        let (sa, sb) = (slab.device_snapshot().into_owned(), paged.device_snapshot().into_owned());
+        for p in 0..4 {
+            let at = |s: &[f32]| s[p * 16 * 4..(p * 16 + kv_len) * 4].to_vec();
+            assert_eq!(at(&sa), at(&sb), "plane {p}");
+        }
+    }
+
+    #[test]
+    fn paged_cache_releases_pages_on_truncate_and_drop() {
+        let pool = small_block_pool(64);
+        let mut c = mk_paged(&pool);
+        c.commit_contiguous(8).unwrap(); // pages 0..4 (2 slots each)
+        assert_eq!(pool.blocks_used(), 4);
+        assert_eq!(c.memory_bytes(), 4 * pool.block_bytes());
+        c.truncate(3).unwrap(); // pages 2,3 now fully above len
+        assert_eq!(pool.blocks_used(), 2);
+        drop(c);
+        assert_eq!(pool.blocks_used(), 0, "drop must return every page");
+    }
+
+    #[test]
+    fn cow_divergence_never_touches_the_shared_page() {
+        let p = SharedCachePool::with_block_budget(8, 64);
+        let prompt = [9u32, 8, 7, 6, 5];
+        // first sequence computes the prompt KV and publishes it
+        let mut c0 = p.checkout_for_prompt(2, 16, 4, &prompt).unwrap();
+        c0.scatter(&kv_rows(4, 5, 4, 0.0), &[0, 1, 2, 3, 4]).unwrap();
+        c0.commit_contiguous(5).unwrap();
+        p.publish_prefix(&c0, &prompt);
+        p.checkin(c0);
+        // two riders share the prefix pages (bs=2 -> 4 slots seeded)
+        let mut a = p.checkout_for_prompt(2, 16, 4, &prompt).unwrap();
+        let b = p.checkout_for_prompt(2, 16, 4, &prompt).unwrap();
+        assert_eq!(a.committed(), 4);
+        assert_eq!(a.prefix_len(), 4);
+        assert_eq!(p.prefix_hits(), 2);
+        assert_eq!(p.prefix_blocks_shared(), 4);
+        let before = b.row(0, 1).to_vec();
+        assert!(a.block_table().unwrap().is_shared(0));
+        // rider A diverges: overwrite a row inside a shared page
+        a.scatter(&kv_rows(4, 1, 4, 500.0), &[1]).unwrap();
+        assert!(!a.block_table().unwrap().is_shared(0), "write must have copied the page");
+        assert_eq!(a.row(0, 1)[0], 500.0);
+        assert_eq!(b.row(0, 1), &before[..], "rider B sees the original page");
+        // a third rider still gets the unmodified store copy
+        let c = p.checkout_for_prompt(2, 16, 4, &prompt).unwrap();
+        assert_eq!(c.row(0, 1), &before[..]);
+        p.checkin(a);
+        p.checkin(b);
+        p.checkin(c);
+        // on retire every non-store reference is refcount-freed: only
+        // the prefix store still pins pages
+        assert_eq!(p.outstanding(), 0);
+        assert_eq!(p.blocks_used(), 2, "only the 2 published pages stay live");
+    }
+
+    #[test]
+    fn shared_prefix_admits_strictly_more_sequences_per_block_budget() {
+        // acceptance: with the SAME 7-page budget, distinct prompts fit
+        // 2 concurrent sequences; a shared prefix fits 3+ because the
+        // prefix pages are counted once
+        let prompt = [1u32, 2, 3, 4, 5]; // needs 3 pages (bs=2, 6 slots)
+        let solo = SharedCachePool::with_block_budget(16, 7);
+        let mut held = Vec::new();
+        for i in 0..2u32 {
+            let distinct: Vec<u32> = prompt.iter().map(|&t| t + 10 * i).collect();
+            let mut c = solo.checkout_for_prompt(2, 16, 4, &distinct).unwrap();
+            c.commit_contiguous(6).unwrap(); // materialize prompt+1 rows
+            held.push(c);
+        }
+        assert_eq!(solo.blocks_used(), 6);
+        let err = solo.checkout_for_prompt(2, 16, 4, &[7u32, 7, 7, 7, 7]).unwrap_err();
+        assert_eq!(err.blocks_used, 6);
+        assert_eq!(err.blocks_budget, 7);
+        assert!(format!("{err}").contains("blocks"));
+
+        let sharing = SharedCachePool::with_block_budget(16, 7);
+        let mut c0 = sharing.checkout_for_prompt(2, 16, 4, &prompt).unwrap();
+        c0.commit_contiguous(6).unwrap();
+        sharing.publish_prefix(&c0, &prompt);
+        sharing.checkin(c0);
+        let mut riders = Vec::new();
+        for _ in 0..3 {
+            let mut c = sharing.checkout_for_prompt(2, 16, 4, &prompt).unwrap();
+            assert_eq!(c.committed(), 4, "prefix pages seeded");
+            c.commit_contiguous(2).unwrap(); // only the tail is new
+            riders.push(c);
+        }
+        assert!(
+            riders.len() > held.len(),
+            "sharing must fit strictly more concurrent sequences"
+        );
+        // 2 shared pages + 3 private tail pages
+        assert_eq!(sharing.blocks_used(), 5);
+        assert!(sharing.prefix_hits() >= 3);
+        drop((held, riders));
+    }
+
+    #[test]
     fn pool_reuses() {
         let mut p = CachePool::new(2, 16, 4, 8);
         let mut a = p.checkout().unwrap();
@@ -442,7 +1099,7 @@ mod tests {
         let b = p.checkout().unwrap();
         assert_eq!(p.outstanding(), 2);
         let err = p.checkout().unwrap_err();
-        assert_eq!(err, PoolExhausted { cap: 2 });
+        assert_eq!(err, PoolExhausted { cap: 2, blocks_used: 0, blocks_budget: 0 });
         assert!(format!("{err}").contains("exhausted"));
         // created never grew past the cap
         assert_eq!(p.created, 2);
@@ -451,6 +1108,22 @@ mod tests {
         let c = p.checkout().unwrap();
         assert_eq!(c.shape(), (2, 16, 4));
         drop(b);
+    }
+
+    #[test]
+    fn paged_pool_checkouts_are_paged_and_wiped_on_checkin() {
+        let mut p = CachePool::new_paged(2, 16, 4, 4, 32);
+        let mut a = p.checkout().unwrap();
+        assert!(a.is_paged());
+        a.commit_contiguous(6).unwrap();
+        let bp = p.block_pool().unwrap().clone();
+        assert!(bp.blocks_used() > 0);
+        p.checkin(a);
+        assert_eq!(bp.blocks_used(), 0, "checkin must release every page");
+        let b = p.checkout().unwrap();
+        assert!(b.is_paged());
+        assert_eq!(b.committed(), 0);
+        assert_eq!(p.created, 1, "wiped cache was reused");
     }
 
     #[test]
@@ -495,5 +1168,25 @@ mod tests {
         assert_eq!(p.outstanding(), 0);
         let c = p.checkout(2, 16, 4).unwrap();
         assert_eq!(c.shape(), (2, 16, 4));
+    }
+
+    #[test]
+    fn slab_pool_metrics_read_zero_and_paged_pool_reports() {
+        let slab = SharedCachePool::new(2);
+        let _a = slab.checkout(2, 16, 4).unwrap();
+        assert_eq!(slab.blocks_used(), 0);
+        assert_eq!(slab.prefix_hits(), 0);
+        assert!(slab.resident_kv_bytes() > 0);
+
+        let paged = SharedCachePool::with_block_budget(2, 16);
+        let mut c = paged.checkout(2, 16, 4).unwrap();
+        c.commit_contiguous(4).unwrap();
+        assert_eq!(paged.kv_block_slots(), 2);
+        assert_eq!(paged.blocks_used(), 2);
+        assert_eq!(paged.blocks_free(), 14);
+        assert_eq!(paged.resident_kv_bytes(), 2 * 2 * 2 * 2 * 4 * 4);
+        paged.checkin(c);
+        assert_eq!(paged.blocks_used(), 0);
+        assert_eq!(paged.peak_blocks_used(), 2);
     }
 }

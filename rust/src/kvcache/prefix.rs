@@ -1,0 +1,121 @@
+//! Cross-request prompt-prefix store: a radix-style tree keyed by
+//! block-sized token chunks.
+//!
+//! Real traffic repeats prompt prefixes constantly — system prompts,
+//! few-shot preambles, multi-turn session resumption — and the KV rows
+//! for a token prefix are a pure function of the tokens and their
+//! positions, so recomputing them per request is waste.  The store maps
+//! each *full* `block_slots`-token prompt chunk to the KV page a
+//! previous sequence computed for it; a later request whose prompt
+//! starts with the same chunks checks those pages out by reference
+//! (copy-on-write — see [`super::HostKvCache::scatter`]) and prefills
+//! only the remainder.
+//!
+//! Structure: the node for `prompt[..k·bs]` is keyed by the token
+//! prefix itself, so a lookup walks chunk by chunk until the first
+//! miss — a radix walk with the edge labels inlined into the keys.
+//! The final prompt token is never served from the store: its forward
+//! pass produces the logits that seed the first generated token, so at
+//! least one prompt position is always recomputed by the rider.
+//!
+//! The store lives inside the [`super::BlockPool`] mutex, shares its
+//! block budget, and is the pool's eviction reserve: when an
+//! allocation would exceed the budget, least-recently-used nodes whose
+//! page no sequence references anymore (`Arc` strong count of exactly
+//! one) are evicted and their buffers recycled.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use super::block::BlockRef;
+
+/// Prefix → KV-page map. All access is serialized by the owning
+/// [`super::BlockPool`]'s mutex; `clock` values are that pool's logical
+/// allocation clock (monotone, deterministic — no wall time).
+#[derive(Debug, Default)]
+pub(crate) struct PrefixStore {
+    /// key: the token prefix `prompt[..k*block_slots]`; value: the KV
+    /// page covering slots `[(k-1)*block_slots, k*block_slots)`.
+    nodes: BTreeMap<Vec<u32>, Node>,
+}
+
+#[derive(Debug)]
+struct Node {
+    block: BlockRef,
+    /// last-touch stamp from the pool's logical clock (LRU eviction)
+    stamp: u64,
+}
+
+impl PrefixStore {
+    /// Longest stored chain of full `block_slots`-token chunks covering
+    /// a *strict* prefix of `prompt`.  Returns the pages in slot order;
+    /// each is an `Arc` clone, so the caller now shares them.
+    pub fn lookup(&mut self, prompt: &[u32], block_slots: usize, clock: u64) -> Vec<BlockRef> {
+        let mut out = Vec::new();
+        let mut end = block_slots;
+        // strictly `<`: the last prompt token is always recomputed
+        while end < prompt.len() {
+            match self.nodes.get_mut(&prompt[..end]) {
+                Some(node) => {
+                    node.stamp = clock;
+                    out.push(Arc::clone(&node.block));
+                }
+                None => break,
+            }
+            end += block_slots;
+        }
+        out
+    }
+
+    /// Record the pages a sequence computed for its prompt: every full
+    /// chunk that is covered by `committed` rows and backed by an
+    /// allocated page is inserted (first writer wins — identical chunks
+    /// produce identical KV, so there is nothing to reconcile).
+    /// Returns how many new nodes were inserted.
+    pub fn publish(
+        &mut self,
+        prompt: &[u32],
+        blocks: &[Option<BlockRef>],
+        committed: usize,
+        block_slots: usize,
+        clock: u64,
+    ) -> usize {
+        let mut inserted = 0;
+        let mut end = block_slots;
+        let mut i = 0;
+        while end < prompt.len() && end <= committed {
+            let Some(Some(block)) = blocks.get(i) else { break };
+            if !self.nodes.contains_key(&prompt[..end]) {
+                self.nodes
+                    .insert(prompt[..end].to_vec(), Node { block: Arc::clone(block), stamp: clock });
+                inserted += 1;
+            }
+            end += block_slots;
+            i += 1;
+        }
+        inserted
+    }
+
+    /// Evict the least-recently-used node whose page nothing else
+    /// references, returning its buffer for recycling.  A node whose
+    /// parent was evicted first simply becomes unreachable to lookups
+    /// and is collected by a later eviction pass — harmless, since its
+    /// page is still budget-accounted until then.
+    pub fn evict_lru(&mut self) -> Option<Vec<f32>> {
+        let key = self
+            .nodes
+            .iter()
+            .filter(|(_, n)| Arc::strong_count(&n.block) == 1)
+            .min_by_key(|(k, n)| (n.stamp, k.to_vec()))
+            .map(|(k, _)| k.clone())?;
+        let node = self.nodes.remove(&key)?;
+        // strong count was 1 and the pool mutex serializes us: unwrap
+        // cannot race a new clone
+        Arc::try_unwrap(node.block).ok()
+    }
+
+    /// Pages currently held by the store (shared or idle).
+    pub fn blocks_held(&self) -> usize {
+        self.nodes.len()
+    }
+}

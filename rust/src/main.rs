@@ -123,6 +123,7 @@ fn print_help() {
            serve       --model M [--port 7878] [--engine ppd] [--workers N]\n\
                        [--max-inflight 4] [--max-queue-age-ms MS] [--fuse-steps]\n\
                        [--shared-runtime] [--pipelined] [--trace-sample]\n\
+                       [--kv-blocks N]\n\
                        continuous batching: each worker interleaves up to\n\
                        --max-inflight sequences one decode step at a time;\n\
                        --fuse-steps batches every in-flight tree step into\n\
@@ -133,7 +134,11 @@ fn print_help() {
                        device execution (double-buffered dispatcher);\n\
                        --trace-sample records request-lifecycle spans into\n\
                        the bounded flight recorder (snapshot via the TCP\n\
-                       `trace` request; load the JSON in Perfetto)\n\
+                       `trace` request; load the JSON in Perfetto);\n\
+                       --kv-blocks switches the KV cache to fixed-size\n\
+                       pages with a hard budget of N live pages: shared\n\
+                       prompt prefixes are prefilled once and referenced\n\
+                       copy-on-write, raising concurrency per byte\n\
            calibrate   --model M [--force]  measure per-bucket forward latency\n\
            sweep       --model M            theoretical-speedup curve vs tree size\n\
            trees       --model M            print the dynamic sparse tree set\n\n\
@@ -215,6 +220,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(ms) = args.get("max-queue-age-ms") {
         let ms: u64 = ms.parse().context("--max-queue-age-ms")?;
         policy.max_queue_age = Some(std::time::Duration::from_millis(ms));
+    }
+    if let Some(b) = args.get("kv-blocks") {
+        policy.kv_blocks = Some(b.parse().context("--kv-blocks")?);
     }
     policy.fuse_steps = args.get("fuse-steps").is_some();
     policy.shared_runtime = args.get("shared-runtime").is_some();

@@ -63,6 +63,10 @@ pub const METRICS: &[MetricDecl] = &[
     ("ppd_shared_runtime", &[], "1 when the shared-runtime dispatcher topology is active"),
     ("ppd_caches_created", &[], "KV caches ever built by the capped pool"),
     ("ppd_caches_outstanding", &[], "KV caches currently checked out"),
+    ("ppd_kvcache_blocks_used", &[], "distinct live KV pages (0 without --kv-blocks)"),
+    ("ppd_kvcache_blocks_free", &[], "KV page budget headroom (0 without --kv-blocks)"),
+    ("ppd_prefix_hits_total", &[], "admissions served shared prompt-prefix pages"),
+    ("ppd_prefix_blocks_shared_total", &[], "KV pages handed out by reference from the prefix store"),
     // -- per-request latency histograms (RequestLatency::to_prometheus)
     ("ppd_request_queue_wait_us", &["le"], "enqueue-to-admission wait, cumulative us buckets"),
     ("ppd_request_ttft_us", &["le"], "enqueue-to-first-token latency, cumulative us buckets"),

@@ -537,7 +537,7 @@ impl Runtime {
                 &it.plan.pos,
                 &it.plan.slots,
                 &it.plan.bias,
-                it.cache.as_slice(),
+                &it.cache.device_snapshot(),
             )?;
             return Ok((vec![out], crate::batch::BatchMeta::default()));
         }
@@ -562,7 +562,7 @@ impl Runtime {
                         &it.plan.pos,
                         &it.plan.slots,
                         &it.plan.bias,
-                        it.cache.as_slice(),
+                        &it.cache.device_snapshot(),
                     )
                 })
                 .collect::<Result<Vec<_>>>()?;

@@ -81,7 +81,8 @@ impl DecodeEngine for MockEngine {
             panic!("mock engine panic");
         }
         cache.reset();
-        cache.commit_contiguous(prompt.len().min(cache.capacity()))?;
+        let want = prompt.len().min(cache.capacity());
+        cache.commit_contiguous(want.saturating_sub(cache.committed()))?;
         std::thread::sleep(self.delay);
         let mut rng = Rng::new(seed);
         let base: u64 = prompt.iter().map(|&t| t as u64).sum();
@@ -498,6 +499,43 @@ fn tcp_trace_roundtrip_returns_chrome_trace_snapshot() {
         .any(|e| named(e, "retire") && e.get("args").and_then(|a| a.get("req")).is_some()));
     assert_eq!(trace.req("displayTimeUnit").unwrap().as_str().unwrap(), "ms");
     assert!(trace.req("otherData").unwrap().get("dropped_events").is_some());
+}
+
+#[test]
+fn paged_coordinator_is_token_exact_and_exports_block_gauges() {
+    // end-to-end --kv-blocks: a coordinator on the paged pool serves
+    // the same tokens as the slab default, and metrics_text exports
+    // live block accounting with real prefix hits (every request
+    // shares the "prompt n" chunk of mk_reqs prompts)
+    let policy = |kv| SchedPolicy { max_inflight: 2, kv_blocks: kv, ..Default::default() };
+    let backend = || Arc::new(MockBackend { delay: Duration::ZERO });
+    let paged = Coordinator::spawn_with_backend_policy(backend(), 1, policy(Some(64)))
+        .expect("spawn paged");
+    let slab = Coordinator::spawn_with_backend_policy(backend(), 1, policy(None))
+        .expect("spawn slab");
+    let a = paged.run_batch(mk_reqs(6)).expect("paged batch");
+    let b = slab.run_batch(mk_reqs(6)).expect("slab batch");
+    assert_eq!(a.len(), 6);
+    for (x, y) in a.iter().zip(&b) {
+        assert!(x.error.is_none(), "{:?}", x.error);
+        assert_eq!(x.tokens, y.tokens, "paged KV perturbed request {}", x.id);
+    }
+    let text = paged.metrics_text();
+    // request 0 publishes the shared chunk; the single worker
+    // serializes admissions, so requests 1-5 all hit it
+    assert!(text.contains("ppd_prefix_hits_total 5\n"), "{text}");
+    assert!(text.contains("ppd_prefix_blocks_shared_total 5\n"), "{text}");
+    // every served cache is back in the pool wiped; only the
+    // store-pinned shared chunk is still a live page
+    assert!(text.contains("ppd_kvcache_blocks_used 1\n"), "{text}");
+    assert!(text.contains("ppd_kvcache_blocks_free 63\n"), "{text}");
+    assert!(paged.resident_kv_bytes() > 0, "paged pool must report resident bytes");
+    assert_eq!(paged.prefix_hits(), 5);
+    // the slab coordinator reports no paged activity on the same gauges
+    let text = slab.metrics_text();
+    assert!(text.contains("ppd_prefix_hits_total 0\n"), "{text}");
+    assert!(text.contains("ppd_kvcache_blocks_used 0\n"), "{text}");
+    assert_eq!(slab.prefix_hits(), 0);
 }
 
 #[test]

@@ -23,7 +23,7 @@ use ppd::batch::collator::{collate, split};
 use ppd::batch::{BatchItem, PlanInputs};
 use ppd::decoding::lookup::chains_to_tree;
 use ppd::decoding::verify::{verify, VerifyMode};
-use ppd::kvcache::HostKvCache;
+use ppd::kvcache::{BlockPool, HostKvCache};
 use ppd::runtime::StepOutput;
 use ppd::tree::builder::AcceptStats;
 use ppd::tree::dynamic::DynamicTreeSet;
@@ -299,6 +299,116 @@ fn prop_cache_scatter_compact_truncate_roundtrip() {
         cache.reset();
         assert_eq!(cache.committed(), 0, "seed {seed}");
         assert_eq!(cache.remaining(), cache.capacity(), "seed {seed}");
+    }
+}
+
+/// Assert that a slab cache and a paged cache hold the same *logical*
+/// contents: equal committed length, and byte-identical committed
+/// regions in every plane.  Rows above `committed` are deliberately
+/// excluded — they are dead in both designs (the slab keeps stale
+/// garbage there, the paged store reads zeros from released pages) and
+/// the device masks them either way.
+fn assert_logically_equal(slab: &HostKvCache, paged: &HostKvCache, ctx: &str) {
+    assert_eq!(slab.committed(), paged.committed(), "{ctx}: committed");
+    let (layers, _, d) = slab.shape();
+    let planes = 2 * layers;
+    let kv = slab.committed();
+    let mut a = vec![0.0f32; kv * d];
+    let mut b = vec![0.0f32; kv * d];
+    for p in 0..planes {
+        slab.copy_plane_prefix(p, kv, &mut a);
+        paged.copy_plane_prefix(p, kv, &mut b);
+        assert_eq!(a, b, "{ctx}: plane {p} committed region");
+    }
+}
+
+#[test]
+fn prop_paged_cache_matches_slab_on_random_ops() {
+    // drive a slab cache and a paged cache (tiny 4-slot pages, so every
+    // operation straddles page boundaries) through identical random
+    // scatter / compact / truncate / prefill-commit sequences: after
+    // every operation the two must agree on the committed logical
+    // contents, and after drop the paged cache must return every page
+    let (layers, s, d) = (2usize, 48usize, 3usize);
+    let planes = 2 * layers;
+    for seed in 0..seeds(30) {
+        let mut rng = Rng::new(seed + 4242);
+        let pool = BlockPool::new(layers, 4, d, 1024);
+        let mut slab = HostKvCache::new(layers, s, d);
+        let mut paged = HostKvCache::new_paged(layers, s, d, &pool);
+        let mut next_val = 1.0f32;
+        for round in 0..16 {
+            let committed = slab.committed();
+            let free = slab.capacity() - committed;
+            let ctx = format!("seed {seed} round {round}");
+            match rng.below(3) {
+                // speculative step: scatter a scratch block, accept a
+                // random increasing subset, compact
+                0 | 1 if free > 0 => {
+                    let k = (1 + rng.below(6)).min(free);
+                    let slots: Vec<u32> =
+                        (0..k).map(|i| (committed + i) as u32).collect();
+                    let mut new_kv = Vec::with_capacity(planes * k * d);
+                    for p in 0..planes {
+                        for i in 0..k {
+                            for c in 0..d {
+                                new_kv.push(next_val + (p * 100 + i * 10 + c) as f32);
+                            }
+                        }
+                    }
+                    next_val += 1000.0;
+                    slab.scatter(&new_kv, &slots).unwrap();
+                    paged.scatter(&new_kv, &slots).unwrap();
+                    // an increasing subset that keeps the root is always
+                    // a valid acceptance path
+                    let mut accepted = vec![slots[0]];
+                    for &sl in slots.iter().skip(1) {
+                        if rng.next_f64() < 0.6 {
+                            accepted.push(sl);
+                        }
+                    }
+                    slab.compact(&accepted).unwrap();
+                    paged.compact(&accepted).unwrap();
+                }
+                // prefill-style step: write rows in place, then commit
+                // them contiguously (prefill always scatters before it
+                // commits, so committed rows are never unwritten)
+                2 if free > 0 => {
+                    let k = (1 + rng.below(4)).min(free);
+                    let slots: Vec<u32> =
+                        (0..k).map(|i| (committed + i) as u32).collect();
+                    let row: Vec<f32> = (0..planes * k * d)
+                        .map(|i| next_val + i as f32)
+                        .collect();
+                    next_val += 1000.0;
+                    slab.scatter(&row, &slots).unwrap();
+                    paged.scatter(&row, &slots).unwrap();
+                    slab.commit_contiguous(k).unwrap();
+                    paged.commit_contiguous(k).unwrap();
+                }
+                _ => {}
+            }
+            assert_logically_equal(&slab, &paged, &ctx);
+            // occasionally truncate (mid-flight abort / retry)
+            if rng.next_f64() < 0.3 && slab.committed() > 0 {
+                let keep = rng.below(slab.committed() + 1);
+                slab.truncate(keep).unwrap();
+                paged.truncate(keep).unwrap();
+                assert_logically_equal(&slab, &paged, &format!("{ctx} truncate"));
+            }
+        }
+        // truncating to the committed length releases every scratch
+        // page, leaving exactly the pages that cover the committed rows
+        let kept = paged.committed();
+        paged.truncate(kept).unwrap();
+        let bs = pool.block_slots();
+        assert_eq!(
+            pool.blocks_used(),
+            (kept + bs - 1) / bs,
+            "seed {seed}: page count after truncate-to-committed ({kept} rows)"
+        );
+        drop(paged);
+        assert_eq!(pool.blocks_used(), 0, "seed {seed}: pages leaked after drop");
     }
 }
 

@@ -206,7 +206,9 @@ impl DecodeEngine for MockEngine {
         }
         cache.reset();
         let committed = prompt.len().min(cache.capacity());
-        cache.commit_contiguous(committed)?;
+        // prefix-aware "prefill": a prefix-seeded paged cache already
+        // holds its first committed() rows, commit only the remainder
+        cache.commit_contiguous(committed.saturating_sub(cache.committed()))?;
         let base: u64 = prompt.iter().map(|&t| t as u64).sum();
         Ok(SeqState::new(
             max_new,
@@ -664,6 +666,78 @@ fn cancelled_inflight_sequence_frees_its_cache() {
 }
 
 #[test]
+fn paged_pool_is_token_exact_for_serial_and_fused_scheduling() {
+    // paged acceptance, host half: swapping the slab pool for a
+    // block-budgeted paged pool is output-transparent on the unfused
+    // and fused step paths at every inflight depth — and the shared
+    // "request " prompt chunk prefills once, so every later admission
+    // hits the prefix store
+    let (_, expect) = workload_reqs(6);
+    for fused in [false, true] {
+        for max_inflight in [1usize, 2, 4] {
+            let mut h =
+                if fused { Harness::fused(max_inflight) } else { Harness::new(max_inflight, None) };
+            h.pool = SharedCachePool::with_block_budget(max_inflight, 256);
+            let (reqs, _) = workload_reqs(6);
+            let resps = h.run_workload(reqs);
+            for (r, want) in resps.iter().zip(&expect) {
+                assert!(r.error.is_none(), "fused={fused} inflight={max_inflight}: {:?}", r.error);
+                assert_eq!(
+                    r.tokens, *want,
+                    "paged pool perturbed request {} (fused={fused}, inflight={max_inflight})",
+                    r.id
+                );
+            }
+            assert_eq!(h.pool.outstanding(), 0);
+            // every retired sequence returned its pages on checkin;
+            // only the store-pinned shared prompt chunk stays resident
+            assert_eq!(h.pool.blocks_used(), 1, "fused={fused} inflight={max_inflight}");
+            assert!(h.pool.peak_blocks_used() > 1, "paged pool never engaged");
+            // request 0 publishes the "request " chunk, requests 1-5 hit it
+            assert_eq!(h.pool.prefix_hits(), 5, "fused={fused} inflight={max_inflight}");
+            assert!(h.pool.prefix_blocks_shared() >= 5);
+        }
+    }
+}
+
+#[test]
+fn cancelled_paged_sequence_returns_its_pages() {
+    // refcount hygiene through cancel: the cancelled sequence's private
+    // pages go back to the pool; its published prompt chunks stay in
+    // the store and serve the next admission of the same prompt
+    for fuse in [false, true] {
+        let mut h = if fuse { Harness::fused(2) } else { Harness::new(2, None) };
+        h.pool = SharedCachePool::with_block_budget(2, 64);
+        let (ok, cancel) = h.admit(mk_req(0, "cancel me mid flight", 50));
+        assert!(ok);
+        h.tick();
+        h.tick();
+        // 20 prompt rows + 2 generated rows = 3 pages at 8 slots/page
+        assert!(h.pool.blocks_used() >= 3, "running sequence holds its pages");
+        cancel.cancel();
+        h.tick();
+        assert_eq!(h.pool.outstanding(), 0, "fuse={fuse}");
+        // the prompt covers 2 whole 8-slot chunks, both published at
+        // admission — exactly those survive the cancel, nothing else
+        assert_eq!(
+            h.pool.blocks_used(),
+            2,
+            "fuse={fuse}: cancel must free every page the store does not pin"
+        );
+        let (ok, _) = h.admit(mk_req(1, "cancel me mid flight", 3));
+        assert!(ok);
+        assert_eq!(
+            h.pool.prefix_hits(),
+            1,
+            "fuse={fuse}: readmission must reuse the cancelled sequence's prompt chunks"
+        );
+        h.drain();
+        assert_eq!(h.pool.outstanding(), 0);
+        assert_eq!(h.pool.blocks_used(), 2, "fuse={fuse}");
+    }
+}
+
+#[test]
 fn panicking_begin_seq_refuses_job_and_keeps_scheduler_alive() {
     let mut h = Harness::new(2, None);
     // prompt token 0 is unreachable from workload::encode on real text;
@@ -902,6 +976,19 @@ impl<E: DeviceExecutor> SharedHarness<E> {
     }
 
     fn build(workers: usize, max_inflight: usize, exec: E, pipelined: bool) -> Self {
+        let pool = Arc::new(SharedCachePool::new(workers * max_inflight));
+        Self::build_with_pool(workers, max_inflight, exec, pipelined, pool)
+    }
+
+    /// `build` with a caller-supplied pool (the paged-KV grids swap in
+    /// a `SharedCachePool::with_block_budget`).
+    fn build_with_pool(
+        workers: usize,
+        max_inflight: usize,
+        exec: E,
+        pipelined: bool,
+        pool: Arc<SharedCachePool>,
+    ) -> Self {
         let dstats = Arc::new(DispatchStats::default());
         let (handle, dispatcher) =
             DeviceDispatcher::channel(DEFAULT_WINDOW, Arc::clone(&dstats));
@@ -911,7 +998,6 @@ impl<E: DeviceExecutor> SharedHarness<E> {
             pipelined,
             ..Default::default()
         };
-        let pool = Arc::new(SharedCachePool::new(workers * max_inflight));
         let stats = Arc::new(QueueStats::new());
         let scheds = (0..workers)
             .map(|w| {
@@ -1041,6 +1127,72 @@ fn shared_runtime_is_token_exact_at_every_worker_and_inflight_depth() {
             // every scheduled step's row went through the dispatcher
             assert_eq!(h.dstats.rows_total(), h.stats.sched_steps_total());
             assert_eq!(h.exec.forwards(), h.dstats.batches_total() as usize);
+        }
+    }
+}
+
+#[test]
+fn paged_pool_is_token_exact_for_shared_and_pipelined_dispatch() {
+    // paged acceptance, dispatcher half: the block-budgeted pool under
+    // the shared-runtime and pipelined tick paths is output-transparent
+    // at workers 1/2/4 × max_inflight 1/2/4, with cross-worker prefix
+    // sharing through the one pool
+    let (_, expect) = workload_reqs(8);
+    for pipelined in [false, true] {
+        for workers in [1usize, 2, 4] {
+            for max_inflight in [1usize, 2, 4] {
+                let pool = Arc::new(SharedCachePool::with_block_budget(
+                    workers * max_inflight,
+                    256,
+                ));
+                let mut h = SharedHarness::build_with_pool(
+                    workers,
+                    max_inflight,
+                    MockExec::new(),
+                    pipelined,
+                    pool,
+                );
+                let (reqs, _) = workload_reqs(8);
+                let mut pending: std::collections::VecDeque<Request> =
+                    reqs.into_iter().collect();
+                while !pending.is_empty() || h.busy() {
+                    for w in 0..workers {
+                        if h.scheds[w].has_capacity() {
+                            if let Some(r) = pending.pop_front() {
+                                assert!(h.admit(w, r).0, "admission refused with free capacity");
+                            }
+                        }
+                    }
+                    h.wall_tick();
+                }
+                let mut resps = h.drain_responses();
+                resps.sort_by_key(|r| r.id);
+                assert_eq!(resps.len(), 8);
+                for (r, want) in resps.iter().zip(&expect) {
+                    assert!(r.error.is_none(), "pipelined={pipelined}: {:?}", r.error);
+                    assert_eq!(
+                        r.tokens, *want,
+                        "paged pool perturbed request {} (pipelined={pipelined}, \
+                         workers={workers}, inflight={max_inflight})",
+                        r.id
+                    );
+                }
+                assert_eq!(h.pool.outstanding(), 0);
+                // retired pages all came back; only the store-pinned
+                // shared prompt chunk is still resident
+                assert_eq!(
+                    h.pool.blocks_used(),
+                    1,
+                    "pipelined={pipelined} workers={workers} inflight={max_inflight}"
+                );
+                // the first admission publishes "request ", all seven
+                // later admissions — across every worker — hit it
+                assert_eq!(
+                    h.pool.prefix_hits(),
+                    7,
+                    "pipelined={pipelined} workers={workers} inflight={max_inflight}"
+                );
+            }
         }
     }
 }

@@ -1,0 +1,11 @@
+// flag-docs fixture: parses three flags; `--hidden-knob` is missing
+// from the fixture README on purpose.
+use std::collections::HashMap;
+
+fn main() {
+    let args: HashMap<String, String> = HashMap::new();
+    let _workers = args.get("workers");
+    let _inflight = args.get("max-inflight");
+    let _hidden = args.get("hidden-knob");
+    println!("usage: fx serve [--workers N] [--max-inflight M] [--hidden-knob X]");
+}

@@ -1,0 +1,6 @@
+// flag-docs fixture: `max_inflight` maps to the parsed --max-inflight;
+// `unmapped_field` has no CLI path and must be flagged.
+pub struct SchedPolicy {
+    pub max_inflight: usize,
+    pub unmapped_field: bool,
+}

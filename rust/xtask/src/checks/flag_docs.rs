@@ -1,0 +1,317 @@
+//! Flag-documentation check: the CLI surface and the README agree.
+//!
+//! Enforced, in both directions:
+//! * every flag the serve binary parses (an `args.get("name")` /
+//!   `self.get("name")` literal in `rust/src/main.rs`) must appear as
+//!   `--name` in README.md — an operator must never need the source to
+//!   discover a knob;
+//! * every `pub` field of `SchedPolicy` must be reachable from some
+//!   parsed flag (`--kebab-case` of the field name, allowing a longer
+//!   unit suffix such as `--max-queue-age-ms` for `max_queue_age`) —
+//!   a policy knob without a CLI path is dead configuration;
+//! * every `--flag` token the README mentions must be parsed by a
+//!   binary in this repo (`main.rs`, or the extra sources — the xtask
+//!   CLI) or belong to a known external tool (cargo, pytest, the
+//!   bench-gate script) — the README must not document ghosts.
+
+use std::path::{Path, PathBuf};
+
+use crate::checks::{rel, Violation};
+use crate::scan::{self, Scan};
+
+/// Flags owned by external tools the README legitimately invokes
+/// (cargo, pytest's repo-local `--fast`, `tools/bench_gate.py --seed`).
+const EXTERNAL_FLAGS: &[&str] = &[
+    "--release",
+    "--features",
+    "--all-features",
+    "--all-targets",
+    "--manifest-path",
+    "--workspace",
+    "--locked",
+    "--offline",
+    "--test",
+    "--lib",
+    "--example",
+    "--examples",
+    "--doc",
+    "--no-deps",
+    "--quiet",
+    "--jobs",
+    "--fast",
+    "--seed",
+];
+
+pub fn check(root: &Path) -> Vec<Violation> {
+    check_paths(
+        &root.join("rust/src/main.rs"),
+        &root.join("rust/src/coordinator/scheduler.rs"),
+        &[root.join("rust/xtask/src/main.rs")],
+        &root.join("README.md"),
+        root,
+    )
+}
+
+pub fn check_paths(
+    main_path: &Path,
+    policy_path: &Path,
+    extra_sources: &[PathBuf],
+    readme_path: &Path,
+    root: &Path,
+) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let main_src = match std::fs::read_to_string(main_path) {
+        Ok(s) => s,
+        Err(e) => {
+            out.push(Violation::new(rel(main_path, root), 0, format!("unreadable: {e}")));
+            return out;
+        }
+    };
+    let main_file = rel(main_path, root);
+    let sc = scan::scan_rust(&main_src);
+    let defined = defined_flags(&sc);
+    if defined.is_empty() {
+        out.push(Violation::new(
+            main_file.clone(),
+            0,
+            "no `get(\"flag\")` reads found — flag extraction is broken".to_string(),
+        ));
+        return out;
+    }
+
+    // everything a repo binary mentions or parses counts as known
+    let mut known: Vec<String> = defined.iter().map(|(f, _)| f.clone()).collect();
+    for lit in &sc.strings {
+        for (tok, _) in flag_tokens(&lit.content) {
+            known.push(tok);
+        }
+    }
+    for path in extra_sources {
+        if let Ok(src) = std::fs::read_to_string(path) {
+            for lit in scan::scan_rust(&src).strings {
+                for (tok, _) in flag_tokens(&lit.content) {
+                    known.push(tok);
+                }
+            }
+        }
+    }
+    known.extend(EXTERNAL_FLAGS.iter().map(|s| s.to_string()));
+    known.sort();
+    known.dedup();
+
+    // README coverage of the parsed surface
+    let readme = match std::fs::read_to_string(readme_path) {
+        Ok(s) => s,
+        Err(e) => {
+            out.push(Violation::new(rel(readme_path, root), 0, format!("unreadable: {e}")));
+            return out;
+        }
+    };
+    let readme_file = rel(readme_path, root);
+    let readme_tokens = flag_tokens(&readme);
+    for (flag, line) in &defined {
+        if !readme_tokens.iter().any(|(t, _)| t == flag) {
+            out.push(Violation::new(
+                main_file.clone(),
+                *line,
+                format!("flag `{flag}` is parsed here but not documented in README.md"),
+            ));
+        }
+    }
+
+    // README must not document flags nothing parses
+    for (tok, line) in &readme_tokens {
+        if !known.contains(tok) {
+            out.push(Violation::new(
+                readme_file.clone(),
+                *line,
+                format!("README documents `{tok}`, which no binary in this repo parses"),
+            ));
+        }
+    }
+
+    // every SchedPolicy knob must be reachable from the CLI
+    match std::fs::read_to_string(policy_path) {
+        Ok(src) => match policy_fields(&src) {
+            Some(fields) => {
+                for field in fields {
+                    let kebab = format!("--{}", field.replace('_', "-"));
+                    let covered = defined.iter().any(|(f, _)| {
+                        f == &kebab || f.starts_with(&format!("{kebab}-"))
+                    });
+                    if !covered {
+                        out.push(Violation::new(
+                            rel(policy_path, root),
+                            0,
+                            format!(
+                                "SchedPolicy field `{field}` has no `{kebab}` flag in \
+                                 {main_file} — policy knobs must be CLI-reachable"
+                            ),
+                        ));
+                    }
+                }
+            }
+            None => out.push(Violation::new(
+                rel(policy_path, root),
+                0,
+                "cannot locate `struct SchedPolicy`".to_string(),
+            )),
+        },
+        Err(e) => out.push(Violation::new(rel(policy_path, root), 0, format!("unreadable: {e}"))),
+    }
+    out
+}
+
+/// Flags the binary parses: string literals that are the direct
+/// argument of a `get(` call and look like a flag name.
+fn defined_flags(sc: &Scan) -> Vec<(String, usize)> {
+    let mut out: Vec<(String, usize)> = Vec::new();
+    for lit in &sc.strings {
+        let before = sc.code[..lit.offset.saturating_sub(1)].trim_end();
+        if !before.ends_with("get(") {
+            continue;
+        }
+        let name = &lit.content;
+        let ok = !name.is_empty()
+            && name.as_bytes()[0].is_ascii_lowercase()
+            && name.bytes().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == b'-');
+        if ok {
+            let flag = format!("--{name}");
+            if !out.iter().any(|(f, _)| f == &flag) {
+                out.push((flag, lit.line));
+            }
+        }
+    }
+    out
+}
+
+/// `--flag` tokens in free text, with their 1-based line numbers.
+fn flag_tokens(text: &str) -> Vec<(String, usize)> {
+    let bytes = text.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while let Some(p) = scan::find_sub(bytes, i, b"--") {
+        i = p + 2;
+        if p > 0 {
+            let prev = bytes[p - 1];
+            if prev.is_ascii_alphanumeric() || prev == b'-' || prev == b'_' {
+                continue;
+            }
+        }
+        let start = p + 2;
+        if start >= bytes.len() || !bytes[start].is_ascii_lowercase() {
+            continue;
+        }
+        let mut end = start;
+        while end < bytes.len()
+            && (bytes[end].is_ascii_lowercase()
+                || bytes[end].is_ascii_digit()
+                || bytes[end] == b'-')
+        {
+            end += 1;
+        }
+        while end > start && bytes[end - 1] == b'-' {
+            end -= 1;
+        }
+        out.push((text[p..end].to_string(), scan::line_of(text, p)));
+        i = end;
+    }
+    out
+}
+
+/// The `pub` field names of `struct SchedPolicy` in `src`.
+fn policy_fields(src: &str) -> Option<Vec<String>> {
+    let sc = scan::scan_rust(src);
+    let bytes = sc.code.as_bytes();
+    let at = scan::find_sub(bytes, 0, b"struct SchedPolicy")?;
+    let open = scan::find_sub(bytes, at, b"{")?;
+    let mut depth = 0i64;
+    let mut close = open;
+    for k in open..bytes.len() {
+        match bytes[k] {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    close = k;
+                    break;
+                }
+            }
+            _ => {}
+        }
+    }
+    let body = &sc.code[open + 1..close];
+    let b = body.as_bytes();
+    let mut fields = Vec::new();
+    for occ in scan::ident_occurrences(body, "pub") {
+        let mut i = occ + 3;
+        while i < b.len() && b[i].is_ascii_whitespace() {
+            i += 1;
+        }
+        let start = i;
+        while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+            i += 1;
+        }
+        let mut j = i;
+        while j < b.len() && b[j].is_ascii_whitespace() {
+            j += 1;
+        }
+        if i > start && j < b.len() && b[j] == b':' {
+            fields.push(body[start..i].to_string());
+        }
+    }
+    Some(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn fixture_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("fixtures/flag_docs")
+    }
+
+    #[test]
+    fn seeded_fixture_violations_are_caught() {
+        let dir = fixture_dir();
+        let v = check_paths(
+            &dir.join("main.rs"),
+            &dir.join("scheduler.rs"),
+            &[],
+            &dir.join("README.md"),
+            &dir,
+        );
+        let msgs: Vec<String> = v.iter().map(Violation::render).collect();
+        assert!(
+            msgs.iter().any(|m| m.contains("`--hidden-knob` is parsed here but not documented")),
+            "{msgs:?}"
+        );
+        assert!(
+            msgs.iter().any(|m| m.contains("`--bogus-flag`, which no binary in this repo parses")),
+            "{msgs:?}"
+        );
+        assert!(
+            msgs.iter().any(|m| m.contains("SchedPolicy field `unmapped_field` has no `--unmapped-field` flag")),
+            "{msgs:?}"
+        );
+        assert_eq!(v.len(), 3, "{msgs:?}");
+    }
+
+    #[test]
+    fn flag_tokens_respect_word_boundaries() {
+        let toks: Vec<String> =
+            flag_tokens("run with `--kv-blocks=256` or --workers 4 -- not --- nor a--b")
+                .into_iter()
+                .map(|(t, _)| t)
+                .collect();
+        assert_eq!(toks, vec!["--kv-blocks".to_string(), "--workers".to_string()]);
+    }
+
+    #[test]
+    fn the_repo_is_clean() {
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../..");
+        let v = check(&root);
+        assert!(v.is_empty(), "{:?}", v.iter().map(Violation::render).collect::<Vec<_>>());
+    }
+}

@@ -1,8 +1,9 @@
-//! The five project-invariant checks `cargo xtask analyze` runs.
+//! The six project-invariant checks `cargo xtask analyze` runs.
 
 pub mod artifact_contract;
 pub mod device_escape;
 pub mod env_mutation;
+pub mod flag_docs;
 pub mod metrics_registry;
 pub mod unwrap_ratchet;
 

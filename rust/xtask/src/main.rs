@@ -1,6 +1,6 @@
 //! `cargo xtask analyze` — the project static-analysis suite.
 //!
-//! Five checks over the whole repo (see ISSUE 6 / README "Static
+//! Six checks over the whole repo (see ISSUE 6 / README "Static
 //! analysis & sanitizers"):
 //!
 //! * `env-mutation`      — no `std::env::set_var`/`remove_var` in rust/
@@ -8,6 +8,7 @@
 //! * `metrics-registry`  — `ppd_*` literals agree with metrics/registry.rs
 //! * `artifact-contract` — aot.py and the rust config parsers agree
 //! * `unwrap-ratchet`    — per-module unwrap counts never grow
+//! * `flag-docs`         — CLI flags and the README agree, both ways
 //!
 //! Exit code 1 when any check finds a violation.  Flags:
 //!
@@ -24,7 +25,7 @@ use checks::Violation;
 fn usage() -> ! {
     eprintln!(
         "usage: cargo xtask analyze [--check NAME] [--root PATH] [--update-baselines]\n\
-         checks: env-mutation device-escape metrics-registry artifact-contract unwrap-ratchet"
+         checks: env-mutation device-escape metrics-registry artifact-contract unwrap-ratchet flag-docs"
     );
     std::process::exit(2);
 }
@@ -54,6 +55,7 @@ fn main() -> ExitCode {
         ("device-escape", checks::device_escape::check),
         ("metrics-registry", checks::metrics_registry::check),
         ("artifact-contract", checks::artifact_contract::check),
+        ("flag-docs", checks::flag_docs::check),
     ];
 
     let mut total = 0usize;

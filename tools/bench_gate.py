@@ -51,6 +51,14 @@ LATENCY_KEYS = (
     "itl_p99_us",
 )
 
+# paged-KV memory accounting: carried (seeded into each point's
+# ``memory`` block) for trend reading, never gated — resident bytes
+# depend on pool high-water timing, which is scheduler-race noisy
+MEMORY_KEYS = (
+    "resident_kv_bytes",
+    "prefix_hits",
+)
+
 
 def load_points(report):
     if report.get("bench") != "sched" or "runs" not in report:
@@ -62,8 +70,8 @@ def load_points(report):
             "device_calls_per_token": float(run["device_calls_per_token"]),
             "tokens_per_s": float(run["tokens_per_s"]),
         }
-        # tolerate older artifacts that predate the latency fields
-        for lk in LATENCY_KEYS:
+        # tolerate older artifacts that predate the latency/memory fields
+        for lk in LATENCY_KEYS + MEMORY_KEYS:
             if lk in run:
                 point[lk] = float(run[lk])
         points[key] = point
@@ -110,6 +118,13 @@ def main():
                 # carried for trend reading; the compare form never
                 # gates on these
                 spec["latency"] = latency
+            memory = {
+                mk: round(fresh[key][mk], 1)
+                for mk in MEMORY_KEYS
+                if mk in fresh[key]
+            }
+            if memory:
+                spec["memory"] = memory
         with open(args.baseline, "w") as f:
             json.dump(baseline, f, indent=2)
             f.write("\n")
@@ -165,6 +180,16 @@ def main():
                 for lk in ("itl_p50_us", "itl_p95_us", "itl_p99_us")
             )
             print(f"  {key:>11}: ttft p50/p95/p99 {ttft} us, itl {itl} us")
+
+    if any(mk in fresh[key] for key in sorted(expected) for mk in MEMORY_KEYS):
+        print("bench_gate: paged-KV memory (informational, never gated)")
+        for key in sorted(expected):
+            point = fresh[key]
+            if not any(mk in point for mk in MEMORY_KEYS):
+                continue
+            kb = point.get("resident_kv_bytes", 0.0) / 1024.0
+            hits = int(point.get("prefix_hits", 0))
+            print(f"  {key:>11}: resident KV {kb:.1f} KiB, prefix hits {hits}")
 
     if failures:
         print("bench_gate: bench trajectory regressed:", file=sys.stderr)
