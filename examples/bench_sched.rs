@@ -4,7 +4,9 @@
 //! Runs the deterministic mock-backend coordinator (no model artifacts
 //! needed) across the scheduling topologies — serial vs fused vs
 //! shared-runtime dispatch vs pipelined shared dispatch vs the paged
-//! prefix-reuse point (`--kv-blocks`), at 1 and 4 workers — and writes
+//! prefix-reuse point (`--kv-blocks`) vs the SLO-scheduled workload mix
+//! (`--sched-policy slo` over the chat/summarize/code trace blend), at
+//! 1 and 4 workers — and writes
 //! one JSON report with tokens/s, device calls per token, mean fused
 //! width, exact p50/p95/p99 TTFT + inter-token latency, and paged-KV
 //! memory accounting (resident bytes, prefix hits) per point.  The report

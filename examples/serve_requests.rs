@@ -69,14 +69,17 @@ fn main() -> Result<()> {
             .iter()
             .take(16)
             .enumerate()
-            .map(|(id, item)| Request::new(id as u64, item.prompt.clone(), max_new))
+            .map(|(id, item)| {
+                Request::builder(item.prompt.clone()).id(id as u64).max_new(max_new).build()
+            })
             .collect();
         let resps = coord.run_batch(reqs)?;
         for resp in &resps {
-            assert!(resp.error.is_none(), "{:?}", resp.error);
-            let latency = Duration::from_secs_f64(resp.queue_s + resp.prefill_s + resp.decode_s);
-            report.record_request(resp.tokens.len(), resp.steps, latency);
-            grand.record_request(resp.tokens.len(), resp.steps, latency);
+            assert!(resp.is_ok(), "{:?}", resp.error_msg());
+            let t = resp.timing;
+            let latency = Duration::from_secs_f64(t.queue_s + t.prefill_s + t.decode_s);
+            report.record_request(resp.tokens().len(), resp.steps(), latency);
+            grand.record_request(resp.tokens().len(), resp.steps(), latency);
         }
         report.wall_s = t0.elapsed().as_secs_f64();
         let h = report.request_latency.as_ref().unwrap();

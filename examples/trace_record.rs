@@ -4,8 +4,9 @@
 //!
 //! Spawns the bench sweep's mock-backend coordinator (no model
 //! artifacts needed), enables trace sampling, serves it over TCP,
-//! drives concurrent generation clients, snapshots the recorder with
-//! the `trace` request, validates the Chrome shape (one `recv` and one
+//! drives concurrent generation clients (each a persistent
+//! [`server::Client`] connection), snapshots the recorder with the
+//! `trace` control line, validates the Chrome shape (one `recv` and one
 //! `retire` event per request), and writes the JSON for Perfetto.
 //!
 //!     cargo run --release --example trace_record [out.json]
@@ -61,13 +62,13 @@ fn main() -> Result<()> {
         let handles: Vec<_> = (0..clients)
             .map(|c| {
                 s.spawn(move || -> Result<()> {
+                    // one persistent connection per client thread; every
+                    // request on it reuses the same socket
+                    let mut client = server::Client::connect(addr)?;
                     for i in 0..requests / clients {
-                        let resp = server::client_request(
-                            addr,
-                            &format!("trace record {c}/{i}"),
-                            max_new,
-                        )?;
-                        if let Some(e) = resp.get("error") {
+                        let resp =
+                            client.request(&format!("trace record {c}/{i}"), max_new)?;
+                        if let Some(e) = resp.json().get("error") {
                             bail!("request {c}/{i} failed: {e}");
                         }
                     }

@@ -36,7 +36,8 @@ use anyhow::{anyhow, bail, Result};
 use crate::batch::dispatch::DeviceExecutor;
 use crate::batch::{BatchItem, BatchStepEngine, PlanInputs, StepPlan, StepResult};
 use crate::coordinator::{
-    serve_jobs, Coordinator, DeviceHost, Request, SchedPolicy, WorkerBackend, WorkerCtx,
+    serve_jobs, Coordinator, DeviceHost, Priority, QueueDiscipline, Request, SchedPolicy,
+    WorkerBackend, WorkerCtx,
 };
 use crate::decoding::{DecodeEngine, FinishReason, SeqState, StepOutcome};
 use crate::kvcache::HostKvCache;
@@ -68,6 +69,13 @@ pub enum SweepMode {
     /// recomputing (the sweep's memory story: `resident_kv_bytes` and
     /// `prefix_hits` go live on this point)
     Prefix,
+    /// `--fuse-steps --sched-policy slo` over the trace-driven workload
+    /// mix ([`workload::WorkloadGen::mix_trace`]): chat/summarize/code
+    /// requests with long-tail output lengths, mapped to SLO priority
+    /// classes and per-tenant fairness buckets.  The point exercises the
+    /// SLO queue discipline under a realistic blend (carried by
+    /// `tools/bench_gate.py`, not gated, until its trajectory seeds)
+    Mix,
 }
 
 impl SweepMode {
@@ -78,16 +86,18 @@ impl SweepMode {
             SweepMode::Shared => "shared",
             SweepMode::Pipelined => "pipelined",
             SweepMode::Prefix => "prefix",
+            SweepMode::Mix => "mix",
         }
     }
 
-    pub fn all() -> [SweepMode; 5] {
+    pub fn all() -> [SweepMode; 6] {
         [
             SweepMode::Serial,
             SweepMode::Fused,
             SweepMode::Shared,
             SweepMode::Pipelined,
             SweepMode::Prefix,
+            SweepMode::Mix,
         ]
     }
 }
@@ -368,10 +378,15 @@ impl WorkerBackend for BenchBackend {
 pub fn spawn_sweep_coordinator(cfg: &SweepConfig) -> Result<Coordinator> {
     let policy = SchedPolicy {
         max_inflight: cfg.max_inflight,
-        fuse_steps: matches!(cfg.mode, SweepMode::Fused | SweepMode::Prefix),
+        fuse_steps: matches!(cfg.mode, SweepMode::Fused | SweepMode::Prefix | SweepMode::Mix),
         shared_runtime: matches!(cfg.mode, SweepMode::Shared | SweepMode::Pipelined),
         pipelined: cfg.mode == SweepMode::Pipelined,
         kv_blocks: (cfg.mode == SweepMode::Prefix).then_some(PREFIX_KV_BLOCKS),
+        sched_policy: if cfg.mode == SweepMode::Mix {
+            QueueDiscipline::Slo
+        } else {
+            QueueDiscipline::Fifo
+        },
         ..Default::default()
     };
     Coordinator::spawn_with_backend_policy(
@@ -391,27 +406,54 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<Json> {
     // keep raw latency samples so the report carries exact interpolated
     // quantiles, not bucket-boundary estimates (must precede any submit)
     coord.request_latency().set_keep_samples(true);
-    let reqs: Vec<Request> = (0..cfg.requests)
-        .map(|i| {
-            // the prefix point models system-prompt traffic: every
-            // request opens with the same preamble, so its KV pages are
-            // computed once and shared by reference
-            let text = match cfg.mode {
-                SweepMode::Prefix => format!("{PREFIX_PREAMBLE}bench request {i}"),
-                _ => format!("bench request {i}"),
-            };
-            Request::new(i as u64, workload::encode(&text), cfg.max_new)
-        })
-        .collect();
+    let reqs: Vec<Request> = if cfg.mode == SweepMode::Mix {
+        // the mix point offers the trace-driven blend: per-request
+        // output budgets come from the trace's long-tail lengths, and
+        // task classes map to SLO priorities + fairness tenants (chat is
+        // the latency-sensitive class; code is throughput traffic).
+        // `run_batch` submits the whole trace at once, so the SLO
+        // discipline — not arrival order — decides pickup.
+        workload::WorkloadGen::new(7)
+            .mix_trace(cfg.requests)
+            .into_iter()
+            .enumerate()
+            .map(|(i, item)| {
+                let (priority, tenant) = match item.kind {
+                    workload::MixKind::Chat => (Priority::High, "chat"),
+                    workload::MixKind::Summarize => (Priority::Normal, "summarize"),
+                    workload::MixKind::Code => (Priority::Low, "code"),
+                };
+                Request::builder(item.prompt)
+                    .id(i as u64)
+                    .max_new(item.max_new)
+                    .priority(priority)
+                    .tenant(tenant)
+                    .build()
+            })
+            .collect()
+    } else {
+        (0..cfg.requests)
+            .map(|i| {
+                // the prefix point models system-prompt traffic: every
+                // request opens with the same preamble, so its KV pages
+                // are computed once and shared by reference
+                let text = match cfg.mode {
+                    SweepMode::Prefix => format!("{PREFIX_PREAMBLE}bench request {i}"),
+                    _ => format!("bench request {i}"),
+                };
+                Request::builder(workload::encode(&text)).id(i as u64).max_new(cfg.max_new).build()
+            })
+            .collect()
+    };
     let t0 = Instant::now();
     let resps = coord.run_batch(reqs)?;
     let wall_s = t0.elapsed().as_secs_f64();
     let mut tokens = 0usize;
     for r in &resps {
-        if let Some(e) = &r.error {
+        if let Some(e) = r.error_msg() {
             bail!("bench request {} failed: {e}", r.id);
         }
-        tokens += r.tokens.len();
+        tokens += r.tokens().len();
     }
     if tokens == 0 {
         bail!("bench produced no tokens");
@@ -556,7 +598,14 @@ mod tests {
                 assert!(j.get(key).is_some(), "{mode:?} missing {key}");
             }
             assert_eq!(j.req("mode").unwrap().as_str().unwrap(), mode.name());
-            assert_eq!(j.req("generated_tokens").unwrap().as_usize().unwrap(), 8 * 6);
+            let tokens = j.req("generated_tokens").unwrap().as_usize().unwrap();
+            if mode == SweepMode::Mix {
+                // mix budgets come from the trace's long-tail lengths,
+                // not the sweep's uniform max_new
+                assert!(tokens > 0, "mix generated no tokens");
+            } else {
+                assert_eq!(tokens, 8 * 6);
+            }
             assert!(j.req("device_calls").unwrap().as_f64().unwrap() > 0.0);
             // latency quantiles are ordered (p50 ≤ p95 ≤ p99) and the
             // multi-step requests must have recorded inter-token gaps

@@ -88,8 +88,11 @@ use crate::workload;
 
 use queue::{Job, Polled, WorkQueue};
 pub use queue::CancelFlag;
-pub use request::{parse_request_line, Request, Response};
-pub use scheduler::{SchedPolicy, StepScheduler, DEFAULT_MAX_INFLIGHT};
+pub use request::{
+    parse_envelope, parse_request_line, Outcome, ParseError, Priority, Request, RequestBuilder,
+    RequestEnvelope, Response, ResponseEvent, Timing,
+};
+pub use scheduler::{QueueDiscipline, SchedPolicy, StepScheduler, DEFAULT_MAX_INFLIGHT};
 
 /// Soft queue bound per worker used by the backpressure-aware submit.
 pub const DEFAULT_QUEUE_PER_WORKER: usize = 64;
@@ -517,6 +520,10 @@ pub struct Coordinator {
     latency: Arc<RequestLatency>,
     /// submission-side track: one Recv instant per accepted request
     server_track: TraceTrack,
+    /// turns served per session id — a session seen before is a
+    /// *resume*, and its admission checkout is expected to hit the
+    /// prefix store instead of re-prefilling the conversation
+    sessions: Mutex<HashMap<String, u64>>,
     workers: Vec<JoinHandle<()>>,
     /// the shared-runtime device-host thread (policy.shared_runtime);
     /// joined after the workers so its request senders are gone first
@@ -579,7 +586,7 @@ impl Coordinator {
         if policy.max_inflight == 0 {
             return Err(anyhow!("max_inflight must be at least 1"));
         }
-        let queue = Arc::new(WorkQueue::new());
+        let queue = Arc::new(WorkQueue::with_discipline(policy.sched_policy));
         // the pool cap is exactly the admission budget: one cache per
         // in-flight sequence, across all workers.  With --kv-blocks the
         // caches are paged and jointly bounded by the page budget too,
@@ -684,6 +691,7 @@ impl Coordinator {
             tracer,
             latency,
             server_track,
+            sessions: Mutex::new(HashMap::new()),
             workers: handles,
             device,
         })
@@ -777,6 +785,23 @@ impl Coordinator {
             self.pool.prefix_blocks_shared()
         ));
         text.push_str(&format!("ppd_queue_capacity {}\n", self.queue_capacity));
+        // streaming + session + SLO-scheduling counters (PR 10)
+        text.push_str(&format!(
+            "ppd_stream_events_total {}\n",
+            self.stats.stream_events_total()
+        ));
+        text.push_str(&format!(
+            "ppd_session_resumes_total {}\n",
+            self.stats.session_resumes_total()
+        ));
+        text.push_str(&format!(
+            "ppd_session_prefix_turn_hits_total {}\n",
+            self.stats.session_prefix_turn_hits_total()
+        ));
+        text.push_str(&format!(
+            "ppd_sched_preemptions_total {}\n",
+            self.queue.preemptions()
+        ));
         text.push_str(&self.latency.to_prometheus());
         text.push_str(&format!(
             "ppd_trace_ring_dropped_total {}\n",
@@ -838,12 +863,78 @@ impl Coordinator {
         reply: mpsc::Sender<Response>,
         cancel: CancelFlag,
     ) -> Result<()> {
+        self.submit_inner(req, reply, cancel, None)
+    }
+
+    /// Streaming submit: `Started`/`Tokens` frames flow through
+    /// `events` as the request progresses, and the terminal `Response`
+    /// still arrives on `reply` (the server synthesizes the terminal
+    /// `Done`/`Error` frame from it, so every retirement path — refuse,
+    /// expiry, worker teardown — closes the stream without extra
+    /// plumbing).
+    pub fn submit_streaming(
+        &self,
+        req: Request,
+        reply: mpsc::Sender<Response>,
+        events: mpsc::Sender<ResponseEvent>,
+        cancel: CancelFlag,
+    ) -> Result<()> {
+        self.submit_inner(req, reply, cancel, Some(events))
+    }
+
+    /// Backpressure-aware [`Coordinator::submit_streaming`]:
+    /// `Ok(false)` when the queue is at capacity.
+    pub fn try_submit_streaming(
+        &self,
+        req: Request,
+        reply: mpsc::Sender<Response>,
+        events: mpsc::Sender<ResponseEvent>,
+        cancel: CancelFlag,
+    ) -> Result<bool> {
+        if self.queue.depth() >= self.queue_capacity {
+            self.stats.on_reject();
+            return Ok(false);
+        }
+        self.submit_inner(req, reply, cancel, Some(events))?;
+        Ok(true)
+    }
+
+    fn submit_inner(
+        &self,
+        req: Request,
+        reply: mpsc::Sender<Response>,
+        cancel: CancelFlag,
+        events: Option<mpsc::Sender<ResponseEvent>>,
+    ) -> Result<()> {
         // one clock read stamps both the Recv instant and the job's
         // enqueue origin, so queue-wait/TTFT/e2e samples and the trace
         // chain share a timeline exactly
         let now_us = self.tracer.now_us();
         self.server_track.instant(Phase::Recv, req.id, 0, 0, now_us);
-        let job = Job { req, enqueued: Instant::now(), enqueue_us: now_us, cancel, reply };
+        // session affinity: count turns per session id so admission can
+        // attribute prefix-store hits to resumed conversations
+        let resumed = match &req.session {
+            Some(sid) => {
+                let mut sessions = self.sessions.lock().unwrap();
+                let turns = sessions.entry(sid.clone()).or_insert(0);
+                let resumed = *turns > 0;
+                *turns += 1;
+                resumed
+            }
+            None => false,
+        };
+        if resumed {
+            self.stats.on_session_resume();
+        }
+        let job = Job {
+            req,
+            enqueued: Instant::now(),
+            enqueue_us: now_us,
+            cancel,
+            reply,
+            events,
+            resumed,
+        };
         match self.queue.push(job) {
             Ok(depth) => {
                 self.stats.on_enqueue(depth);

@@ -3,14 +3,23 @@
 //! offline vendor set).  Submitters push jobs carrying their own reply
 //! channel; workers block on `pop` until a job arrives or the queue is
 //! closed, which is how coordinator shutdown drains the worker pool.
+//!
+//! Job selection follows the coordinator's
+//! [`QueueDiscipline`](super::scheduler::QueueDiscipline): `Fifo` pops
+//! the oldest job (every PR since the seed); `Slo` (`--sched-policy
+//! slo`) picks by (priority class, per-tenant fairness,
+//! shortest-remaining-first, arrival order) — a pick that jumps the
+//! FIFO head counts as a preemption
+//! (`ppd_sched_preemptions_total`).
 
-use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
-use super::request::{Request, Response};
+use super::request::{Request, Response, ResponseEvent};
+use super::scheduler::QueueDiscipline;
 
 /// Shared cancellation handle for one job: the submitter (e.g. the TCP
 /// server noticing a client disconnect) sets it; the step scheduler
@@ -48,11 +57,27 @@ pub struct Job {
     pub enqueue_us: u64,
     pub cancel: CancelFlag,
     pub reply: mpsc::Sender<Response>,
+    /// Streaming sidecar (v2 `"stream": true`): the scheduler sends
+    /// `Started`/`Tokens` frames here as the request progresses; `None`
+    /// keeps the classic terminal-response-only path.
+    pub events: Option<mpsc::Sender<ResponseEvent>>,
+    /// Whether this job resumes a session the coordinator has served a
+    /// turn of before — admission uses it to attribute prefix-store
+    /// hits to session resumption (`ppd_session_prefix_turn_hits_total`).
+    pub resumed: bool,
 }
 
 impl Job {
     pub fn new(req: Request, reply: mpsc::Sender<Response>) -> Self {
-        Job { req, enqueued: Instant::now(), enqueue_us: 0, cancel: CancelFlag::new(), reply }
+        Job {
+            req,
+            enqueued: Instant::now(),
+            enqueue_us: 0,
+            cancel: CancelFlag::new(),
+            reply,
+            events: None,
+            resumed: false,
+        }
     }
 }
 
@@ -69,6 +94,9 @@ pub enum Polled {
 struct Inner {
     jobs: VecDeque<Job>,
     closed: bool,
+    /// jobs handed out per fairness bucket (the `slo` discipline's
+    /// per-tenant counter; jobs without a tenant share one bucket)
+    served_by_tenant: HashMap<String, u64>,
 }
 
 /// MPMC queue: many submitters (TCP connections, batch drivers), many
@@ -77,11 +105,30 @@ struct Inner {
 pub struct WorkQueue {
     inner: Mutex<Inner>,
     cv: Condvar,
+    discipline: QueueDiscipline,
+    /// SLO picks that jumped the FIFO head (a queued job was passed
+    /// over in favor of a higher-priority / shorter / fairer one)
+    preemptions: AtomicU64,
 }
 
 impl WorkQueue {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// A queue running an explicit selection discipline
+    /// (`--sched-policy`).
+    pub fn with_discipline(discipline: QueueDiscipline) -> Self {
+        WorkQueue { discipline, ..Default::default() }
+    }
+
+    pub fn discipline(&self) -> QueueDiscipline {
+        self.discipline
+    }
+
+    /// How many SLO picks jumped the FIFO queue head so far.
+    pub fn preemptions(&self) -> u64 {
+        self.preemptions.load(Ordering::Relaxed)
     }
 
     /// Push a job; returns the queue depth after the push, or the job
@@ -98,12 +145,44 @@ impl WorkQueue {
         Ok(depth)
     }
 
+    /// Select and remove the next job under the queue's discipline.
+    fn take_next(&self, g: &mut Inner) -> Option<Job> {
+        let idx = match self.discipline {
+            QueueDiscipline::Fifo => 0,
+            QueueDiscipline::Slo => {
+                let jobs = &g.jobs;
+                let served = &g.served_by_tenant;
+                let (idx, _) = jobs
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(i, j)| {
+                        let bucket = j.req.tenant.as_deref().unwrap_or("");
+                        let tenant_served = served.get(bucket).copied().unwrap_or(0);
+                        // strict priority classes; fairness balances
+                        // within a class; shortest-remaining-first
+                        // breaks fairness ties; arrival order last
+                        (j.req.priority, tenant_served, j.req.remaining_estimate(), *i)
+                    })?;
+                idx
+            }
+        };
+        let job = g.jobs.remove(idx)?;
+        if idx != 0 {
+            self.preemptions.fetch_add(1, Ordering::Relaxed);
+        }
+        if self.discipline == QueueDiscipline::Slo {
+            let bucket = job.req.tenant.clone().unwrap_or_default();
+            *g.served_by_tenant.entry(bucket).or_insert(0) += 1;
+        }
+        Some(job)
+    }
+
     /// Block until a job is available; `None` once the queue is closed
     /// and drained.
     pub fn pop(&self) -> Option<Job> {
         let mut g = self.inner.lock().unwrap();
         loop {
-            if let Some(job) = g.jobs.pop_front() {
+            if let Some(job) = self.take_next(&mut g) {
                 return Some(job);
             }
             if g.closed {
@@ -117,7 +196,7 @@ impl WorkQueue {
     /// between decode steps without stalling its running sequences.
     pub fn try_pop(&self) -> Polled {
         let mut g = self.inner.lock().unwrap();
-        match g.jobs.pop_front() {
+        match self.take_next(&mut g) {
             Some(job) => Polled::Job(Box::new(job)),
             None if g.closed => Polled::Closed,
             None => Polled::Empty,
@@ -138,11 +217,27 @@ impl WorkQueue {
 
 #[cfg(test)]
 mod tests {
+    use super::super::request::Priority;
     use super::*;
     use std::sync::Arc;
 
     fn job(id: u64, reply: mpsc::Sender<Response>) -> Job {
-        Job::new(Request { id, prompt: vec![1], max_new: 4, seed: 0 }, reply)
+        Job::new(Request::builder(vec![1]).id(id).max_new(4).seed(0).build(), reply)
+    }
+
+    fn slo_job(
+        id: u64,
+        priority: Priority,
+        max_new: usize,
+        tenant: Option<&str>,
+        reply: mpsc::Sender<Response>,
+    ) -> Job {
+        let mut b = Request::builder(vec![1]).id(id).max_new(max_new);
+        b = b.priority(priority);
+        if let Some(t) = tenant {
+            b = b.tenant(t);
+        }
+        Job::new(b.build(), reply)
     }
 
     #[test]
@@ -155,6 +250,7 @@ mod tests {
         assert_eq!(q.pop().unwrap().req.id, 1);
         assert_eq!(q.pop().unwrap().req.id, 2);
         assert_eq!(q.depth(), 0);
+        assert_eq!(q.preemptions(), 0);
     }
 
     #[test]
@@ -169,6 +265,40 @@ mod tests {
         }
         q.close();
         assert!(matches!(q.try_pop(), Polled::Closed));
+    }
+
+    #[test]
+    fn slo_prefers_high_priority_then_short_jobs() {
+        let q = WorkQueue::with_discipline(QueueDiscipline::Slo);
+        let (tx, _rx) = mpsc::channel();
+        q.push(slo_job(1, Priority::Low, 64, None, tx.clone())).unwrap();
+        q.push(slo_job(2, Priority::Normal, 64, None, tx.clone())).unwrap();
+        q.push(slo_job(3, Priority::Normal, 4, None, tx.clone())).unwrap();
+        q.push(slo_job(4, Priority::High, 64, None, tx)).unwrap();
+        // strict class order first; SRF inside the Normal class
+        assert_eq!(q.pop().unwrap().req.id, 4);
+        assert_eq!(q.pop().unwrap().req.id, 3);
+        assert_eq!(q.pop().unwrap().req.id, 2);
+        assert_eq!(q.pop().unwrap().req.id, 1);
+        // jobs 4, 3, and 2 each jumped the queue head (job 1)
+        assert_eq!(q.preemptions(), 3);
+    }
+
+    #[test]
+    fn slo_fairness_rotates_across_tenants() {
+        let q = WorkQueue::with_discipline(QueueDiscipline::Slo);
+        let (tx, _rx) = mpsc::channel();
+        // tenant "a" floods the queue ahead of one "b" job of equal
+        // class and length; after one "a" job is served, "b"'s zero
+        // served-count must win the next pick
+        q.push(slo_job(1, Priority::Normal, 8, Some("a"), tx.clone())).unwrap();
+        q.push(slo_job(2, Priority::Normal, 8, Some("a"), tx.clone())).unwrap();
+        q.push(slo_job(3, Priority::Normal, 8, Some("a"), tx.clone())).unwrap();
+        q.push(slo_job(4, Priority::Normal, 8, Some("b"), tx)).unwrap();
+        assert_eq!(q.pop().unwrap().req.id, 1);
+        assert_eq!(q.pop().unwrap().req.id, 4);
+        assert_eq!(q.pop().unwrap().req.id, 2);
+        assert_eq!(q.pop().unwrap().req.id, 3);
     }
 
     #[test]

@@ -1,6 +1,54 @@
-//! Request/response types flowing through the coordinator.
+//! Request/response types flowing through the coordinator, and the
+//! versioned wire envelope the TCP server parses them from.
+//!
+//! Two protocol versions share one parser:
+//! * **v1** — `{"prompt": "...", "max_new": 64, "seed": 7}` (no `"v"`
+//!   key, or `"v": 1`): one request line in, one [`Response`] line out,
+//!   exactly as every PR since the seed.
+//! * **v2** — `{"v": 2, "prompt": "...", ...}`: adds `stream` (reply as
+//!   newline-delimited [`ResponseEvent`]s instead of one terminal
+//!   line), `session` (multi-turn affinity — a resumed turn checks its
+//!   conversation's KV pages out of the prefix store instead of
+//!   re-prefilling), and the SLO fields `priority` / `deadline_ms` /
+//!   `tenant` consumed by the `--sched-policy slo` queue discipline.
+//!
+//! Any other `"v"` is rejected with the typed
+//! [`ParseError::BadVersion`], never half-parsed.
 
 use crate::util::json::Json;
+
+/// SLO priority class of a request (`--sched-policy slo`).  Declaration
+/// order is scheduling order: the derived `Ord` sorts `High` first, so
+/// the queue can use the class directly as the leading sort key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum Priority {
+    /// latency-sensitive (interactive chat): always admitted first
+    High,
+    #[default]
+    Normal,
+    /// throughput traffic (batch summarize/code jobs): yields the queue
+    /// head to anything more urgent
+    Low,
+}
+
+impl Priority {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "high" => Some(Priority::High),
+            "normal" => Some(Priority::Normal),
+            "low" => Some(Priority::Low),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Normal => "normal",
+            Priority::Low => "low",
+        }
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct Request {
@@ -13,90 +61,449 @@ pub struct Request {
     /// on which worker served it, what ran before it, or which other
     /// sequences it interleaved with.
     pub seed: u64,
+    /// Multi-turn conversation id: turns sharing a session get prefix
+    /// affinity — the coordinator publishes the finished turn's
+    /// prompt+generation KV pages to the prefix store, so the next turn
+    /// of the conversation prefills only its new suffix.
+    pub session: Option<String>,
+    /// SLO class consumed by the `slo` queue discipline; FIFO ignores it.
+    pub priority: Priority,
+    /// Per-request deadline: jobs still queued this many milliseconds
+    /// after submission are dropped at admission (alongside the global
+    /// `--max-queue-age-ms` policy).
+    pub deadline_ms: Option<u64>,
+    /// Fairness bucket for the `slo` discipline's per-tenant counter.
+    pub tenant: Option<String>,
 }
 
 impl Request {
     /// Request with the default per-request seed (derived from the id,
     /// so concurrent sampled requests do not produce identical text).
+    #[deprecated(note = "use `Request::builder(prompt).id(id).max_new(n).build()` — \
+                 the positional constructor predates sessions/priorities")]
     pub fn new(id: u64, prompt: Vec<u32>, max_new: usize) -> Self {
-        Request { id, prompt, max_new, seed: id }
+        Request::builder(prompt).id(id).max_new(max_new).build()
     }
+
+    /// Start building a request from its prompt; every other field has
+    /// a default (`id` 0, `max_new` 64, seed = id, no session/deadline,
+    /// `Priority::Normal`).
+    pub fn builder(prompt: Vec<u32>) -> RequestBuilder {
+        RequestBuilder {
+            id: 0,
+            prompt,
+            max_new: 64,
+            seed: None,
+            session: None,
+            priority: Priority::Normal,
+            deadline_ms: None,
+            tenant: None,
+        }
+    }
+
+    /// Rough cost-to-serve estimate (prompt prefill + token budget) —
+    /// the shortest-remaining-first key of the `slo` queue discipline.
+    pub fn remaining_estimate(&self) -> usize {
+        self.prompt.len() + self.max_new
+    }
+}
+
+/// Builder for [`Request`] — the field count outgrew the positional
+/// constructor when sessions, priorities, and deadlines arrived.
+#[derive(Debug, Clone)]
+pub struct RequestBuilder {
+    id: u64,
+    prompt: Vec<u32>,
+    max_new: usize,
+    seed: Option<u64>,
+    session: Option<String>,
+    priority: Priority,
+    deadline_ms: Option<u64>,
+    tenant: Option<String>,
+}
+
+impl RequestBuilder {
+    pub fn id(mut self, id: u64) -> Self {
+        self.id = id;
+        self
+    }
+
+    pub fn max_new(mut self, n: usize) -> Self {
+        self.max_new = n;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
+        self
+    }
+
+    pub fn priority(mut self, p: Priority) -> Self {
+        self.priority = p;
+        self
+    }
+
+    pub fn session(mut self, sid: impl Into<String>) -> Self {
+        self.session = Some(sid.into());
+        self
+    }
+
+    pub fn deadline_ms(mut self, ms: u64) -> Self {
+        self.deadline_ms = Some(ms);
+        self
+    }
+
+    pub fn tenant(mut self, t: impl Into<String>) -> Self {
+        self.tenant = Some(t.into());
+        self
+    }
+
+    /// Finish the request.  The seed defaults to the id (set the id
+    /// before `build` or the default seed is 0).
+    pub fn build(self) -> Request {
+        Request {
+            id: self.id,
+            prompt: self.prompt,
+            max_new: self.max_new,
+            seed: self.seed.unwrap_or(self.id),
+            session: self.session,
+            priority: self.priority,
+            deadline_ms: self.deadline_ms,
+            tenant: self.tenant,
+        }
+    }
+}
+
+/// How serving a request ended: the generation result, or the error —
+/// never both, never neither (the old flat struct carried eleven fields
+/// plus an `Option<String>` error sidecar whose emptiness *implied*
+/// success).
+#[derive(Debug, Clone)]
+pub enum Outcome {
+    Ok { tokens: Vec<u32>, text: String, steps: usize, tau: f64 },
+    Error(String),
+}
+
+/// Where a request's wall time went, in seconds.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Timing {
+    pub queue_s: f64,
+    pub prefill_s: f64,
+    pub decode_s: f64,
 }
 
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
-    pub tokens: Vec<u32>,
-    pub text: String,
-    pub steps: usize,
-    pub tau: f64,
-    pub decode_s: f64,
-    pub prefill_s: f64,
-    pub queue_s: f64,
+    pub outcome: Outcome,
+    pub timing: Timing,
     /// index of the worker that served the request (observability:
     /// responses complete out of order across workers)
     pub worker: usize,
-    pub error: Option<String>,
 }
 
 impl Response {
     pub fn error(id: u64, msg: String) -> Self {
         Response {
             id,
-            tokens: vec![],
-            text: String::new(),
-            steps: 0,
-            tau: 0.0,
-            decode_s: 0.0,
-            prefill_s: 0.0,
-            queue_s: 0.0,
+            outcome: Outcome::Error(msg),
+            timing: Timing::default(),
             worker: 0,
-            error: Some(msg),
         }
     }
 
+    pub fn is_ok(&self) -> bool {
+        matches!(self.outcome, Outcome::Ok { .. })
+    }
+
+    /// The error message, `None` for served requests.
+    pub fn error_msg(&self) -> Option<&str> {
+        match &self.outcome {
+            Outcome::Error(e) => Some(e),
+            Outcome::Ok { .. } => None,
+        }
+    }
+
+    /// Generated tokens (empty for errors).
+    pub fn tokens(&self) -> &[u32] {
+        match &self.outcome {
+            Outcome::Ok { tokens, .. } => tokens,
+            Outcome::Error(_) => &[],
+        }
+    }
+
+    /// Decoded text (empty for errors).
+    pub fn text(&self) -> &str {
+        match &self.outcome {
+            Outcome::Ok { text, .. } => text,
+            Outcome::Error(_) => "",
+        }
+    }
+
+    pub fn steps(&self) -> usize {
+        match &self.outcome {
+            Outcome::Ok { steps, .. } => *steps,
+            Outcome::Error(_) => 0,
+        }
+    }
+
+    /// Mean accepted tokens per decode step (the paper's τ).
+    pub fn tau(&self) -> f64 {
+        match &self.outcome {
+            Outcome::Ok { tau, .. } => *tau,
+            Outcome::Error(_) => 0.0,
+        }
+    }
+
+    /// The v1 wire shape — identical to the flat pre-redesign struct's
+    /// (`tokens` is the COUNT, `error` present only on failures), so v1
+    /// clients round-trip unchanged against the typed internals.
     pub fn to_json(&self) -> Json {
         let mut pairs = vec![
             ("id", Json::Num(self.id as f64)),
-            ("text", Json::str(&self.text)),
-            ("tokens", Json::Num(self.tokens.len() as f64)),
-            ("steps", Json::Num(self.steps as f64)),
-            ("tau", Json::Num(self.tau)),
-            ("decode_s", Json::Num(self.decode_s)),
-            ("prefill_s", Json::Num(self.prefill_s)),
-            ("queue_s", Json::Num(self.queue_s)),
+            ("text", Json::str(self.text())),
+            ("tokens", Json::Num(self.tokens().len() as f64)),
+            ("steps", Json::Num(self.steps() as f64)),
+            ("tau", Json::Num(self.tau())),
+            ("decode_s", Json::Num(self.timing.decode_s)),
+            ("prefill_s", Json::Num(self.timing.prefill_s)),
+            ("queue_s", Json::Num(self.timing.queue_s)),
             ("worker", Json::Num(self.worker as f64)),
         ];
-        if let Some(e) = &self.error {
+        if let Some(e) = self.error_msg() {
             pairs.push(("error", Json::str(e)));
         }
         Json::obj(pairs)
     }
 }
 
-/// Parse a client request line:
-/// `{"prompt": "...", "max_new": 64, "seed": 7}`
-/// (`max_new` and `seed` optional; seed defaults per request id).
-pub fn parse_request_line(line: &str, id: u64) -> Result<Request, String> {
-    let j = Json::parse(line).map_err(|e| format!("bad json: {e}"))?;
+/// One frame of a v2 streamed reply.  The scheduler emits `Started` and
+/// `Tokens` as the request progresses; the server closes the stream
+/// with exactly one terminal frame (`Done` or `Error`) synthesized from
+/// the final [`Response`].
+#[derive(Debug, Clone)]
+pub enum ResponseEvent {
+    /// the request was admitted onto a worker's step scheduler
+    Started { id: u64, worker: usize },
+    /// tokens accepted by one decode step, in generation order — the
+    /// concatenation of every `Tokens` frame is exactly the final
+    /// response's token sequence (asserted across all four topologies
+    /// by the deterministic harness)
+    Tokens { id: u64, step: usize, accepted: Vec<u32> },
+    /// terminal: the request was served; `stats` is the v1 response
+    /// object (text, counts, timing)
+    Done { id: u64, stats: Json },
+    /// terminal: the request failed
+    Error { id: u64, message: String },
+}
+
+impl ResponseEvent {
+    /// The terminal frame for `resp`: `Done` for served requests,
+    /// `Error` for failures.
+    pub fn terminal(resp: &Response) -> Self {
+        match resp.error_msg() {
+            Some(e) => ResponseEvent::Error { id: resp.id, message: e.to_string() },
+            None => ResponseEvent::Done { id: resp.id, stats: resp.to_json() },
+        }
+    }
+
+    pub fn id(&self) -> u64 {
+        match self {
+            ResponseEvent::Started { id, .. }
+            | ResponseEvent::Tokens { id, .. }
+            | ResponseEvent::Done { id, .. }
+            | ResponseEvent::Error { id, .. } => *id,
+        }
+    }
+
+    /// Terminal frames end the stream for their request.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, ResponseEvent::Done { .. } | ResponseEvent::Error { .. })
+    }
+
+    /// One NDJSON frame: every variant carries `"event"` and `"id"`;
+    /// `Done` flattens the v1 response object into the frame.
+    pub fn to_json(&self) -> Json {
+        match self {
+            ResponseEvent::Started { id, worker } => Json::obj(vec![
+                ("event", Json::str("started")),
+                ("id", Json::Num(*id as f64)),
+                ("worker", Json::Num(*worker as f64)),
+            ]),
+            ResponseEvent::Tokens { id, step, accepted } => Json::obj(vec![
+                ("event", Json::str("tokens")),
+                ("id", Json::Num(*id as f64)),
+                ("step", Json::Num(*step as f64)),
+                (
+                    "accepted",
+                    Json::Arr(accepted.iter().map(|&t| Json::Num(t as f64)).collect()),
+                ),
+            ]),
+            ResponseEvent::Done { id, stats } => {
+                let mut m = match stats {
+                    Json::Obj(m) => m.clone(),
+                    _ => Default::default(),
+                };
+                m.insert("event".into(), Json::str("done"));
+                m.insert("id".into(), Json::Num(*id as f64));
+                Json::Obj(m)
+            }
+            ResponseEvent::Error { id, message } => Json::obj(vec![
+                ("event", Json::str("error")),
+                ("id", Json::Num(*id as f64)),
+                ("error", Json::str(message)),
+            ]),
+        }
+    }
+
+    /// Parse one streamed frame (the client half of `to_json`).
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let id = j
+            .get("id")
+            .and_then(|v| v.as_usize().ok())
+            .ok_or("event frame is missing 'id'")? as u64;
+        match j.get("event").and_then(|v| v.as_str().ok()) {
+            Some("started") => {
+                let worker = j
+                    .get("worker")
+                    .and_then(|v| v.as_usize().ok())
+                    .ok_or("started frame is missing 'worker'")?;
+                Ok(ResponseEvent::Started { id, worker })
+            }
+            Some("tokens") => {
+                let step = j
+                    .get("step")
+                    .and_then(|v| v.as_usize().ok())
+                    .ok_or("tokens frame is missing 'step'")?;
+                let accepted = j
+                    .get("accepted")
+                    .ok_or("tokens frame is missing 'accepted'")?
+                    .as_u32_vec()
+                    .map_err(|e| format!("bad 'accepted': {e}"))?;
+                Ok(ResponseEvent::Tokens { id, step, accepted })
+            }
+            Some("done") => Ok(ResponseEvent::Done { id, stats: j.clone() }),
+            Some("error") => {
+                let message = j
+                    .get("error")
+                    .and_then(|v| v.as_str().ok())
+                    .unwrap_or("unknown error")
+                    .to_string();
+                Ok(ResponseEvent::Error { id, message })
+            }
+            Some(other) => Err(format!("unknown event kind '{other}'")),
+            None => Err("frame is missing 'event'".into()),
+        }
+    }
+}
+
+/// Typed request-parse failure.  `BadVersion` is the protocol-level
+/// rejection (the server answers it distinctly); the rest mirror the
+/// v1 parser's historical messages.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ParseError {
+    BadJson(String),
+    /// the `v` field names a version this server does not speak
+    BadVersion(String),
+    MissingPrompt,
+    EmptyPrompt,
+    /// a typed v2 field carried the wrong type or an unknown value
+    BadField(&'static str),
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ParseError::BadJson(e) => write!(f, "bad json: {e}"),
+            ParseError::BadVersion(v) => {
+                write!(f, "unsupported protocol version {v} (this server speaks v1 and v2)")
+            }
+            ParseError::MissingPrompt => write!(f, "missing 'prompt'"),
+            ParseError::EmptyPrompt => write!(f, "empty prompt after ascii filtering"),
+            ParseError::BadField(k) => write!(f, "bad '{k}' field"),
+        }
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// A parsed request line plus the protocol framing that belongs to the
+/// connection, not the scheduler.
+#[derive(Debug, Clone)]
+pub struct RequestEnvelope {
+    pub req: Request,
+    /// protocol version the client spoke (1 or 2)
+    pub v: u8,
+    /// v2 only: the client's explicit streaming choice (`None` defers
+    /// to the server's `--stream` default; v1 never streams)
+    pub stream: Option<bool>,
+}
+
+/// Parse a client request line under the versioned envelope.  Lines
+/// without a `"v"` key (or with `"v": 1`) take the v1 path: `prompt`
+/// required, `max_new`/`seed` optional, every v2 field ignored — byte
+/// for byte the pre-envelope behavior.  `"v": 2` additionally parses
+/// `stream`/`session`/`priority`/`deadline_ms`/`tenant`.
+pub fn parse_envelope(line: &str, id: u64) -> Result<RequestEnvelope, ParseError> {
+    let j = Json::parse(line).map_err(|e| ParseError::BadJson(e.to_string()))?;
+    let v = match j.get("v") {
+        None => 1,
+        Some(val) => match val.as_usize() {
+            Ok(1) => 1,
+            Ok(2) => 2,
+            _ => return Err(ParseError::BadVersion(format!("{val}"))),
+        },
+    };
     let prompt_text = j
         .get("prompt")
         .and_then(|p| p.as_str().ok())
-        .ok_or("missing 'prompt'")?;
-    let max_new = j
-        .get("max_new")
-        .and_then(|m| m.as_usize().ok())
-        .unwrap_or(64);
-    let seed = j
-        .get("seed")
-        .and_then(|s| s.as_usize().ok())
-        .map(|s| s as u64)
-        .unwrap_or(id);
+        .ok_or(ParseError::MissingPrompt)?;
     let prompt = crate::workload::encode(prompt_text);
     if prompt.is_empty() {
-        return Err("empty prompt after ascii filtering".into());
+        return Err(ParseError::EmptyPrompt);
     }
-    Ok(Request { id, prompt, max_new, seed })
+    let mut b = Request::builder(prompt).id(id);
+    if let Some(m) = j.get("max_new").and_then(|m| m.as_usize().ok()) {
+        b = b.max_new(m);
+    }
+    if let Some(s) = j.get("seed").and_then(|s| s.as_usize().ok()) {
+        b = b.seed(s as u64);
+    }
+    let mut stream = None;
+    if v >= 2 {
+        if let Some(val) = j.get("stream") {
+            stream = Some(val.as_bool().map_err(|_| ParseError::BadField("stream"))?);
+        }
+        if let Some(val) = j.get("session") {
+            b = b.session(val.as_str().map_err(|_| ParseError::BadField("session"))?);
+        }
+        if let Some(val) = j.get("priority") {
+            let p = val
+                .as_str()
+                .ok()
+                .and_then(Priority::parse)
+                .ok_or(ParseError::BadField("priority"))?;
+            b = b.priority(p);
+        }
+        if let Some(val) = j.get("deadline_ms") {
+            let d = val.as_usize().map_err(|_| ParseError::BadField("deadline_ms"))?;
+            b = b.deadline_ms(d as u64);
+        }
+        if let Some(val) = j.get("tenant") {
+            b = b.tenant(val.as_str().map_err(|_| ParseError::BadField("tenant"))?);
+        }
+    }
+    Ok(RequestEnvelope { req: b.build(), v, stream })
+}
+
+/// Parse a v1 client request line:
+/// `{"prompt": "...", "max_new": 64, "seed": 7}`
+/// (`max_new` and `seed` optional; seed defaults per request id).
+/// Thin compatibility wrapper over [`parse_envelope`].
+pub fn parse_request_line(line: &str, id: u64) -> Result<Request, String> {
+    parse_envelope(line, id)
+        .map(|env| env.req)
+        .map_err(|e| e.to_string())
 }
 
 #[cfg(test)]
@@ -110,6 +517,8 @@ mod tests {
         assert_eq!(r.max_new, 8);
         assert_eq!(r.prompt.len(), 8);
         assert_eq!(r.seed, 3); // defaults to the request id
+        assert_eq!(r.priority, Priority::Normal);
+        assert!(r.session.is_none());
     }
 
     #[test]
@@ -132,10 +541,130 @@ mod tests {
     }
 
     #[test]
+    fn v1_lines_ignore_v2_fields() {
+        // pre-envelope clients may carry stray keys; v1 parsing must
+        // not grow new failure modes or new semantics
+        let r = parse_envelope(r#"{"prompt": "x", "session": "s9", "stream": true}"#, 1).unwrap();
+        assert_eq!(r.v, 1);
+        assert_eq!(r.stream, None);
+        assert!(r.req.session.is_none());
+    }
+
+    #[test]
+    fn v2_parses_the_new_fields() {
+        let line = r#"{"v": 2, "prompt": "x", "stream": true, "session": "conv-1",
+                       "priority": "high", "deadline_ms": 250, "tenant": "acme"}"#;
+        let env = parse_envelope(line, 7).unwrap();
+        assert_eq!(env.v, 2);
+        assert_eq!(env.stream, Some(true));
+        assert_eq!(env.req.session.as_deref(), Some("conv-1"));
+        assert_eq!(env.req.priority, Priority::High);
+        assert_eq!(env.req.deadline_ms, Some(250));
+        assert_eq!(env.req.tenant.as_deref(), Some("acme"));
+    }
+
+    #[test]
+    fn malformed_version_is_a_typed_error() {
+        let e = parse_envelope(r#"{"v": 3, "prompt": "x"}"#, 0).unwrap_err();
+        assert!(matches!(e, ParseError::BadVersion(_)), "{e:?}");
+        let e = parse_envelope(r#"{"v": "two", "prompt": "x"}"#, 0).unwrap_err();
+        assert!(matches!(e, ParseError::BadVersion(_)), "{e:?}");
+        // and bad typed fields are BadField, not silently defaulted
+        let e = parse_envelope(r#"{"v": 2, "prompt": "x", "priority": "urgent"}"#, 0).unwrap_err();
+        assert_eq!(e, ParseError::BadField("priority"));
+    }
+
+    #[test]
+    fn builder_covers_every_field_and_defaults_seed_to_id() {
+        let r = Request::builder(vec![1, 2])
+            .id(9)
+            .max_new(5)
+            .priority(Priority::Low)
+            .session("s")
+            .deadline_ms(10)
+            .tenant("t")
+            .build();
+        assert_eq!(r.seed, 9);
+        assert_eq!(r.remaining_estimate(), 7);
+        let explicit = Request::builder(vec![1]).id(9).seed(4).build();
+        assert_eq!(explicit.seed, 4);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn positional_constructor_still_builds_the_same_request() {
+        let r = Request::new(3, vec![1, 2, 3], 8);
+        assert_eq!((r.id, r.max_new, r.seed), (3, 8, 3));
+        assert_eq!(r.priority, Priority::Normal);
+    }
+
+    #[test]
     fn response_json_includes_error() {
         let r = Response::error(7, "boom".into());
+        assert!(!r.is_ok());
         let j = r.to_json();
         assert_eq!(j.req("error").unwrap().as_str().unwrap(), "boom");
         assert_eq!(j.req("worker").unwrap().as_usize().unwrap(), 0);
+    }
+
+    #[test]
+    fn ok_response_wire_shape_is_v1_compatible() {
+        let r = Response {
+            id: 4,
+            outcome: Outcome::Ok {
+                tokens: vec![10, 11, 12],
+                text: "abc".into(),
+                steps: 2,
+                tau: 1.5,
+            },
+            timing: Timing { queue_s: 0.5, prefill_s: 0.25, decode_s: 1.0 },
+            worker: 3,
+        };
+        let j = r.to_json();
+        // `tokens` is the count (the historical v1 contract), no `error`
+        assert_eq!(j.req("tokens").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.req("text").unwrap().as_str().unwrap(), "abc");
+        assert_eq!(j.req("queue_s").unwrap().as_f64().unwrap(), 0.5);
+        assert!(j.get("error").is_none());
+        assert_eq!(r.tokens(), &[10, 11, 12]);
+        assert_eq!(r.steps(), 2);
+    }
+
+    #[test]
+    fn events_round_trip_through_json() {
+        let evs = vec![
+            ResponseEvent::Started { id: 5, worker: 2 },
+            ResponseEvent::Tokens { id: 5, step: 3, accepted: vec![7, 8] },
+            ResponseEvent::Error { id: 5, message: "nope".into() },
+        ];
+        for ev in evs {
+            let parsed = ResponseEvent::from_json(&ev.to_json()).unwrap();
+            assert_eq!(format!("{parsed:?}"), format!("{ev:?}"));
+            assert_eq!(parsed.id(), 5);
+        }
+        // the terminal frame of a served response flattens its stats
+        let resp = Response {
+            id: 6,
+            outcome: Outcome::Ok { tokens: vec![1], text: "a".into(), steps: 1, tau: 1.0 },
+            timing: Timing::default(),
+            worker: 0,
+        };
+        let term = ResponseEvent::terminal(&resp);
+        assert!(term.is_terminal());
+        let j = term.to_json();
+        assert_eq!(j.req("event").unwrap().as_str().unwrap(), "done");
+        assert_eq!(j.req("tokens").unwrap().as_usize().unwrap(), 1);
+        match ResponseEvent::from_json(&j).unwrap() {
+            ResponseEvent::Done { id, stats } => {
+                assert_eq!(id, 6);
+                assert_eq!(stats.req("text").unwrap().as_str().unwrap(), "a");
+            }
+            other => panic!("expected Done, got {other:?}"),
+        }
+        // errors map to the error frame
+        assert!(matches!(
+            ResponseEvent::terminal(&Response::error(9, "x".into())),
+            ResponseEvent::Error { id: 9, .. }
+        ));
     }
 }

@@ -47,7 +47,7 @@ use crate::util::panic_message;
 use crate::workload;
 
 use super::queue::Job;
-use super::request::Response;
+use super::request::{Outcome, Response, ResponseEvent, Timing};
 
 /// Default per-worker in-flight sequence budget (`--max-inflight`).
 pub const DEFAULT_MAX_INFLIGHT: usize = 4;
@@ -95,6 +95,38 @@ pub fn admission_quota(
     (target - running).clamp(1, cap)
 }
 
+/// Which job the work queue hands out next (`--sched-policy`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum QueueDiscipline {
+    /// arrival order (every PR since the seed)
+    #[default]
+    Fifo,
+    /// SLO-aware selection: strict [`super::request::Priority`] classes,
+    /// a per-tenant fairness counter within a class, shortest-remaining
+    /// -first within a fairness tie, arrival order last.  Queue-head
+    /// jumps are counted as `ppd_sched_preemptions_total`.
+    Slo,
+}
+
+impl QueueDiscipline {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "fifo" => Ok(QueueDiscipline::Fifo),
+            "slo" => Ok(QueueDiscipline::Slo),
+            other => Err(anyhow::anyhow!(
+                "unknown scheduling policy '{other}' (expected 'fifo' or 'slo')"
+            )),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            QueueDiscipline::Fifo => "fifo",
+            QueueDiscipline::Slo => "slo",
+        }
+    }
+}
+
 /// Per-worker scheduling policy.
 #[derive(Debug, Clone, Copy)]
 pub struct SchedPolicy {
@@ -133,6 +165,15 @@ pub struct SchedPolicy {
     /// admission refuses requests whose footprint does not fit.
     /// `None` keeps the classic one-slab-per-sequence caches.
     pub kv_blocks: Option<usize>,
+    /// work-queue selection discipline (`--sched-policy fifo|slo`):
+    /// `Slo` picks by priority class / per-tenant fairness / shortest-
+    /// remaining-first instead of arrival order, and admission enforces
+    /// per-request `deadline_ms` expiry
+    pub sched_policy: QueueDiscipline,
+    /// server-side default for v2 requests that do not say `"stream"`
+    /// (`--stream`): reply with newline-delimited `ResponseEvent`s
+    /// instead of one terminal line.  v1 requests never stream.
+    pub stream: bool,
 }
 
 impl Default for SchedPolicy {
@@ -144,6 +185,8 @@ impl Default for SchedPolicy {
             shared_runtime: false,
             pipelined: false,
             kv_blocks: None,
+            sched_policy: QueueDiscipline::Fifo,
+            stream: false,
         }
     }
 }
@@ -180,6 +223,10 @@ struct Inflight {
     seq: SeqState,
     cache: HostKvCache,
     t: ReqTiming,
+    /// generated-token count already sent as `Tokens` stream frames —
+    /// independent of the observer's `tokens_seen` so streaming works
+    /// with or without a trace/latency attachment
+    emitted: usize,
 }
 
 /// One sequence whose tick is in flight at the device dispatcher: its
@@ -190,6 +237,7 @@ struct PendingRow {
     queue_s: f64,
     seq: SeqState,
     t: ReqTiming,
+    emitted: usize,
 }
 
 /// A submitted-but-not-yet-applied shared tick.
@@ -312,6 +360,26 @@ impl StepScheduler {
         fl.t.tokens_seen = n;
     }
 
+    /// Send any not-yet-streamed accepted tokens as one `Tokens` frame
+    /// on the job's event channel (v2 streaming).  Deliberately NOT
+    /// gated on the observer: production workers always attach one, but
+    /// the deterministic harness does not, and streamed framing must be
+    /// token-exact either way.
+    fn stream_emit(&self, fl: &mut Inflight, stats: &QueueStats) {
+        let Some(tx) = &fl.job.events else { return };
+        let n = fl.seq.res.tokens.len();
+        if n <= fl.emitted {
+            return;
+        }
+        stats.on_stream_events(1);
+        let _ = tx.send(ResponseEvent::Tokens {
+            id: fl.job.req.id,
+            step: fl.seq.res.steps,
+            accepted: fl.seq.res.tokens[fl.emitted..].to_vec(),
+        });
+        fl.emitted = n;
+    }
+
     /// Close out one scheduler tick's attribution span on the worker
     /// track (`round` = tick number, `n` = rows the tick touched).
     fn note_tick(&self, start: Option<u64>, rows: u32) {
@@ -393,6 +461,21 @@ impl StepScheduler {
                 return false;
             }
         }
+        // per-request deadline (v2 `deadline_ms`): stale work is
+        // refused before it can occupy a cache or a decode step
+        if let Some(dl) = job.req.deadline_ms {
+            let deadline = Duration::from_millis(dl);
+            if queued > deadline {
+                stats.on_expire();
+                self.refuse(
+                    stats,
+                    job,
+                    queue_s,
+                    format!("dropped: queued {queue_s:.3}s > deadline {dl}ms"),
+                );
+                return false;
+            }
+        }
         let (l, s, d) = engine.cache_shape();
         // prompt-aware checkout: block-budgeted pools seed shared
         // prefix pages and account admission in pages, not slabs
@@ -403,6 +486,12 @@ impl StepScheduler {
                 return false;
             }
         };
+        // a resumed session turn that found its conversation's pages in
+        // the prefix store skipped that much re-prefill — the metric the
+        // session tier is judged by
+        if job.resumed && cache.prefix_len() > 0 {
+            stats.on_session_prefix_turn_hit();
+        }
         let begun = catch_unwind(AssertUnwindSafe(|| {
             engine.begin_seq(&job.req.prompt, job.req.max_new, job.req.seed, &mut cache)
         }));
@@ -428,7 +517,18 @@ impl StepScheduler {
                     o.track.span(Phase::Admit, job.req.id, self.tick_seq, 0, start, now);
                     t.mark_us = now;
                 }
-                self.running.push_back(Inflight { job, queue_s, seq, cache, t });
+                if let Some(tx) = &job.events {
+                    stats.on_stream_events(1);
+                    let _ = tx.send(ResponseEvent::Started {
+                        id: job.req.id,
+                        worker: self.worker,
+                    });
+                }
+                let mut fl = Inflight { job, queue_s, seq, cache, t, emitted: 0 };
+                // engines may accept tokens during prefill — frame them
+                // before the first tick so the stream is gapless
+                self.stream_emit(&mut fl, stats);
+                self.running.push_back(fl);
                 true
             }
             Ok(Err(e)) => {
@@ -521,6 +621,7 @@ impl StepScheduler {
             // the monolithic step is device work from the request's view
             self.note_span(&mut fl.t, Phase::Device, fl.job.req.id);
             self.note_emit(&mut fl);
+            self.stream_emit(&mut fl, stats);
             self.settle(fl, stepped, pool, stats);
         }
         self.note_tick(tick_start, rows);
@@ -560,6 +661,7 @@ impl StepScheduler {
                     }));
                     self.note_span(&mut fl.t, Phase::Device, fl.job.req.id);
                     self.note_emit(&mut fl);
+                    self.stream_emit(&mut fl, stats);
                     self.settle(fl, stepped, pool, stats);
                 }
                 Ok(Err(e)) => self.retire_err(fl, pool, stats, format!("{e:#}")),
@@ -624,6 +726,7 @@ impl StepScheduler {
                     }));
                     self.note_span(&mut fl.t, Phase::Apply, fl.job.req.id);
                     self.note_emit(&mut fl);
+                    self.stream_emit(&mut fl, stats);
                     self.settle(fl, applied, pool, stats);
                 }
             }
@@ -704,9 +807,9 @@ impl StepScheduler {
         let mut rows = Vec::with_capacity(fused.len());
         let mut pend = Vec::with_capacity(fused.len());
         for (fl, plan) in fused {
-            let Inflight { job, queue_s, seq, cache, t } = fl;
+            let Inflight { job, queue_s, seq, cache, t, emitted } = fl;
             rows.push(TickRow { plan, cache });
-            pend.push(PendingRow { job, queue_s, seq, t });
+            pend.push(PendingRow { job, queue_s, seq, t, emitted });
         }
         match dispatch.submit_tick(self.worker, rows) {
             Ok(rx) => {
@@ -728,6 +831,7 @@ impl StepScheduler {
                                 seq: p.seq,
                                 cache,
                                 t: p.t,
+                                emitted: p.emitted,
                             };
                             self.retire_err(
                                 fl,
@@ -782,6 +886,7 @@ impl StepScheduler {
                                         seq: p.seq,
                                         cache,
                                         t: p.t,
+                                        emitted: p.emitted,
                                     };
                                     // attribute the shared device call
                                     // evenly across its riders
@@ -798,6 +903,7 @@ impl StepScheduler {
                                     }));
                                     self.note_span(&mut fl.t, Phase::Apply, fl.job.req.id);
                                     self.note_emit(&mut fl);
+                                    self.stream_emit(&mut fl, stats);
                                     self.settle(fl, applied, pool, stats);
                                 }
                                 None => self.retire_lost(
@@ -847,8 +953,14 @@ impl StepScheduler {
         for p in rows {
             match back.next() {
                 Some(TickRow { cache, .. }) => {
-                    let fl =
-                        Inflight { job: p.job, queue_s: p.queue_s, seq: p.seq, cache, t: p.t };
+                    let fl = Inflight {
+                        job: p.job,
+                        queue_s: p.queue_s,
+                        seq: p.seq,
+                        cache,
+                        t: p.t,
+                        emitted: p.emitted,
+                    };
                     self.retire_err(fl, pool, stats, msg.clone());
                 }
                 None => self.retire_lost(p, pool, stats, msg.clone()),
@@ -872,7 +984,7 @@ impl StepScheduler {
             o.track.span(Phase::Retire, p.job.req.id, self.tick_seq, 0, p.t.mark_us, now);
         }
         let mut resp = Response::error(p.job.req.id, msg);
-        resp.queue_s = p.queue_s;
+        resp.timing.queue_s = p.queue_s;
         resp.worker = self.worker;
         stats.on_complete();
         let _ = p.job.reply.send(resp);
@@ -881,7 +993,7 @@ impl StepScheduler {
     /// Refuse a job that never entered the in-flight set.
     fn refuse(&self, stats: &QueueStats, job: Job, queue_s: f64, msg: String) {
         let mut resp = Response::error(job.req.id, msg);
-        resp.queue_s = queue_s;
+        resp.timing.queue_s = queue_s;
         resp.worker = self.worker;
         stats.on_complete();
         // a submitter that went away just discards its response
@@ -889,25 +1001,32 @@ impl StepScheduler {
     }
 
     fn retire_ok(&self, fl: Inflight, pool: &SharedCachePool, stats: &QueueStats) {
-        let Inflight { job, queue_s, seq, cache, t } = fl;
+        let Inflight { job, queue_s, seq, cache, t, .. } = fl;
+        let r = seq.into_result();
+        // A session turn leaves its full conversation (prompt + reply)
+        // in the prefix store so the next turn of the same conversation
+        // checks those pages out instead of re-prefilling.
+        if job.req.session.is_some() {
+            let mut full = job.req.prompt.clone();
+            full.extend_from_slice(&r.tokens);
+            pool.publish_prefix(&cache, &full);
+        }
         pool.checkin(cache);
         if let Some(o) = &self.observer {
             let now = o.track.now_us();
             o.latency.record_e2e(now.saturating_sub(t.enqueue_us));
             o.track.span(Phase::Retire, job.req.id, self.tick_seq, 0, t.mark_us, now);
         }
-        let r = seq.into_result();
         let resp = Response {
             id: job.req.id,
-            text: workload::decode(&r.tokens),
-            tau: r.tau(),
-            steps: r.steps,
-            decode_s: r.decode_s,
-            prefill_s: r.prefill_s,
-            queue_s,
+            outcome: Outcome::Ok {
+                text: workload::decode(&r.tokens),
+                tau: r.tau(),
+                steps: r.steps,
+                tokens: r.tokens,
+            },
+            timing: Timing { queue_s, prefill_s: r.prefill_s, decode_s: r.decode_s },
             worker: self.worker,
-            tokens: r.tokens,
-            error: None,
         };
         stats.on_complete();
         let _ = job.reply.send(resp);
@@ -923,7 +1042,7 @@ impl StepScheduler {
             o.track.span(Phase::Retire, job.req.id, self.tick_seq, 0, t.mark_us, now);
         }
         let mut resp = Response::error(job.req.id, msg);
-        resp.queue_s = queue_s;
+        resp.timing.queue_s = queue_s;
         resp.worker = self.worker;
         stats.on_complete();
         let _ = job.reply.send(resp);
@@ -961,7 +1080,7 @@ impl Drop for StepScheduler {
                 stats.on_complete();
             }
             let mut resp = Response::error(p.job.req.id, msg.into());
-            resp.queue_s = p.queue_s;
+            resp.timing.queue_s = p.queue_s;
             resp.worker = self.worker;
             let _ = p.job.reply.send(resp);
         }

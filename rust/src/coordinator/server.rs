@@ -1,11 +1,21 @@
-//! Line-protocol TCP server: one JSON request per line, one JSON
-//! response per line.  std-only (tokio is not in the offline vendor
-//! set).  A thread per connection feeds the multi-worker coordinator
-//! through `try_submit_cancellable`: each in-flight request carries its
-//! own reply channel, so concurrent connections are served genuinely in
-//! parallel (up to workers × max-inflight) and each connection only
-//! ever sees its own responses.  Over-capacity submits get an immediate
-//! `error` response instead of unbounded queueing (backpressure).
+//! Line-protocol TCP server: one JSON request per line.  std-only
+//! (tokio is not in the offline vendor set).  A thread per connection
+//! feeds the multi-worker coordinator through the backpressure-aware
+//! submit path: each in-flight request carries its own reply channel,
+//! so concurrent connections are served genuinely in parallel (up to
+//! workers × max-inflight) and each connection only ever sees its own
+//! responses.  Over-capacity submits get an immediate `error` response
+//! instead of unbounded queueing (backpressure).
+//!
+//! Two reply shapes share the connection (see
+//! [`super::request::parse_envelope`] for the envelope):
+//! * **v1** (no `"v"` key, or `"v": 1`) — one [`Response`] line per
+//!   request line, exactly as every PR since the seed.
+//! * **v2 streamed** (`"v": 2` with `"stream": true`, or the server's
+//!   `--stream` default) — newline-delimited [`ResponseEvent`] frames:
+//!   `started`, then `tokens` frames as decode steps accept, closed by
+//!   exactly one terminal `done`/`error` frame.  A v2 line with
+//!   streaming off answers with the single v1 response line.
 //!
 //! **Disconnect cancellation**: while a request is in flight its
 //! handler thread polls the socket for EOF; a client that goes away
@@ -21,14 +31,24 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use super::{parse_request_line, CancelFlag, Coordinator, Response};
+use super::{parse_envelope, CancelFlag, Coordinator, ParseError, Request, Response, ResponseEvent};
+use crate::util::json::Json;
 
 static NEXT_ID: AtomicU64 = AtomicU64::new(1);
 
 /// How often blocked readers wake to check the shutdown flag.
 const READ_TICK: Duration = Duration::from_millis(200);
 
-/// Serve forever (or until `max_requests` responses when Some — used
+/// How often a streaming handler drains its event channel — the upper
+/// bound it adds to inter-token latency on the wire.
+const STREAM_TICK: Duration = Duration::from_millis(5);
+
+/// Streamed-path disconnect probes run every this many quiet stream
+/// ticks: the EOF peek blocks up to the socket's `READ_TICK` timeout,
+/// so probing every tick would stall frame forwarding.
+const GONE_PROBE_TICKS: u32 = 40;
+
+/// Serve forever (or until `max_requests` requests when Some — used
 /// by tests).  Connections are accepted concurrently; the listener
 /// polls so it can notice the stop condition reached by handler
 /// threads, and handlers poll their sockets so an idle connection
@@ -74,8 +94,10 @@ pub fn serve(coord: Coordinator, addr: &str, max_requests: Option<u64>) -> Resul
     Ok(())
 }
 
-/// Handle one connection: requests stream in line by line; responses
+/// Handle one connection: requests stream in line by line; replies
 /// stream back in completion order with ids for client-side matching.
+/// Each request line counts once toward `served`, whether it answered
+/// with one v1 line or a v2 event stream.
 fn handle_conn(
     stream: TcpStream,
     coord: &Coordinator,
@@ -99,13 +121,12 @@ fn handle_conn(
                     if is_metrics_request(trimmed) {
                         // scrapes answer from live counters without
                         // touching the queue; they still count toward
-                        // `max_requests` (every response line does)
+                        // `max_requests` (every handled request does)
                         writeln!(out, "{}", metrics_response(coord))?;
                     } else if is_trace_request(trimmed) {
                         writeln!(out, "{}", trace_response(coord))?;
                     } else {
-                        let resp = serve_line(coord, trimmed, &out);
-                        writeln!(out, "{}", resp.to_json())?;
+                        serve_line(coord, trimmed, &mut out)?;
                     }
                     served.fetch_add(1, Ordering::Relaxed);
                 }
@@ -141,7 +162,7 @@ fn handle_conn(
 /// not silently get a metrics dump instead of its completion).
 fn is_metrics_request(trimmed: &str) -> bool {
     trimmed == "metrics"
-        || crate::util::json::Json::parse(trimmed)
+        || Json::parse(trimmed)
             .ok()
             .and_then(|j| j.get("metrics").and_then(|v| v.as_bool().ok()))
             == Some(true)
@@ -150,11 +171,8 @@ fn is_metrics_request(trimmed: &str) -> bool {
 /// Shared-nothing metrics export: the full Prometheus text block rides
 /// in one JSON line (`{"metrics": "ppd_queue_...\n..."}`), so scrapers
 /// reuse the line protocol instead of needing a second port.
-fn metrics_response(coord: &Coordinator) -> crate::util::json::Json {
-    crate::util::json::Json::obj(vec![(
-        "metrics",
-        crate::util::json::Json::str(&coord.metrics_text()),
-    )])
+fn metrics_response(coord: &Coordinator) -> Json {
+    Json::obj(vec![("metrics", Json::str(&coord.metrics_text()))])
 }
 
 /// Is this line a flight-recorder snapshot request?  Same strict shape
@@ -162,7 +180,7 @@ fn metrics_response(coord: &Coordinator) -> crate::util::json::Json {
 /// other `trace` value belongs to a generation request.
 fn is_trace_request(trimmed: &str) -> bool {
     trimmed == "trace"
-        || crate::util::json::Json::parse(trimmed)
+        || Json::parse(trimmed)
             .ok()
             .and_then(|j| j.get("trace").and_then(|v| v.as_bool().ok()))
             == Some(true)
@@ -171,47 +189,124 @@ fn is_trace_request(trimmed: &str) -> bool {
 /// Trace export: the Chrome trace-event snapshot rides in one JSON line
 /// (`{"trace": {"traceEvents": [...]}}`).  Save the inner object to a
 /// file and open it in Perfetto / `chrome://tracing`.
-fn trace_response(coord: &Coordinator) -> crate::util::json::Json {
-    crate::util::json::Json::obj(vec![("trace", coord.trace_json())])
+fn trace_response(coord: &Coordinator) -> Json {
+    Json::obj(vec![("trace", coord.trace_json())])
 }
 
-fn serve_line(coord: &Coordinator, trimmed: &str, stream: &TcpStream) -> Response {
+/// Parse one generation request line under the versioned envelope and
+/// answer it — one v1 response line, or a v2 event stream.
+fn serve_line(coord: &Coordinator, trimmed: &str, out: &mut TcpStream) -> std::io::Result<()> {
     let id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
-    match parse_request_line(trimmed, id) {
-        Ok(req) => {
-            let (tx, rx) = mpsc::channel();
-            let cancel = CancelFlag::new();
-            match coord.try_submit_cancellable(req, tx, cancel.clone()) {
-                Ok(true) => loop {
-                    match rx.recv_timeout(READ_TICK) {
-                        Ok(resp) => break resp,
-                        Err(mpsc::RecvTimeoutError::Timeout) => {
-                            // while the request is queued/in flight,
-                            // watch the socket: a vanished client flips
-                            // the cancel flag and the scheduler aborts
-                            // the sequence at its next step
-                            if client_gone(stream) {
+    let env = match parse_envelope(trimmed, id) {
+        Ok(env) => env,
+        Err(e) => {
+            // version rejections are protocol-level: answered distinctly
+            // so a misconfigured client can tell "you spoke v3" from
+            // "your prompt was bad"
+            let msg = match &e {
+                ParseError::BadVersion(_) => format!("protocol error: {e}"),
+                _ => e.to_string(),
+            };
+            return writeln!(out, "{}", Response::error(id, msg).to_json());
+        }
+    };
+    // v1 lines never stream; a v2 line defers to the server's --stream
+    // default unless it carries an explicit "stream" choice
+    let stream_mode = env.v >= 2 && env.stream.unwrap_or(coord.policy().stream);
+    if stream_mode {
+        serve_streamed(coord, env.req, out)
+    } else {
+        let resp = serve_oneshot(coord, env.req, out);
+        writeln!(out, "{}", resp.to_json())
+    }
+}
+
+/// The classic request path: submit, block for the terminal response,
+/// watch the socket for disconnect while waiting.
+fn serve_oneshot(coord: &Coordinator, req: Request, stream: &TcpStream) -> Response {
+    let id = req.id;
+    let (tx, rx) = mpsc::channel();
+    let cancel = CancelFlag::new();
+    match coord.try_submit_cancellable(req, tx, cancel.clone()) {
+        Ok(true) => loop {
+            match rx.recv_timeout(READ_TICK) {
+                Ok(resp) => break resp,
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    // while the request is queued/in flight, watch the
+                    // socket: a vanished client flips the cancel flag
+                    // and the scheduler aborts the sequence at its next
+                    // step
+                    if client_gone(stream) {
+                        cancel.cancel();
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    break Response::error(id, "workers gone".into())
+                }
+            }
+        },
+        Ok(false) => Response::error(id, overloaded_msg(coord)),
+        Err(e) => Response::error(id, format!("{e:#}")),
+    }
+}
+
+/// The v2 streamed path: progress frames are forwarded as the scheduler
+/// emits them, and the stream closes with exactly one terminal frame
+/// synthesized from the final [`Response`] — so every retirement path
+/// (refuse, expiry, cancel, worker teardown) closes the stream without
+/// scheduler-side plumbing.
+fn serve_streamed(coord: &Coordinator, req: Request, out: &mut TcpStream) -> std::io::Result<()> {
+    let id = req.id;
+    let (tx, rx) = mpsc::channel();
+    let (etx, erx) = mpsc::channel();
+    let cancel = CancelFlag::new();
+    let resp = match coord.try_submit_streaming(req, tx, etx, cancel.clone()) {
+        Ok(true) => {
+            let mut quiet_ticks = 0u32;
+            loop {
+                let mut progressed = false;
+                while let Ok(ev) = erx.try_recv() {
+                    writeln!(out, "{}", ev.to_json())?;
+                    progressed = true;
+                }
+                match rx.recv_timeout(STREAM_TICK) {
+                    Ok(resp) => break resp,
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        quiet_ticks = if progressed { 0 } else { quiet_ticks + 1 };
+                        // only probe for EOF after a quiet stretch: the
+                        // peek blocks up to READ_TICK, which would gate
+                        // frame forwarding if run every tick
+                        if quiet_ticks >= GONE_PROBE_TICKS {
+                            quiet_ticks = 0;
+                            if client_gone(out) {
                                 cancel.cancel();
                             }
                         }
-                        Err(mpsc::RecvTimeoutError::Disconnected) => {
-                            break Response::error(id, "workers gone".into())
-                        }
                     }
-                },
-                Ok(false) => Response::error(
-                    id,
-                    format!(
-                        "server overloaded: queue depth {} at capacity {}",
-                        coord.queue_stats().depth(),
-                        coord.queue_capacity()
-                    ),
-                ),
-                Err(e) => Response::error(id, format!("{e:#}")),
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        break Response::error(id, "workers gone".into())
+                    }
+                }
             }
         }
-        Err(e) => Response::error(id, e),
+        Ok(false) => Response::error(id, overloaded_msg(coord)),
+        Err(e) => Response::error(id, format!("{e:#}")),
+    };
+    // drain frames that raced the terminal response, then close the
+    // stream with it
+    while let Ok(ev) = erx.try_recv() {
+        writeln!(out, "{}", ev.to_json())?;
     }
+    coord.queue_stats().on_stream_events(1);
+    writeln!(out, "{}", ResponseEvent::terminal(&resp).to_json())
+}
+
+fn overloaded_msg(coord: &Coordinator) -> String {
+    format!(
+        "server overloaded: queue depth {} at capacity {}",
+        coord.queue_stats().depth(),
+        coord.queue_capacity()
+    )
 }
 
 /// EOF probe for disconnect detection: `peek` returns `Ok(0)` once the
@@ -224,8 +319,8 @@ fn serve_line(coord: &Coordinator, trimmed: &str, stream: &TcpStream) -> Respons
 /// (`shutdown(SHUT_WR)` by a client still reading): in this line
 /// protocol an open write side *is* the liveness signal, so a
 /// half-closing client gets its in-flight request cancelled.  Clients
-/// must keep the connection fully open until the response line arrives
-/// (as `client_request` does).
+/// must keep the connection fully open until the terminal line arrives
+/// (as [`Client`] does).
 fn client_gone(stream: &TcpStream) -> bool {
     let mut probe = [0u8; 1];
     match stream.peek(&mut probe) {
@@ -240,41 +335,211 @@ fn client_gone(stream: &TcpStream) -> bool {
     }
 }
 
-/// Minimal client for examples/tests: send one request, read one line.
-pub fn client_request(addr: &str, prompt: &str, max_new: usize) -> Result<crate::util::json::Json> {
-    let mut stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
-    let req = crate::util::json::Json::obj(vec![
-        ("prompt", crate::util::json::Json::str(prompt)),
-        ("max_new", crate::util::json::Json::Num(max_new as f64)),
-    ]);
-    writeln!(stream, "{req}")?;
-    let mut reader = BufReader::new(stream);
-    let mut line = String::new();
-    reader.read_line(&mut line)?;
-    crate::util::json::Json::parse(line.trim())
+/// One request line ready to put on the wire: a v1/v2 generation
+/// request or a metrics/trace control line.  Built with the
+/// constructors + `with_*` chainers so examples and tests never
+/// hand-format protocol JSON.
+#[derive(Debug, Clone)]
+pub struct Envelope(Json);
+
+impl Envelope {
+    /// A v1 generation request (no `"v"` key — the pre-envelope shape).
+    pub fn generate(prompt: &str, max_new: usize) -> Self {
+        Envelope(Json::obj(vec![
+            ("prompt", Json::str(prompt)),
+            ("max_new", Json::Num(max_new as f64)),
+        ]))
+    }
+
+    /// A v2 generation request; add streaming/session/SLO fields with
+    /// the `with_*` chainers.
+    pub fn v2(prompt: &str, max_new: usize) -> Self {
+        Envelope::generate(prompt, max_new).set("v", Json::Num(2.0))
+    }
+
+    /// A metrics scrape line.
+    pub fn metrics() -> Self {
+        Envelope(Json::obj(vec![("metrics", Json::Bool(true))]))
+    }
+
+    /// A flight-recorder snapshot line.
+    pub fn trace() -> Self {
+        Envelope(Json::obj(vec![("trace", Json::Bool(true))]))
+    }
+
+    fn set(mut self, key: &str, val: Json) -> Self {
+        if let Json::Obj(m) = &mut self.0 {
+            m.insert(key.to_string(), val);
+        }
+        self
+    }
+
+    pub fn with_seed(self, seed: u64) -> Self {
+        self.set("seed", Json::Num(seed as f64))
+    }
+
+    /// v2: explicit streaming choice (overrides the server's `--stream`
+    /// default).
+    pub fn with_stream(self, on: bool) -> Self {
+        self.set("stream", Json::Bool(on))
+    }
+
+    /// v2: multi-turn session id (prefix affinity across turns).
+    pub fn with_session(self, sid: &str) -> Self {
+        self.set("session", Json::str(sid))
+    }
+
+    /// v2: SLO priority class (`"high"`/`"normal"`/`"low"`).
+    pub fn with_priority(self, p: &str) -> Self {
+        self.set("priority", Json::str(p))
+    }
+
+    /// v2: drop the request if still queued after this many ms.
+    pub fn with_deadline_ms(self, ms: u64) -> Self {
+        self.set("deadline_ms", Json::Num(ms as f64))
+    }
+
+    /// v2: fairness bucket for the `slo` discipline.
+    pub fn with_tenant(self, t: &str) -> Self {
+        self.set("tenant", Json::str(t))
+    }
+
+    /// The wire line (one JSON object, no trailing newline).
+    pub fn line(&self) -> String {
+        self.0.to_string()
+    }
+}
+
+/// One reply line, parsed.
+#[derive(Debug, Clone)]
+pub struct Reply(Json);
+
+impl Reply {
+    pub fn json(&self) -> &Json {
+        &self.0
+    }
+
+    pub fn into_json(self) -> Json {
+        self.0
+    }
+}
+
+/// Protocol client over one persistent connection.  Every interaction
+/// routes through [`Client::call`] (one line out, one line in) except
+/// [`Client::stream`], which reads event frames until the terminal one.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        let reader = BufReader::new(stream.try_clone().context("cloning stream")?);
+        Ok(Client { reader, writer: stream })
+    }
+
+    /// Send one envelope, read one reply line — the core of every
+    /// non-streaming interaction.
+    pub fn call(&mut self, env: &Envelope) -> Result<Reply> {
+        writeln!(self.writer, "{}", env.line())?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Ok(Reply(Json::parse(line.trim())?))
+    }
+
+    /// Convenience v1 generation call.
+    pub fn request(&mut self, prompt: &str, max_new: usize) -> Result<Reply> {
+        self.call(&Envelope::generate(prompt, max_new))
+    }
+
+    /// Send a streaming envelope and iterate its event frames.  The
+    /// iterator ends after the terminal `done`/`error` frame (or on a
+    /// broken connection), leaving the client ready for the next call.
+    pub fn stream(&mut self, env: &Envelope) -> Result<impl Iterator<Item = ResponseEvent> + '_> {
+        writeln!(self.writer, "{}", env.line())?;
+        Ok(EventStream { reader: &mut self.reader, done: false })
+    }
+
+    /// Scrape the server's metrics line and return the decoded
+    /// Prometheus text block.
+    pub fn metrics(&mut self) -> Result<String> {
+        let r = self.call(&Envelope::metrics())?;
+        Ok(r.json().req("metrics")?.as_str()?.to_string())
+    }
+
+    /// Fetch the flight-recorder snapshot (the Chrome trace-event
+    /// object under `"trace"`), ready to write to a `.json` file for
+    /// Perfetto.
+    pub fn trace(&mut self) -> Result<Json> {
+        let r = self.call(&Envelope::trace())?;
+        Ok(r.json().req("trace")?.clone())
+    }
+}
+
+/// Streamed-reply iterator: yields frames until the terminal one.
+struct EventStream<'a> {
+    reader: &'a mut BufReader<TcpStream>,
+    done: bool,
+}
+
+impl Iterator for EventStream<'_> {
+    type Item = ResponseEvent;
+
+    fn next(&mut self) -> Option<ResponseEvent> {
+        if self.done {
+            return None;
+        }
+        let mut line = String::new();
+        loop {
+            line.clear();
+            match self.reader.read_line(&mut line) {
+                Ok(0) | Err(_) => {
+                    self.done = true;
+                    return None;
+                }
+                Ok(_) => {
+                    let trimmed = line.trim();
+                    if trimmed.is_empty() {
+                        continue;
+                    }
+                    match Json::parse(trimmed)
+                        .ok()
+                        .and_then(|j| ResponseEvent::from_json(&j).ok())
+                    {
+                        Some(ev) => {
+                            self.done = ev.is_terminal();
+                            return Some(ev);
+                        }
+                        None => {
+                            // an unparsable frame poisons the stream;
+                            // stop rather than spin on garbage
+                            self.done = true;
+                            return None;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Minimal one-shot client for examples/tests: send one request, read
+/// one line.  Thin wrapper over [`Client`].
+pub fn client_request(addr: &str, prompt: &str, max_new: usize) -> Result<Json> {
+    let mut c = Client::connect(addr)?;
+    Ok(c.request(prompt, max_new)?.into_json())
 }
 
 /// Scrape the server's metrics line and return the decoded Prometheus
 /// text block.
 pub fn client_metrics(addr: &str) -> Result<String> {
-    let mut stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
-    writeln!(stream, "{}", r#"{"metrics": true}"#)?;
-    let mut reader = BufReader::new(stream);
-    let mut line = String::new();
-    reader.read_line(&mut line)?;
-    let j = crate::util::json::Json::parse(line.trim())?;
-    Ok(j.req("metrics")?.as_str()?.to_string())
+    Client::connect(addr)?.metrics()
 }
 
 /// Fetch the server's flight-recorder snapshot and return the Chrome
 /// trace-event object (the value under `"trace"`), ready to write to a
 /// `.json` file for Perfetto.
-pub fn client_trace(addr: &str) -> Result<crate::util::json::Json> {
-    let mut stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
-    writeln!(stream, "{}", r#"{"trace": true}"#)?;
-    let mut reader = BufReader::new(stream);
-    let mut line = String::new();
-    reader.read_line(&mut line)?;
-    let j = crate::util::json::Json::parse(line.trim())?;
-    Ok(j.req("trace")?.clone())
+pub fn client_trace(addr: &str) -> Result<Json> {
+    Client::connect(addr)?.trace()
 }

@@ -52,7 +52,13 @@ impl Args {
                 flags.insert(k.to_string(), v.to_string());
             } else if matches!(
                 name,
-                "force" | "greedy" | "fuse-steps" | "shared-runtime" | "pipelined" | "trace-sample"
+                "force"
+                    | "greedy"
+                    | "fuse-steps"
+                    | "shared-runtime"
+                    | "pipelined"
+                    | "trace-sample"
+                    | "stream"
             ) {
                 flags.insert(name.to_string(), "true".to_string());
             } else {
@@ -123,7 +129,7 @@ fn print_help() {
            serve       --model M [--port 7878] [--engine ppd] [--workers N]\n\
                        [--max-inflight 4] [--max-queue-age-ms MS] [--fuse-steps]\n\
                        [--shared-runtime] [--pipelined] [--trace-sample]\n\
-                       [--kv-blocks N]\n\
+                       [--kv-blocks N] [--sched-policy fifo|slo] [--stream]\n\
                        continuous batching: each worker interleaves up to\n\
                        --max-inflight sequences one decode step at a time;\n\
                        --fuse-steps batches every in-flight tree step into\n\
@@ -138,7 +144,13 @@ fn print_help() {
                        --kv-blocks switches the KV cache to fixed-size\n\
                        pages with a hard budget of N live pages: shared\n\
                        prompt prefixes are prefilled once and referenced\n\
-                       copy-on-write, raising concurrency per byte\n\
+                       copy-on-write, raising concurrency per byte;\n\
+                       --sched-policy slo replaces FIFO pickup with\n\
+                       priority classes, per-tenant fairness, and\n\
+                       shortest-remaining-first (plus per-request\n\
+                       deadline_ms expiry at admission);\n\
+                       --stream makes v2 requests default to streamed\n\
+                       newline-delimited response events\n\
            calibrate   --model M [--force]  measure per-bucket forward latency\n\
            sweep       --model M            theoretical-speedup curve vs tree size\n\
            trees       --model M            print the dynamic sparse tree set\n\n\
@@ -227,6 +239,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     policy.fuse_steps = args.get("fuse-steps").is_some();
     policy.shared_runtime = args.get("shared-runtime").is_some();
     policy.pipelined = args.get("pipelined").is_some();
+    if let Some(p) = args.get("sched-policy") {
+        policy.sched_policy = ppd::coordinator::QueueDiscipline::parse(p).context("--sched-policy")?;
+    }
+    policy.stream = args.get("stream").is_some();
     if policy.pipelined && !policy.shared_runtime {
         return Err(anyhow::anyhow!("--pipelined requires --shared-runtime"));
     }

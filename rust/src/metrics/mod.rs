@@ -112,6 +112,12 @@ pub struct QueueStats {
     max_fused_batch: AtomicU64,
     /// per-tick fused batch-size histogram
     fused_hist: FusedHist,
+    /// streaming frames (`Started`/`Tokens`/terminal) sent to v2 clients
+    stream_events: AtomicU64,
+    /// submitted requests that resumed an already-seen session
+    session_resumes: AtomicU64,
+    /// resumed session turns whose KV checkout hit cached prefix pages
+    session_prefix_turn_hits: AtomicU64,
 }
 
 /// Histogram slots for the fused batch-size distribution: slot `i`
@@ -211,6 +217,22 @@ impl QueueStats {
         self.cancelled.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record `n` streaming event frames sent toward a v2 client.
+    pub fn on_stream_events(&self, n: usize) {
+        self.stream_events.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// Record a submitted request that resumes a known session.
+    pub fn on_session_resume(&self) {
+        self.session_resumes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a resumed session turn whose checkout found its
+    /// conversation's pages still cached in the prefix store.
+    pub fn on_session_prefix_turn_hit(&self) {
+        self.session_prefix_turn_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Record one fused `forward_batch` call that served `batch`
     /// sequences in a single device dispatch.
     pub fn on_fused_batch(&self, batch: usize) {
@@ -256,6 +278,18 @@ impl QueueStats {
 
     pub fn admitted_total(&self) -> u64 {
         self.admitted.load(Ordering::Relaxed)
+    }
+
+    pub fn stream_events_total(&self) -> u64 {
+        self.stream_events.load(Ordering::Relaxed)
+    }
+
+    pub fn session_resumes_total(&self) -> u64 {
+        self.session_resumes.load(Ordering::Relaxed)
+    }
+
+    pub fn session_prefix_turn_hits_total(&self) -> u64 {
+        self.session_prefix_turn_hits.load(Ordering::Relaxed)
     }
 
     pub fn sched_steps_total(&self) -> u64 {

@@ -67,6 +67,11 @@ pub const METRICS: &[MetricDecl] = &[
     ("ppd_kvcache_blocks_free", &[], "KV page budget headroom (0 without --kv-blocks)"),
     ("ppd_prefix_hits_total", &[], "admissions served shared prompt-prefix pages"),
     ("ppd_prefix_blocks_shared_total", &[], "KV pages handed out by reference from the prefix store"),
+    // -- streaming / sessions / SLO scheduling (Coordinator::metrics_text)
+    ("ppd_stream_events_total", &[], "ResponseEvent frames sent toward v2 streaming clients"),
+    ("ppd_session_resumes_total", &[], "submitted requests that resumed a known session"),
+    ("ppd_session_prefix_turn_hits_total", &[], "resumed session turns whose admission found their conversation's pages in the prefix store"),
+    ("ppd_sched_preemptions_total", &[], "slo-discipline picks that jumped the FIFO queue head"),
     // -- per-request latency histograms (RequestLatency::to_prometheus)
     ("ppd_request_queue_wait_us", &["le"], "enqueue-to-admission wait, cumulative us buckets"),
     ("ppd_request_ttft_us", &["le"], "enqueue-to-first-token latency, cumulative us buckets"),

@@ -80,6 +80,20 @@ impl WorkloadGen {
         encode(text)
     }
 
+    /// A long-document summarization prompt: several generated
+    /// sentences followed by a summarize instruction — the long-prompt
+    /// / short-output end of the serving mix.
+    pub fn summarize_prompt(&mut self) -> Vec<u32> {
+        let n_sentences = self.rng.range(3, 7);
+        let mut doc = String::new();
+        for _ in 0..n_sentences {
+            let s = self.zipf(SUBJECTS);
+            let a = self.zipf(ADJECTIVES);
+            doc.push_str(&format!("{s} looked {a} that day. "));
+        }
+        encode(&format!("document: {doc}\nsummarize the document in one line:\n"))
+    }
+
     pub fn mixed_prompt(&mut self) -> Vec<u32> {
         match self.rng.below(3) {
             0 => self.chat_prompt(),
@@ -87,6 +101,79 @@ impl WorkloadGen {
             _ => self.code_prompt(),
         }
     }
+
+    /// A trace-driven serving mix: `n` requests with bursty arrivals
+    /// (geometric gaps punctuated by zero-gap bursts), long-tail output
+    /// lengths (an occasional request asks for 4× the budget), and a
+    /// chat-heavy chat/summarize/code blend.  Deterministic in the
+    /// generator's seed, so bench sweeps and the SLO scheduler see the
+    /// same offered load run over run.
+    pub fn mix_trace(&mut self, n: usize) -> Vec<MixItem> {
+        let mut t_ms = 0u64;
+        (0..n)
+            .map(|_| {
+                // ~1 in 4 requests arrives in a burst with no gap
+                let gap = if self.rng.below(4) == 0 {
+                    0
+                } else {
+                    4 + self.rng.below(40) as u64
+                };
+                t_ms += gap;
+                let kind = match self.rng.weighted(&[0.6, 0.25, 0.15]) {
+                    0 => MixKind::Chat,
+                    1 => MixKind::Summarize,
+                    _ => MixKind::Code,
+                };
+                let prompt = match kind {
+                    MixKind::Chat => self.chat_prompt(),
+                    MixKind::Summarize => self.summarize_prompt(),
+                    MixKind::Code => self.code_prompt(),
+                };
+                let base = match kind {
+                    // interactive turns are short; summaries shorter
+                    // still; code completions run longer
+                    MixKind::Chat => 6,
+                    MixKind::Summarize => 4,
+                    MixKind::Code => 8,
+                };
+                // long-tail output lengths: 1 in 8 requests wants 4×
+                let max_new = if self.rng.below(8) == 0 { base * 4 } else { base };
+                MixItem { kind, prompt, max_new, arrival_ms: t_ms }
+            })
+            .collect()
+    }
+}
+
+/// Task class of one [`MixItem`].  The bench layer maps classes to SLO
+/// priorities/tenants; the workload layer stays independent of the
+/// coordinator's types.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MixKind {
+    Chat,
+    Summarize,
+    Code,
+}
+
+impl MixKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            MixKind::Chat => "chat",
+            MixKind::Summarize => "summarize",
+            MixKind::Code => "code",
+        }
+    }
+}
+
+/// One request of a trace-driven serving mix ([`WorkloadGen::mix_trace`]):
+/// what to ask, how much to generate, and when it arrives relative to
+/// the trace start.
+#[derive(Debug, Clone)]
+pub struct MixItem {
+    pub kind: MixKind,
+    pub prompt: Vec<u32>,
+    pub max_new: usize,
+    /// arrival offset from the trace start, in milliseconds
+    pub arrival_ms: u64,
 }
 
 /// Byte-level encode (identity over ASCII).
@@ -137,6 +224,28 @@ mod tests {
         for _ in 0..10 {
             assert!(g.mixed_prompt().iter().all(|&t| t < 128));
         }
+    }
+
+    #[test]
+    fn mix_trace_is_deterministic_and_bursty() {
+        let a = WorkloadGen::new(11).mix_trace(64);
+        let b = WorkloadGen::new(11).mix_trace(64);
+        assert_eq!(a.len(), 64);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.kind, y.kind);
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.max_new, y.max_new);
+            assert_eq!(x.arrival_ms, y.arrival_ms);
+        }
+        // arrivals are monotone, and bursts (zero gaps) happen
+        assert!(a.windows(2).all(|w| w[0].arrival_ms <= w[1].arrival_ms));
+        assert!(a.windows(2).any(|w| w[0].arrival_ms == w[1].arrival_ms));
+        // the blend covers every class and the length tail fires
+        for kind in [MixKind::Chat, MixKind::Summarize, MixKind::Code] {
+            assert!(a.iter().any(|i| i.kind == kind), "missing {kind:?}");
+        }
+        assert!(a.iter().any(|i| i.max_new >= 16), "no long-tail request");
+        assert!(a.iter().all(|i| !i.prompt.is_empty()));
     }
 
     #[test]

@@ -182,7 +182,12 @@ fn expected_tokens(prompt: &[u32], max_new: usize, seed: u64) -> Vec<u32> {
 
 fn mk_reqs(n: usize) -> Vec<Request> {
     (0..n as u64)
-        .map(|i| Request::new(i, workload::encode(&format!("prompt number {i}")), 8))
+        .map(|i| {
+            Request::builder(workload::encode(&format!("prompt number {i}")))
+                .id(i)
+                .max_new(8)
+                .build()
+        })
         .collect()
 }
 
@@ -199,8 +204,8 @@ fn batch_is_reassembled_by_id_across_workers() {
     let mut workers_seen = std::collections::HashSet::new();
     for (i, resp) in resps.iter().enumerate() {
         assert_eq!(resp.id, i as u64, "responses must be reassembled in request order");
-        assert!(resp.error.is_none(), "{:?}", resp.error);
-        assert_eq!(resp.tokens, expect[i], "request {i} got another request's output");
+        assert!(resp.is_ok(), "{:?}", resp.error_msg());
+        assert_eq!(resp.tokens(), &expect[i][..], "request {i} got another request's output");
         workers_seen.insert(resp.worker);
     }
     assert!(
@@ -217,8 +222,8 @@ fn multi_worker_matches_single_worker_byte_for_byte() {
     let b = single.run_batch(mk_reqs(12)).expect("single");
     for (x, y) in a.iter().zip(&b) {
         assert_eq!(x.id, y.id);
-        assert_eq!(x.tokens, y.tokens);
-        assert_eq!(x.text, y.text);
+        assert_eq!(x.tokens(), y.tokens());
+        assert_eq!(x.text(), y.text());
     }
 }
 
@@ -254,7 +259,7 @@ fn identical_seeds_identical_outputs_regardless_of_worker() {
     // same (prompt, max_new, seed) under different ids: every response
     // must be identical no matter which worker picked it up
     let reqs: Vec<Request> = (0..16u64)
-        .map(|i| Request { id: i, prompt: prompt.clone(), max_new: 8, seed: 42 })
+        .map(|i| Request::builder(prompt.clone()).id(i).max_new(8).seed(42).build())
         .collect();
     let resps = coord.run_batch(reqs).expect("batch");
     let workers_seen: std::collections::HashSet<usize> =
@@ -262,7 +267,7 @@ fn identical_seeds_identical_outputs_regardless_of_worker() {
     assert!(workers_seen.len() >= 2, "need >=2 workers to make the point");
     let want = expected_tokens(&prompt, 8, 42);
     for r in &resps {
-        assert_eq!(r.tokens, want);
+        assert_eq!(r.tokens(), &want[..]);
     }
     // and a different seed changes the sampled output
     let other = expected_tokens(&prompt, 8, 43);
@@ -276,16 +281,16 @@ fn backpressure_rejects_over_capacity() {
     let (tx, rx) = std::sync::mpsc::channel();
     // first job: picked up by the (only) worker almost immediately
     assert!(coord
-        .try_submit_routed(Request::new(0, vec![1], 4), tx.clone())
+        .try_submit_routed(Request::builder(vec![1]).max_new(4).build(), tx.clone())
         .unwrap());
     std::thread::sleep(Duration::from_millis(100));
     // worker is busy for ~300ms: the next job sits in the queue...
     assert!(coord
-        .try_submit_routed(Request::new(1, vec![1], 4), tx.clone())
+        .try_submit_routed(Request::builder(vec![1]).id(1).max_new(4).build(), tx.clone())
         .unwrap());
     // ...so the one after must bounce off the capacity limit
     let accepted = coord
-        .try_submit_routed(Request::new(2, vec![1], 4), tx.clone())
+        .try_submit_routed(Request::builder(vec![1]).id(2).max_new(4).build(), tx.clone())
         .unwrap();
     assert!(!accepted, "queue at capacity must reject");
     assert!(coord.queue_stats().rejected_total() >= 1);
@@ -329,19 +334,19 @@ fn panicking_request_gets_error_and_worker_survives() {
     let coord = spawn_mock(1, 0);
     let (tx, rx) = std::sync::mpsc::channel();
     coord
-        .submit_routed(Request::new(0, vec![0], 4), tx.clone())
+        .submit_routed(Request::builder(vec![0]).max_new(4).build(), tx.clone())
         .unwrap();
     let resp = rx.recv_timeout(Duration::from_secs(5)).expect("panic response");
     assert!(
-        resp.error.as_deref().unwrap_or("").contains("panic"),
+        resp.error_msg().unwrap_or("").contains("panic"),
         "{:?}",
-        resp.error
+        resp.error_msg()
     );
     // the (only) worker must still serve subsequent requests
-    coord.submit_routed(Request::new(1, vec![1, 2], 4), tx).unwrap();
+    coord.submit_routed(Request::builder(vec![1, 2]).id(1).max_new(4).build(), tx).unwrap();
     let resp2 = rx.recv_timeout(Duration::from_secs(5)).expect("follow-up response");
-    assert!(resp2.error.is_none(), "{:?}", resp2.error);
-    assert_eq!(resp2.tokens, expected_tokens(&[1, 2], 4, 1));
+    assert!(resp2.is_ok(), "{:?}", resp2.error_msg());
+    assert_eq!(resp2.tokens(), &expected_tokens(&[1, 2], 4, 1)[..]);
 }
 
 #[test]
@@ -362,8 +367,8 @@ fn fused_policy_falls_back_for_engines_without_plans() {
         .collect();
     let resps = coord.run_batch(reqs).expect("batch");
     for (i, r) in resps.iter().enumerate() {
-        assert!(r.error.is_none(), "{:?}", r.error);
-        assert_eq!(r.tokens, expect[i], "fused fallback perturbed request {i}");
+        assert!(r.is_ok(), "{:?}", r.error_msg());
+        assert_eq!(r.tokens(), &expect[i][..], "fused fallback perturbed request {i}");
     }
     assert_eq!(coord.queue_stats().fused_batches_total(), 0);
 }
@@ -426,7 +431,7 @@ fn metrics_text_carries_dispatcher_gauges_under_shared_runtime() {
     // this mock has no plan/apply split, so its steps never reach the
     // dispatcher — but the topology line and gauges must still export
     let resps = coord.run_batch(mk_reqs(4)).expect("batch");
-    assert!(resps.iter().all(|r| r.error.is_none()));
+    assert!(resps.iter().all(|r| r.is_ok()));
     let text = coord.metrics_text();
     assert!(text.contains("ppd_shared_runtime 1\n"), "{text}");
     assert!(text.contains("ppd_dispatch_queue_depth 0\n"), "{text}");
@@ -517,8 +522,8 @@ fn paged_coordinator_is_token_exact_and_exports_block_gauges() {
     let b = slab.run_batch(mk_reqs(6)).expect("slab batch");
     assert_eq!(a.len(), 6);
     for (x, y) in a.iter().zip(&b) {
-        assert!(x.error.is_none(), "{:?}", x.error);
-        assert_eq!(x.tokens, y.tokens, "paged KV perturbed request {}", x.id);
+        assert!(x.is_ok(), "{:?}", x.error_msg());
+        assert_eq!(x.tokens(), y.tokens(), "paged KV perturbed request {}", x.id);
     }
     let text = paged.metrics_text();
     // request 0 publishes the shared chunk; the single worker
@@ -547,7 +552,7 @@ fn warmed_metrics_text_matches_registry_and_exports_latency() {
     let coord = spawn_mock(2, 0);
     let n = 8usize;
     let resps = coord.run_batch(mk_reqs(n)).expect("batch");
-    assert!(resps.iter().all(|r| r.error.is_none()));
+    assert!(resps.iter().all(|r| r.is_ok()));
     let text = coord.metrics_text();
     for line in text.lines() {
         let name_part = line.split(' ').next().expect("metric line");

@@ -229,14 +229,16 @@ fn coordinator_roundtrip() {
     )
     .unwrap();
     let reqs: Vec<Request> = (0..3)
-        .map(|i| Request::new(i, workload::encode(PROMPTS[i as usize % 3]), 16))
+        .map(|i| {
+            Request::builder(workload::encode(PROMPTS[i as usize % 3])).id(i).max_new(16).build()
+        })
         .collect();
     let resps = coord.run_batch(reqs).unwrap();
     assert_eq!(resps.len(), 3);
     for r in &resps {
-        assert!(r.error.is_none(), "{:?}", r.error);
-        assert!(!r.tokens.is_empty());
-        assert!(r.tau >= 1.0);
+        assert!(r.is_ok(), "{:?}", r.error_msg());
+        assert!(!r.tokens().is_empty());
+        assert!(r.tau() >= 1.0);
     }
 }
 
@@ -266,7 +268,12 @@ fn coordinator_multi_worker_matches_single_worker() {
     let single = spawn(1);
     let mk = || -> Vec<Request> {
         (0..9)
-            .map(|i| Request::new(i, workload::encode(PROMPTS[i as usize % 3]), 24))
+            .map(|i| {
+                Request::builder(workload::encode(PROMPTS[i as usize % 3]))
+                    .id(i)
+                    .max_new(24)
+                    .build()
+            })
             .collect()
     };
     let a = multi.run_batch(mk()).unwrap();
@@ -274,8 +281,8 @@ fn coordinator_multi_worker_matches_single_worker() {
     assert_eq!(a.len(), 9);
     for (i, (x, y)) in a.iter().zip(&b).enumerate() {
         assert_eq!(x.id, i as u64);
-        assert!(x.error.is_none(), "{:?}", x.error);
-        assert_eq!(x.tokens, y.tokens, "request {i} diverged across worker counts");
+        assert!(x.is_ok(), "{:?}", x.error_msg());
+        assert_eq!(x.tokens(), y.tokens(), "request {i} diverged across worker counts");
     }
     assert!(multi.caches_created() <= 2, "pool leaked: {}", multi.caches_created());
     assert_eq!(single.caches_created(), 1);
@@ -304,14 +311,19 @@ fn continuous_batching_matches_serial_on_real_ppd_engine() {
     let serial = spawn(1);
     let mk = || -> Vec<Request> {
         (0..8)
-            .map(|i| Request::new(i, workload::encode(PROMPTS[i as usize % 3]), 16 + (i as usize % 3) * 4))
+            .map(|i| {
+                Request::builder(workload::encode(PROMPTS[i as usize % 3]))
+                    .id(i)
+                    .max_new(16 + (i as usize % 3) * 4)
+                    .build()
+            })
             .collect()
     };
     let a = batching.run_batch(mk()).unwrap();
     let b = serial.run_batch(mk()).unwrap();
     for (i, (x, y)) in a.iter().zip(&b).enumerate() {
-        assert!(x.error.is_none(), "{:?}", x.error);
-        assert_eq!(x.tokens, y.tokens, "request {i} perturbed by continuous batching");
+        assert!(x.is_ok(), "{:?}", x.error_msg());
+        assert_eq!(x.tokens(), y.tokens(), "request {i} perturbed by continuous batching");
     }
     assert!(batching.caches_created() <= 4);
     assert_eq!(batching.caches_outstanding(), 0);
@@ -341,14 +353,19 @@ fn fused_stepping_matches_unfused_on_real_ppd_engine() {
     let unfused = spawn(false);
     let mk = || -> Vec<Request> {
         (0..8)
-            .map(|i| Request::new(i, workload::encode(PROMPTS[i as usize % 3]), 16 + (i as usize % 3) * 4))
+            .map(|i| {
+                Request::builder(workload::encode(PROMPTS[i as usize % 3]))
+                    .id(i)
+                    .max_new(16 + (i as usize % 3) * 4)
+                    .build()
+            })
             .collect()
     };
     let a = fused.run_batch(mk()).unwrap();
     let b = unfused.run_batch(mk()).unwrap();
     for (i, (x, y)) in a.iter().zip(&b).enumerate() {
-        assert!(x.error.is_none(), "{:?}", x.error);
-        assert_eq!(x.tokens, y.tokens, "request {i} perturbed by fused stepping");
+        assert!(x.is_ok(), "{:?}", x.error_msg());
+        assert_eq!(x.tokens(), y.tokens(), "request {i} perturbed by fused stepping");
     }
     let stats = fused.queue_stats();
     assert!(stats.fused_batches_total() > 0, "fusion never engaged");
@@ -413,11 +430,10 @@ fn batched_short_kv_buckets_match_full_ctx_on_real_ppd_engine() {
     let mk = || -> Vec<Request> {
         (0..8)
             .map(|i| {
-                Request::new(
-                    i,
-                    workload::encode(PROMPTS[i as usize % 3]),
-                    16 + (i as usize % 3) * 4,
-                )
+                Request::builder(workload::encode(PROMPTS[i as usize % 3]))
+                    .id(i)
+                    .max_new(16 + (i as usize % 3) * 4)
+                    .build()
             })
             .collect()
     };
@@ -436,8 +452,8 @@ fn batched_short_kv_buckets_match_full_ctx_on_real_ppd_engine() {
     drop(full);
     ppd::runtime::set_kv_buckets_disabled(None);
     for (i, (x, y)) in a.iter().zip(&b).enumerate() {
-        assert!(x.error.is_none(), "{:?}", x.error);
-        assert_eq!(x.tokens, y.tokens, "request {i} perturbed by batched kv bucketing");
+        assert!(x.is_ok(), "{:?}", x.error_msg());
+        assert_eq!(x.tokens(), y.tokens(), "request {i} perturbed by batched kv bucketing");
     }
     let (sb, sf) = (agg_b.snapshot(), agg_f.snapshot());
     assert!(sb.forward_batches > 0, "fused stepping never engaged");
@@ -487,7 +503,10 @@ fn shared_runtime_matches_fused_and_serial_on_real_ppd_engine() {
         (0..8)
             .map(|i| {
                 let max_new = 14 + (i as usize % 3) * 4;
-                Request::new(i, workload::encode(PROMPTS[i as usize % 3]), max_new)
+                Request::builder(workload::encode(PROMPTS[i as usize % 3]))
+                    .id(i)
+                    .max_new(max_new)
+                    .build()
             })
             .collect()
     };
@@ -495,9 +514,9 @@ fn shared_runtime_matches_fused_and_serial_on_real_ppd_engine() {
     let b = fused.run_batch(mk()).unwrap();
     let c = serial.run_batch(mk()).unwrap();
     for (i, ((x, y), z)) in a.iter().zip(&b).zip(&c).enumerate() {
-        assert!(x.error.is_none(), "{:?}", x.error);
-        assert_eq!(x.tokens, y.tokens, "request {i}: shared diverged from per-worker-fused");
-        assert_eq!(x.tokens, z.tokens, "request {i}: shared diverged from serial");
+        assert!(x.is_ok(), "{:?}", x.error_msg());
+        assert_eq!(x.tokens(), y.tokens(), "request {i}: shared diverged from per-worker-fused");
+        assert_eq!(x.tokens(), z.tokens(), "request {i}: shared diverged from serial");
     }
     let d = shared.dispatch_stats();
     assert!(d.batches_total() > 0, "shared dispatcher never fused a batch");

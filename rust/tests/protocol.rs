@@ -1,0 +1,230 @@
+//! Wire-protocol round-trip tests for the versioned request/response
+//! envelope, run against a live TCP server backed by the deterministic
+//! bench engine (`spawn_sweep_coordinator` — artifact-free, token
+//! output a pure function of `(prompt, seed)`).
+//!
+//! What these lock down:
+//! * a v1 client (hand-formatted pre-envelope JSON, no `"v"` key)
+//!   round-trips byte-for-byte unchanged against the v2-capable server;
+//! * an unsupported `"v"` gets the typed protocol-level rejection,
+//!   distinct from field-level errors;
+//! * a v2 streamed reply reassembles to exactly the oneshot reply for
+//!   the same `(prompt, seed)`, and the client survives the stream;
+//! * multi-turn sessions over TCP land prefix-store hits, observable
+//!   through the metrics scrape.
+//!
+//! Each test binds its own port (17961..) so the suite can run in
+//! parallel with the other integration tests (which use 17917..17951).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::thread;
+use std::time::Duration;
+
+use ppd::bench::{spawn_sweep_coordinator, SweepConfig, SweepMode};
+use ppd::coordinator::server::{self, Client, Envelope};
+use ppd::coordinator::ResponseEvent;
+use ppd::util::json::Json;
+
+/// Spawn a sweep-config coordinator serving `n` request lines on
+/// `addr`, and give the listener a beat to bind before clients connect.
+fn spawn_server(cfg: SweepConfig, addr: &'static str, n: u64) -> thread::JoinHandle<()> {
+    let coord = spawn_sweep_coordinator(&cfg).expect("spawn coordinator");
+    let handle = thread::spawn(move || {
+        server::serve(coord, addr, Some(n)).expect("serve");
+    });
+    thread::sleep(Duration::from_millis(300));
+    handle
+}
+
+/// A v1 client in miniature: write one raw line, read one reply line.
+/// Deliberately does NOT go through [`Envelope`]/[`Client`] — the point
+/// is that hand-formatted pre-envelope JSON still round-trips.
+fn raw_roundtrip(addr: &str, line: &str) -> Json {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    writeln!(stream, "{line}").expect("write request line");
+    let mut reader = BufReader::new(stream.try_clone().expect("clone stream"));
+    let mut reply = String::new();
+    reader.read_line(&mut reply).expect("read reply line");
+    Json::parse(reply.trim()).expect("reply parses as JSON")
+}
+
+/// Pull `name value` out of a Prometheus text block.
+fn metric_value(text: &str, name: &str) -> f64 {
+    text.lines()
+        .find_map(|l| l.strip_prefix(&format!("{name} ")))
+        .unwrap_or_else(|| panic!("{name} missing from metrics scrape:\n{text}"))
+        .trim()
+        .parse()
+        .unwrap_or_else(|e| panic!("{name}: unparsable value ({e})"))
+}
+
+/// A v1 line — no `"v"` key, fields in whatever order the client felt
+/// like — answers with exactly one v1 response line: the flat object
+/// with the historical keys, no event framing, no envelope metadata.
+#[test]
+fn v1_lines_round_trip_unchanged_against_v2_server() {
+    let addr = "127.0.0.1:17961";
+    let server = spawn_server(SweepConfig { workers: 2, ..Default::default() }, addr, 2);
+
+    // hand-formatted, key order scrambled: the strictest v1 client
+    let reply = raw_roundtrip(addr, r#"{"max_new": 6, "seed": 42, "prompt": "hello v1"}"#);
+    assert!(reply.get("error").is_none(), "v1 request failed: {reply}");
+    assert!(reply.get("event").is_none(), "v1 reply must not carry event framing: {reply}");
+    assert!(reply.get("v").is_none(), "v1 reply must not grow envelope keys: {reply}");
+    let v1_keys =
+        ["id", "text", "tokens", "steps", "tau", "decode_s", "prefill_s", "queue_s", "worker"];
+    for key in v1_keys {
+        assert!(reply.get(key).is_some(), "v1 reply lost key '{key}': {reply}");
+    }
+    assert_eq!(reply.req("tokens").unwrap().as_usize().unwrap(), 6, "{reply}");
+
+    // the library client's v1 path speaks the same dialect
+    let mut client = Client::connect(addr).expect("connect");
+    let reply2 = client.request("hello v1", 6).expect("v1 library call").into_json();
+    assert!(reply2.get("error").is_none(), "{reply2}");
+    assert_eq!(reply2.req("tokens").unwrap().as_usize().unwrap(), 6, "{reply2}");
+
+    drop(client);
+    server.join().unwrap();
+}
+
+/// An unsupported `"v"` is rejected at the protocol level — the error
+/// names the version and the speakable range, prefixed `protocol
+/// error:` so clients can tell it apart from field-level complaints
+/// (which keep their plain v1-era messages).
+#[test]
+fn malformed_version_gets_typed_protocol_error() {
+    let addr = "127.0.0.1:17963";
+    let server = spawn_server(SweepConfig::default(), addr, 2);
+
+    let reply = raw_roundtrip(addr, r#"{"v": 3, "prompt": "future speak", "max_new": 4}"#);
+    let err = reply
+        .req("error")
+        .and_then(|e| e.as_str().map(str::to_string))
+        .expect("v3 line must answer with an error reply");
+    assert!(err.contains("protocol error"), "missing protocol-level prefix: {err}");
+    assert!(
+        err.contains("unsupported protocol version 3"),
+        "error must name the offending version: {err}"
+    );
+    assert!(err.contains("v1 and v2"), "error must name the speakable versions: {err}");
+
+    // a field-level v2 failure is NOT a protocol error: same connection
+    // envelope, different rejection class
+    let reply = raw_roundtrip(addr, r#"{"v":2,"prompt":"x","max_new":4,"priority":"urgent"}"#);
+    let err = reply
+        .req("error")
+        .and_then(|e| e.as_str().map(str::to_string))
+        .expect("bad priority must answer with an error reply");
+    assert!(err.contains("bad 'priority' field"), "{err}");
+    assert!(!err.contains("protocol error"), "field errors keep their plain message: {err}");
+
+    server.join().unwrap();
+}
+
+/// A v2 streamed reply is `started`, then `tokens` frames, closed by
+/// exactly one `done` — and the concatenated accepted tokens reassemble
+/// the oneshot reply for the same `(prompt, seed)`.  The client stays
+/// usable after the stream drains (persistent connection).
+#[test]
+fn v2_stream_reassembles_the_oneshot_reply() {
+    let addr = "127.0.0.1:17965";
+    let server = spawn_server(
+        SweepConfig { mode: SweepMode::Shared, workers: 2, ..Default::default() },
+        addr,
+        2,
+    );
+
+    let mut client = Client::connect(addr).expect("connect");
+    let env = Envelope::v2("stream me", 8).with_seed(42).with_stream(true);
+    let mut started = 0usize;
+    let mut accepted: Vec<u32> = Vec::new();
+    let mut done_stats: Option<Json> = None;
+    for ev in client.stream(&env).expect("stream") {
+        match ev {
+            ResponseEvent::Started { .. } => {
+                assert!(accepted.is_empty(), "started must precede all tokens frames");
+                started += 1;
+            }
+            ResponseEvent::Tokens { accepted: frame, .. } => {
+                assert!(!frame.is_empty(), "tokens frames carry at least one token");
+                accepted.extend(frame);
+            }
+            ResponseEvent::Done { stats, .. } => {
+                assert!(done_stats.replace(stats).is_none(), "exactly one terminal frame");
+            }
+            ResponseEvent::Error { message, .. } => panic!("streamed request failed: {message}"),
+        }
+    }
+    let stats = done_stats.expect("stream must close with a done frame");
+    assert_eq!(started, 1, "exactly one started frame");
+    assert_eq!(accepted.len(), 8, "streamed frames must cover every generated token");
+    assert_eq!(
+        stats.req("tokens").unwrap().as_usize().unwrap(),
+        accepted.len(),
+        "done frame's token count diverged from the streamed frames: {stats}"
+    );
+
+    // same client, same (prompt, seed), streaming off: one v1-shaped
+    // line whose text matches what the stream reassembled
+    let reply = client
+        .call(&Envelope::v2("stream me", 8).with_seed(42).with_stream(false))
+        .expect("oneshot after stream")
+        .into_json();
+    assert!(reply.get("event").is_none(), "unstreamed v2 reply is a single v1 line: {reply}");
+    assert!(reply.get("error").is_none(), "{reply}");
+    assert_eq!(
+        reply.req("text").unwrap().as_str().unwrap(),
+        stats.req("text").unwrap().as_str().unwrap(),
+        "streamed and oneshot replies must decode the same text"
+    );
+
+    drop(client);
+    server.join().unwrap();
+}
+
+/// Two turns of one session over TCP: the second turn resumes the
+/// session and its admission finds the first turn's pages in the prefix
+/// store — all observable from outside through the metrics scrape.
+#[test]
+fn session_turns_reuse_prefix_pages_over_tcp() {
+    let addr = "127.0.0.1:17967";
+    let server = spawn_server(
+        SweepConfig { mode: SweepMode::Prefix, workers: 1, ..Default::default() },
+        addr,
+        3,
+    );
+
+    let mut client = Client::connect(addr).expect("connect");
+    let turn = || Envelope::v2("session resume prompt", 6).with_seed(7).with_session("conv-1");
+    // Client::call blocks for the reply, so turn 1's pages are in the
+    // prefix store before turn 2 is admitted
+    let r0 = client.call(&turn()).expect("turn 1").into_json();
+    assert!(r0.get("error").is_none(), "{r0}");
+    let r1 = client.call(&turn()).expect("turn 2").into_json();
+    assert!(r1.get("error").is_none(), "{r1}");
+    assert_eq!(
+        r0.req("text").unwrap().as_str().unwrap(),
+        r1.req("text").unwrap().as_str().unwrap(),
+        "pinned seed: both turns decode identically"
+    );
+
+    let text = client.metrics().expect("metrics scrape");
+    assert_eq!(
+        metric_value(&text, "ppd_session_resumes_total"),
+        1.0,
+        "exactly the second turn resumes the session"
+    );
+    assert!(
+        metric_value(&text, "ppd_session_prefix_turn_hits_total") >= 1.0,
+        "the resumed turn must find its conversation's pages:\n{text}"
+    );
+    assert!(
+        metric_value(&text, "ppd_prefix_hits_total") >= 1.0,
+        "the prefix store must have served shared pages:\n{text}"
+    );
+
+    drop(client);
+    server.join().unwrap();
+}

@@ -73,8 +73,8 @@ use ppd::batch::{
 use ppd::coordinator::queue::Job;
 use ppd::coordinator::scheduler::SchedObserver;
 use ppd::coordinator::{
-    serve_jobs, Coordinator, DeviceHost, Request, Response, SchedPolicy, StepScheduler,
-    WorkerBackend, WorkerCtx,
+    serve_jobs, Coordinator, DeviceHost, Priority, QueueDiscipline, Request, Response,
+    ResponseEvent, SchedPolicy, StepScheduler, WorkerBackend, WorkerCtx,
 };
 use ppd::decoding::{DecodeEngine, FinishReason, GenerationResult, SeqState, StepOutcome};
 use ppd::kvcache::{HostKvCache, SharedCachePool};
@@ -330,7 +330,7 @@ fn reference_tokens(prompt: &[u32], max_new: usize, seed: u64) -> Vec<u32> {
 }
 
 fn mk_req(id: u64, text: &str, max_new: usize) -> Request {
-    Request::new(id, workload::encode(text), max_new)
+    Request::builder(workload::encode(text)).id(id).max_new(max_new).build()
 }
 
 /// Harness state for hand-scripted schedules.
@@ -450,9 +450,9 @@ fn scheduler_outputs_are_token_exact_for_every_inflight_depth() {
         let (reqs, _) = workload_reqs(6);
         let resps = h.run_workload(reqs);
         for (r, want) in resps.iter().zip(&expect) {
-            assert!(r.error.is_none(), "max_inflight={max_inflight}: {:?}", r.error);
+            assert!(r.is_ok(), "max_inflight={max_inflight}: {:?}", r.error_msg());
             assert_eq!(
-                r.tokens, *want,
+                r.tokens(), *want,
                 "max_inflight={max_inflight} perturbed request {}",
                 r.id
             );
@@ -477,9 +477,9 @@ fn fused_scheduler_outputs_are_token_exact_for_every_inflight_depth() {
         let (reqs, _) = workload_reqs(6);
         let resps = h.run_workload(reqs);
         for (r, want) in resps.iter().zip(&expect) {
-            assert!(r.error.is_none(), "max_inflight={max_inflight}: {:?}", r.error);
+            assert!(r.is_ok(), "max_inflight={max_inflight}: {:?}", r.error_msg());
             assert_eq!(
-                r.tokens, *want,
+                r.tokens(), *want,
                 "fused max_inflight={max_inflight} perturbed request {}",
                 r.id
             );
@@ -517,8 +517,8 @@ fn fused_stepping_halves_device_calls_at_depth_4() {
     let b = fused.run_workload(reqs_b);
 
     for ((x, y), want) in a.iter().zip(&b).zip(&expect) {
-        assert_eq!(x.tokens, *want);
-        assert_eq!(x.tokens, y.tokens, "fusion changed request {} output", x.id);
+        assert_eq!(x.tokens(), *want);
+        assert_eq!(x.tokens(), y.tokens(), "fusion changed request {} output", x.id);
     }
     assert!(
         fused.engine.forwards * 2 <= unfused.engine.forwards,
@@ -554,8 +554,8 @@ fn mid_flight_admission_never_perturbs_a_running_sequence() {
         assert_eq!(h.sched.len(), 2);
         let mut resps = h.drain();
         resps.sort_by_key(|r| r.id);
-        assert_eq!(resps[0].tokens, want_a, "fuse={fuse}: mid-flight admission perturbed A");
-        assert_eq!(resps[1].tokens, want_b, "fuse={fuse}: interleaving perturbed B");
+        assert_eq!(resps[0].tokens(), want_a, "fuse={fuse}: mid-flight admission perturbed A");
+        assert_eq!(resps[1].tokens(), want_b, "fuse={fuse}: interleaving perturbed B");
         // B (5 tokens) retired before A (12 tokens) despite admission order
         assert_eq!(h.stats.max_inflight_seqs(), 2);
         if fuse {
@@ -590,7 +590,7 @@ fn out_of_order_retirement_routes_replies_to_their_own_channels() {
     // short (2 tokens) is done; long is still running
     let r_short = rx_short.try_recv().expect("short retired first");
     assert_eq!(r_short.id, 11);
-    assert_eq!(r_short.tokens, want_short);
+    assert_eq!(r_short.tokens(), want_short);
     assert!(rx_long.try_recv().is_err(), "long must still be in flight");
     assert_eq!(sched.len(), 1);
     while !sched.is_empty() {
@@ -598,7 +598,7 @@ fn out_of_order_retirement_routes_replies_to_their_own_channels() {
     }
     let r_long = rx_long.try_recv().expect("long retired");
     assert_eq!(r_long.id, 10);
-    assert_eq!(r_long.tokens, want_long);
+    assert_eq!(r_long.tokens(), want_long);
 }
 
 #[test]
@@ -616,7 +616,7 @@ fn stale_job_is_dropped_with_an_error_response() {
     assert_eq!(h.stats.expired_total(), 1);
     let resp = h.rx.try_recv().expect("expired job still gets a response");
     assert_eq!(resp.id, 0);
-    let msg = resp.error.as_deref().unwrap_or_default();
+    let msg = resp.error_msg().unwrap_or_default();
     assert!(msg.contains("max queue age"), "unexpected error: {msg}");
     // no cache was consumed by the drop
     assert_eq!(h.pool.outstanding(), 0);
@@ -626,7 +626,7 @@ fn stale_job_is_dropped_with_an_error_response() {
     assert!(ok);
     let resps = h.drain();
     assert_eq!(resps.len(), 1);
-    assert_eq!(resps[0].tokens, want_fresh);
+    assert_eq!(resps[0].tokens(), want_fresh);
 }
 
 #[test]
@@ -638,7 +638,7 @@ fn cancelled_job_is_refused_at_admission() {
     assert!(!admitted);
     assert_eq!(h.stats.cancelled_total(), 1);
     let resp = h.rx.try_recv().expect("cancelled job gets an error response");
-    assert!(resp.error.as_deref().unwrap_or_default().contains("cancelled"));
+    assert!(resp.error_msg().unwrap_or_default().contains("cancelled"));
     assert_eq!(h.pool.outstanding(), 0);
 }
 
@@ -657,7 +657,7 @@ fn cancelled_inflight_sequence_frees_its_cache() {
         assert_eq!(h.pool.outstanding(), 0, "fuse={fuse}: cancel must return the cache to the pool");
         assert_eq!(h.stats.cancelled_total(), 1);
         let resp = h.rx.try_recv().expect("cancelled sequence answers its channel");
-        assert!(resp.error.as_deref().unwrap_or_default().contains("cancelled"));
+        assert!(resp.error_msg().unwrap_or_default().contains("cancelled"));
         // the freed cache is immediately reusable
         let (ok, _) = h.admit(mk_req(1, "next request reuses the slot", 3));
         assert!(ok);
@@ -681,9 +681,9 @@ fn paged_pool_is_token_exact_for_serial_and_fused_scheduling() {
             let (reqs, _) = workload_reqs(6);
             let resps = h.run_workload(reqs);
             for (r, want) in resps.iter().zip(&expect) {
-                assert!(r.error.is_none(), "fused={fused} inflight={max_inflight}: {:?}", r.error);
+                assert!(r.is_ok(), "fused={fused} inflight={max_inflight}: {:?}", r.error_msg());
                 assert_eq!(
-                    r.tokens, *want,
+                    r.tokens(), *want,
                     "paged pool perturbed request {} (fused={fused}, inflight={max_inflight})",
                     r.id
                 );
@@ -742,11 +742,11 @@ fn panicking_begin_seq_refuses_job_and_keeps_scheduler_alive() {
     let mut h = Harness::new(2, None);
     // prompt token 0 is unreachable from workload::encode on real text;
     // the mock uses it to simulate an engine panic
-    let job = Job::new(Request::new(0, vec![0], 4), h.tx.clone());
+    let job = Job::new(Request::builder(vec![0]).max_new(4).build(), h.tx.clone());
     let admitted = h.sched.admit(&mut h.engine, &h.pool, &h.stats, job);
     assert!(!admitted);
     let resp = h.rx.try_recv().expect("panic surfaces as error response");
-    assert!(resp.error.as_deref().unwrap_or_default().contains("panic"));
+    assert!(resp.error_msg().unwrap_or_default().contains("panic"));
     assert_eq!(h.pool.outstanding(), 0, "panicked admission must not leak its cache");
     // scheduler still serves
     let (ok, _) = h.admit(mk_req(1, "after the panic", 3));
@@ -1115,9 +1115,9 @@ fn shared_runtime_is_token_exact_at_every_worker_and_inflight_depth() {
             resps.sort_by_key(|r| r.id);
             assert_eq!(resps.len(), 8);
             for (r, want) in resps.iter().zip(&expect) {
-                assert!(r.error.is_none(), "{:?}", r.error);
+                assert!(r.is_ok(), "{:?}", r.error_msg());
                 assert_eq!(
-                    r.tokens, *want,
+                    r.tokens(), *want,
                     "shared runtime perturbed request {} (workers={workers}, inflight={max_inflight})",
                     r.id
                 );
@@ -1169,9 +1169,9 @@ fn paged_pool_is_token_exact_for_shared_and_pipelined_dispatch() {
                 resps.sort_by_key(|r| r.id);
                 assert_eq!(resps.len(), 8);
                 for (r, want) in resps.iter().zip(&expect) {
-                    assert!(r.error.is_none(), "pipelined={pipelined}: {:?}", r.error);
+                    assert!(r.is_ok(), "pipelined={pipelined}: {:?}", r.error_msg());
                     assert_eq!(
-                        r.tokens, *want,
+                        r.tokens(), *want,
                         "paged pool perturbed request {} (pipelined={pipelined}, \
                          workers={workers}, inflight={max_inflight})",
                         r.id
@@ -1236,9 +1236,9 @@ fn kv_bucketed_shared_dispatch_is_token_exact_at_every_depth() {
                 resps.sort_by_key(|r| r.id);
                 assert_eq!(resps.len(), 8);
                 for (r, want) in resps.iter().zip(&expect) {
-                    assert!(r.error.is_none(), "disabled={disabled}: {:?}", r.error);
+                    assert!(r.is_ok(), "disabled={disabled}: {:?}", r.error_msg());
                     assert_eq!(
-                        r.tokens, *want,
+                        r.tokens(), *want,
                         "kv bucketing (disabled={disabled}) perturbed request {} \
                          (workers={workers}, inflight={max_inflight})",
                         r.id
@@ -1267,7 +1267,7 @@ fn kv_bucketed_shared_dispatch_is_token_exact_at_every_depth() {
             for (a, b) in per_mode[0].iter().zip(&per_mode[1]) {
                 assert_eq!(a.id, b.id);
                 assert_eq!(
-                    a.tokens, b.tokens,
+                    a.tokens(), b.tokens(),
                     "short-kv vs full-ctx diverged on request {} \
                      (workers={workers}, inflight={max_inflight})",
                     a.id
@@ -1286,7 +1286,7 @@ fn all_short_riders_select_the_smallest_kv_bucket() {
     let mut h =
         SharedHarness::with_exec(workers, 2, KvExec::new(vec![16, 32, 48], false));
     let reqs: Vec<Request> =
-        (0..4).map(|i| Request::new(i, workload::encode("ab"), 4)).collect();
+        (0..4).map(|i| Request::builder(workload::encode("ab")).id(i).max_new(4).build()).collect();
     let expect: Vec<Vec<u32>> = reqs
         .iter()
         .map(|r| reference_tokens(&r.prompt, r.max_new, r.seed))
@@ -1304,8 +1304,8 @@ fn all_short_riders_select_the_smallest_kv_bucket() {
     resps.sort_by_key(|r| r.id);
     assert_eq!(resps.len(), 4);
     for (r, want) in resps.iter().zip(&expect) {
-        assert!(r.error.is_none(), "{:?}", r.error);
-        assert_eq!(r.tokens, *want);
+        assert!(r.is_ok(), "{:?}", r.error_msg());
+        assert_eq!(r.tokens(), *want);
     }
     // prompt "ab" commits 2 rows and 4 steps keep every slot ≤ 6: the
     // 16-slot bucket covers every tick, so nothing larger may appear
@@ -1396,17 +1396,17 @@ fn shared_dispatch_is_one_device_call_per_wall_tick_with_four_workers() {
     assert_eq!(a.len(), b.len());
     for (x, y) in a.iter().zip(&b) {
         assert_eq!(x.id, y.id);
-        assert_eq!(x.tokens, y.tokens, "shared diverged from per-worker-fused on {}", x.id);
-        assert_eq!(x.error.is_some(), y.error.is_some());
+        assert_eq!(x.tokens(), y.tokens(), "shared diverged from per-worker-fused on {}", x.id);
+        assert_eq!(x.is_ok(), y.is_ok());
     }
     for (r, want) in a.iter().take(4).zip(&expect) {
-        assert!(r.error.is_none(), "{:?}", r.error);
-        assert_eq!(r.tokens, *want, "shared runtime perturbed request {}", r.id);
+        assert!(r.is_ok(), "{:?}", r.error_msg());
+        assert_eq!(r.tokens(), *want, "shared runtime perturbed request {}", r.id);
     }
     let late_resp = a.iter().find(|r| r.id == 90).expect("late request completed");
-    assert_eq!(late_resp.tokens, want_late, "mid-flight admission perturbed the late request");
+    assert_eq!(late_resp.tokens(), want_late, "mid-flight admission perturbed the late request");
     let doomed_resp = a.iter().find(|r| r.id == 91).expect("cancelled request answered");
-    assert!(doomed_resp.error.as_deref().unwrap_or_default().contains("cancelled"));
+    assert!(doomed_resp.error_msg().unwrap_or_default().contains("cancelled"));
     // cross-worker fusion demonstrably engaged
     assert!(h.dstats.multi_worker_batches_total() > 0, "no batch ever spanned workers");
     assert!(h.dstats.max_width() >= 2);
@@ -1428,7 +1428,7 @@ fn shared_scheduler_cancellation_frees_cache_and_costs_no_device_call() {
     assert_eq!(h.pool.outstanding(), 0, "cancel must return the cache to the pool");
     assert_eq!(h.stats.cancelled_total(), 1);
     let resp = h.rx.try_recv().expect("cancelled sequence answers its channel");
-    assert!(resp.error.as_deref().unwrap_or_default().contains("cancelled"));
+    assert!(resp.error_msg().unwrap_or_default().contains("cancelled"));
 }
 
 #[test]
@@ -1452,9 +1452,9 @@ fn dead_dispatcher_fails_sequences_and_reconciles_the_pool() {
     assert_eq!(resps.len(), 2);
     for r in resps {
         assert!(
-            r.error.as_deref().unwrap_or_default().contains("dispatcher"),
+            r.error_msg().unwrap_or_default().contains("dispatcher"),
             "{:?}",
-            r.error
+            r.error_msg()
         );
     }
 
@@ -1481,7 +1481,7 @@ fn dead_dispatcher_fails_sequences_and_reconciles_the_pool() {
     let resps = h.drain_responses();
     assert_eq!(resps.len(), 2);
     for r in resps {
-        assert!(r.error.is_some());
+        assert!(!r.is_ok());
     }
     // the freed budget is usable again: a fresh admission succeeds
     let (ok, _) = h.admit(0, mk_req(7, "after the loss", 2));
@@ -1535,9 +1535,9 @@ fn pipelined_shared_dispatch_is_token_exact_at_every_depth() {
                 resps.sort_by_key(|r| r.id);
                 assert_eq!(resps.len(), 8);
                 for (r, want) in resps.iter().zip(&expect) {
-                    assert!(r.error.is_none(), "pipelined={pipelined}: {:?}", r.error);
+                    assert!(r.is_ok(), "pipelined={pipelined}: {:?}", r.error_msg());
                     assert_eq!(
-                        r.tokens, *want,
+                        r.tokens(), *want,
                         "pipelined={pipelined} perturbed request {} \
                          (workers={workers}, inflight={max_inflight})",
                         r.id
@@ -1554,7 +1554,7 @@ fn pipelined_shared_dispatch_is_token_exact_at_every_depth() {
             for (a, b) in per_mode[0].iter().zip(&per_mode[1]) {
                 assert_eq!(a.id, b.id);
                 assert_eq!(
-                    a.tokens, b.tokens,
+                    a.tokens(), b.tokens(),
                     "pipelined diverged from unpipelined on request {} \
                      (workers={workers}, inflight={max_inflight})",
                     a.id
@@ -1602,9 +1602,9 @@ fn pipelined_precollated_rounds_are_token_exact_at_every_depth() {
                 resps.sort_by_key(|r| r.id);
                 assert_eq!(resps.len(), 8);
                 for (r, want) in resps.iter().zip(&expect) {
-                    assert!(r.error.is_none(), "pipelined={pipelined}: {:?}", r.error);
+                    assert!(r.is_ok(), "pipelined={pipelined}: {:?}", r.error_msg());
                     assert_eq!(
-                        r.tokens, *want,
+                        r.tokens(), *want,
                         "pre-collated round perturbed request {} \
                          (workers={workers}, inflight={max_inflight}, pipelined={pipelined})",
                         r.id
@@ -1632,7 +1632,7 @@ fn pipelined_precollated_rounds_are_token_exact_at_every_depth() {
             for (a, b) in per_mode[0].iter().zip(&per_mode[1]) {
                 assert_eq!(a.id, b.id);
                 assert_eq!(
-                    a.tokens, b.tokens,
+                    a.tokens(), b.tokens(),
                     "pre-collated diverged from executor-collated on request {} \
                      (workers={workers}, inflight={max_inflight})",
                     a.id
@@ -1657,7 +1657,7 @@ fn pipelined_cancellation_frees_cache_and_costs_no_device_call() {
     assert_eq!(h.pool.outstanding(), 0, "cancel must return the cache to the pool");
     assert_eq!(h.stats.cancelled_total(), 1);
     let resp = h.rx.try_recv().expect("cancelled sequence answers its channel");
-    assert!(resp.error.as_deref().unwrap_or_default().contains("cancelled"));
+    assert!(resp.error_msg().unwrap_or_default().contains("cancelled"));
 }
 
 #[test]
@@ -1681,9 +1681,9 @@ fn pipelined_dead_dispatcher_mid_overlap_fails_rows_and_reconciles() {
     assert_eq!(resps.len(), 2);
     for r in &resps {
         assert!(
-            r.error.as_deref().unwrap_or_default().contains("dispatcher"),
+            r.error_msg().unwrap_or_default().contains("dispatcher"),
             "{:?}",
-            r.error
+            r.error_msg()
         );
     }
     // the mid-overlap admission retires on its next submit: the dead
@@ -1695,7 +1695,7 @@ fn pipelined_dead_dispatcher_mid_overlap_fails_rows_and_reconciles() {
     let resps = h.drain_responses();
     assert_eq!(resps.len(), 1);
     assert_eq!(resps[0].id, 2);
-    assert!(resps[0].error.as_deref().unwrap_or_default().contains("dispatcher"));
+    assert!(resps[0].error_msg().unwrap_or_default().contains("dispatcher"));
 }
 
 #[test]
@@ -1720,9 +1720,9 @@ fn dropping_scheduler_with_inflight_tick_reconciles_caches_and_answers() {
     assert_eq!(resps.len(), 2);
     for r in &resps {
         assert!(
-            r.error.as_deref().unwrap_or_default().contains("shut down"),
+            r.error_msg().unwrap_or_default().contains("shut down"),
             "{:?}",
-            r.error
+            r.error_msg()
         );
     }
     let c = h.pool.checkout(SHAPE.0, SHAPE.1, SHAPE.2).expect("freed capacity reusable");
@@ -1747,7 +1747,7 @@ fn dropping_scheduler_with_inflight_tick_reconciles_caches_and_answers() {
     assert_eq!(h.pool.outstanding(), 0, "lost caches must be forgotten, not leaked");
     let resps = h.drain_responses();
     assert_eq!(resps.len(), 1);
-    assert!(resps[0].error.is_some());
+    assert!(!resps[0].is_ok());
 
     // (c) the dispatcher is alive but wedged (never flushes): teardown
     // waits out the bounded drain timeout, then forgets
@@ -1764,9 +1764,9 @@ fn dropping_scheduler_with_inflight_tick_reconciles_caches_and_answers() {
     let resps = h.drain_responses();
     assert_eq!(resps.len(), 1);
     assert!(
-        resps[0].error.as_deref().unwrap_or_default().contains("shut down"),
+        resps[0].error_msg().unwrap_or_default().contains("shut down"),
         "{:?}",
-        resps[0].error
+        resps[0].error_msg()
     );
 }
 
@@ -1839,6 +1839,68 @@ fn test_pipelined() -> bool {
     std::env::var("PPD_TEST_PIPELINED").as_deref() == Ok("1")
 }
 
+/// CI matrix knob: `PPD_TEST_STREAM=1` routes the coordinator e2e
+/// workload through the streaming submit path, so every topology cell
+/// proves the per-step event stream reassembles to the exact terminal
+/// tokens.
+fn test_stream() -> bool {
+    std::env::var("PPD_TEST_STREAM").as_deref() == Ok("1")
+}
+
+/// `run_batch` through the streaming submit path: every request gets
+/// its own event channel, and the concatenation of its `Tokens` frames
+/// must equal the terminal response's token sequence.  The scheduler
+/// never emits terminal frames (the server synthesizes those), so only
+/// `Started`/`Tokens` may appear here.
+fn run_batch_streamed(coord: &Coordinator, reqs: Vec<Request>) -> Vec<Response> {
+    let mut chans = Vec::new();
+    for r in reqs {
+        let id = r.id;
+        let (tx, rx) = mpsc::channel();
+        let (etx, erx) = mpsc::channel();
+        coord
+            .submit_streaming(r, tx, etx, ppd::coordinator::CancelFlag::new())
+            .expect("streamed submit");
+        chans.push((id, rx, erx));
+    }
+    let mut resps = Vec::new();
+    for (id, rx, erx) in chans {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).expect("terminal response");
+        assert_eq!(resp.id, id);
+        let mut streamed = Vec::new();
+        let mut started = 0usize;
+        while let Ok(ev) = erx.try_recv() {
+            assert_eq!(ev.id(), id, "event routed to the wrong request");
+            match ev {
+                ResponseEvent::Started { .. } => started += 1,
+                ResponseEvent::Tokens { accepted, .. } => streamed.extend(accepted),
+                other => panic!("scheduler emitted a terminal frame: {other:?}"),
+            }
+        }
+        if resp.is_ok() {
+            assert_eq!(started, 1, "request {id}: exactly one Started frame");
+            assert_eq!(
+                streamed,
+                resp.tokens(),
+                "request {id}: streamed frames diverged from the terminal response"
+            );
+        }
+        resps.push(resp);
+    }
+    resps.sort_by_key(|r| r.id);
+    resps
+}
+
+/// Read one gauge/counter line out of `Coordinator::metrics_text`.
+fn metric_value(text: &str, name: &str) -> f64 {
+    text.lines()
+        .find_map(|l| l.strip_prefix(&format!("{name} ")))
+        .unwrap_or_else(|| panic!("{name} missing from metrics_text"))
+        .trim()
+        .parse()
+        .unwrap_or_else(|e| panic!("{name}: unparsable value ({e})"))
+}
+
 #[test]
 fn coordinator_continuous_batching_is_token_exact_end_to_end() {
     let workers = test_workers();
@@ -1878,13 +1940,18 @@ fn coordinator_continuous_batching_is_token_exact_end_to_end() {
     )
     .expect("spawn serial");
 
-    let a = batching.run_batch(reqs(24)).expect("batching batch");
+    let stream = test_stream();
+    let a = if stream {
+        run_batch_streamed(&batching, reqs(24))
+    } else {
+        batching.run_batch(reqs(24)).expect("batching batch")
+    };
     let b = serial.run_batch(reqs(24)).expect("serial batch");
     for (i, ((x, y), want)) in a.iter().zip(&b).zip(&expect).enumerate() {
-        assert!(x.error.is_none(), "{:?}", x.error);
+        assert!(x.is_ok(), "{:?}", x.error_msg());
         assert_eq!(x.id, i as u64);
-        assert_eq!(x.tokens, *want, "continuous batching perturbed request {i}");
-        assert_eq!(x.tokens, y.tokens, "max_inflight=4 diverged from max_inflight=1");
+        assert_eq!(x.tokens(), *want, "continuous batching perturbed request {i}");
+        assert_eq!(x.tokens(), y.tokens(), "max_inflight=4 diverged from max_inflight=1");
     }
     // pool stays within the admission budget; all caches returned
     assert!(batching.caches_created() <= workers * 4);
@@ -1907,6 +1974,16 @@ fn coordinator_continuous_batching_is_token_exact_end_to_end() {
         assert_eq!(batching.dispatch_stats().queue_depth(), 0);
     } else {
         assert_eq!(batching.dispatch_stats().batches_total(), 0);
+    }
+    if stream {
+        // 24 Started frames plus at least one Tokens frame per request
+        assert!(
+            stats.stream_events_total() >= 48,
+            "only {} stream frames for 24 streamed requests",
+            stats.stream_events_total()
+        );
+    } else {
+        assert_eq!(stats.stream_events_total(), 0);
     }
 }
 
@@ -1938,8 +2015,8 @@ fn shared_coordinator_fuses_across_workers_end_to_end() {
         .expect("spawn");
         let resps = coord.run_batch(reqs(16)).expect("batch");
         for (i, r) in resps.iter().enumerate() {
-            assert!(r.error.is_none(), "{:?}", r.error);
-            assert_eq!(r.tokens, expect[i], "shared={shared} perturbed request {i}");
+            assert!(r.is_ok(), "{:?}", r.error_msg());
+            assert_eq!(r.tokens(), expect[i], "shared={shared} perturbed request {i}");
         }
         assert_eq!(coord.caches_outstanding(), 0);
         let d = coord.dispatch_stats();
@@ -2002,8 +2079,8 @@ fn pipelined_coordinator_is_token_exact_end_to_end() {
         .expect("spawn");
         let resps = coord.run_batch(reqs(16)).expect("batch");
         for (i, r) in resps.iter().enumerate() {
-            assert!(r.error.is_none(), "pipelined={pipelined}: {:?}", r.error);
-            assert_eq!(r.tokens, expect[i], "pipelined={pipelined} perturbed request {i}");
+            assert!(r.is_ok(), "pipelined={pipelined}: {:?}", r.error_msg());
+            assert_eq!(r.tokens(), expect[i], "pipelined={pipelined} perturbed request {i}");
         }
         assert_eq!(coord.caches_outstanding(), 0);
         let d = coord.dispatch_stats();
@@ -2033,7 +2110,7 @@ fn fused_coordinator_cuts_device_calls_end_to_end() {
         )
         .expect("spawn");
         let resps = coord.run_batch(reqs(16)).expect("batch");
-        assert!(resps.iter().all(|r| r.error.is_none()));
+        assert!(resps.iter().all(|r| r.is_ok()));
         let max_fused = coord.queue_stats().max_fused_batch();
         let agg = coord.runtime_agg();
         drop(coord); // joins workers, which flush their counters
@@ -2076,11 +2153,179 @@ fn coordinator_cancel_flag_aborts_inflight_request() {
     cancel.cancel();
     let resp = rx.recv_timeout(Duration::from_secs(5)).expect("cancel response");
     assert!(
-        resp.error.as_deref().unwrap_or_default().contains("cancelled"),
+        resp.error_msg().unwrap_or_default().contains("cancelled"),
         "{:?}",
-        resp.error
+        resp.error_msg()
     );
     assert_eq!(coord.caches_outstanding(), 0);
+}
+
+#[test]
+fn streamed_events_are_token_exact_across_topologies() {
+    // tentpole acceptance: the per-step event stream reassembles to
+    // exactly the non-streamed tokens at workers 1/2/4 × inflight
+    // 1/2/4 across all four topologies (run_batch_streamed asserts the
+    // frame-vs-terminal equality per request; this grid pins the
+    // streamed output to the run-to-completion reference)
+    let topologies: [(&str, bool, bool, bool); 4] = [
+        ("serial", false, false, false),
+        ("fused", true, false, false),
+        ("shared", false, true, false),
+        ("pipelined", false, true, true),
+    ];
+    let reqs = |n: u64| -> Vec<Request> {
+        (0..n).map(|i| mk_req(i, &format!("stream grid {i}"), 3 + (i as usize % 4))).collect()
+    };
+    let expect: Vec<Vec<u32>> = reqs(6)
+        .iter()
+        .map(|r| reference_tokens(&r.prompt, r.max_new, r.seed))
+        .collect();
+    for (name, fuse, shared, pipelined) in topologies {
+        for workers in [1usize, 2, 4] {
+            for max_inflight in [1usize, 2, 4] {
+                let coord = Coordinator::spawn_with_backend_policy(
+                    std::sync::Arc::new(MockBackend { step_delay: Duration::ZERO }),
+                    workers,
+                    SchedPolicy {
+                        max_inflight,
+                        fuse_steps: fuse,
+                        shared_runtime: shared,
+                        pipelined,
+                        ..Default::default()
+                    },
+                )
+                .expect("spawn");
+                let resps = run_batch_streamed(&coord, reqs(6));
+                assert_eq!(resps.len(), 6);
+                for (r, want) in resps.iter().zip(&expect) {
+                    assert!(
+                        r.is_ok(),
+                        "{name} workers={workers} inflight={max_inflight}: {:?}",
+                        r.error_msg()
+                    );
+                    assert_eq!(
+                        r.tokens(),
+                        *want,
+                        "{name} workers={workers} inflight={max_inflight}: \
+                         streaming perturbed request {}",
+                        r.id
+                    );
+                }
+                assert_eq!(coord.caches_outstanding(), 0);
+                assert!(coord.queue_stats().stream_events_total() >= 12);
+            }
+        }
+    }
+}
+
+#[test]
+fn session_resume_reuses_prefix_pages_and_counts_metrics() {
+    // acceptance: a resumed session turn must record ≥1 prefix-store
+    // hit — turn 1 publishes its prompt (and, at retire, its generated
+    // tokens) into the paged prefix store under the session's custody,
+    // and turn 2's checkout finds them
+    let coord = Coordinator::spawn_with_backend_policy(
+        std::sync::Arc::new(MockBackend { step_delay: Duration::ZERO }),
+        1,
+        SchedPolicy { max_inflight: 2, kv_blocks: Some(64), ..Default::default() },
+    )
+    .expect("spawn");
+    let turn = |i: u64| {
+        Request::builder(workload::encode("session resume prompt"))
+            .id(i)
+            .max_new(6)
+            .seed(7)
+            .session("conv-1")
+            .build()
+    };
+    let (tx, rx) = mpsc::channel();
+    coord.submit_routed(turn(0), tx.clone()).expect("submit turn 0");
+    let r0 = rx.recv_timeout(Duration::from_secs(10)).expect("turn 0");
+    assert!(r0.is_ok(), "{:?}", r0.error_msg());
+    coord.submit_routed(turn(1), tx).expect("submit turn 1");
+    let r1 = rx.recv_timeout(Duration::from_secs(10)).expect("turn 1");
+    assert!(r1.is_ok(), "{:?}", r1.error_msg());
+    // same session + same prompt → identical seeds → identical tokens
+    assert_eq!(r0.tokens(), r1.tokens());
+
+    let text = coord.metrics_text();
+    assert_eq!(metric_value(&text, "ppd_session_resumes_total"), 1.0);
+    assert!(
+        metric_value(&text, "ppd_session_prefix_turn_hits_total") >= 1.0,
+        "resumed turn never found its session's pages in the prefix store"
+    );
+    assert!(
+        metric_value(&text, "ppd_prefix_hits_total") >= 1.0,
+        "prefix store recorded no hit for the resumed turn"
+    );
+}
+
+#[test]
+fn slo_discipline_prevents_priority_inversion_end_to_end() {
+    // regression: under fifo a queued high-priority job waits out every
+    // earlier arrival; under --sched-policy slo it is picked the moment
+    // a slot frees, and the out-of-order pickup is counted as a
+    // preemption
+    let coord = Coordinator::spawn_with_backend_policy(
+        std::sync::Arc::new(MockBackend { step_delay: Duration::from_millis(2) }),
+        1,
+        SchedPolicy {
+            max_inflight: 1,
+            sched_policy: QueueDiscipline::Slo,
+            ..Default::default()
+        },
+    )
+    .expect("spawn");
+    let (tx, rx) = mpsc::channel();
+    // a long blocker occupies the only slot...
+    coord
+        .submit_routed(
+            Request::builder(workload::encode("blocker")).id(0).max_new(40).build(),
+            tx.clone(),
+        )
+        .expect("submit blocker");
+    std::thread::sleep(Duration::from_millis(30)); // let the worker admit it
+    // ...then bulk work queues ahead of a late interactive request
+    for i in 1..=2u64 {
+        coord
+            .submit_routed(
+                Request::builder(workload::encode("bulk job"))
+                    .id(i)
+                    .max_new(4)
+                    .priority(Priority::Low)
+                    .tenant("batch")
+                    .build(),
+                tx.clone(),
+            )
+            .expect("submit bulk");
+    }
+    coord
+        .submit_routed(
+            Request::builder(workload::encode("interactive"))
+                .id(3)
+                .max_new(4)
+                .priority(Priority::High)
+                .tenant("chat")
+                .build(),
+            tx.clone(),
+        )
+        .expect("submit high");
+    drop(tx);
+    let mut order = Vec::new();
+    for _ in 0..4 {
+        let r = rx.recv_timeout(Duration::from_secs(20)).expect("response");
+        assert!(r.is_ok(), "{:?}", r.error_msg());
+        order.push(r.id);
+    }
+    let pos = |id: u64| order.iter().position(|&x| x == id).unwrap();
+    assert!(
+        pos(3) < pos(1) && pos(3) < pos(2),
+        "high-priority request served after the bulk queue: {order:?}"
+    );
+    assert!(
+        metric_value(&coord.metrics_text(), "ppd_sched_preemptions_total") >= 1.0,
+        "out-of-order pickup was not counted as a preemption"
+    );
 }
 
 // ---- request-lifecycle tracing & latency histograms ----
@@ -2300,7 +2545,7 @@ fn coordinator_trace_chains_are_gapless_and_match_histograms() {
     let reqs: Vec<Request> =
         (0..8).map(|i| mk_req(i, &format!("traced e2e {i}"), max_new)).collect();
     let resps = coord.run_batch(reqs).expect("batch");
-    assert!(resps.iter().all(|r| r.error.is_none()));
+    assert!(resps.iter().all(|r| r.is_ok()));
 
     let snap = coord.tracer().snapshot();
     let (_, server) =

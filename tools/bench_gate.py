@@ -22,6 +22,14 @@ not gated**: the compare form prints them for trend reading and
 latency value can fail the gate — scheduling latency on shared CI
 runners is too noisy for a hard threshold.
 
+The ``mix`` sweep points (the SLO-scheduled chat/summarize/code
+workload blend, ``--sched-policy slo``) are likewise **carried, not
+gated**: they ride the fresh artifact and the informational sections
+below print their quantiles, but the baseline declares no ceiling for
+them — the trace-driven arrival/length blend makes their device-call
+trajectory workload-shaped rather than a structural property of the
+scheduler, so a hard bound would gate on the trace, not the code.
+
 ``serial`` points are a pure function of the scheduler (one device call
 per generated token), so their references are exact.  ``fused``,
 ``shared``, and ``pipelined`` points go through live threads and
@@ -165,9 +173,11 @@ def main():
         if tps < floor:
             failures.append(f"{key}: {tps:.0f} tok/s < floor {floor:.0f}")
 
-    if any(lk in fresh[key] for key in sorted(expected) for lk in LATENCY_KEYS):
+    # informational sections walk the FRESH points, so sweep modes the
+    # baseline does not gate (e.g. mix/*) still show their trend here
+    if any(lk in fresh[key] for key in sorted(fresh) for lk in LATENCY_KEYS):
         print("bench_gate: latency quantiles (informational, never gated)")
-        for key in sorted(expected):
+        for key in sorted(fresh):
             point = fresh[key]
             if not any(lk in point for lk in LATENCY_KEYS):
                 continue
@@ -181,9 +191,9 @@ def main():
             )
             print(f"  {key:>11}: ttft p50/p95/p99 {ttft} us, itl {itl} us")
 
-    if any(mk in fresh[key] for key in sorted(expected) for mk in MEMORY_KEYS):
+    if any(mk in fresh[key] for key in sorted(fresh) for mk in MEMORY_KEYS):
         print("bench_gate: paged-KV memory (informational, never gated)")
-        for key in sorted(expected):
+        for key in sorted(fresh):
             point = fresh[key]
             if not any(mk in point for mk in MEMORY_KEYS):
                 continue
